@@ -1,0 +1,48 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! 1. Quantize values into the paper's FP8 (1,5,2) / FP16 (1,6,9) formats.
+//! 2. Watch swamping kill a long FP16 accumulation — and chunking fix it.
+//! 3. Train a small model under the full FP8 policy and compare with FP32.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fp8train::coordinator::NativeEngine;
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::models::ModelKind;
+use fp8train::nn::PrecisionPolicy;
+use fp8train::numerics::accumulate::{acc_chunked, acc_f64, acc_sequential};
+use fp8train::numerics::{FloatFormat, RoundMode, Xoshiro256};
+use fp8train::train::{train, TrainConfig};
+
+fn main() {
+    // --- 1. the formats -------------------------------------------------
+    let fp8 = FloatFormat::FP8;
+    let fp16 = FloatFormat::FP16;
+    println!("FP8  (1,5,2): max {}, min subnormal {}", fp8.max_normal(), fp8.min_subnormal());
+    println!("FP16 (1,6,9): max {:e}, swamping ratio 2^{}", fp16.max_normal(), fp16.mbits + 1);
+    println!("quantize(1.1) -> FP8 = {}", fp8.quantize(1.1, RoundMode::NearestEven));
+
+    // --- 2. swamping vs chunking (the paper's Fig. 3b in four lines) ----
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let xs: Vec<f32> = (0..65536).map(|_| rng.uniform(0.0, 2.0)).collect();
+    let exact = acc_f64(&xs);
+    let seq = acc_sequential(fp16, RoundMode::NearestEven, &xs, &mut rng);
+    let chunked = acc_chunked(fp16, RoundMode::NearestEven, 64, &xs, &mut rng);
+    println!("\nsum of 65536 uniform values: exact {exact:.0}");
+    println!("  FP16 sequential (swamped): {seq:.0}");
+    println!("  FP16 chunked CL=64:        {chunked:.0}");
+
+    // --- 3. FP8 training vs FP32 ----------------------------------------
+    let kind = ModelKind::CifarCnn;
+    let ds = SyntheticDataset::for_model(kind, 7).with_sizes(512, 256);
+    for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
+        let name = policy.name.clone();
+        let mut engine = NativeEngine::new(kind, policy, 7);
+        let r = train(&mut engine, &ds, &TrainConfig::quick(150));
+        println!(
+            "{name:>10}: final train loss {:.3}, test error {:.1}%",
+            r.final_train_loss, r.final_test_err
+        );
+    }
+    println!("\n(fp8_paper = FP8 GEMMs + FP16 chunked accumulation + FP16-SR updates)");
+}

@@ -1,0 +1,138 @@
+"""AOT pipeline: lower every JAX/Pallas computation ONCE to HLO text.
+
+Interchange is HLO **text** (not `.serialize()`d protos): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the Rust `xla` crate binds) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Outputs under `artifacts/` (see rust/src/runtime/):
+
+  cifar_cnn_{fp8,fp32}.hlo.txt        train_step(state..., x, y, lr, seed)
+  cifar_cnn_{fp8,fp32}_fwd.hlo.txt    fwd(params..., x)
+  cifar_cnn_{fp8,fp32}.manifest.txt   state shapes + meta (batch, classes)
+  quant_fp8.hlo.txt                   Pallas quantize kernel, [4096] f32
+  quant_fp16.hlo.txt
+  gemm_fp8.hlo.txt                    Pallas chunked GEMM, [64,512]×[512,32]
+  axpy_sr.hlo.txt                     Pallas FP16-SR SGD update, [4096]
+
+Usage: python -m compile.aot --out ../artifacts/model.hlo.txt
+(the Makefile target; `--out`'s directory is where everything lands).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.axpy import sgd_axpy_pallas
+from .kernels.gemm import chunked_gemm
+from .kernels.quantize_k import quantize_pallas
+from .quant import FP8, FP16, NEAREST
+
+BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+def lower_model(outdir: str, policy: model.Policy) -> None:
+    specs = model.param_specs()
+    state = [f32(*s) for _, s in specs] * 2  # params then momentum
+    x = f32(BATCH, *model.INPUT_SHAPE)
+    y = f32(BATCH, model.CLASSES)
+    lr = f32()
+    seed = f32()
+
+    tag = f"cifar_cnn_{policy.name}"
+    step = jax.jit(model.make_train_step(policy))
+    write(
+        os.path.join(outdir, f"{tag}.hlo.txt"),
+        to_hlo_text(step.lower(*state, x, y, lr, seed)),
+    )
+    fwd = jax.jit(model.make_fwd(policy))
+    write(
+        os.path.join(outdir, f"{tag}_fwd.hlo.txt"),
+        to_hlo_text(fwd.lower(*[f32(*s) for _, s in specs], x)),
+    )
+
+    lines = []
+    for kind in ("param", "mom"):
+        for name, shape in specs:
+            lines.append(f"{kind} {name} {','.join(str(d) for d in shape)}")
+    lines.append(f"meta classes {model.CLASSES}")
+    lines.append(f"meta batch {BATCH}")
+    write(os.path.join(outdir, f"{tag}.manifest.txt"), "\n".join(lines) + "\n")
+
+
+def lower_kernels(outdir: str) -> None:
+    n = 4096
+    # Elementwise quantize kernels (nearest — the bit-exact cross-language
+    # contract; rust/tests/cross_validation.rs compares against the Rust
+    # quantizer output for output).
+    for fmt, name in ((FP8, "quant_fp8"), (FP16, "quant_fp16")):
+        fn = jax.jit(lambda x, fmt=fmt: (quantize_pallas(x, fmt, NEAREST),))
+        write(os.path.join(outdir, f"{name}.hlo.txt"), to_hlo_text(fn.lower(f32(n))))
+
+    # Chunked GEMM kernel: FP8 operands, FP16 CL=64 accumulation.
+    gemm = jax.jit(lambda a, b: (chunked_gemm(a, b, chunk=64),))
+    write(
+        os.path.join(outdir, "gemm_fp8.hlo.txt"),
+        to_hlo_text(gemm.lower(f32(64, 512), f32(512, 32))),
+    )
+
+    # FP16-SR SGD AXPY kernel (lr/momentum/decay baked: the standalone
+    # artifact is a micro-bench + cross-validation target; the train-step
+    # artifact takes lr dynamically).
+    axpy = jax.jit(
+        lambda w, g, v, r: sgd_axpy_pallas(w, g, v, r, 0.05, 0.9, 1e-4)
+    )
+    write(
+        os.path.join(outdir, "axpy_sr.hlo.txt"),
+        to_hlo_text(axpy.lower(f32(n), f32(n), f32(n), u32(3, n))),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="sentinel output path; its directory receives all artifacts")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    lower_kernels(outdir)
+    for policy in (model.FP32_BASELINE, model.FP8_PAPER):
+        lower_model(outdir, policy)
+
+    # The Makefile sentinel: points at the fp8 train step.
+    src = os.path.join(outdir, "cifar_cnn_fp8.hlo.txt")
+    with open(src) as f:
+        write(os.path.abspath(args.out), f.read())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: the FP16 stochastic-rounding SGD weight update — the
+three AXPYs of Fig. 2(b) fused into one elementwise pass (L2-Reg,
+Momentum-Acc, Weight-Upd), each result re-rounded into FP16 with its own
+uniform draw."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import FP16, STOCHASTIC, quantize
+
+BLOCK = 4096
+
+
+def _kernel(lr, momentum, weight_decay):
+    def kernel(w_ref, g_ref, v_ref, r0_ref, r1_ref, r2_ref, wo_ref, vo_ref):
+        w = w_ref[...]
+        g2 = quantize(g_ref[...] + weight_decay * w, FP16, STOCHASTIC, r0_ref[...])
+        v2 = quantize(momentum * v_ref[...] + g2, FP16, STOCHASTIC, r1_ref[...])
+        vo_ref[...] = v2
+        wo_ref[...] = quantize(w - lr * v2, FP16, STOCHASTIC, r2_ref[...])
+
+    return kernel
+
+
+@partial(jax.jit, static_argnames=("lr", "momentum", "weight_decay"))
+def sgd_axpy_pallas(w, g, v, rbits3, lr: float, momentum: float, weight_decay: float):
+    """Apply the fused FP16-SR update; returns (w', v').
+
+    `rbits3` is `[3, n]` uint32 (one draw per element per AXPY), matching
+    `ref.sgd_axpy_ref`.
+    """
+    n = w.shape[0]
+    block = min(BLOCK, _next_pow2(n))
+    rem = (-n) % block
+
+    def pad(x):
+        return jnp.pad(x, (0, rem)) if rem else x
+
+    wp, gp, vp = pad(w), pad(g), pad(v)
+    r0, r1, r2 = (pad(rbits3[i]) for i in range(3))
+    grid = (wp.shape[0] // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    wo, vo = pl.pallas_call(
+        _kernel(lr, momentum, weight_decay),
+        grid=grid,
+        in_specs=[spec] * 6,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct(wp.shape, jnp.float32),
+            jax.ShapeDtypeStruct(wp.shape, jnp.float32),
+        ],
+        interpret=True,
+    )(wp, gp, vp, r0, r1, r2)
+    return wo[:n], vo[:n]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

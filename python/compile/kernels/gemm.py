@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: the paper's chunk-based reduced-precision GEMM.
+
+Hardware adaptation (DESIGN.md §9): the paper's 14nm dataflow core feeds
+FP8 products into FP16 chunk accumulators. On TPU the analogue is the
+BlockSpec K-tiling — each grid step streams an `(bm, CL) × (CL, bn)` tile
+pair HBM→VMEM, reduces it on the MXU in one shot (the *intra-chunk*
+accumulation, CL = 64 matching both the paper's hardware sweet spot and
+MXU-friendly K tiles), rounds the partial into FP16, and the sequential
+K-grid dimension performs the *inter-chunk* `add16` into the revisited
+output tile.
+
+The kernel MUST run with `interpret=True` here: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. VMEM footprint and
+MXU-utilization estimates live in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import FP16, NEAREST, quantize
+from .ref import pad_to
+
+# Default block shape: 128×128 output tiles, CL=64 K-tiles →
+# VMEM per step = (128·64 + 64·128 + 128·128) f32 ≈ 128 KiB ≪ 4 MiB budget.
+BM, BN, CL = 128, 128, 64
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+    # Intra-chunk: one MXU pass over the CL-length K tile, exact f32.
+    partial_sum = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    # One rounding into the accumulation format per chunk.
+    pq = quantize(partial_sum, FP16, NEAREST)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = pq
+
+    @pl.when(k > 0)
+    def _acc():
+        # Inter-chunk add16: the FP16 accumulator register semantics.
+        o_ref[...] = quantize(o_ref[...] + pq, FP16, NEAREST)
+
+
+@partial(jax.jit, static_argnames=("chunk", "bm", "bn"))
+def chunked_gemm(a, b, chunk: int = CL, bm: int = BM, bn: int = BN):
+    """`C[M,N] = A[M,K] · B[K,N]`, FP8-valued operands (already quantized),
+    FP16 chunk-based accumulation. Zero-pads every dimension to its block
+    multiple (zeros are exact under quantization and contribute nothing)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = min(bm, _next_pow2(m))
+    bn = min(bn, _next_pow2(n))
+    a = pad_to(pad_to(a, 0, bm), 1, chunk)
+    b = pad_to(pad_to(b, 0, chunk), 1, bn)
+    mp, kp = a.shape
+    np_ = b.shape[1]
+    grid = (mp // bm, np_ // bn, kp // chunk)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, chunk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((chunk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)
+    return out[:m, :n]
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, chunk: int = CL) -> int:
+    """Per-grid-step VMEM footprint estimate (f32 carriers; on real FP8/FP16
+    hardware the A/B tiles shrink 4×/2×). Used by EXPERIMENTS.md §Perf."""
+    return 4 * (bm * chunk + chunk * bn + bm * bn)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: elementwise FP8/FP16 quantization (the representation
+conversions of Fig. 2 — activations/weights/errors into FP8, Softmax input
+into FP16). Pure VPU work; blocked so arbitrarily large tensors stream
+through VMEM-sized tiles."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..quant import NEAREST, STOCHASTIC, FloatFormat, quantize
+
+BLOCK = 4096
+
+
+@partial(jax.jit, static_argnames=("fmt", "mode"))
+def quantize_pallas(x, fmt: FloatFormat, mode: str = NEAREST, rbits=None):
+    """Quantize a 1-D (or flattened) array through the Pallas kernel."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    block = min(BLOCK, _next_pow2(n))
+    rem = (-n) % block
+    if rem:
+        flat = jnp.pad(flat, (0, rem))
+    grid = (flat.shape[0] // block,)
+
+    if mode == STOCHASTIC:
+        assert rbits is not None
+        rflat = rbits.reshape(-1)
+        if rem:
+            rflat = jnp.pad(rflat, (0, rem))
+
+        def kernel(x_ref, r_ref, o_ref):
+            o_ref[...] = quantize(x_ref[...], fmt, STOCHASTIC, r_ref[...])
+
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block,), lambda i: (i,)),
+                pl.BlockSpec((block,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+            interpret=True,
+        )(flat, rflat)
+    else:
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = quantize(x_ref[...], fmt, mode)
+
+        out = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+            interpret=True,
+        )(flat)
+    return out[:n].reshape(shape)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p

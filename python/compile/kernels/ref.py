@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels (and the cross-language
+contract): the paper's reduced-precision dot product / GEMM (Fig. 3a) and
+the FP16-SR weight-update AXPYs (Fig. 2b), at the same chunk-granularity
+("fast") emulation fidelity as the Rust engine's default GEMM path.
+
+Semantics (DESIGN.md §3):
+- operands are FP8 values carried in f32; products are exact in f32,
+- intra-chunk partial sums are computed in f32 and rounded into FP16 once
+  per chunk,
+- inter-chunk accumulation applies `add16` (quantize after every add).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..quant import FP8, FP16, NEAREST, STOCHASTIC, FloatFormat, quantize
+
+
+def pad_to(x, axis: int, multiple: int):
+    """Zero-pad `axis` of `x` up to the next multiple (zeros are exact)."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def chunked_gemm_ref(a, b, chunk: int = 64):
+    """`C[M,N] = A[M,K] · B[K,N]` with chunk-based FP16 accumulation.
+
+    Operands must already be quantized to the multiply format (FP8);
+    the result equals the Rust `GemmPrecision::fp8_paper()` (fast) path up
+    to f32 intra-chunk summation order.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    a = pad_to(a, 1, chunk)
+    b = pad_to(b, 0, chunk)
+    nc = a.shape[1] // chunk
+    a3 = a.reshape(m, nc, chunk).transpose(1, 0, 2)  # [nc, M, CL]
+    b3 = b.reshape(nc, chunk, n)  # [nc, CL, N]
+    # Intra-chunk: exact f32 partials, one rounding into FP16 per chunk.
+    partials = jnp.einsum("cmk,ckn->cmn", a3, b3, preferred_element_type=jnp.float32)
+    partials = quantize(partials, FP16, NEAREST)
+
+    # Inter-chunk: sequential add16.
+    def step(acc, p):
+        return quantize(acc + p, FP16, NEAREST), None
+
+    out, _ = jax.lax.scan(step, jnp.zeros((m, n), jnp.float32), partials)
+    return out
+
+
+@jax.jit
+def gemm_f32_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def quantize_fp8_ref(x):
+    return quantize(x, FP8, NEAREST)
+
+
+@partial(jax.jit, static_argnames=("fmt",))
+def sgd_axpy_ref(w, g, v, lr, momentum, weight_decay, rbits3, fmt: FloatFormat = FP16):
+    """The three FP16-SR AXPYs of Fig. 2(b) (rust: axpy.rs::sgd_update).
+
+    `rbits3` is a `[3, n]` uint32 array: one draw per element per AXPY.
+    """
+    g2 = quantize(g + weight_decay * w, fmt, STOCHASTIC, rbits3[0])
+    v2 = quantize(momentum * v + g2, fmt, STOCHASTIC, rbits3[1])
+    w2 = quantize(w - lr * v2, fmt, STOCHASTIC, rbits3[2])
+    return w2, v2

@@ -1,0 +1,279 @@
+"""L2: the quantized CIFAR10-CNN training step in JAX.
+
+Mirrors the Rust native engine's model (rust/src/nn/models/cifar_cnn.rs):
+3 conv layers (5×5, ReLU, 2×2 maxpool) + 1 FC + 10-way Softmax, with the
+paper's Fig. 2 precision plumbing:
+
+- every Conv/FC GEMM is a `custom_vjp` whose Forward/Backward/Gradient
+  GEMMs run the **L1 Pallas chunked-accumulation kernel** on FP8-quantized
+  operands (FP16 first-layer data operand, FP16 last layer — §3/§4.1),
+- the Softmax input is kept in FP16,
+- the loss is scaled ×1000; the update divides it back out,
+- the SGD update applies the FP16 stochastic-rounding AXPYs.
+
+`aot.py` lowers `make_train_step` / `make_fwd` once to HLO text; the Rust
+coordinator (`rust/src/runtime/engine.rs`) drives the executable with
+device-resident state — Python never runs at training time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import chunked_gemm
+from .quant import FP8, FP16, FP32, NEAREST, STOCHASTIC, FloatFormat, quantize
+
+# ---------------------------------------------------------------------------
+# Precision policy (the L2 mirror of rust nn/quant.rs presets)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    gemm_fmt: FloatFormat  # operand format of middle-layer GEMMs
+    gemm_last_fmt: FloatFormat  # operand format of the last layer
+    input_fmt: FloatFormat  # first-layer data operand
+    softmax_input_fmt: FloatFormat
+    update_fmt: FloatFormat
+    chunk: int
+    loss_scale: float
+    stochastic_update: bool
+
+    @property
+    def quantized(self) -> bool:
+        return self.gemm_fmt.mbits < 23
+
+
+FP8_PAPER = Policy(
+    name="fp8",
+    gemm_fmt=FP8,
+    gemm_last_fmt=FP16,
+    input_fmt=FP16,
+    softmax_input_fmt=FP16,
+    update_fmt=FP16,
+    chunk=64,
+    loss_scale=1000.0,
+    stochastic_update=True,
+)
+
+FP32_BASELINE = Policy(
+    name="fp32",
+    gemm_fmt=FP32,
+    gemm_last_fmt=FP32,
+    input_fmt=FP32,
+    softmax_input_fmt=FP32,
+    update_fmt=FP32,
+    chunk=64,
+    loss_scale=1.0,
+    stochastic_update=False,
+)
+
+POLICIES = {p.name: p for p in (FP8_PAPER, FP32_BASELINE)}
+
+# ---------------------------------------------------------------------------
+# Quantized GEMM with the Fig. 2 three-GEMM custom VJP
+# ---------------------------------------------------------------------------
+
+
+def make_qgemm(policy: Policy, pos: str):
+    """Build `y[M,N] = x[M,K] @ w[N,K].T` with quantized fwd/bwd/grad GEMMs.
+
+    `pos` ∈ {first, middle, last} selects the §4.1 exceptions.
+    """
+    wfmt = policy.gemm_last_fmt if pos == "last" else policy.gemm_fmt
+    # First layer: data operand stays in the (wider) input format.
+    afmt = policy.input_fmt if pos == "first" and policy.input_fmt.mbits > wfmt.mbits else wfmt
+    efmt = wfmt
+
+    def gemm(a, b):
+        if not policy.quantized:
+            return jnp.dot(a, b, preferred_element_type=jnp.float32)
+        return chunked_gemm(a, b, chunk=policy.chunk)
+
+    @jax.custom_vjp
+    def qgemm(x, w):
+        xq = quantize(x, afmt, NEAREST)
+        wq = quantize(w, wfmt, NEAREST)
+        return gemm(xq, wq.T)
+
+    def fwd(x, w):
+        return qgemm(x, w), (x, w)
+
+    def bwd(res, dy):
+        x, w = res
+        # Tensors are stored quantized once and reused (DESIGN.md §3).
+        xq = quantize(x, afmt, NEAREST)
+        wq = quantize(w, wfmt, NEAREST)
+        dyq = quantize(dy, efmt, NEAREST)
+        dx = gemm(dyq, wq)  # Backward GEMM  [M,N]·[N,K]
+        dw = gemm(dyq.T, xq)  # Gradient GEMM [N,M]·[M,K] — K = batch·spatial
+        return dx, dw
+
+    qgemm.defvjp(fwd, bwd)
+    return qgemm
+
+
+# ---------------------------------------------------------------------------
+# CIFAR10-CNN forward pass
+# ---------------------------------------------------------------------------
+
+# (name, out_channels/features, kind) in parameter order — the contract
+# aot.py's manifest and rust's init_state share.
+LAYERS = [
+    ("conv1", dict(in_c=3, out_c=16, k=5, pos="first")),
+    ("conv2", dict(in_c=16, out_c=32, k=5, pos="middle")),
+    ("conv3", dict(in_c=32, out_c=32, k=5, pos="middle")),
+    ("fc", dict(in_f=32 * 4 * 4, out_f=10, pos="last")),
+]
+CLASSES = 10
+INPUT_SHAPE = (3, 32, 32)
+
+
+def param_specs():
+    """[(name, shape)] in call-argument order."""
+    specs = []
+    for name, cfg in LAYERS:
+        if name.startswith("conv"):
+            specs.append((f"{name}.w", (cfg["out_c"], cfg["in_c"] * cfg["k"] * cfg["k"])))
+            specs.append((f"{name}.b", (cfg["out_c"],)))
+        else:
+            specs.append((f"{name}.w", (cfg["out_f"], cfg["in_f"])))
+            specs.append((f"{name}.b", (cfg["out_f"],)))
+    return specs
+
+
+def init_params(seed: int = 0):
+    """Kaiming-normal weights / zero biases (mirrors rust init_state)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs():
+        key, sub = jax.random.split(key)
+        if len(shape) >= 2:
+            fan_in = 1
+            for d in shape[1:]:
+                fan_in *= d
+            params.append(jax.random.normal(sub, shape, jnp.float32) * (2.0 / fan_in) ** 0.5)
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _patches(x, k):
+    """im2col: NCHW → [N·oh·ow, C·k·k] rows, SAME padding, stride 1.
+    Feature order (c, ky, kx) matches rust tensor::im2col."""
+    n = x.shape[0]
+    p = jax.lax.conv_general_dilated_patches(
+        x, filter_shape=(k, k), window_strides=(1, 1), padding="SAME"
+    )  # [N, C·k·k, oh, ow]
+    ckk = p.shape[1]
+    return p.transpose(0, 2, 3, 1).reshape(-1, ckk), n
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+
+
+def forward(policy: Policy, params, x):
+    """Logits for a NCHW batch."""
+    qg = {name: make_qgemm(policy, cfg["pos"]) for name, cfg in LAYERS}
+    it = iter(params)
+    h = x
+    for name, cfg in LAYERS[:3]:
+        w, b = next(it), next(it)
+        rows, n = _patches(h, cfg["k"])
+        y = qg[name](rows, w) + b  # [N·oh·ow, oc]
+        oh = h.shape[2]
+        h = y.reshape(n, oh, oh, cfg["out_c"]).transpose(0, 3, 1, 2)
+        h = _maxpool2(jnp.maximum(h, 0.0))
+    w, b = next(it), next(it)
+    h = h.reshape(h.shape[0], -1)
+    return qg["fc"](h, w) + b
+
+
+def ste_quantize(x, fmt: FloatFormat, mode: str = NEAREST):
+    """Straight-through quantization: the value is quantized, the gradient
+    passes through unchanged (quantize itself is built from bitcasts, whose
+    autodiff is zero — the backward-path quantization of the error tensor
+    is handled explicitly inside the qgemm custom VJP, exactly as the Rust
+    engine hand-writes it)."""
+    return x + jax.lax.stop_gradient(quantize(x, fmt, mode) - x)
+
+
+def loss_fn(policy: Policy, params, x, y_onehot):
+    logits = forward(policy, params, x)
+    logits = ste_quantize(logits, policy.softmax_input_fmt, NEAREST)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# SGD train step with FP16-SR updates
+# ---------------------------------------------------------------------------
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 1e-4
+
+
+def sgd_update(policy: Policy, params, moms, grads, lr, key):
+    new_p, new_m = [], []
+    for i, (w, v, g) in enumerate(zip(params, moms, grads)):
+        decay = WEIGHT_DECAY if w.ndim >= 2 else 0.0
+        if policy.update_fmt.mbits >= 23:
+            g2 = g + decay * w
+            v2 = MOMENTUM * v + g2
+            w2 = w - lr * v2
+        else:
+            key, sub = jax.random.split(key)
+            rb = jax.random.bits(sub, (3,) + w.shape, jnp.uint32)
+            mode = STOCHASTIC if policy.stochastic_update else NEAREST
+            g2 = quantize(g + decay * w, policy.update_fmt, mode, rb[0])
+            v2 = quantize(MOMENTUM * v + g2, policy.update_fmt, mode, rb[1])
+            w2 = quantize(w - lr * v2, policy.update_fmt, mode, rb[2])
+        new_p.append(w2)
+        new_m.append(v2)
+        del i
+    return new_p, new_m
+
+
+def make_train_step(policy: Policy):
+    """(params..., moms..., x, y_onehot, lr, seed) → (params', moms', loss).
+
+    `seed` is a whole-valued f32 (exact < 2^24) folded into the threefry
+    key for stochastic rounding — the Rust driver passes the step index.
+    """
+    k = len(param_specs())
+
+    def train_step(*args):
+        params = list(args[:k])
+        moms = list(args[k : 2 * k])
+        x, y_onehot, lr, seed = args[2 * k :]
+        scaled = lambda p: loss_fn(policy, p, x, y_onehot) * policy.loss_scale
+        loss_s, grads = jax.value_and_grad(scaled)(params)
+        inv = 1.0 / policy.loss_scale
+        grads = [g * inv for g in grads]
+        key = jax.random.PRNGKey(seed.astype(jnp.int32))
+        new_p, new_m = sgd_update(policy, params, moms, grads, lr, key)
+        # Keep `seed` alive in every policy (the FP32 path never draws
+        # bits; without this the lowered artifact would drop the argument
+        # and the Rust driver's fixed 4-arg tail would mismatch).
+        loss_out = loss_s * inv + seed * 0.0
+        return tuple(new_p) + tuple(new_m) + (loss_out,)
+
+    return train_step
+
+
+def make_fwd(policy: Policy):
+    """(params..., x) → (logits,)."""
+    k = len(param_specs())
+
+    def fwd(*args):
+        return (forward(policy, list(args[:k]), args[k]),)
+
+    return fwd

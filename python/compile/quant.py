@@ -1,0 +1,164 @@
+"""Bit-exact mirror of the Rust quantizer (rust/src/numerics/format.rs).
+
+The algorithm is normative (DESIGN.md §3) and implemented operation-for-
+operation identically on the f32 bit pattern; `rust/tests/cross_validation.rs`
+executes the AOT-lowered version of this code through PJRT and asserts bit
+equality with the Rust implementation on the deterministic rounding modes.
+
+Everything here is pure jnp (usable under jit, grad-free) and shared by the
+Pallas kernels, the L2 model, and the ref oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+UINT = jnp.uint32
+INT = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """A reduced-precision format (1, ebits, mbits) with IEEE-like layout."""
+
+    ebits: int
+    mbits: int
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.ebits - 1)) - 1
+
+    @property
+    def emax(self) -> int:
+        return self.bias
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def max_normal(self) -> float:
+        return float((2.0 - 2.0 ** (-self.mbits)) * 2.0**self.emax)
+
+    @property
+    def min_normal(self) -> float:
+        return float(2.0**self.emin)
+
+    @property
+    def min_subnormal(self) -> float:
+        return float(2.0 ** (self.emin - self.mbits))
+
+    @property
+    def width(self) -> int:
+        return 1 + self.ebits + self.mbits
+
+
+FP8 = FloatFormat(5, 2)  # the paper's (1,5,2)
+FP16 = FloatFormat(6, 9)  # the paper's (1,6,9)
+IEEE_HALF = FloatFormat(5, 10)
+FP32 = FloatFormat(8, 23)
+
+NEAREST = "nearest"
+STOCHASTIC = "stochastic"
+TRUNCATE = "truncate"
+
+
+def _round_up(mode: str, keep, rem, shift, rbits):
+    """The normative rounding decision (rust: rounding.rs::round_up)."""
+    if mode == TRUNCATE:
+        return jnp.zeros_like(keep, dtype=jnp.bool_)
+    if mode == NEAREST:
+        half = (UINT(1) << (shift - 1)).astype(UINT)
+        return (rem > half) | ((rem == half) & ((keep & 1) == 1))
+    if mode == STOCHASTIC:
+        # shift ≤ 26 so rem + r < 2^27: no uint32 overflow.
+        r = (rbits >> (UINT(32) - shift)).astype(UINT)
+        return (rem + r) >= (UINT(1) << shift)
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def _exact_pow2(e):
+    """2^e as f32 by direct bit construction (XLA's exp2 can be off by an
+    ulp, which would break bit-exactness with the Rust quantizer). `e` must
+    be within the f32 normal range [-126, 127]."""
+    bits = ((e + 127).astype(INT) << 23).astype(UINT)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("fmt", "mode"))
+def quantize(x, fmt: FloatFormat, mode: str = NEAREST, rbits=None):
+    """Quantize f32 `x` to `fmt`, returning the representable value as f32.
+
+    `rbits` supplies one uint32 of uniform bits per element for stochastic
+    rounding (required iff mode == "stochastic").
+    """
+    if fmt.mbits >= 23 and fmt.ebits >= 8:
+        return x  # fp32: identity
+    if mode == STOCHASTIC:
+        assert rbits is not None, "stochastic rounding needs rbits"
+        rbits = rbits.astype(UINT)
+    else:
+        rbits = jnp.zeros_like(x, dtype=UINT)
+
+    x = x.astype(jnp.float32)
+    u = jax.lax.bitcast_convert_type(x, UINT)
+    sign = u & UINT(0x8000_0000)
+    e_field = ((u >> 23) & UINT(0xFF)).astype(INT)
+    m_field = u & UINT(0x007F_FFFF)
+
+    is_nan = (e_field == 255) & (m_field != 0)
+    is_inf = (e_field == 255) & (m_field == 0)
+    is_f32_subnormal = e_field == 0  # flush (below every target's range)
+
+    e = e_field - 127
+    emin = fmt.emin
+    shift = (23 - fmt.mbits) + jnp.maximum(emin - e, 0)
+    flush = shift > 26
+    no_round = shift <= 0  # mantissa fits (can't happen for our formats)
+    shift_c = jnp.clip(shift, 1, 26).astype(UINT)
+
+    sig = (UINT(1) << 23) | m_field
+    keep = sig >> shift_c
+    rem = sig & ((UINT(1) << shift_c) - UINT(1))
+    up = _round_up(mode, keep, rem, shift_c, rbits) & (rem != 0)
+    keep = keep + up.astype(UINT)
+
+    # Exact reconstruction: keep · 2^(e − (23 − shift)). The power of two is
+    # built bit-exactly; exponents below the f32 normal floor (only possible
+    # for 8-bit-exponent targets like bf16) are split into two exact
+    # factors — the final value is a representable f32 (≤ mbits+1
+    # significant bits above the target's min subnormal), so the last
+    # multiply rounds exactly.
+    e2 = e - (23 - shift)
+    e_hi = jnp.clip(e2, -126, 127)
+    e_lo = jnp.clip(e2 - e_hi, -126, 127)  # 0 unless deep-subnormal target
+    val = keep.astype(jnp.float32) * _exact_pow2(e_hi) * _exact_pow2(e_lo)
+
+    max_n = jnp.float32(fmt.max_normal)
+    val = jnp.minimum(val, max_n)  # saturate
+    signed = jax.lax.bitcast_convert_type(
+        sign | jax.lax.bitcast_convert_type(val, UINT), jnp.float32
+    )
+
+    signed_zero = jax.lax.bitcast_convert_type(sign, jnp.float32)
+    out = jnp.where(flush | is_f32_subnormal | (keep == 0), signed_zero, signed)
+    out = jnp.where(no_round, jnp.clip(x, -max_n, max_n), out)
+    out = jnp.where(is_inf, jnp.where(sign != 0, -max_n, max_n), out)
+    out = jnp.where(is_nan, x, out)
+    return out
+
+
+def quantize_sr(x, fmt: FloatFormat, key):
+    """Stochastic quantization drawing one uint32 per element from `key`."""
+    rbits = jax.random.bits(key, shape=x.shape, dtype=UINT)
+    return quantize(x, fmt, STOCHASTIC, rbits)
+
+
+def add16(acc, x, fmt: FloatFormat = FP16, mode: str = NEAREST, rbits=None):
+    """Reduced-precision addition: quantize the f32 sum into `fmt`
+    (rust: softfloat.rs::add_rounded)."""
+    return quantize(acc + x, fmt, mode, rbits)

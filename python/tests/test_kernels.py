@@ -1,0 +1,123 @@
+"""L1 Pallas kernels vs the pure-jnp oracles (ref.py) — the CORE
+correctness signal for the AOT path, including a hypothesis sweep over
+GEMM shapes and chunk sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.axpy import sgd_axpy_pallas
+from compile.kernels.gemm import chunked_gemm, vmem_bytes
+from compile.kernels.quantize_k import quantize_pallas
+from compile.kernels.ref import chunked_gemm_ref, quantize_fp8_ref, sgd_axpy_ref
+from compile.quant import FP8, FP16, NEAREST, STOCHASTIC, quantize
+
+
+def fp8_mat(key, m, n, lo=0.5, hi=1.5):
+    return quantize_fp8_ref(jax.random.uniform(key, (m, n), jnp.float32, lo, hi))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 300),
+    n=st.integers(1, 40),
+    chunk=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_kernel_matches_ref_shapes(m, k, n, chunk, seed):
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = fp8_mat(ka, m, k, -1.5, 1.5)
+    b = fp8_mat(kb, k, n, -1.5, 1.5)
+    got = np.asarray(chunked_gemm(a, b, chunk=chunk))
+    want = np.asarray(chunked_gemm_ref(a, b, chunk=chunk))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gemm_kernel_block_boundaries():
+    # Shapes exactly at / around the 128/64 block sizes.
+    for m, k, n in [(128, 64, 128), (129, 65, 129), (127, 63, 1), (256, 512, 256)]:
+        ka, kb = jax.random.split(jax.random.PRNGKey(m * 1000 + k + n))
+        a = fp8_mat(ka, m, k)
+        b = fp8_mat(kb, k, n)
+        got = np.asarray(chunked_gemm(a, b))
+        want = np.asarray(chunked_gemm_ref(a, b))
+        np.testing.assert_array_equal(got, want, err_msg=f"{(m, k, n)}")
+
+
+def test_gemm_kernel_close_to_f32_with_chunking():
+    # Non-zero-mean operands, long K: chunked FP16 accumulation tracks f32.
+    ka, kb = jax.random.split(jax.random.PRNGKey(7))
+    a = fp8_mat(ka, 8, 8192)
+    b = fp8_mat(kb, 8192, 8)
+    exact = np.asarray(jnp.dot(a, b, preferred_element_type=jnp.float32))
+    got = np.asarray(chunked_gemm(a, b, chunk=64))
+    rel = np.abs(got - exact) / np.abs(exact)
+    assert rel.max() < 0.01, rel.max()
+
+
+def test_gemm_nochunk_swamps():
+    # CL=1 (every product its own chunk): inter-chunk add16 swamps and the
+    # result collapses far below the true sum — the Fig. 1(b)/5(a) failure.
+    ka, kb = jax.random.split(jax.random.PRNGKey(8))
+    a = fp8_mat(ka, 2, 32768)
+    b = fp8_mat(kb, 32768, 2)
+    exact = np.asarray(jnp.dot(a, b, preferred_element_type=jnp.float32))
+    got = np.asarray(chunked_gemm_ref(a, b, chunk=1))
+    assert (got < 0.25 * exact).all(), (got, exact)
+
+
+def test_quantize_pallas_matches_quantize():
+    key = jax.random.PRNGKey(9)
+    x = jax.random.uniform(key, (10000,), jnp.float32, -60000.0, 60000.0)
+    for fmt in (FP8, FP16):
+        got = np.asarray(quantize_pallas(x, fmt, NEAREST))
+        want = np.asarray(quantize(x, fmt, NEAREST))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_quantize_pallas_stochastic_matches():
+    key = jax.random.PRNGKey(10)
+    x = jax.random.uniform(key, (5000,), jnp.float32, -10.0, 10.0)
+    rbits = jax.random.bits(jax.random.PRNGKey(11), (5000,), jnp.uint32)
+    got = np.asarray(quantize_pallas(x, FP8, STOCHASTIC, rbits))
+    want = np.asarray(quantize(x, FP8, STOCHASTIC, rbits))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 9000), seed=st.integers(0, 2**31 - 1))
+def test_axpy_kernel_matches_ref(n, seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = jax.random.uniform(keys[0], (n,), jnp.float32, -2.0, 2.0)
+    g = jax.random.uniform(keys[1], (n,), jnp.float32, -0.1, 0.1)
+    v = jax.random.uniform(keys[2], (n,), jnp.float32, -0.5, 0.5)
+    rb = jax.random.bits(keys[3], (3, n), jnp.uint32)
+    w1, v1 = sgd_axpy_pallas(w, g, v, rb, 0.05, 0.9, 1e-4)
+    w2, v2 = sgd_axpy_ref(w, g, v, 0.05, 0.9, 1e-4, rb)
+    np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_axpy_sr_moves_subulp_updates_in_expectation():
+    # The Table 4 mechanism: sub-ulp updates survive under SR.
+    n = 4096
+    w = jnp.ones((n,), jnp.float32)
+    v = jnp.zeros((n,), jnp.float32)
+    steps = 500
+    cur_w, cur_v = w, v
+    key = jax.random.PRNGKey(12)
+    for s in range(steps):
+        key, sub = jax.random.split(key)
+        rb = jax.random.bits(sub, (3, n), jnp.uint32)
+        g = jnp.full((n,), 1e-4, jnp.float32)
+        cur_w, cur_v = sgd_axpy_pallas(cur_w, g, cur_v, rb, 1.0, 0.0, 0.0)
+    mean = float(cur_w.mean())
+    assert abs(mean - (1.0 - steps * 1e-4)) < 0.01, mean
+
+
+def test_vmem_budget():
+    # DESIGN.md §11: ≤ 4 MiB per grid step at the default block shape.
+    assert vmem_bytes() <= 4 << 20

@@ -1,0 +1,138 @@
+"""L2 model tests: the quantized CIFAR-CNN train step that aot.py lowers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.model import FP8_PAPER, FP32_BASELINE, make_fwd, make_train_step
+from compile.quant import FP16
+
+
+def make_batch(seed, batch=8):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (batch, *model.INPUT_SHAPE), jnp.float32, 0.0, 2.0)
+    labels = jax.random.randint(ky, (batch,), 0, model.CLASSES)
+    return x, jax.nn.one_hot(labels, model.CLASSES, dtype=jnp.float32)
+
+
+def test_param_specs_match_manifest_convention():
+    specs = model.param_specs()
+    assert [n for n, _ in specs] == [
+        "conv1.w", "conv1.b", "conv2.w", "conv2.b",
+        "conv3.w", "conv3.b", "fc.w", "fc.b",
+    ]
+    assert specs[0][1] == (16, 75)
+    assert specs[-2][1] == (10, 512)
+
+
+def test_forward_shapes_both_policies():
+    params = model.init_params(0)
+    x, _ = make_batch(0)
+    for policy in (FP32_BASELINE, FP8_PAPER):
+        (logits,) = make_fwd(policy)(*params, x)
+        assert logits.shape == (8, model.CLASSES)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_custom_vjp_matches_autodiff_under_fp32():
+    # With the FP32 policy the custom VJP must equal plain autodiff.
+    params = model.init_params(1)
+    x, y = make_batch(1)
+
+    def loss_plain(params):
+        qg = lambda a, w: jnp.dot(a, w.T, preferred_element_type=jnp.float32)
+        it = iter(params)
+        h = x
+        for name, cfg in model.LAYERS[:3]:
+            w, b = next(it), next(it)
+            rows, n = model._patches(h, cfg["k"])
+            oh = h.shape[2]
+            h = (qg(rows, w) + b).reshape(n, oh, oh, cfg["out_c"]).transpose(0, 3, 1, 2)
+            h = model._maxpool2(jnp.maximum(h, 0.0))
+        w, b = next(it), next(it)
+        logits = qg(h.reshape(h.shape[0], -1), w) + b
+        logp = jax.nn.log_softmax(logits, -1)
+        return -jnp.mean(jnp.sum(y * logp, -1))
+
+    g_plain = jax.grad(loss_plain)(params)
+    g_policy = jax.grad(lambda p: model.loss_fn(FP32_BASELINE, p, x, y))(params)
+    for a, b in zip(g_plain, g_policy):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_fp32_train_step_decreases_loss():
+    step_fn = jax.jit(make_train_step(FP32_BASELINE))
+    params = model.init_params(2)
+    moms = [jnp.zeros_like(p) for p in params]
+    x, y = make_batch(2)
+    state = params + moms
+    losses = []
+    for s in range(20):
+        out = step_fn(*state, x, y, jnp.float32(0.05), jnp.float32(s))
+        state = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_fp8_gradients_track_fp32():
+    # The custom-VJP quantized GEMM path must produce gradients aligned
+    # with full-precision autodiff (cosine ≥ 0.85 per parameter) — the
+    # property that makes FP8 training converge at all.
+    params = model.init_params(3)
+    x, y = make_batch(3, batch=16)
+    g32 = jax.grad(lambda p: model.loss_fn(FP32_BASELINE, p, x, y))(params)
+    g8 = jax.grad(
+        lambda p: model.loss_fn(FP8_PAPER, p, x, y) * FP8_PAPER.loss_scale
+    )(params)
+    for (name, _), a, b in zip(model.param_specs(), g32, g8):
+        a = np.asarray(a).ravel()
+        b = np.asarray(b).ravel() / FP8_PAPER.loss_scale
+        cos = float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-12))
+        assert cos > 0.85, (name, cos)
+
+
+def test_fp8_train_step_runs_and_learns():
+    step_fn = jax.jit(make_train_step(FP8_PAPER))
+    params = model.init_params(3)
+    moms = [jnp.zeros_like(p) for p in params]
+    x, y = make_batch(3, batch=16)
+    state = params + moms
+    losses = []
+    for s in range(25):
+        out = step_fn(*state, x, y, jnp.float32(0.05), jnp.float32(s))
+        state = list(out[:-1])
+        losses.append(float(out[-1]))
+    assert all(np.isfinite(losses)), losses
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+    # Under the paper's scheme the master weights live on the FP16 grid.
+    from compile.quant import NEAREST, quantize
+
+    w = state[0]
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(quantize(w, FP16, NEAREST)))
+
+
+def test_train_step_loss_is_unscaled():
+    # The returned loss must be comparable across policies (scale divided
+    # back out): both start near ln(10).
+    x, y = make_batch(4)
+    for policy in (FP32_BASELINE, FP8_PAPER):
+        params = model.init_params(4)
+        moms = [jnp.zeros_like(p) for p in params]
+        out = jax.jit(make_train_step(policy))(
+            *params, *moms, x, y, jnp.float32(0.0), jnp.float32(0.0)
+        )
+        assert 1.0 < float(out[-1]) < 6.0, (policy.name, float(out[-1]))
+
+
+def test_fp8_first_layer_keeps_fp16_input_fidelity():
+    # 133/128 grid values are FP16-exact but FP8-lossy; the first-layer
+    # data operand must stay FP16 (§4.1).
+    from compile.model import make_qgemm
+
+    qg_first = make_qgemm(FP8_PAPER, "first")
+    qg_mid = make_qgemm(FP8_PAPER, "middle")
+    x = jnp.full((1, 1), 133.0 / 128.0, jnp.float32)
+    w = jnp.ones((1, 1), jnp.float32)
+    assert float(qg_first(x, w)[0, 0]) == 133.0 / 128.0
+    assert float(qg_mid(x, w)[0, 0]) == 1.0

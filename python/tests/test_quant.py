@@ -1,0 +1,151 @@
+"""Tests for the normative quantizer (python/compile/quant.py) — including
+a hypothesis sweep against an independent numpy bit-twiddling reference.
+The same algorithm is implemented in Rust (numerics/format.rs); the
+cross-language bit-equality check lives in rust/tests/cross_validation.rs,
+which runs the AOT-lowered version of this code through PJRT."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quant import (
+    FP8,
+    FP16,
+    FP32,
+    IEEE_HALF,
+    NEAREST,
+    STOCHASTIC,
+    TRUNCATE,
+    FloatFormat,
+    quantize,
+    quantize_sr,
+)
+
+
+def np_quantize_ref(x: np.ndarray, fmt: FloatFormat, mode: str = NEAREST) -> np.ndarray:
+    """Independent numpy reference (deterministic modes), written against
+    DESIGN.md §3 rather than ported from the jnp code."""
+    out = np.empty_like(x, dtype=np.float32)
+    for i, v in enumerate(np.asarray(x, dtype=np.float32).ravel()):
+        u = np.float32(v).view(np.uint32)
+        sign = -1.0 if (u >> 31) else 1.0
+        e_field = (u >> 23) & 0xFF
+        m_field = int(u & 0x7FFFFF)
+        if e_field == 255:
+            out.ravel()[i] = v if m_field else sign * fmt.max_normal
+            continue
+        if e_field == 0:
+            out.ravel()[i] = sign * 0.0
+            continue
+        e = int(e_field) - 127
+        shift = (23 - fmt.mbits) + max(fmt.emin - e, 0)
+        if shift <= 0:
+            out.ravel()[i] = np.float32(np.clip(v, -fmt.max_normal, fmt.max_normal))
+            continue
+        if shift > 26:
+            out.ravel()[i] = sign * 0.0
+            continue
+        sig = (1 << 23) | m_field
+        keep = sig >> shift
+        rem = sig & ((1 << shift) - 1)
+        if rem and mode == NEAREST:
+            half = 1 << (shift - 1)
+            if rem > half or (rem == half and keep & 1):
+                keep += 1
+        val = math.ldexp(keep, e - (23 - shift))
+        val = min(val, fmt.max_normal)
+        out.ravel()[i] = np.float32(sign * val)
+    return out
+
+
+FORMATS = [FP8, FP16, IEEE_HALF]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f"e{f.ebits}m{f.mbits}")
+@settings(max_examples=300, deadline=None)
+@given(
+    mant=st.floats(-4.0, 4.0, allow_nan=False),
+    exp=st.integers(-40, 18),
+)
+def test_matches_numpy_reference(fmt, mant, exp):
+    x = np.float32(mant * 2.0**exp)
+    for mode in (NEAREST, TRUNCATE):
+        got = np.asarray(quantize(jnp.float32(x), fmt, mode))
+        want = np_quantize_ref(np.array([x]), fmt, mode)[0]
+        assert got.tobytes() == want.tobytes(), (x, mode, got, want)
+
+
+def test_paper_format_constants():
+    assert FP8.bias == 15 and FP8.max_normal == 57344.0
+    assert FP8.min_normal == 2.0**-14 and FP8.min_subnormal == 2.0**-16
+    assert FP16.bias == 31 and FP16.emin == -30
+    assert IEEE_HALF.max_normal == 65504.0
+
+
+def test_known_values_fp8():
+    xs = jnp.array([1.1, 1.125, 1.375, -1.2, 1e9, -1e9, 0.0], jnp.float32)
+    got = np.asarray(quantize(xs, FP8, NEAREST))
+    np.testing.assert_array_equal(
+        got, np.array([1.0, 1.0, 1.5, -1.25, 57344, -57344, 0.0], np.float32)
+    )
+
+
+def test_specials():
+    x = jnp.array([np.nan, np.inf, -np.inf, -0.0, 1e-40], jnp.float32)
+    q = np.asarray(quantize(x, FP8, NEAREST))
+    assert np.isnan(q[0])
+    assert q[1] == 57344.0 and q[2] == -57344.0
+    assert q[3] == 0.0 and np.signbit(q[3])
+    assert q[4] == 0.0
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f"e{f.ebits}m{f.mbits}")
+def test_idempotent(fmt):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (2048,), jnp.float32, -100.0, 100.0)
+    q1 = quantize(x, fmt, NEAREST)
+    q2 = quantize(q1, fmt, NEAREST)
+    assert np.asarray(q1).tobytes() == np.asarray(q2).tobytes()
+
+
+def test_monotone_nearest():
+    key = jax.random.PRNGKey(1)
+    x = jnp.sort(jax.random.uniform(key, (4096,), jnp.float32, -50.0, 50.0))
+    q = np.asarray(quantize(x, FP8, NEAREST))
+    assert (np.diff(q) >= 0).all()
+
+
+def test_fp32_identity():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (512,), jnp.float32) * 1e10
+    assert np.asarray(quantize(x, FP32, NEAREST)).tobytes() == np.asarray(x).tobytes()
+
+
+def test_stochastic_unbiased_and_two_neighbours():
+    key = jax.random.PRNGKey(3)
+    for x0, lo, hi in [(1.1, 1.0, 1.25), (3.3, 3.0, 3.5)]:
+        q = np.asarray(quantize_sr(jnp.full((200_000,), x0, jnp.float32), FP8, key))
+        assert set(np.unique(q)) <= {np.float32(lo), np.float32(hi)}
+        assert abs(q.mean() - x0) < 0.002
+
+
+def test_truncate_magnitude_never_increases():
+    key = jax.random.PRNGKey(4)
+    x = jax.random.uniform(key, (4096,), jnp.float32, -30.0, 30.0)
+    q = np.asarray(quantize(x, FP8, TRUNCATE))
+    assert (np.abs(q) <= np.abs(np.asarray(x)) + 1e-9).all()
+
+
+def test_swamping_threshold_fp16():
+    """§2.3: adding below-half-ulp values to a big FP16 accumulator is a
+    no-op under nearest rounding (the swamping mechanism)."""
+    big = jnp.float32(4096.0)  # ulp = 8
+    assert float(quantize(big + 2.0, FP16, NEAREST)) == 4096.0
+    assert float(quantize(big + 8.0, FP16, NEAREST)) == 4104.0
+    # tie (half-ulp) to even
+    assert float(quantize(big + 4.0, FP16, NEAREST)) == 4096.0

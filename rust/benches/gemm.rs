@@ -1,0 +1,53 @@
+//! GEMM benchmarks: f32 baseline vs emulated FP8/FP16 paths (fast &
+//! exact), across the three shapes of one CIFAR-CNN layer's Fig. 2 GEMMs,
+//! plus the chunk-size ablation.
+//!
+//! Run: `cargo bench --bench gemm` (pin FP8TRAIN_THREADS for stability).
+
+use fp8train::bench_util::run;
+use fp8train::numerics::gemm::gemm;
+use fp8train::numerics::{FloatFormat, GemmPrecision, RoundMode, Xoshiro256};
+
+fn mat(r: usize, c: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..r * c)
+        .map(|_| FloatFormat::FP8.quantize(rng.uniform(-1.5, 1.5), RoundMode::NearestEven))
+        .collect()
+}
+
+fn bench_shape(label: &str, m: usize, k: usize, n: usize) {
+    let a = mat(m, k, 1);
+    let b = mat(k, n, 2);
+    let macs = (m * k * n) as f64;
+    println!("\n== {label}: [{m}x{k}]·[{k}x{n}] ({macs:.2e} MACs/iter) ==");
+    let configs: [(&str, GemmPrecision); 4] = [
+        ("fp32", GemmPrecision::fp32()),
+        ("fp8_fast_cl64", GemmPrecision::fp8_paper()),
+        ("fp8_exact_cl64", GemmPrecision::fp8_paper_exact()),
+        ("fp8_exact_cl1", GemmPrecision::fp8_nochunk()),
+    ];
+    for (name, prec) in configs {
+        run(&format!("gemm/{label}/{name}"), Some(macs), || {
+            gemm(&prec, &a, &b, m, k, n, 7)[0] as f64
+        });
+    }
+}
+
+fn main() {
+    // The three GEMMs of one conv layer (batch 32, 16×16 spatial, 400-dim
+    // patches, 32 output channels) — Forward, Backward, Gradient:
+    bench_shape("forward", 32 * 256, 400, 32);
+    bench_shape("gradient_longK", 32, 32 * 256, 400); // K = batch·spatial (swamping-prone)
+    bench_shape("square", 256, 256, 256);
+
+    println!("\n== chunk-size ablation (fast path, 256^3) ==");
+    let (m, k, n) = (256, 256, 256);
+    let a = mat(m, k, 3);
+    let b = mat(k, n, 4);
+    for cl in [1usize, 8, 32, 64, 128, 256] {
+        let prec = GemmPrecision::fp8_paper().with_chunk(cl);
+        run(&format!("gemm/ablate/cl{cl}"), Some((m * k * n) as f64), || {
+            gemm(&prec, &a, &b, m, k, n, 7)[0] as f64
+        });
+    }
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmarks of the numerics substrate: quantization, rounding
+//! modes, and the accumulation family of Fig. 3(b) — plus the software
+//! chunking-overhead ablation backing the Fig. 7 <5% hardware claim.
+//!
+//! Run: `cargo bench --bench numerics` (FP8TRAIN_BENCH_FAST=1 for smoke).
+
+use fp8train::bench_util::run;
+use fp8train::numerics::accumulate::{acc_chunked, acc_kahan, acc_pairwise, acc_sequential};
+use fp8train::numerics::{FloatFormat, RoundMode, Xoshiro256};
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let n = 1 << 16;
+    let xs: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 2.0)).collect();
+
+    println!("== quantize (per-element throughput; {n} elements/iter) ==");
+    for fmt in [FloatFormat::FP8, FloatFormat::FP16] {
+        for mode in [RoundMode::NearestEven, RoundMode::Truncate] {
+            let mut buf = xs.clone();
+            run(
+                &format!("quantize/{}/{}", fmt.name(), mode.id()),
+                Some(n as f64),
+                || {
+                    buf.copy_from_slice(&xs);
+                    fmt.quantize_slice(&mut buf, mode);
+                    buf[0] as f64
+                },
+            );
+        }
+        let mut r = Xoshiro256::seed_from_u64(2);
+        let mut buf = xs.clone();
+        run(
+            &format!("quantize/{}/stochastic", fmt.name()),
+            Some(n as f64),
+            || {
+                buf.copy_from_slice(&xs);
+                fmt.quantize_slice_rng(&mut buf, RoundMode::Stochastic, &mut r);
+                buf[0] as f64
+            },
+        );
+    }
+
+    println!("\n== accumulation strategies (N = {n}, FP16) ==");
+    let f16 = FloatFormat::FP16;
+    let nr = RoundMode::NearestEven;
+    let mut r = Xoshiro256::seed_from_u64(3);
+    run("acc/sequential", Some(n as f64), || {
+        acc_sequential(f16, nr, &xs, &mut r) as f64
+    });
+    for cl in [16usize, 64, 256] {
+        run(&format!("acc/chunked/cl{cl}"), Some(n as f64), || {
+            acc_chunked(f16, nr, cl, &xs, &mut r) as f64
+        });
+    }
+    run("acc/pairwise", Some(n as f64), || {
+        acc_pairwise(f16, nr, &xs, &mut r) as f64
+    });
+    run("acc/kahan", Some(n as f64), || {
+        acc_kahan(f16, nr, &xs, &mut r) as f64
+    });
+    run("acc/stochastic_seq", Some(n as f64), || {
+        acc_sequential(f16, RoundMode::Stochastic, &xs, &mut r) as f64
+    });
+
+    println!("\n== software chunking overhead (emulation-side Fig. 7 ablation) ==");
+    let base = run("acc/overhead_base_cl1", Some(n as f64), || {
+        acc_chunked(f16, nr, 1, &xs, &mut r) as f64
+    });
+    for cl in [8usize, 32, 64, 128] {
+        let b = run(&format!("acc/overhead_cl{cl}"), Some(n as f64), || {
+            acc_chunked(f16, nr, cl, &xs, &mut r) as f64
+        });
+        let ratio = b.mean.as_secs_f64() / base.mean.as_secs_f64();
+        println!("  CL={cl}: time ratio vs CL=1 = {ratio:.3}");
+    }
+}

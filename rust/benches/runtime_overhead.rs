@@ -1,0 +1,79 @@
+//! PJRT runtime benchmarks: artifact load/compile cost, per-step latency
+//! of the AOT train step (fp32 vs fp8/Pallas-interpret), kernel-artifact
+//! throughput, and the coordinator's host-boundary overhead vs the native
+//! engine — EXPERIMENTS.md §Perf quotes these rows.
+//!
+//! Requires `make artifacts`; exits cleanly when they are missing.
+
+use fp8train::bench_util::run;
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::models::ModelKind;
+use fp8train::nn::PrecisionPolicy;
+use fp8train::numerics::Xoshiro256;
+use fp8train::runtime::{artifacts_dir, HostTensor, PjrtEngine, Runtime};
+use std::time::Instant;
+
+fn main() {
+    if !artifacts_dir().join("cifar_cnn_fp8.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    std::env::set_var("FP8TRAIN_BENCH_FAST", "1");
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    println!("platform: {}", rt.platform());
+
+    println!("\n== artifact load+compile (one-time cost) ==");
+    for name in ["quant_fp8", "gemm_fp8", "cifar_cnn_fp32", "cifar_cnn_fp8"] {
+        let t = Instant::now();
+        let _exe = rt.load_named(name).expect(name);
+        println!("  {:<18} {:?}", name, t.elapsed());
+    }
+
+    println!("\n== kernel artifacts (per-call latency / element throughput) ==");
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let quant = rt.load_named("quant_fp8").unwrap();
+    let xs = HostTensor::new(&[4096], (0..4096).map(|_| rng.uniform(-2.0, 2.0)).collect());
+    run("pjrt/quant_fp8_4096", Some(4096.0), || {
+        quant.run(std::slice::from_ref(&xs)).unwrap()[0].data[0] as f64
+    });
+
+    let gemm = rt.load_named("gemm_fp8").unwrap();
+    let a = HostTensor::new(&[64, 512], (0..64 * 512).map(|_| rng.uniform(-1.0, 1.0)).collect());
+    let b = HostTensor::new(&[512, 32], (0..512 * 32).map(|_| rng.uniform(-1.0, 1.0)).collect());
+    let macs = (64 * 512 * 32) as f64;
+    run("pjrt/gemm_fp8_64x512x32", Some(macs), || {
+        gemm.run(&[a.clone(), b.clone()]).unwrap()[0].data[0] as f64
+    });
+
+    println!("\n== train-step latency: PJRT vs native (cifar_cnn, batch 32) ==");
+    let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 2);
+    for tag in ["fp32", "fp8"] {
+        let mut engine = PjrtEngine::load(&rt, &format!("cifar_cnn_{tag}"), 2).unwrap();
+        let batch = ds.train_batch(0, engine.batch_size());
+        let mut step = 0u64;
+        run(&format!("pjrt/train_step_{tag}"), None, || {
+            step += 1;
+            engine.train_step(&batch, 0.02, step)
+        });
+    }
+    for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
+        let name = policy.name.clone();
+        let mut engine = NativeEngine::new(ModelKind::CifarCnn, policy, 2);
+        let batch = ds.train_batch(0, 32);
+        let mut step = 0u64;
+        run(&format!("native/train_step_{name}"), None, || {
+            step += 1;
+            engine.train_step(&batch, 0.02, step)
+        });
+    }
+
+    println!("\n== eval (fwd) latency: PJRT fwd artifact ==");
+    for tag in ["fp32", "fp8"] {
+        let mut engine = PjrtEngine::load(&rt, &format!("cifar_cnn_{tag}"), 2).unwrap();
+        let batch = ds.train_batch(0, engine.batch_size());
+        run(&format!("pjrt/eval_{tag}"), None, || {
+            engine.eval(&batch).0
+        });
+    }
+}

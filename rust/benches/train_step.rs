@@ -1,0 +1,38 @@
+//! End-to-end native train-step benchmarks: one optimizer step (forward +
+//! backward + update) per model × policy — the emulation-cost table of
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench train_step`
+
+use fp8train::bench_util::run;
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::models::ModelKind;
+use fp8train::nn::{Layer, PrecisionPolicy};
+
+fn main() {
+    std::env::set_var("FP8TRAIN_BENCH_FAST", "1"); // steps are seconds-scale
+    let batch = 16;
+    for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
+        let ds = SyntheticDataset::for_model(kind, 1);
+        let b = ds.train_batch(0, batch);
+        let macs = kind.build(1).macs_per_example() as f64 * batch as f64 * 3.0; // fwd+bwd+grad
+        println!(
+            "\n== {} (batch {batch}, ~{macs:.2e} emulated MACs/step) ==",
+            kind.id()
+        );
+        for policy in [
+            PrecisionPolicy::fp32(),
+            PrecisionPolicy::fp8_paper(),
+            PrecisionPolicy::fp8_nochunk(),
+        ] {
+            let name = policy.name.clone();
+            let mut engine = NativeEngine::new(kind, policy, 1);
+            let mut step = 0u64;
+            run(&format!("train_step/{}/{}", kind.id(), name), Some(macs), || {
+                step += 1;
+                engine.train_step(&b, 0.02, step)
+            });
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs the binaries under `rust/benches/` with
+//! `harness = false`; each uses this module: auto-calibrated iteration
+//! counts, warmup, and trimmed statistics (mean / p50 / p99), printed in a
+//! stable machine-parseable format that EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional work units per iteration (e.g. FLOPs, elements) for
+    /// throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Work units per second, if `units_per_iter` was supplied.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter
+            .map(|u| u / self.mean.as_secs_f64())
+    }
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {:<48} iters={:<7} mean={:>12?} p50={:>12?} p99={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99
+        )?;
+        if let Some(t) = self.throughput() {
+            write!(f, " thrpt={}", human_rate(t))?;
+        }
+        Ok(())
+    }
+}
+
+fn human_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}K/s", r / 1e3)
+    } else {
+        format!("{r:.2}/s")
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Minimum total measurement time.
+    pub min_time: Duration,
+    /// Warmup time before measuring.
+    pub warmup: Duration,
+    /// Upper bound on measured samples (keeps percentile math bounded).
+    pub max_samples: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        // FP8TRAIN_BENCH_FAST=1 shrinks budgets ~10x (CI / smoke runs).
+        let fast = std::env::var("FP8TRAIN_BENCH_FAST").is_ok();
+        Self {
+            min_time: Duration::from_millis(if fast { 60 } else { 600 }),
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            max_samples: 10_000,
+        }
+    }
+}
+
+/// Measure `f`, which performs ONE iteration of work and returns a value
+/// that is black-boxed to stop the optimizer deleting the work.
+pub fn bench<T, F: FnMut() -> T>(name: &str, units_per_iter: Option<f64>, mut f: F) -> BenchResult {
+    let opts = BenchOpts::default();
+    // Warmup & calibration.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_start.elapsed() < opts.warmup || warm_iters < 3 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+    }
+    let per_iter = warm_start.elapsed() / warm_iters as u32;
+    // Batch iterations so each sample is ≥ ~20 µs (timer noise floor).
+    let batch = (Duration::from_micros(20).as_nanos() / per_iter.as_nanos().max(1))
+        .max(1)
+        .min(1 << 20) as usize;
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let start = Instant::now();
+    let mut total_iters = 0usize;
+    while start.elapsed() < opts.min_time && samples.len() < opts.max_samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        samples.push(t.elapsed() / batch as u32);
+        total_iters += batch;
+    }
+    samples.sort_unstable();
+    let p = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    // Trimmed mean: drop top/bottom 5%.
+    let lo = samples.len() / 20;
+    let hi = samples.len() - lo;
+    let mean = samples[lo..hi]
+        .iter()
+        .sum::<Duration>()
+        .checked_div((hi - lo) as u32)
+        .unwrap_or_default();
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        mean,
+        p50: p(0.5),
+        p99: p(0.99),
+        units_per_iter,
+    }
+}
+
+/// Run + print, returning the result for programmatic use.
+pub fn run(name: &str, units_per_iter: Option<f64>, f: impl FnMut() -> f64) -> BenchResult {
+    let r = bench(name, units_per_iter, f);
+    println!("{r}");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("FP8TRAIN_BENCH_FAST", "1");
+        let r = bench("noop-ish", Some(100.0), || {
+            (0..100).map(|i| i as f64).sum::<f64>()
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn human_rates() {
+        assert_eq!(super::human_rate(2.5e9), "2.50G/s");
+        assert_eq!(super::human_rate(5.0e6), "5.00M/s");
+        assert_eq!(super::human_rate(1.5e3), "1.50K/s");
+        assert_eq!(super::human_rate(10.0), "10.00/s");
+    }
+}

@@ -1,0 +1,156 @@
+//! Hand-rolled CLI argument parsing (no `clap` offline).
+//!
+//! Grammar: `fp8train <command> [positional...] [--flag] [--key value]`.
+//! `Args` collects flags/options/positionals; each subcommand validates the
+//! options it understands and turns them into typed values.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("unknown option --{0} (known: {1})")]
+    Unknown(String, String),
+    #[error("cannot parse --{0} value {1:?} as {2}")]
+    BadValue(String, String, &'static str),
+    #[error("{0}")]
+    Usage(String),
+}
+
+impl Args {
+    /// Parse raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--key=value` or `--key value` or boolean `--key`
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+        ty: &'static str,
+    ) -> Result<T, CliError> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse()
+                .map_err(|_| CliError::BadValue(name.into(), raw.into(), ty)),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        self.opt_parse(name, default, "usize")
+    }
+
+    pub fn opt_f32(&self, name: &str, default: f32) -> Result<f32, CliError> {
+        self.opt_parse(name, default, "f32")
+    }
+
+    pub fn opt_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        self.opt_parse(name, default, "u64")
+    }
+
+    /// Reject options outside `known` (typo protection mirroring
+    /// `Ini::check_known`).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), CliError> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                return Err(CliError::Unknown(k.clone(), known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic_grammar() {
+        let a = parse("train cifar_cnn --policy fp8_paper --steps=500 --quiet");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.positional, vec!["cifar_cnn"]);
+        assert_eq!(a.opt("policy"), Some("fp8_paper"));
+        assert_eq!(a.opt_usize("steps", 0).unwrap(), 500);
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("loud"));
+    }
+
+    #[test]
+    fn defaults_and_bad_values() {
+        let a = parse("exp fig3b --seed abc");
+        assert_eq!(a.opt_usize("steps", 7).unwrap(), 7);
+        assert!(a.opt_u64("seed", 0).is_err());
+    }
+
+    #[test]
+    fn check_known_flags_and_opts() {
+        let a = parse("train --steps 5 --typo 1");
+        assert!(a.check_known(&["steps"]).is_err());
+        assert!(a.check_known(&["steps", "typo"]).is_ok());
+    }
+
+    #[test]
+    fn empty_command() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("train --lr -0.5");
+        assert_eq!(a.opt_f32("lr", 0.0).unwrap(), -0.5);
+    }
+}

@@ -1,0 +1,225 @@
+//! Configuration system.
+//!
+//! The offline environment has no `serde`/`toml`, so runs are configured
+//! with a small INI dialect (sections, `key = value`, `#`/`;` comments,
+//! string/num/bool scalars) parsed by [`Ini`], with typed accessors and
+//! "unknown key" validation so config typos fail loudly. CLI flags
+//! (`cli.rs`) override file values; `configs/*.ini` ship the presets used
+//! by EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+
+/// Parsed INI document: section → key → raw string value.
+/// Keys outside any section land in the `""` section.
+#[derive(Clone, Debug, Default)]
+pub struct Ini {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+/// Errors surfaced while parsing or reading config values.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: malformed line: {1:?}")]
+    Malformed(usize, String),
+    #[error("missing key [{0}] {1}")]
+    Missing(String, String),
+    #[error("[{0}] {1}: cannot parse {2:?} as {3}")]
+    BadValue(String, String, String, &'static str),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut ini = Ini::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                ini.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                return Err(ConfigError::Malformed(lineno + 1, raw.to_string()));
+            };
+            // Strip trailing comments and surrounding quotes.
+            let mut v = v.trim();
+            if let Some(i) = v.find(" #") {
+                v = v[..i].trim();
+            }
+            let v = v.trim_matches('"');
+            ini.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), v.to_string());
+        }
+        Ok(ini)
+    }
+
+    pub fn load<P: AsRef<std::path::Path>>(path: P) -> Result<Self, ConfigError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn merge(&mut self, other: &Ini) {
+        for (s, kv) in &other.sections {
+            let dst = self.sections.entry(s.clone()).or_default();
+            for (k, v) in kv {
+                dst.insert(k.clone(), v.clone());
+            }
+        }
+    }
+
+    /// Set a value directly (used for CLI `--set section.key=value`).
+    pub fn set(&mut self, section: &str, key: &str, value: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections
+            .get(section)
+            .and_then(|kv| kv.get(key))
+            .map(String::as_str)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, section: &str, key: &str) -> Result<&str, ConfigError> {
+        self.get(section, key)
+            .ok_or_else(|| ConfigError::Missing(section.into(), key.into()))
+    }
+
+    fn parse_as<T: std::str::FromStr>(
+        &self,
+        section: &str,
+        key: &str,
+        raw: &str,
+        ty: &'static str,
+    ) -> Result<T, ConfigError> {
+        raw.parse().map_err(|_| {
+            ConfigError::BadValue(section.into(), key.into(), raw.into(), ty)
+        })
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str, default: f64) -> Result<f64, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(raw) => self.parse_as(section, key, raw, "f64"),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str, default: usize) -> Result<usize, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(raw) => self.parse_as(section, key, raw, "usize"),
+        }
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str, default: u64) -> Result<u64, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(raw) => self.parse_as(section, key, raw, "u64"),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str, default: bool) -> Result<bool, ConfigError> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(raw) => Err(ConfigError::BadValue(
+                section.into(),
+                key.into(),
+                raw.into(),
+                "bool",
+            )),
+        }
+    }
+
+    /// Validate that every key in `section` is in `known` — catches typos.
+    pub fn check_known(&self, section: &str, known: &[&str]) -> Result<(), ConfigError> {
+        if let Some(kv) = self.sections.get(section) {
+            for k in kv.keys() {
+                if !known.contains(&k.as_str()) {
+                    return Err(ConfigError::Missing(
+                        section.into(),
+                        format!("unknown key {k:?} (expected one of {known:?})"),
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a comment
+top = 1
+[train]
+lr = 0.1         # inline comment
+steps = 500
+engine = "native"
+verbose = true
+[quant]
+policy = fp8_paper
+"#;
+
+    #[test]
+    fn parse_and_read() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("", "top"), Some("1"));
+        assert_eq!(ini.get_f64("train", "lr", 0.0).unwrap(), 0.1);
+        assert_eq!(ini.get_usize("train", "steps", 0).unwrap(), 500);
+        assert_eq!(ini.get_str("train", "engine", ""), "native");
+        assert!(ini.get_bool("train", "verbose", false).unwrap());
+        assert_eq!(ini.get_str("quant", "policy", ""), "fp8_paper");
+        assert_eq!(ini.get_f64("train", "absent", 9.5).unwrap(), 9.5);
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(matches!(
+            Ini::parse("not a kv line"),
+            Err(ConfigError::Malformed(1, _))
+        ));
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let ini = Ini::parse("[t]\nx = abc").unwrap();
+        let err = ini.get_f64("t", "x", 0.0).unwrap_err();
+        assert!(err.to_string().contains("cannot parse"));
+    }
+
+    #[test]
+    fn merge_and_set_override() {
+        let mut a = Ini::parse("[t]\nx = 1\ny = 2").unwrap();
+        let b = Ini::parse("[t]\nx = 10").unwrap();
+        a.merge(&b);
+        assert_eq!(a.get("t", "x"), Some("10"));
+        assert_eq!(a.get("t", "y"), Some("2"));
+        a.set("t", "z", "3");
+        assert_eq!(a.get("t", "z"), Some("3"));
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let ini = Ini::parse("[t]\nx = 1\ntypo = 2").unwrap();
+        assert!(ini.check_known("t", &["x"]).is_err());
+        assert!(ini.check_known("t", &["x", "typo"]).is_ok());
+        assert!(ini.check_known("absent_section", &[]).is_ok());
+    }
+}

@@ -1,0 +1,55 @@
+//! The L3 coordinator: the engine abstraction the trainer, experiments and
+//! examples drive.
+//!
+//! The paper's contribution is a numeric format + accumulation scheme, so
+//! (per DESIGN.md §2) L3 is a thin driver around two interchangeable
+//! engines:
+//!
+//! - [`NativeEngine`] — the Rust emulation engine (`nn/` + `numerics/`),
+//!   used by every paper experiment;
+//! - [`crate::runtime::PjrtEngine`] — the deployable path: the same
+//!   quantized train-step AOT-compiled from JAX/Pallas to an HLO artifact
+//!   and executed through PJRT with device-resident state.
+//!
+//! Both implement [`Engine`]; `train::Trainer` is engine-agnostic.
+
+pub mod native;
+
+pub use native::NativeEngine;
+
+use crate::data::Batch;
+
+/// One training/eval step provider.
+pub trait Engine {
+    fn name(&self) -> String;
+
+    /// Run one optimization step on `batch` at learning rate `lr`;
+    /// returns the (unscaled) training loss.
+    fn train_step(&mut self, batch: &Batch, lr: f32, step: u64) -> f64;
+
+    /// Evaluate `batch`: returns (summed loss, #correct).
+    fn eval(&mut self, batch: &Batch) -> (f64, usize);
+
+    /// Learnable parameter count (Table 1 model sizes).
+    fn num_params(&mut self) -> usize;
+}
+
+/// Evaluate an engine over a full test set; returns (mean loss, error %).
+pub fn evaluate(engine: &mut dyn Engine, batches: &[Batch]) -> (f64, f64) {
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for b in batches {
+        let (l, c) = engine.eval(b);
+        loss += l * b.len() as f64;
+        correct += c;
+        total += b.len();
+    }
+    if total == 0 {
+        return (0.0, 100.0);
+    }
+    (
+        loss / total as f64,
+        100.0 * (1.0 - correct as f64 / total as f64),
+    )
+}

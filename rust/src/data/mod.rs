@@ -1,0 +1,32 @@
+//! Datasets for the training engine.
+//!
+//! The paper evaluates on CIFAR10, ImageNet and the BN50 speech corpus —
+//! none of which ship with this repository. Per DESIGN.md §7 we substitute
+//! deterministic **synthetic class-conditional datasets** whose statistics
+//! exercise the same numerical phenomena: uint8-grid pixel intensities
+//! (the §4.1 input-representation issue), non-zero-mean activations
+//! (swamping), and class structure that makes accuracy a meaningful,
+//! policy-sensitive metric.
+
+pub mod synthetic;
+
+pub use synthetic::SyntheticDataset;
+
+use crate::tensor::Tensor;
+
+/// One minibatch: input tensor + integer labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Tensor,
+    pub labels: Vec<usize>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}

@@ -1,0 +1,259 @@
+//! Deterministic synthetic class-conditional datasets.
+//!
+//! Every example is a pure function of `(dataset seed, split, index)`:
+//! label = index mod classes; input = class template + Gaussian noise,
+//! snapped to the uint8-like 1/128 grid on `[0, 2)`.
+//!
+//! Why this grid: the paper (§4.1) shows FP8 cannot represent the 256
+//! uint8 intensity levels, forcing FP16 input images. Values `k/128` in
+//! `[1, 2)` need 7 mantissa bits — exact in FP16 `(1,6,9)`, but rounded to
+//! 2 bits by FP8 `(1,5,2)` — so the scaled datasets preserve exactly that
+//! representation gap while keeping activations O(1) for stable training.
+//! The mean is ≈1 (non-zero), which is the swamping-prone regime of
+//! Fig. 3(b).
+//!
+//! Image templates are smooth (low-resolution patterns bilinearly
+//! upsampled) so that convolutional features generalize; vector templates
+//! (BN50-like) are i.i.d. draws. Test examples use the same templates with
+//! a disjoint noise stream — generalization requires denoising, which is
+//! what the paper's over-fitting failure mode (Fig. 5b: "training loss
+//! converges but test error diverges") needs in order to show up.
+
+use super::Batch;
+use crate::nn::models::{InputKind, ModelKind};
+use crate::numerics::rng::SplitMix64;
+use crate::numerics::Xoshiro256;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+#[derive(Clone, Debug)]
+pub struct SyntheticDataset {
+    pub input: InputKind,
+    pub classes: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub noise: f32,
+    seed: u64,
+    /// Per-class template, flattened to the input element count.
+    templates: Vec<Vec<f32>>,
+}
+
+/// Snap to the uint8-like grid: 256 levels of width 1/128 on [0, 2).
+#[inline]
+pub fn snap_u8_grid(x: f32) -> f32 {
+    (x.clamp(0.0, 255.0 / 128.0) * 128.0).round() / 128.0
+}
+
+fn upsample_bilinear(coarse: &[f32], cs: usize, fine: usize) -> Vec<f32> {
+    let mut out = vec![0f32; fine * fine];
+    let scale = cs as f32 / fine as f32;
+    for y in 0..fine {
+        for x in 0..fine {
+            let fy = (y as f32 + 0.5) * scale - 0.5;
+            let fx = (x as f32 + 0.5) * scale - 0.5;
+            let y0 = fy.floor().clamp(0.0, (cs - 1) as f32) as usize;
+            let x0 = fx.floor().clamp(0.0, (cs - 1) as f32) as usize;
+            let y1 = (y0 + 1).min(cs - 1);
+            let x1 = (x0 + 1).min(cs - 1);
+            let wy = (fy - y0 as f32).clamp(0.0, 1.0);
+            let wx = (fx - x0 as f32).clamp(0.0, 1.0);
+            out[y * fine + x] = coarse[y0 * cs + x0] * (1.0 - wy) * (1.0 - wx)
+                + coarse[y0 * cs + x1] * (1.0 - wy) * wx
+                + coarse[y1 * cs + x0] * wy * (1.0 - wx)
+                + coarse[y1 * cs + x1] * wy * wx;
+        }
+    }
+    out
+}
+
+impl SyntheticDataset {
+    pub fn new(input: InputKind, classes: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x7E3A_17);
+        let templates = (0..classes)
+            .map(|_| match input {
+                InputKind::Image { c, h, w } => {
+                    debug_assert_eq!(h, w, "square images only");
+                    let cs = 4; // low-res pattern → smooth 32×32 template
+                    let mut t = Vec::with_capacity(c * h * w);
+                    for _ in 0..c {
+                        let coarse: Vec<f32> = (0..cs * cs).map(|_| rng.uniform(0.2, 1.8)).collect();
+                        t.extend(upsample_bilinear(&coarse, cs, h));
+                    }
+                    t
+                }
+                InputKind::Vector { dim } => (0..dim).map(|_| rng.uniform(0.2, 1.8)).collect(),
+            })
+            .collect();
+        Self {
+            input,
+            classes,
+            train_size: 2048,
+            test_size: 512,
+            noise: 0.3,
+            seed,
+            templates,
+        }
+    }
+
+    /// Dataset sized/shaped for one of the six models.
+    pub fn for_model(kind: ModelKind, seed: u64) -> Self {
+        Self::new(kind.input(), kind.classes(), seed)
+    }
+
+    pub fn with_sizes(mut self, train: usize, test: usize) -> Self {
+        self.train_size = train;
+        self.test_size = test;
+        self
+    }
+
+    pub fn with_noise(mut self, noise: f32) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    /// Deterministically generate example `idx` of `split`.
+    pub fn example(&self, split: Split, idx: usize) -> (Vec<f32>, usize) {
+        let n = match split {
+            Split::Train => self.train_size,
+            Split::Test => self.test_size,
+        };
+        let idx = idx % n;
+        let label = idx % self.classes;
+        let tag = match split {
+            Split::Train => 0x11u64,
+            Split::Test => 0x22,
+        };
+        let mut sm = SplitMix64::new(self.seed ^ (tag << 56) ^ idx as u64);
+        let mut rng = Xoshiro256::seed_from_u64(sm.next_u64());
+        let x = self.templates[label]
+            .iter()
+            .map(|&t| snap_u8_grid(t + self.noise * rng.normal()))
+            .collect();
+        (x, label)
+    }
+
+    /// Training batch for step `step` (cycles through the train split in a
+    /// per-epoch deterministic order).
+    pub fn train_batch(&self, step: usize, bs: usize) -> Batch {
+        let start = step * bs;
+        self.batch(Split::Train, (0..bs).map(|i| start + i))
+    }
+
+    /// All test batches.
+    pub fn test_batches(&self, bs: usize) -> Vec<Batch> {
+        (0..self.test_size.div_ceil(bs))
+            .map(|b| {
+                let lo = b * bs;
+                let hi = ((b + 1) * bs).min(self.test_size);
+                self.batch(Split::Test, lo..hi)
+            })
+            .collect()
+    }
+
+    fn batch(&self, split: Split, idxs: impl Iterator<Item = usize>) -> Batch {
+        let mut xs: Vec<f32> = Vec::new();
+        let mut labels = Vec::new();
+        for i in idxs {
+            let (x, l) = self.example(split, i);
+            xs.extend(x);
+            labels.push(l);
+        }
+        let shape = self.input.shape(labels.len());
+        Batch {
+            x: Tensor::from_vec(&shape, xs),
+            labels,
+        }
+    }
+
+    /// Steps per epoch at batch size `bs`.
+    pub fn steps_per_epoch(&self, bs: usize) -> usize {
+        self.train_size.div_ceil(bs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::FloatFormat;
+
+    #[test]
+    fn deterministic_and_split_disjoint() {
+        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 42);
+        let (a1, l1) = d.example(Split::Train, 17);
+        let (a2, l2) = d.example(Split::Train, 17);
+        assert_eq!(a1, a2);
+        assert_eq!(l1, l2);
+        let (b, _) = d.example(Split::Test, 17);
+        assert_ne!(a1, b, "train/test noise streams must differ");
+    }
+
+    #[test]
+    fn values_on_u8_grid_and_fp16_exact() {
+        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 1);
+        let (x, _) = d.example(Split::Train, 3);
+        for &v in &x {
+            assert!((0.0..=2.0).contains(&v));
+            assert_eq!(v, snap_u8_grid(v), "on-grid");
+            // The §4.1 property: exact in FP16, generally not in FP8.
+            assert!(FloatFormat::FP16.is_representable(v), "v={v}");
+        }
+        // And FP8 really does lose some of them.
+        let lossy = x
+            .iter()
+            .filter(|&&v| FloatFormat::FP8.quantize(v, crate::numerics::RoundMode::NearestEven) != v)
+            .count();
+        assert!(lossy > x.len() / 4, "only {lossy}/{} lossy", x.len());
+    }
+
+    #[test]
+    fn batches_have_right_shapes_and_balanced_labels() {
+        let d = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 2);
+        let b = d.train_batch(0, 16);
+        assert_eq!(b.x.shape, vec![16, 440]);
+        assert_eq!(b.len(), 16);
+        let img = SyntheticDataset::for_model(ModelKind::ResNet18, 2);
+        let b = img.train_batch(3, 8);
+        assert_eq!(b.x.shape, vec![8, 3, 32, 32]);
+        // Labels cycle through classes.
+        assert_eq!(b.labels, (24..32).map(|i| i % 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn test_batches_cover_split_once() {
+        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 3).with_sizes(64, 50);
+        let batches = d.test_batches(16);
+        let total: usize = batches.iter().map(Batch::len).sum();
+        assert_eq!(total, 50);
+        assert_eq!(batches.len(), 4); // 16+16+16+2
+    }
+
+    #[test]
+    fn templates_are_class_distinct() {
+        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 4);
+        let (a, _) = d.example(Split::Train, 0); // class 0
+        let (b, _) = d.example(Split::Train, 1); // class 1
+        let dist: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+        assert!(dist > 0.1, "templates too close: {dist}");
+    }
+
+    #[test]
+    fn mean_is_near_one() {
+        // The swamping-relevant property: non-zero-mean inputs.
+        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 5);
+        let b = d.train_batch(0, 32);
+        let mean = b.x.sum() / b.x.len() as f64;
+        assert!((mean - 1.0).abs() < 0.25, "mean={mean}");
+    }
+
+    #[test]
+    fn upsample_constant_is_constant() {
+        let coarse = vec![0.7f32; 16];
+        let fine = upsample_bilinear(&coarse, 4, 32);
+        assert!(fine.iter().all(|&v| (v - 0.7).abs() < 1e-6));
+    }
+}

@@ -1,0 +1,54 @@
+//! Fig. 1: the three challenges of naive precision reduction, shown as
+//! convergence gaps vs the FP32 baseline on CIFAR-CNN (the paper uses
+//! ResNet18/ImageNet; DESIGN.md §7 scales the workload, the mechanism is
+//! identical):
+//!
+//! - (a) FP8 representations alone (FP32 accumulation/updates),
+//! - (b) FP16 accumulation without chunking,
+//! - (c) FP16 weight updates with nearest rounding.
+
+use super::{run_training, ExpOpts};
+use crate::nn::models::ModelKind;
+use crate::nn::PrecisionPolicy;
+use anyhow::Result;
+
+pub fn policies() -> Vec<PrecisionPolicy> {
+    vec![
+        PrecisionPolicy::fp32(),
+        PrecisionPolicy::fp8_reps_only(),    // (a)
+        PrecisionPolicy::fp16_acc_nochunk(), // (b)
+        PrecisionPolicy::fp16_upd_nearest(), // (c)
+    ]
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    println!(
+        "Fig 1: naive precision reduction on {} ({} steps, batch {})",
+        ModelKind::CifarCnn.id(),
+        opts.steps,
+        opts.batch
+    );
+    println!(
+        "{:<20} {:>12} {:>12} {:>12}",
+        "policy", "train_loss", "test_err_%", "gap_vs_fp32"
+    );
+    let mut base_err = None;
+    for policy in policies() {
+        let name = policy.name.clone();
+        let csv = opts.csv_path(&format!("fig1_{name}"));
+        let r = run_training(ModelKind::CifarCnn, policy, opts, Some(csv));
+        let gap = base_err.map(|b: f64| r.final_test_err - b);
+        if base_err.is_none() {
+            base_err = Some(r.final_test_err);
+        }
+        println!(
+            "{:<20} {:>12.4} {:>12.2} {:>12}",
+            name,
+            r.final_train_loss,
+            r.final_test_err,
+            gap.map(|g| format!("{g:+.2}")).unwrap_or_else(|| "—".into())
+        );
+    }
+    println!("\n(paper: each naive reduction degrades vs FP32; chunking + SR in the full\n scheme — see table1 — recover baseline accuracy)");
+    Ok(())
+}

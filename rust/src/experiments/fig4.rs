@@ -1,0 +1,31 @@
+//! Fig. 4: convergence curves (train loss / test error vs step) for every
+//! network under FP32 vs the FP8 scheme — the same runs as Table 1 but
+//! with the full per-eval CSV series written for plotting.
+
+use super::{run_training, ExpOpts};
+use crate::nn::models::ModelKind;
+use crate::nn::PrecisionPolicy;
+use anyhow::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    println!(
+        "Fig 4: convergence curves for all models, fp32 vs fp8_paper ({} steps)",
+        opts.steps
+    );
+    for kind in ModelKind::ALL {
+        for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
+            let name = format!("fig4_{}_{}", kind.id(), policy.name);
+            let csv = opts.csv_path(&name);
+            let r = run_training(kind, policy.clone(), opts, Some(csv.clone()));
+            println!(
+                "{:<28} final train_loss {:.4} test_err {:>6.2}%  → {}",
+                format!("{}/{}", kind.id(), policy.name),
+                r.final_train_loss,
+                r.final_test_err,
+                csv
+            );
+        }
+    }
+    println!("\n(plot each pair of CSVs; paper Fig. 4 shows the FP8 curve tracking FP32)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Fig. 7 / §4.4: hardware efficiency of FP8 engines with FP16 chunk-based
+//! accumulation — regenerated from the analytical cost model in
+//! [`super::hw_model`] (the paper used 14nm silicon measurements; the
+//! claims are ratios, which the model reproduces — see DESIGN.md §7).
+
+use super::hw_model::{self, fp16_engine, fp16_pure_engine, fp8_engine};
+use super::ExpOpts;
+use crate::logging::CsvSink;
+use anyhow::Result;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    println!("Fig 7 / §4.4: MAC energy & area model (calibrated, ratios are the claim)\n");
+
+    let configs = [
+        ("FP8×FP8 + FP16 acc, CL=64", fp8_engine(64)),
+        ("FP16×FP16 + FP16 acc", fp16_pure_engine()),
+        ("FP16×FP16 + FP32 acc", fp16_engine()),
+    ];
+    println!(
+        "{:<28} {:>12} {:>12} {:>10}",
+        "engine", "energy_pJ", "area_a.u.", "vs FP8"
+    );
+    let fp8_e = fp8_engine(64).energy_pj();
+    for (label, c) in configs {
+        println!(
+            "{:<28} {:>12.3} {:>12.1} {:>9.2}x",
+            label,
+            c.energy_pj(),
+            c.area(),
+            c.energy_pj() / fp8_e
+        );
+    }
+
+    println!("\nchunking overhead vs chunk size (energy fraction of un-chunked MAC):");
+    let sink = CsvSink::create(
+        opts.csv_path("fig7_chunk_overhead"),
+        &["chunk", "overhead_frac"],
+    )?;
+    println!("{:>8} {:>12}", "CL", "overhead_%");
+    for cl in [2usize, 4, 8, 16, 32, 64, 128, 256, 512] {
+        let f = fp8_engine(cl).chunk_overhead_frac();
+        sink.row(&[cl as f64, f]);
+        println!("{:>8} {:>11.2}%", cl, 100.0 * f);
+    }
+    sink.flush();
+
+    println!(
+        "\nefficiency ratio FP8 vs FP16+FP32acc: {:.2}x; vs pure FP16: {:.2}x",
+        hw_model::efficiency_ratio(fp16_engine(), 64),
+        hw_model::efficiency_ratio(fp16_pure_engine(), 64),
+    );
+    println!("(paper: 2–4x more efficient; chunking overhead <5% for CL ≥ 64)");
+    Ok(())
+}

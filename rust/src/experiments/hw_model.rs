@@ -1,0 +1,165 @@
+//! Analytical hardware cost model behind Fig. 7 / §4.4.
+//!
+//! The paper implemented a 14nm dataflow core with FP8 multipliers feeding
+//! FP16 chunk-based accumulators and reports (1) FP8 engines 2–4× more
+//! efficient than FP16 and (2) chunking overhead < 5% for CL ≥ 64. We
+//! model a fused MAC from first principles:
+//!
+//! - multiplier energy/area ∝ (mbits+1)² — an m-bit significand multiplier
+//!   is an (m+1)×(m+1) partial-product array,
+//! - adder energy/area ∝ datapath width (1 + ebits + mbits aligned +
+//!   mantissa), linear carry chain,
+//! - calibrated to the published 45nm per-op energies (Horowitz, ISSCC'14:
+//!   fp32 mult 3.7 pJ / add 0.9 pJ; fp16 mult 1.1 pJ / add 0.4 pJ) —
+//!   ratios, which are what §4.4 claims, are process-independent.
+//!
+//! Chunking cost: one extra accumulator register and one extra inter-chunk
+//! add per CL elements, plus a register swap — amortized per-MAC overhead
+//! `(E_add + E_reg) / CL`.
+
+use crate::numerics::FloatFormat;
+
+/// Calibration constants (45nm published ops; only ratios matter).
+const FP32_MULT_PJ: f64 = 3.7;
+const FP32_ADD_PJ: f64 = 0.9;
+/// Register file read+write energy per access (pJ), small vs adders.
+const REG_PJ: f64 = 0.05;
+
+/// Energy (pJ) of an m-bit-significand floating-point multiplier.
+pub fn mult_energy(fmt: FloatFormat) -> f64 {
+    let m = (fmt.mbits + 1) as f64; // implicit bit participates
+    FP32_MULT_PJ * (m * m) / (24.0 * 24.0)
+}
+
+/// Energy (pJ) of a floating-point adder of the given format.
+pub fn add_energy(fmt: FloatFormat) -> f64 {
+    let width = fmt.width() as f64;
+    FP32_ADD_PJ * width / 32.0
+}
+
+/// Relative area of a multiplier (same scaling law as energy).
+pub fn mult_area(fmt: FloatFormat) -> f64 {
+    let m = (fmt.mbits + 1) as f64;
+    m * m
+}
+
+pub fn add_area(fmt: FloatFormat) -> f64 {
+    // Alignment shifter + mantissa adder + normalizer ≈ linear in width,
+    // with a 3× constant vs a plain integer adder.
+    3.0 * fmt.width() as f64
+}
+
+/// One MAC configuration: multiply in `mult`, accumulate in `acc`,
+/// optionally chunk-based with length `chunk`.
+#[derive(Clone, Copy, Debug)]
+pub struct MacConfig {
+    pub mult: FloatFormat,
+    pub acc: FloatFormat,
+    pub chunk: Option<usize>,
+}
+
+impl MacConfig {
+    /// Energy per MAC in pJ, including amortized chunking overhead.
+    pub fn energy_pj(&self) -> f64 {
+        let base = mult_energy(self.mult) + add_energy(self.acc);
+        base + self.chunk_overhead_pj()
+    }
+
+    /// Absolute chunking overhead per MAC (pJ).
+    pub fn chunk_overhead_pj(&self) -> f64 {
+        match self.chunk {
+            // Inter-chunk add + partial-sum register traffic, once per CL.
+            Some(cl) => (add_energy(self.acc) + 2.0 * REG_PJ) / cl as f64,
+            None => 0.0,
+        }
+    }
+
+    /// Chunking overhead as a fraction of the un-chunked MAC energy.
+    pub fn chunk_overhead_frac(&self) -> f64 {
+        let base = mult_energy(self.mult) + add_energy(self.acc);
+        self.chunk_overhead_pj() / base
+    }
+
+    /// Relative datapath area (arbitrary units).
+    pub fn area(&self) -> f64 {
+        let reg = if self.chunk.is_some() { add_area(self.acc) * 0.1 } else { 0.0 };
+        mult_area(self.mult) + add_area(self.acc) + reg
+    }
+}
+
+/// The paper's comparison points.
+pub fn fp8_engine(chunk: usize) -> MacConfig {
+    MacConfig {
+        mult: FloatFormat::FP8,
+        acc: FloatFormat::FP16,
+        chunk: Some(chunk),
+    }
+}
+
+pub fn fp16_engine() -> MacConfig {
+    // Today's FP16 training hardware: IEEE-half multipliers, FP32
+    // accumulation (§2.1: "accumulating results into 32-bit arrays").
+    MacConfig {
+        mult: FloatFormat::IEEE_HALF,
+        acc: FloatFormat::FP32,
+        chunk: None,
+    }
+}
+
+/// Pure-FP16 engine (FP16 mult + FP16 acc, the §4.4 "pure FP16
+/// computations" comparison).
+pub fn fp16_pure_engine() -> MacConfig {
+    MacConfig {
+        mult: FloatFormat::FP16,
+        acc: FloatFormat::FP16,
+        chunk: None,
+    }
+}
+
+/// Energy-efficiency ratio of the FP8 engine over a reference engine.
+pub fn efficiency_ratio(reference: MacConfig, chunk: usize) -> f64 {
+    reference.energy_pj() / fp8_engine(chunk).energy_pj()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_matches_published_fp16_numbers() {
+        // Horowitz: fp16 mult 1.1 pJ, fp16 add 0.4 pJ (±40% model error ok).
+        let m = mult_energy(FloatFormat::IEEE_HALF);
+        assert!((0.6..=1.5).contains(&m), "fp16 mult {m}");
+        let a = add_energy(FloatFormat::IEEE_HALF);
+        assert!((0.3..=0.6).contains(&a), "fp16 add {a}");
+    }
+
+    #[test]
+    fn fp8_engine_is_2_to_4x_more_efficient() {
+        // §4.4 claim 2: vs both pure-FP16 and FP16+FP32-acc engines.
+        let vs_mixed = efficiency_ratio(fp16_engine(), 64);
+        assert!(
+            (2.0..=6.0).contains(&vs_mixed),
+            "vs fp16/fp32acc: {vs_mixed}"
+        );
+        let vs_pure = efficiency_ratio(fp16_pure_engine(), 64);
+        assert!((2.0..=4.5).contains(&vs_pure), "vs pure fp16: {vs_pure}");
+    }
+
+    #[test]
+    fn chunk_overhead_below_5pct_at_64() {
+        // §4.4 claim 1.
+        for cl in [64usize, 128, 256] {
+            let f = fp8_engine(cl).chunk_overhead_frac();
+            assert!(f < 0.05, "CL={cl}: overhead {f}");
+        }
+        // And it is NOT negligible at tiny chunk sizes.
+        assert!(fp8_engine(2).chunk_overhead_frac() > 0.2);
+    }
+
+    #[test]
+    fn area_ordering() {
+        assert!(fp8_engine(64).area() < fp16_pure_engine().area());
+        assert!(fp16_pure_engine().area() < fp16_engine().area());
+    }
+}

@@ -1,0 +1,59 @@
+//! Table 3: precision of the last layer's GEMMs and of the Softmax input,
+//! on AlexNet.
+//!
+//! Three configurations: all-FP16 last layer (the paper's default),
+//! all-FP8 including the Softmax input (10% degradation in the paper), and
+//! FP8 GEMMs with the Softmax input preserved in FP16 (recovers baseline).
+
+use super::{run_training, ExpOpts};
+use crate::logging::CsvSink;
+use crate::nn::models::ModelKind;
+use crate::nn::PrecisionPolicy;
+use crate::numerics::FloatFormat;
+use anyhow::Result;
+
+pub fn variants() -> Vec<(&'static str, PrecisionPolicy)> {
+    vec![
+        (
+            "FP16 GEMMs, FP16 softmax-in",
+            PrecisionPolicy::fp8_paper(), // default: last layer FP16
+        ),
+        (
+            "FP8 GEMMs,  FP8 softmax-in",
+            PrecisionPolicy::fp8_paper().with_last_layer(FloatFormat::FP8, FloatFormat::FP8),
+        ),
+        (
+            "FP8 GEMMs,  FP16 softmax-in",
+            PrecisionPolicy::fp8_paper().with_last_layer(FloatFormat::FP8, FloatFormat::FP16),
+        ),
+    ]
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    println!(
+        "Table 3: last-layer precision on AlexNet ({} steps)",
+        opts.steps
+    );
+    let base = run_training(ModelKind::AlexNet, PrecisionPolicy::fp32(), opts, None);
+    let sink = CsvSink::create(
+        opts.csv_path("table3"),
+        &["variant_idx", "test_err", "degradation"],
+    )?;
+    println!(
+        "{:<32} {:>12} {:>14}",
+        "last layer", "test_err_%", "degradation_%"
+    );
+    println!(
+        "{:<32} {:>12.2} {:>14}",
+        "(FP32 baseline)", base.final_test_err, "—"
+    );
+    for (i, (label, policy)) in variants().into_iter().enumerate() {
+        let r = run_training(ModelKind::AlexNet, policy, opts, None);
+        let deg = r.final_test_err - base.final_test_err;
+        sink.row(&[i as f64, r.final_test_err, deg]);
+        println!("{:<32} {:>12.2} {:>+14.2}", label, r.final_test_err, deg);
+    }
+    sink.flush();
+    println!("\n(paper: FP16 ok (+0.34), all-FP8 bad (+10.16), FP8-GEMM + FP16-softmax-in ok (+0.41))");
+    Ok(())
+}

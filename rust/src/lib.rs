@@ -1,0 +1,38 @@
+//! # fp8train
+//!
+//! Reproduction of *Training Deep Neural Networks with 8-bit Floating Point
+//! Numbers* (Wang, Choi, Brand, Chen, Gopalakrishnan — NeurIPS 2018).
+//!
+//! The crate is organized in three layers (see `DESIGN.md`):
+//!
+//! - [`numerics`] — the bit-exact softfloat substrate: the paper's FP8
+//!   `(1,5,2)` and FP16 `(1,6,9)` formats, nearest-even / stochastic /
+//!   truncate rounding, the chunk-based dot product of Fig. 3(a), emulated
+//!   GEMM and the three weight-update AXPYs of Fig. 2(b).
+//! - [`tensor`], [`nn`], [`optim`], [`data`], [`train`] — a native training
+//!   engine with hand-written backward passes whose every GEMM is routed
+//!   through the reduced-precision emulation, used to regenerate every table
+//!   and figure of the paper's evaluation.
+//! - [`runtime`], [`coordinator`] — the deployable path: AOT-compiled
+//!   JAX/Pallas train-steps (HLO text artifacts) loaded via PJRT and driven
+//!   from Rust with device-resident parameters; Python never runs at
+//!   request time.
+//!
+//! Entry points: the `fp8train` binary (`fp8train exp <id>` regenerates a
+//! paper table/figure; `fp8train train ...` runs the trainer), the examples
+//! under `examples/`, and the bench harnesses under `rust/benches/`.
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod logging;
+pub mod nn;
+pub mod numerics;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;
+pub mod train;

@@ -1,0 +1,118 @@
+//! Logging + metrics sinks.
+//!
+//! A tiny `log`-crate backend (the offline env has no `env_logger`) plus
+//! the CSV metrics writer used by the trainer and every experiment harness
+//! to emit the convergence curves behind Figs. 1/4/5.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!(
+                "[{:<5} {}] {}",
+                record.level(),
+                record.target().split("::").last().unwrap_or(""),
+                record.args()
+            );
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the stderr logger. Level from `FP8TRAIN_LOG` (error..trace),
+/// default `info`. Idempotent.
+pub fn init() {
+    let level = match std::env::var("FP8TRAIN_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        _ => log::LevelFilter::Info,
+    };
+    // set_logger errors if called twice — fine, ignore.
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+/// Append-only CSV writer with a fixed header, used for metric curves.
+/// Thread-safe (the coordinator's workers share one sink).
+pub struct CsvSink {
+    inner: Mutex<BufWriter<File>>,
+    pub columns: Vec<String>,
+}
+
+impl CsvSink {
+    /// Create/truncate `path` and write the header row.
+    pub fn create<P: AsRef<Path>>(path: P, columns: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", columns.join(","))?;
+        Ok(Self {
+            inner: Mutex::new(w),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    /// Write one row; panics if the column count mismatches the header
+    /// (catching that early beats silently misaligned CSVs).
+    pub fn row(&self, values: &[f64]) {
+        assert_eq!(
+            values.len(),
+            self.columns.len(),
+            "CSV row arity mismatch"
+        );
+        let mut w = self.inner.lock().unwrap();
+        let line = values
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(w, "{line}").expect("csv write");
+    }
+
+    pub fn flush(&self) {
+        self.inner.lock().unwrap().flush().expect("csv flush");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("fp8train_test_csv");
+        let path = dir.join("m.csv");
+        let sink = CsvSink::create(&path, &["step", "loss"]).unwrap();
+        sink.row(&[1.0, 0.5]);
+        sink.row(&[2.0, 0.25]);
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn csv_arity_checked() {
+        let dir = std::env::temp_dir().join("fp8train_test_csv2");
+        let sink = CsvSink::create(dir.join("m.csv"), &["a", "b"]).unwrap();
+        sink.row(&[1.0]);
+    }
+}

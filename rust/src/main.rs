@@ -1,0 +1,202 @@
+//! `fp8train` — the CLI entry point.
+//!
+//! ```text
+//! fp8train exp <id|all> [--steps N] [--batch N] [--seed S] [--out DIR]
+//! fp8train train <model> [--policy P] [--engine native|pjrt] [--steps N]
+//!                        [--batch N] [--lr F] [--seed S] [--csv PATH]
+//! fp8train formats                 # print the FP8/FP16 format tables
+//! fp8train artifacts [--dir DIR]   # verify AOT artifacts load & run
+//! ```
+
+use anyhow::{bail, Context, Result};
+use fp8train::cli::Args;
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::experiments::{self, ExpOpts};
+use fp8train::nn::models::ModelKind;
+use fp8train::nn::PrecisionPolicy;
+use fp8train::numerics::{FloatFormat, RoundMode};
+use fp8train::runtime::{artifacts_dir, PjrtEngine, Runtime};
+use fp8train::train::{train, LrSchedule, TrainConfig};
+
+const USAGE: &str = "\
+fp8train — reproduction of 'Training DNNs with 8-bit Floating Point Numbers' (NeurIPS'18)
+
+USAGE:
+  fp8train exp <id|all> [--steps N] [--batch N] [--seed S] [--out DIR] [--verbose]
+      ids: fig1 fig3b table1 fig4 table2 table3 fig5a fig5b fig6 table4 fig7
+  fp8train train <model> [--policy P] [--engine native|pjrt] [--steps N]
+                         [--batch N] [--lr F] [--seed S] [--csv PATH] [--verbose]
+      models:   cifar_cnn cifar_resnet bn50_dnn alexnet resnet18 resnet50
+      policies: fp32 fp8_paper fp8_nochunk fp16_acc_nochunk fp16_upd_nearest
+                fp16_upd_stochastic fp8_reps_only dorefa wage dfp16 mpt_fp16 ...
+  fp8train formats
+  fp8train artifacts [--dir DIR]
+";
+
+fn main() {
+    fp8train::logging::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "exp" => cmd_exp(args),
+        "train" => cmd_train(args),
+        "formats" => cmd_formats(),
+        "artifacts" => cmd_artifacts(args),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("exp needs an id (or 'all')")?
+        .clone();
+    let opts = ExpOpts::from_args(args)?;
+    experiments::run(&id, &opts)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.positional.first().context("train needs a model")?;
+    let kind = ModelKind::parse(model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let policy_name = args.opt_or("policy", "fp8_paper");
+    let policy = PrecisionPolicy::parse(&policy_name)
+        .with_context(|| format!("unknown policy {policy_name:?}"))?;
+    let steps = args.opt_usize("steps", 300)?;
+    let batch = args.opt_usize("batch", 32)?;
+    let seed = args.opt_u64("seed", 42)?;
+    let lr = args.opt_f32("lr", experiments::base_lr(kind))?;
+    let engine_kind = args.opt_or("engine", "native");
+
+    let ds = SyntheticDataset::for_model(kind, seed);
+    let cfg = TrainConfig {
+        batch_size: batch,
+        steps,
+        schedule: LrSchedule::step_decay(lr, steps),
+        eval_every: (steps / 10).max(1),
+        csv: args.opt("csv").map(str::to_string),
+        verbose: true,
+    };
+
+    let mut engine: Box<dyn Engine> = match engine_kind.as_str() {
+        "native" => Box::new(NativeEngine::new(kind, policy, seed)),
+        "pjrt" => {
+            let rt = Runtime::cpu()?;
+            let tag = format!("{}_{}", kind.id(), short_policy(&policy_name)?);
+            let e = PjrtEngine::load(&rt, &tag, seed)
+                .with_context(|| format!("load artifact set {tag:?} (run `make artifacts`)"))?;
+            anyhow::ensure!(
+                batch == e.batch_size(),
+                "pjrt artifact {tag} was lowered for batch {}, got --batch {batch}",
+                e.batch_size()
+            );
+            Box::new(e)
+        }
+        other => bail!("unknown engine {other:?} (native|pjrt)"),
+    };
+
+    println!(
+        "training {} with {} ({} steps, batch {}, lr {})",
+        kind.id(),
+        engine.name(),
+        steps,
+        batch,
+        lr
+    );
+    let r = train(engine.as_mut(), &ds, &cfg);
+    println!(
+        "final: train_loss {:.4}, test_err {:.2}% (best {:.2}%)",
+        r.final_train_loss,
+        r.final_test_err,
+        r.best_test_err()
+    );
+    Ok(())
+}
+
+/// Map a policy preset to the artifact tag suffix produced by aot.py.
+fn short_policy(name: &str) -> Result<&'static str> {
+    Ok(match name {
+        "fp32" => "fp32",
+        "fp8_paper" | "fp8" => "fp8",
+        other => bail!("no AOT artifact for policy {other:?} (available: fp32, fp8_paper)"),
+    })
+}
+
+fn cmd_formats() -> Result<()> {
+    println!(
+        "{:<12} {:>7} {:>6} {:>14} {:>14} {:>15} {:>10}",
+        "format", "(s,e,m)", "bias", "max_normal", "min_normal", "min_subnormal", "swamp_2^"
+    );
+    for fmt in [
+        FloatFormat::FP8,
+        FloatFormat::FP16,
+        FloatFormat::IEEE_HALF,
+        FloatFormat::BF16,
+        FloatFormat::FP32,
+    ] {
+        println!(
+            "{:<12} (1,{},{}) {:>6} {:>14.6e} {:>14.6e} {:>15.6e} {:>10}",
+            fmt.name(),
+            fmt.ebits,
+            fmt.mbits,
+            fmt.bias(),
+            fmt.max_normal(),
+            fmt.min_normal(),
+            fmt.min_subnormal(),
+            fmt.mbits + 1,
+        );
+    }
+    // A tiny demonstration of the §2.3 swamping phenomenon.
+    let f16 = FloatFormat::FP16;
+    let big = 4096.0f32;
+    println!(
+        "\nswamping demo (FP16): {} + 2 = {} under nearest rounding (2 < half-ulp)",
+        big,
+        f16.quantize(big + 2.0, RoundMode::NearestEven)
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    if let Some(dir) = args.opt("dir") {
+        std::env::set_var("FP8TRAIN_ARTIFACTS", dir);
+    }
+    let dir = artifacts_dir();
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let mut count = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .with_context(|| format!("read {} (run `make artifacts`)", dir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "txt").unwrap_or(false))
+        .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let exe = rt.load(&path)?;
+        println!("  {:<42} compiled OK", exe.name);
+        count += 1;
+    }
+    anyhow::ensure!(count > 0, "no .hlo.txt artifacts in {}", dir.display());
+    println!("{count} artifacts verified");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Activation layers. The paper's six models use ReLU exclusively
+//! (Appendix A); activations are elementwise and stay in full precision —
+//! quantization happens where tensors are *stored* at GEMM boundaries.
+
+use super::quant::QuantCtx;
+use super::Layer;
+use crate::tensor::Tensor;
+
+/// Rectified linear unit, `y = max(0, x)`; backward masks by the sign of
+/// the cached input.
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { mask: vec![] }
+    }
+}
+
+impl Layer for Relu {
+    fn forward(&mut self, mut x: Tensor, ctx: &QuantCtx) -> Tensor {
+        if ctx.train {
+            self.mask = x.data.iter().map(|&v| v > 0.0).collect();
+        }
+        for v in &mut x.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        x
+    }
+
+    fn backward(&mut self, mut dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        assert_eq!(dy.len(), self.mask.len(), "relu backward shape");
+        for (v, &m) in dy.data.iter_mut().zip(&self.mask) {
+            if !m {
+                *v = 0.0;
+            }
+        }
+        dy
+    }
+
+    fn name(&self) -> String {
+        "relu".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+
+    #[test]
+    fn relu_forward_backward() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut r = Relu::new();
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 0.0, 2.0, -3.0]);
+        let y = r.forward(x, &ctx);
+        assert_eq!(y.data, vec![0.0, 0.0, 2.0, 0.0]);
+        let dy = Tensor::from_vec(&[1, 4], vec![1.0, 1.0, 1.0, 1.0]);
+        let dx = r.backward(dy, &ctx);
+        // Gradient passes only where x > 0 (x == 0 blocked).
+        assert_eq!(dx.data, vec![0.0, 0.0, 1.0, 0.0]);
+    }
+}

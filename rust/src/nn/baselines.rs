@@ -1,0 +1,331 @@
+//! Baseline reduced-precision training schemes compared in Table 2.
+//!
+//! | scheme | W | x | dW | dx | acc |
+//! |--------|---|---|----|----|-----|
+//! | DoReFa-Net [23] | 1 | 2 | 32 | 6 | 32 |
+//! | WAGE [20]       | 2 | 8 | 8  | 8 | 32 |
+//! | DFP [4]         | 16 | 16 | 16 | 16 | 32 |
+//! | MPT [16]        | 16 | 16 | 16 | 16 | 32 |
+//! | FP8 (ours)      | 8 | 8 | 8  | 8 | 16 |
+//!
+//! Each scheme is a set of tensor quantizers plugged into the same layer
+//! machinery the FP8 policy uses, so the Table 2 comparison trains the same
+//! model with identical data/seed and only the quantization differs.
+//! DoReFa and WAGE quantize to fixed-point grids (values exactly
+//! representable in f32, so the f32-carrier GEMM is exact); DFP uses a
+//! per-tensor shared exponent with a 16-bit mantissa; MPT is IEEE half —
+//! all with FP32 accumulation, which is the contrast to our FP16 chunked
+//! accumulation.
+
+use crate::numerics::rng::RoundBits;
+use crate::numerics::{FloatFormat, RoundMode, Xoshiro256};
+
+/// One Table 2 comparison scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BaselineScheme {
+    /// DoReFa-Net: 1-bit weights, 2-bit activations, 6-bit (stochastically
+    /// quantized) errors, FP32 weight gradients.
+    DoReFa,
+    /// WAGE: 2-bit weights, 8-bit activations, 8-bit errors & gradients
+    /// (shift-based fixed point).
+    Wage,
+    /// Dynamic fixed point: 16-bit mantissa, per-tensor shared exponent.
+    Dfp16,
+    /// Mixed-precision training: IEEE half (1,5,10) everywhere, FP32 acc.
+    MptFp16,
+}
+
+impl BaselineScheme {
+    pub fn id(self) -> &'static str {
+        match self {
+            BaselineScheme::DoReFa => "dorefa",
+            BaselineScheme::Wage => "wage",
+            BaselineScheme::Dfp16 => "dfp16",
+            BaselineScheme::MptFp16 => "mpt_fp16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "dorefa" => BaselineScheme::DoReFa,
+            "wage" => BaselineScheme::Wage,
+            "dfp16" => BaselineScheme::Dfp16,
+            "mpt_fp16" | "mpt" => BaselineScheme::MptFp16,
+            _ => return None,
+        })
+    }
+
+    /// Quantize a weight tensor in place.
+    pub fn quantize_weight(self, xs: &mut [f32]) {
+        match self {
+            BaselineScheme::DoReFa => dorefa_weight_1bit(xs),
+            BaselineScheme::Wage => wage_weight_2bit(xs),
+            BaselineScheme::Dfp16 => dfp_quantize(xs, 16),
+            BaselineScheme::MptFp16 => {
+                FloatFormat::IEEE_HALF.quantize_slice(xs, RoundMode::NearestEven)
+            }
+        }
+    }
+
+    /// Quantize an activation tensor in place.
+    pub fn quantize_act(self, xs: &mut [f32]) {
+        match self {
+            BaselineScheme::DoReFa => dorefa_act(xs, 2),
+            BaselineScheme::Wage => fixed_point_uniform(xs, 8),
+            BaselineScheme::Dfp16 => dfp_quantize(xs, 16),
+            BaselineScheme::MptFp16 => {
+                FloatFormat::IEEE_HALF.quantize_slice(xs, RoundMode::NearestEven)
+            }
+        }
+    }
+
+    /// Quantize a back-propagated error tensor in place (`seed` feeds the
+    /// stochastic gradient quantizers of DoReFa/WAGE).
+    pub fn quantize_err(self, xs: &mut [f32], seed: u64) {
+        match self {
+            BaselineScheme::DoReFa => {
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                dorefa_grad(xs, 6, &mut rng);
+            }
+            BaselineScheme::Wage => {
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                wage_error(xs, 8, &mut rng);
+            }
+            BaselineScheme::Dfp16 => dfp_quantize(xs, 16),
+            BaselineScheme::MptFp16 => {
+                FloatFormat::IEEE_HALF.quantize_slice(xs, RoundMode::NearestEven)
+            }
+        }
+    }
+}
+
+/// DoReFa 1-bit weights: `w_q = sign(w) · E[|w|]` (scaled binarization).
+pub fn dorefa_weight_1bit(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let mean_abs = xs.iter().map(|v| v.abs() as f64).sum::<f64>() / xs.len() as f64;
+    let s = mean_abs as f32;
+    for v in xs.iter_mut() {
+        *v = if *v >= 0.0 { s } else { -s };
+    }
+}
+
+/// DoReFa k-bit activations: clip to [0,1], then uniform k-bit grid
+/// `round(x·(2^k−1))/(2^k−1)`.
+pub fn dorefa_act(xs: &mut [f32], k: u32) {
+    let levels = ((1u32 << k) - 1) as f32;
+    for v in xs.iter_mut() {
+        let c = v.clamp(0.0, 1.0);
+        *v = (c * levels).round() / levels;
+    }
+}
+
+/// DoReFa k-bit gradient quantization (Eq. 12 of [23]): scale by
+/// 2·max|g|, add uniform noise, quantize to k bits, rescale.
+pub fn dorefa_grad<R: RoundBits>(xs: &mut [f32], k: u32, rng: &mut R) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    let levels = ((1u32 << k) - 1) as f32;
+    for v in xs.iter_mut() {
+        // x ∈ [0,1]; noise σ ∈ [−0.5,0.5]/levels.
+        let x = *v / (2.0 * max) + 0.5;
+        let noise = (rng.next_bits() as f32 / u32::MAX as f32 - 0.5) / levels;
+        let q = ((x + noise).clamp(0.0, 1.0) * levels).round() / levels;
+        *v = 2.0 * max * (q - 0.5);
+    }
+}
+
+/// WAGE 2-bit weights: ternarize onto {−1, 0, +1}·σ with σ the layer scale
+/// (shift-quantized max). WAGE stores weights in [−1,1] with width 2.
+pub fn wage_weight_2bit(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    let sigma = pow2_ceil(max);
+    let step = sigma / 2.0; // 2-bit: levels at −σ, −σ/2 … σ (uniform 4-level)
+    for v in xs.iter_mut() {
+        *v = (*v / step).round().clamp(-2.0, 2.0) * step;
+    }
+}
+
+/// WAGE 8-bit error quantization: shift-scale by the max magnitude, then
+/// stochastic uniform quantization to k bits.
+pub fn wage_error<R: RoundBits>(xs: &mut [f32], k: u32, rng: &mut R) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    let scale = pow2_ceil(max);
+    let levels = ((1u32 << (k - 1)) - 1) as f32; // signed grid
+    for v in xs.iter_mut() {
+        let x = (*v / scale * levels).clamp(-levels, levels);
+        let floor = x.floor();
+        let frac = x - floor;
+        let up = (rng.next_bits() as f64 / (u32::MAX as f64 + 1.0)) < frac as f64;
+        *v = (floor + if up { 1.0 } else { 0.0 }) / levels * scale;
+    }
+}
+
+/// Uniform signed fixed-point quantization to k bits on [−max, max]
+/// (nearest) — WAGE's activation grid.
+pub fn fixed_point_uniform(xs: &mut [f32], k: u32) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    let scale = pow2_ceil(max);
+    let levels = ((1u32 << (k - 1)) - 1) as f32;
+    for v in xs.iter_mut() {
+        *v = (*v / scale * levels).round().clamp(-levels, levels) / levels * scale;
+    }
+}
+
+/// DFP / Flexpoint: one shared exponent per tensor (set by the max
+/// magnitude), values stored as `mant_bits`-bit signed mantissas.
+pub fn dfp_quantize(xs: &mut [f32], mant_bits: u32) {
+    if xs.is_empty() {
+        return;
+    }
+    let max = xs.iter().fold(0f32, |m, v| m.max(v.abs()));
+    if max == 0.0 {
+        return;
+    }
+    // Shared exponent e: smallest power of two ≥ max; mantissa grid has
+    // 2^(mant_bits−1)−1 positive steps.
+    let scale = pow2_ceil(max);
+    let levels = ((1u64 << (mant_bits - 1)) - 1) as f32;
+    for v in xs.iter_mut() {
+        *v = (*v / scale * levels).round().clamp(-levels, levels) / levels * scale;
+    }
+}
+
+/// Smallest power of two ≥ |x| (the "shared exponent" shift).
+fn pow2_ceil(x: f32) -> f32 {
+    debug_assert!(x > 0.0);
+    2f32.powi(x.log2().ceil() as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dorefa_weights_binarize_to_mean_abs() {
+        let mut xs = vec![0.5, -1.5, 1.0, -1.0];
+        dorefa_weight_1bit(&mut xs);
+        let s = (0.5 + 1.5 + 1.0 + 1.0) / 4.0;
+        assert_eq!(xs, vec![s, -s, s, -s]);
+    }
+
+    #[test]
+    fn dorefa_act_two_bits_has_four_levels() {
+        let mut xs: Vec<f32> = (0..100).map(|i| i as f32 / 99.0).collect();
+        dorefa_act(&mut xs, 2);
+        let mut levels: Vec<f32> = xs.clone();
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        levels.dedup();
+        assert_eq!(levels.len(), 4);
+        assert_eq!(levels, vec![0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0]);
+        // Clipping
+        let mut c = vec![-0.5f32, 1.7];
+        dorefa_act(&mut c, 2);
+        assert_eq!(c, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn dorefa_grad_unbiased() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let orig = 0.013f32;
+        let n = 60_000;
+        let mut sum = 0f64;
+        for _ in 0..n {
+            let mut xs = vec![orig, 0.05, -0.05]; // fixed max magnitude
+            dorefa_grad(&mut xs, 6, &mut rng);
+            sum += xs[0] as f64;
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (mean - orig as f64).abs() < 5e-4,
+            "mean={mean} orig={orig}"
+        );
+    }
+
+    #[test]
+    fn wage_weight_ternary_grid() {
+        let mut xs = vec![0.9, -0.6, 0.1, 0.0, -1.0];
+        wage_weight_2bit(&mut xs);
+        // σ = 1.0, step 0.5: values snap to multiples of 0.5 within ±1.
+        for v in &xs {
+            assert!((v / 0.5).fract().abs() < 1e-6, "v={v}");
+            assert!(v.abs() <= 1.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn dfp_respects_shared_exponent() {
+        let mut xs = vec![100.0, 0.001, -50.0];
+        let orig = xs.clone();
+        dfp_quantize(&mut xs, 16);
+        // Large values nearly exact; the tiny value is quantized on the
+        // *shared* grid (step = 128/32767 ≈ 0.0039) → snaps to 0.
+        assert!((xs[0] - orig[0]).abs() / orig[0] < 1e-3);
+        assert_eq!(xs[1], 0.0);
+        assert!((xs[2] - orig[2]).abs() / 50.0 < 1e-3);
+    }
+
+    #[test]
+    fn wage_error_stochastic_unbiased() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let orig = 0.0123f32;
+        let n = 60_000;
+        let mut sum = 0f64;
+        for _ in 0..n {
+            let mut xs = vec![orig, 0.08, -0.08];
+            wage_error(&mut xs, 8, &mut rng);
+            sum += xs[0] as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - orig as f64).abs() < 2e-4, "mean={mean}");
+    }
+
+    #[test]
+    fn scheme_ids_roundtrip() {
+        for s in [
+            BaselineScheme::DoReFa,
+            BaselineScheme::Wage,
+            BaselineScheme::Dfp16,
+            BaselineScheme::MptFp16,
+        ] {
+            assert_eq!(BaselineScheme::parse(s.id()), Some(s));
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_tensors_are_safe() {
+        let mut e: Vec<f32> = vec![];
+        dorefa_weight_1bit(&mut e);
+        dfp_quantize(&mut e, 16);
+        let mut z = vec![0f32; 4];
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        dorefa_grad(&mut z, 6, &mut rng);
+        wage_error(&mut z, 8, &mut rng);
+        dfp_quantize(&mut z, 16);
+        assert!(z.iter().all(|&v| v == 0.0));
+    }
+}

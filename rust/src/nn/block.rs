@@ -1,0 +1,150 @@
+//! Residual blocks (ResNet skip connections, He et al. [9]).
+//!
+//! `y = relu(main(x) + shortcut(x))`, where `shortcut` is identity or a
+//! projection (1×1 strided conv + BN) when the shape changes. The addition
+//! and final ReLU stay in full precision; the convolutions inside both
+//! paths carry the reduced-precision GEMMs.
+
+use super::quant::QuantCtx;
+use super::{Layer, Param, Sequential};
+use crate::tensor::Tensor;
+
+pub struct Residual {
+    pub main: Sequential,
+    /// `None` = identity skip.
+    pub shortcut: Option<Sequential>,
+    mask: Vec<bool>,
+    x_cache: Option<Tensor>,
+}
+
+impl Residual {
+    pub fn new(main: Sequential, shortcut: Option<Sequential>) -> Self {
+        Self {
+            main,
+            shortcut,
+            mask: vec![],
+            x_cache: None,
+        }
+    }
+}
+
+impl Layer for Residual {
+    fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
+        let skip = match &mut self.shortcut {
+            Some(s) => s.forward(x.clone(), ctx),
+            None => x.clone(),
+        };
+        if ctx.train && self.shortcut.is_none() {
+            // Identity skip needs nothing cached; projection caches inside
+            // its own layers.
+        }
+        let mut y = self.main.forward(x, ctx);
+        assert_eq!(y.shape, skip.shape, "residual shape mismatch");
+        y.add_assign(&skip);
+        if ctx.train {
+            self.mask = y.data.iter().map(|&v| v > 0.0).collect();
+        }
+        for v in &mut y.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        self.x_cache = None;
+        y
+    }
+
+    fn backward(&mut self, mut dy: Tensor, ctx: &QuantCtx) -> Tensor {
+        // Through the final ReLU.
+        for (v, &m) in dy.data.iter_mut().zip(&self.mask) {
+            if !m {
+                *v = 0.0;
+            }
+        }
+        // The sum node fans the gradient into both branches.
+        let mut dx = self.main.backward(dy.clone(), ctx);
+        let dskip = match &mut self.shortcut {
+            Some(s) => s.backward(dy, ctx),
+            None => dy,
+        };
+        dx.add_assign(&dskip);
+        dx
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.main.visit_params(f);
+        if let Some(s) = &mut self.shortcut {
+            s.visit_params(f);
+        }
+    }
+
+    fn name(&self) -> String {
+        "residual".into()
+    }
+
+    fn macs_per_example(&self) -> u64 {
+        self.main.macs_per_example()
+            + self
+                .shortcut
+                .as_ref()
+                .map(|s| s.macs_per_example())
+                .unwrap_or(0)
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::act::Relu;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+
+    /// y = relu(relu(x)·1 + x) — a trivially checkable residual.
+    #[test]
+    fn identity_residual_forward_backward() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut r = Residual::new(Sequential::new(vec![Box::new(Relu::new())]), None);
+        let x = Tensor::from_vec(&[1, 4], vec![1.0, -2.0, 3.0, -0.5]);
+        let y = r.forward(x, &ctx);
+        // main = relu(x) = [1,0,3,0]; sum = [2,-2,6,-0.5]; relu = [2,0,6,0]
+        assert_eq!(y.data, vec![2.0, 0.0, 6.0, 0.0]);
+        let dy = Tensor::from_vec(&[1, 4], vec![1.0; 4]);
+        let dx = r.backward(dy, &ctx);
+        // Positions 0,2 pass the outer relu; each contributes main-branch
+        // relu grad (x>0 → 1) + skip grad (1).
+        assert_eq!(dx.data, vec![2.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn gradient_check_residual() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let x = Tensor::from_vec(&[1, 4], vec![0.5, -0.3, 1.2, -2.0]);
+        let dy = Tensor::from_vec(&[1, 4], vec![0.7, -0.2, 0.4, 1.0]);
+        let mut r = Residual::new(Sequential::new(vec![Box::new(Relu::new())]), None);
+        r.forward(x.clone(), &ctx);
+        let dx = r.backward(dy.clone(), &ctx);
+
+        let f = |x: &Tensor| -> f32 {
+            let mut r = Residual::new(Sequential::new(vec![Box::new(Relu::new())]), None);
+            let y = r.forward(x.clone(), &ctx);
+            y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for i in 0..4 {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!(
+                (num - dx.data[i]).abs() < 1e-3,
+                "i={i} num={num} got={}",
+                dx.data[i]
+            );
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! 2-D convolution, lowered to GEMM per §2.2 ("the convolution computation
+//! is implemented by first lowering the input data, followed by GEMM
+//! operations").
+//!
+//! After im2col, the three GEMMs and their dot-product lengths are:
+//!
+//! ```text
+//! Forward:   Y[N·oh·ow, oc]   = Colsq · Wqᵀ        K = in_c·k·k
+//! Backward:  dCols             = dYq · Wq           K = oc
+//! Gradient:  dW[oc, in_c·k·k]  = dYqᵀ · Colsq       K = N·oh·ow  ← longest;
+//!                                                    the GEMM §4.2 shows is
+//!                                                    most swamping-sensitive
+//! ```
+//!
+//! Quantization points mirror [`super::linear::Linear`]: activations and
+//! errors are quantized once where they are produced/stored, weights at
+//! GEMM time.
+
+use super::linear::layer_hash;
+use super::quant::{GemmRole, LayerPos, QuantCtx};
+use super::{Layer, Param};
+use crate::numerics::Xoshiro256;
+use crate::tensor::{col2im, im2col, init, Conv2dGeom, Tensor};
+
+pub struct Conv2d {
+    pub w: Param, // [oc, in_c·k·k]
+    pub b: Option<Param>,
+    pub geom: Conv2dGeom,
+    pub out_c: usize,
+    pub pos: LayerPos,
+    layer_id: u64,
+    // backward caches
+    cols_q: Option<Tensor>,
+    w_q: Option<Tensor>,
+    batch: usize,
+    /// When set, [`Layer::backward`] stores the Gradient-GEMM operands
+    /// (error rows, activation patch matrix) for the Fig. 6 harness.
+    pub capture: bool,
+    pub captured: Option<(Tensor, Tensor)>,
+}
+
+impl Conv2d {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        geom: Conv2dGeom,
+        out_c: usize,
+        pos: LayerPos,
+        bias: bool,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let fan_in = geom.patch_len();
+        let w = init::kaiming_normal(&[out_c, fan_in], fan_in, rng);
+        Self {
+            w: Param::new(format!("{name}.w"), w, true),
+            b: bias.then(|| Param::new(format!("{name}.b"), Tensor::zeros(&[out_c]), false)),
+            geom,
+            out_c,
+            pos,
+            layer_id: layer_hash(name),
+            cols_q: None,
+            w_q: None,
+            batch: 0,
+            capture: false,
+            captured: None,
+        }
+    }
+
+    pub fn out_shape(&self, n: usize) -> [usize; 4] {
+        [n, self.out_c, self.geom.out_h(), self.geom.out_w()]
+    }
+}
+
+/// `[N·oh·ow, oc]` GEMM-output rows → NCHW.
+fn rows_to_nchw(rows: &Tensor, n: usize, oc: usize, oh: usize, ow: usize) -> Tensor {
+    let mut out = Tensor::zeros(&[n, oc, oh, ow]);
+    for img in 0..n {
+        for s in 0..oh * ow {
+            let row = (img * oh * ow + s) * oc;
+            for c in 0..oc {
+                out.data[((img * oc) + c) * oh * ow + s] = rows.data[row + c];
+            }
+        }
+    }
+    out
+}
+
+/// NCHW → `[N·oh·ow, oc]` rows (adjoint of [`rows_to_nchw`]).
+fn nchw_to_rows(x: &Tensor) -> Tensor {
+    let (n, oc, oh, ow) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[n * oh * ow, oc]);
+    for img in 0..n {
+        for s in 0..oh * ow {
+            let row = (img * oh * ow + s) * oc;
+            for c in 0..oc {
+                out.data[row + c] = x.data[((img * oc) + c) * oh * ow + s];
+            }
+        }
+    }
+    out
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
+        assert_eq!(x.ndim(), 4, "conv expects NCHW");
+        let n = x.shape[0];
+        let p = ctx.policy;
+
+        // Stored activation: quantize before lowering (padding zeros are
+        // exactly representable, so quantize-then-im2col == im2col-then-
+        // quantize; the former quantizes C·H·W instead of C·k²·oh·ow
+        // values).
+        let mut x_q = x;
+        p.quantize_act(&mut x_q.data, GemmRole::Forward, self.pos);
+        let cols_q = im2col(&x_q, &self.geom);
+
+        let mut w_q = self.w.value.clone();
+        p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
+
+        let prec = p.gemm_for(GemmRole::Forward, self.pos);
+        let mut rows = cols_q.matmul(
+            &w_q.t(),
+            &prec,
+            ctx.gemm_seed(self.layer_id, GemmRole::Forward),
+        );
+        if let Some(b) = &self.b {
+            rows.add_row(&b.value.data);
+        }
+        let (oh, ow) = (self.geom.out_h(), self.geom.out_w());
+        let y = rows_to_nchw(&rows, n, self.out_c, oh, ow);
+        if ctx.train {
+            self.cols_q = Some(cols_q);
+            self.w_q = Some(w_q);
+            self.batch = n;
+        }
+        y
+    }
+
+    fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor {
+        let p = ctx.policy;
+        let cols_q = self.cols_q.take().expect("backward before forward");
+        let w_q = self.w_q.take().expect("backward before forward");
+        let n = self.batch;
+        assert_eq!(dy.shape, self.out_shape(n).to_vec());
+
+        let mut err = nchw_to_rows(&dy); // [N·oh·ow, oc]
+        if let Some(b) = &mut self.b {
+            for (g, v) in b.grad.data.iter_mut().zip(err.sum_rows()) {
+                *g += v;
+            }
+        }
+        p.quantize_err(
+            &mut err.data,
+            GemmRole::Backward,
+            self.pos,
+            ctx.gemm_seed(self.layer_id, GemmRole::Backward) ^ 0xE44,
+        );
+
+        if self.capture {
+            self.captured = Some((err.clone(), cols_q.clone()));
+        }
+
+        // Gradient GEMM: dW = errᵀ · cols, K = N·oh·ow.
+        let prec_g = p.gemm_for(GemmRole::Gradient, self.pos);
+        let dw = err.t().matmul(
+            &cols_q,
+            &prec_g,
+            ctx.gemm_seed(self.layer_id, GemmRole::Gradient),
+        );
+        self.w.grad.add_assign(&dw);
+
+        // Backward GEMM: dCols = err · Wq, then col2im scatter.
+        let prec_b = p.gemm_for(GemmRole::Backward, self.pos);
+        let dcols = err.matmul(
+            &w_q,
+            &prec_b,
+            ctx.gemm_seed(self.layer_id, GemmRole::Backward),
+        );
+        col2im(&dcols, &self.geom, n)
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.w);
+        if let Some(b) = &mut self.b {
+            f(b);
+        }
+    }
+
+    fn name(&self) -> String {
+        self.w.name.trim_end_matches(".w").to_string()
+    }
+
+    fn macs_per_example(&self) -> u64 {
+        (self.geom.out_h() * self.geom.out_w() * self.out_c * self.geom.patch_len()) as u64
+    }
+
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::PrecisionPolicy;
+
+    fn small_geom() -> Conv2dGeom {
+        Conv2dGeom {
+            in_c: 2,
+            in_h: 5,
+            in_w: 5,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        }
+    }
+
+    #[test]
+    fn forward_shape_and_layout() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut c = Conv2d::new("c1", small_geom(), 4, LayerPos::Middle, true, &mut rng);
+        let x = Tensor::zeros(&[3, 2, 5, 5]);
+        let y = c.forward(x, &ctx);
+        assert_eq!(y.shape, vec![3, 4, 5, 5]);
+    }
+
+    #[test]
+    fn rows_nchw_roundtrip() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x = Tensor::from_vec(
+            &[2, 3, 4, 4],
+            (0..96).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+        );
+        let rows = nchw_to_rows(&x);
+        assert_eq!(rows.shape, vec![32, 3]);
+        let back = rows_to_nchw(&rows, 2, 3, 4, 4);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn conv_gradcheck_fp32() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let g = Conv2dGeom {
+            in_c: 1,
+            in_h: 4,
+            in_w: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut c = Conv2d::new("c", g, 2, LayerPos::Middle, true, &mut rng);
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| 0.1 * i as f32 - 0.8).collect());
+        let dy_data: Vec<f32> = (0..32).map(|i| ((i * 13 % 7) as f32 - 3.0) / 10.0).collect();
+        let dy = Tensor::from_vec(&[1, 2, 4, 4], dy_data);
+
+        c.forward(x.clone(), &ctx);
+        let dx = c.backward(dy.clone(), &ctx);
+
+        // finite differences on x
+        let eps = 1e-2f32;
+        for i in (0..16).step_by(3) {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut cp = Conv2d::new("c", g, 2, LayerPos::Middle, true, &mut Xoshiro256::seed_from_u64(3));
+            let mut cm = Conv2d::new("c", g, 2, LayerPos::Middle, true, &mut Xoshiro256::seed_from_u64(3));
+            let yp = cp.forward(xp, &ctx);
+            let ym = cm.forward(xm, &ctx);
+            let fp: f32 = yp.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+            let fm: f32 = ym.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!(
+                (num - dx.data[i]).abs() < 1e-2,
+                "dx[{i}]: numeric {num} vs analytic {}",
+                dx.data[i]
+            );
+        }
+
+        // finite differences on w (a few entries)
+        let dw = c.w.grad.clone();
+        for i in (0..c.w.value.len()).step_by(5) {
+            let mut cp = Conv2d::new("c", g, 2, LayerPos::Middle, true, &mut Xoshiro256::seed_from_u64(3));
+            let mut cm = Conv2d::new("c", g, 2, LayerPos::Middle, true, &mut Xoshiro256::seed_from_u64(3));
+            cp.w.value.data[i] += eps;
+            cm.w.value.data[i] -= eps;
+            let yp = cp.forward(x.clone(), &ctx);
+            let ym = cm.forward(x.clone(), &ctx);
+            let fp: f32 = yp.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+            let fm: f32 = ym.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!(
+                (num - dw.data[i]).abs() < 2e-2,
+                "dw[{i}]: numeric {num} vs analytic {}",
+                dw.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn macs_count() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let c = Conv2d::new("c", small_geom(), 4, LayerPos::Middle, false, &mut rng);
+        // 5·5 output sites × 4 out channels × 18 patch = 1800 MACs.
+        assert_eq!(c.macs_per_example(), 1800);
+    }
+
+    #[test]
+    fn strided_conv_shapes() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let g = Conv2dGeom {
+            in_c: 3,
+            in_h: 8,
+            in_w: 8,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut c = Conv2d::new("c", g, 6, LayerPos::Middle, false, &mut rng);
+        let y = c.forward(Tensor::zeros(&[2, 3, 8, 8]), &ctx);
+        assert_eq!(y.shape, vec![2, 6, 4, 4]);
+        let dx = c.backward(Tensor::zeros(&[2, 6, 4, 4]), &ctx);
+        assert_eq!(dx.shape, vec![2, 3, 8, 8]);
+    }
+}

@@ -1,0 +1,266 @@
+//! Fully-connected layer with the three reduced-precision GEMMs of
+//! Fig. 2(a).
+//!
+//! Data flow per training step (shapes row-major):
+//!
+//! ```text
+//! Forward:   Y[N,out]  = Xq[N,in]  · Wqᵀ[in,out]   + b      (FP8·FP8 → FP16 acc)
+//! Backward:  dX[N,in]  = dYq[N,out] · Wq[out,in]            (errors back)
+//! Gradient:  dW[out,in] = dYqᵀ[out,N] · Xq[N,in]            (K = batch! §4.2)
+//! ```
+//!
+//! Faithful to the paper's storage model: activations are quantized **once**
+//! when produced (stored in FP8) and that same stored value feeds both the
+//! Forward and Gradient GEMMs; likewise the error tensor is quantized once
+//! and feeds both Backward and Gradient GEMMs. Weights live in the master
+//! format (FP16 under the paper's scheme) and are re-quantized to FP8 at
+//! GEMM time.
+
+use super::quant::{GemmRole, LayerPos, QuantCtx};
+use super::{Layer, Param};
+use crate::numerics::Xoshiro256;
+use crate::tensor::{init, Tensor};
+
+pub struct Linear {
+    pub w: Param, // [out, in]
+    pub b: Option<Param>,
+    pub pos: LayerPos,
+    layer_id: u64,
+    in_dim: usize,
+    out_dim: usize,
+    // caches for backward
+    x_q: Option<Tensor>,
+    w_q: Option<Tensor>,
+}
+
+/// FNV-1a hash of a layer name — the stable per-layer id that seeds
+/// stochastic rounding streams.
+pub(crate) fn layer_hash(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Linear {
+    pub fn new(name: &str, in_dim: usize, out_dim: usize, pos: LayerPos, rng: &mut Xoshiro256) -> Self {
+        let w = init::kaiming_normal(&[out_dim, in_dim], in_dim, rng);
+        Self {
+            w: Param::new(format!("{name}.w"), w, true),
+            b: Some(Param::new(format!("{name}.b"), Tensor::zeros(&[out_dim]), false)),
+            pos,
+            layer_id: layer_hash(name),
+            in_dim,
+            out_dim,
+            x_q: None,
+            w_q: None,
+        }
+    }
+
+    pub fn no_bias(mut self) -> Self {
+        self.b = None;
+        self
+    }
+}
+
+impl Layer for Linear {
+    fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
+        assert_eq!(x.ndim(), 2, "linear expects [N, in]");
+        assert_eq!(x.shape[1], self.in_dim);
+        let p = ctx.policy;
+
+        // Quantize the stored representations once (nearest — conversions
+        // in the paper's data path use nearest; SR is reserved for updates).
+        let mut x_q = x;
+        p.quantize_act(&mut x_q.data, GemmRole::Forward, self.pos);
+        let mut w_q = self.w.value.clone();
+        p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
+
+        let prec = p.gemm_for(GemmRole::Forward, self.pos);
+        let mut y = x_q.matmul(&w_q.t(), &prec, ctx.gemm_seed(self.layer_id, GemmRole::Forward));
+        if let Some(b) = &self.b {
+            y.add_row(&b.value.data);
+        }
+        if ctx.train {
+            self.x_q = Some(x_q);
+            self.w_q = Some(w_q);
+        }
+        y
+    }
+
+    fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor {
+        let p = ctx.policy;
+        let x_q = self.x_q.take().expect("backward before forward");
+        let w_q = self.w_q.take().expect("backward before forward");
+        let n = dy.shape[0];
+        assert_eq!(dy.shape, vec![n, self.out_dim]);
+
+        // Bias gradient in full precision (tiny AXPY, not a GEMM).
+        if let Some(b) = &mut self.b {
+            for (g, v) in b.grad.data.iter_mut().zip(dy.sum_rows()) {
+                *g += v;
+            }
+        }
+
+        // Error tensor stored once in the error format.
+        let mut err = dy;
+        p.quantize_err(
+            &mut err.data,
+            GemmRole::Backward,
+            self.pos,
+            ctx.gemm_seed(self.layer_id, GemmRole::Backward) ^ 0xE44,
+        );
+
+        // Gradient GEMM: dW = errᵀ · Xq, K = batch dimension.
+        let prec_g = p.gemm_for(GemmRole::Gradient, self.pos);
+        let dw = err
+            .t()
+            .matmul(&x_q, &prec_g, ctx.gemm_seed(self.layer_id, GemmRole::Gradient));
+        self.w.grad.add_assign(&dw);
+
+        // Backward GEMM: dX = err · Wq.
+        let prec_b = p.gemm_for(GemmRole::Backward, self.pos);
+        err.matmul(&w_q, &prec_b, ctx.gemm_seed(self.layer_id, GemmRole::Backward))
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.w);
+        if let Some(b) = &mut self.b {
+            f(b);
+        }
+    }
+
+    fn name(&self) -> String {
+        self.w.name.trim_end_matches(".w").to_string()
+    }
+
+    fn macs_per_example(&self) -> u64 {
+        (self.in_dim * self.out_dim) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::PrecisionPolicy;
+    use crate::testkit::assert_slices_close;
+
+    fn grad_check_linear(policy: &PrecisionPolicy) {
+        // Finite-difference gradient check under the FP32 policy.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let mut l = Linear::new("fc", 5, 3, LayerPos::Middle, &mut rng);
+        let ctx = QuantCtx::new(policy, 0, true);
+        let x = Tensor::from_vec(&[2, 5], (0..10).map(|i| 0.1 * i as f32 - 0.4).collect());
+        let dy = Tensor::from_vec(&[2, 3], (0..6).map(|i| 0.3 - 0.1 * i as f32).collect());
+
+        let _y = l.forward(x.clone(), &ctx);
+        let dx = l.backward(dy.clone(), &ctx);
+
+        // loss = <Y, dy>; check d loss / d x numerically.
+        let eps = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let mut lp = Linear::new("fc", 5, 3, LayerPos::Middle, &mut Xoshiro256::seed_from_u64(1));
+            let mut lm = Linear::new("fc", 5, 3, LayerPos::Middle, &mut Xoshiro256::seed_from_u64(1));
+            let yp = lp.forward(xp, &ctx);
+            let ym = lm.forward(xm, &ctx);
+            let fp: f32 = yp.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+            let fm: f32 = ym.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum();
+            let num = (fp - fm) / (2.0 * eps);
+            assert!(
+                (num - dx.data[i]).abs() < 1e-2,
+                "dx[{i}]: numeric {num} vs analytic {}",
+                dx.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_gradcheck() {
+        grad_check_linear(&PrecisionPolicy::fp32());
+    }
+
+    #[test]
+    fn weight_grad_matches_outer_product() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut l = Linear::new("fc", 3, 2, LayerPos::Middle, &mut rng);
+        let x = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let dy = Tensor::from_vec(&[1, 2], vec![0.5, -1.0]);
+        l.forward(x, &ctx);
+        l.backward(dy, &ctx);
+        // dW[o,i] = dy[o]·x[i]
+        assert_slices_close(
+            &l.w.grad.data,
+            &[0.5, 1.0, 1.5, -1.0, -2.0, -3.0],
+            1e-6,
+            1e-6,
+        );
+        assert_slices_close(&l.b.as_ref().unwrap().grad.data, &[0.5, -1.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn grads_accumulate_across_calls() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let mut l = Linear::new("fc", 2, 2, LayerPos::Middle, &mut rng);
+        let x = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        let dy = Tensor::from_vec(&[1, 2], vec![1.0, 1.0]);
+        l.forward(x.clone(), &ctx);
+        l.backward(dy.clone(), &ctx);
+        let g1 = l.w.grad.data.clone();
+        l.forward(x, &ctx);
+        l.backward(dy, &ctx);
+        for (a, b) in l.w.grad.data.iter().zip(&g1) {
+            assert!((a - 2.0 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fp8_forward_quantizes_operands() {
+        // With the paper policy, a middle layer's output must be built from
+        // FP8-quantized operands: feed values that change under FP8.
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut l = Linear::new("fc", 1, 1, LayerPos::Middle, &mut rng).no_bias();
+        l.w.value.data[0] = 1.1; // FP8 rounds to 1.0
+        let x = Tensor::from_vec(&[1, 1], vec![1.1]);
+        let y = l.forward(x, &ctx);
+        assert_eq!(y.data[0], 1.0); // 1.0 (q(1.1)) · 1.0 (q(1.1))
+    }
+
+    #[test]
+    fn first_layer_keeps_fp16_input() {
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut l = Linear::new("fc", 1, 1, LayerPos::First, &mut rng).no_bias();
+        l.w.value.data[0] = 1.0;
+        // 133.0 is exactly representable in FP16 (1,6,9) but rounds to 128
+        // in FP8 (1,5,2).
+        let y = l.forward(Tensor::from_vec(&[1, 1], vec![133.0]), &ctx);
+        assert_eq!(y.data[0], 133.0);
+        let mut m = Linear::new("fc", 1, 1, LayerPos::Middle, &mut rng).no_bias();
+        m.w.value.data[0] = 1.0;
+        let y = m.forward(Tensor::from_vec(&[1, 1], vec![133.0]), &ctx);
+        assert_eq!(y.data[0], 128.0);
+    }
+
+    #[test]
+    fn eval_mode_keeps_no_cache() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let mut l = Linear::new("fc", 2, 2, LayerPos::Middle, &mut rng);
+        l.forward(Tensor::zeros(&[1, 2]), &ctx);
+        assert!(l.x_q.is_none());
+    }
+}

@@ -1,0 +1,154 @@
+//! Softmax cross-entropy loss with loss scaling.
+//!
+//! §4.1: the last layer is sensitive because Softmax exponentially
+//! amplifies logit errors — the paper keeps the Softmax *input* in FP16
+//! (Table 3 shows FP8 there costs 10% accuracy). §3: the back-propagated
+//! error is scaled by a single factor (1000) to preserve small-magnitude
+//! gradients in FP8/FP16 ranges; the optimizer divides it back out before
+//! the weight update.
+
+use crate::numerics::{FloatFormat, RoundMode};
+use crate::tensor::Tensor;
+
+/// Output of [`softmax_xent`].
+pub struct LossOut {
+    /// Mean cross-entropy over the batch (natural log), full precision.
+    pub loss: f64,
+    /// Number of correct argmax predictions.
+    pub correct: usize,
+    /// `dL/dlogits`, already multiplied by `loss_scale` and divided by the
+    /// batch size — feed straight into the model's backward pass.
+    pub dlogits: Tensor,
+}
+
+/// Softmax + cross-entropy against integer labels.
+///
+/// `softmax_input_fmt` models the representation the last-layer Forward
+/// GEMM output is stored in before the Softmax (Table 3's knob).
+pub fn softmax_xent(
+    logits: &Tensor,
+    labels: &[usize],
+    softmax_input_fmt: FloatFormat,
+    loss_scale: f32,
+) -> LossOut {
+    assert_eq!(logits.ndim(), 2);
+    let (n, c) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), n);
+
+    let mut dlogits = Tensor::zeros(&[n, c]);
+    let mut loss = 0f64;
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        debug_assert!(label < c);
+        let row = &logits.data[i * c..(i + 1) * c];
+        // Quantize the Softmax input representation (identity for FP32).
+        let q: Vec<f32> = row
+            .iter()
+            .map(|&v| softmax_input_fmt.quantize(v, RoundMode::NearestEven))
+            .collect();
+        // Numerically-stable softmax in f32/f64.
+        let max = q.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = q.iter().map(|&v| ((v - max) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let p_label = exps[label] / z;
+        loss -= p_label.max(1e-30).ln();
+        let pred = q
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if pred == label {
+            correct += 1;
+        }
+        let scale = loss_scale / n as f32;
+        for j in 0..c {
+            let p = (exps[j] / z) as f32;
+            dlogits.data[i * c + j] = (p - if j == label { 1.0 } else { 0.0 }) * scale;
+        }
+    }
+    LossOut {
+        loss: loss / n as f64,
+        correct,
+        dlogits,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_log_c() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let out = softmax_xent(&logits, &[0, 1, 2, 3], FloatFormat::FP32, 1.0);
+        assert!((out.loss - (10f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gradient_sums_to_zero_per_row_and_matches_softmax() {
+        let logits = Tensor::from_vec(&[1, 3], vec![1.0, 2.0, 3.0]);
+        let out = softmax_xent(&logits, &[2], FloatFormat::FP32, 1.0);
+        let row = &out.dlogits.data;
+        assert!((row.iter().sum::<f32>()).abs() < 1e-6);
+        // p = softmax([1,2,3]); d = p - onehot(2).
+        let z: f64 = (1..=3).map(|i| (i as f64).exp()).sum();
+        for j in 0..3 {
+            let p = ((j + 1) as f64).exp() / z;
+            let want = p - if j == 2 { 1.0 } else { 0.0 };
+            assert!((row[j] as f64 - want).abs() < 1e-6, "j={j}");
+        }
+    }
+
+    #[test]
+    fn loss_scale_multiplies_gradient_only() {
+        let logits = Tensor::from_vec(&[1, 2], vec![0.3, -0.7]);
+        let a = softmax_xent(&logits, &[0], FloatFormat::FP32, 1.0);
+        let b = softmax_xent(&logits, &[0], FloatFormat::FP32, 1000.0);
+        assert_eq!(a.loss, b.loss);
+        for (x, y) in a.dlogits.data.iter().zip(&b.dlogits.data) {
+            assert!((y - x * 1000.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gradient_check_vs_finite_difference() {
+        let logits = Tensor::from_vec(&[2, 4], vec![0.5, -1.0, 2.0, 0.1, -0.3, 0.9, 0.0, 1.5]);
+        let labels = [2usize, 1];
+        let out = softmax_xent(&logits, &labels, FloatFormat::FP32, 1.0);
+        let eps = 1e-3f32;
+        for i in 0..8 {
+            let mut lp = logits.clone();
+            lp.data[i] += eps;
+            let mut lm = logits.clone();
+            lm.data[i] -= eps;
+            let fp = softmax_xent(&lp, &labels, FloatFormat::FP32, 1.0).loss;
+            let fm = softmax_xent(&lm, &labels, FloatFormat::FP32, 1.0).loss;
+            let num = ((fp - fm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (num - out.dlogits.data[i]).abs() < 1e-3,
+                "i={i}: num {num} vs {}",
+                out.dlogits.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_softmax_input_loses_fidelity() {
+        // Table 3's mechanism: close logits become indistinguishable after
+        // FP8 quantization of the Softmax input.
+        let logits = Tensor::from_vec(&[1, 2], vec![4.0, 4.4]); // FP8 grid step at 4.0 is 1.0
+        let fp32 = softmax_xent(&logits, &[1], FloatFormat::FP32, 1.0);
+        let fp8 = softmax_xent(&logits, &[1], FloatFormat::FP8, 1.0);
+        // FP8 rounds both to 4.0: the margin vanishes, loss becomes ln 2.
+        assert!(fp32.loss < fp8.loss);
+        assert!((fp8.loss - (2f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_counting() {
+        let logits = Tensor::from_vec(&[3, 2], vec![2.0, 1.0, 0.0, 1.0, 5.0, -5.0]);
+        let out = softmax_xent(&logits, &[0, 1, 1], FloatFormat::FP32, 1.0);
+        assert_eq!(out.correct, 2);
+    }
+}

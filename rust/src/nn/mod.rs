@@ -1,0 +1,201 @@
+//! The native neural-network engine.
+//!
+//! Layers implement hand-written forward/backward passes whose every GEMM
+//! is routed through the reduced-precision emulation in [`crate::numerics`]
+//! according to a [`quant::PrecisionPolicy`] — this is the software
+//! equivalent of the paper's in-house GPU emulation framework [7], and the
+//! machinery every experiment in `experiments/` runs on.
+//!
+//! Topology is explicit (no autograd): [`Sequential`] chains layers,
+//! [`block::Residual`] implements ResNet skip connections, and the model
+//! zoo under [`models`] assembles the paper's six benchmark networks.
+
+pub mod act;
+pub mod baselines;
+pub mod block;
+pub mod conv;
+pub mod linear;
+pub mod loss;
+pub mod models;
+pub mod norm;
+pub mod pool;
+pub mod quant;
+
+pub use block::Residual;
+pub use conv::Conv2d;
+pub use linear::Linear;
+pub use loss::softmax_xent;
+pub use quant::{GemmRole, LayerPos, PrecisionPolicy, QuantCtx};
+
+use crate::tensor::Tensor;
+
+/// One learnable parameter tensor with its gradient accumulator.
+#[derive(Clone, Debug)]
+pub struct Param {
+    /// Dotted path, e.g. `conv1.w` — stable across runs, used by
+    /// checkpoints and the experiment harnesses.
+    pub name: String,
+    pub value: Tensor,
+    pub grad: Tensor,
+    /// Whether L2 regularization (weight decay) applies — `true` for
+    /// weights, `false` for biases and BN affine parameters (standard
+    /// practice, and what keeps the BN path out of Fig. 2(b)'s L2 fold).
+    pub decay: bool,
+}
+
+impl Param {
+    pub fn new(name: impl Into<String>, value: Tensor, decay: bool) -> Self {
+        let grad = Tensor::zeros(&value.shape);
+        Self {
+            name: name.into(),
+            value,
+            grad,
+            decay,
+        }
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.grad.data.fill(0.0);
+    }
+}
+
+/// A differentiable layer with hand-written backward.
+///
+/// Contract: `backward` must be called after `forward` with the same batch
+/// (layers cache whatever activations their backward needs), accumulates
+/// into `Param::grad`, and returns `dL/dx`.
+pub trait Layer: Send {
+    fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor;
+    fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor;
+
+    /// Visit every learnable parameter (used by optimizers, checkpoints,
+    /// and the parameter-count reports of Table 1).
+    fn visit_params(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+
+    fn name(&self) -> String;
+
+    /// Multiply–accumulate count per example (for the FLOP budgets quoted
+    /// in §4.1 and the hardware model of Fig. 7).
+    fn macs_per_example(&self) -> u64 {
+        0
+    }
+
+    /// Downcast hook (used by experiment harnesses that instrument
+    /// specific layers, e.g. Fig. 6's Gradient-GEMM operand capture).
+    fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
+        None
+    }
+}
+
+/// A straight chain of layers.
+pub struct Sequential {
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Sequential {
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
+        Self { layers }
+    }
+
+    /// Total learnable parameter count.
+    pub fn num_params(&mut self) -> usize {
+        let mut n = 0;
+        self.visit_params(&mut |p| n += p.value.len());
+        n
+    }
+
+    /// Model size in megabytes at `bits` per parameter (Table 1 quotes
+    /// weight memory at the representation width).
+    pub fn size_mb(&mut self, bits: u32) -> f64 {
+        self.num_params() as f64 * bits as f64 / 8.0 / 1e6
+    }
+
+    pub fn zero_grads(&mut self) {
+        self.visit_params(&mut Param::zero_grad);
+    }
+}
+
+impl Layer for Sequential {
+    fn forward(&mut self, mut x: Tensor, ctx: &QuantCtx) -> Tensor {
+        for l in &mut self.layers {
+            x = l.forward(x, ctx);
+        }
+        x
+    }
+
+    fn backward(&mut self, mut dy: Tensor, ctx: &QuantCtx) -> Tensor {
+        for l in self.layers.iter_mut().rev() {
+            dy = l.backward(dy, ctx);
+        }
+        dy
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        for l in &mut self.layers {
+            l.visit_params(f);
+        }
+    }
+
+    fn name(&self) -> String {
+        "sequential".into()
+    }
+
+    fn macs_per_example(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs_per_example()).sum()
+    }
+}
+
+/// Reshape NCHW feature maps to `[N, C·H·W]` rows for the FC head.
+pub struct Flatten {
+    in_shape: Vec<usize>,
+}
+
+impl Flatten {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { in_shape: vec![] }
+    }
+}
+
+impl Layer for Flatten {
+    fn forward(&mut self, x: Tensor, _ctx: &QuantCtx) -> Tensor {
+        self.in_shape = x.shape.clone();
+        let n = x.shape[0];
+        let rest: usize = x.shape[1..].iter().product();
+        x.reshape(&[n, rest])
+    }
+
+    fn backward(&mut self, dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        dy.reshape(&self.in_shape.clone())
+    }
+
+    fn name(&self) -> String {
+        "flatten".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatten_roundtrips_shape() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut f = Flatten::new();
+        let x = Tensor::zeros(&[2, 3, 4, 4]);
+        let y = f.forward(x, &ctx);
+        assert_eq!(y.shape, vec![2, 48]);
+        let dx = f.backward(y, &ctx);
+        assert_eq!(dx.shape, vec![2, 3, 4, 4]);
+    }
+
+    #[test]
+    fn param_zero_grad() {
+        let mut p = Param::new("w", Tensor::full(&[2, 2], 1.0), true);
+        p.grad.data.fill(3.0);
+        p.zero_grad();
+        assert!(p.grad.data.iter().all(|&v| v == 0.0));
+        assert!(p.decay);
+    }
+}

@@ -1,0 +1,78 @@
+//! AlexNet (Krizhevsky et al. [15], Appendix A): 5 Conv + 3 FC layers,
+//! 1K-way Softmax. Scaled per DESIGN.md §7 to 32×32 inputs / 100 classes:
+//! the 5-conv + pool pattern and the large FC head (the part that makes
+//! AlexNet the paper's FC-heavy, Gradient-GEMM-stressing benchmark) are
+//! preserved; channel widths reduced ~4–8×.
+
+use crate::nn::act::Relu;
+use crate::nn::conv::Conv2d;
+use crate::nn::linear::Linear;
+use crate::nn::pool::MaxPool2d;
+use crate::nn::quant::LayerPos;
+use crate::nn::{Flatten, Layer, Sequential};
+use crate::numerics::Xoshiro256;
+use crate::tensor::Conv2dGeom;
+
+pub fn build(rng: &mut Xoshiro256) -> Sequential {
+    let g3 = |in_c, hw| Conv2dGeom {
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        k: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let layers: Vec<Box<dyn Layer>> = vec![
+        // conv1 3→24 @32, pool → 16
+        Box::new(Conv2d::new("conv1", g3(3, 32), 24, LayerPos::First, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2d::new(2, 2)),
+        // conv2 24→48 @16, pool → 8
+        Box::new(Conv2d::new("conv2", g3(24, 16), 48, LayerPos::Middle, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2d::new(2, 2)),
+        // conv3-5: 48→64→64→48 @8, pool → 4
+        Box::new(Conv2d::new("conv3", g3(48, 8), 64, LayerPos::Middle, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(Conv2d::new("conv4", g3(64, 8), 64, LayerPos::Middle, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(Conv2d::new("conv5", g3(64, 8), 48, LayerPos::Middle, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2d::new(2, 2)),
+        Box::new(Flatten::new()),
+        // FC head: 768 → 256 → 256 → 100
+        Box::new(Linear::new("fc6", 48 * 4 * 4, 256, LayerPos::Middle, rng)),
+        Box::new(Relu::new()),
+        Box::new(Linear::new("fc7", 256, 256, LayerPos::Middle, rng)),
+        Box::new(Relu::new()),
+        Box::new(Linear::new("fc8", 256, 10, LayerPos::Last, rng)),
+    ];
+    Sequential::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn five_conv_three_fc() {
+        let mut m = build(&mut Xoshiro256::seed_from_u64(0));
+        let mut conv_params = 0;
+        let mut fc_params = 0;
+        m.visit_params(&mut |p| {
+            if p.name.starts_with("conv") {
+                conv_params += 1;
+            } else if p.name.starts_with("fc") {
+                fc_params += 1;
+            }
+        });
+        assert_eq!(conv_params, 10); // 5 conv × (w,b)
+        assert_eq!(fc_params, 6); // 3 fc × (w,b)
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        let y = m.forward(Tensor::zeros(&[2, 3, 32, 32]), &ctx);
+        assert_eq!(y.shape, vec![2, 10]);
+    }
+}

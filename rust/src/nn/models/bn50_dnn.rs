@@ -1,0 +1,54 @@
+//! BN50-DNN (van den Berg et al. [19], Appendix A): a speech-recognition
+//! DNN of 6 FC layers (440×1024, 4×1024×1024, 1024×5999) over acoustic
+//! frames. Scaled per DESIGN.md §7 to 440→256→256→256→256→120 with the
+//! same 440-dim input and the FC-only topology; BN50's senone count is
+//! scaled 5999→120 classes. ReLU activations between layers (the modern
+//! equivalent of the reference's sigmoids; keeps the GEMM precision study
+//! identical).
+
+use crate::nn::act::Relu;
+use crate::nn::linear::Linear;
+use crate::nn::quant::LayerPos;
+use crate::nn::{Layer, Sequential};
+use crate::numerics::Xoshiro256;
+
+pub const INPUT_DIM: usize = 440;
+pub const HIDDEN: usize = 256;
+pub const CLASSES: usize = 30;
+
+pub fn build(rng: &mut Xoshiro256) -> Sequential {
+    let mut layers: Vec<Box<dyn Layer>> = vec![
+        Box::new(Linear::new("fc1", INPUT_DIM, HIDDEN, LayerPos::First, rng)),
+        Box::new(Relu::new()),
+    ];
+    for i in 2..=5 {
+        layers.push(Box::new(Linear::new(
+            &format!("fc{i}"),
+            HIDDEN,
+            HIDDEN,
+            LayerPos::Middle,
+            rng,
+        )));
+        layers.push(Box::new(Relu::new()));
+    }
+    layers.push(Box::new(Linear::new("fc6", HIDDEN, CLASSES, LayerPos::Last, rng)));
+    Sequential::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn six_fc_layers() {
+        let mut m = build(&mut Xoshiro256::seed_from_u64(0));
+        let expect = (440 * 256 + 256) + 4 * (256 * 256 + 256) + (256 * 30 + 30);
+        assert_eq!(m.num_params(), expect);
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let y = m.forward(Tensor::zeros(&[8, 440]), &ctx);
+        assert_eq!(y.shape, vec![8, 30]);
+    }
+}

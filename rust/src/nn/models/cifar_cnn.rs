@@ -1,0 +1,61 @@
+//! CIFAR10-CNN (Krizhevsky & Hinton [14], Appendix A): 3 Conv layers with
+//! 5×5 filters + ReLU, interleaved 2×2 max pooling, one FC layer and a
+//! 10-way Softmax. This is the paper's smallest benchmark and the model the
+//! E2E PJRT driver trains; it is used at full scale (no width reduction).
+
+use crate::nn::act::Relu;
+use crate::nn::conv::Conv2d;
+use crate::nn::linear::Linear;
+use crate::nn::pool::MaxPool2d;
+use crate::nn::quant::LayerPos;
+use crate::nn::{Flatten, Sequential};
+use crate::numerics::Xoshiro256;
+use crate::tensor::Conv2dGeom;
+
+pub fn build(rng: &mut Xoshiro256) -> Sequential {
+    let g = |in_c, hw| Conv2dGeom {
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        k: 5,
+        stride: 1,
+        pad: 2,
+    };
+    Sequential::new(vec![
+        // conv1: 3→16 @32, pool → 16
+        Box::new(Conv2d::new("conv1", g(3, 32), 16, LayerPos::First, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2d::new(2, 2)),
+        // conv2: 16→32 @16, pool → 8
+        Box::new(Conv2d::new("conv2", g(16, 16), 32, LayerPos::Middle, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2d::new(2, 2)),
+        // conv3: 32→32 @8, pool → 4
+        Box::new(Conv2d::new("conv3", g(32, 8), 32, LayerPos::Middle, true, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2d::new(2, 2)),
+        Box::new(Flatten::new()),
+        // fc: 512 → 10 (the Softmax-feeding last layer, FP16 under the
+        // paper's scheme)
+        Box::new(Linear::new("fc", 32 * 4 * 4, 10, LayerPos::Last, rng)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Layer, PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn shapes_and_param_count() {
+        let mut m = build(&mut Xoshiro256::seed_from_u64(0));
+        // conv1 3·25·16+16, conv2 16·25·32+32, conv3 32·25·32+32, fc 512·10+10
+        let expect = (3 * 25 * 16 + 16) + (16 * 25 * 32 + 32) + (32 * 25 * 32 + 32) + (512 * 10 + 10);
+        assert_eq!(m.num_params(), expect);
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let y = m.forward(Tensor::zeros(&[4, 3, 32, 32]), &ctx);
+        assert_eq!(y.shape, vec![4, 10]);
+    }
+}

@@ -1,0 +1,50 @@
+//! CIFAR10-ResNet (Appendix A: 15 blocks / 31 conv layers, 3×3 filters,
+//! BN, ReLU, final FC). Scaled per DESIGN.md §7: the canonical CIFAR
+//! ResNet stage pattern (3 stages at 32/16/8 spatial) with 2 basic blocks
+//! per stage and widths 16/32/64 — 13 conv layers, same block structure
+//! and BN placement.
+
+use crate::nn::linear::Linear;
+use crate::nn::models::{basic_block, conv_bn_relu};
+use crate::nn::pool::GlobalAvgPool;
+use crate::nn::quant::LayerPos;
+use crate::nn::{Layer, Sequential};
+use crate::numerics::Xoshiro256;
+
+pub fn build(rng: &mut Xoshiro256) -> Sequential {
+    let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+    // Stem: 3→16 @32.
+    layers.extend(conv_bn_relu("stem", 3, 32, 16, 3, 1, 1, LayerPos::First, rng));
+    let mut c = 16;
+    let mut hw = 32;
+    for (s, &width) in [16usize, 32, 64].iter().enumerate() {
+        for b in 0..2 {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let (block, out_hw) = basic_block(&format!("s{s}b{b}"), c, hw, width, stride, rng);
+            layers.push(Box::new(block));
+            c = width;
+            hw = out_hw;
+        }
+    }
+    layers.push(Box::new(GlobalAvgPool::new()));
+    layers.push(Box::new(Linear::new("fc", 64, 10, LayerPos::Last, rng)));
+    Sequential::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn forward_backward_shapes() {
+        let mut m = build(&mut Xoshiro256::seed_from_u64(0));
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let y = m.forward(Tensor::zeros(&[2, 3, 32, 32]), &ctx);
+        assert_eq!(y.shape, vec![2, 10]);
+        let dx = m.backward(Tensor::zeros(&[2, 10]), &ctx);
+        assert_eq!(dx.shape, vec![2, 3, 32, 32]);
+    }
+}

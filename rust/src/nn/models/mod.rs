@@ -1,0 +1,317 @@
+//! The paper's six benchmark networks (Appendix A), architecture-faithful
+//! but width/resolution-scaled per DESIGN.md §7: same layer types, block
+//! structure, depth pattern and BN placement; input resolution 32×32 and
+//! channel widths reduced so the evaluation suite trains in CPU-emulation
+//! time. The dot-product lengths (`in_c·k·k` after lowering, batch·H·W for
+//! Gradient GEMM) stay in the hundreds-to-thousands regime that Figs. 3/6
+//! study, which is what the swamping phenomena depend on.
+
+pub mod alexnet;
+pub mod bn50_dnn;
+pub mod cifar_cnn;
+pub mod cifar_resnet;
+pub mod resnet18;
+pub mod resnet50;
+
+use super::act::Relu;
+use super::conv::Conv2d;
+use super::norm::BatchNorm;
+use super::quant::LayerPos;
+use super::{Layer, Residual, Sequential};
+use crate::numerics::Xoshiro256;
+use crate::tensor::Conv2dGeom;
+
+/// What kind of input tensor a model consumes (drives the synthetic data
+/// generators in `data/`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputKind {
+    /// NCHW image batch.
+    Image {
+        c: usize,
+        h: usize,
+        w: usize,
+    },
+    /// [N, features] frame batch (BN50 speech).
+    Vector { dim: usize },
+}
+
+impl InputKind {
+    pub fn shape(&self, n: usize) -> Vec<usize> {
+        match *self {
+            InputKind::Image { c, h, w } => vec![n, c, h, w],
+            InputKind::Vector { dim } => vec![n, dim],
+        }
+    }
+}
+
+/// The model zoo identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    CifarCnn,
+    CifarResnet,
+    Bn50Dnn,
+    AlexNet,
+    ResNet18,
+    ResNet50,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 6] = [
+        ModelKind::CifarCnn,
+        ModelKind::CifarResnet,
+        ModelKind::Bn50Dnn,
+        ModelKind::AlexNet,
+        ModelKind::ResNet18,
+        ModelKind::ResNet50,
+    ];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            ModelKind::CifarCnn => "cifar_cnn",
+            ModelKind::CifarResnet => "cifar_resnet",
+            ModelKind::Bn50Dnn => "bn50_dnn",
+            ModelKind::AlexNet => "alexnet",
+            ModelKind::ResNet18 => "resnet18",
+            ModelKind::ResNet50 => "resnet50",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.id() == s)
+    }
+
+    pub fn input(self) -> InputKind {
+        match self {
+            ModelKind::Bn50Dnn => InputKind::Vector { dim: 440 },
+            _ => InputKind::Image { c: 3, h: 32, w: 32 },
+        }
+    }
+
+    /// Class count. CIFAR-scale sets keep their 10 classes; the
+    /// ImageNet-like and BN50-like synthetic sets are scaled to 10 and 30
+    /// classes respectively (from 1000 / 5999) so the committed few-dozen-
+    /// step runs see enough examples per class for policy contrasts to be
+    /// meaningful (DESIGN.md §7 — class count is orthogonal to the
+    /// numerics under study).
+    pub fn classes(self) -> usize {
+        match self {
+            ModelKind::Bn50Dnn => 30,
+            _ => 10,
+        }
+    }
+
+    /// Build the network with deterministic initialization.
+    pub fn build(self, seed: u64) -> Sequential {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        match self {
+            ModelKind::CifarCnn => cifar_cnn::build(&mut rng),
+            ModelKind::CifarResnet => cifar_resnet::build(&mut rng),
+            ModelKind::Bn50Dnn => bn50_dnn::build(&mut rng),
+            ModelKind::AlexNet => alexnet::build(&mut rng),
+            ModelKind::ResNet18 => resnet18::build(&mut rng),
+            ModelKind::ResNet50 => resnet50::build(&mut rng),
+        }
+    }
+}
+
+/// conv(k×k, stride, pad) → BN → ReLU, the standard ResNet unit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_bn_relu(
+    name: &str,
+    in_c: usize,
+    hw: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    pos: LayerPos,
+    rng: &mut Xoshiro256,
+) -> Vec<Box<dyn Layer>> {
+    let geom = Conv2dGeom {
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        k,
+        stride,
+        pad,
+    };
+    vec![
+        Box::new(Conv2d::new(name, geom, out_c, pos, false, rng)),
+        Box::new(BatchNorm::new_2d(&format!("{name}.bn"), out_c)),
+        Box::new(Relu::new()),
+    ]
+}
+
+/// A basic (3×3, 3×3) residual block; returns the block and the output
+/// spatial size.
+pub(crate) fn basic_block(
+    name: &str,
+    in_c: usize,
+    hw: usize,
+    out_c: usize,
+    stride: usize,
+    rng: &mut Xoshiro256,
+) -> (Residual, usize) {
+    let out_hw = (hw + 2 - 3) / stride + 1;
+    let g1 = Conv2dGeom {
+        in_c,
+        in_h: hw,
+        in_w: hw,
+        k: 3,
+        stride,
+        pad: 1,
+    };
+    let g2 = Conv2dGeom {
+        in_c: out_c,
+        in_h: out_hw,
+        in_w: out_hw,
+        k: 3,
+        stride: 1,
+        pad: 1,
+    };
+    let main = Sequential::new(vec![
+        Box::new(Conv2d::new(&format!("{name}.c1"), g1, out_c, LayerPos::Middle, false, rng)),
+        Box::new(BatchNorm::new_2d(&format!("{name}.bn1"), out_c)),
+        Box::new(Relu::new()),
+        Box::new(Conv2d::new(&format!("{name}.c2"), g2, out_c, LayerPos::Middle, false, rng)),
+        Box::new(BatchNorm::new_2d(&format!("{name}.bn2"), out_c)),
+    ]);
+    let shortcut = if stride != 1 || in_c != out_c {
+        let gp = Conv2dGeom {
+            in_c,
+            in_h: hw,
+            in_w: hw,
+            k: 1,
+            stride,
+            pad: 0,
+        };
+        Some(Sequential::new(vec![
+            Box::new(Conv2d::new(&format!("{name}.proj"), gp, out_c, LayerPos::Middle, false, rng)),
+            Box::new(BatchNorm::new_2d(&format!("{name}.bnp"), out_c)),
+        ]))
+    } else {
+        None
+    };
+    (Residual::new(main, shortcut), out_hw)
+}
+
+/// A bottleneck (1×1 reduce, 3×3, 1×1 expand) residual block with
+/// expansion factor `exp`; returns the block and output spatial size.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bottleneck_block(
+    name: &str,
+    in_c: usize,
+    hw: usize,
+    width: usize,
+    exp: usize,
+    stride: usize,
+    rng: &mut Xoshiro256,
+) -> (Residual, usize, usize) {
+    let out_c = width * exp;
+    let out_hw = (hw + 2 - 3) / stride + 1;
+    let g1 = Conv2dGeom { in_c, in_h: hw, in_w: hw, k: 1, stride: 1, pad: 0 };
+    let g2 = Conv2dGeom { in_c: width, in_h: hw, in_w: hw, k: 3, stride, pad: 1 };
+    let g3 = Conv2dGeom { in_c: width, in_h: out_hw, in_w: out_hw, k: 1, stride: 1, pad: 0 };
+    let main = Sequential::new(vec![
+        Box::new(Conv2d::new(&format!("{name}.c1"), g1, width, LayerPos::Middle, false, rng)),
+        Box::new(BatchNorm::new_2d(&format!("{name}.bn1"), width)),
+        Box::new(Relu::new()),
+        Box::new(Conv2d::new(&format!("{name}.c2"), g2, width, LayerPos::Middle, false, rng)),
+        Box::new(BatchNorm::new_2d(&format!("{name}.bn2"), width)),
+        Box::new(Relu::new()),
+        Box::new(Conv2d::new(&format!("{name}.c3"), g3, out_c, LayerPos::Middle, false, rng)),
+        Box::new(BatchNorm::new_2d(&format!("{name}.bn3"), out_c)),
+    ]);
+    let shortcut = if stride != 1 || in_c != out_c {
+        let gp = Conv2dGeom { in_c, in_h: hw, in_w: hw, k: 1, stride, pad: 0 };
+        Some(Sequential::new(vec![
+            Box::new(Conv2d::new(&format!("{name}.proj"), gp, out_c, LayerPos::Middle, false, rng)),
+            Box::new(BatchNorm::new_2d(&format!("{name}.bnp"), out_c)),
+        ]))
+    } else {
+        None
+    };
+    (Residual::new(main, shortcut), out_c, out_hw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn all_models_build_and_forward() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        for kind in ModelKind::ALL {
+            let mut m = kind.build(7);
+            let x = Tensor::zeros(&kind.input().shape(2));
+            let y = m.forward(x, &ctx);
+            assert_eq!(
+                y.shape,
+                vec![2, kind.classes()],
+                "{} output shape",
+                kind.id()
+            );
+            assert!(m.num_params() > 1000, "{} too small", kind.id());
+        }
+    }
+
+    #[test]
+    fn all_models_backward_under_paper_policy() {
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 1, true);
+        for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
+            let mut m = kind.build(7);
+            let x = Tensor::zeros(&kind.input().shape(2));
+            let y = m.forward(x, &ctx);
+            let dy = Tensor::full(&y.shape, 0.01);
+            let dx = m.backward(dy, &ctx);
+            assert_eq!(dx.shape, kind.input().shape(2), "{}", kind.id());
+        }
+    }
+
+    #[test]
+    fn kind_ids_roundtrip() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(kind.id()), Some(kind));
+        }
+        assert_eq!(ModelKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn model_size_ordering_matches_table1() {
+        // Table 1's model sizes are ordered CIFAR-CNN < CIFAR-ResNet <
+        // ResNet18 < ResNet50 < AlexNet (FC-heavy); scaled versions must
+        // preserve CNN < ResNet orderings at least.
+        let n = |k: ModelKind| k.build(0).num_params();
+        assert!(n(ModelKind::CifarCnn) < n(ModelKind::CifarResnet));
+        assert!(n(ModelKind::CifarResnet) < n(ModelKind::ResNet18));
+        assert!(n(ModelKind::ResNet18) < n(ModelKind::ResNet50));
+    }
+
+    #[test]
+    fn basic_block_shapes() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let (mut b, out_hw) = basic_block("t", 8, 16, 16, 2, &mut rng);
+        assert_eq!(out_hw, 8);
+        let y = b.forward(Tensor::zeros(&[1, 8, 16, 16]), &ctx);
+        assert_eq!(y.shape, vec![1, 16, 8, 8]);
+        let dx = b.backward(Tensor::zeros(&[1, 16, 8, 8]), &ctx);
+        assert_eq!(dx.shape, vec![1, 8, 16, 16]);
+    }
+
+    #[test]
+    fn bottleneck_block_shapes() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let (mut b, out_c, out_hw) = bottleneck_block("t", 16, 8, 8, 4, 1, &mut rng);
+        assert_eq!((out_c, out_hw), (32, 8));
+        let y = b.forward(Tensor::zeros(&[1, 16, 8, 8]), &ctx);
+        assert_eq!(y.shape, vec![1, 32, 8, 8]);
+    }
+}

@@ -1,0 +1,55 @@
+//! ResNet18 (He et al. [9], Appendix A: 8 basic blocks / 16 conv layers +
+//! stem + FC). Scaled per DESIGN.md §7 to 32×32 inputs / 100 classes: the
+//! exact ImageNet stage pattern — 4 stages × 2 basic blocks with channel
+//! doubling and stride-2 stage transitions — at widths 16/32/64/128.
+
+use crate::nn::linear::Linear;
+use crate::nn::models::{basic_block, conv_bn_relu};
+use crate::nn::pool::GlobalAvgPool;
+use crate::nn::quant::LayerPos;
+use crate::nn::{Layer, Sequential};
+use crate::numerics::Xoshiro256;
+
+pub fn build(rng: &mut Xoshiro256) -> Sequential {
+    let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+    layers.extend(conv_bn_relu("stem", 3, 32, 16, 3, 1, 1, LayerPos::First, rng));
+    let mut c = 16;
+    let mut hw = 32;
+    for (s, &width) in [16usize, 32, 64, 128].iter().enumerate() {
+        for b in 0..2 {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let (block, out_hw) = basic_block(&format!("s{s}b{b}"), c, hw, width, stride, rng);
+            layers.push(Box::new(block));
+            c = width;
+            hw = out_hw;
+        }
+    }
+    layers.push(Box::new(GlobalAvgPool::new()));
+    layers.push(Box::new(Linear::new("fc", 128, 10, LayerPos::Last, rng)));
+    Sequential::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn eight_blocks_and_shapes() {
+        let mut m = build(&mut Xoshiro256::seed_from_u64(0));
+        // stem(conv+bn) + 8 blocks + fc: count conv weight params = 1 stem +
+        // 16 block convs + 3 projections = 20.
+        let mut convs = 0;
+        m.visit_params(&mut |p| {
+            if p.name.ends_with(".w") && !p.name.starts_with("fc") {
+                convs += 1;
+            }
+        });
+        assert_eq!(convs, 20);
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        let y = m.forward(Tensor::zeros(&[2, 3, 32, 32]), &ctx);
+        assert_eq!(y.shape, vec![2, 10]);
+    }
+}

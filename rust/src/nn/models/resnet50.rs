@@ -1,0 +1,63 @@
+//! ResNet50 (He et al. [9], Appendix A: 16 bottleneck blocks / 48 conv
+//! layers). Scaled per DESIGN.md §7 to 32×32 / 100 classes: bottleneck
+//! (1×1, 3×3, 1×1, expansion 4) blocks in 4 stages with the ImageNet
+//! [2,2,2,2] depth reduction of the [3,4,6,3] pattern, widths
+//! 16/32/64/128 (output channels up to 512) — 24 block convs + stem + 4
+//! projections, preserving both the 1×1-heavy GEMM mix that makes ResNet50
+//! the paper's chunking stress test (Fig. 5a) and the Table 1 model-size
+//! ordering (ResNet50 > ResNet18, expansion-4 1×1 convs dominating).
+
+use crate::nn::linear::Linear;
+use crate::nn::models::{bottleneck_block, conv_bn_relu};
+use crate::nn::pool::GlobalAvgPool;
+use crate::nn::quant::LayerPos;
+use crate::nn::{Layer, Sequential};
+use crate::numerics::Xoshiro256;
+
+pub const EXPANSION: usize = 4;
+
+pub fn build(rng: &mut Xoshiro256) -> Sequential {
+    let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+    layers.extend(conv_bn_relu("stem", 3, 32, 16, 3, 1, 1, LayerPos::First, rng));
+    let mut c = 16;
+    let mut hw = 32;
+    for (s, &width) in [16usize, 32, 64, 128].iter().enumerate() {
+        for b in 0..2 {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let (block, out_c, out_hw) =
+                bottleneck_block(&format!("s{s}b{b}"), c, hw, width, EXPANSION, stride, rng);
+            layers.push(Box::new(block));
+            c = out_c;
+            hw = out_hw;
+        }
+    }
+    layers.push(Box::new(GlobalAvgPool::new()));
+    layers.push(Box::new(Linear::new("fc", 128 * EXPANSION, 10, LayerPos::Last, rng)));
+    Sequential::new(layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn bottleneck_structure() {
+        let mut m = build(&mut Xoshiro256::seed_from_u64(0));
+        let mut convs = 0;
+        m.visit_params(&mut |p| {
+            if p.name.ends_with(".w") && !p.name.starts_with("fc") {
+                convs += 1;
+            }
+        });
+        // 1 stem + 8 blocks × 3 + projections (every stage's first block
+        // projects since in_c != width·4): 4 projections + s0b0 projection
+        // from 16→32 — count: blocks with stride 2 or channel change.
+        assert_eq!(convs, 1 + 24 + 4);
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        let y = m.forward(Tensor::zeros(&[1, 3, 32, 32]), &ctx);
+        assert_eq!(y.shape, vec![1, 10]);
+    }
+}

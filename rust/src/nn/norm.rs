@@ -1,0 +1,277 @@
+//! Batch normalization (2-D over channels, 1-D over features).
+//!
+//! BN is kept in full precision: the paper quantizes the GEMM data path
+//! (weights / activations / errors / gradients) and the weight-update
+//! AXPYs, but BN's reductions and per-channel affine transform are not
+//! GEMMs and contribute negligible FLOPs — the same treatment every
+//! mixed-precision framework (MPT [16], DFP [4]) applies. BN's γ/β *are*
+//! learnable parameters and therefore flow through the FP16-SR update path
+//! like every other parameter.
+
+use super::quant::QuantCtx;
+use super::{Layer, Param};
+use crate::tensor::Tensor;
+
+pub struct BatchNorm {
+    pub gamma: Param,
+    pub beta: Param,
+    pub running_mean: Vec<f32>,
+    pub running_var: Vec<f32>,
+    pub momentum: f32,
+    pub eps: f32,
+    channels: usize,
+    /// `true` → NCHW input, stats over N·H·W per channel;
+    /// `false` → [N, F] input, stats over N per feature.
+    spatial: bool,
+    // backward caches
+    x_hat: Vec<f32>,
+    inv_std: Vec<f32>,
+    in_shape: Vec<usize>,
+}
+
+impl BatchNorm {
+    pub fn new_2d(name: &str, channels: usize) -> Self {
+        Self::new(name, channels, true)
+    }
+
+    pub fn new_1d(name: &str, features: usize) -> Self {
+        Self::new(name, features, false)
+    }
+
+    fn new(name: &str, channels: usize, spatial: bool) -> Self {
+        Self {
+            gamma: Param::new(format!("{name}.gamma"), Tensor::full(&[channels], 1.0), false),
+            beta: Param::new(format!("{name}.beta"), Tensor::zeros(&[channels]), false),
+            running_mean: vec![0.0; channels],
+            running_var: vec![1.0; channels],
+            momentum: 0.9,
+            eps: 1e-5,
+            channels,
+            spatial,
+            x_hat: vec![],
+            inv_std: vec![],
+            in_shape: vec![],
+        }
+    }
+
+    /// Iterate (channel, flat index) pairs of the input layout.
+    #[inline]
+    fn for_each<F: FnMut(usize, usize)>(&self, shape: &[usize], mut f: F) {
+        if self.spatial {
+            let (n, c, hw) = (shape[0], shape[1], shape[2] * shape[3]);
+            for img in 0..n {
+                for ch in 0..c {
+                    let base = (img * c + ch) * hw;
+                    for s in 0..hw {
+                        f(ch, base + s);
+                    }
+                }
+            }
+        } else {
+            let (n, c) = (shape[0], shape[1]);
+            for img in 0..n {
+                for ch in 0..c {
+                    f(ch, img * c + ch);
+                }
+            }
+        }
+    }
+
+    fn count_per_channel(&self, shape: &[usize]) -> f32 {
+        if self.spatial {
+            (shape[0] * shape[2] * shape[3]) as f32
+        } else {
+            shape[0] as f32
+        }
+    }
+}
+
+impl Layer for BatchNorm {
+    fn forward(&mut self, mut x: Tensor, ctx: &QuantCtx) -> Tensor {
+        let shape = x.shape.clone();
+        let c = self.channels;
+        if self.spatial {
+            assert_eq!(shape[1], c, "BN channel mismatch");
+        } else {
+            assert_eq!(shape[1], c, "BN feature mismatch");
+        }
+        let m = self.count_per_channel(&shape);
+
+        let (mean, var) = if ctx.train {
+            let mut mean = vec![0f32; c];
+            self.for_each(&shape, |ch, i| mean[ch] += x.data[i]);
+            for v in &mut mean {
+                *v /= m;
+            }
+            let mut var = vec![0f32; c];
+            self.for_each(&shape, |ch, i| {
+                let d = x.data[i] - mean[ch];
+                var[ch] += d * d;
+            });
+            for v in &mut var {
+                *v /= m;
+            }
+            for ch in 0..c {
+                self.running_mean[ch] =
+                    self.momentum * self.running_mean[ch] + (1.0 - self.momentum) * mean[ch];
+                self.running_var[ch] =
+                    self.momentum * self.running_var[ch] + (1.0 - self.momentum) * var[ch];
+            }
+            (mean, var)
+        } else {
+            (self.running_mean.clone(), self.running_var.clone())
+        };
+
+        let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + self.eps).sqrt()).collect();
+        let mut x_hat = vec![0f32; x.len()];
+        let (g, b) = (&self.gamma.value.data, &self.beta.value.data);
+        self.for_each(&shape, |ch, i| {
+            let h = (x.data[i] - mean[ch]) * inv_std[ch];
+            x_hat[i] = h;
+            x.data[i] = g[ch] * h + b[ch];
+        });
+        if ctx.train {
+            self.x_hat = x_hat;
+            self.inv_std = inv_std;
+            self.in_shape = shape;
+        }
+        x
+    }
+
+    fn backward(&mut self, mut dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        let shape = self.in_shape.clone();
+        assert_eq!(dy.shape, shape, "BN backward shape");
+        let c = self.channels;
+        let m = self.count_per_channel(&shape);
+
+        // Per-channel reductions: Σdy and Σdy·x̂.
+        let mut sum_dy = vec![0f32; c];
+        let mut sum_dyh = vec![0f32; c];
+        self.for_each(&shape, |ch, i| {
+            sum_dy[ch] += dy.data[i];
+            sum_dyh[ch] += dy.data[i] * self.x_hat[i];
+        });
+        for ch in 0..c {
+            self.beta.grad.data[ch] += sum_dy[ch];
+            self.gamma.grad.data[ch] += sum_dyh[ch];
+        }
+
+        // dx = (γ·inv_std/m) · (m·dy − Σdy − x̂·Σ(dy·x̂))
+        let g = &self.gamma.value.data;
+        let x_hat = &self.x_hat;
+        let inv_std = &self.inv_std;
+        self.for_each(&shape, |ch, i| {
+            dy.data[i] = g[ch] * inv_std[ch] / m
+                * (m * dy.data[i] - sum_dy[ch] - x_hat[i] * sum_dyh[ch]);
+        });
+        dy
+    }
+
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.gamma);
+        f(&mut self.beta);
+    }
+
+    fn name(&self) -> String {
+        self.gamma.name.trim_end_matches(".gamma").to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::numerics::Xoshiro256;
+
+    #[test]
+    fn normalizes_batch_statistics() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut bn = BatchNorm::new_2d("bn", 2);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let x = Tensor::from_vec(
+            &[4, 2, 3, 3],
+            (0..72).map(|_| rng.uniform(-3.0, 7.0)).collect(),
+        );
+        let y = bn.forward(x, &ctx);
+        // Per-channel mean ≈ 0, var ≈ 1 after normalization (γ=1, β=0).
+        for ch in 0..2 {
+            let vals: Vec<f32> = (0..4)
+                .flat_map(|n| {
+                    let base = (n * 2 + ch) * 9;
+                    y.data[base..base + 9].to_vec()
+                })
+                .collect();
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-5, "mean={mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var={var}");
+        }
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let policy = PrecisionPolicy::fp32();
+        let train = QuantCtx::new(&policy, 0, true);
+        let eval = QuantCtx::new(&policy, 0, false);
+        let mut bn = BatchNorm::new_2d("bn", 1);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        // Many training batches drive running stats toward (2, 4).
+        for _ in 0..200 {
+            let x = Tensor::from_vec(
+                &[8, 1, 2, 2],
+                (0..32).map(|_| 2.0 + 2.0 * rng.normal()).collect(),
+            );
+            bn.forward(x, &train);
+        }
+        assert!((bn.running_mean[0] - 2.0).abs() < 0.3);
+        assert!((bn.running_var[0] - 4.0).abs() < 1.0);
+        // Eval mode with a constant input uses running stats, not batch.
+        let y = bn.forward(Tensor::full(&[1, 1, 2, 2], 2.0), &eval);
+        assert!(y.data.iter().all(|&v| v.abs() < 0.3), "y={:?}", y.data);
+    }
+
+    #[test]
+    fn bn_gradcheck() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = Tensor::from_vec(&[3, 2, 2, 2], (0..24).map(|_| rng.uniform(-1.0, 1.0)).collect());
+        let dy = Tensor::from_vec(&[3, 2, 2, 2], (0..24).map(|_| rng.uniform(-1.0, 1.0)).collect());
+
+        let mut bn = BatchNorm::new_2d("bn", 2);
+        bn.forward(x.clone(), &ctx);
+        let dx = bn.backward(dy.clone(), &ctx);
+
+        let loss = |x: &Tensor| -> f32 {
+            let mut b = BatchNorm::new_2d("bn", 2);
+            let y = b.forward(x.clone(), &ctx);
+            y.data.iter().zip(&dy.data).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for i in (0..24).step_by(5) {
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let num = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!(
+                (num - dx.data[i]).abs() < 2e-2,
+                "dx[{i}]: numeric {num} vs {}",
+                dx.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn bn_1d_shapes() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut bn = BatchNorm::new_1d("bn", 5);
+        let y = bn.forward(Tensor::zeros(&[3, 5]), &ctx);
+        assert_eq!(y.shape, vec![3, 5]);
+        let dx = bn.backward(Tensor::zeros(&[3, 5]), &ctx);
+        assert_eq!(dx.shape, vec![3, 5]);
+    }
+}

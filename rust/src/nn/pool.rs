@@ -1,0 +1,188 @@
+//! Pooling layers: max pooling (AlexNet/CIFAR-CNN) and global average
+//! pooling (ResNet heads). Elementwise/reduction ops stay in full
+//! precision, as in the paper's emulation (only GEMMs and updates are
+//! reduced).
+
+use super::quant::QuantCtx;
+use super::Layer;
+use crate::tensor::Tensor;
+
+/// kxk max pooling with stride `s` (no padding).
+pub struct MaxPool2d {
+    pub k: usize,
+    pub stride: usize,
+    argmax: Vec<usize>,
+    in_shape: Vec<usize>,
+}
+
+impl MaxPool2d {
+    pub fn new(k: usize, stride: usize) -> Self {
+        Self {
+            k,
+            stride,
+            argmax: vec![],
+            in_shape: vec![],
+        }
+    }
+
+    fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        ((h - self.k) / self.stride + 1, (w - self.k) / self.stride + 1)
+    }
+}
+
+impl Layer for MaxPool2d {
+    fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
+        assert_eq!(x.ndim(), 4);
+        let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (oh, ow) = self.out_hw(h, w);
+        let mut out = Tensor::zeros(&[n, c, oh, ow]);
+        let mut argmax = vec![0usize; out.len()];
+        for img in 0..n {
+            for ch in 0..c {
+                let plane = (img * c + ch) * h * w;
+                let oplane = (img * c + ch) * oh * ow;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_i = 0usize;
+                        for ky in 0..self.k {
+                            for kx in 0..self.k {
+                                let i = plane + (oy * self.stride + ky) * w + ox * self.stride + kx;
+                                if x.data[i] > best {
+                                    best = x.data[i];
+                                    best_i = i;
+                                }
+                            }
+                        }
+                        out.data[oplane + oy * ow + ox] = best;
+                        argmax[oplane + oy * ow + ox] = best_i;
+                    }
+                }
+            }
+        }
+        if ctx.train {
+            self.argmax = argmax;
+            self.in_shape = x.shape.clone();
+        }
+        out
+    }
+
+    fn backward(&mut self, dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        let mut dx = Tensor::zeros(&self.in_shape.clone());
+        for (i, &src) in self.argmax.iter().enumerate() {
+            dx.data[src] += dy.data[i];
+        }
+        dx
+    }
+
+    fn name(&self) -> String {
+        format!("maxpool{}x{}", self.k, self.k)
+    }
+}
+
+/// Global average pooling: NCHW → [N, C].
+pub struct GlobalAvgPool {
+    in_shape: Vec<usize>,
+}
+
+impl GlobalAvgPool {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { in_shape: vec![] }
+    }
+}
+
+impl Layer for GlobalAvgPool {
+    fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
+        assert_eq!(x.ndim(), 4);
+        let (n, c, hw) = (x.shape[0], x.shape[1], x.shape[2] * x.shape[3]);
+        let mut out = Tensor::zeros(&[n, c]);
+        for img in 0..n {
+            for ch in 0..c {
+                let base = (img * c + ch) * hw;
+                let s: f32 = x.data[base..base + hw].iter().sum();
+                out.data[img * c + ch] = s / hw as f32;
+            }
+        }
+        if ctx.train {
+            self.in_shape = x.shape.clone();
+        }
+        out
+    }
+
+    fn backward(&mut self, dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        let shape = self.in_shape.clone();
+        let (n, c, hw) = (shape[0], shape[1], shape[2] * shape[3]);
+        let mut dx = Tensor::zeros(&shape);
+        for img in 0..n {
+            for ch in 0..c {
+                let g = dy.data[img * c + ch] / hw as f32;
+                let base = (img * c + ch) * hw;
+                for v in &mut dx.data[base..base + hw] {
+                    *v = g;
+                }
+            }
+        }
+        dx
+    }
+
+    fn name(&self) -> String {
+        "gap".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+
+    #[test]
+    fn maxpool_picks_max_and_routes_grad() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut p = MaxPool2d::new(2, 2);
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1., 2., 5., 6., //
+                3., 4., 7., 8., //
+                9., 10., 13., 14., //
+                11., 12., 15., 16.,
+            ],
+        );
+        let y = p.forward(x, &ctx);
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![4., 8., 12., 16.]);
+        let dy = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let dx = p.backward(dy, &ctx);
+        // Gradient lands only at the argmax positions.
+        assert_eq!(dx.data[5], 1.0); // value 4
+        assert_eq!(dx.data[7], 2.0); // value 8
+        assert_eq!(dx.data[13], 3.0); // value 12
+        assert_eq!(dx.data[15], 4.0); // value 16
+        assert_eq!(dx.data.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn gap_averages_and_spreads() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut g = GlobalAvgPool::new();
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 10., 10., 10., 10.]);
+        let y = g.forward(x, &ctx);
+        assert_eq!(y.shape, vec![1, 2]);
+        assert_eq!(y.data, vec![2.5, 10.0]);
+        let dx = g.backward(Tensor::from_vec(&[1, 2], vec![4.0, 8.0]), &ctx);
+        assert_eq!(dx.data, vec![1., 1., 1., 1., 2., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn maxpool_overlapping_window() {
+        // AlexNet-style 3x3/stride-2 pooling.
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut p = MaxPool2d::new(3, 2);
+        let y = p.forward(Tensor::zeros(&[2, 3, 7, 7]), &ctx);
+        assert_eq!(y.shape, vec![2, 3, 3, 3]);
+    }
+}

@@ -1,0 +1,494 @@
+//! The quantization-policy engine: which format/rounding/chunking applies
+//! to which tensor of which layer.
+//!
+//! The paper's scheme (Fig. 2, §3, §4.1) is *positional*: the three GEMMs
+//! (Forward / Backward / Gradient) of every Conv/FC layer run FP8×FP8→FP16
+//! with chunked accumulation, **except** the last layer (all three GEMMs in
+//! FP16 for Softmax fidelity) and the first layer's *data* operand (input
+//! images in FP16 since FP8 cannot represent 0..255). The weight-update
+//! AXPYs are FP16 with stochastic rounding, and the back-propagated error
+//! is loss-scaled by 1000.
+//!
+//! A [`PrecisionPolicy`] captures one complete experimental configuration;
+//! named presets cover the paper's headline scheme and every ablation in
+//! Figs. 1/5 and Tables 3/4.
+
+use super::baselines::BaselineScheme;
+use crate::numerics::{FloatFormat, GemmPrecision, RoundMode, UpdatePrecision};
+
+/// Which of the three GEMMs of Fig. 2(a) is being computed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GemmRole {
+    /// `Y = X · Wᵀ` (activations out).
+    Forward,
+    /// `dX = dY · W` (errors back).
+    Backward,
+    /// `dW = dYᵀ · X` (weight gradients; accumulates across the minibatch —
+    /// the GEMM §4.2 finds most sensitive to accumulation error).
+    Gradient,
+}
+
+impl GemmRole {
+    pub const ALL: [GemmRole; 3] = [GemmRole::Forward, GemmRole::Backward, GemmRole::Gradient];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            GemmRole::Forward => "fwd",
+            GemmRole::Backward => "bwd",
+            GemmRole::Gradient => "grad",
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        match self {
+            GemmRole::Forward => 0,
+            GemmRole::Backward => 1,
+            GemmRole::Gradient => 2,
+        }
+    }
+}
+
+/// Where a GEMM layer sits in the network — the paper treats first and last
+/// layers specially (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerPos {
+    /// Consumes the input image/features (data operand kept in
+    /// `input_fmt`).
+    First,
+    Middle,
+    /// Feeds the Softmax (all three GEMMs in FP16 in the paper's scheme).
+    Last,
+}
+
+/// A complete precision configuration for one training run.
+#[derive(Clone, Debug)]
+pub struct PrecisionPolicy {
+    /// Stable identifier used by the CLI / CSV headers.
+    pub name: String,
+    /// Per-role GEMM precision for middle (and by default first) layers.
+    pub gemm: [GemmPrecision; 3],
+    /// Per-role GEMM precision for the last layer.
+    pub gemm_last: [GemmPrecision; 3],
+    /// Representation format of the network input (the first layer's data
+    /// operand). The paper uses FP16 for ImageNet-scale models (§4.1).
+    pub input_fmt: FloatFormat,
+    /// Format the last-layer Forward-GEMM output (Softmax input) is kept
+    /// in. Table 3: preserving this in FP16 is what rescues an FP8 last
+    /// layer.
+    pub softmax_input_fmt: FloatFormat,
+    /// The weight-update AXPY path of Fig. 2(b).
+    pub update: UpdatePrecision,
+    /// Loss-scaling factor applied to the back-propagated error (§3 adopts
+    /// the method of MPT [16] with a single factor of 1000).
+    pub loss_scale: f32,
+    /// When set, a Table 2 comparison scheme overrides the tensor
+    /// quantizers (the GEMM accumulation settings in `gemm`/`gemm_last`
+    /// still apply — FP32 for every baseline).
+    pub baseline: Option<BaselineScheme>,
+}
+
+impl PrecisionPolicy {
+    /// Full-precision FP32 baseline.
+    pub fn fp32() -> Self {
+        Self {
+            name: "fp32".into(),
+            gemm: [GemmPrecision::fp32(); 3],
+            gemm_last: [GemmPrecision::fp32(); 3],
+            input_fmt: FloatFormat::FP32,
+            softmax_input_fmt: FloatFormat::FP32,
+            update: UpdatePrecision::fp32(),
+            loss_scale: 1.0,
+            baseline: None,
+        }
+    }
+
+    /// The paper's headline FP8 training scheme (§3): FP8 operands, FP16
+    /// chunked accumulation (CL = 64) in all three GEMMs, FP16-SR weight
+    /// updates, FP16 last layer and input, loss scale 1000.
+    pub fn fp8_paper() -> Self {
+        let fp16_gemm = GemmPrecision {
+            fmt_mult: FloatFormat::FP16,
+            ..GemmPrecision::fp8_paper()
+        };
+        Self {
+            name: "fp8_paper".into(),
+            gemm: [GemmPrecision::fp8_paper(); 3],
+            gemm_last: [fp16_gemm; 3],
+            input_fmt: FloatFormat::FP16,
+            softmax_input_fmt: FloatFormat::FP16,
+            update: UpdatePrecision::fp16_stochastic(),
+            loss_scale: 1000.0,
+            baseline: None,
+        }
+    }
+
+    /// Fig. 1(a): FP8 representations with everything else full precision —
+    /// isolates representation error.
+    pub fn fp8_reps_only() -> Self {
+        let g = GemmPrecision {
+            fmt_mult: FloatFormat::FP8,
+            fmt_acc: FloatFormat::FP32,
+            chunk: usize::MAX,
+            round: RoundMode::NearestEven,
+            exact: false,
+        };
+        Self {
+            name: "fp8_reps_only".into(),
+            gemm: [g; 3],
+            gemm_last: [g; 3],
+            input_fmt: FloatFormat::FP32,
+            softmax_input_fmt: FloatFormat::FP32,
+            update: UpdatePrecision::fp32(),
+            loss_scale: 1.0,
+            baseline: None,
+        }
+    }
+
+    /// Fig. 1(b): FP16 accumulation *without chunking* (FP32 operands) —
+    /// isolates swamping in the accumulator.
+    pub fn fp16_acc_nochunk() -> Self {
+        let g = GemmPrecision {
+            fmt_mult: FloatFormat::FP32,
+            fmt_acc: FloatFormat::FP16,
+            chunk: 1,
+            round: RoundMode::NearestEven,
+            exact: true,
+        };
+        Self {
+            name: "fp16_acc_nochunk".into(),
+            gemm: [g; 3],
+            gemm_last: [g; 3],
+            input_fmt: FloatFormat::FP32,
+            softmax_input_fmt: FloatFormat::FP32,
+            update: UpdatePrecision::fp32(),
+            loss_scale: 1.0,
+            baseline: None,
+        }
+    }
+
+    /// Fig. 1(c) / Table 4: FP16 weight updates with nearest rounding
+    /// (GEMMs full precision) — isolates update swamping.
+    pub fn fp16_upd_nearest() -> Self {
+        Self {
+            name: "fp16_upd_nearest".into(),
+            update: UpdatePrecision::fp16_nearest(),
+            loss_scale: 1.0,
+            ..Self::fp32()
+        }
+        .renamed("fp16_upd_nearest")
+    }
+
+    /// Table 4 counterpart: FP16 updates with stochastic rounding, FP32
+    /// GEMMs.
+    pub fn fp16_upd_stochastic() -> Self {
+        Self {
+            update: UpdatePrecision::fp16_stochastic(),
+            loss_scale: 1.0,
+            ..Self::fp32()
+        }
+        .renamed("fp16_upd_stochastic")
+    }
+
+    /// Fig. 5(a): the paper's scheme with chunking disabled (CL = 1).
+    pub fn fp8_nochunk() -> Self {
+        let mut p = Self::fp8_paper();
+        for g in p.gemm.iter_mut().chain(p.gemm_last.iter_mut()) {
+            g.chunk = 1;
+            g.exact = true;
+        }
+        p.renamed("fp8_nochunk")
+    }
+
+    /// Fig. 5(b): no chunking, but exactly one GEMM role promoted to FP32
+    /// accumulation.
+    pub fn fp8_nochunk_fp32_role(role: GemmRole) -> Self {
+        let mut p = Self::fp8_nochunk();
+        p.gemm[role.index()].fmt_acc = FloatFormat::FP32;
+        p.gemm[role.index()].exact = false;
+        p.gemm_last[role.index()].fmt_acc = FloatFormat::FP32;
+        p.gemm_last[role.index()].exact = false;
+        p.renamed(&format!("fp8_nochunk_fp32_{}", role.id()))
+    }
+
+    /// Table 3 variants: last-layer GEMM operand format and Softmax-input
+    /// format.
+    pub fn with_last_layer(mut self, fmt: FloatFormat, softmax_input: FloatFormat) -> Self {
+        for g in self.gemm_last.iter_mut() {
+            g.fmt_mult = fmt;
+        }
+        self.softmax_input_fmt = softmax_input;
+        let name = format!("{}_last_{}_sm_{}", self.name, fmt.name(), softmax_input.name());
+        self.renamed(&name)
+    }
+
+    /// Override the chunk size everywhere (Fig. 6 sweeps).
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        for g in self.gemm.iter_mut().chain(self.gemm_last.iter_mut()) {
+            if !g.is_fp32() {
+                g.chunk = chunk;
+            }
+        }
+        self
+    }
+
+    pub fn renamed(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// A Table 2 baseline scheme: custom tensor quantizers, FP32 GEMM
+    /// accumulation, FP32 weight updates (DoReFa/WAGE/DFP/MPT all keep
+    /// FP32 master weights; MPT additionally loss-scales).
+    pub fn baseline(scheme: BaselineScheme) -> Self {
+        let mut p = Self::fp32();
+        p.baseline = Some(scheme);
+        p.loss_scale = match scheme {
+            BaselineScheme::MptFp16 => 1000.0,
+            _ => 1.0,
+        };
+        p.renamed(scheme.id())
+    }
+
+    /// Quantize a *stored activation* tensor (data operand) in place.
+    pub fn quantize_act(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos) {
+        match self.baseline {
+            // Baselines keep first/last layers full precision ([23], [3] —
+            // see §4.1's discussion of this convention).
+            Some(s) if pos == LayerPos::Middle => s.quantize_act(xs),
+            Some(_) => {}
+            None => self
+                .act_fmt(role, pos)
+                .quantize_slice(xs, RoundMode::NearestEven),
+        }
+    }
+
+    /// Quantize a weight tensor in place at GEMM time.
+    pub fn quantize_weight(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos) {
+        match self.baseline {
+            Some(s) if pos == LayerPos::Middle => s.quantize_weight(xs),
+            Some(_) => {}
+            None => self
+                .weight_fmt(role, pos)
+                .quantize_slice(xs, RoundMode::NearestEven),
+        }
+    }
+
+    /// Quantize a stored error tensor in place (`seed` drives the
+    /// stochastic baseline gradient quantizers).
+    pub fn quantize_err(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos, seed: u64) {
+        match self.baseline {
+            Some(s) if pos == LayerPos::Middle => s.quantize_err(xs, seed),
+            Some(_) => {}
+            None => self
+                .err_fmt(role, pos)
+                .quantize_slice(xs, RoundMode::NearestEven),
+        }
+    }
+
+    /// Named-preset lookup for the CLI.
+    pub fn parse(name: &str) -> Option<Self> {
+        Some(match name {
+            "fp32" => Self::fp32(),
+            "fp8_paper" | "fp8" => Self::fp8_paper(),
+            "fp8_reps_only" => Self::fp8_reps_only(),
+            "fp16_acc_nochunk" => Self::fp16_acc_nochunk(),
+            "fp16_upd_nearest" => Self::fp16_upd_nearest(),
+            "fp16_upd_stochastic" => Self::fp16_upd_stochastic(),
+            "fp8_nochunk" => Self::fp8_nochunk(),
+            "fp8_nochunk_fp32_fwd" => Self::fp8_nochunk_fp32_role(GemmRole::Forward),
+            "fp8_nochunk_fp32_bwd" => Self::fp8_nochunk_fp32_role(GemmRole::Backward),
+            "fp8_nochunk_fp32_grad" => Self::fp8_nochunk_fp32_role(GemmRole::Gradient),
+            _ => return BaselineScheme::parse(name).map(Self::baseline),
+        })
+    }
+
+    pub const PRESETS: [&'static str; 10] = [
+        "fp32",
+        "fp8_paper",
+        "fp8_reps_only",
+        "fp16_acc_nochunk",
+        "fp16_upd_nearest",
+        "fp16_upd_stochastic",
+        "fp8_nochunk",
+        "fp8_nochunk_fp32_fwd",
+        "fp8_nochunk_fp32_bwd",
+        "fp8_nochunk_fp32_grad",
+    ];
+
+    /// The GEMM precision for `role` at layer position `pos`.
+    #[inline]
+    pub fn gemm_for(&self, role: GemmRole, pos: LayerPos) -> GemmPrecision {
+        match pos {
+            LayerPos::Last => self.gemm_last[role.index()],
+            _ => self.gemm[role.index()],
+        }
+    }
+
+    /// Format for the *data* operand (activations into Forward/Gradient
+    /// GEMMs) at `pos`. First layers keep the network input in
+    /// `input_fmt` (§4.1); elsewhere the GEMM's multiply format applies.
+    #[inline]
+    pub fn act_fmt(&self, role: GemmRole, pos: LayerPos) -> FloatFormat {
+        let base = self.gemm_for(role, pos).fmt_mult;
+        match pos {
+            LayerPos::First => {
+                // Input images are FP16; weights stay FP8. Use the *wider*
+                // of the two so FP32 baselines are unaffected.
+                if self.input_fmt.mbits > base.mbits {
+                    self.input_fmt
+                } else {
+                    base
+                }
+            }
+            _ => base,
+        }
+    }
+
+    /// Format for the weight operand at `pos`.
+    #[inline]
+    pub fn weight_fmt(&self, role: GemmRole, pos: LayerPos) -> FloatFormat {
+        self.gemm_for(role, pos).fmt_mult
+    }
+
+    /// Format for the error operand (dY into Backward/Gradient GEMMs).
+    #[inline]
+    pub fn err_fmt(&self, role: GemmRole, pos: LayerPos) -> FloatFormat {
+        self.gemm_for(role, pos).fmt_mult
+    }
+
+    /// Does any part of the policy use stochastic rounding (and therefore
+    /// consume RNG state)?
+    pub fn is_stochastic(&self) -> bool {
+        self.update.round.is_stochastic()
+            || self
+                .gemm
+                .iter()
+                .chain(self.gemm_last.iter())
+                .any(|g| g.round.is_stochastic())
+    }
+}
+
+/// Per-step quantization context threaded through every layer: the policy,
+/// a step counter (diversifies SR streams across steps), and train/eval
+/// mode.
+#[derive(Clone, Debug)]
+pub struct QuantCtx<'a> {
+    pub policy: &'a PrecisionPolicy,
+    pub step: u64,
+    pub train: bool,
+}
+
+impl<'a> QuantCtx<'a> {
+    pub fn new(policy: &'a PrecisionPolicy, step: u64, train: bool) -> Self {
+        Self { policy, step, train }
+    }
+
+    /// Deterministic per-(layer, role, step) seed for stochastic rounding
+    /// inside GEMMs — results are independent of scheduling and replayable.
+    #[inline]
+    pub fn gemm_seed(&self, layer_id: u64, role: GemmRole) -> u64 {
+        splitmix_once(
+            self.step
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(layer_id << 8)
+                .wrapping_add(role.index() as u64),
+        )
+    }
+}
+
+#[inline]
+fn splitmix_once(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_policy_shape() {
+        let p = PrecisionPolicy::fp8_paper();
+        assert_eq!(p.loss_scale, 1000.0);
+        assert_eq!(p.input_fmt, FloatFormat::FP16);
+        for role in GemmRole::ALL {
+            let g = p.gemm_for(role, LayerPos::Middle);
+            assert_eq!(g.fmt_mult, FloatFormat::FP8);
+            assert_eq!(g.fmt_acc, FloatFormat::FP16);
+            assert_eq!(g.chunk, 64);
+            // Last layer runs FP16 operands (§4.1 / Table 3).
+            let l = p.gemm_for(role, LayerPos::Last);
+            assert_eq!(l.fmt_mult, FloatFormat::FP16);
+        }
+        assert_eq!(p.update.fmt, FloatFormat::FP16);
+        assert!(p.update.round.is_stochastic());
+        assert!(p.is_stochastic());
+    }
+
+    #[test]
+    fn first_layer_keeps_wide_input() {
+        let p = PrecisionPolicy::fp8_paper();
+        // Data operand of the first Forward GEMM: FP16; weights stay FP8.
+        assert_eq!(p.act_fmt(GemmRole::Forward, LayerPos::First), FloatFormat::FP16);
+        assert_eq!(p.weight_fmt(GemmRole::Forward, LayerPos::First), FloatFormat::FP8);
+        assert_eq!(p.act_fmt(GemmRole::Forward, LayerPos::Middle), FloatFormat::FP8);
+        // FP32 baseline unaffected by the input-format rule.
+        let b = PrecisionPolicy::fp32();
+        assert_eq!(b.act_fmt(GemmRole::Forward, LayerPos::First), FloatFormat::FP32);
+        assert!(!b.is_stochastic());
+    }
+
+    #[test]
+    fn all_presets_parse_and_roundtrip() {
+        for name in PrecisionPolicy::PRESETS {
+            let p = PrecisionPolicy::parse(name).unwrap_or_else(|| panic!("preset {name}"));
+            assert_eq!(p.name, name);
+        }
+        assert!(PrecisionPolicy::parse("nope").is_none());
+    }
+
+    #[test]
+    fn fig5b_promotes_exactly_one_role() {
+        let p = PrecisionPolicy::fp8_nochunk_fp32_role(GemmRole::Gradient);
+        assert_eq!(
+            p.gemm_for(GemmRole::Gradient, LayerPos::Middle).fmt_acc,
+            FloatFormat::FP32
+        );
+        assert_eq!(
+            p.gemm_for(GemmRole::Forward, LayerPos::Middle).fmt_acc,
+            FloatFormat::FP16
+        );
+        assert_eq!(p.gemm_for(GemmRole::Forward, LayerPos::Middle).chunk, 1);
+    }
+
+    #[test]
+    fn chunk_override_spares_fp32() {
+        let p = PrecisionPolicy::fp8_paper().with_chunk(128);
+        assert_eq!(p.gemm_for(GemmRole::Forward, LayerPos::Middle).chunk, 128);
+        let b = PrecisionPolicy::fp32().with_chunk(128);
+        assert!(b.gemm_for(GemmRole::Forward, LayerPos::Middle).is_fp32());
+    }
+
+    #[test]
+    fn table3_last_layer_variants() {
+        let p = PrecisionPolicy::fp8_paper().with_last_layer(FloatFormat::FP8, FloatFormat::FP16);
+        assert_eq!(p.gemm_for(GemmRole::Forward, LayerPos::Last).fmt_mult, FloatFormat::FP8);
+        assert_eq!(p.softmax_input_fmt, FloatFormat::FP16);
+    }
+
+    #[test]
+    fn gemm_seeds_vary_by_layer_role_step() {
+        let p = PrecisionPolicy::fp8_paper();
+        let c1 = QuantCtx::new(&p, 1, true);
+        let c2 = QuantCtx::new(&p, 2, true);
+        let s = c1.gemm_seed(0, GemmRole::Forward);
+        assert_ne!(s, c1.gemm_seed(1, GemmRole::Forward));
+        assert_ne!(s, c1.gemm_seed(0, GemmRole::Backward));
+        assert_ne!(s, c2.gemm_seed(0, GemmRole::Forward));
+        // Deterministic.
+        assert_eq!(s, QuantCtx::new(&p, 1, true).gemm_seed(0, GemmRole::Forward));
+    }
+}

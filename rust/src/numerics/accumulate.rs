@@ -1,0 +1,248 @@
+//! Accumulation strategies for long reduced-precision sums.
+//!
+//! §2.3 of the paper identifies *swamping* — large-to-small addition
+//! truncation — as the failure mode that forces today's hardware to keep
+//! 32-bit accumulators, and proposes **chunk-based accumulation**: split a
+//! length-N sum into N/CL chunks, accumulate within each chunk, then
+//! accumulate the partial sums, reducing the error bound from O(N) to
+//! O(N/CL + CL) (cf. the superblock analysis of Castaldo et al. [1]).
+//!
+//! This module implements the accumulation family used throughout the
+//! crate and by the Fig. 3(b) experiment:
+//!
+//! - [`acc_sequential`] — plain left-to-right reduced-precision sum
+//!   (the ChunkSize = 1 baseline that swamps),
+//! - [`acc_chunked`] — the paper's scheme (two-level, one extra register),
+//! - [`acc_pairwise`] — recursive pairwise summation (memory-hungry
+//!   comparison point mentioned in §2.3),
+//! - [`acc_kahan`] — compensated summation in the accumulation format
+//!   (a classic HPC alternative, for the ablation benches),
+//! - [`acc_f64`] — the exact reference.
+
+use super::format::FloatFormat;
+use super::rng::RoundBits;
+use super::rounding::RoundMode;
+use super::softfloat::SoftAcc;
+
+/// Exact (f64) reference sum.
+pub fn acc_f64(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x as f64).sum()
+}
+
+/// Plain sequential accumulation in `fmt` with rounding `mode`.
+/// This is chunked accumulation with CL = 1 in the paper's Fig. 3(b).
+pub fn acc_sequential<R: RoundBits>(
+    fmt: FloatFormat,
+    mode: RoundMode,
+    xs: &[f32],
+    rng: &mut R,
+) -> f32 {
+    let mut acc = SoftAcc::new(fmt, mode);
+    for &x in xs {
+        acc.add(x, rng);
+    }
+    acc.value
+}
+
+/// Chunk-based accumulation (paper Fig. 3a, reduction part): intra-chunk
+/// partial sums in `fmt`, then inter-chunk accumulation of the partials,
+/// also in `fmt`. Exactly one extra accumulator register is used, matching
+/// the hardware cost claim of §2.3.
+pub fn acc_chunked<R: RoundBits>(
+    fmt: FloatFormat,
+    mode: RoundMode,
+    chunk: usize,
+    xs: &[f32],
+    rng: &mut R,
+) -> f32 {
+    assert!(chunk >= 1, "chunk length must be >= 1");
+    let mut inter = SoftAcc::new(fmt, mode);
+    for block in xs.chunks(chunk) {
+        let mut intra = SoftAcc::new(fmt, mode);
+        for &x in block {
+            intra.add(x, rng);
+        }
+        inter.add(intra.value, rng);
+    }
+    inter.value
+}
+
+/// Recursive pairwise summation with every partial kept in `fmt`.
+/// O(log N) error growth but needs O(N) intermediate storage (or recursion)
+/// — the "insignificant memory overheads (unlike pairwise-summation)"
+/// contrast in §2.3.
+pub fn acc_pairwise<R: RoundBits>(
+    fmt: FloatFormat,
+    mode: RoundMode,
+    xs: &[f32],
+    rng: &mut R,
+) -> f32 {
+    fn go<R: RoundBits>(fmt: FloatFormat, mode: RoundMode, xs: &[f32], rng: &mut R) -> f32 {
+        match xs.len() {
+            0 => 0.0,
+            1 => fmt.quantize_with_bits(xs[0], mode, if mode.is_stochastic() { rng.next_bits() } else { 0 }),
+            n => {
+                let (a, b) = xs.split_at(n / 2);
+                let l = go(fmt, mode, a, rng);
+                let r = go(fmt, mode, b, rng);
+                let bits = if mode.is_stochastic() { rng.next_bits() } else { 0 };
+                fmt.quantize_with_bits(l + r, mode, bits)
+            }
+        }
+    }
+    go(fmt, mode, xs, rng)
+}
+
+/// Kahan compensated summation carried out in `fmt` arithmetic: both the
+/// running sum and the compensation term are re-rounded after every step.
+pub fn acc_kahan<R: RoundBits>(
+    fmt: FloatFormat,
+    mode: RoundMode,
+    xs: &[f32],
+    rng: &mut R,
+) -> f32 {
+    let q = |v: f32, rng: &mut R| {
+        let bits = if mode.is_stochastic() { rng.next_bits() } else { 0 };
+        fmt.quantize_with_bits(v, mode, bits)
+    };
+    let mut sum = 0f32;
+    let mut c = 0f32;
+    for &x in xs {
+        let y = q(x - c, rng);
+        let t = q(sum + y, rng);
+        c = q(q(t - sum, rng) - y, rng);
+        sum = t;
+    }
+    sum
+}
+
+/// Relative error of an accumulation against the f64 reference.
+pub fn rel_error(approx: f32, exact: f64) -> f64 {
+    if exact == 0.0 {
+        approx.abs() as f64
+    } else {
+        ((approx as f64 - exact) / exact).abs()
+    }
+}
+
+/// Theoretical worst-case error-growth factor O(N/CL + CL); minimized at
+/// CL = sqrt(N). Used by the Fig. 6 discussion and the hw model.
+pub fn chunk_error_bound(n: usize, chunk: usize) -> f64 {
+    (n as f64 / chunk as f64) + chunk as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+
+    fn uniform_vec(n: usize, seed: u64) -> Vec<f32> {
+        // The paper's Fig 3(b) workload: uniform with mean 1, stdev 1.
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let (lo, hi) = (1.0 - 1.732, 1.0 + 1.732); // mean 1, var ≈ 1
+        (0..n).map(|_| rng.uniform(lo as f32, hi as f32)).collect()
+    }
+
+    #[test]
+    fn fp32_sequential_matches_naive() {
+        let xs = uniform_vec(10_000, 1);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let ours = acc_sequential(FloatFormat::FP32, RoundMode::NearestEven, &xs, &mut rng);
+        let naive: f32 = xs.iter().sum();
+        assert_eq!(ours, naive);
+    }
+
+    #[test]
+    fn fp16_nearest_swamps_at_4096() {
+        // The paper: "the accumulation stops when length >= 4096, since the
+        // magnitudes differ by >= 2^11". Mean-1 addends, sum ≈ N.
+        let xs = uniform_vec(1 << 16, 3);
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let got = acc_sequential(FloatFormat::FP16, RoundMode::NearestEven, &xs, &mut rng);
+        let exact = acc_f64(&xs);
+        // Swamped: the FP16 sum stalls in the low thousands, way below 65536.
+        assert!(
+            (got as f64) < exact * 0.2,
+            "expected severe swamping: got {got} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn chunking_rescues_fp16_accumulation() {
+        let xs = uniform_vec(1 << 16, 5);
+        let exact = acc_f64(&xs);
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for chunk in [32usize, 64, 256] {
+            let got = acc_chunked(FloatFormat::FP16, RoundMode::NearestEven, chunk, &xs, &mut rng);
+            let err = rel_error(got, exact);
+            assert!(err < 0.01, "chunk={chunk} err={err} got={got} exact={exact}");
+        }
+    }
+
+    #[test]
+    fn chunk_of_one_equals_sequential() {
+        // On FP16-representable inputs (as in a real datapath, where the
+        // addends are FP8×FP8 products): with CL=1 the intra-chunk partial
+        // is exactly the element (0 + x is exact), so chunked accumulation
+        // replays the sequential sum bit-for-bit.
+        let mut xs = uniform_vec(4096, 7);
+        FloatFormat::FP16.quantize_slice(&mut xs, RoundMode::NearestEven);
+        let mut r1 = Xoshiro256::seed_from_u64(8);
+        let mut r2 = Xoshiro256::seed_from_u64(8);
+        let a = acc_sequential(FloatFormat::FP16, RoundMode::NearestEven, &xs, &mut r1);
+        let b = acc_chunked(FloatFormat::FP16, RoundMode::NearestEven, 1, &xs, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stochastic_rounding_tracks_fp32() {
+        // Paper Fig 3(b): SR with CL=1 stays close to the FP32 baseline.
+        let xs = uniform_vec(1 << 16, 9);
+        let exact = acc_f64(&xs);
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let got = acc_sequential(FloatFormat::FP16, RoundMode::Stochastic, &xs, &mut rng);
+        let err = rel_error(got, exact);
+        assert!(err < 0.05, "err={err} got={got} exact={exact}");
+    }
+
+    #[test]
+    fn pairwise_and_kahan_also_rescue() {
+        let xs = uniform_vec(1 << 15, 11);
+        let exact = acc_f64(&xs);
+        let mut rng = Xoshiro256::seed_from_u64(12);
+        let pw = acc_pairwise(FloatFormat::FP16, RoundMode::NearestEven, &xs, &mut rng);
+        assert!(rel_error(pw, exact) < 0.01, "pairwise err too big: {pw}");
+        let kh = acc_kahan(FloatFormat::FP16, RoundMode::NearestEven, &xs, &mut rng);
+        assert!(rel_error(kh, exact) < 0.05, "kahan err too big: {kh} vs {exact}");
+    }
+
+    #[test]
+    fn error_bound_minimized_near_sqrt_n() {
+        let n = 4096;
+        let best = (1..=n)
+            .min_by(|&a, &b| {
+                chunk_error_bound(n, a)
+                    .partial_cmp(&chunk_error_bound(n, b))
+                    .unwrap()
+            })
+            .unwrap();
+        assert_eq!(best, 64); // sqrt(4096)
+    }
+
+    #[test]
+    fn empty_and_single_element() {
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        assert_eq!(
+            acc_chunked(FloatFormat::FP16, RoundMode::NearestEven, 64, &[], &mut rng),
+            0.0
+        );
+        assert_eq!(
+            acc_chunked(FloatFormat::FP16, RoundMode::NearestEven, 64, &[3.5], &mut rng),
+            3.5
+        );
+        assert_eq!(
+            acc_pairwise(FloatFormat::FP16, RoundMode::NearestEven, &[], &mut rng),
+            0.0
+        );
+    }
+}

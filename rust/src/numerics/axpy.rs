@@ -1,0 +1,214 @@
+//! Reduced-precision AXPY operations — the weight-update path of Fig. 2(b).
+//!
+//! A standard SGD step touches each weight three times:
+//!
+//! ```text
+//! L2-Reg:        g ← g + λ·w          (weight decay folded into the grad)
+//! Momentum-Acc:  v ← μ·v + g
+//! Weight-Upd:    w ← w − α·v
+//! ```
+//!
+//! The paper keeps **all three** in FP16 `(1,6,9)` and shows (§4.3,
+//! Table 4) that nearest rounding loses 2–4% accuracy while **floating
+//! point stochastic rounding** matches the FP32 baseline: the weight
+//! gradient is typically orders of magnitude smaller than the weight, so
+//! nearest rounding swamps the update exactly like a long dot product.
+//!
+//! Every elementwise result is re-quantized into the update format with
+//! the configured rounding mode, modelling an FP16 AXPY unit.
+
+use super::format::FloatFormat;
+use super::rng::RoundBits;
+use super::rounding::RoundMode;
+
+/// Precision configuration for the weight-update path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct UpdatePrecision {
+    /// Format of the master weights, momentum and all AXPY arithmetic.
+    pub fmt: FloatFormat,
+    /// Rounding mode applied after every AXPY elementwise op.
+    pub round: RoundMode,
+}
+
+impl UpdatePrecision {
+    /// FP32 baseline (exact updates).
+    pub const fn fp32() -> Self {
+        Self {
+            fmt: FloatFormat::FP32,
+            round: RoundMode::NearestEven,
+        }
+    }
+
+    /// The paper's scheme: FP16 master weights, stochastic rounding.
+    pub const fn fp16_stochastic() -> Self {
+        Self {
+            fmt: FloatFormat::FP16,
+            round: RoundMode::Stochastic,
+        }
+    }
+
+    /// The failing ablation of Fig. 1(c) / Table 4: FP16 + nearest.
+    pub const fn fp16_nearest() -> Self {
+        Self {
+            fmt: FloatFormat::FP16,
+            round: RoundMode::NearestEven,
+        }
+    }
+
+    #[inline]
+    pub fn is_fp32(&self) -> bool {
+        self.fmt == FloatFormat::FP32
+    }
+
+    #[inline]
+    fn q<R: RoundBits>(&self, x: f32, rng: &mut R) -> f32 {
+        let bits = if self.round.is_stochastic() { rng.next_bits() } else { 0 };
+        self.fmt.quantize_with_bits(x, self.round, bits)
+    }
+}
+
+/// `y ← y + a·x`, elementwise re-rounded into the update format.
+pub fn axpy<R: RoundBits>(p: &UpdatePrecision, a: f32, x: &[f32], y: &mut [f32], rng: &mut R) {
+    debug_assert_eq!(x.len(), y.len());
+    if p.is_fp32() {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    } else {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = p.q(*yi + a * xi, rng);
+        }
+    }
+}
+
+/// `y ← b·y + x` (momentum accumulation form).
+pub fn xpby<R: RoundBits>(p: &UpdatePrecision, x: &[f32], b: f32, y: &mut [f32], rng: &mut R) {
+    debug_assert_eq!(x.len(), y.len());
+    if p.is_fp32() {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = b * *yi + xi;
+        }
+    } else {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi = p.q(b * *yi + xi, rng);
+        }
+    }
+}
+
+/// The full three-AXPY SGD weight update of Fig. 2(b), in-place.
+///
+/// * `w` — master weights (stored in `p.fmt`),
+/// * `g` — gradient for this step (already divided by batch size and by the
+///   loss scale), consumed and clobbered by the L2 fold,
+/// * `v` — momentum buffer (stored in `p.fmt`),
+/// * `lr`, `momentum`, `weight_decay` — the usual SGD hyper-parameters.
+#[allow(clippy::too_many_arguments)]
+pub fn sgd_update<R: RoundBits>(
+    p: &UpdatePrecision,
+    w: &mut [f32],
+    g: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    momentum: f32,
+    weight_decay: f32,
+    rng: &mut R,
+) {
+    debug_assert_eq!(w.len(), g.len());
+    debug_assert_eq!(w.len(), v.len());
+    // L2-Reg: g ← g + λ w
+    if weight_decay != 0.0 {
+        axpy(p, weight_decay, w, g, rng);
+    }
+    // Momentum-Acc: v ← μ v + g
+    xpby(p, g, momentum, v, rng);
+    // Weight-Upd: w ← w − α v
+    axpy(p, -lr, v, w, rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+
+    #[test]
+    fn fp32_sgd_matches_reference() {
+        let p = UpdatePrecision::fp32();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let n = 257;
+        let mut w: Vec<f32> = (0..n).map(|i| (i as f32 - 128.0) / 64.0).collect();
+        let mut g: Vec<f32> = (0..n).map(|i| ((i * 7 % 13) as f32 - 6.0) / 100.0).collect();
+        let mut v = vec![0.1f32; n];
+        let (w0, g0, v0) = (w.clone(), g.clone(), v.clone());
+        sgd_update(&p, &mut w, &mut g, &mut v, 0.1, 0.9, 1e-4, &mut rng);
+        for i in 0..n {
+            let gi = g0[i] + 1e-4 * w0[i];
+            let vi = 0.9 * v0[i] + gi;
+            let wi = w0[i] - 0.1 * vi;
+            assert!((w[i] - wi).abs() < 1e-7);
+            assert!((v[i] - vi).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn fp16_nearest_swamps_tiny_updates() {
+        // w = 1.0, per-step update −1e-4: below half-ulp of FP16 at 1.0
+        // (ulp = 2^-9 ≈ 0.00195), so nearest rounding never moves w.
+        let p = UpdatePrecision::fp16_nearest();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut w = vec![1.0f32; 8];
+        let mut v = vec![0.0f32; 8];
+        for _ in 0..1000 {
+            let mut g = vec![1e-4f32; 8];
+            sgd_update(&p, &mut w, &mut g, &mut v, 1.0, 0.0, 0.0, &mut rng);
+        }
+        assert!(w.iter().all(|&x| x == 1.0), "w={w:?}");
+    }
+
+    #[test]
+    fn fp16_stochastic_recovers_tiny_updates() {
+        // Same setup: SR moves w by ≈ n·lr·g in expectation.
+        let p = UpdatePrecision::fp16_stochastic();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let n_steps = 2000;
+        let n = 512;
+        let mut w = vec![1.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for _ in 0..n_steps {
+            let mut g = vec![1e-4f32; n];
+            sgd_update(&p, &mut w, &mut g, &mut v, 1.0, 0.0, 0.0, &mut rng);
+        }
+        let mean: f64 = w.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let expect = 1.0 - n_steps as f64 * 1e-4; // 0.8
+        assert!(
+            (mean - expect).abs() < 0.01,
+            "mean={mean} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn momentum_in_fp16_stays_representable() {
+        let p = UpdatePrecision::fp16_stochastic();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let mut w = vec![0.5f32; 16];
+        let mut v = vec![0.0f32; 16];
+        for _ in 0..100 {
+            let mut g = vec![0.01f32; 16];
+            sgd_update(&p, &mut w, &mut g, &mut v, 0.1, 0.9, 1e-4, &mut rng);
+        }
+        for &x in w.iter().chain(v.iter()) {
+            assert!(p.fmt.is_representable(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_zero_skips_l2_fold() {
+        let p = UpdatePrecision::fp32();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let mut w = vec![2.0f32];
+        let mut g = vec![0.5f32];
+        let mut v = vec![0.0f32];
+        sgd_update(&p, &mut w, &mut g, &mut v, 0.1, 0.0, 0.0, &mut rng);
+        assert_eq!(g, vec![0.5]); // untouched by L2 fold
+        assert!((w[0] - 1.95).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,274 @@
+//! The paper's reduced-precision dot product (Fig. 3a).
+//!
+//! Two `FP_mult` vectors are multiplied element-wise (exactly — see
+//! [`super::softfloat::mul_exact`]) and the products are accumulated in
+//! `FP_acc` using chunk-based accumulation: intra-chunk accumulation in the
+//! innermost loop, then the chunk partial is folded into the running sum.
+//! A single extra register holds the intra-chunk sum — this is the
+//! "remarkably simple idea" of §2.3.
+//!
+//! Two emulation fidelities are provided (DESIGN.md §3):
+//!
+//! - **exact** — every addition is individually re-rounded into `FP_acc`
+//!   (bit-true model of the hardware accumulator; used by Fig. 3(b)/Fig. 6
+//!   and all cross-validation),
+//! - **fast** — intra-chunk partials are computed in f32 and rounded into
+//!   `FP_acc` once per chunk, while inter-chunk additions remain per-add.
+//!   This preserves the swamping mechanism (intra-chunk sums of CL ≤ 256
+//!   terms don't swamp — that is the paper's own claim) at ~CL× less
+//!   emulation work; it is what the AOT-compiled Pallas kernel uses.
+
+use super::format::FloatFormat;
+use super::rng::RoundBits;
+use super::rounding::RoundMode;
+use super::softfloat::SoftAcc;
+
+/// Precision configuration for one GEMM / dot-product (paper Fig. 2a).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmPrecision {
+    /// Operand & multiply format (`FP_mult` in Fig. 3a). `FP32` disables
+    /// operand quantization entirely.
+    pub fmt_mult: FloatFormat,
+    /// Accumulation format (`FP_acc`).
+    pub fmt_acc: FloatFormat,
+    /// Chunk length CL. `1` = plain sequential accumulation ("without
+    /// chunking" in the paper's ablations).
+    pub chunk: usize,
+    /// Rounding mode applied after each reduced-precision addition.
+    pub round: RoundMode,
+    /// Exact per-add emulation vs fast chunk-granularity emulation.
+    pub exact: bool,
+}
+
+impl GemmPrecision {
+    /// Full-precision baseline: f32 multiply, f32 accumulate.
+    pub const fn fp32() -> Self {
+        Self {
+            fmt_mult: FloatFormat::FP32,
+            fmt_acc: FloatFormat::FP32,
+            chunk: usize::MAX,
+            round: RoundMode::NearestEven,
+            exact: false,
+        }
+    }
+
+    /// The paper's GEMM setting: FP8 operands/multiplies, FP16 chunked
+    /// accumulation with CL = 64, nearest rounding.
+    pub const fn fp8_paper() -> Self {
+        Self {
+            fmt_mult: FloatFormat::FP8,
+            fmt_acc: FloatFormat::FP16,
+            chunk: 64,
+            round: RoundMode::NearestEven,
+            exact: false,
+        }
+    }
+
+    /// Paper setting but bit-true per-add accumulation (tests/experiments).
+    pub const fn fp8_paper_exact() -> Self {
+        Self {
+            exact: true,
+            ..Self::fp8_paper()
+        }
+    }
+
+    /// The failing configuration of Fig. 1(b)/Fig. 5: FP16 accumulation
+    /// *without* chunking.
+    pub const fn fp8_nochunk() -> Self {
+        Self {
+            chunk: 1,
+            exact: true,
+            ..Self::fp8_paper()
+        }
+    }
+
+    pub fn with_chunk(self, chunk: usize) -> Self {
+        Self { chunk, ..self }
+    }
+
+    pub fn with_round(self, round: RoundMode) -> Self {
+        Self { round, ..self }
+    }
+
+    /// True when this configuration is plain f32 (fast native path).
+    #[inline]
+    pub fn is_fp32(&self) -> bool {
+        self.fmt_mult == FloatFormat::FP32 && self.fmt_acc == FloatFormat::FP32
+    }
+}
+
+/// Reduced-precision dot product of Fig. 3(a). `a` and `b` must already be
+/// representable in `prec.fmt_mult` (operand quantization happens once at
+/// the tensor level, as in the paper's emulation framework).
+pub fn dot<R: RoundBits>(prec: &GemmPrecision, a: &[f32], b: &[f32], rng: &mut R) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if prec.is_fp32() {
+        return dot_f32(a, b);
+    }
+    let chunk = prec.chunk.max(1).min(a.len().max(1));
+    if prec.exact {
+        dot_exact(prec, chunk, a, b, rng)
+    } else {
+        dot_fast(prec, chunk, a, b, rng)
+    }
+}
+
+/// Plain f32 dot product (baseline path).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    // Unrolled ×4 to let LLVM vectorize; accumulation order is fixed so
+    // results are deterministic run-to-run.
+    let mut s0 = 0f32;
+    let mut s1 = 0f32;
+    let mut s2 = 0f32;
+    let mut s3 = 0f32;
+    let n4 = a.len() & !3;
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < a.len() {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+fn dot_exact<R: RoundBits>(
+    prec: &GemmPrecision,
+    chunk: usize,
+    a: &[f32],
+    b: &[f32],
+    rng: &mut R,
+) -> f32 {
+    let mut inter = SoftAcc::new(prec.fmt_acc, prec.round);
+    let mut i = 0;
+    while i < a.len() {
+        let end = (i + chunk).min(a.len());
+        let mut intra = SoftAcc::new(prec.fmt_acc, prec.round);
+        for k in i..end {
+            intra.add(a[k] * b[k], rng);
+        }
+        inter.add(intra.value, rng);
+        i = end;
+    }
+    inter.value
+}
+
+fn dot_fast<R: RoundBits>(
+    prec: &GemmPrecision,
+    chunk: usize,
+    a: &[f32],
+    b: &[f32],
+    rng: &mut R,
+) -> f32 {
+    let mut inter = SoftAcc::new(prec.fmt_acc, prec.round);
+    let mut i = 0;
+    while i < a.len() {
+        let end = (i + chunk).min(a.len());
+        let partial = dot_f32(&a[i..end], &b[i..end]);
+        // One rounding into FP_acc per chunk, then the per-add inter-chunk
+        // accumulation that carries the swamping behaviour.
+        let bits = if prec.round.is_stochastic() { rng.next_bits() } else { 0 };
+        let partial = prec.fmt_acc.quantize_with_bits(partial, prec.round, bits);
+        inter.add(partial, rng);
+        i = end;
+    }
+    inter.value
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+    use crate::numerics::rounding::RoundMode;
+
+    fn fp8_vec(n: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..n)
+            .map(|_| FloatFormat::FP8.quantize(rng.uniform(lo, hi), RoundMode::NearestEven))
+            .collect()
+    }
+
+    #[test]
+    fn fp32_dot_matches_f64_closely() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a: Vec<f32> = (0..4096).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..4096).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let got = dot(&GemmPrecision::fp32(), &a, &b, &mut rng) as f64;
+        assert!((got - exact).abs() < 1e-2, "got={got} exact={exact}");
+    }
+
+    #[test]
+    fn exact_matches_fast_for_short_chunks() {
+        // For CL-length sums of same-sign moderate values the fast path's
+        // chunk-granularity rounding should land within a few FP16 ulps of
+        // the exact path.
+        let a = fp8_vec(2048, 2, 0.5, 1.5);
+        let b = fp8_vec(2048, 3, 0.5, 1.5);
+        let mut r1 = Xoshiro256::seed_from_u64(4);
+        let mut r2 = Xoshiro256::seed_from_u64(4);
+        let e = dot(&GemmPrecision::fp8_paper_exact(), &a, &b, &mut r1);
+        let f = dot(&GemmPrecision::fp8_paper(), &a, &b, &mut r2);
+        let rel = ((e - f) / e).abs();
+        assert!(rel < 0.01, "exact={e} fast={f} rel={rel}");
+    }
+
+    #[test]
+    fn nochunk_swamps_long_positive_dot() {
+        // Products with mean ~1 accumulated in FP16: CL=1 stalls, CL=64
+        // tracks the FP32 result — the dot-product version of Fig 3(b).
+        let a = fp8_vec(1 << 15, 5, 0.5, 1.5);
+        let b = fp8_vec(1 << 15, 6, 0.5, 1.5);
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let no_chunk = dot(&GemmPrecision::fp8_nochunk(), &a, &b, &mut rng) as f64;
+        let chunked = dot(&GemmPrecision::fp8_paper_exact(), &a, &b, &mut rng) as f64;
+        assert!(no_chunk < exact * 0.25, "no_chunk={no_chunk} exact={exact}");
+        assert!(
+            ((chunked - exact) / exact).abs() < 0.02,
+            "chunked={chunked} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn chunk_longer_than_vector_is_single_chunk() {
+        let a = fp8_vec(10, 8, -1.0, 1.0);
+        let b = fp8_vec(10, 9, -1.0, 1.0);
+        let mut r1 = Xoshiro256::seed_from_u64(10);
+        let mut r2 = Xoshiro256::seed_from_u64(10);
+        let p = GemmPrecision::fp8_paper_exact().with_chunk(1_000_000);
+        let q = GemmPrecision::fp8_paper_exact().with_chunk(10);
+        assert_eq!(dot(&p, &a, &b, &mut r1), dot(&q, &a, &b, &mut r2));
+    }
+
+    #[test]
+    fn empty_dot_is_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        assert_eq!(dot(&GemmPrecision::fp8_paper(), &[], &[], &mut rng), 0.0);
+    }
+
+    #[test]
+    fn stochastic_dot_tracks_exact_mean() {
+        let a = fp8_vec(8192, 12, 0.5, 1.5);
+        let b = fp8_vec(8192, 13, 0.5, 1.5);
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let prec = GemmPrecision::fp8_nochunk().with_round(RoundMode::Stochastic);
+        let mut rng = Xoshiro256::seed_from_u64(14);
+        let trials = 32;
+        let mean: f64 = (0..trials)
+            .map(|_| dot(&prec, &a, &b, &mut rng) as f64)
+            .sum::<f64>()
+            / trials as f64;
+        assert!(
+            ((mean - exact) / exact).abs() < 0.02,
+            "mean={mean} exact={exact}"
+        );
+    }
+}

@@ -1,0 +1,572 @@
+//! Parametric reduced-precision floating-point formats and the normative
+//! bit-exact quantizer.
+//!
+//! The paper (§2.2) defines two custom formats chosen after studying the
+//! data distributions of DNN training tensors:
+//!
+//! - **FP8  = (sign, exponent, mantissa) = (1, 5, 2)** — representations and
+//!   multiplications in all three GEMMs,
+//! - **FP16 = (1, 6, 9)** — GEMM accumulations and the weight-update AXPYs
+//!   (the 6-bit exponent buys the dynamic range the update path needs),
+//!
+//! alongside IEEE single (1, 8, 23) as the baseline. We implement a fully
+//! parametric `(ebits, mbits)` family with IEEE-like semantics — bias
+//! `2^(ebits−1) − 1`, gradual underflow (subnormals), exponent field
+//! all-ones reserved — so the format-exploration studies behind §2.2 can be
+//! re-run (see `examples/format_explorer.rs`).
+//!
+//! The quantizer is pure integer bit manipulation on the f32 pattern and is
+//! mirrored operation-for-operation by `python/compile/quant.py`; the
+//! cross-language tests assert bit equality on the deterministic modes.
+
+use super::rng::RoundBits;
+use super::rounding::{round_up, RoundMode};
+
+/// 2^e as f32 by bit construction; `e` must be in the normal range
+/// [-126, 127] (callers clamp).
+#[inline(always)]
+fn pow2_f32(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e));
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// A reduced-precision floating-point format `(1, ebits, mbits)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FloatFormat {
+    /// Exponent field width in bits (2..=8).
+    pub ebits: u32,
+    /// Explicit mantissa (fraction) width in bits (0..=23).
+    pub mbits: u32,
+}
+
+impl FloatFormat {
+    /// The paper's FP8: (1, 5, 2).
+    pub const FP8: FloatFormat = FloatFormat { ebits: 5, mbits: 2 };
+    /// The paper's FP16: (1, 6, 9).
+    pub const FP16: FloatFormat = FloatFormat { ebits: 6, mbits: 9 };
+    /// IEEE binary16 (1, 5, 10) — comparison format (MPT [16] uses this).
+    pub const IEEE_HALF: FloatFormat = FloatFormat { ebits: 5, mbits: 10 };
+    /// bfloat16 (1, 8, 7) — comparison format.
+    pub const BF16: FloatFormat = FloatFormat { ebits: 8, mbits: 7 };
+    /// IEEE binary32 (1, 8, 23); quantizing to it is the identity.
+    pub const FP32: FloatFormat = FloatFormat { ebits: 8, mbits: 23 };
+
+    /// Exponent bias: `2^(ebits−1) − 1`.
+    #[inline]
+    pub const fn bias(self) -> i32 {
+        (1 << (self.ebits - 1)) - 1
+    }
+
+    /// Largest unbiased exponent of a normal number (= bias, since the
+    /// all-ones field is reserved for Inf/NaN).
+    #[inline]
+    pub const fn emax(self) -> i32 {
+        self.bias()
+    }
+
+    /// Smallest unbiased exponent of a normal number: `1 − bias`.
+    #[inline]
+    pub const fn emin(self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest finite value: `(2 − 2^−mbits) · 2^emax`. Constructed
+    /// directly from bits (exponent field `emax + 127`, mantissa field all
+    /// ones in the top `mbits`) — this sits on the quantizer hot path, so
+    /// no transcendental calls.
+    #[inline(always)]
+    pub fn max_normal(self) -> f32 {
+        let e = (self.emax() + 127) as u32;
+        let m = ((1u32 << self.mbits) - 1) << (23 - self.mbits);
+        f32::from_bits((e << 23) | m)
+    }
+
+    /// Smallest positive normal value: `2^emin`.
+    #[inline]
+    pub fn min_normal(self) -> f32 {
+        (2.0f64).powi(self.emin()) as f32
+    }
+
+    /// Smallest positive subnormal value: `2^(emin − mbits)`.
+    #[inline]
+    pub fn min_subnormal(self) -> f32 {
+        (2.0f64).powi(self.emin() - self.mbits as i32) as f32
+    }
+
+    /// Total storage width in bits (1 + ebits + mbits).
+    #[inline]
+    pub const fn width(self) -> u32 {
+        1 + self.ebits + self.mbits
+    }
+
+    /// The swamping threshold of §2.3: once two addends' magnitudes differ
+    /// by ≥ `2^(mbits+1)`, the smaller is entirely truncated by alignment.
+    #[inline]
+    pub fn swamping_ratio(self) -> f64 {
+        (2.0f64).powi(self.mbits as i32 + 1)
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            FloatFormat::FP8 => "fp8".into(),
+            FloatFormat::FP16 => "fp16".into(),
+            FloatFormat::FP32 => "fp32".into(),
+            FloatFormat::IEEE_HALF => "ieee_half".into(),
+            FloatFormat::BF16 => "bf16".into(),
+            f => format!("f(1,{},{})", f.ebits, f.mbits),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FloatFormat> {
+        Some(match s {
+            "fp8" => FloatFormat::FP8,
+            "fp16" => FloatFormat::FP16,
+            "fp32" => FloatFormat::FP32,
+            "ieee_half" | "half" => FloatFormat::IEEE_HALF,
+            "bf16" | "bfloat16" => FloatFormat::BF16,
+            _ => {
+                // "f(1,e,m)" form
+                let body = s.strip_prefix("f(1,")?.strip_suffix(')')?;
+                let (e, m) = body.split_once(',')?;
+                FloatFormat {
+                    ebits: e.trim().parse().ok()?,
+                    mbits: m.trim().parse().ok()?,
+                }
+            }
+        })
+    }
+
+    /// Quantize `x` to this format, returning the representable value as an
+    /// f32. This is the normative algorithm of DESIGN.md §3:
+    ///
+    /// 1. NaN passes through; ±Inf **saturates** to ±max_normal (training
+    ///    quantizers saturate rather than produce non-finite values).
+    /// 2. f32-subnormal inputs (|x| < 2^−126) flush to signed zero — they
+    ///    are far below every supported format's min subnormal.
+    /// 3. The discarded-bit count is `23 − mbits`, increased by
+    ///    `emin − E` in the target's subnormal range, capped at 26
+    ///    (beyond that the value deterministically flushes to zero).
+    /// 4. The kept/discarded split is rounded per [`round_up`], the value
+    ///    reconstructed exactly, and the magnitude saturated to max_normal.
+    ///
+    /// `rbits` supplies the 32 uniform bits consumed by stochastic rounding
+    /// (ignored by the deterministic modes, and **not drawn** for them —
+    /// callers pass `0`).
+    #[inline]
+    pub fn quantize_with_bits(self, x: f32, mode: RoundMode, rbits: u32) -> f32 {
+        if self.mbits >= 23 && self.ebits >= 8 {
+            return x; // fp32 (or wider): identity
+        }
+        // Fast path (the emulated-GEMM hot loop): nearest-even on a value
+        // in the target's *normal* range reduces to the classic
+        // add-half-ulp bit trick — mantissa rounding carries into the
+        // exponent field for free; only saturation needs a check. All
+        // special cases (NaN/Inf, subnormal range, other modes) fall
+        // through to the general path below, which is bit-identical.
+        if matches!(mode, RoundMode::NearestEven) {
+            let u = x.to_bits();
+            let e_field = (u >> 23) & 0xFF;
+            if e_field != 0 && e_field != 0xFF && (e_field as i32 - 127) >= self.emin() {
+                let shift = 23 - self.mbits;
+                let round = ((u >> shift) & 1) + ((1u32 << (shift - 1)) - 1);
+                let q = ((u & 0x7FFF_FFFF) + round) & !((1u32 << shift) - 1);
+                let m = self.max_normal().to_bits();
+                let q = if q > m { m } else { q };
+                return f32::from_bits((u & 0x8000_0000) | q);
+            }
+        }
+        let u = x.to_bits();
+        let sign = u & 0x8000_0000;
+        let e_field = (u >> 23) & 0xFF;
+        let m_field = u & 0x007F_FFFF;
+
+        if e_field == 0xFF {
+            if m_field != 0 {
+                return x; // NaN propagates
+            }
+            // ±Inf saturates.
+            let m = self.max_normal();
+            return if sign != 0 { -m } else { m };
+        }
+        if e_field == 0 {
+            // f32 subnormal: < 2^-126, below min_subnormal of all supported
+            // targets — flush to signed zero.
+            return f32::from_bits(sign);
+        }
+
+        let e = e_field as i32 - 127; // unbiased exponent
+        let emin = self.emin();
+        let mut shift = 23i32 - self.mbits as i32;
+        if e < emin {
+            shift += emin - e; // gradual underflow: fewer effective bits
+        }
+        if shift <= 0 {
+            // Mantissa fits entirely; only overflow saturation can apply.
+            return self.saturate(x);
+        }
+        if shift > 26 {
+            // Deep below min_subnormal: deterministic flush (see DESIGN §3).
+            return f32::from_bits(sign);
+        }
+        let shift = shift as u32;
+        let sig = (1u32 << 23) | m_field; // 24-bit true significand
+        let mut keep = sig >> shift;
+        let rem = sig & ((1u32 << shift) - 1);
+        if rem != 0 && round_up(mode, keep, rem, shift, rbits) {
+            keep += 1;
+        }
+        if keep == 0 {
+            return f32::from_bits(sign);
+        }
+        // Exact reconstruction: keep · 2^(e − (23 − shift)). keep ≤ 2^24 is
+        // exactly representable in f32 and the power-of-two scale is built
+        // from bits (split into two factors when below the f32 normal
+        // floor — only reachable for 8-bit-exponent targets); each multiply
+        // is exact, so this matches the old f64-powi path bit-for-bit at a
+        // fraction of the cost.
+        let e2 = e - (23 - shift as i32);
+        let e_hi = e2.clamp(-126, 127);
+        let e_lo = e2 - e_hi; // 0 unless deep-subnormal target
+        let val = keep as f32 * pow2_f32(e_hi) * pow2_f32(e_lo);
+        // Saturate (carry may have pushed past max_normal).
+        let m = self.max_normal();
+        let val = if val > m { m } else { val };
+        f32::from_bits(sign | val.to_bits())
+    }
+
+    /// Quantize with a deterministic mode (panics in debug if `Stochastic`
+    /// is passed — that mode needs a bit source).
+    #[inline]
+    pub fn quantize(self, x: f32, mode: RoundMode) -> f32 {
+        debug_assert!(
+            !mode.is_stochastic(),
+            "stochastic rounding needs a bit source; use quantize_rng"
+        );
+        self.quantize_with_bits(x, mode, 0)
+    }
+
+    /// Quantize with stochastic (or any) rounding, drawing bits from `rng`
+    /// only when the mode requires them.
+    #[inline]
+    pub fn quantize_rng<R: RoundBits>(self, x: f32, mode: RoundMode, rng: &mut R) -> f32 {
+        let bits = if mode.is_stochastic() { rng.next_bits() } else { 0 };
+        self.quantize_with_bits(x, mode, bits)
+    }
+
+    /// Clamp magnitude to max_normal, preserving sign and zero.
+    #[inline]
+    pub fn saturate(self, x: f32) -> f32 {
+        let m = self.max_normal();
+        x.clamp(-m, m)
+    }
+
+    /// Is `x` exactly representable in this format?
+    pub fn is_representable(self, x: f32) -> bool {
+        x.is_nan() || self.quantize(x, RoundMode::Truncate) == x
+    }
+
+    /// Quantize a slice in place (deterministic modes).
+    pub fn quantize_slice(self, xs: &mut [f32], mode: RoundMode) {
+        for v in xs {
+            *v = self.quantize(*v, mode);
+        }
+    }
+
+    /// Quantize a slice in place, drawing stochastic bits from `rng`.
+    pub fn quantize_slice_rng<R: RoundBits>(self, xs: &mut [f32], mode: RoundMode, rng: &mut R) {
+        if mode.is_stochastic() {
+            for v in xs {
+                *v = self.quantize_with_bits(*v, mode, rng.next_bits());
+            }
+        } else {
+            self.quantize_slice(xs, mode);
+        }
+    }
+
+    // ---- storage encoding --------------------------------------------------
+
+    /// Encode an (already representable) value into the format's bit
+    /// pattern, `width()` bits right-aligned in a u32.
+    /// Values are quantized (truncation is exact for representable inputs)
+    /// before packing, so arbitrary f32s round-trip through
+    /// `decode(encode(q(x))) == q(x)`.
+    pub fn encode(self, x: f32) -> u32 {
+        let x = self.quantize(
+            if x.is_nan() { x } else { self.saturate(x) },
+            RoundMode::NearestEven,
+        );
+        let sign = if x.is_sign_negative() { 1u32 } else { 0 };
+        let sbit = sign << (self.ebits + self.mbits);
+        if x.is_nan() {
+            // canonical NaN: exponent all ones, mantissa MSB set
+            let e_all = ((1u32 << self.ebits) - 1) << self.mbits;
+            let m_msb = if self.mbits > 0 { 1u32 << (self.mbits - 1) } else { 0 };
+            return sbit | e_all | m_msb;
+        }
+        let a = x.abs();
+        if a == 0.0 {
+            return sbit;
+        }
+        let u = a.to_bits();
+        let e = ((u >> 23) & 0xFF) as i32 - 127;
+        let m23 = u & 0x007F_FFFF;
+        if e < self.emin() {
+            // subnormal in target: value = m_t · 2^(emin − mbits)
+            let sig = (1u32 << 23) | m23; // 1.m23 · 2^e
+            let shift = (23 - self.mbits as i32) + (self.emin() - e);
+            debug_assert!(shift > 0 && shift <= 26 + 23);
+            let m_t = if shift >= 32 { 0 } else { sig >> shift };
+            sbit | m_t
+        } else {
+            let e_field = (e + self.bias()) as u32;
+            debug_assert!(e_field >= 1 && e_field < (1 << self.ebits) - 1);
+            let m_t = m23 >> (23 - self.mbits);
+            sbit | (e_field << self.mbits) | m_t
+        }
+    }
+
+    /// Decode a bit pattern produced by [`encode`] back to f32.
+    pub fn decode(self, bits: u32) -> f32 {
+        let mmask = (1u32 << self.mbits) - 1;
+        let emask = (1u32 << self.ebits) - 1;
+        let m = bits & mmask;
+        let e = (bits >> self.mbits) & emask;
+        let s = (bits >> (self.ebits + self.mbits)) & 1;
+        let sign = if s == 1 { -1.0f64 } else { 1.0 };
+        let v = if e == 0 {
+            // subnormal: m · 2^(emin − mbits)
+            sign * m as f64 * (2.0f64).powi(self.emin() - self.mbits as i32)
+        } else if e == emask {
+            if m != 0 {
+                return f32::NAN;
+            }
+            sign * f64::INFINITY
+        } else {
+            let frac = 1.0 + m as f64 / (1u64 << self.mbits) as f64;
+            sign * frac * (2.0f64).powi(e as i32 - self.bias())
+        };
+        v as f32
+    }
+
+    /// Enumerate every finite non-negative representable value in ascending
+    /// order (used by tests and the format explorer; cheap for ≤16-bit
+    /// formats).
+    pub fn enumerate_nonneg(self) -> Vec<f32> {
+        let mut out = Vec::new();
+        let emask = (1u32 << self.ebits) - 1;
+        for e in 0..emask {
+            for m in 0..(1u32 << self.mbits) {
+                out.push(self.decode((e << self.mbits) | m));
+            }
+        }
+        out
+    }
+}
+
+impl std::fmt::Display for FloatFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+
+    #[test]
+    fn paper_format_constants() {
+        // FP8 (1,5,2): bias 15, max 57344, min normal 2^-14, min sub 2^-16.
+        let f8 = FloatFormat::FP8;
+        assert_eq!(f8.bias(), 15);
+        assert_eq!(f8.emax(), 15);
+        assert_eq!(f8.emin(), -14);
+        assert_eq!(f8.max_normal(), 57344.0);
+        assert_eq!(f8.min_normal(), 2f32.powi(-14));
+        assert_eq!(f8.min_subnormal(), 2f32.powi(-16));
+        assert_eq!(f8.width(), 8);
+        // FP16 (1,6,9): bias 31.
+        let f16 = FloatFormat::FP16;
+        assert_eq!(f16.bias(), 31);
+        assert_eq!(f16.emin(), -30);
+        assert_eq!(f16.width(), 16);
+        assert!((f16.max_normal() as f64 - (2.0 - 2f64.powi(-9)) * 2f64.powi(31)).abs() < 1.0);
+        // Swamping threshold of §2.3: 2^(mantissa+1) = 2^10 for FP16.
+        assert_eq!(f16.swamping_ratio(), 1024.0);
+    }
+
+    #[test]
+    fn ieee_half_matches_reference_values() {
+        let h = FloatFormat::IEEE_HALF;
+        assert_eq!(h.max_normal(), 65504.0);
+        assert_eq!(h.min_normal(), 2f32.powi(-14));
+        assert_eq!(h.min_subnormal(), 2f32.powi(-24));
+    }
+
+    #[test]
+    fn quantize_exact_values_unchanged() {
+        let f8 = FloatFormat::FP8;
+        for v in [0.0f32, 1.0, -1.0, 1.5, 1.75, 0.25, 57344.0, -57344.0] {
+            assert_eq!(f8.quantize(v, RoundMode::NearestEven), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn quantize_nearest_even_behaviour() {
+        let f8 = FloatFormat::FP8; // representable steps near 1.0: 0.25
+        // 1.125 is exactly between 1.0 and 1.25 → ties-to-even picks 1.0.
+        assert_eq!(f8.quantize(1.125, RoundMode::NearestEven), 1.0);
+        // 1.375 between 1.25 and 1.5 → even mantissa is 1.5 (m=10b).
+        assert_eq!(f8.quantize(1.375, RoundMode::NearestEven), 1.5);
+        assert_eq!(f8.quantize(1.2, RoundMode::NearestEven), 1.25);
+        assert_eq!(f8.quantize(-1.2, RoundMode::NearestEven), -1.25);
+    }
+
+    #[test]
+    fn quantize_truncate_toward_zero() {
+        let f8 = FloatFormat::FP8;
+        assert_eq!(f8.quantize(1.249, RoundMode::Truncate), 1.0);
+        assert_eq!(f8.quantize(-1.249, RoundMode::Truncate), -1.0);
+        assert_eq!(f8.quantize(1.9999, RoundMode::Truncate), 1.75);
+    }
+
+    #[test]
+    fn saturation_and_specials() {
+        let f8 = FloatFormat::FP8;
+        assert_eq!(f8.quantize(1e9, RoundMode::NearestEven), 57344.0);
+        assert_eq!(f8.quantize(-1e9, RoundMode::NearestEven), -57344.0);
+        assert_eq!(f8.quantize(f32::INFINITY, RoundMode::NearestEven), 57344.0);
+        assert_eq!(
+            f8.quantize(f32::NEG_INFINITY, RoundMode::NearestEven),
+            -57344.0
+        );
+        assert!(f8.quantize(f32::NAN, RoundMode::NearestEven).is_nan());
+        // Signed zero preserved.
+        assert!(f8.quantize(-0.0, RoundMode::NearestEven).is_sign_negative());
+    }
+
+    #[test]
+    fn subnormal_handling() {
+        let f8 = FloatFormat::FP8;
+        let min_sub = f8.min_subnormal(); // 2^-16
+        assert_eq!(f8.quantize(min_sub, RoundMode::NearestEven), min_sub);
+        assert_eq!(f8.quantize(min_sub * 3.0, RoundMode::NearestEven), min_sub * 3.0);
+        // Half of min_subnormal ties to even (0).
+        assert_eq!(f8.quantize(min_sub * 0.5, RoundMode::NearestEven), 0.0);
+        assert_eq!(f8.quantize(min_sub * 0.75, RoundMode::NearestEven), min_sub);
+        // Below half flushes down.
+        assert_eq!(f8.quantize(min_sub * 0.49, RoundMode::NearestEven), 0.0);
+        // f32 subnormals flush.
+        assert_eq!(f8.quantize(1e-40, RoundMode::NearestEven), 0.0);
+    }
+
+    #[test]
+    fn quantize_idempotent_on_grid() {
+        // For every representable FP8 value, quantizing again is identity.
+        let f8 = FloatFormat::FP8;
+        for v in f8.enumerate_nonneg() {
+            if v.is_finite() {
+                assert_eq!(f8.quantize(v, RoundMode::NearestEven), v, "v={v}");
+                assert_eq!(f8.quantize(-v, RoundMode::NearestEven), -v);
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_fp8_all() {
+        let f8 = FloatFormat::FP8;
+        for bits in 0u32..=0xFF {
+            let v = f8.decode(bits);
+            if v.is_nan() {
+                assert!(f8.decode(f8.encode(v)).is_nan());
+            } else if v.is_infinite() {
+                // encode saturates infinities
+                assert_eq!(f8.decode(f8.encode(v)), f8.max_normal().copysign(v));
+            } else {
+                let round = f8.decode(f8.encode(v));
+                assert_eq!(round.to_bits(), v.to_bits(), "bits={bits:#x} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_fp16_sampled() {
+        let f16 = FloatFormat::FP16;
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..20_000 {
+            let x = (rng.next_f32() - 0.5) * 2f32.powi((rng.below(60) as i32) - 30);
+            let q = f16.quantize(x, RoundMode::NearestEven);
+            let rt = f16.decode(f16.encode(q));
+            assert_eq!(rt.to_bits(), q.to_bits(), "x={x} q={q} rt={rt}");
+        }
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        // E[Q_sr(x)] == x for x on a half-ulp (FP8 near 1: grid step 0.25).
+        let f8 = FloatFormat::FP8;
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for &(x, lo, hi) in &[(1.1f32, 1.0f32, 1.25f32), (1.6, 1.5, 1.75), (3.3, 3.0, 3.5)] {
+            let n = 100_000;
+            let mean: f64 = (0..n)
+                .map(|_| f8.quantize_rng(x, RoundMode::Stochastic, &mut rng) as f64)
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (mean - x as f64).abs() < 0.002,
+                "x={x} mean={mean}"
+            );
+            // And every sample is one of the two neighbours.
+            for _ in 0..1000 {
+                let q = f8.quantize_rng(x, RoundMode::Stochastic, &mut rng);
+                assert!(q == lo || q == hi, "q={q}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_monotone_nearest() {
+        // Nearest rounding is monotone non-decreasing.
+        let f8 = FloatFormat::FP8;
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for _ in 0..20_000 {
+            let a = rng.uniform(-100.0, 100.0);
+            let b = rng.uniform(-100.0, 100.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(
+                f8.quantize(lo, RoundMode::NearestEven) <= f8.quantize(hi, RoundMode::NearestEven)
+            );
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(FloatFormat::parse("fp8"), Some(FloatFormat::FP8));
+        assert_eq!(FloatFormat::parse("fp16"), Some(FloatFormat::FP16));
+        assert_eq!(
+            FloatFormat::parse("f(1,4,3)"),
+            Some(FloatFormat { ebits: 4, mbits: 3 })
+        );
+        assert_eq!(FloatFormat::parse("nope"), None);
+    }
+
+    #[test]
+    fn fp32_quantize_is_identity() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for _ in 0..1000 {
+            let x = (rng.next_f32() - 0.5) * 1e20;
+            assert_eq!(FloatFormat::FP32.quantize(x, RoundMode::NearestEven), x);
+        }
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        // 5-bit exponent (31 non-special fields... 0..=30) × 4 mantissas.
+        let vals = FloatFormat::FP8.enumerate_nonneg();
+        assert_eq!(vals.len(), 31 * 4);
+        // strictly increasing
+        for w in vals.windows(2) {
+            assert!(w[0] < w[1], "{} !< {}", w[0], w[1]);
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Emulated reduced-precision GEMM — the computation behind all three
+//! GEMMs of Fig. 2(a) (Forward, Backward, Gradient; convolutions are
+//! lowered to GEMM per §2.2).
+//!
+//! `C[M,N] = A[M,K] · B[K,N]`, row-major. Two execution paths:
+//!
+//! - **f32 path** (`GemmPrecision::fp32()`): blocked, multi-threaded native
+//!   f32 — the FP32 baseline of every experiment.
+//! - **emulated path**: operands are assumed pre-quantized to `fmt_mult`
+//!   (done once per tensor by the quantization layer), each output element
+//!   is the chunk-accumulated dot product of Fig. 3(a) in `fmt_acc`.
+//!
+//! Determinism under parallelism: stochastic rounding derives one RNG
+//! stream per output row from the caller's seed, so results are identical
+//! regardless of thread count or scheduling.
+
+use super::dot::{dot, dot_f32, GemmPrecision};
+use super::rng::{SplitMix64, Xoshiro256};
+
+/// How many worker threads GEMM and the training engine use. Overridable
+/// via the `FP8TRAIN_THREADS` environment variable (benches pin it to 1 for
+/// stable measurements).
+pub fn num_threads() -> usize {
+    static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+        std::env::var("FP8TRAIN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    });
+    *N
+}
+
+/// `C = A(m×k) · B(k×n)` with the given precision. `seed` feeds stochastic
+/// rounding (ignored by deterministic modes).
+pub fn gemm(
+    prec: &GemmPrecision,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    let mut c = vec![0f32; m * n];
+    gemm_into(prec, a, b, &mut c, m, k, n, seed);
+    c
+}
+
+/// In-place variant reusing the output buffer (hot-path allocation-free).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_into(
+    prec: &GemmPrecision,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) {
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    if prec.is_fp32() {
+        gemm_f32(a, b, c, m, k, n);
+    } else {
+        gemm_emulated(prec, a, b, c, m, k, n, seed);
+    }
+}
+
+/// Transpose a row-major `r×s` matrix into `s×r` (scratch helper shared by
+/// the tensor layer; B is transposed once per GEMM so every dot product
+/// walks contiguous memory).
+pub fn transpose(src: &[f32], r: usize, s: usize) -> Vec<f32> {
+    let mut dst = vec![0f32; r * s];
+    transpose_into(src, &mut dst, r, s);
+    dst
+}
+
+pub fn transpose_into(src: &[f32], dst: &mut [f32], r: usize, s: usize) {
+    assert_eq!(src.len(), r * s);
+    assert_eq!(dst.len(), r * s);
+    // Blocked to stay cache-friendly for large matrices.
+    const B: usize = 32;
+    for i0 in (0..r).step_by(B) {
+        for j0 in (0..s).step_by(B) {
+            for i in i0..(i0 + B).min(r) {
+                for j in j0..(j0 + B).min(s) {
+                    dst[j * r + i] = src[i * s + j];
+                }
+            }
+        }
+    }
+}
+
+/// Split `[0, m)` into per-thread ranges and run `f(range)` on scoped
+/// threads. `f` receives disjoint mutable row-slices of `c`.
+fn parallel_rows<F>(c: &mut [f32], m: usize, n: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync, // (row index, row slice)
+{
+    let threads = num_threads().min(m.max(1));
+    if threads <= 1 || m * n < 16 * 1024 {
+        for (i, row) in c.chunks_mut(n).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, block) in c.chunks_mut(rows_per * n).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = t * rows_per;
+                for (i, row) in block.chunks_mut(n).enumerate() {
+                    f(base + i, row);
+                }
+            });
+        }
+    });
+}
+
+fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    // Transpose-B + unrolled dot: simple, deterministic, ~2-4 GF/s/core —
+    // adequate as the emulation baseline (see EXPERIMENTS.md §Perf).
+    let bt = transpose(b, k, n);
+    let bt = &bt;
+    parallel_rows(c, m, n, move |i, row| {
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, out) in row.iter_mut().enumerate() {
+            *out = dot_f32(arow, &bt[j * k..(j + 1) * k]);
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_emulated(
+    prec: &GemmPrecision,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) {
+    let bt = transpose(b, k, n);
+    let bt = &bt;
+    let prec = *prec;
+    parallel_rows(c, m, n, move |i, row| {
+        // Per-row deterministic stream: schedule-independent results.
+        let mut sm = SplitMix64::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Xoshiro256::seed_from_u64(sm.next_u64());
+        let arow = &a[i * k..(i + 1) * k];
+        for (j, out) in row.iter_mut().enumerate() {
+            *out = dot(&prec, arow, &bt[j * k..(j + 1) * k], &mut rng);
+        }
+    });
+}
+
+/// Normalized L2 distance `‖x − y‖₂ / ‖y‖₂` — the Fig. 6 error metric
+/// ("normalized L2-distance between FP8 and FP32 GEMMs").
+pub fn normalized_l2_distance(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for (&a, &b) in x.iter().zip(y) {
+        num += (a as f64 - b as f64).powi(2);
+        den += (b as f64).powi(2);
+    }
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::format::FloatFormat;
+    use crate::numerics::rounding::RoundMode;
+
+    fn rand_mat(r: usize, s: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        (0..r * s).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    fn gemm_f64_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as f64;
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j] as f64;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let x = rand_mat(13, 29, 1, -1.0, 1.0);
+        let xt = transpose(&x, 13, 29);
+        let xtt = transpose(&xt, 29, 13);
+        assert_eq!(x, xtt);
+        assert_eq!(xt[3 * 13 + 7], x[7 * 29 + 3]);
+    }
+
+    #[test]
+    fn f32_gemm_close_to_f64() {
+        let (m, k, n) = (17, 64, 23);
+        let a = rand_mat(m, k, 2, -1.0, 1.0);
+        let b = rand_mat(k, n, 3, -1.0, 1.0);
+        let c = gemm(&GemmPrecision::fp32(), &a, &b, m, k, n, 0);
+        let r = gemm_f64_ref(&a, &b, m, k, n);
+        for (got, want) in c.iter().zip(&r) {
+            assert!((*got as f64 - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_gemm() {
+        let n = 8;
+        let mut eye = vec![0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        // FP8-quantized input times identity: every dot has one nonzero
+        // product, so even the emulated path returns the input exactly
+        // (values representable in FP16 after FP8 quantization).
+        let x: Vec<f32> = rand_mat(n, n, 4, -2.0, 2.0)
+            .iter()
+            .map(|&v| FloatFormat::FP8.quantize(v, RoundMode::NearestEven))
+            .collect();
+        let c = gemm(&GemmPrecision::fp8_paper_exact(), &x, &eye, n, n, n, 0);
+        assert_eq!(c, x);
+    }
+
+    #[test]
+    fn emulated_gemm_deterministic_across_thread_counts() {
+        let (m, k, n) = (32, 256, 16);
+        let q = |v: &mut Vec<f32>| {
+            FloatFormat::FP8.quantize_slice(v, RoundMode::NearestEven);
+        };
+        let mut a = rand_mat(m, k, 5, -1.0, 1.0);
+        let mut b = rand_mat(k, n, 6, -1.0, 1.0);
+        q(&mut a);
+        q(&mut b);
+        let prec = GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic);
+        let c1 = gemm(&prec, &a, &b, m, k, n, 99);
+        let c2 = gemm(&prec, &a, &b, m, k, n, 99);
+        assert_eq!(c1, c2);
+        let c3 = gemm(&prec, &a, &b, m, k, n, 100);
+        assert_ne!(c1, c3); // different seed, different SR draws
+    }
+
+    #[test]
+    fn chunked_emulated_gemm_tracks_fp32_on_positive_data() {
+        // Non-zero-mean operands with K = 8192: the regime where FP16
+        // accumulation without chunking collapses.
+        let (m, k, n) = (4, 8192, 4);
+        let mut a = rand_mat(m, k, 7, 0.5, 1.5);
+        let mut b = rand_mat(k, n, 8, 0.5, 1.5);
+        FloatFormat::FP8.quantize_slice(&mut a, RoundMode::NearestEven);
+        FloatFormat::FP8.quantize_slice(&mut b, RoundMode::NearestEven);
+        let exact = gemm_f64_ref(&a, &b, m, k, n);
+        let chunked = gemm(&GemmPrecision::fp8_paper_exact(), &a, &b, m, k, n, 0);
+        let nochunk = gemm(&GemmPrecision::fp8_nochunk(), &a, &b, m, k, n, 0);
+        let chunked64: Vec<f64> = chunked.iter().map(|&v| v as f64).collect();
+        let nochunk64: Vec<f64> = nochunk.iter().map(|&v| v as f64).collect();
+        let exact32: Vec<f32> = exact.iter().map(|&v| v as f32).collect();
+        let d_chunk = normalized_l2_distance(
+            &chunked64.iter().map(|&v| v as f32).collect::<Vec<_>>(),
+            &exact32,
+        );
+        let d_nochunk = normalized_l2_distance(
+            &nochunk64.iter().map(|&v| v as f32).collect::<Vec<_>>(),
+            &exact32,
+        );
+        assert!(d_chunk < 0.01, "chunked dist {d_chunk}");
+        assert!(d_nochunk > 0.5, "nochunk dist {d_nochunk}");
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let prec = GemmPrecision::fp8_paper();
+        assert_eq!(gemm(&prec, &[], &[], 0, 0, 0, 0), Vec::<f32>::new());
+        assert_eq!(gemm(&prec, &[], &[], 0, 4, 0, 0), Vec::<f32>::new());
+        // k = 0 → zero matrix
+        assert_eq!(gemm(&prec, &[], &[], 2, 0, 3, 0), vec![0f32; 6]);
+    }
+
+    #[test]
+    fn normalized_l2_basic() {
+        assert_eq!(normalized_l2_distance(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert!((normalized_l2_distance(&[2.0], &[1.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(normalized_l2_distance(&[0.0], &[0.0]), 0.0);
+    }
+}

@@ -1,0 +1,34 @@
+//! The bit-exact reduced-precision numerics substrate.
+//!
+//! Everything the paper's hardware does to a number lives here:
+//!
+//! | paper concept | module |
+//! |---|---|
+//! | FP8 `(1,5,2)`, FP16 `(1,6,9)` formats (§2.2) | [`format`] |
+//! | nearest / stochastic rounding, Eq. (1) | [`rounding`] |
+//! | FP8 multiply, FP16 add with swamping (§2.3) | [`softfloat`] |
+//! | chunk-based accumulation, Fig. 3 | [`accumulate`], [`dot`] |
+//! | the three GEMMs of Fig. 2(a) | [`gemm`] |
+//! | the three weight-update AXPYs of Fig. 2(b) | [`axpy`] |
+//! | dynamic-range / SQNR studies behind §2.2 | [`stats`] |
+//! | deterministic uniform bits for SR | [`rng`] |
+//!
+//! The quantizer semantics are normative (DESIGN.md §3) and mirrored
+//! bit-for-bit by `python/compile/quant.py`; `rust/tests/cross_validation.rs`
+//! and `python/tests/test_quant.py` enforce the equivalence.
+
+pub mod accumulate;
+pub mod axpy;
+pub mod dot;
+pub mod format;
+pub mod gemm;
+pub mod rng;
+pub mod rounding;
+pub mod softfloat;
+pub mod stats;
+
+pub use axpy::UpdatePrecision;
+pub use dot::GemmPrecision;
+pub use format::FloatFormat;
+pub use rng::Xoshiro256;
+pub use rounding::RoundMode;

@@ -1,0 +1,237 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment has no `rand` crate, and the paper's
+//! floating-point stochastic rounding (Eq. 1) needs a fast, reproducible
+//! uniform bit source. We implement:
+//!
+//! - [`SplitMix64`] — seed expander (Steele et al., 2014), used to
+//!   initialize other generators and to derive per-stream seeds.
+//! - [`Xoshiro256`] — xoshiro256++ (Blackman & Vigna, 2019), the main
+//!   generator: 256-bit state, excellent statistical quality, ~1 ns/word.
+//!
+//! All experiment harnesses seed explicitly so every table/figure in
+//! EXPERIMENTS.md is reproducible bit-for-bit.
+
+/// SplitMix64: tiny 64-bit generator used for seeding.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the crate's workhorse generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 so that low-entropy seeds (0, 1, 2, ...) still
+    /// produce well-mixed states.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent stream (used to give each worker thread or
+    /// tensor its own generator without overlapping sequences).
+    pub fn split(&mut self) -> Self {
+        Self::seed_from_u64(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform float in [0, 1) with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform float in [0, 1) with 53 bits of entropy.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box–Muller (cached second value omitted for
+    /// simplicity; this is init/data-gen code, not the hot path).
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 > 1e-12 {
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Uniform integer in [0, n) (Lemire's multiply-shift; slight bias
+    /// < 2^-32 is acceptable for data generation — stochastic rounding
+    /// never uses this, it uses power-of-two masks).
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// The uniform-bit source consumed by stochastic rounding: exactly 32 bits
+/// per rounding decision, matching the JAX implementation (which draws one
+/// `uint32` of threefry bits per element). Implemented by [`Xoshiro256`]
+/// and by [`CountingBits`] (tests).
+pub trait RoundBits {
+    fn next_bits(&mut self) -> u32;
+}
+
+impl RoundBits for Xoshiro256 {
+    #[inline]
+    fn next_bits(&mut self) -> u32 {
+        self.next_u32()
+    }
+}
+
+/// Deterministic bit source for tests: returns a fixed sequence.
+pub struct CountingBits {
+    pub seq: Vec<u32>,
+    pub idx: usize,
+}
+
+impl CountingBits {
+    pub fn new(seq: Vec<u32>) -> Self {
+        Self { seq, idx: 0 }
+    }
+}
+
+impl RoundBits for CountingBits {
+    fn next_bits(&mut self) -> u32 {
+        let v = self.seq[self.idx % self.seq.len()];
+        self.idx += 1;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values for seed 0 (from the published splitmix64.c).
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct_streams() {
+        let mut a = Xoshiro256::seed_from_u64(42);
+        let mut b = Xoshiro256::seed_from_u64(42);
+        let seq_a: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let seq_b: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(seq_a, seq_b);
+        let mut c = Xoshiro256::seed_from_u64(43);
+        assert_ne!(seq_a, (0..8).map(|_| c.next_u64()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut a = Xoshiro256::seed_from_u64(7);
+        let mut b = a.split();
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert!(xs.iter().zip(&ys).filter(|(x, y)| x == y).count() < 2);
+    }
+
+    #[test]
+    fn next_f32_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_roughly_centered() {
+        let mut r = Xoshiro256::seed_from_u64(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.uniform(0.0, 2.0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn below_bounds_and_shuffle_permutes() {
+        let mut r = Xoshiro256::seed_from_u64(4);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+}

@@ -1,0 +1,157 @@
+//! Rounding modes for reduced-precision quantization.
+//!
+//! The paper (§2.2–2.3) studies two modes post FP16 addition — *nearest*
+//! and *stochastic* — and defines floating-point stochastic rounding in
+//! Eq. (1): for an intermediate significand `m` kept to `k` bits with ulp
+//! `ε = 2^-k`,
+//!
+//! ```text
+//! Round(x) = s·2^e·(1 + ⌊m⌋ + ε)  with prob (m − ⌊m⌋)/ε
+//!            s·2^e·(1 + ⌊m⌋)      otherwise
+//! ```
+//!
+//! i.e. round up with probability proportional to the discarded fraction —
+//! *of the aligned floating-point significand*, so the expected rounding
+//! error is zero and its magnitude scales with `2^e` (this is what makes it
+//! "floating-point" stochastic rounding, distinct from the fixed-point
+//! variant of Gupta et al. [6]).
+//!
+//! We additionally provide `Truncate` (round-toward-zero) and
+//! `NearestAway` as diagnostics for the accumulation studies.
+
+/// How the discarded low-order significand bits are treated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RoundMode {
+    /// Round-to-nearest, ties to even — IEEE default, the paper's "nearest".
+    NearestEven,
+    /// Round-to-nearest, ties away from zero.
+    NearestAway,
+    /// Truncate toward zero (drop the bits).
+    Truncate,
+    /// Floating-point stochastic rounding, paper Eq. (1).
+    Stochastic,
+}
+
+impl RoundMode {
+    /// Short stable identifier used in config files / CLI / CSV headers.
+    pub fn id(self) -> &'static str {
+        match self {
+            RoundMode::NearestEven => "nearest",
+            RoundMode::NearestAway => "nearest_away",
+            RoundMode::Truncate => "truncate",
+            RoundMode::Stochastic => "stochastic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "nearest" | "ne" | "rne" => RoundMode::NearestEven,
+            "nearest_away" | "na" => RoundMode::NearestAway,
+            "truncate" | "rz" | "trunc" => RoundMode::Truncate,
+            "stochastic" | "sr" => RoundMode::Stochastic,
+            _ => return None,
+        })
+    }
+
+    /// Does this mode consume random bits?
+    pub fn is_stochastic(self) -> bool {
+        matches!(self, RoundMode::Stochastic)
+    }
+}
+
+/// Decide whether to increment the kept significand, given the `shift`
+/// discarded bits. `keep` is the truncated significand, `rem` the discarded
+/// low bits (`rem < 2^shift`), `rbits` a uniform 32-bit random word (only
+/// inspected for `Stochastic`).
+///
+/// This is the single normative rounding decision shared by every quantizer
+/// in the crate (and mirrored bit-for-bit by `python/compile/quant.py`).
+#[inline(always)]
+pub fn round_up(mode: RoundMode, keep: u32, rem: u32, shift: u32, rbits: u32) -> bool {
+    debug_assert!(shift >= 1 && shift <= 31);
+    match mode {
+        RoundMode::Truncate => false,
+        RoundMode::NearestEven => {
+            let half = 1u32 << (shift - 1);
+            rem > half || (rem == half && keep & 1 == 1)
+        }
+        RoundMode::NearestAway => {
+            let half = 1u32 << (shift - 1);
+            rem >= half
+        }
+        RoundMode::Stochastic => {
+            // r uniform in [0, 2^shift): top `shift` bits of the word.
+            let r = rbits >> (32 - shift);
+            rem + r >= (1u32 << shift)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [
+            RoundMode::NearestEven,
+            RoundMode::NearestAway,
+            RoundMode::Truncate,
+            RoundMode::Stochastic,
+        ] {
+            assert_eq!(RoundMode::parse(m.id()), Some(m));
+        }
+        assert_eq!(RoundMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn truncate_never_rounds_up() {
+        for rem in [0u32, 1, 7, 255] {
+            assert!(!round_up(RoundMode::Truncate, 3, rem, 8, 0xFFFF_FFFF));
+        }
+    }
+
+    #[test]
+    fn nearest_even_tie_behaviour() {
+        // shift=4 → half=8. Tie rounds to even keep.
+        assert!(!round_up(RoundMode::NearestEven, 2, 8, 4, 0)); // keep even: down
+        assert!(round_up(RoundMode::NearestEven, 3, 8, 4, 0)); // keep odd: up
+        assert!(round_up(RoundMode::NearestEven, 2, 9, 4, 0)); // above half: up
+        assert!(!round_up(RoundMode::NearestEven, 3, 7, 4, 0)); // below half: down
+    }
+
+    #[test]
+    fn nearest_away_tie_goes_up() {
+        assert!(round_up(RoundMode::NearestAway, 2, 8, 4, 0));
+        assert!(!round_up(RoundMode::NearestAway, 2, 7, 4, 0));
+    }
+
+    #[test]
+    fn stochastic_probability_matches_remainder() {
+        // P(up) should be rem / 2^shift. Check empirically at shift=8.
+        let shift = 8u32;
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for rem in [0u32, 1, 64, 128, 200, 255] {
+            let n = 200_000;
+            let ups = (0..n)
+                .filter(|_| round_up(RoundMode::Stochastic, 0, rem, shift, rng.next_u32()))
+                .count();
+            let p = ups as f64 / n as f64;
+            let expect = rem as f64 / 256.0;
+            assert!(
+                (p - expect).abs() < 0.005,
+                "rem={rem}: p={p} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_extremes() {
+        // rem = 0 never rounds up regardless of random bits.
+        assert!(!round_up(RoundMode::Stochastic, 0, 0, 8, 0xFFFF_FFFF));
+        // rem = 2^shift - 1 rounds up unless r == 0.
+        assert!(round_up(RoundMode::Stochastic, 0, 255, 8, 0xFFFF_FFFF));
+        assert!(!round_up(RoundMode::Stochastic, 0, 255, 8, 0));
+    }
+}

@@ -1,0 +1,159 @@
+//! Emulated reduced-precision scalar arithmetic.
+//!
+//! The paper's hardware multiplies FP8 operands and accumulates the
+//! products in FP16 (§2.3, Fig. 3a). We emulate both operations on f32
+//! carriers:
+//!
+//! - [`mul_exact`] — the product of two FP8 `(1,5,2)` values is **exact**
+//!   in f32: significands are ≤3 bits each (≤6-bit product) and the
+//!   exponent range (|e| ≤ 16 + 2) is far inside f32's. So a plain f32
+//!   multiply *is* the true FP8×FP8 product; no rounding step exists in the
+//!   paper's hardware either (the product feeds the accumulator at full
+//!   width).
+//! - [`add_rounded`] — reduced-precision addition: the f32 sum (exact up to
+//!   one controlled double-rounding, identical in the JAX mirror) is
+//!   re-quantized into the accumulation format with the chosen rounding
+//!   mode. With `FP16 (1,6,9)` this reproduces the paper's swamping
+//!   behaviour exactly: once `|big|/|small| ≥ 2^10`, the small addend is
+//!   annihilated under nearest rounding.
+
+use super::format::FloatFormat;
+use super::rng::RoundBits;
+use super::rounding::RoundMode;
+
+/// Exact product of two reduced-precision values on the f32 carrier.
+///
+/// Exactness requires `mbits_a + mbits_b ≤ 23 − 1` and exponent ranges that
+/// fit f32 — true for every pair of formats in this crate up to
+/// FP16×FP16. Debug builds assert the operands are representable.
+#[inline(always)]
+pub fn mul_exact(a: f32, b: f32) -> f32 {
+    a * b
+}
+
+/// Reduced-precision addition: quantize the f32 sum into `acc_fmt`.
+#[inline(always)]
+pub fn add_rounded(acc_fmt: FloatFormat, mode: RoundMode, a: f32, b: f32, rbits: u32) -> f32 {
+    acc_fmt.quantize_with_bits(a + b, mode, rbits)
+}
+
+/// A reduced-precision accumulator cell: FP16 register semantics.
+///
+/// `SoftAcc` is the software model of one hardware accumulator register:
+/// every `add` re-rounds into the accumulation format, which is what makes
+/// swamping observable.
+#[derive(Clone, Copy, Debug)]
+pub struct SoftAcc {
+    pub fmt: FloatFormat,
+    pub mode: RoundMode,
+    pub value: f32,
+}
+
+impl SoftAcc {
+    pub fn new(fmt: FloatFormat, mode: RoundMode) -> Self {
+        Self { fmt, mode, value: 0.0 }
+    }
+
+    /// Accumulate one addend, drawing random bits only for SR.
+    #[inline(always)]
+    pub fn add<R: RoundBits>(&mut self, x: f32, rng: &mut R) {
+        let bits = if self.mode.is_stochastic() { rng.next_bits() } else { 0 };
+        self.value = add_rounded(self.fmt, self.mode, self.value, x, bits);
+    }
+
+    /// Deterministic-mode accumulate (no RNG available/needed).
+    #[inline(always)]
+    pub fn add_det(&mut self, x: f32) {
+        debug_assert!(!self.mode.is_stochastic());
+        self.value = add_rounded(self.fmt, self.mode, self.value, x, 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+
+    #[test]
+    fn fp8_products_are_exact_in_f32() {
+        // Exhaustively: every pair of finite FP8 values multiplies exactly.
+        let f8 = FloatFormat::FP8;
+        let vals = f8.enumerate_nonneg();
+        for &a in vals.iter().step_by(3) {
+            for &b in vals.iter().step_by(5) {
+                if !a.is_finite() || !b.is_finite() {
+                    continue;
+                }
+                let p64 = a as f64 * b as f64;
+                let p32 = mul_exact(a, b) as f64;
+                // Exact unless the f64 product underflows f32's subnormal
+                // floor (2^-149; min product is 2^-32 — always fine) or
+                // overflows (max 57344^2 ≈ 2^31.5 — fine).
+                assert_eq!(p32, p64, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn swamping_reproduced_at_paper_threshold() {
+        // §2.3: FP16 (1,6,9) truncates the smaller addend entirely once
+        // magnitudes differ by ≥ 2^(mantissa+1) = 2^10... boundary check.
+        let f16 = FloatFormat::FP16;
+        let big = 4096.0f32; // 2^12, ulp = 2^12 · 2^-9 = 8
+        // adding 2 (quarter-ulp) under nearest: annihilated
+        assert_eq!(
+            add_rounded(f16, RoundMode::NearestEven, big, 2.0, 0),
+            big
+        );
+        // adding 8 (one ulp): survives
+        assert_eq!(
+            add_rounded(f16, RoundMode::NearestEven, big, 8.0, 0),
+            big + 8.0
+        );
+        // half-ulp tie goes to even (stays)
+        assert_eq!(
+            add_rounded(f16, RoundMode::NearestEven, big, 4.0, 0),
+            big
+        );
+    }
+
+    #[test]
+    fn stochastic_add_recovers_swamped_mass() {
+        // Under SR, repeatedly adding a swamped half-ulp advances the sum
+        // on average: E[acc after n adds] ≈ big + n·x.
+        let f16 = FloatFormat::FP16;
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let big = 4096.0f32;
+        let x = 2.0f32; // quarter-ulp: always annihilated by nearest
+        let trials = 2000;
+        let n = 64;
+        let mut total = 0f64;
+        for _ in 0..trials {
+            let mut acc = SoftAcc::new(f16, RoundMode::Stochastic);
+            acc.value = big;
+            for _ in 0..n {
+                acc.add(x, &mut rng);
+            }
+            total += acc.value as f64;
+        }
+        let mean = total / trials as f64;
+        let expect = big as f64 + n as f64 * x as f64; // 4224
+        assert!(
+            (mean - expect).abs() / expect < 0.01,
+            "mean={mean} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn soft_acc_fp32_matches_native() {
+        let mut rng = Xoshiro256::seed_from_u64(23);
+        let xs: Vec<f32> = (0..1000).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut acc = SoftAcc::new(FloatFormat::FP32, RoundMode::NearestEven);
+        let mut native = 0f32;
+        for &x in &xs {
+            acc.add_det(x);
+            native += x;
+        }
+        assert_eq!(acc.value, native);
+    }
+}

@@ -1,0 +1,159 @@
+//! Distribution / quantization diagnostics.
+//!
+//! §2.2 notes that the FP8 and FP16 formats were "selected after in-depth
+//! studies of the data distribution in networks, focusing on balancing the
+//! representation accuracy and dynamic range". This module provides the
+//! tooling for exactly that kind of study (see `examples/format_explorer.rs`):
+//! quantization SNR, dynamic-range coverage (fraction of values that
+//! saturate or flush), and exponent histograms.
+
+use super::format::FloatFormat;
+use super::rounding::RoundMode;
+
+/// Summary of what happens when a tensor is quantized into a format.
+#[derive(Clone, Debug, Default)]
+pub struct QuantReport {
+    /// Signal-to-quantization-noise ratio in dB: 10·log10(‖x‖² / ‖x−q(x)‖²).
+    pub sqnr_db: f64,
+    /// Fraction of elements clipped to ±max_normal.
+    pub overflow_frac: f64,
+    /// Fraction of nonzero elements flushed to zero.
+    pub underflow_frac: f64,
+    /// Mean relative error among representable (non-clipped, non-flushed).
+    pub mean_rel_err: f64,
+    /// Element count.
+    pub n: usize,
+}
+
+/// Quantize `xs` (nearest rounding) and report the damage.
+pub fn quant_report(fmt: FloatFormat, xs: &[f32]) -> QuantReport {
+    let mut sig = 0f64;
+    let mut noise = 0f64;
+    let mut over = 0usize;
+    let mut under = 0usize;
+    let mut rel_sum = 0f64;
+    let mut rel_n = 0usize;
+    let max = fmt.max_normal();
+    for &x in xs {
+        if !x.is_finite() {
+            continue;
+        }
+        let q = fmt.quantize(x, RoundMode::NearestEven);
+        sig += (x as f64).powi(2);
+        noise += (x as f64 - q as f64).powi(2);
+        if x.abs() > max {
+            over += 1;
+        } else if x != 0.0 && q == 0.0 {
+            under += 1;
+        } else if x != 0.0 {
+            rel_sum += ((x as f64 - q as f64) / x as f64).abs();
+            rel_n += 1;
+        }
+    }
+    let n = xs.len();
+    QuantReport {
+        sqnr_db: if noise == 0.0 {
+            f64::INFINITY
+        } else {
+            10.0 * (sig / noise).log10()
+        },
+        overflow_frac: over as f64 / n.max(1) as f64,
+        underflow_frac: under as f64 / n.max(1) as f64,
+        mean_rel_err: if rel_n == 0 { 0.0 } else { rel_sum / rel_n as f64 },
+        n,
+    }
+}
+
+/// Histogram of binary exponents (floor(log2|x|)), the standard view for
+/// dynamic-range studies. Returns (exponent, count) sorted ascending.
+pub fn exponent_histogram(xs: &[f32]) -> Vec<(i32, usize)> {
+    use std::collections::BTreeMap;
+    let mut h: BTreeMap<i32, usize> = BTreeMap::new();
+    for &x in xs {
+        if x != 0.0 && x.is_finite() {
+            let e = x.abs().log2().floor() as i32;
+            *h.entry(e).or_default() += 1;
+        }
+    }
+    h.into_iter().collect()
+}
+
+/// Basic moments used by the experiment harnesses' CSV output.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Moments {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f32,
+    pub max: f32,
+}
+
+pub fn moments(xs: &[f32]) -> Moments {
+    if xs.is_empty() {
+        return Moments::default();
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n;
+    Moments {
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().copied().fold(f32::INFINITY, f32::min),
+        max: xs.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::Xoshiro256;
+
+    #[test]
+    fn report_on_representable_data_is_lossless() {
+        let f8 = FloatFormat::FP8;
+        let xs: Vec<f32> = f8
+            .enumerate_nonneg()
+            .into_iter()
+            .filter(|v| v.is_finite())
+            .collect();
+        let r = quant_report(f8, &xs);
+        assert!(r.sqnr_db.is_infinite());
+        assert_eq!(r.overflow_frac, 0.0);
+        assert_eq!(r.underflow_frac, 0.0);
+        assert_eq!(r.mean_rel_err, 0.0);
+    }
+
+    #[test]
+    fn fp8_sqnr_in_expected_band() {
+        // For uniform data in [-1,1], a 2-bit-mantissa format gives SQNR
+        // around 6.02·(m+1) + margin; just sanity-check the band.
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let r = quant_report(FloatFormat::FP8, &xs);
+        assert!(r.sqnr_db > 15.0 && r.sqnr_db < 35.0, "sqnr={}", r.sqnr_db);
+        let r16 = quant_report(FloatFormat::FP16, &xs);
+        assert!(r16.sqnr_db > r.sqnr_db + 30.0, "fp16 should be ≫ fp8");
+    }
+
+    #[test]
+    fn overflow_underflow_detection() {
+        let f8 = FloatFormat::FP8;
+        let xs = [1e9f32, -1e9, 1e-9, 1.0];
+        let r = quant_report(f8, &xs);
+        assert_eq!(r.overflow_frac, 0.5);
+        assert_eq!(r.underflow_frac, 0.25);
+    }
+
+    #[test]
+    fn exponent_histogram_buckets() {
+        let h = exponent_histogram(&[1.0, 1.5, 2.0, 0.25, 0.0]);
+        assert_eq!(h, vec![(-2, 1), (0, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn moments_basic() {
+        let m = moments(&[1.0, 2.0, 3.0]);
+        assert!((m.mean - 2.0).abs() < 1e-12);
+        assert_eq!(m.min, 1.0);
+        assert_eq!(m.max, 3.0);
+    }
+}

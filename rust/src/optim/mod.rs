@@ -1,0 +1,189 @@
+//! Optimizers with the reduced-precision weight-update path of Fig. 2(b).
+//!
+//! Both SGD (the paper's main optimizer) and Adam (§3's wide-applicability
+//! check) route every elementwise update through
+//! [`crate::numerics::axpy`]'s `UpdatePrecision` — FP16 with stochastic
+//! rounding under the paper's scheme, FP32 for baselines, FP16+nearest for
+//! the Table 4 ablation. Master weights and optimizer state are *stored*
+//! in the update format (the paper's 2× memory claim comes from the FP16
+//! master copy).
+//!
+//! Loss scaling (§3): gradients arrive multiplied by `policy.loss_scale`;
+//! the optimizer divides it back out in full precision before the
+//! reduced-precision AXPYs.
+
+pub mod adam;
+
+pub use adam::Adam;
+
+use crate::nn::linear::layer_hash;
+use crate::nn::{Layer, PrecisionPolicy};
+use crate::numerics::axpy::sgd_update;
+use crate::numerics::{RoundMode, Xoshiro256};
+use std::collections::BTreeMap;
+
+/// Shared optimizer interface: one call per training step, after the
+/// backward pass has accumulated gradients.
+pub trait Optimizer: Send {
+    /// Apply one update and zero the gradients.
+    fn step(&mut self, model: &mut dyn Layer, policy: &PrecisionPolicy, lr: f32, step: u64);
+
+    /// Quantize master weights into the policy's update format (call once
+    /// before training; the paper stores the master copy in FP16).
+    fn prepare(&mut self, model: &mut dyn Layer, policy: &PrecisionPolicy) {
+        let fmt = policy.update.fmt;
+        model.visit_params(&mut |p| {
+            fmt.quantize_slice(&mut p.value.data, RoundMode::NearestEven);
+        });
+    }
+}
+
+/// SGD with momentum and L2 regularization — the three AXPYs of Fig. 2(b).
+pub struct Sgd {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    seed: u64,
+    velocity: BTreeMap<String, Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32, weight_decay: f32, seed: u64) -> Self {
+        Self {
+            momentum,
+            weight_decay,
+            seed,
+            velocity: BTreeMap::new(),
+        }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, model: &mut dyn Layer, policy: &PrecisionPolicy, lr: f32, step: u64) {
+        let inv_scale = 1.0 / policy.loss_scale;
+        let up = policy.update;
+        let (momentum, weight_decay, seed) = (self.momentum, self.weight_decay, self.seed);
+        let velocity = &mut self.velocity;
+        model.visit_params(&mut |p| {
+            let v = velocity
+                .entry(p.name.clone())
+                .or_insert_with(|| vec![0.0; p.value.len()]);
+            // Unscale the loss-scaled gradient in full precision.
+            let mut g = p.grad.data.clone();
+            if inv_scale != 1.0 {
+                for x in &mut g {
+                    *x *= inv_scale;
+                }
+            }
+            // Deterministic per-(param, step) SR stream.
+            let mut rng =
+                Xoshiro256::seed_from_u64(seed ^ layer_hash(&p.name) ^ step.wrapping_mul(0x9E37));
+            let wd = if p.decay { weight_decay } else { 0.0 };
+            sgd_update(&up, &mut p.value.data, &mut g, v, lr, momentum, wd, &mut rng);
+            p.zero_grad();
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::quant::LayerPos;
+    use crate::nn::Linear;
+    use crate::numerics::FloatFormat;
+
+    fn toy_model() -> Linear {
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        Linear::new("fc", 2, 2, LayerPos::Middle, &mut rng)
+    }
+
+    #[test]
+    fn sgd_moves_weights_against_gradient() {
+        let policy = PrecisionPolicy::fp32();
+        let mut m = toy_model();
+        m.w.grad.data.fill(1.0);
+        let w0 = m.w.value.data.clone();
+        let mut opt = Sgd::new(0.0, 0.0, 1);
+        opt.step(&mut m, &policy, 0.1, 0);
+        for (a, b) in m.w.value.data.iter().zip(&w0) {
+            assert!((a - (b - 0.1)).abs() < 1e-6);
+        }
+        // grads zeroed
+        assert!(m.w.grad.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn loss_scale_is_divided_out() {
+        let mut pol = PrecisionPolicy::fp32();
+        pol.loss_scale = 1000.0;
+        let mut m = toy_model();
+        m.w.grad.data.fill(1000.0); // = true grad 1.0, scaled
+        let w0 = m.w.value.data.clone();
+        let mut opt = Sgd::new(0.0, 0.0, 1);
+        opt.step(&mut m, &pol, 0.1, 0);
+        for (a, b) in m.w.value.data.iter().zip(&w0) {
+            assert!((a - (b - 0.1)).abs() < 1e-5, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let policy = PrecisionPolicy::fp32();
+        let mut m = toy_model();
+        let mut opt = Sgd::new(0.9, 0.0, 1);
+        let w0 = m.w.value.data.clone();
+        m.w.grad.data.fill(1.0);
+        opt.step(&mut m, &policy, 0.1, 0);
+        m.w.grad.data.fill(1.0);
+        opt.step(&mut m, &policy, 0.1, 1);
+        // v1 = 1, v2 = 1.9 → total 0.1·(1 + 1.9) = 0.29.
+        for (a, b) in m.w.value.data.iter().zip(&w0) {
+            assert!((a - (b - 0.29)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn decay_flag_controls_l2() {
+        let policy = PrecisionPolicy::fp32();
+        let mut m = toy_model();
+        m.w.value.data.fill(1.0);
+        let b0 = m.b.as_ref().unwrap().value.data.clone();
+        // zero grads: only weight decay moves weights.
+        let mut opt = Sgd::new(0.0, 0.1, 1);
+        opt.step(&mut m, &policy, 1.0, 0);
+        for a in &m.w.value.data {
+            assert!((a - 0.9).abs() < 1e-6, "decay should shrink w, got {a}");
+        }
+        assert_eq!(m.b.as_ref().unwrap().value.data, b0, "bias has no decay");
+    }
+
+    #[test]
+    fn prepare_quantizes_master_weights() {
+        let policy = PrecisionPolicy::fp8_paper();
+        let mut m = toy_model();
+        m.w.value.data.fill(1.0001); // not FP16-representable
+        let mut opt = Sgd::new(0.9, 0.0, 1);
+        opt.prepare(&mut m, &policy);
+        for &v in &m.w.value.data {
+            assert!(FloatFormat::FP16.is_representable(v));
+        }
+    }
+
+    #[test]
+    fn fp16_sr_update_is_deterministic_per_seed() {
+        let policy = PrecisionPolicy::fp8_paper();
+        let run = |seed: u64| {
+            // Sub-ulp update (1.5e-4 ≪ ulp(1.0) = 2^-9): SR alone decides
+            // whether each weight moves, so the draw stream is visible.
+            let mut rng = Xoshiro256::seed_from_u64(0);
+            let mut m = Linear::new("fc", 16, 16, LayerPos::Middle, &mut rng);
+            m.w.value.data.fill(1.0);
+            let mut opt = Sgd::new(0.0, 0.0, seed);
+            opt.prepare(&mut m, &policy);
+            m.w.grad.data.fill(3e-3 * policy.loss_scale);
+            opt.step(&mut m, &policy, 0.05, 3);
+            m.w.value.data.clone()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+}

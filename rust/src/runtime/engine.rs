@@ -1,0 +1,180 @@
+//! The PJRT-backed training engine: the deployable path.
+//!
+//! One AOT-compiled `train_step` executable per (model, policy) pair plus a
+//! `fwd` executable for evaluation. State (parameters + momentum) lives in
+//! host f32 tensors mirrored to PJRT buffers each step; on the CPU PJRT
+//! plugin device memory *is* host memory, so the "transfer" is a memcpy —
+//! see EXPERIMENTS.md §Perf for the measured step overhead vs the pure
+//! native engine.
+//!
+//! The train-step artifact signature (see `python/compile/model.py`):
+//!
+//! ```text
+//! train_step(state..., x, y_onehot, lr, seed) -> (state'..., loss)
+//! fwd(params..., x) -> (logits,)
+//! ```
+//!
+//! `seed` is a whole-valued f32 (< 2^24, exact) the compiled graph folds
+//! into its threefry key for stochastic rounding.
+
+use super::manifest::{Manifest, TensorKind};
+use super::{artifacts_dir, Executable, HostTensor, Runtime};
+use crate::coordinator::Engine;
+use crate::data::Batch;
+use crate::numerics::Xoshiro256;
+use anyhow::{Context, Result};
+
+pub struct PjrtEngine {
+    step_exe: Executable,
+    fwd_exe: Executable,
+    manifest: Manifest,
+    /// Current state in manifest order (params then momentum, as declared).
+    state: Vec<HostTensor>,
+    classes: usize,
+    name: String,
+}
+
+impl PjrtEngine {
+    /// Load `artifacts/<tag>.hlo.txt` + `<tag>_fwd.hlo.txt` +
+    /// `<tag>.manifest.txt`, e.g. `tag = "cifar_cnn_fp8"`.
+    pub fn load(rt: &Runtime, tag: &str, seed: u64) -> Result<Self> {
+        let step_exe = rt.load_named(tag)?;
+        let fwd_exe = rt.load_named(&format!("{tag}_fwd"))?;
+        let manifest = Manifest::load(artifacts_dir().join(format!("{tag}.manifest.txt")))?;
+        let classes = manifest.meta_usize("classes")?;
+        let state = init_state(&manifest, seed);
+        Ok(Self {
+            step_exe,
+            fwd_exe,
+            manifest,
+            state,
+            classes,
+            name: format!("pjrt:{tag}"),
+        })
+    }
+
+    /// The fixed batch size the artifact was lowered for.
+    pub fn batch_size(&self) -> usize {
+        self.manifest.meta_usize("batch").unwrap_or(32)
+    }
+
+    fn one_hot(&self, labels: &[usize]) -> HostTensor {
+        let n = labels.len();
+        let mut data = vec![0f32; n * self.classes];
+        for (i, &l) in labels.iter().enumerate() {
+            data[i * self.classes + l] = 1.0;
+        }
+        HostTensor::new(&[n, self.classes], data)
+    }
+
+    fn params(&self) -> Vec<&HostTensor> {
+        self.manifest
+            .tensors
+            .iter()
+            .zip(&self.state)
+            .filter(|(spec, _)| spec.kind == TensorKind::Param)
+            .map(|(_, t)| t)
+            .collect()
+    }
+
+    /// Raw forward pass (used by tests and the serving example).
+    pub fn logits(&self, x: &HostTensor) -> Result<HostTensor> {
+        let mut inputs: Vec<HostTensor> = self.params().into_iter().cloned().collect();
+        inputs.push(x.clone());
+        let out = self.fwd_exe.run(&inputs)?;
+        out.into_iter()
+            .next()
+            .context("fwd artifact returned no outputs")
+    }
+}
+
+/// Initialize state tensors per the manifest: Kaiming-normal for rank ≥ 2
+/// params (fan_in = trailing-dim product), zero for rank-1 params (biases)
+/// and all momentum buffers. Mirrors `python/compile/model.py::init_params`.
+pub fn init_state(manifest: &Manifest, seed: u64) -> Vec<HostTensor> {
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0x1417);
+    manifest
+        .tensors
+        .iter()
+        .map(|spec| {
+            let n: usize = spec.shape.iter().product();
+            match spec.kind {
+                TensorKind::Param if spec.shape.len() >= 2 => {
+                    let fan_in: usize = spec.shape[1..].iter().product();
+                    let std = (2.0 / fan_in as f32).sqrt();
+                    HostTensor::new(
+                        &spec.shape,
+                        (0..n).map(|_| std * rng.normal()).collect(),
+                    )
+                }
+                _ => HostTensor::zeros(&spec.shape),
+            }
+        })
+        .collect()
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn train_step(&mut self, batch: &Batch, lr: f32, step: u64) -> f64 {
+        assert_eq!(
+            batch.len(),
+            self.batch_size(),
+            "artifact lowered for a fixed batch size"
+        );
+        let mut inputs = self.state.clone();
+        inputs.push(HostTensor::new(&batch.x.shape, batch.x.data.clone()));
+        inputs.push(self.one_hot(&batch.labels));
+        inputs.push(HostTensor::scalar(lr));
+        inputs.push(HostTensor::scalar((step % (1 << 24)) as f32));
+        let mut out = self.step_exe.run(&inputs).expect("pjrt train_step");
+        let loss = out.pop().expect("train_step returns loss last");
+        assert_eq!(out.len(), self.state.len(), "state arity mismatch");
+        self.state = out;
+        loss.data[0] as f64
+    }
+
+    fn eval(&mut self, batch: &Batch) -> (f64, usize) {
+        let x = HostTensor::new(&batch.x.shape, batch.x.data.clone());
+        let logits = self.logits(&x).expect("pjrt fwd");
+        let t = crate::tensor::Tensor::from_vec(&logits.shape, logits.data);
+        let out = crate::nn::softmax_xent(
+            &t,
+            &batch.labels,
+            crate::numerics::FloatFormat::FP32,
+            1.0,
+        );
+        (out.loss, out.correct)
+    }
+
+    fn num_params(&mut self) -> usize {
+        self.manifest.num_param_elements()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_state_shapes_and_stats() {
+        let m = Manifest::parse("param w 64,128\nparam b 64\nmom w 64,128\nmeta classes 10\nmeta batch 8\n").unwrap();
+        let s = init_state(&m, 3);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].shape, vec![64, 128]);
+        // Kaiming std = sqrt(2/128) = 0.125.
+        let std = {
+            let v = &s[0].data;
+            let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+            (v.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / v.len() as f32).sqrt()
+        };
+        assert!((std - 0.125).abs() < 0.02, "std={std}");
+        assert!(s[1].data.iter().all(|&v| v == 0.0));
+        assert!(s[2].data.iter().all(|&v| v == 0.0));
+        // Deterministic per seed.
+        assert_eq!(init_state(&m, 3)[0].data, s[0].data);
+        assert_ne!(init_state(&m, 4)[0].data, s[0].data);
+    }
+}

@@ -1,0 +1,152 @@
+//! Artifact manifests: the shape/ordering contract between `aot.py` and
+//! the Rust runtime.
+//!
+//! `aot.py` writes `artifacts/<name>.manifest.txt` alongside each
+//! `<name>.hlo.txt`, one line per state tensor in call-argument order:
+//!
+//! ```text
+//! param conv1.w 16,3,5,5
+//! param conv1.b 16
+//! mom   conv1.w 16,3,5,5
+//! ...
+//! meta  classes 10
+//! meta  batch 32
+//! ```
+//!
+//! The runtime initializes `param` tensors (Kaiming for rank ≥ 2, zero for
+//! rank 1) and zero-fills `mom` tensors, then threads them through every
+//! `train_step` call.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorKind {
+    /// Learnable parameter (Kaiming/zero init).
+    Param,
+    /// Momentum / optimizer state (zero init).
+    Mom,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub kind: TensorKind,
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// State tensors in call-argument order.
+    pub tensors: Vec<TensorSpec>,
+    /// Free-form integer metadata (batch size, class count, ...).
+    pub meta: std::collections::BTreeMap<String, i64>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (kind, name, rest) = (
+                parts.next().context("missing kind")?,
+                parts.next().context("missing name")?,
+                parts.next().unwrap_or(""),
+            );
+            match kind {
+                "param" | "mom" => {
+                    let shape: Vec<usize> = if rest.is_empty() {
+                        vec![]
+                    } else {
+                        rest.split(',')
+                            .map(|s| s.trim().parse::<usize>())
+                            .collect::<std::result::Result<_, _>>()
+                            .with_context(|| format!("line {}: bad shape {rest:?}", lineno + 1))?
+                    };
+                    m.tensors.push(TensorSpec {
+                        kind: if kind == "param" {
+                            TensorKind::Param
+                        } else {
+                            TensorKind::Mom
+                        },
+                        name: name.to_string(),
+                        shape,
+                    });
+                }
+                "meta" => {
+                    let v: i64 = rest
+                        .parse()
+                        .with_context(|| format!("line {}: bad meta value {rest:?}", lineno + 1))?;
+                    m.meta.insert(name.to_string(), v);
+                }
+                other => bail!("line {}: unknown kind {other:?}", lineno + 1),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .map(|&v| v as usize)
+            .with_context(|| format!("manifest missing meta {key:?}"))
+    }
+
+    pub fn num_param_elements(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.kind == TensorKind::Param)
+            .map(|t| t.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+param conv1.w 16,3,5,5
+param conv1.b 16
+mom conv1.w 16,3,5,5
+
+meta classes 10
+meta batch 32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.tensors.len(), 3);
+        assert_eq!(m.tensors[0].kind, TensorKind::Param);
+        assert_eq!(m.tensors[0].shape, vec![16, 3, 5, 5]);
+        assert_eq!(m.tensors[2].kind, TensorKind::Mom);
+        assert_eq!(m.meta_usize("classes").unwrap(), 10);
+        assert_eq!(m.meta_usize("batch").unwrap(), 32);
+        assert_eq!(m.num_param_elements(), 16 * 3 * 5 * 5 + 16);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("frob x 1").is_err());
+        assert!(Manifest::parse("param w 1,a").is_err());
+        assert!(Manifest::parse("meta k notanint").is_err());
+    }
+
+    #[test]
+    fn missing_meta_is_error() {
+        let m = Manifest::parse("param w 2").unwrap();
+        assert!(m.meta_usize("batch").is_err());
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from Rust. Python never runs here — `make artifacts` produced the
+//! `.hlo.txt` files once at build time (see `python/compile/aot.py`).
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that the pinned xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §6).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::PjrtEngine;
+pub use manifest::{Manifest, TensorKind, TensorSpec};
+
+use anyhow::{Context, Result};
+
+/// Default artifact directory (overridable via `FP8TRAIN_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FP8TRAIN_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+        .into()
+}
+
+/// A PJRT client wrapper; create once, load many executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: impl AsRef<std::path::Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Load `artifacts/<name>.hlo.txt`.
+    pub fn load_named(&self, name: &str) -> Result<Executable> {
+        self.load(artifacts_dir().join(format!("{name}.hlo.txt")))
+    }
+}
+
+/// A compiled artifact plus its name (for logs/benches).
+pub struct Executable {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// A host-side f32 tensor used at the runtime boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.is_empty() {
+            // rank-0: reshape to scalar
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(Self { shape: dims, data })
+    }
+}
+
+/// A typed input at the runtime boundary (train-step state and data are
+/// f32; stochastic-rounding bit streams are u32).
+pub enum Input {
+    F32(HostTensor),
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Input {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Input::F32(t) => t.to_literal(),
+            Input::U32 { shape, data } => {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+    }
+}
+
+impl Executable {
+    /// Execute with f32 host tensors; the artifact was lowered with
+    /// `return_tuple=True`, so the single output buffer is a tuple that we
+    /// decompose into one `HostTensor` per result leaf.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let typed: Vec<Input> = inputs.iter().map(|t| Input::F32(t.clone())).collect();
+        self.run_inputs(&typed)
+    }
+
+    /// Execute with mixed-type inputs.
+    pub fn run_inputs(&self, inputs: &[Input]) -> Result<Vec<HostTensor>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Input::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("execute {}", self.name))?;
+        let buf = &result[0][0];
+        let mut lit = buf.to_literal_sync()?;
+        let leaves = lit.decompose_tuple()?;
+        leaves.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes() {
+        let t = HostTensor::new(&[2, 3], vec![1.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let s = HostTensor::scalar(4.0);
+        assert!(s.shape.is_empty());
+        assert_eq!(s.data, vec![4.0]);
+        let z = HostTensor::zeros(&[4]);
+        assert_eq!(z.data, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_checks_element_count() {
+        HostTensor::new(&[2, 2], vec![0.0; 3]);
+    }
+
+    // PJRT-backed tests live in rust/tests/integration.rs (they need the
+    // artifacts built by `make artifacts`).
+}

@@ -1,0 +1,60 @@
+//! Weight initialization (Kaiming / Xavier / constant), seeded by the
+//! crate's own RNG so every experiment run is reproducible.
+
+use super::Tensor;
+use crate::numerics::rng::Xoshiro256;
+
+/// He/Kaiming normal: std = sqrt(2 / fan_in) — the standard init for the
+/// ReLU networks in the paper's Appendix A.
+pub fn kaiming_normal(shape: &[usize], fan_in: usize, rng: &mut Xoshiro256) -> Tensor {
+    let std = (2.0 / fan_in as f64).sqrt() as f32;
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal() * std).collect())
+}
+
+/// Xavier/Glorot uniform: U(±sqrt(6/(fan_in+fan_out))).
+pub fn xavier_uniform(
+    shape: &[usize],
+    fan_in: usize,
+    fan_out: usize,
+    rng: &mut Xoshiro256,
+) -> Tensor {
+    let lim = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.uniform(-lim, lim)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kaiming_moments() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let t = kaiming_normal(&[256, 256], 256, &mut rng);
+        let m = crate::numerics::stats::moments(&t.data);
+        let expect_std = (2.0f64 / 256.0).sqrt();
+        assert!(m.mean.abs() < 0.002, "mean={}", m.mean);
+        assert!((m.std - expect_std).abs() / expect_std < 0.02, "std={}", m.std);
+    }
+
+    #[test]
+    fn xavier_bounds() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let t = xavier_uniform(&[64, 64], 64, 64, &mut rng);
+        let lim = (6.0f64 / 128.0).sqrt() as f32;
+        assert!(t.data.iter().all(|&v| v.abs() <= lim));
+        let m = crate::numerics::stats::moments(&t.data);
+        assert!(m.mean.abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Xoshiro256::seed_from_u64(9);
+        let mut r2 = Xoshiro256::seed_from_u64(9);
+        assert_eq!(
+            kaiming_normal(&[8, 8], 8, &mut r1).data,
+            kaiming_normal(&[8, 8], 8, &mut r2).data
+        );
+    }
+}

@@ -1,0 +1,484 @@
+//! Minimal dense tensor library for the native training engine.
+//!
+//! Design: contiguous row-major `f32` storage, explicit shapes, and only
+//! the operations the paper's six models need (§Appendix A): matmul
+//! (routed through the reduced-precision GEMM emulation), im2col/col2im
+//! for convolution lowering ("the convolution computation is implemented
+//! by first lowering the input data, followed by GEMM operations" — §2.2),
+//! elementwise ops, reductions, and axis utilities. No autograd here —
+//! layers in `nn/` write their backward passes by hand, which keeps the
+//! precision plumbing of Fig. 2 explicit.
+
+pub mod init;
+
+use crate::numerics::gemm::{gemm_into, transpose_into};
+use crate::numerics::GemmPrecision;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with {} elements",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D accessors -----------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    /// Row-major 2-D matrix transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2, "t() needs a 2-D tensor");
+        let (r, s) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[s, r]);
+        transpose_into(&self.data, &mut out.data, r, s);
+        out
+    }
+
+    /// Matrix multiply through the reduced-precision GEMM emulation.
+    /// `self`: [m,k], `rhs`: [k,n]. Operands must already be quantized to
+    /// `prec.fmt_mult` when emulating (the quant layer does this).
+    pub fn matmul(&self, rhs: &Tensor, prec: &GemmPrecision, seed: u64) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(rhs.ndim(), 2);
+        assert_eq!(self.shape[1], rhs.shape[0], "matmul inner dim");
+        let (m, k, n) = (self.shape[0], self.shape[1], rhs.shape[1]);
+        let mut out = Tensor::zeros(&[m, n]);
+        gemm_into(prec, &self.data, &rhs.data, &mut out.data, m, k, n, seed);
+        out
+    }
+
+    /// Elementwise helpers ----------------------------------------------
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn zip_mut(&mut self, rhs: &Tensor, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(self.shape, rhs.shape, "zip shape");
+        for (a, &b) in self.data.iter_mut().zip(&rhs.data) {
+            *a = f(*a, b);
+        }
+    }
+
+    pub fn add_assign(&mut self, rhs: &Tensor) {
+        self.zip_mut(rhs, |a, b| a + b);
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Broadcast-add a length-`n` row vector to each row of an `[m,n]`
+    /// matrix (bias add).
+    pub fn add_row(&mut self, row: &[f32]) {
+        assert_eq!(self.ndim(), 2);
+        let n = self.shape[1];
+        assert_eq!(row.len(), n);
+        for r in self.data.chunks_mut(n) {
+            for (v, &b) in r.iter_mut().zip(row) {
+                *v += b;
+            }
+        }
+    }
+
+    /// Column-wise sum of an `[m,n]` matrix → length-n vector (bias grad).
+    pub fn sum_rows(&self) -> Vec<f32> {
+        assert_eq!(self.ndim(), 2);
+        let n = self.shape[1];
+        let mut out = vec![0f32; n];
+        for r in self.data.chunks(n) {
+            for (o, &v) in out.iter_mut().zip(r) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum()
+    }
+
+    /// Index of the max element of each row (predictions).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.ndim(), 2);
+        let n = self.shape[1];
+        self.data
+            .chunks(n)
+            .map(|r| {
+                r.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}
+
+/// Parameters of a 2-D convolution lowering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dGeom {
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dGeom {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// GEMM K dimension after lowering: `in_c · k · k` — the dot-product
+    /// length whose swamping behaviour Figs. 3/6 study.
+    pub fn patch_len(&self) -> usize {
+        self.in_c * self.k * self.k
+    }
+}
+
+/// im2col: lower an NCHW batch into the `[N·out_h·out_w, in_c·k·k]` patch
+/// matrix so convolution = patch-matrix · kernel-matrix (§2.2).
+pub fn im2col(x: &Tensor, g: &Conv2dGeom) -> Tensor {
+    assert_eq!(x.ndim(), 4, "im2col wants NCHW");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(c, g.in_c);
+    assert_eq!(h, g.in_h);
+    assert_eq!(w, g.in_w);
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let cols = g.patch_len();
+    let mut out = Tensor::zeros(&[n * oh * ow, cols]);
+    let src = &x.data;
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((img * oh + oy) * ow + ox) * cols;
+                let mut idx = row;
+                for ci in 0..c {
+                    let plane = (img * c + ci) * h * w;
+                    for ky in 0..g.k {
+                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            // whole kernel row out of bounds → zeros
+                            idx += g.k;
+                            continue;
+                        }
+                        let src_row = plane + iy as usize * w;
+                        for kx in 0..g.k {
+                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                            out.data[idx] = if ix < 0 || ix >= w as isize {
+                                0.0
+                            } else {
+                                src[src_row + ix as usize]
+                            };
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// col2im: scatter-add the patch-matrix gradient back to NCHW — the adjoint
+/// of [`im2col`], used by the convolution backward pass.
+pub fn col2im(cols: &Tensor, g: &Conv2dGeom, n: usize) -> Tensor {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let pl = g.patch_len();
+    assert_eq!(cols.shape, vec![n * oh * ow, pl]);
+    let (c, h, w) = (g.in_c, g.in_h, g.in_w);
+    let mut out = Tensor::zeros(&[n, c, h, w]);
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((img * oh + oy) * ow + ox) * pl;
+                let mut idx = row;
+                for ci in 0..c {
+                    let plane = (img * c + ci) * h * w;
+                    for ky in 0..g.k {
+                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            idx += g.k;
+                            continue;
+                        }
+                        let dst_row = plane + iy as usize * w;
+                        for kx in 0..g.k {
+                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                            if ix >= 0 && ix < w as isize {
+                                out.data[dst_row + ix as usize] += cols.data[idx];
+                            }
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reshape_and_accessors() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.shape, vec![3, 2]);
+        assert_eq!(r.data, t.data);
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t();
+        assert_eq!(tt.shape, vec![3, 2]);
+        assert_eq!(tt.data, vec![1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn matmul_fp32() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b, &GemmPrecision::fp32(), 0);
+        assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn bias_add_and_sum_rows() {
+        let mut a = Tensor::from_vec(&[2, 3], vec![0.; 6]);
+        a.add_row(&[1., 2., 3.]);
+        assert_eq!(a.data, vec![1., 2., 3., 1., 2., 3.]);
+        assert_eq!(a.sum_rows(), vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn argmax_rows_basic() {
+        let a = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.2, 5., 4., 6.]);
+        assert_eq!(a.argmax_rows(), vec![1, 2]);
+    }
+
+    #[test]
+    fn im2col_identity_kernel_geometry() {
+        // 1x1 kernel, stride 1, no pad: im2col is a reshape/permute.
+        let g = Conv2dGeom {
+            in_c: 2,
+            in_h: 2,
+            in_w: 2,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let x = Tensor::from_vec(&[1, 2, 2, 2], (0..8).map(|v| v as f32).collect());
+        let cols = im2col(&x, &g);
+        assert_eq!(cols.shape, vec![4, 2]);
+        // Each row is (channel0 pixel, channel1 pixel) at one spatial site.
+        assert_eq!(cols.data, vec![0., 4., 1., 5., 2., 6., 3., 7.]);
+    }
+
+    #[test]
+    fn im2col_padding_zeroes_border() {
+        let g = Conv2dGeom {
+            in_c: 1,
+            in_h: 2,
+            in_w: 2,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let cols = im2col(&x, &g);
+        assert_eq!(cols.shape, vec![4, 9]);
+        // Top-left output: only bottom-right 2x2 of the kernel window hits
+        // the image.
+        assert_eq!(
+            &cols.data[0..9],
+            &[0., 0., 0., 0., 1., 2., 0., 3., 4.]
+        );
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        // Direct correlation vs im2col+GEMM on a small random case.
+        let g = Conv2dGeom {
+            in_c: 2,
+            in_h: 5,
+            in_w: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(3);
+        let n = 2;
+        let oc = 3;
+        let x = Tensor::from_vec(
+            &[n, g.in_c, g.in_h, g.in_w],
+            (0..n * g.in_c * g.in_h * g.in_w)
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect(),
+        );
+        let wgt = Tensor::from_vec(
+            &[oc, g.patch_len()],
+            (0..oc * g.patch_len())
+                .map(|_| rng.uniform(-1.0, 1.0))
+                .collect(),
+        );
+        let cols = im2col(&x, &g);
+        let y = cols.matmul(&wgt.t(), &GemmPrecision::fp32(), 0); // [n*oh*ow, oc]
+
+        // direct correlation
+        let (oh, ow) = (g.out_h(), g.out_w());
+        for img in 0..n {
+            for o in 0..oc {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0f32;
+                        for ci in 0..g.in_c {
+                            for ky in 0..g.k {
+                                for kx in 0..g.k {
+                                    let iy = (oy + ky) as isize - g.pad as isize;
+                                    let ix = (ox + kx) as isize - g.pad as isize;
+                                    if iy < 0
+                                        || ix < 0
+                                        || iy >= g.in_h as isize
+                                        || ix >= g.in_w as isize
+                                    {
+                                        continue;
+                                    }
+                                    let xi = ((img * g.in_c + ci) * g.in_h + iy as usize)
+                                        * g.in_w
+                                        + ix as usize;
+                                    let wi = (o * g.in_c + ci) * g.k * g.k + ky * g.k + kx;
+                                    acc += x.data[xi] * wgt.data[wi];
+                                }
+                            }
+                        }
+                        let yi = ((img * oh + oy) * ow + ox) * oc + o;
+                        assert!(
+                            (y.data[yi] - acc).abs() < 1e-4,
+                            "mismatch at img={img} o={o} oy={oy} ox={ox}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> — the defining adjoint property,
+        // which is exactly what the conv backward pass relies on.
+        let g = Conv2dGeom {
+            in_c: 3,
+            in_h: 6,
+            in_w: 5,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(4);
+        let n = 2;
+        let x = Tensor::from_vec(
+            &[n, 3, 6, 5],
+            (0..n * 3 * 6 * 5).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+        );
+        let cols = im2col(&x, &g);
+        let y = Tensor::from_vec(
+            &cols.shape.clone(),
+            (0..cols.len()).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+        );
+        let lhs: f64 = cols
+            .data
+            .iter()
+            .zip(&y.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        let back = col2im(&y, &g, n);
+        let rhs: f64 = x
+            .data
+            .iter()
+            .zip(&back.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum();
+        assert!((lhs - rhs).abs() < 1e-3, "lhs={lhs} rhs={rhs}");
+    }
+}

@@ -1,0 +1,85 @@
+//! Learning-rate schedules. The paper trains with standard step-decay SGD
+//! ("without changes to ... hyper-parameters"); we provide constant,
+//! step-decay (÷10 at 50%/75% of the budget — the ResNet convention) and
+//! linear warmup variants for the experiment harnesses.
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// Base LR, divided by 10 at each milestone (given in steps).
+    StepDecay { base: f32, milestones: Vec<usize> },
+    /// Linear warmup over `warmup` steps to `base`, then step decay.
+    WarmupStepDecay {
+        base: f32,
+        warmup: usize,
+        milestones: Vec<usize>,
+    },
+}
+
+impl LrSchedule {
+    /// The convention used across the experiments: ÷10 at 50% and 75% of
+    /// the step budget.
+    pub fn step_decay(base: f32, total_steps: usize) -> Self {
+        LrSchedule::StepDecay {
+            base,
+            milestones: vec![total_steps / 2, total_steps * 3 / 4],
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::StepDecay { base, milestones } => {
+                let drops = milestones.iter().filter(|&&m| step >= m).count();
+                base * 0.1f32.powi(drops as i32)
+            }
+            LrSchedule::WarmupStepDecay {
+                base,
+                warmup,
+                milestones,
+            } => {
+                if step < *warmup {
+                    base * (step + 1) as f32 / *warmup as f32
+                } else {
+                    let drops = milestones.iter().filter(|&&m| step >= m).count();
+                    base * 0.1f32.powi(drops as i32)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant(0.1);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_divides_by_ten() {
+        let s = LrSchedule::step_decay(1.0, 100);
+        assert_eq!(s.lr_at(0), 1.0);
+        assert_eq!(s.lr_at(49), 1.0);
+        assert!((s.lr_at(50) - 0.1).abs() < 1e-7);
+        assert!((s.lr_at(75) - 0.01).abs() < 1e-8);
+        assert!((s.lr_at(99) - 0.01).abs() < 1e-8);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::WarmupStepDecay {
+            base: 0.2,
+            warmup: 10,
+            milestones: vec![50],
+        };
+        assert!((s.lr_at(0) - 0.02).abs() < 1e-7);
+        assert!((s.lr_at(4) - 0.1).abs() < 1e-7);
+        assert_eq!(s.lr_at(10), 0.2);
+        assert!((s.lr_at(60) - 0.02).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,193 @@
+//! Cross-language validation: the AOT-compiled JAX/Pallas artifacts
+//! (python/compile/*) executed through PJRT must agree with the native
+//! Rust numerics — **bit-for-bit** for the deterministic quantizer, and
+//! to FP16-rounding fidelity for the chunked GEMM (whose intra-chunk f32
+//! summation order legitimately differs between the two backends).
+//!
+//! These tests require `make artifacts`; they skip (with a notice) when
+//! the artifacts directory is missing so that a bare `cargo test` stays
+//! green.
+
+use fp8train::numerics::gemm::{gemm, normalized_l2_distance};
+use fp8train::numerics::{FloatFormat, GemmPrecision, RoundMode, Xoshiro256};
+use fp8train::runtime::{artifacts_dir, HostTensor, Runtime};
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("quant_fp8.hlo.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+/// Interesting values: grid boundaries, ties, subnormals, saturation.
+fn probe_values(n: usize) -> Vec<f32> {
+    let mut v = vec![
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        1.1,
+        1.125,
+        1.375,
+        -1.2,
+        57344.0,
+        -57344.0,
+        60000.0,
+        1e9,
+        -1e9,
+        2f32.powi(-14),
+        2f32.powi(-16),
+        2f32.powi(-17),
+        2f32.powi(-16) * 1.5,
+        255.0,
+        133.0,
+        1.0 / 3.0,
+        std::f32::consts::PI,
+    ];
+    let mut rng = Xoshiro256::seed_from_u64(0xC0FFEE);
+    while v.len() < n {
+        let e = rng.below(60) as i32 - 30;
+        v.push(rng.uniform(-2.0, 2.0) * 2f32.powi(e));
+    }
+    v.truncate(n);
+    v
+}
+
+#[test]
+fn quantizer_bit_exact_fp8_and_fp16() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    for (name, fmt) in [("quant_fp8", FloatFormat::FP8), ("quant_fp16", FloatFormat::FP16)] {
+        let exe = rt.load_named(name).unwrap();
+        let xs = probe_values(4096);
+        let out = exe.run(&[HostTensor::new(&[4096], xs.clone())]).unwrap();
+        assert_eq!(out.len(), 1);
+        let got = &out[0].data;
+        for (i, (&x, &g)) in xs.iter().zip(got).enumerate() {
+            let want = fmt.quantize(x, RoundMode::NearestEven);
+            assert_eq!(
+                g.to_bits(),
+                want.to_bits(),
+                "{name}[{i}]: x={x} jax={g} rust={want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn chunked_gemm_matches_rust_fast_path() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_named("gemm_fp8").unwrap();
+    let (m, k, n) = (64usize, 512usize, 32usize);
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let q = |v: f32| FloatFormat::FP8.quantize(v, RoundMode::NearestEven);
+    let a: Vec<f32> = (0..m * k).map(|_| q(rng.uniform(-1.5, 1.5))).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| q(rng.uniform(-1.5, 1.5))).collect();
+
+    let out = exe
+        .run(&[
+            HostTensor::new(&[m, k], a.clone()),
+            HostTensor::new(&[k, n], b.clone()),
+        ])
+        .unwrap();
+    let jax = &out[0];
+    assert_eq!(jax.shape, vec![m, n]);
+
+    // Rust fast path (same chunk-granularity fidelity).
+    let rust = gemm(&GemmPrecision::fp8_paper(), &a, &b, m, k, n, 0);
+
+    // Intra-chunk f32 order differs → results agree to FP16 fidelity.
+    let dist = normalized_l2_distance(&jax.data, &rust);
+    assert!(dist < 2e-3, "normalized L2 {dist}");
+    // And the vast majority of entries are bit-identical (both sides round
+    // the same chunk partials the same way almost always).
+    let same = jax
+        .data
+        .iter()
+        .zip(&rust)
+        .filter(|(a, b)| a.to_bits() == b.to_bits())
+        .count();
+    assert!(
+        same as f64 / rust.len() as f64 > 0.9,
+        "only {same}/{} entries bit-equal",
+        rust.len()
+    );
+    // Both must differ from plain f32 GEMM (they are *reduced*-precision).
+    let f32_ref = gemm(&GemmPrecision::fp32(), &a, &b, m, k, n, 0);
+    assert_ne!(jax.data, f32_ref.as_slice());
+}
+
+#[test]
+fn axpy_sr_artifact_statistics_match_rust() {
+    if !have_artifacts() {
+        return;
+    }
+    // SR draws use different PRNGs (threefry vs xoshiro), so the contract
+    // is distributional: same mean drift, values on the FP16 grid.
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_named("axpy_sr").unwrap();
+    let n = 4096usize;
+    let w = vec![1.0f32; n];
+    let g = vec![1e-3f32; n];
+    let v = vec![0.0f32; n];
+    // artifact baked with lr=0.05, momentum=0.9, decay=1e-4; rbits input.
+    use fp8train::runtime::Input;
+    let mut rng = Xoshiro256::seed_from_u64(3);
+    let rbits: Vec<u32> = (0..3 * n).map(|_| rng.next_u32()).collect();
+    let out = exe
+        .run_inputs(&[
+            Input::F32(HostTensor::new(&[n], w.clone())),
+            Input::F32(HostTensor::new(&[n], g)),
+            Input::F32(HostTensor::new(&[n], v)),
+            Input::U32 {
+                shape: vec![3, n],
+                data: rbits,
+            },
+        ])
+        .unwrap();
+    let (w2, v2) = (&out[0], &out[1]);
+    let fmt = FloatFormat::FP16;
+    for &x in w2.data.iter().chain(v2.data.iter()) {
+        assert!(fmt.is_representable(x), "off-grid value {x}");
+    }
+    // Expected drift: w - lr·(g + decay·w) ≈ 1 - 0.05·(1e-3 + 1e-4) ≈ 0.999945
+    let mean: f64 = w2.data.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let expect = 1.0 - 0.05 * (1e-3 + 1e-4);
+    assert!(
+        (mean - expect).abs() < 5e-5,
+        "mean={mean} expect={expect}"
+    );
+}
+
+#[test]
+fn pjrt_fwd_logits_finite_and_policy_sensitive() {
+    if !have_artifacts() {
+        return;
+    }
+    use fp8train::runtime::PjrtEngine;
+    let rt = Runtime::cpu().unwrap();
+    let fp32 = PjrtEngine::load(&rt, "cifar_cnn_fp32", 5).unwrap();
+    let fp8 = PjrtEngine::load(&rt, "cifar_cnn_fp8", 5).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(6);
+    let x = HostTensor::new(
+        &[32, 3, 32, 32],
+        (0..32 * 3 * 32 * 32).map(|_| rng.uniform(0.0, 2.0)).collect(),
+    );
+    let l32 = fp32.logits(&x).unwrap();
+    let l8 = fp8.logits(&x).unwrap();
+    assert_eq!(l32.shape, vec![32, 10]);
+    assert_eq!(l8.shape, vec![32, 10]);
+    assert!(l32.data.iter().all(|v| v.is_finite()));
+    assert!(l8.data.iter().all(|v| v.is_finite()));
+    // Same init (same seed) but different GEMM precision → different logits.
+    assert_ne!(l32.data, l8.data);
+    // ...yet correlated (same weights modulo FP8 quantization).
+    let dist = normalized_l2_distance(&l8.data, &l32.data);
+    assert!(dist < 0.5, "fp8 vs fp32 logits too far apart: {dist}");
+}

@@ -1,0 +1,348 @@
+//! Property-based tests over the numerics substrate and training engine,
+//! via the in-tree `testkit` harness (seeded generators, replayable
+//! failures). Each property encodes an invariant the paper's scheme relies
+//! on.
+
+use fp8train::nn::models::ModelKind;
+use fp8train::nn::{softmax_xent, PrecisionPolicy, QuantCtx};
+use fp8train::numerics::accumulate::{acc_chunked, acc_f64};
+use fp8train::numerics::axpy::sgd_update;
+use fp8train::numerics::dot::{dot, dot_f32};
+use fp8train::numerics::gemm::{gemm, normalized_l2_distance, transpose};
+use fp8train::numerics::{FloatFormat, GemmPrecision, RoundMode, UpdatePrecision, Xoshiro256};
+use fp8train::tensor::{col2im, im2col, Conv2dGeom, Tensor};
+use fp8train::testkit::{allclose, forall, Gen};
+
+const FORMATS: [FloatFormat; 3] = [FloatFormat::FP8, FloatFormat::FP16, FloatFormat::IEEE_HALF];
+
+#[test]
+fn quantize_idempotent() {
+    forall("q(q(x)) == q(x)", |g: &mut Gen| {
+        let x = g.f32_any();
+        for fmt in FORMATS {
+            let q1 = fmt.quantize(x, RoundMode::NearestEven);
+            let q2 = fmt.quantize(q1, RoundMode::NearestEven);
+            if q1.to_bits() != q2.to_bits() && !(q1.is_nan() && q2.is_nan()) {
+                return Err(format!("{fmt}: {x} -> {q1} -> {q2}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_error_bounded_by_half_ulp() {
+    forall("|x - q(x)| <= ulp(x)/2 (nearest, in-range)", |g| {
+        let x = g.f32_in(-50000.0, 50000.0);
+        for fmt in FORMATS {
+            if x.abs() > fmt.max_normal() {
+                continue;
+            }
+            let q = fmt.quantize(x, RoundMode::NearestEven);
+            let e = if x == 0.0 {
+                fmt.emin()
+            } else {
+                (x.abs().log2().floor() as i32).max(fmt.emin())
+            };
+            let ulp = 2f64.powi(e - fmt.mbits as i32);
+            if ((x as f64) - (q as f64)).abs() > ulp / 2.0 + 1e-30 {
+                return Err(format!("{fmt}: x={x} q={q} ulp={ulp}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_monotone() {
+    forall("x <= y implies q(x) <= q(y)", |g| {
+        let a = g.f32_in(-1000.0, 1000.0);
+        let b = g.f32_in(-1000.0, 1000.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        for fmt in FORMATS {
+            let (ql, qh) = (
+                fmt.quantize(lo, RoundMode::NearestEven),
+                fmt.quantize(hi, RoundMode::NearestEven),
+            );
+            if ql > qh {
+                return Err(format!("{fmt}: q({lo})={ql} > q({hi})={qh}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_odd_symmetry() {
+    forall("q(-x) == -q(x) (nearest-even is sign-symmetric)", |g| {
+        let x = g.f32_any();
+        for fmt in FORMATS {
+            let a = fmt.quantize(-x, RoundMode::NearestEven);
+            let b = -fmt.quantize(x, RoundMode::NearestEven);
+            if a.to_bits() != b.to_bits() && !(a.is_nan() && b.is_nan()) {
+                return Err(format!("{fmt}: x={x} q(-x)={a} -q(x)={b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn encode_decode_roundtrip() {
+    forall("decode(encode(q(x))) == q(x)", |g| {
+        let x = g.f32_any();
+        for fmt in FORMATS {
+            let q = fmt.quantize(x, RoundMode::NearestEven);
+            if q.is_nan() {
+                continue;
+            }
+            let rt = fmt.decode(fmt.encode(q));
+            if rt.to_bits() != q.to_bits() {
+                return Err(format!("{fmt}: q={q} rt={rt}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sr_expectation_matches_value() {
+    forall("stochastic rounding unbiased", |g| {
+        let x = g.f32_in(0.1, 100.0);
+        let fmt = FloatFormat::FP8;
+        let mut rng = Xoshiro256::seed_from_u64(x.to_bits() as u64);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| fmt.quantize_rng(x, RoundMode::Stochastic, &mut rng) as f64)
+            .sum::<f64>()
+            / n as f64;
+        let ulp = 2f64.powi((x.abs().log2().floor() as i32) - 2);
+        if (mean - x as f64).abs() > 4.0 * ulp / (n as f64).sqrt() + 1e-9 {
+            return Err(format!("x={x} mean={mean} ulp={ulp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chunked_dot_always_beats_or_ties_sequential_on_positive_data() {
+    forall("chunking reduces error for non-negative-mean data", |g| {
+        let n = g.usize_in(1024, 16384);
+        let xs: Vec<f32> = (0..n).map(|_| g.f32_in(0.0, 2.0)).collect();
+        let exact = acc_f64(&xs);
+        let mut r1 = Xoshiro256::seed_from_u64(1);
+        let mut r2 = Xoshiro256::seed_from_u64(1);
+        let seq = acc_chunked(FloatFormat::FP16, RoundMode::NearestEven, 1, &xs, &mut r1) as f64;
+        let chk = acc_chunked(FloatFormat::FP16, RoundMode::NearestEven, 64, &xs, &mut r2) as f64;
+        if (chk - exact).abs() > (seq - exact).abs() + exact * 0.01 {
+            return Err(format!("n={n} exact={exact} seq={seq} chunked={chk}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dot_chunk_equal_to_len_is_single_chunk() {
+    forall("CL >= len behaves as one chunk", |g| {
+        let n = g.usize_in(1, 256);
+        let q = |v: f32| FloatFormat::FP8.quantize(v, RoundMode::NearestEven);
+        let a: Vec<f32> = (0..n).map(|_| q(g.f32_in(-2.0, 2.0))).collect();
+        let b: Vec<f32> = (0..n).map(|_| q(g.f32_in(-2.0, 2.0))).collect();
+        let mut r1 = Xoshiro256::seed_from_u64(2);
+        let mut r2 = Xoshiro256::seed_from_u64(2);
+        let p1 = GemmPrecision::fp8_paper_exact().with_chunk(n);
+        let p2 = GemmPrecision::fp8_paper_exact().with_chunk(10 * n + 7);
+        let d1 = dot(&p1, &a, &b, &mut r1);
+        let d2 = dot(&p2, &a, &b, &mut r2);
+        if d1 != d2 {
+            return Err(format!("n={n}: {d1} vs {d2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fp32_dot_matches_f64_reference() {
+    forall("fp32 dot ≈ f64 dot", |g| {
+        let n = g.usize_in(1, 2048);
+        let a: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let got = dot_f32(&a, &b) as f64;
+        if (got - exact).abs() > 1e-3 * (n as f64).sqrt() {
+            return Err(format!("n={n} got={got} exact={exact}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemm_transpose_identity() {
+    forall("(AB)^T = B^T A^T", |g| {
+        let (m, k, n) = (g.usize_in(1, 12), g.usize_in(1, 48), g.usize_in(1, 12));
+        let q = |v: f32| FloatFormat::FP8.quantize(v, RoundMode::NearestEven);
+        let a: Vec<f32> = (0..m * k).map(|_| q(g.f32_in(-2.0, 2.0))).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| q(g.f32_in(-2.0, 2.0))).collect();
+        let prec = GemmPrecision::fp8_paper_exact();
+        let ab = gemm(&prec, &a, &b, m, k, n, 0);
+        let bt_at = gemm(
+            &prec,
+            &transpose(&b, k, n),
+            &transpose(&a, m, k),
+            n,
+            k,
+            m,
+            0,
+        );
+        let abt = transpose(&ab, m, n);
+        if abt != bt_at {
+            return Err(format!("m={m} k={k} n={n}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn gemm_error_decreases_with_chunking() {
+    forall("normalized L2 error: CL=64 <= CL=1 on positive operands", |g| {
+        let k = g.usize_in(4096, 16384);
+        let q = |v: f32| FloatFormat::FP8.quantize(v, RoundMode::NearestEven);
+        let a: Vec<f32> = (0..2 * k).map(|_| q(g.f32_in(0.25, 1.75))).collect();
+        let b: Vec<f32> = (0..k).map(|_| q(g.f32_in(0.25, 1.75))).collect();
+        let exact = gemm(&GemmPrecision::fp32(), &a, &b, 2, k, 1, 0);
+        let nochunk = gemm(&GemmPrecision::fp8_nochunk(), &a, &b, 2, k, 1, 0);
+        let chunked = gemm(&GemmPrecision::fp8_paper_exact(), &a, &b, 2, k, 1, 0);
+        let d_no = normalized_l2_distance(&nochunk, &exact);
+        let d_ch = normalized_l2_distance(&chunked, &exact);
+        if d_ch > d_no {
+            return Err(format!("k={k} chunked {d_ch} > nochunk {d_no}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sr_sgd_is_unbiased_over_many_steps() {
+    forall("SR weight updates track fp32 in expectation", |g| {
+        let lr = g.f32_in(0.01, 0.2);
+        let gval = g.f32_in(1e-4, 1e-3);
+        let n = 256;
+        let steps = 400;
+        let p16 = UpdatePrecision::fp16_stochastic();
+        let mut rng = Xoshiro256::seed_from_u64(lr.to_bits() as u64);
+        let mut w = vec![1.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for _ in 0..steps {
+            let mut grad = vec![gval; n];
+            sgd_update(&p16, &mut w, &mut grad, &mut v, lr, 0.0, 0.0, &mut rng);
+        }
+        let expect = 1.0 - steps as f32 * lr * gval;
+        let mean: f64 = w.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        if !allclose(mean as f32, expect, 0.05, 1e-3) {
+            return Err(format!("lr={lr} g={gval} mean={mean} expect={expect}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn im2col_col2im_adjoint() {
+    forall("<im2col(x), y> == <x, col2im(y)>", |g| {
+        let geom = Conv2dGeom {
+            in_c: g.usize_in(1, 4),
+            in_h: g.usize_in(3, 9),
+            in_w: g.usize_in(3, 9),
+            k: 3,
+            stride: g.usize_in(1, 2),
+            pad: g.usize_in(0, 1),
+        };
+        if geom.in_h + 2 * geom.pad < geom.k || geom.in_w + 2 * geom.pad < geom.k {
+            return Ok(());
+        }
+        let n = 2;
+        let x = Tensor::from_vec(
+            &[n, geom.in_c, geom.in_h, geom.in_w],
+            (0..n * geom.in_c * geom.in_h * geom.in_w)
+                .map(|_| g.f32_in(-1.0, 1.0))
+                .collect(),
+        );
+        let cols = im2col(&x, &geom);
+        let y = Tensor::from_vec(
+            &cols.shape.clone(),
+            (0..cols.len()).map(|_| g.f32_in(-1.0, 1.0)).collect(),
+        );
+        let lhs: f64 = cols
+            .data
+            .iter()
+            .zip(&y.data)
+            .map(|(&a, &b)| (a * b) as f64)
+            .sum();
+        let back = col2im(&y, &geom, n);
+        let rhs: f64 = x
+            .data
+            .iter()
+            .zip(&back.data)
+            .map(|(&a, &b)| (a * b) as f64)
+            .sum();
+        if (lhs - rhs).abs() > 1e-2 {
+            return Err(format!("{geom:?}: {lhs} vs {rhs}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn softmax_gradient_rows_sum_to_zero() {
+    forall("sum_j dlogits[i,j] == 0", |g| {
+        let (n, c) = (g.usize_in(1, 8), g.usize_in(2, 20));
+        let logits = Tensor::from_vec(&[n, c], (0..n * c).map(|_| g.f32_in(-5.0, 5.0)).collect());
+        let labels: Vec<usize> = (0..n).map(|i| i % c).collect();
+        let out = softmax_xent(&logits, &labels, FloatFormat::FP32, 1.0);
+        for i in 0..n {
+            let s: f32 = out.dlogits.data[i * c..(i + 1) * c].iter().sum();
+            if s.abs() > 1e-5 {
+                return Err(format!("row {i} sums to {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn model_backward_shapes_match_input_under_every_policy() {
+    use fp8train::nn::Layer;
+    let policies = [
+        PrecisionPolicy::fp32(),
+        PrecisionPolicy::fp8_paper(),
+        PrecisionPolicy::fp8_nochunk(),
+        PrecisionPolicy::fp16_upd_nearest(),
+    ];
+    for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
+        for policy in &policies {
+            let mut m = kind.build(3);
+            let ctx = QuantCtx::new(policy, 0, true);
+            let x = Tensor::zeros(&kind.input().shape(2));
+            let y = m.forward(x, &ctx);
+            assert_eq!(y.shape, vec![2, kind.classes()]);
+            let dx = m.backward(Tensor::full(&y.shape, 0.1), &ctx);
+            assert_eq!(dx.shape, kind.input().shape(2), "{} {}", kind.id(), policy.name);
+        }
+    }
+}
+
+#[test]
+fn gemm_sr_determinism_per_seed() {
+    forall("emulated SR GEMM is schedule-independent", |g| {
+        let (m, k, n) = (g.usize_in(1, 16), g.usize_in(1, 128), g.usize_in(1, 8));
+        let q = |v: f32| FloatFormat::FP8.quantize(v, RoundMode::NearestEven);
+        let a: Vec<f32> = (0..m * k).map(|_| q(g.f32_in(-1.0, 1.0))).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| q(g.f32_in(-1.0, 1.0))).collect();
+        let prec = GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic);
+        let c1 = gemm(&prec, &a, &b, m, k, n, 9);
+        let c2 = gemm(&prec, &a, &b, m, k, n, 9);
+        if c1 != c2 {
+            return Err(format!("m={m} k={k} n={n}"));
+        }
+        Ok(())
+    });
+}

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench gemm` (pin FP8TRAIN_THREADS for stability).
 
 use fp8train::bench_util::run;
-use fp8train::numerics::gemm::gemm;
+use fp8train::numerics::gemm::{gemm, gemm_bt, transpose};
 use fp8train::numerics::{FloatFormat, GemmPrecision, RoundMode, Xoshiro256};
 
 fn mat(r: usize, c: usize, seed: u64) -> Vec<f32> {
@@ -39,6 +39,25 @@ fn main() {
     bench_shape("forward", 32 * 256, 400, 32);
     bench_shape("gradient_longK", 32, 32 * 256, 400); // K = batch·spatial (swamping-prone)
     bench_shape("square", 256, 256, 256);
+    // Tall-skinny: the m·n·k cost model now parallelizes this (the old
+    // m·n-only threshold kept it serial); with FP8TRAIN_THREADS=1 it
+    // measures the panel kernel alone.
+    bench_shape("tall_skinny", 4096, 512, 4);
+
+    println!("\n== packed-operand path (pre-transposed Bᵀ, square 256³) ==");
+    let (m, k, n) = (256, 256, 256);
+    let a = mat(m, k, 5);
+    let b = mat(k, n, 6);
+    let bt = transpose(&b, k, n);
+    let macs = (m * k * n) as f64;
+    for (name, prec) in [
+        ("fp32", GemmPrecision::fp32()),
+        ("fp8_fast_cl64", GemmPrecision::fp8_paper()),
+    ] {
+        run(&format!("gemm/packed/{name}"), Some(macs), || {
+            gemm_bt(&prec, &a, &bt, m, k, n, 7)[0] as f64
+        });
+    }
 
     println!("\n== chunk-size ablation (fast path, 256^3) ==");
     let (m, k, n) = (256, 256, 256);

@@ -40,6 +40,13 @@ fn main() {
         );
     }
 
+    println!("\n== operand packing (the transpose the packed cache elides) ==");
+    let (r, s) = (512, 512);
+    let src: Vec<f32> = (0..r * s).map(|i| i as f32).collect();
+    run("pack/transpose_512x512", Some((r * s) as f64), || {
+        fp8train::numerics::gemm::transpose(&src, r, s)[1] as f64
+    });
+
     println!("\n== accumulation strategies (N = {n}, FP16) ==");
     let f16 = FloatFormat::FP16;
     let nr = RoundMode::NearestEven;

@@ -20,8 +20,20 @@ fn main() {
         return;
     }
     std::env::set_var("FP8TRAIN_BENCH_FAST", "1");
-    let rt = Runtime::cpu().expect("pjrt cpu client");
-    println!("platform: {}", rt.platform());
+    // Skip cleanly when the crate was built without the PJRT backing
+    // (default: the xla bindings are gated behind --cfg fp8train_pjrt).
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    println!(
+        "platform: {} (native engine threads={})",
+        rt.platform(),
+        fp8train::numerics::gemm::num_threads()
+    );
 
     println!("\n== artifact load+compile (one-time cost) ==");
     for name in ["quant_fp8", "gemm_fp8", "cifar_cnn_fp32", "cifar_cnn_fp8"] {

@@ -12,6 +12,10 @@ use fp8train::nn::{Layer, PrecisionPolicy};
 
 fn main() {
     std::env::set_var("FP8TRAIN_BENCH_FAST", "1"); // steps are seconds-scale
+    println!(
+        "threads={} (pin FP8TRAIN_THREADS=1 for per-core comparisons)",
+        fp8train::numerics::gemm::num_threads()
+    );
     let batch = 16;
     for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
         let ds = SyntheticDataset::for_model(kind, 1);

@@ -42,6 +42,40 @@ impl std::fmt::Display for BenchResult {
     }
 }
 
+impl BenchResult {
+    /// Render this result as a JSON object (no `serde` offline; names are
+    /// escaped, so the output is always valid JSON). Times in nanoseconds.
+    pub fn to_json(&self) -> String {
+        let opt = |v: Option<f64>| v.map(|u| format!("{u:.6e}")).unwrap_or_else(|| "null".into());
+        format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"mean_ns\":{},\"p50_ns\":{},\"p99_ns\":{},\"units_per_iter\":{},\"units_per_sec\":{}}}",
+            json_escape(&self.name),
+            self.iters,
+            self.mean.as_nanos(),
+            self.p50.as_nanos(),
+            self.p99.as_nanos(),
+            opt(self.units_per_iter),
+            opt(self.throughput()),
+        )
+    }
+}
+
+/// Escape a string for embedding in a JSON document.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn human_rate(r: f64) -> String {
     if r >= 1e9 {
         format!("{:.2}G/s", r / 1e9)
@@ -145,6 +179,29 @@ mod tests {
         assert!(r.iters > 0);
         assert!(r.mean.as_nanos() > 0);
         assert!(r.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_rendering() {
+        let r = BenchResult {
+            name: "gemm/\"odd\"/name".into(),
+            iters: 10,
+            mean: Duration::from_nanos(1500),
+            p50: Duration::from_nanos(1400),
+            p99: Duration::from_nanos(2000),
+            units_per_iter: Some(100.0),
+        };
+        let j = r.to_json();
+        assert!(j.contains("\\\"odd\\\""), "{j}");
+        assert!(j.contains("\"mean_ns\":1500"), "{j}");
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        let none = BenchResult { units_per_iter: None, ..r };
+        assert!(none.to_json().contains("\"units_per_sec\":null"));
+    }
+
+    #[test]
+    fn json_escape_controls() {
+        assert_eq!(super::json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
     }
 
     #[test]

@@ -32,6 +32,9 @@ USAGE:
                 fp16_upd_stochastic fp8_reps_only dorefa wage dfp16 mpt_fp16 ...
   fp8train formats
   fp8train artifacts [--dir DIR]
+  fp8train bench [--json PATH] [--fast]
+      GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
+      shapes; --json writes a machine-readable report (default BENCH_GEMM.json)
 ";
 
 fn main() {
@@ -55,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "formats" => cmd_formats(),
         "artifacts" => cmd_artifacts(args),
+        "bench" => cmd_bench(args),
         "" | "help" => {
             println!("{USAGE}");
             Ok(())
@@ -138,6 +142,79 @@ fn short_policy(name: &str) -> Result<&'static str> {
         "fp8_paper" | "fp8" => "fp8",
         other => bail!("no AOT artifact for policy {other:?} (available: fp32, fp8_paper)"),
     })
+}
+
+/// The Fig. 6 Gradient-GEMM shapes (CIFAR10-ResNet conv layers, batch 8:
+/// `(m, k, n) = (oc, N·oh·ow, in_c·kh·kw)` — K is the swamping-critical
+/// reduction axis), plus a square control. Tracked across PRs through
+/// `BENCH_GEMM.json`.
+const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
+    ("fig6_early_grad", 16, 8192, 144),
+    ("fig6_late_grad", 64, 512, 576),
+    ("square_256", 256, 256, 256),
+];
+
+/// `fp8train bench [--json PATH] [--fast]` — GEMM throughput for the three
+/// emulation paths at the Fig. 6 shapes, optionally as a JSON report so the
+/// perf trajectory stays machine-readable across PRs. Pin
+/// `FP8TRAIN_THREADS=1` for stable single-core numbers.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use fp8train::bench_util;
+    use fp8train::numerics::gemm::{gemm, num_threads};
+    use fp8train::numerics::GemmPrecision;
+
+    args.check_known(&["json", "fast"])?;
+    if args.flag("fast") {
+        std::env::set_var("FP8TRAIN_BENCH_FAST", "1");
+    }
+    let json_path = args
+        .opt("json")
+        .map(str::to_string)
+        .or_else(|| args.flag("json").then(|| "BENCH_GEMM.json".to_string()));
+
+    let mat = |r: usize, c: usize, seed: u64| fp8train::testkit::fp8_matrix(r, c, seed, -1.5, 1.5);
+    let paths: [(&str, GemmPrecision); 3] = [
+        ("fp32", GemmPrecision::fp32()),
+        ("fp8_fast_cl64", GemmPrecision::fp8_paper()),
+        ("fp8_exact_cl64", GemmPrecision::fp8_paper_exact()),
+    ];
+
+    let mut shape_docs = Vec::new();
+    for (label, m, k, n) in BENCH_SHAPES {
+        let a = mat(m, k, 1);
+        let b = mat(k, n, 2);
+        let macs = (m * k * n) as f64;
+        println!("\n== {label}: [{m}x{k}]·[{k}x{n}] ({macs:.2e} MACs/iter) ==");
+        let mut path_docs = Vec::new();
+        for (pname, prec) in &paths {
+            let r = bench_util::run(&format!("bench/{label}/{pname}"), Some(macs), || {
+                gemm(prec, &a, &b, m, k, n, 7)[0] as f64
+            });
+            let gmacs = r.throughput().unwrap_or(0.0) / 1e9;
+            path_docs.push(format!(
+                "\"{pname}\":{{\"gmacs_per_sec\":{gmacs:.4},\"result\":{}}}",
+                r.to_json()
+            ));
+        }
+        shape_docs.push(format!(
+            "{{\"label\":\"{label}\",\"m\":{m},\"k\":{k},\"n\":{n},\"macs\":{},\"paths\":{{{}}}}}",
+            m * k * n,
+            path_docs.join(",")
+        ));
+    }
+    let doc = format!(
+        "{{\"schema\":1,\"threads\":{},\"fast_mode\":{},\"shapes\":[{}]}}\n",
+        num_threads(),
+        std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
+        shape_docs.join(",")
+    );
+    if let Some(path) = json_path {
+        std::fs::write(&path, &doc).with_context(|| format!("write {path}"))?;
+        println!("\nwrote {path}");
+    } else {
+        println!("\n{doc}");
+    }
+    Ok(())
 }
 
 fn cmd_formats() -> Result<()> {

@@ -118,8 +118,10 @@ impl Layer for Conv2d {
         p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
 
         let prec = p.gemm_for(GemmRole::Forward, self.pos);
-        let mut rows = cols_q.matmul(
-            &w_q.t(),
+        // W is stored [oc, in_c·k·k] — already the packed-Bᵀ layout for
+        // Y = Cols·Wᵀ, so the forward GEMM performs no transpose.
+        let mut rows = cols_q.matmul_t(
+            &w_q,
             &prec,
             ctx.gemm_seed(self.layer_id, GemmRole::Forward),
         );

@@ -79,7 +79,9 @@ impl Layer for Linear {
         p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
 
         let prec = p.gemm_for(GemmRole::Forward, self.pos);
-        let mut y = x_q.matmul(&w_q.t(), &prec, ctx.gemm_seed(self.layer_id, GemmRole::Forward));
+        // W is stored [out, in] — exactly the packed-Bᵀ layout the GEMM
+        // consumes for Y = X·Wᵀ, so the forward pass performs no transpose.
+        let mut y = x_q.matmul_t(&w_q, &prec, ctx.gemm_seed(self.layer_id, GemmRole::Forward));
         if let Some(b) = &self.b {
             y.add_row(&b.value.data);
         }

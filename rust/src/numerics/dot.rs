@@ -139,6 +139,76 @@ pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Panel width of the blocked GEMM microkernel: how many B columns one
+/// strip pass computes per traversal of an A row segment. 8 columns × 4
+/// unroll lanes = 32 live f32 accumulators — comfortably register-resident
+/// on x86-64/AArch64.
+pub const NR: usize = 8;
+
+/// Strip dot product: `out[c] = dot_f32(a, col(col0 + c)[off .. off + a.len()])`
+/// for `c in 0..w`, in **one pass** over `a`. Column `j` of B is the
+/// contiguous slice `bt[j*stride .. (j+1)*stride]` (B packed transposed).
+///
+/// Per column this performs the exact same four-lane accumulation sequence
+/// as [`dot_f32`] — same operations, same order — so each output is
+/// **bit-identical** to the scalar kernel (`strip_matches_dot_f32` checks
+/// this exhaustively over lengths). The win is purely locality: the `a`
+/// segment is loaded once per strip instead of once per column.
+#[inline]
+pub(crate) fn dot_f32_strip(
+    a: &[f32],
+    bt: &[f32],
+    col0: usize,
+    stride: usize,
+    off: usize,
+    w: usize,
+    out: &mut [f32; NR],
+) {
+    debug_assert!(w >= 1 && w <= NR);
+    debug_assert!(off + a.len() <= stride);
+    debug_assert!((col0 + w) * stride <= bt.len());
+    let len = a.len();
+    let n4 = len & !3;
+    let mut s = [[0f32; 4]; NR];
+    let mut i = 0;
+    while i < n4 {
+        let (a0, a1, a2, a3) = (a[i], a[i + 1], a[i + 2], a[i + 3]);
+        for c in 0..w {
+            let cb = (col0 + c) * stride + off + i;
+            s[c][0] += a0 * bt[cb];
+            s[c][1] += a1 * bt[cb + 1];
+            s[c][2] += a2 * bt[cb + 2];
+            s[c][3] += a3 * bt[cb + 3];
+        }
+        i += 4;
+    }
+    for c in 0..w {
+        let mut acc = (s[c][0] + s[c][1]) + (s[c][2] + s[c][3]);
+        let cb = (col0 + c) * stride + off;
+        let mut j = n4;
+        while j < len {
+            acc += a[j] * bt[cb + j];
+            j += 1;
+        }
+        out[c] = acc;
+    }
+}
+
+impl GemmPrecision {
+    /// SR bit draws the fast emulated path consumes per output element:
+    /// one for the per-chunk partial quantization plus one for the
+    /// inter-chunk accumulate, per chunk. Used to batch draws per panel
+    /// while preserving the sequential per-dot draw order.
+    #[inline]
+    pub(crate) fn fast_draws_per_dot(&self, k: usize) -> usize {
+        if k == 0 {
+            return 0;
+        }
+        let chunk = self.chunk.max(1).min(k);
+        2 * k.div_ceil(chunk)
+    }
+}
+
 fn dot_exact<R: RoundBits>(
     prec: &GemmPrecision,
     chunk: usize,
@@ -252,6 +322,49 @@ mod tests {
     fn empty_dot_is_zero() {
         let mut rng = Xoshiro256::seed_from_u64(11);
         assert_eq!(dot(&GemmPrecision::fp8_paper(), &[], &[], &mut rng), 0.0);
+    }
+
+    #[test]
+    fn strip_matches_dot_f32_bitwise() {
+        // Every length (covering all ×4-unroll tails), every strip width,
+        // with a nonzero column offset: the strip kernel must reproduce
+        // dot_f32 bit-for-bit per column.
+        let mut rng = Xoshiro256::seed_from_u64(20);
+        for len in 0..33 {
+            let stride = len + 3; // columns longer than the probed segment
+            let off = 2;
+            let a: Vec<f32> = (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let ncols = NR + 2;
+            let bt: Vec<f32> = (0..ncols * stride).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            for w in 1..=NR {
+                let col0 = 1;
+                let mut out = [0f32; NR];
+                dot_f32_strip(&a, &bt, col0, stride, off, w, &mut out);
+                for c in 0..w {
+                    let cb = (col0 + c) * stride + off;
+                    let want = dot_f32(&a, &bt[cb..cb + len]);
+                    assert_eq!(
+                        out[c].to_bits(),
+                        want.to_bits(),
+                        "len={len} w={w} c={c}: {} vs {want}",
+                        out[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_draws_per_dot_counts_chunks() {
+        let p = GemmPrecision::fp8_paper(); // chunk 64
+        assert_eq!(p.fast_draws_per_dot(0), 0);
+        assert_eq!(p.fast_draws_per_dot(1), 2);
+        assert_eq!(p.fast_draws_per_dot(64), 2);
+        assert_eq!(p.fast_draws_per_dot(65), 4);
+        assert_eq!(p.fast_draws_per_dot(256), 8);
+        // chunk longer than the vector: single chunk.
+        let q = p.with_chunk(usize::MAX);
+        assert_eq!(q.fast_draws_per_dot(1000), 2);
     }
 
     #[test]

@@ -266,17 +266,55 @@ impl FloatFormat {
     }
 
     /// Quantize a slice in place (deterministic modes).
+    ///
+    /// Nearest-even (the data-path conversion mode, applied to every stored
+    /// activation/weight/error tensor each step) takes a branch-hoisted
+    /// slice loop: format constants are computed once and each in-range
+    /// element runs the straight-line add-half-ulp bit trick, with the rare
+    /// specials (NaN/Inf, target-subnormal range) falling through to the
+    /// general path. Bit-identical to per-element [`quantize`](Self::quantize).
     pub fn quantize_slice(self, xs: &mut [f32], mode: RoundMode) {
+        if self.mbits >= 23 && self.ebits >= 8 {
+            return; // fp32 (or wider): identity
+        }
+        if matches!(mode, RoundMode::NearestEven) && self.mbits < 23 {
+            let shift = 23 - self.mbits;
+            let emin = self.emin();
+            let max_bits = self.max_normal().to_bits();
+            let half = (1u32 << (shift - 1)) - 1;
+            let keep_mask = !((1u32 << shift) - 1);
+            for v in xs.iter_mut() {
+                let u = v.to_bits();
+                let e_field = (u >> 23) & 0xFF;
+                if e_field != 0 && e_field != 0xFF && (e_field as i32 - 127) >= emin {
+                    let round = ((u >> shift) & 1) + half;
+                    let q = (((u & 0x7FFF_FFFF) + round) & keep_mask).min(max_bits);
+                    *v = f32::from_bits((u & 0x8000_0000) | q);
+                } else {
+                    *v = self.quantize_with_bits(*v, RoundMode::NearestEven, 0);
+                }
+            }
+            return;
+        }
         for v in xs {
             *v = self.quantize(*v, mode);
         }
     }
 
     /// Quantize a slice in place, drawing stochastic bits from `rng`.
+    ///
+    /// SR bits are drawn in fixed-size batches — one `u32` per element, in
+    /// slice order, so the stream consumption is identical to the scalar
+    /// loop it replaces.
     pub fn quantize_slice_rng<R: RoundBits>(self, xs: &mut [f32], mode: RoundMode, rng: &mut R) {
         if mode.is_stochastic() {
-            for v in xs {
-                *v = self.quantize_with_bits(*v, mode, rng.next_bits());
+            const BATCH: usize = 64;
+            let mut bits = [0u32; BATCH];
+            for chunk in xs.chunks_mut(BATCH) {
+                rng.fill_bits(&mut bits[..chunk.len()]);
+                for (v, &b) in chunk.iter_mut().zip(bits.iter()) {
+                    *v = self.quantize_with_bits(*v, mode, b);
+                }
             }
         } else {
             self.quantize_slice(xs, mode);
@@ -499,6 +537,67 @@ mod tests {
             let rt = f16.decode(f16.encode(q));
             assert_eq!(rt.to_bits(), q.to_bits(), "x={x} q={q} rt={rt}");
         }
+    }
+
+    #[test]
+    fn quantize_slice_bitwise_matches_scalar() {
+        // The branch-hoisted slice loop vs the scalar quantizer, across
+        // normals, target-subnormals, f32-subnormals, specials, saturation.
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let mut xs: Vec<f32> = (0..4096)
+            .map(|_| (rng.next_f32() - 0.5) * 2f32.powi((rng.below(80) as i32) - 40))
+            .collect();
+        xs.extend_from_slice(&[
+            0.0,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1e-40,
+            -1e-40,
+            1e9,
+            -1e9,
+            2f32.powi(-16),
+            2f32.powi(-17),
+        ]);
+        for fmt in [
+            FloatFormat::FP8,
+            FloatFormat::FP16,
+            FloatFormat::IEEE_HALF,
+            FloatFormat::BF16,
+        ] {
+            for mode in [RoundMode::NearestEven, RoundMode::Truncate, RoundMode::NearestAway] {
+                let mut got = xs.clone();
+                fmt.quantize_slice(&mut got, mode);
+                for (&x, &q) in xs.iter().zip(&got) {
+                    let want = fmt.quantize(x, mode);
+                    assert!(
+                        q.to_bits() == want.to_bits() || (q.is_nan() && want.is_nan()),
+                        "{fmt} {mode:?}: x={x} slice={q} scalar={want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_slice_rng_matches_scalar_stream() {
+        // Batched SR draws consume the stream in the same order as the
+        // scalar loop: identical seeds must give identical outputs.
+        let mut rng = Xoshiro256::seed_from_u64(101);
+        let xs: Vec<f32> = (0..333).map(|_| rng.uniform(-4.0, 4.0)).collect();
+        let fmt = FloatFormat::FP8;
+        let mut batched = xs.clone();
+        let mut r1 = Xoshiro256::seed_from_u64(5);
+        fmt.quantize_slice_rng(&mut batched, RoundMode::Stochastic, &mut r1);
+        let mut scalar = xs.clone();
+        let mut r2 = Xoshiro256::seed_from_u64(5);
+        for v in scalar.iter_mut() {
+            *v = fmt.quantize_with_bits(*v, RoundMode::Stochastic, r2.next_bits());
+        }
+        assert_eq!(batched, scalar);
+        // And the generators end in the same state.
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 
     #[test]

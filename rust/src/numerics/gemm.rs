@@ -2,38 +2,40 @@
 //! GEMMs of Fig. 2(a) (Forward, Backward, Gradient; convolutions are
 //! lowered to GEMM per §2.2).
 //!
-//! `C[M,N] = A[M,K] · B[K,N]`, row-major. Two execution paths:
+//! `C[M,N] = A[M,K] · B[K,N]`, row-major. Three execution paths:
 //!
 //! - **f32 path** (`GemmPrecision::fp32()`): blocked, multi-threaded native
 //!   f32 — the FP32 baseline of every experiment.
-//! - **emulated path**: operands are assumed pre-quantized to `fmt_mult`
-//!   (done once per tensor by the quantization layer), each output element
-//!   is the chunk-accumulated dot product of Fig. 3(a) in `fmt_acc`.
+//! - **fast emulated path**: operands are assumed pre-quantized to
+//!   `fmt_mult` (done once per tensor by the quantization layer); per-chunk
+//!   f32 partials are rounded into `FP_acc` once per chunk (see
+//!   [`super::dot`] for the fidelity contract).
+//! - **exact emulated path** (`prec.exact`): every addition individually
+//!   re-rounded — the bit-true reference, kept as the simple per-dot loop.
+//!
+//! # Execution layer
+//!
+//! The f32 and fast paths run **panel kernels**: B is packed transposed
+//! (`bt`, once per GEMM — or zero times when the caller already holds the
+//! packed operand, see [`gemm_bt_into`] and `Tensor::packed_t`), and each
+//! A row is swept against [`NR`]-column strips of `bt`, computing all strip
+//! columns in one cache-resident pass per chunk before the per-chunk
+//! `FP_acc` rounding. Rows are distributed over the persistent worker pool
+//! in [`super::pool`] when the `m·n·k` cost model says the job is worth
+//! fanning out.
 //!
 //! Determinism under parallelism: stochastic rounding derives one RNG
-//! stream per output row from the caller's seed, so results are identical
-//! regardless of thread count or scheduling.
+//! stream per output row from the caller's seed, and the panel kernel
+//! draws SR bits in per-strip batches **in the same per-column order** the
+//! sequential per-dot path would use — so results are identical regardless
+//! of thread count, scheduling, or panel width.
 
-use super::dot::{dot, dot_f32, GemmPrecision};
-use super::rng::{SplitMix64, Xoshiro256};
+use super::dot::{dot, dot_f32_strip, GemmPrecision, NR};
+use super::pool::{self, parallel_worthwhile, SendPtr};
+use super::rng::{RoundBits, SplitMix64, Xoshiro256};
 
-/// How many worker threads GEMM and the training engine use. Overridable
-/// via the `FP8TRAIN_THREADS` environment variable (benches pin it to 1 for
-/// stable measurements).
-pub fn num_threads() -> usize {
-    static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
-        std::env::var("FP8TRAIN_THREADS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .filter(|&n| n >= 1)
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism()
-                    .map(|n| n.get())
-                    .unwrap_or(1)
-            })
-    });
-    *N
-}
+pub use super::pool::num_threads;
+pub use super::pool::PAR_MACS_THRESHOLD;
 
 /// `C = A(m×k) · B(k×n)` with the given precision. `seed` feeds stochastic
 /// rounding (ignored by deterministic modes).
@@ -65,6 +67,70 @@ pub fn gemm_into(
     n: usize,
     seed: u64,
 ) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    let bt = transpose(b, k, n);
+    gemm_bt_into(prec, a, &bt, c, m, k, n, seed);
+}
+
+/// Packed-operand GEMM: `bt` is **Bᵀ**, row-major `[n, k]` — i.e. column
+/// `j` of B stored contiguously. This is the layout every kernel consumes;
+/// callers that already hold it (cached weight packs, `matmul_t`) skip the
+/// per-call transpose entirely.
+pub fn gemm_bt(
+    prec: &GemmPrecision,
+    a: &[f32],
+    bt: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    gemm_bt_into(prec, a, bt, &mut c, m, k, n, seed);
+    c
+}
+
+/// In-place packed-operand GEMM (see [`gemm_bt`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bt_into(
+    prec: &GemmPrecision,
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) {
+    gemm_bt_into_with_threads(prec, a, bt, c, m, k, n, seed, num_threads());
+}
+
+/// [`gemm_bt_into`] with an explicit worker-count cap. Results are
+/// bit-identical for every `threads` value (the equivalence tests sweep
+/// {1, 4, max}); the cap only bounds fan-out.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bt_into_with_threads(
+    prec: &GemmPrecision,
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(bt.len(), n * k, "Bᵀ shape mismatch");
     assert_eq!(c.len(), m * n, "C shape mismatch");
     if m == 0 || n == 0 {
         return;
@@ -74,9 +140,11 @@ pub fn gemm_into(
         return;
     }
     if prec.is_fp32() {
-        gemm_f32(a, b, c, m, k, n);
+        gemm_f32_bt(a, bt, c, m, k, n, threads);
+    } else if prec.exact {
+        gemm_emulated_exact(prec, a, bt, c, m, k, n, seed, threads);
     } else {
-        gemm_emulated(prec, a, b, c, m, k, n, seed);
+        gemm_emulated_fast(prec, a, bt, c, m, k, n, seed, threads);
     }
 }
 
@@ -105,64 +173,141 @@ pub fn transpose_into(src: &[f32], dst: &mut [f32], r: usize, s: usize) {
     }
 }
 
-/// Split `[0, m)` into per-thread ranges and run `f(range)` on scoped
-/// threads. `f` receives disjoint mutable row-slices of `c`.
-fn parallel_rows<F>(c: &mut [f32], m: usize, n: usize, f: F)
+/// The per-row deterministic SR stream: derived from `(seed, row)` only,
+/// so any scheduling of rows across workers produces identical results.
+#[inline]
+fn row_rng(seed: u64, i: usize) -> Xoshiro256 {
+    let mut sm = SplitMix64::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    Xoshiro256::seed_from_u64(sm.next_u64())
+}
+
+/// Run `f(row_index, row_slice)` for every row of `c`, fanning out to the
+/// persistent pool when the `m·n·k` cost model qualifies. Row blocks are
+/// claimed dynamically so uneven per-row cost balances.
+fn parallel_rows<F>(c: &mut [f32], m: usize, n: usize, k: usize, threads: usize, f: F)
 where
-    F: Fn(usize, &mut [f32]) + Sync, // (row index, row slice)
+    F: Fn(usize, &mut [f32]) + Sync,
 {
-    let threads = num_threads().min(m.max(1));
-    if threads <= 1 || m * n < 16 * 1024 {
+    let threads = threads.max(1).min(m.max(1));
+    if threads == 1 || !parallel_worthwhile(m, n, k) {
         for (i, row) in c.chunks_mut(n).enumerate() {
             f(i, row);
         }
         return;
     }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for (t, block) in c.chunks_mut(rows_per * n).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                let base = t * rows_per;
-                for (i, row) in block.chunks_mut(n).enumerate() {
-                    f(base + i, row);
-                }
-            });
+    // ~4 blocks per participant: coarse enough to amortize the claim,
+    // fine enough for dynamic balancing.
+    let grain = m.div_ceil(threads * 4).max(1);
+    let base = SendPtr(c.as_mut_ptr());
+    let f = &f;
+    pool::global().parallel_ranges(m, grain, threads - 1, &move |range| {
+        for i in range {
+            // SAFETY: the pool hands out disjoint row ranges, so each row
+            // of `c` is written by exactly one participant.
+            let row = unsafe { std::slice::from_raw_parts_mut(base.0.add(i * n), n) };
+            f(i, row);
         }
     });
 }
 
-fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    // Transpose-B + unrolled dot: simple, deterministic, ~2-4 GF/s/core —
-    // adequate as the emulation baseline (see EXPERIMENTS.md §Perf).
-    let bt = transpose(b, k, n);
-    let bt = &bt;
-    parallel_rows(c, m, n, move |i, row| {
+/// f32 panel kernel: per row, sweep `NR`-column strips of packed Bᵀ.
+/// Bit-identical per element to `dot_f32(a_row, b_col)` — the pre-panel
+/// kernel — because the strip microkernel preserves its accumulation order.
+fn gemm_f32_bt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    parallel_rows(c, m, n, k, threads, move |i, row| {
         let arow = &a[i * k..(i + 1) * k];
-        for (j, out) in row.iter_mut().enumerate() {
-            *out = dot_f32(arow, &bt[j * k..(j + 1) * k]);
+        let mut out = [0f32; NR];
+        let mut j0 = 0;
+        while j0 < n {
+            let w = NR.min(n - j0);
+            dot_f32_strip(arow, bt, j0, k, 0, w, &mut out);
+            row[j0..j0 + w].copy_from_slice(&out[..w]);
+            j0 += w;
         }
     });
 }
 
+/// Fast emulated panel kernel: per chunk, compute the f32 partials of all
+/// strip columns in one pass, then apply the per-chunk `FP_acc` rounding
+/// and inter-chunk accumulate per column. SR bits are drawn in one
+/// per-strip batch laid out column-major, so every column consumes exactly
+/// the bits the sequential per-dot path would have handed it — the fast
+/// path therefore stays bit-identical to the pre-panel implementation.
 #[allow(clippy::too_many_arguments)]
-fn gemm_emulated(
+fn gemm_emulated_fast(
     prec: &GemmPrecision,
     a: &[f32],
-    b: &[f32],
+    bt: &[f32],
     c: &mut [f32],
     m: usize,
     k: usize,
     n: usize,
     seed: u64,
+    threads: usize,
 ) {
-    let bt = transpose(b, k, n);
-    let bt = &bt;
+    let chunk = prec.chunk.max(1).min(k);
+    let sr = prec.round.is_stochastic();
+    let draws_per_col = prec.fast_draws_per_dot(k);
+    let fmt_acc = prec.fmt_acc;
+    let round = prec.round;
+    parallel_rows(c, m, n, k, threads, move |i, row| {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut rng = row_rng(seed, i);
+        let mut bits: Vec<u32> = if sr { vec![0; NR * draws_per_col] } else { Vec::new() };
+        let mut partial = [0f32; NR];
+        let mut inter = [0f32; NR];
+        let mut j0 = 0;
+        while j0 < n {
+            let w = NR.min(n - j0);
+            if sr {
+                rng.fill_bits(&mut bits[..w * draws_per_col]);
+            }
+            inter[..w].fill(0.0);
+            let mut ci = 0;
+            let mut p0 = 0;
+            while p0 < k {
+                let p1 = (p0 + chunk).min(k);
+                dot_f32_strip(&arow[p0..p1], bt, j0, k, p0, w, &mut partial);
+                for (cidx, it) in inter[..w].iter_mut().enumerate() {
+                    let (bq, ba) = if sr {
+                        let base = cidx * draws_per_col + 2 * ci;
+                        (bits[base], bits[base + 1])
+                    } else {
+                        (0, 0)
+                    };
+                    // One rounding into FP_acc per chunk, then the per-add
+                    // inter-chunk accumulation carrying the swamping
+                    // behaviour (same sequence as `dot_fast`).
+                    let pq = fmt_acc.quantize_with_bits(partial[cidx], round, bq);
+                    *it = fmt_acc.quantize_with_bits(*it + pq, round, ba);
+                }
+                ci += 1;
+                p0 = p1;
+            }
+            row[j0..j0 + w].copy_from_slice(&inter[..w]);
+            j0 += w;
+        }
+    });
+}
+
+/// Exact emulated path: the bit-true per-add reference, one [`dot`] per
+/// output element. Kept structurally identical to the pre-refactor kernel
+/// (same per-row RNG stream, same per-column draw order).
+#[allow(clippy::too_many_arguments)]
+fn gemm_emulated_exact(
+    prec: &GemmPrecision,
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+    threads: usize,
+) {
     let prec = *prec;
-    parallel_rows(c, m, n, move |i, row| {
-        // Per-row deterministic stream: schedule-independent results.
-        let mut sm = SplitMix64::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut rng = Xoshiro256::seed_from_u64(sm.next_u64());
+    parallel_rows(c, m, n, k, threads, move |i, row| {
+        let mut rng = row_rng(seed, i);
         let arow = &a[i * k..(i + 1) * k];
         for (j, out) in row.iter_mut().enumerate() {
             *out = dot(&prec, arow, &bt[j * k..(j + 1) * k], &mut rng);
@@ -252,7 +397,8 @@ mod tests {
 
     #[test]
     fn emulated_gemm_deterministic_across_thread_counts() {
-        let (m, k, n) = (32, 256, 16);
+        // m·n·k = 32·512·16 = 2^18: large enough to engage the pool.
+        let (m, k, n) = (32, 512, 16);
         let q = |v: &mut Vec<f32>| {
             FloatFormat::FP8.quantize_slice(v, RoundMode::NearestEven);
         };
@@ -266,6 +412,63 @@ mod tests {
         assert_eq!(c1, c2);
         let c3 = gemm(&prec, &a, &b, m, k, n, 100);
         assert_ne!(c1, c3); // different seed, different SR draws
+
+        // And explicitly across worker-count caps: bit-identical.
+        let bt = transpose(&b, k, n);
+        for threads in [1usize, 4, num_threads().max(2)] {
+            let mut c = vec![0f32; m * n];
+            gemm_bt_into_with_threads(&prec, &a, &bt, &mut c, m, k, n, 99, threads);
+            assert_eq!(c, c1, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn panel_kernels_match_per_dot_reference_bitwise() {
+        // Odd shapes straddling the NR strip width and the CL=64 chunk
+        // boundary, all three paths, nearest + stochastic: the blocked
+        // kernels must reproduce the pre-refactor per-dot kernels exactly.
+        // (The full shape matrix lives in tests/gemm_equivalence.rs.)
+        let precs = [
+            GemmPrecision::fp32(),
+            GemmPrecision::fp8_paper(),
+            GemmPrecision::fp8_paper_exact(),
+            GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic),
+        ];
+        for &(m, k, n) in &[(1, 1, 1), (3, 65, 7), (5, 64, 8), (4, 129, 9), (2, 7, 17)] {
+            let mut a = rand_mat(m, k, 7 + m as u64, -1.0, 1.0);
+            let mut b = rand_mat(k, n, 8 + n as u64, -1.0, 1.0);
+            FloatFormat::FP8.quantize_slice(&mut a, RoundMode::NearestEven);
+            FloatFormat::FP8.quantize_slice(&mut b, RoundMode::NearestEven);
+            for prec in &precs {
+                let got = gemm(prec, &a, &b, m, k, n, 42);
+                let want = crate::testkit::reference_gemm(prec, &a, &b, m, k, n, 42);
+                let same = got
+                    .iter()
+                    .zip(&want)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "m={m} k={k} n={n} prec={prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bt_matches_gemm() {
+        let (m, k, n) = (9, 70, 11);
+        let mut a = rand_mat(m, k, 30, -1.0, 1.0);
+        let mut b = rand_mat(k, n, 31, -1.0, 1.0);
+        FloatFormat::FP8.quantize_slice(&mut a, RoundMode::NearestEven);
+        FloatFormat::FP8.quantize_slice(&mut b, RoundMode::NearestEven);
+        let bt = transpose(&b, k, n);
+        for prec in [
+            GemmPrecision::fp32(),
+            GemmPrecision::fp8_paper(),
+            GemmPrecision::fp8_paper_exact(),
+            GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic),
+        ] {
+            let c1 = gemm(&prec, &a, &b, m, k, n, 5);
+            let c2 = gemm_bt(&prec, &a, &bt, m, k, n, 5);
+            assert_eq!(c1, c2, "{prec:?}");
+        }
     }
 
     #[test]
@@ -280,17 +483,9 @@ mod tests {
         let exact = gemm_f64_ref(&a, &b, m, k, n);
         let chunked = gemm(&GemmPrecision::fp8_paper_exact(), &a, &b, m, k, n, 0);
         let nochunk = gemm(&GemmPrecision::fp8_nochunk(), &a, &b, m, k, n, 0);
-        let chunked64: Vec<f64> = chunked.iter().map(|&v| v as f64).collect();
-        let nochunk64: Vec<f64> = nochunk.iter().map(|&v| v as f64).collect();
         let exact32: Vec<f32> = exact.iter().map(|&v| v as f32).collect();
-        let d_chunk = normalized_l2_distance(
-            &chunked64.iter().map(|&v| v as f32).collect::<Vec<_>>(),
-            &exact32,
-        );
-        let d_nochunk = normalized_l2_distance(
-            &nochunk64.iter().map(|&v| v as f32).collect::<Vec<_>>(),
-            &exact32,
-        );
+        let d_chunk = normalized_l2_distance(&chunked, &exact32);
+        let d_nochunk = normalized_l2_distance(&nochunk, &exact32);
         assert!(d_chunk < 0.01, "chunked dist {d_chunk}");
         assert!(d_nochunk > 0.5, "nochunk dist {d_nochunk}");
     }

@@ -16,12 +16,47 @@
 //! The quantizer semantics are normative (DESIGN.md §3) and mirrored
 //! bit-for-bit by `python/compile/quant.py`; `rust/tests/cross_validation.rs`
 //! and `python/tests/test_quant.py` enforce the equivalence.
+//!
+//! # Performance architecture
+//!
+//! Every experiment funnels through the emulated GEMM, so its throughput
+//! is the binding constraint on how many scenarios the repo can sweep.
+//! Four coordinated mechanisms keep the hot path fast **without changing
+//! results**:
+//!
+//! - **Persistent worker pool** ([`pool`]): `num_threads() − 1` long-lived
+//!   workers parked on a condvar replace the per-call `thread::scope`
+//!   spawns; row ranges are claimed from a shared atomic counter so uneven
+//!   rows balance. Fan-out is gated by an `m·n·k` MAC-count cost model
+//!   ([`pool::PAR_MACS_THRESHOLD`]) — the old `m·n` heuristic ignored the
+//!   reduction length and kept tall-skinny GEMMs serial.
+//! - **Panel kernels** ([`gemm`]): the f32 and fast emulated paths sweep
+//!   [`dot::NR`]-column strips of packed Bᵀ against each A row, computing
+//!   per-chunk f32 partials for all strip columns in one cache-resident
+//!   pass before the per-chunk `FP_acc` rounding. Per column the strip
+//!   microkernel preserves the scalar `dot_f32` accumulation order, so
+//!   f32/exact outputs are bit-identical to the pre-panel kernels.
+//! - **Packed-operand cache** (`tensor::Tensor::packed_t`): 2-D tensors
+//!   cache their transposed (GEMM-packed) copy keyed by a mutation
+//!   version counter, and `Tensor::matmul_t` accepts an already-packed
+//!   right operand — the Forward GEMM of `nn::Linear`/`nn::Conv2d` now
+//!   performs **zero** transposes per call.
+//! - **Batched rounding**: `FloatFormat::quantize_slice{,_rng}` run
+//!   branch-hoisted slice loops, and the GEMM fast path draws SR bits in
+//!   per-strip batches from the per-row streams.
+//!
+//! **Determinism contract**: emulated results depend only on
+//! `(operands, precision, seed)`. SR streams are derived per output row,
+//! and batched draws preserve the sequential per-column draw order, so
+//! results are bit-identical across thread counts, scheduling, and panel
+//! width. `rust/tests/gemm_equivalence.rs` enforces all of this.
 
 pub mod accumulate;
 pub mod axpy;
 pub mod dot;
 pub mod format;
 pub mod gemm;
+pub mod pool;
 pub mod rng;
 pub mod rounding;
 pub mod softfloat;

@@ -1,0 +1,308 @@
+//! Persistent worker pool for the emulated-GEMM execution layer.
+//!
+//! The previous GEMM spawned OS threads through `std::thread::scope` on
+//! every call — acceptable for one large GEMM, ruinous for a training step
+//! made of dozens of small ones. This module keeps `num_threads() − 1`
+//! long-lived workers parked on a condvar; a GEMM submits one job (a
+//! `Fn(usize) + Sync` ref), the caller participates as worker 0, and row
+//! ranges are claimed dynamically from a shared atomic counter so uneven
+//! rows (the emulated path's per-row cost varies with SR draws) balance
+//! across workers.
+//!
+//! Contracts:
+//!
+//! - **Not reentrant.** A task must not submit another job (layers call
+//!   GEMMs sequentially, so this never happens in the engine). Nested
+//!   submission would deadlock on the submit lock.
+//! - **Determinism is the caller's property.** The pool only affects
+//!   scheduling; GEMM rows derive their RNG streams from `(seed, row)`,
+//!   so results are identical for any worker count, including zero.
+//! - The pool is created lazily on first parallel job and lives for the
+//!   process (workers are daemon-like; there is no shutdown).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// How many worker threads GEMM and the training engine use. Overridable
+/// via the `FP8TRAIN_THREADS` environment variable (benches pin it to 1 for
+/// stable measurements).
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("FP8TRAIN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            })
+    })
+}
+
+/// Cost-model threshold: GEMMs below this many MACs (`m·n·k`) stay
+/// single-threaded — fan-out/join overhead dominates under it. The old
+/// heuristic looked at `m·n` only, which left tall-skinny GEMMs (large
+/// `m·k`, tiny `n` — e.g. the Gradient GEMM of a small layer with a big
+/// batch) serial no matter how much reduction work each row carried.
+pub const PAR_MACS_THRESHOLD: usize = 1 << 18;
+
+/// Should a `m×k · k×n` GEMM fan out to the pool?
+#[inline]
+pub fn parallel_worthwhile(m: usize, n: usize, k: usize) -> bool {
+    m.saturating_mul(n).saturating_mul(k) >= PAR_MACS_THRESHOLD
+}
+
+/// Raw-pointer wrapper for handing disjoint sub-slices of one buffer to
+/// concurrent workers. Safety rests entirely on the caller partitioning
+/// the index space (the pool's range claims are disjoint by construction).
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// One submitted job: an erased `&(dyn Fn(usize) + Sync)` plus how many
+/// pool workers should actually execute it (the rest wake, see the epoch,
+/// and immediately check in as done).
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    workers: usize,
+}
+// SAFETY: the submitting thread keeps the referent alive (and does not
+// unwind past it) until every worker has checked in for this epoch.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per submitted job; workers wait for it to advance.
+    epoch: u64,
+    job: Option<Job>,
+    /// Pool workers that have not yet checked in for the current epoch.
+    active: usize,
+    /// Set when a worker's task panicked; re-raised on the submitter.
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signals workers that `epoch` advanced.
+    work: Condvar,
+    /// Signals the submitter that `active` reached zero.
+    done: Condvar,
+}
+
+/// The persistent pool: `spawned` parked workers plus the submitting
+/// thread, which always participates as worker index 0.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes submissions (one job in flight at a time).
+    submit: Mutex<()>,
+    spawned: usize,
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // A panic inside a task is re-raised on the submitter after the join;
+    // the mutex contents stay consistent, so poisoning is ignorable.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The process-wide pool, created on first use.
+pub fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool::new(num_threads().saturating_sub(1)))
+}
+
+impl Pool {
+    fn new(spawned: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        for id in 0..spawned {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("fp8-gemm-{id}"))
+                .spawn(move || worker_loop(&sh, id))
+                .expect("spawn pool worker");
+        }
+        Pool {
+            shared,
+            submit: Mutex::new(()),
+            spawned,
+        }
+    }
+
+    /// Worker threads backing the pool (callers add themselves on top).
+    pub fn workers(&self) -> usize {
+        self.spawned
+    }
+
+    /// Run `task` on the calling thread plus up to `extra` pool workers.
+    /// `task` receives a participant index (0 = caller) and is called once
+    /// per participant; returns after **all** participants finish.
+    pub fn run(&self, extra: usize, task: &(dyn Fn(usize) + Sync)) {
+        let extra = extra.min(self.spawned);
+        if extra == 0 {
+            task(0);
+            return;
+        }
+        let _guard = lock(&self.submit);
+        {
+            let mut st = lock(&self.shared.state);
+            st.epoch += 1;
+            st.active = self.spawned;
+            st.panicked = false;
+            st.job = Some(Job {
+                task: task as *const _,
+                workers: extra,
+            });
+        }
+        self.shared.work.notify_all();
+        // The caller is participant 0. A panic here must still join the
+        // workers before unwinding — they hold borrows into our frame.
+        let caller_result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(0)));
+        let panicked_in_worker = {
+            let mut st = lock(&self.shared.state);
+            while st.active != 0 {
+                st = self
+                    .shared
+                    .done
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            st.job = None;
+            st.panicked
+        };
+        if let Err(payload) = caller_result {
+            std::panic::resume_unwind(payload);
+        }
+        if panicked_in_worker {
+            panic!("fp8 pool worker panicked during a GEMM task");
+        }
+    }
+
+    /// Dynamically split `0..n` into `grain`-sized blocks executed by the
+    /// caller plus up to `extra` workers. Blocks are claimed from a shared
+    /// counter, so the partition is disjoint and exhaustive regardless of
+    /// scheduling; `f` must tolerate concurrent calls on disjoint ranges.
+    pub fn parallel_ranges(
+        &self,
+        n: usize,
+        grain: usize,
+        extra: usize,
+        f: &(dyn Fn(Range<usize>) + Sync),
+    ) {
+        let grain = grain.max(1);
+        let next = AtomicUsize::new(0);
+        let task = move |_participant: usize| loop {
+            let b = next.fetch_add(1, Ordering::Relaxed);
+            let start = b * grain;
+            if start >= n {
+                break;
+            }
+            f(start..(start + grain).min(n));
+        };
+        self.run(extra, &task);
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            while st.epoch == seen {
+                st = shared.work.wait(st).unwrap_or_else(|p| p.into_inner());
+            }
+            seen = st.epoch;
+            st.job
+        };
+        let mut bad = false;
+        if let Some(job) = job {
+            if id < job.workers {
+                // SAFETY: the submitter keeps the task referent alive until
+                // `active` hits zero, which happens strictly after this call
+                // returns (we check in below).
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                    (&*job.task)(id + 1)
+                }));
+                bad = r.is_err();
+            }
+        }
+        let mut st = lock(&shared.state);
+        if bad {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn threshold_counts_k() {
+        // Tall-skinny: tiny m·n but a long reduction must qualify. The old
+        // m·n-only heuristic (m·n < 16·1024) kept this serial.
+        assert!(parallel_worthwhile(4096, 2, 512));
+        assert!(!parallel_worthwhile(4096, 2, 4));
+        // Wide-but-shallow no longer qualifies: 128·128·1 = 16K MACs.
+        assert!(!parallel_worthwhile(128, 128, 1));
+        // Boundary: 64³ = 2^18 exactly.
+        assert!(parallel_worthwhile(64, 64, 64));
+        assert!(!parallel_worthwhile(64, 64, 63));
+    }
+
+    #[test]
+    fn parallel_ranges_covers_exactly_once() {
+        let n = 1013; // prime, not a multiple of any grain
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        global().parallel_ranges(n, 16, num_threads().saturating_sub(1), &|r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn zero_extra_runs_inline() {
+        let count = AtomicUsize::new(0);
+        global().run(0, &|participant| {
+            assert_eq!(participant, 0);
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        // Many small jobs back-to-back: exercises the epoch handshake.
+        for round in 0..50 {
+            let n = 64 + round;
+            let sum = AtomicU64::new(0);
+            global().parallel_ranges(n, 4, usize::MAX, &|r| {
+                for i in r {
+                    sum.fetch_add(i as u64, Ordering::Relaxed);
+                }
+            });
+            let expect = (n as u64 * (n as u64 - 1)) / 2;
+            assert_eq!(sum.load(Ordering::Relaxed), expect, "round {round}");
+        }
+    }
+}

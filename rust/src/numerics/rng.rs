@@ -132,6 +132,16 @@ impl Xoshiro256 {
 /// and by [`CountingBits`] (tests).
 pub trait RoundBits {
     fn next_bits(&mut self) -> u32;
+
+    /// Fill `out` with consecutive draws. The default is definitionally
+    /// equivalent to calling [`next_bits`](Self::next_bits) `out.len()`
+    /// times — batch consumers (the GEMM panel kernel, slice quantizers)
+    /// rely on this stream-order equivalence for bit-reproducibility.
+    fn fill_bits(&mut self, out: &mut [u32]) {
+        for b in out {
+            *b = self.next_bits();
+        }
+    }
 }
 
 impl RoundBits for Xoshiro256 {
@@ -191,6 +201,17 @@ mod tests {
         let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
         let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
         assert!(xs.iter().zip(&ys).filter(|(x, y)| x == y).count() < 2);
+    }
+
+    #[test]
+    fn fill_bits_matches_sequential_draws() {
+        let mut a = Xoshiro256::seed_from_u64(9);
+        let mut b = Xoshiro256::seed_from_u64(9);
+        let mut batch = [0u32; 37];
+        a.fill_bits(&mut batch);
+        for (i, &v) in batch.iter().enumerate() {
+            assert_eq!(v, b.next_bits(), "draw {i}");
+        }
     }
 
     #[test]

@@ -98,6 +98,7 @@ impl Optimizer for Adam {
                         q(&up, p.value.data[i] - lr * mh / (vh.sqrt() + eps), &mut rng);
                 }
             }
+            p.value.mark_mutated(); // keep any packed-operand cache honest
             p.zero_grad();
         });
     }

@@ -34,6 +34,7 @@ pub trait Optimizer: Send {
         let fmt = policy.update.fmt;
         model.visit_params(&mut |p| {
             fmt.quantize_slice(&mut p.value.data, RoundMode::NearestEven);
+            p.value.mark_mutated();
         });
     }
 }
@@ -79,6 +80,7 @@ impl Optimizer for Sgd {
                 Xoshiro256::seed_from_u64(seed ^ layer_hash(&p.name) ^ step.wrapping_mul(0x9E37));
             let wd = if p.decay { weight_decay } else { 0.0 };
             sgd_update(&up, &mut p.value.data, &mut g, v, lr, momentum, wd, &mut rng);
+            p.value.mark_mutated(); // keep any packed-operand cache honest
             p.zero_grad();
         });
     }

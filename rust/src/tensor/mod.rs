@@ -11,14 +11,69 @@
 
 pub mod init;
 
-use crate::numerics::gemm::{gemm_into, transpose_into};
+use crate::numerics::gemm::{gemm_bt_into, transpose_into};
 use crate::numerics::GemmPrecision;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// A dense row-major f32 tensor.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Carries a lazily-built, version-keyed cache of its transposed
+/// (GEMM-packed) copy — see [`Tensor::packed_t`]. The cache is metadata:
+/// `Clone` starts the copy with an empty cache and `PartialEq`/`Debug` see
+/// only `shape`/`data`.
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
+    packed: PackedCell,
+}
+
+/// Version-keyed packed-operand cache. Mutation through the `Tensor` API
+/// bumps `version`, invalidating any cached pack; code that writes
+/// `tensor.data` directly must call [`Tensor::mark_mutated`] before the
+/// tensor is next used as a GEMM right-operand.
+struct PackedCell {
+    version: AtomicU64,
+    cache: Mutex<Option<PackedT>>,
+}
+
+struct PackedT {
+    version: u64,
+    data: Arc<Vec<f32>>,
+}
+
+impl PackedCell {
+    fn new() -> Self {
+        Self {
+            version: AtomicU64::new(0),
+            cache: Mutex::new(None),
+        }
+    }
+}
+
+impl Clone for Tensor {
+    fn clone(&self) -> Self {
+        Self {
+            shape: self.shape.clone(),
+            data: self.data.clone(),
+            packed: PackedCell::new(),
+        }
+    }
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
+}
+
+impl std::fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tensor")
+            .field("shape", &self.shape)
+            .field("data", &self.data)
+            .finish()
+    }
 }
 
 impl Tensor {
@@ -26,6 +81,7 @@ impl Tensor {
         Self {
             shape: shape.to_vec(),
             data: vec![0.0; shape.iter().product()],
+            packed: PackedCell::new(),
         }
     }
 
@@ -33,6 +89,7 @@ impl Tensor {
         Self {
             shape: shape.to_vec(),
             data: vec![v; shape.iter().product()],
+            packed: PackedCell::new(),
         }
     }
 
@@ -47,7 +104,49 @@ impl Tensor {
         Self {
             shape: shape.to_vec(),
             data,
+            packed: PackedCell::new(),
         }
+    }
+
+    /// Current mutation version (monotone; bumped by every mutating method
+    /// and by [`mark_mutated`](Self::mark_mutated)).
+    pub fn version(&self) -> u64 {
+        self.packed.version.load(Ordering::Acquire)
+    }
+
+    /// Invalidate the packed-operand cache after writing `data` directly.
+    /// The in-tree mutators call this themselves; external code holding
+    /// `&mut tensor` and poking `tensor.data` must do the same.
+    pub fn mark_mutated(&mut self) {
+        self.packed.version.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// The GEMM-packed operand: the transpose of this 2-D tensor (`[r,s]` →
+    /// `[s,r]`), cached under the mutation version so repeated GEMMs against
+    /// the same tensor (weights across an eval loop, the B operand of every
+    /// `matmul`) re-pack only after a mutation.
+    pub fn packed_t(&self) -> Arc<Vec<f32>> {
+        assert_eq!(self.ndim(), 2, "packed_t needs a 2-D tensor");
+        let v = self.packed.version.load(Ordering::Acquire);
+        let mut guard = self
+            .packed
+            .cache
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        if let Some(p) = guard.as_ref() {
+            if p.version == v {
+                return Arc::clone(&p.data);
+            }
+        }
+        let (r, s) = (self.shape[0], self.shape[1]);
+        let mut t = vec![0f32; r * s];
+        transpose_into(&self.data, &mut t, r, s);
+        let data = Arc::new(t);
+        *guard = Some(PackedT {
+            version: v,
+            data: Arc::clone(&data),
+        });
+        data
     }
 
     #[inline]
@@ -75,6 +174,7 @@ impl Tensor {
             shape
         );
         self.shape = shape.to_vec();
+        self.mark_mutated(); // the packed layout depends on the shape
         self
     }
 
@@ -101,14 +201,32 @@ impl Tensor {
 
     /// Matrix multiply through the reduced-precision GEMM emulation.
     /// `self`: [m,k], `rhs`: [k,n]. Operands must already be quantized to
-    /// `prec.fmt_mult` when emulating (the quant layer does this).
+    /// `prec.fmt_mult` when emulating (the quant layer does this). The
+    /// right operand is packed through [`packed_t`](Self::packed_t), so
+    /// repeated products against the same `rhs` transpose it once.
     pub fn matmul(&self, rhs: &Tensor, prec: &GemmPrecision, seed: u64) -> Tensor {
         assert_eq!(self.ndim(), 2);
         assert_eq!(rhs.ndim(), 2);
         assert_eq!(self.shape[1], rhs.shape[0], "matmul inner dim");
         let (m, k, n) = (self.shape[0], self.shape[1], rhs.shape[1]);
+        let bt = rhs.packed_t();
         let mut out = Tensor::zeros(&[m, n]);
-        gemm_into(prec, &self.data, &rhs.data, &mut out.data, m, k, n, seed);
+        gemm_bt_into(prec, &self.data, &bt, &mut out.data, m, k, n, seed);
+        out
+    }
+
+    /// `self · rhs_tᵀ` with the right operand **already transposed**:
+    /// `rhs_t` is `[n, k]` row-major, which is exactly the packed layout
+    /// the GEMM kernels consume — no transposition happens at all. This is
+    /// the natural form for `Y = X · Wᵀ` layers, whose weights are stored
+    /// `[out, in]`; bit-identical to `self.matmul(&rhs_t.t(), ..)`.
+    pub fn matmul_t(&self, rhs_t: &Tensor, prec: &GemmPrecision, seed: u64) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        assert_eq!(rhs_t.ndim(), 2);
+        assert_eq!(self.shape[1], rhs_t.shape[1], "matmul_t inner dim");
+        let (m, k, n) = (self.shape[0], self.shape[1], rhs_t.shape[0]);
+        let mut out = Tensor::zeros(&[m, n]);
+        gemm_bt_into(prec, &self.data, &rhs_t.data, &mut out.data, m, k, n, seed);
         out
     }
 
@@ -118,6 +236,7 @@ impl Tensor {
         for v in &mut self.data {
             *v = f(*v);
         }
+        self.mark_mutated();
         self
     }
 
@@ -126,6 +245,7 @@ impl Tensor {
         for (a, &b) in self.data.iter_mut().zip(&rhs.data) {
             *a = f(*a, b);
         }
+        self.mark_mutated();
     }
 
     pub fn add_assign(&mut self, rhs: &Tensor) {
@@ -136,6 +256,7 @@ impl Tensor {
         for v in &mut self.data {
             *v *= s;
         }
+        self.mark_mutated();
     }
 
     /// Broadcast-add a length-`n` row vector to each row of an `[m,n]`
@@ -149,6 +270,7 @@ impl Tensor {
                 *v += b;
             }
         }
+        self.mark_mutated();
     }
 
     /// Column-wise sum of an `[m,n]` matrix → length-n vector (bias grad).
@@ -321,6 +443,75 @@ mod tests {
         let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
         let c = a.matmul(&b, &GemmPrecision::fp32(), 0);
         assert_eq!(c.data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul_of_transpose() {
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(9);
+        let a = Tensor::from_vec(&[5, 7], (0..35).map(|_| rng.uniform(-1.0, 1.0)).collect());
+        let wt = Tensor::from_vec(&[3, 7], (0..21).map(|_| rng.uniform(-1.0, 1.0)).collect());
+        for prec in [GemmPrecision::fp32(), GemmPrecision::fp8_paper()] {
+            let via_t = a.matmul(&wt.t(), &prec, 4);
+            let direct = a.matmul_t(&wt, &prec, 4);
+            assert_eq!(via_t, direct, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn packed_cache_hits_and_invalidates() {
+        let mut t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p1 = t.packed_t();
+        assert_eq!(*p1, vec![1., 4., 2., 5., 3., 6.]);
+        // Second call returns the cached allocation.
+        let p2 = t.packed_t();
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2));
+        // Clones never share (or inherit) the cache.
+        let c = t.clone();
+        let pc = c.packed_t();
+        assert!(!std::sync::Arc::ptr_eq(&p1, &pc));
+        // Every mutator invalidates; the repack reflects the new data.
+        let v0 = t.version();
+        t.scale(2.0);
+        assert!(t.version() > v0);
+        let p3 = t.packed_t();
+        assert!(!std::sync::Arc::ptr_eq(&p1, &p3));
+        assert_eq!(*p3, vec![2., 8., 4., 10., 6., 12.]);
+        // Direct-data mutation is covered by mark_mutated.
+        t.data[0] = 100.0;
+        t.mark_mutated();
+        assert_eq!(t.packed_t()[0], 100.0);
+    }
+
+    #[test]
+    fn packed_cache_invalidates_under_every_mutator() {
+        let base = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let other = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let mutators: Vec<(&str, Box<dyn Fn(&mut Tensor)>)> = vec![
+            ("scale", Box::new(|t: &mut Tensor| t.scale(3.0))),
+            ("add_assign", Box::new(move |t: &mut Tensor| t.add_assign(&other))),
+            ("zip_mut", Box::new(|t: &mut Tensor| {
+                let rhs = t.clone();
+                t.zip_mut(&rhs, |a, b| a * b)
+            })),
+            ("add_row", Box::new(|t: &mut Tensor| t.add_row(&[1.0, -1.0]))),
+        ];
+        for (name, mutate) in mutators {
+            let mut t = base.clone();
+            let before = t.packed_t();
+            mutate(&mut t);
+            let after = t.packed_t();
+            assert!(
+                !std::sync::Arc::ptr_eq(&before, &after),
+                "{name} did not invalidate the packed cache"
+            );
+            // And the repacked copy matches a fresh transpose.
+            assert_eq!(*after, t.t().data, "{name} repack content");
+        }
+        // map() consumes self; check it bumps the version too.
+        let t = base.clone();
+        let v = t.version();
+        let t = t.map(|x| x + 1.0);
+        assert!(t.version() > v);
     }
 
     #[test]

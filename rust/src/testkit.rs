@@ -5,7 +5,11 @@
 //! a `forall` driver with deterministic replay seeds, and float-comparison
 //! helpers mirroring numpy's `allclose`.
 
-use crate::numerics::rng::Xoshiro256;
+use crate::numerics::dot::{dot, dot_f32, GemmPrecision};
+use crate::numerics::format::FloatFormat;
+use crate::numerics::gemm::transpose;
+use crate::numerics::rng::{SplitMix64, Xoshiro256};
+use crate::numerics::rounding::RoundMode;
 
 /// Number of cases per property (overridable via `FP8TRAIN_PROP_CASES`).
 pub fn default_cases() -> usize {
@@ -76,6 +80,50 @@ pub fn forall<F: Fn(&mut Gen) -> Result<(), String>>(name: &str, prop: F) {
             panic!("property '{name}' failed (replay seed {seed:#x}, case {case}): {msg}");
         }
     }
+}
+
+/// Seeded random `r×s` matrix quantized onto the FP8 grid — the standard
+/// GEMM-test operand (shared by unit tests, the equivalence suite, and the
+/// bench CLI so all of them exercise identical data).
+pub fn fp8_matrix(r: usize, s: usize, seed: u64, lo: f32, hi: f32) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut v: Vec<f32> = (0..r * s).map(|_| rng.uniform(lo, hi)).collect();
+    FloatFormat::FP8.quantize_slice(&mut v, RoundMode::NearestEven);
+    v
+}
+
+/// The **pre-refactor GEMM kernels**, one dot product per output element
+/// with one RNG stream per row: the normative bit-equivalence reference
+/// for the blocked/panel execution layer. The per-row stream derivation
+/// here *is* the determinism contract the production kernels must match.
+pub fn reference_gemm(
+    prec: &GemmPrecision,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+) -> Vec<f32> {
+    let bt = transpose(b, k, n);
+    let mut c = vec![0f32; m * n];
+    if k == 0 {
+        return c;
+    }
+    for i in 0..m {
+        let mut sm = SplitMix64::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Xoshiro256::seed_from_u64(sm.next_u64());
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let col = &bt[j * k..(j + 1) * k];
+            c[i * n + j] = if prec.is_fp32() {
+                dot_f32(arow, col)
+            } else {
+                dot(prec, arow, col, &mut rng)
+            };
+        }
+    }
+    c
 }
 
 /// Relative-or-absolute closeness check mirroring numpy's `allclose`.

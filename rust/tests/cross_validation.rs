@@ -12,6 +12,18 @@ use fp8train::numerics::gemm::{gemm, normalized_l2_distance};
 use fp8train::numerics::{FloatFormat, GemmPrecision, RoundMode, Xoshiro256};
 use fp8train::runtime::{artifacts_dir, HostTensor, Runtime};
 
+/// The PJRT runtime is environment-gated (`--cfg fp8train_pjrt`); skip
+/// cleanly when this build carries the stub even if artifacts exist.
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
 fn have_artifacts() -> bool {
     let ok = artifacts_dir().join("quant_fp8.hlo.txt").exists();
     if !ok {
@@ -59,7 +71,9 @@ fn quantizer_bit_exact_fp8_and_fp16() {
     if !have_artifacts() {
         return;
     }
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else {
+        return;
+    };
     for (name, fmt) in [("quant_fp8", FloatFormat::FP8), ("quant_fp16", FloatFormat::FP16)] {
         let exe = rt.load_named(name).unwrap();
         let xs = probe_values(4096);
@@ -82,7 +96,9 @@ fn chunked_gemm_matches_rust_fast_path() {
     if !have_artifacts() {
         return;
     }
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else {
+        return;
+    };
     let exe = rt.load_named("gemm_fp8").unwrap();
     let (m, k, n) = (64usize, 512usize, 32usize);
     let mut rng = Xoshiro256::seed_from_u64(11);
@@ -130,7 +146,9 @@ fn axpy_sr_artifact_statistics_match_rust() {
     }
     // SR draws use different PRNGs (threefry vs xoshiro), so the contract
     // is distributional: same mean drift, values on the FP16 grid.
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else {
+        return;
+    };
     let exe = rt.load_named("axpy_sr").unwrap();
     let n = 4096usize;
     let w = vec![1.0f32; n];
@@ -171,7 +189,9 @@ fn pjrt_fwd_logits_finite_and_policy_sensitive() {
         return;
     }
     use fp8train::runtime::PjrtEngine;
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime_or_skip() else {
+        return;
+    };
     let fp32 = PjrtEngine::load(&rt, "cifar_cnn_fp32", 5).unwrap();
     let fp8 = PjrtEngine::load(&rt, "cifar_cnn_fp8", 5).unwrap();
     let mut rng = Xoshiro256::seed_from_u64(6);

@@ -1,0 +1,167 @@
+//! Equivalence matrix for the blocked GEMM execution layer.
+//!
+//! The panel kernels, persistent pool, packed-operand path, and batched SR
+//! bits are all *mechanical* optimizations: results must be bit-identical
+//! to the pre-refactor per-dot kernels (f32 and exact paths), identical
+//! across worker-count caps {1, 4, max}, and identical between the
+//! packed (`gemm_bt`) and unpacked (`gemm`) entry points. This suite is
+//! the acceptance gate for those contracts, across shapes chosen to
+//! straddle the NR=8 strip width, the CL=64 chunk boundary, and the
+//! parallelization threshold.
+
+use fp8train::numerics::gemm::{
+    gemm, gemm_bt, gemm_bt_into_with_threads, num_threads, transpose,
+};
+use fp8train::numerics::{GemmPrecision, RoundMode, Xoshiro256};
+use fp8train::tensor::Tensor;
+use fp8train::testkit::reference_gemm;
+
+fn fp8_mat(r: usize, s: usize, seed: u64) -> Vec<f32> {
+    fp8train::testkit::fp8_matrix(r, s, seed, -1.5, 1.5)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{ctx}: element {i}: {g} vs {w}"
+        );
+    }
+}
+
+/// Curated slice of the {1, 3, 63, 64, 65, 257} odd-shape matrix: every
+/// dimension hits a strip/chunk boundary somewhere, without the full cube
+/// (216 combos) blowing up debug-mode test time.
+const SHAPES: [(usize, usize, usize); 12] = [
+    (1, 1, 1),
+    (1, 257, 3),
+    (3, 64, 65),
+    (3, 65, 64),
+    (63, 63, 63),
+    (64, 64, 64),
+    (65, 65, 65),
+    (257, 3, 1),
+    (63, 257, 9),
+    (2, 513, 17),
+    (65, 129, 63),
+    (5, 8, 257),
+];
+
+fn all_precs() -> Vec<GemmPrecision> {
+    vec![
+        GemmPrecision::fp32(),
+        GemmPrecision::fp8_paper(),
+        GemmPrecision::fp8_paper_exact(),
+        GemmPrecision::fp8_nochunk(),
+        GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic),
+        GemmPrecision::fp8_paper_exact().with_round(RoundMode::Stochastic),
+        GemmPrecision::fp8_paper().with_chunk(1),
+        GemmPrecision::fp8_paper().with_chunk(usize::MAX),
+    ]
+}
+
+#[test]
+fn blocked_kernels_match_reference_across_odd_shapes() {
+    for &(m, k, n) in &SHAPES {
+        let a = fp8_mat(m, k, 11 + (m * k) as u64);
+        let b = fp8_mat(k, n, 13 + (k * n) as u64);
+        for prec in all_precs() {
+            let got = gemm(&prec, &a, &b, m, k, n, 99);
+            let want = reference_gemm(&prec, &a, &b, m, k, n, 99);
+            assert_bits_eq(&got, &want, &format!("m={m} k={k} n={n} {prec:?}"));
+        }
+    }
+}
+
+#[test]
+fn results_identical_across_thread_counts() {
+    // Shapes above and below the parallel threshold; caps {1, 4, max}.
+    let threadings = [1usize, 4, num_threads().max(4)];
+    for &(m, k, n) in &[(128usize, 256usize, 32usize), (4096, 64, 2), (7, 65, 9)] {
+        let a = fp8_mat(m, k, 21);
+        let b = fp8_mat(k, n, 22);
+        let bt = transpose(&b, k, n);
+        for prec in all_precs() {
+            let baseline = gemm(&prec, &a, &b, m, k, n, 5);
+            for &t in &threadings {
+                let mut c = vec![0f32; m * n];
+                gemm_bt_into_with_threads(&prec, &a, &bt, &mut c, m, k, n, 5, t);
+                assert_bits_eq(
+                    &c,
+                    &baseline,
+                    &format!("threads={t} m={m} k={k} n={n} {prec:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_entry_point_matches_unpacked() {
+    let (m, k, n) = (33, 70, 19);
+    let a = fp8_mat(m, k, 31);
+    let b = fp8_mat(k, n, 32);
+    let bt = transpose(&b, k, n);
+    for prec in all_precs() {
+        let c1 = gemm(&prec, &a, &b, m, k, n, 77);
+        let c2 = gemm_bt(&prec, &a, &bt, m, k, n, 77);
+        assert_bits_eq(&c1, &c2, &format!("{prec:?}"));
+    }
+}
+
+#[test]
+fn tensor_matmul_paths_agree() {
+    // matmul (cached pack), matmul_t (pre-packed operand), and the raw
+    // kernels must all agree bit-for-bit.
+    let (m, k, n) = (17, 65, 12);
+    let a = Tensor::from_vec(&[m, k], fp8_mat(m, k, 41));
+    let b = Tensor::from_vec(&[k, n], fp8_mat(k, n, 42));
+    let bt = b.t();
+    for prec in [
+        GemmPrecision::fp32(),
+        GemmPrecision::fp8_paper(),
+        GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic),
+    ] {
+        let via_matmul = a.matmul(&b, &prec, 3);
+        let via_packed = a.matmul_t(&bt, &prec, 3);
+        let raw = gemm(&prec, &a.data, &b.data, m, k, n, 3);
+        assert_bits_eq(&via_matmul.data, &raw, &format!("matmul {prec:?}"));
+        assert_bits_eq(&via_packed.data, &raw, &format!("matmul_t {prec:?}"));
+    }
+}
+
+#[test]
+fn packed_cache_property_mutation_invalidates() {
+    // Property: for a random sequence of (mutate, matmul) operations, a
+    // tensor's matmul result always equals the result against a fresh
+    // uncached copy — i.e. the packed cache can never serve stale data.
+    let mut rng = Xoshiro256::seed_from_u64(123);
+    let prec = GemmPrecision::fp8_paper();
+    let (m, k, n) = (9, 33, 14);
+    let a = Tensor::from_vec(&[m, k], fp8_mat(m, k, 51));
+    let mut b = Tensor::from_vec(&[k, n], fp8_mat(k, n, 52));
+    for step in 0..40 {
+        match rng.below(4) {
+            0 => b.scale(1.0 + rng.next_f32() * 0.25),
+            1 => {
+                let other = Tensor::from_vec(&[k, n], fp8_mat(k, n, 100 + step));
+                b.add_assign(&other);
+            }
+            2 => {
+                let row: Vec<f32> = (0..n).map(|_| rng.uniform(-0.5, 0.5)).collect();
+                b.add_row(&row);
+            }
+            _ => {
+                // Direct data poke + explicit invalidation.
+                let idx = rng.below((k * n) as u32) as usize;
+                b.data[idx] += 1.0;
+                b.mark_mutated();
+            }
+        }
+        let cached = a.matmul(&b, &prec, step);
+        let fresh = a.matmul(&b.clone(), &prec, step);
+        assert_bits_eq(&cached.data, &fresh.data, &format!("step {step}"));
+    }
+}

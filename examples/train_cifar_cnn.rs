@@ -14,7 +14,7 @@ use fp8train::nn::PrecisionPolicy;
 use fp8train::runtime::{PjrtEngine, Runtime};
 use fp8train::train::{train, LrSchedule, TrainConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> fp8train::error::Result<()> {
     fp8train::logging::init();
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: (steps / 10).max(1),
         csv: Some(format!("results/e2e_pjrt_{which}.csv")),
         verbose: true,
+        ..TrainConfig::quick(steps)
     };
     std::fs::create_dir_all("results").ok();
 

@@ -15,17 +15,26 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for option --{0}")]
     MissingValue(String),
-    #[error("unknown option --{0} (known: {1})")]
     Unknown(String, String),
-    #[error("cannot parse --{0} value {1:?} as {2}")]
     BadValue(String, String, &'static str),
-    #[error("{0}")]
     Usage(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(o) => write!(f, "missing value for option --{o}"),
+            CliError::Unknown(o, known) => write!(f, "unknown option --{o} (known: {known})"),
+            CliError::BadValue(o, v, ty) => write!(f, "cannot parse --{o} value {v:?} as {ty}"),
+            CliError::Usage(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw arguments (without argv[0]).

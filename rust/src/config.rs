@@ -17,16 +17,40 @@ pub struct Ini {
 }
 
 /// Errors surfaced while parsing or reading config values.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("line {0}: malformed line: {1:?}")]
     Malformed(usize, String),
-    #[error("missing key [{0}] {1}")]
     Missing(String, String),
-    #[error("[{0}] {1}: cannot parse {2:?} as {3}")]
     BadValue(String, String, String, &'static str),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Malformed(line, raw) => write!(f, "line {line}: malformed line: {raw:?}"),
+            ConfigError::Missing(s, k) => write!(f, "missing key [{s}] {k}"),
+            ConfigError::BadValue(s, k, v, ty) => {
+                write!(f, "[{s}] {k}: cannot parse {v:?} as {ty}")
+            }
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 impl Ini {

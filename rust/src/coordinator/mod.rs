@@ -18,6 +18,7 @@ pub mod native;
 pub use native::NativeEngine;
 
 use crate::data::Batch;
+use crate::state::{StateError, StateMap};
 
 /// One training/eval step provider.
 pub trait Engine {
@@ -32,6 +33,16 @@ pub trait Engine {
 
     /// Learnable parameter count (Table 1 model sizes).
     fn num_params(&mut self) -> usize;
+
+    /// Serialize everything a bit-exact resume needs: `engine.name` (the
+    /// compatibility tag), model parameters + extra layer state under
+    /// `model.*`, optimizer state under `optim.*`.
+    fn save_state(&mut self, out: &mut StateMap);
+
+    /// Strict restore counterpart of [`save_state`](Self::save_state):
+    /// rejects checkpoints written by a different (model, policy, engine)
+    /// combination rather than silently diverging.
+    fn load_state(&mut self, src: &StateMap) -> Result<(), StateError>;
 }
 
 /// Evaluate an engine over a full test set; returns (mean loss, error %).

@@ -5,6 +5,7 @@ use crate::data::Batch;
 use crate::nn::models::ModelKind;
 use crate::nn::{softmax_xent, Layer, PrecisionPolicy, QuantCtx, Sequential};
 use crate::optim::{Optimizer, Sgd};
+use crate::state::{StateDict, StateError, StateMap};
 
 pub struct NativeEngine {
     pub model: Sequential,
@@ -44,6 +45,16 @@ impl NativeEngine {
         let logits = self.model.forward(batch.x.clone(), &ctx);
         softmax_xent(&logits, &batch.labels, self.policy.softmax_input_fmt, 1.0).loss
     }
+
+    /// Model-only restore (weights + BatchNorm statistics): enough for
+    /// inference, skipping optimizer state — `fp8train eval --checkpoint`
+    /// uses this, so a checkpoint serves regardless of which optimizer the
+    /// serving engine was constructed with. Weights land directly in the
+    /// `[out, in]` layout the packed-operand GEMM path consumes, so the
+    /// eval loop runs transpose-free from the first batch.
+    pub fn load_model_state(&mut self, src: &StateMap) -> Result<(), StateError> {
+        self.model.load_state("model", src)
+    }
 }
 
 impl Engine for NativeEngine {
@@ -75,6 +86,24 @@ impl Engine for NativeEngine {
     fn num_params(&mut self) -> usize {
         self.model.num_params()
     }
+
+    fn save_state(&mut self, out: &mut StateMap) {
+        out.put_str("engine.name", &self.name);
+        self.model.save_state("model", out);
+        self.opt.save_state(out);
+    }
+
+    fn load_state(&mut self, src: &StateMap) -> Result<(), StateError> {
+        let name = src.get_str("engine.name")?;
+        if name != self.name {
+            return Err(StateError::Incompatible(format!(
+                "checkpoint was written by engine {name:?}, this engine is {:?}",
+                self.name
+            )));
+        }
+        self.model.load_state("model", src)?;
+        self.opt.load_state(src)
+    }
 }
 
 #[cfg(test)]
@@ -105,6 +134,31 @@ mod tests {
         let (loss, err) = evaluate(&mut e, &ds.test_batches(16));
         assert!(loss > 0.0);
         assert!((0.0..=100.0).contains(&err));
+    }
+
+    #[test]
+    fn engine_state_round_trip_is_bit_exact_and_strict() {
+        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 5).with_sizes(32, 16);
+        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper(), 5);
+        for step in 0..3 {
+            e.train_step(&ds.train_batch(step % 2, 8), 0.05, step as u64);
+        }
+        let mut map = StateMap::new();
+        e.save_state(&mut map);
+        // A fresh engine with a different seed converges to identical state.
+        let mut f = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper(), 99);
+        f.load_state(&map).unwrap();
+        let mut map2 = StateMap::new();
+        f.save_state(&mut map2);
+        assert_eq!(map, map2, "restored state must be bit-identical");
+        // Continuing both engines produces bit-identical losses.
+        let b = ds.train_batch(1, 8);
+        let la = e.train_step(&b, 0.05, 3);
+        let lb = f.train_step(&b, 0.05, 3);
+        assert_eq!(la.to_bits(), lb.to_bits());
+        // Wrong (model, policy) pairings are rejected loudly.
+        let mut wrong = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 5);
+        assert!(wrong.load_state(&map).is_err());
     }
 
     #[test]

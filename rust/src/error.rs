@@ -1,0 +1,216 @@
+//! A small in-tree error type: the offline build environment has no crates
+//! registry, so the workspace depends on **zero external crates** (the seed
+//! leaned on `anyhow`/`thiserror`, which could not even resolve offline —
+//! see ROADMAP "Open items").
+//!
+//! The surface mirrors the subset of `anyhow` this codebase used:
+//!
+//! - [`Error`] — a message plus an optional chained cause; `{e}` prints the
+//!   outermost message, `{e:#}` prints the whole chain (`a: b: c`).
+//! - [`Result<T>`] — alias with [`Error`] as the default error type.
+//! - [`Context`] — `.context("…")` / `.with_context(|| …)` on any
+//!   `Result`/`Option`.
+//! - [`bail!`](crate::bail) / [`ensure!`](crate::ensure) — early-return
+//!   formatted errors.
+//!
+//! Any `std::error::Error` converts via `?` (the source chain is
+//! preserved), so the typed errors in `cli`, `config` and `state` compose
+//! without glue.
+
+use std::fmt;
+
+/// An error message with an optional chained cause.
+///
+/// Deliberately does **not** implement `std::error::Error`: that keeps the
+/// blanket `From<E: std::error::Error>` conversion coherent (the same trick
+/// `anyhow` uses), which is what makes `?` on io/parse/typed errors work.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// An error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self {
+            msg: msg.into(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error under a higher-level message (the receiver becomes
+    /// the cause).
+    pub fn wrap(self, msg: impl Into<String>) -> Self {
+        Self {
+            msg: msg.into(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut src = self.source.as_deref();
+        while let Some(e) = src {
+            out.push(e.msg.as_str());
+            src = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut src = self.source.as_deref();
+            while let Some(e) = src {
+                write!(f, ": {}", e.msg)?;
+                src = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Flatten the std source chain into our own chain so `{:#}` shows
+        // the full story.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error::msg(it.next().unwrap_or_default());
+        for m in it {
+            err = err.wrap(m);
+        }
+        err
+    }
+}
+
+/// `.context("…")` / `.with_context(|| …)` for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T>;
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.map_err(|e| e.into().wrap(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<S: Into<String>>(self, msg: S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an [`Error`]: `bail!("fmt {x}")`, `bail!(expr)`, or
+/// `bail!("fmt {}", arg)`.
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return Err($crate::error::Error::msg(format!($msg)))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::error::Error::msg($err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($fmt, $($arg)*)))
+    };
+}
+
+/// Return early with an [`Error`] unless `cond` holds; same argument forms
+/// as [`bail!`](crate::bail).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            $crate::bail!($msg);
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!($err);
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($fmt, $($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").wrap("middle").wrap("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: inner");
+        assert_eq!(e.chain(), vec!["outer", "middle", "inner"]);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(3u32).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u64> {
+            let v: u64 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        use crate::{bail, ensure};
+        const PLAIN: &str = "a plain expression";
+        fn g() -> Result<()> {
+            crate::bail!(PLAIN); // non-literal expression form
+        }
+        assert_eq!(format!("{}", g().unwrap_err()), PLAIN);
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+    }
+}

@@ -10,7 +10,7 @@
 use super::{run_training, ExpOpts};
 use crate::nn::models::ModelKind;
 use crate::nn::PrecisionPolicy;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn policies() -> Vec<PrecisionPolicy> {
     vec![

@@ -11,7 +11,7 @@ use super::ExpOpts;
 use crate::logging::CsvSink;
 use crate::numerics::accumulate::{acc_chunked, acc_f64, acc_sequential};
 use crate::numerics::{FloatFormat, RoundMode, Xoshiro256};
-use anyhow::Result;
+use crate::error::Result;
 
 pub struct Row {
     pub length: usize,

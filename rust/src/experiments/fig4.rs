@@ -5,7 +5,7 @@
 use super::{run_training, ExpOpts};
 use crate::nn::models::ModelKind;
 use crate::nn::PrecisionPolicy;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
     println!(

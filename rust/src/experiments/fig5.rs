@@ -8,7 +8,7 @@ use super::{run_training, ExpOpts};
 use crate::nn::models::ModelKind;
 use crate::nn::quant::GemmRole;
 use crate::nn::PrecisionPolicy;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run_a(opts: &ExpOpts) -> Result<()> {
     println!(

@@ -19,7 +19,7 @@ use crate::nn::{softmax_xent, Layer, PrecisionPolicy, QuantCtx, Residual};
 use crate::numerics::gemm::{gemm, normalized_l2_distance};
 use crate::numerics::{FloatFormat, GemmPrecision, RoundMode};
 use crate::tensor::Tensor;
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 pub const CHUNK_SIZES: [usize; 13] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
 

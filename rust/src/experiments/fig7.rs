@@ -6,7 +6,7 @@
 use super::hw_model::{self, fp16_engine, fp16_pure_engine, fp8_engine};
 use super::ExpOpts;
 use crate::logging::CsvSink;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
     println!("Fig 7 / §4.4: MAC energy & area model (calibrated, ratios are the claim)\n");

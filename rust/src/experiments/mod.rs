@@ -25,7 +25,7 @@ use crate::data::SyntheticDataset;
 use crate::nn::models::ModelKind;
 use crate::nn::PrecisionPolicy;
 use crate::train::{train, LrSchedule, TrainConfig, TrainResult};
-use anyhow::Result;
+use crate::error::Result;
 
 /// Options shared by all experiment harnesses.
 #[derive(Clone, Debug)]
@@ -89,6 +89,7 @@ pub fn run_training(
         eval_every: (opts.steps / 5).max(1),
         csv,
         verbose: opts.verbose,
+        ..TrainConfig::quick(opts.steps)
     };
     train(&mut engine, &ds, &cfg)
 }
@@ -129,6 +130,6 @@ pub fn run(id: &str, opts: &ExpOpts) -> Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown experiment {other:?} (known: {})", ALL_IDS.join(", ")),
+        other => crate::bail!("unknown experiment {other:?} (known: {})", ALL_IDS.join(", ")),
     }
 }

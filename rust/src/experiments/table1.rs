@@ -9,7 +9,7 @@ use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;
 use crate::nn::models::ModelKind;
 use crate::nn::PrecisionPolicy;
-use anyhow::Result;
+use crate::error::Result;
 
 pub struct Row {
     pub model: &'static str,

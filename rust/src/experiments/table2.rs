@@ -10,7 +10,7 @@ use crate::logging::CsvSink;
 use crate::nn::baselines::BaselineScheme;
 use crate::nn::models::ModelKind;
 use crate::nn::PrecisionPolicy;
-use anyhow::Result;
+use crate::error::Result;
 
 pub struct Scheme {
     pub label: &'static str,

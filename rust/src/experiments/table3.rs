@@ -10,7 +10,7 @@ use crate::logging::CsvSink;
 use crate::nn::models::ModelKind;
 use crate::nn::PrecisionPolicy;
 use crate::numerics::FloatFormat;
-use anyhow::Result;
+use crate::error::Result;
 
 pub fn variants() -> Vec<(&'static str, PrecisionPolicy)> {
     vec![

@@ -18,21 +18,30 @@
 //!   from Rust with device-resident parameters; Python never runs at
 //!   request time.
 //!
+//! Cross-cutting: [`state`] is the bit-exact checkpoint subsystem (the
+//! `.fp8ck` container plus the `StateDict` rollout across layers,
+//! optimizers, engines and the trainer — see `docs/state-format.md`), and
+//! [`error`] is the zero-dependency error type the whole workspace uses
+//! (the build pulls **no external crates**, keeping it offline-clean).
+//!
 //! Entry points: the `fp8train` binary (`fp8train exp <id>` regenerates a
-//! paper table/figure; `fp8train train ...` runs the trainer), the examples
-//! under `examples/`, and the bench harnesses under `rust/benches/`.
+//! paper table/figure; `fp8train train ...` runs the trainer with
+//! `--save-every/--resume` checkpointing), the examples under `examples/`,
+//! and the bench harnesses under `rust/benches/`.
 
 pub mod bench_util;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod experiments;
 pub mod logging;
 pub mod nn;
 pub mod numerics;
 pub mod optim;
 pub mod runtime;
+pub mod state;
 pub mod tensor;
 pub mod testkit;
 pub mod train;

@@ -1,50 +1,105 @@
 //! Logging + metrics sinks.
 //!
-//! A tiny `log`-crate backend (the offline env has no `env_logger`) plus
+//! A tiny in-tree leveled stderr logger (the offline env has no `log`/
+//! `env_logger` — this workspace builds with zero external crates) plus
 //! the CSV metrics writer used by the trainer and every experiment harness
 //! to emit the convergence curves behind Figs. 1/4/5.
+//!
+//! Use via the crate-root macros: `crate::log_info!("…")` etc.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-struct StderrLogger;
-
-static LOGGER: StderrLogger = StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &log::Record) {
-        if self.enabled(record.metadata()) {
-            eprintln!(
-                "[{:<5} {}] {}",
-                record.level(),
-                record.target().split("::").last().unwrap_or(""),
-                record.args()
-            );
-        }
-    }
-
-    fn flush(&self) {}
+/// Log severity, most severe first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
 }
 
-/// Install the stderr logger. Level from `FP8TRAIN_LOG` (error..trace),
-/// default `info`. Idempotent.
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Highest level that prints; default `Info` even before [`init`].
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+
+/// Set the level from `FP8TRAIN_LOG` (error|warn|info|debug|trace, default
+/// info). Idempotent.
 pub fn init() {
     let level = match std::env::var("FP8TRAIN_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
     };
-    // set_logger errors if called twice — fine, ignore.
-    let _ = log::set_logger(&LOGGER);
-    log::set_max_level(level);
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as usize <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the `log_*!` macros; prefer those).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!(
+            "[{:<5} {}] {}",
+            level.label(),
+            target.split("::").last().unwrap_or(""),
+            args
+        );
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
 }
 
 /// Append-only CSV writer with a fixed header, used for metric curves.
@@ -95,6 +150,14 @@ impl CsvSink {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn level_order_and_default_filter() {
+        assert!(Level::Error < Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Trace)); // default level is Info
+    }
 
     #[test]
     fn csv_roundtrip() {

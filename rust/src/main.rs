@@ -2,22 +2,30 @@
 //!
 //! ```text
 //! fp8train exp <id|all> [--steps N] [--batch N] [--seed S] [--out DIR]
-//! fp8train train <model> [--policy P] [--engine native|pjrt] [--steps N]
-//!                        [--batch N] [--lr F] [--seed S] [--csv PATH]
+//! fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
+//!                        [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
+//!                        [--save-every N] [--save PATH]
+//! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
+//! fp8train eval --checkpoint PATH [--batch N]
+//! fp8train checkpoint inspect <path.fp8ck>
 //! fp8train formats                 # print the FP8/FP16 format tables
 //! fp8train artifacts [--dir DIR]   # verify AOT artifacts load & run
+//! fp8train bench [--json PATH] [--fast]
 //! ```
 
-use anyhow::{bail, Context, Result};
 use fp8train::cli::Args;
-use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::coordinator::{evaluate, Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
+use fp8train::error::{Context, Result};
 use fp8train::experiments::{self, ExpOpts};
 use fp8train::nn::models::ModelKind;
 use fp8train::nn::PrecisionPolicy;
 use fp8train::numerics::{FloatFormat, RoundMode};
+use fp8train::optim::{Adam, Optimizer, Sgd};
 use fp8train::runtime::{artifacts_dir, PjrtEngine, Runtime};
+use fp8train::state::StateMap;
 use fp8train::train::{train, LrSchedule, TrainConfig};
+use fp8train::{bail, ensure};
 
 const USAGE: &str = "\
 fp8train — reproduction of 'Training DNNs with 8-bit Floating Point Numbers' (NeurIPS'18)
@@ -25,16 +33,25 @@ fp8train — reproduction of 'Training DNNs with 8-bit Floating Point Numbers' (
 USAGE:
   fp8train exp <id|all> [--steps N] [--batch N] [--seed S] [--out DIR] [--verbose]
       ids: fig1 fig3b table1 fig4 table2 table3 fig5a fig5b fig6 table4 fig7
-  fp8train train <model> [--policy P] [--engine native|pjrt] [--steps N]
-                         [--batch N] [--lr F] [--seed S] [--csv PATH] [--verbose]
+  fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
+                         [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
+                         [--save-every N] [--save PATH] [--verbose]
       models:   cifar_cnn cifar_resnet bn50_dnn alexnet resnet18 resnet50
       policies: fp32 fp8_paper fp8_nochunk fp16_acc_nochunk fp16_upd_nearest
                 fp16_upd_stochastic fp8_reps_only dorefa wage dfp16 mpt_fp16 ...
+  fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
+      continue a checkpointed run bit-exactly (model/policy/seed/batch/lr are
+      read back from the checkpoint's meta entries; --steps may extend it)
+  fp8train eval --checkpoint PATH [--batch N]
+      load a .fp8ck checkpoint into the native engine and evaluate it
+  fp8train checkpoint inspect <path.fp8ck>
+      validate a checkpoint (magic, version, every CRC) and list its chunks
   fp8train formats
   fp8train artifacts [--dir DIR]
   fp8train bench [--json PATH] [--fast]
       GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
-      shapes; --json writes a machine-readable report (default BENCH_GEMM.json)
+      shapes plus checkpoint encode/decode throughput; --json writes a
+      machine-readable report (default BENCH_GEMM.json)
 ";
 
 fn main() {
@@ -56,6 +73,8 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "exp" => cmd_exp(args),
         "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "checkpoint" => cmd_checkpoint(args),
         "formats" => cmd_formats(),
         "artifacts" => cmd_artifacts(args),
         "bench" => cmd_bench(args),
@@ -77,40 +96,137 @@ fn cmd_exp(args: &Args) -> Result<()> {
     experiments::run(&id, &opts)
 }
 
+/// Everything `train` needs to (re)construct a run; on `--resume` it is
+/// read back from the checkpoint's `meta.*` entries so the continuation is
+/// bit-exact no matter how the resuming process was invoked.
+struct RunSpec {
+    kind: ModelKind,
+    policy_name: String,
+    opt_name: String,
+    seed: u64,
+    steps: usize,
+    batch: usize,
+    lr: f32,
+    eval_every: usize,
+}
+
+impl RunSpec {
+    fn to_meta(&self) -> StateMap {
+        let mut m = StateMap::new();
+        m.put_str("meta.model", self.kind.id());
+        m.put_str("meta.policy", &self.policy_name);
+        m.put_str("meta.opt", &self.opt_name);
+        m.put_u64("meta.seed", self.seed);
+        m.put_u64("meta.steps", self.steps as u64);
+        m.put_u64("meta.batch", self.batch as u64);
+        m.put_f32("meta.lr", self.lr);
+        m.put_u64("meta.eval_every", self.eval_every as u64);
+        m
+    }
+
+    fn from_meta(map: &StateMap, args: &Args) -> Result<Self> {
+        let model = map.get_str("meta.model")?.to_string();
+        let kind = ModelKind::parse(&model)
+            .with_context(|| format!("checkpoint names unknown model {model:?}"))?;
+        let meta_steps = map.get_u64("meta.steps")? as usize;
+        Ok(Self {
+            kind,
+            policy_name: map.get_str("meta.policy")?.to_string(),
+            opt_name: map.get_str("meta.opt")?.to_string(),
+            seed: map.get_u64("meta.seed")?,
+            // --steps may extend the run; all other knobs are pinned by
+            // the checkpoint.
+            steps: args.opt_usize("steps", meta_steps)?,
+            batch: map.get_u64("meta.batch")? as usize,
+            lr: map.get_f32("meta.lr")?,
+            eval_every: map.get_u64("meta.eval_every")? as usize,
+        })
+    }
+
+    fn from_args(args: &Args) -> Result<Self> {
+        let model = args
+            .positional
+            .first()
+            .context("train needs a model (or --resume PATH)")?;
+        let kind = ModelKind::parse(model).with_context(|| format!("unknown model {model:?}"))?;
+        let steps = args.opt_usize("steps", 300)?;
+        Ok(Self {
+            kind,
+            policy_name: args.opt_or("policy", "fp8_paper"),
+            opt_name: args.opt_or("opt", "sgd"),
+            seed: args.opt_u64("seed", 42)?,
+            steps,
+            batch: args.opt_usize("batch", 32)?,
+            lr: args.opt_f32("lr", experiments::base_lr(kind))?,
+            eval_every: (steps / 10).max(1),
+        })
+    }
+}
+
+fn build_native(spec: &RunSpec, policy: PrecisionPolicy) -> Result<NativeEngine> {
+    let opt: Box<dyn Optimizer> = match spec.opt_name.as_str() {
+        "sgd" => Box::new(Sgd::new(0.9, 1e-4, spec.seed ^ 0x0117)),
+        "adam" => Box::new(Adam::new(1e-4, spec.seed ^ 0x0117)),
+        other => bail!("unknown optimizer {other:?} (sgd|adam)"),
+    };
+    Ok(NativeEngine::with_optimizer(spec.kind, policy, opt, spec.seed))
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let model = args.positional.first().context("train needs a model")?;
-    let kind = ModelKind::parse(model)
-        .with_context(|| format!("unknown model {model:?}"))?;
-    let policy_name = args.opt_or("policy", "fp8_paper");
-    let policy = PrecisionPolicy::parse(&policy_name)
-        .with_context(|| format!("unknown policy {policy_name:?}"))?;
-    let steps = args.opt_usize("steps", 300)?;
-    let batch = args.opt_usize("batch", 32)?;
-    let seed = args.opt_u64("seed", 42)?;
-    let lr = args.opt_f32("lr", experiments::base_lr(kind))?;
+    args.check_known(&[
+        "policy", "opt", "engine", "steps", "batch", "seed", "lr", "csv", "verbose",
+        "save-every", "save", "resume",
+    ])?;
+    let resume = args.opt("resume").map(str::to_string);
+    let spec = match &resume {
+        Some(path) => {
+            let map = StateMap::load_file(path)
+                .with_context(|| format!("load resume checkpoint {path}"))?;
+            let spec = RunSpec::from_meta(&map, args)?;
+            let done = map.get_u64("train.next_step").unwrap_or(0) as usize;
+            ensure!(
+                done <= spec.steps,
+                "checkpoint {path} is already at step {done}; --steps {} would rewind it \
+                 (pass --steps ≥ {done} to extend the run)",
+                spec.steps
+            );
+            spec
+        }
+        None => RunSpec::from_args(args)?,
+    };
+    let policy = PrecisionPolicy::parse(&spec.policy_name)
+        .with_context(|| format!("unknown policy {:?}", spec.policy_name))?;
     let engine_kind = args.opt_or("engine", "native");
 
-    let ds = SyntheticDataset::for_model(kind, seed);
-    let cfg = TrainConfig {
-        batch_size: batch,
-        steps,
-        schedule: LrSchedule::step_decay(lr, steps),
-        eval_every: (steps / 10).max(1),
-        csv: args.opt("csv").map(str::to_string),
-        verbose: true,
-    };
+    let save_every = args.opt_usize("save-every", 0)?;
+    let save_path = args.opt("save").map(str::to_string).or_else(|| {
+        (save_every > 0).then(|| format!("{}.fp8ck", spec.kind.id()))
+    });
+
+    let ds = SyntheticDataset::for_model(spec.kind, spec.seed);
+    let mut cfg = TrainConfig::quick(spec.steps);
+    cfg.batch_size = spec.batch;
+    cfg.schedule = LrSchedule::step_decay(spec.lr, spec.steps);
+    cfg.eval_every = spec.eval_every;
+    cfg.csv = args.opt("csv").map(str::to_string);
+    cfg.verbose = true;
+    cfg.save_every = save_every;
+    cfg.save_path = save_path;
+    cfg.resume = resume;
+    cfg.save_meta = spec.to_meta();
 
     let mut engine: Box<dyn Engine> = match engine_kind.as_str() {
-        "native" => Box::new(NativeEngine::new(kind, policy, seed)),
+        "native" => Box::new(build_native(&spec, policy)?),
         "pjrt" => {
             let rt = Runtime::cpu()?;
-            let tag = format!("{}_{}", kind.id(), short_policy(&policy_name)?);
-            let e = PjrtEngine::load(&rt, &tag, seed)
+            let tag = format!("{}_{}", spec.kind.id(), short_policy(&spec.policy_name)?);
+            let e = PjrtEngine::load(&rt, &tag, spec.seed)
                 .with_context(|| format!("load artifact set {tag:?} (run `make artifacts`)"))?;
-            anyhow::ensure!(
-                batch == e.batch_size(),
-                "pjrt artifact {tag} was lowered for batch {}, got --batch {batch}",
-                e.batch_size()
+            ensure!(
+                spec.batch == e.batch_size(),
+                "pjrt artifact {tag} was lowered for batch {}, got --batch {}",
+                e.batch_size(),
+                spec.batch
             );
             Box::new(e)
         }
@@ -118,12 +234,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
 
     println!(
-        "training {} with {} ({} steps, batch {}, lr {})",
-        kind.id(),
+        "training {} with {} ({} steps, batch {}, lr {}{})",
+        spec.kind.id(),
         engine.name(),
-        steps,
-        batch,
-        lr
+        spec.steps,
+        spec.batch,
+        spec.lr,
+        cfg.resume
+            .as_deref()
+            .map(|p| format!(", resumed from {p}"))
+            .unwrap_or_default()
     );
     let r = train(engine.as_mut(), &ds, &cfg);
     println!(
@@ -133,6 +253,93 @@ fn cmd_train(args: &Args) -> Result<()> {
         r.best_test_err()
     );
     Ok(())
+}
+
+/// `fp8train eval --checkpoint PATH [--batch N]` — restore a trained model
+/// from a checkpoint and evaluate it on its test split. Only the `model.*`
+/// entries are consumed: weights load straight into the `[out, in]`
+/// packed-operand layout the GEMM kernels read transpose-free, so this is
+/// the serving path for checkpointed models.
+fn cmd_eval(args: &Args) -> Result<()> {
+    args.check_known(&["checkpoint", "batch"])?;
+    let path = args.opt("checkpoint").context("eval needs --checkpoint PATH")?;
+    let map = StateMap::load_file(path).with_context(|| format!("load checkpoint {path}"))?;
+    let model = map.get_str("meta.model")?.to_string();
+    let kind = ModelKind::parse(&model)
+        .with_context(|| format!("checkpoint names unknown model {model:?}"))?;
+    let policy_name = map.get_str("meta.policy")?.to_string();
+    let policy = PrecisionPolicy::parse(&policy_name)
+        .with_context(|| format!("checkpoint names unknown policy {policy_name:?}"))?;
+    let seed = map.get_u64("meta.seed")?;
+    let batch = args.opt_usize("batch", map.get_u64("meta.batch").unwrap_or(32) as usize)?;
+    let trained_steps = map.get_u64("train.next_step").unwrap_or(0);
+
+    let mut engine = NativeEngine::new(kind, policy, seed);
+    engine.load_model_state(&map)?;
+    let ds = SyntheticDataset::for_model(kind, seed);
+    let (loss, err) = evaluate(&mut engine, &ds.test_batches(batch));
+    println!(
+        "{} @ step {trained_steps}: test_loss {loss:.4}, test_err {err:.2}% ({} params)",
+        engine.name(),
+        engine.num_params()
+    );
+    Ok(())
+}
+
+/// `fp8train checkpoint inspect <path>` — validate the container (magic,
+/// version, chunk-table CRC, every payload CRC, tag/shape/length
+/// consistency) and print the chunk table.
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    args.check_known(&[])?;
+    let sub = args
+        .positional
+        .first()
+        .context("checkpoint needs a subcommand (inspect)")?;
+    match sub.as_str() {
+        "inspect" => {
+            let path = args
+                .positional
+                .get(1)
+                .context("usage: fp8train checkpoint inspect <path.fp8ck>")?;
+            use fp8train::state::StateValue;
+            let bytes = std::fs::read(path).with_context(|| format!("read {path}"))?;
+            // One full validate+decode pass (magic, version, every CRC,
+            // tag/shape/length consistency) serves both listings.
+            let map = StateMap::from_bytes(&bytes)?;
+            let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+            println!(
+                "{path}: fp8ck v{version}, {} chunks, {} bytes, all CRCs OK",
+                map.len(),
+                bytes.len()
+            );
+            println!(
+                "{:<44} {:>6} {:>5} {:>12}  shape / value",
+                "key", "kind", "fmt", "bytes"
+            );
+            for (key, val) in map.iter() {
+                let (fmt, bytes_len, detail) = match val {
+                    StateValue::Tensor(t) => {
+                        (t.fmt.name(), t.payload.len(), format!("{:?}", t.shape))
+                    }
+                    StateValue::U64(v) => ("-", 8, format!("{v}")),
+                    StateValue::F64Bits(b) => ("-", 8, format!("{}", f64::from_bits(*b))),
+                    StateValue::F32Bits(b) => ("-", 4, format!("{}", f32::from_bits(*b))),
+                    StateValue::Str(s) => ("-", s.len(), format!("{s:?}")),
+                    StateValue::Bytes(b) => ("-", b.len(), format!("[{} bytes]", b.len())),
+                };
+                println!(
+                    "{:<44} {:>6} {:>5} {:>12}  {}",
+                    key,
+                    val.kind_name(),
+                    fmt,
+                    bytes_len,
+                    detail
+                );
+            }
+            Ok(())
+        }
+        other => bail!("unknown checkpoint subcommand {other:?} (known: inspect)"),
+    }
 }
 
 /// Map a policy preset to the artifact tag suffix produced by aot.py.
@@ -155,9 +362,10 @@ const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
 ];
 
 /// `fp8train bench [--json PATH] [--fast]` — GEMM throughput for the three
-/// emulation paths at the Fig. 6 shapes, optionally as a JSON report so the
-/// perf trajectory stays machine-readable across PRs. Pin
-/// `FP8TRAIN_THREADS=1` for stable single-core numbers.
+/// emulation paths at the Fig. 6 shapes, plus checkpoint encode/decode
+/// throughput, optionally as a JSON report so the perf trajectory stays
+/// machine-readable across PRs. Pin `FP8TRAIN_THREADS=1` for stable
+/// single-core numbers.
 fn cmd_bench(args: &Args) -> Result<()> {
     use fp8train::bench_util;
     use fp8train::numerics::gemm::{gemm, num_threads};
@@ -202,11 +410,41 @@ fn cmd_bench(args: &Args) -> Result<()> {
             path_docs.join(",")
         ));
     }
+
+    // Checkpoint state-IO throughput: encode (engine → .fp8ck bytes) and
+    // decode+restore (bytes → engine), on a trained-shape CIFAR-CNN under
+    // the paper policy — the same trajectory tracking GEMM GF/s gets.
+    let mut engine = NativeEngine::new(ModelKind::CifarCnn, PrecisionPolicy::fp8_paper(), 7);
+    let mut map = StateMap::new();
+    engine.save_state(&mut map);
+    let bytes = map.to_bytes();
+    let nbytes = bytes.len();
+    println!("\n== checkpoint: {} ({} chunks, {nbytes} bytes) ==", engine.name(), map.len());
+    let r_enc = bench_util::run("bench/checkpoint/encode", Some(nbytes as f64), || {
+        let mut m = StateMap::new();
+        engine.save_state(&mut m);
+        m.to_bytes().len() as f64
+    });
+    let r_dec = bench_util::run("bench/checkpoint/decode_restore", Some(nbytes as f64), || {
+        let m = StateMap::from_bytes(&bytes).expect("decode checkpoint");
+        engine.load_state(&m).expect("restore checkpoint");
+        1.0
+    });
+    let mbs = |r: &bench_util::BenchResult| r.throughput().unwrap_or(0.0) / 1e6;
+    let checkpoint_doc = format!(
+        "{{\"bytes\":{nbytes},\"paths\":{{\"encode\":{{\"mb_per_sec\":{:.4},\"result\":{}}},\"decode_restore\":{{\"mb_per_sec\":{:.4},\"result\":{}}}}}}}",
+        mbs(&r_enc),
+        r_enc.to_json(),
+        mbs(&r_dec),
+        r_dec.to_json()
+    );
+
     let doc = format!(
-        "{{\"schema\":1,\"threads\":{},\"fast_mode\":{},\"shapes\":[{}]}}\n",
+        "{{\"schema\":2,\"threads\":{},\"fast_mode\":{},\"shapes\":[{}],\"checkpoint\":{}}}\n",
         num_threads(),
         std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
-        shape_docs.join(",")
+        shape_docs.join(","),
+        checkpoint_doc
     );
     if let Some(path) = json_path {
         std::fs::write(&path, &doc).with_context(|| format!("write {path}"))?;
@@ -273,7 +511,7 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         println!("  {:<42} compiled OK", exe.name);
         count += 1;
     }
-    anyhow::ensure!(count > 0, "no .hlo.txt artifacts in {}", dir.display());
+    ensure!(count > 0, "no .hlo.txt artifacts in {}", dir.display());
     println!("{count} artifacts verified");
     Ok(())
 }

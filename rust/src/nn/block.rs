@@ -7,6 +7,7 @@
 
 use super::quant::QuantCtx;
 use super::{Layer, Param, Sequential};
+use crate::state::{StateError, StateMap};
 use crate::tensor::Tensor;
 
 pub struct Residual {
@@ -92,6 +93,21 @@ impl Layer for Residual {
 
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
+    }
+
+    fn save_extra_state(&mut self, prefix: &str, out: &mut StateMap) {
+        self.main.save_extra_state(prefix, out);
+        if let Some(s) = &mut self.shortcut {
+            s.save_extra_state(prefix, out);
+        }
+    }
+
+    fn load_extra_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError> {
+        self.main.load_extra_state(prefix, src)?;
+        if let Some(s) = &mut self.shortcut {
+            s.load_extra_state(prefix, src)?;
+        }
+        Ok(())
     }
 }
 

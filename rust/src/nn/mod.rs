@@ -27,6 +27,7 @@ pub use linear::Linear;
 pub use loss::softmax_xent;
 pub use quant::{GemmRole, LayerPos, PrecisionPolicy, QuantCtx};
 
+use crate::state::{self, StateDict, StateError, StateMap};
 use crate::tensor::Tensor;
 
 /// One learnable parameter tensor with its gradient accumulator.
@@ -85,7 +86,82 @@ pub trait Layer: Send {
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         None
     }
+
+    /// Checkpoint hook for layer state that is **not** a [`Param`] —
+    /// parameters are handled generically through
+    /// [`visit_params`](Self::visit_params) by [`save_layer_state`].
+    /// `BatchNorm` overrides this for its running statistics; containers
+    /// (`Sequential`, `Residual`) override to recurse.
+    fn save_extra_state(&mut self, _prefix: &str, _out: &mut StateMap) {}
+
+    /// Restore counterpart of [`save_extra_state`](Self::save_extra_state).
+    fn load_extra_state(&mut self, _prefix: &str, _src: &StateMap) -> Result<(), StateError> {
+        Ok(())
+    }
 }
+
+/// Serialize a layer tree: every [`Param`] (dotted names are globally
+/// unique within a model) plus each layer's extra state, under `prefix`.
+/// Gradient accumulators are *not* saved — checkpoints are taken at step
+/// boundaries where the optimizer has just zeroed them.
+pub fn save_layer_state(layer: &mut dyn Layer, prefix: &str, out: &mut StateMap) {
+    layer.visit_params(&mut |p| {
+        out.put_tensor(&state::key(prefix, &p.name), &p.value.shape, &p.value.data);
+    });
+    layer.save_extra_state(prefix, out);
+}
+
+/// Strict restore counterpart of [`save_layer_state`]: every parameter and
+/// every piece of extra state must be present with matching shape.
+pub fn load_layer_state(
+    layer: &mut dyn Layer,
+    prefix: &str,
+    src: &StateMap,
+) -> Result<(), StateError> {
+    let mut first_err: Option<StateError> = None;
+    layer.visit_params(&mut |p| {
+        if first_err.is_some() {
+            return;
+        }
+        let k = state::key(prefix, &p.name);
+        match src.copy_tensor_into(&k, &p.value.shape, &mut p.value.data) {
+            Ok(()) => p.value.mark_mutated(),
+            Err(e) => first_err = Some(e),
+        }
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    layer.load_extra_state(prefix, src)
+}
+
+/// Every concrete layer (and the model containers) implements [`StateDict`]
+/// through the generic param walk + extra-state hooks.
+macro_rules! impl_layer_state_dict {
+    ($($t:ty),+ $(,)?) => {$(
+        impl StateDict for $t {
+            fn save_state(&mut self, prefix: &str, out: &mut StateMap) {
+                save_layer_state(self, prefix, out);
+            }
+
+            fn load_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError> {
+                load_layer_state(self, prefix, src)
+            }
+        }
+    )+};
+}
+
+impl_layer_state_dict!(
+    Sequential,
+    Flatten,
+    block::Residual,
+    linear::Linear,
+    conv::Conv2d,
+    norm::BatchNorm,
+    act::Relu,
+    pool::MaxPool2d,
+    pool::GlobalAvgPool,
+);
 
 /// A straight chain of layers.
 pub struct Sequential {
@@ -142,6 +218,19 @@ impl Layer for Sequential {
 
     fn macs_per_example(&self) -> u64 {
         self.layers.iter().map(|l| l.macs_per_example()).sum()
+    }
+
+    fn save_extra_state(&mut self, prefix: &str, out: &mut StateMap) {
+        for l in &mut self.layers {
+            l.save_extra_state(prefix, out);
+        }
+    }
+
+    fn load_extra_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError> {
+        for l in &mut self.layers {
+            l.load_extra_state(prefix, src)?;
+        }
+        Ok(())
     }
 }
 

@@ -273,6 +273,38 @@ mod tests {
     }
 
     #[test]
+    fn model_state_dict_round_trips_through_residual_blocks() {
+        use crate::state::{StateDict, StateMap};
+        // CifarResnet exercises the full recursion: Sequential → Residual
+        // (main + projection shortcut) → Conv/BN, including BN running
+        // stats behind two levels of containers.
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut m = ModelKind::CifarResnet.build(3);
+        let x = Tensor::from_vec(
+            &[2, 3, 32, 32],
+            (0..2 * 3 * 32 * 32).map(|i| (i % 7) as f32 * 0.1).collect(),
+        );
+        m.forward(x, &ctx); // move BN running stats off their init values
+        let mut map = StateMap::new();
+        m.save_state("model", &mut map);
+        let n_params = {
+            let mut n = 0;
+            m.visit_params(&mut |_| n += 1);
+            n
+        };
+        assert!(map.len() > n_params, "extra state (BN stats) must be saved");
+        let mut fresh = ModelKind::CifarResnet.build(99);
+        fresh.load_state("model", &map).unwrap();
+        let mut map2 = StateMap::new();
+        fresh.save_state("model", &mut map2);
+        assert_eq!(map, map2, "restored model must serialize bit-identically");
+        // Strictness: a truncated map is rejected.
+        let empty = StateMap::new();
+        assert!(ModelKind::CifarResnet.build(0).load_state("model", &empty).is_err());
+    }
+
+    #[test]
     fn kind_ids_roundtrip() {
         for kind in ModelKind::ALL {
             assert_eq!(ModelKind::parse(kind.id()), Some(kind));

@@ -10,6 +10,7 @@
 
 use super::quant::QuantCtx;
 use super::{Layer, Param};
+use crate::state::{self, StateError, StateMap};
 use crate::tensor::Tensor;
 
 pub struct BatchNorm {
@@ -175,6 +176,39 @@ impl Layer for BatchNorm {
     fn name(&self) -> String {
         self.gamma.name.trim_end_matches(".gamma").to_string()
     }
+
+    /// Running statistics are eval-time state (the forward pass consumes
+    /// them whenever `ctx.train` is false), so they checkpoint alongside
+    /// the learnable γ/β. Raw f32 → stored as exact bits.
+    fn save_extra_state(&mut self, prefix: &str, out: &mut StateMap) {
+        let base = self.name();
+        let c = self.channels;
+        out.put_tensor(
+            &state::key(prefix, &format!("{base}.running_mean")),
+            &[c],
+            &self.running_mean,
+        );
+        out.put_tensor(
+            &state::key(prefix, &format!("{base}.running_var")),
+            &[c],
+            &self.running_var,
+        );
+    }
+
+    fn load_extra_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError> {
+        let base = self.name();
+        let c = self.channels;
+        src.copy_tensor_into(
+            &state::key(prefix, &format!("{base}.running_mean")),
+            &[c],
+            &mut self.running_mean,
+        )?;
+        src.copy_tensor_into(
+            &state::key(prefix, &format!("{base}.running_var")),
+            &[c],
+            &mut self.running_var,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +296,33 @@ mod tests {
                 dx.data[i]
             );
         }
+    }
+
+    #[test]
+    fn state_dict_round_trips_running_stats() {
+        use crate::state::{StateDict, StateMap};
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut bn = BatchNorm::new_2d("bn", 2);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..5 {
+            let x = Tensor::from_vec(
+                &[4, 2, 2, 2],
+                (0..32).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+            );
+            bn.forward(x, &ctx);
+        }
+        bn.gamma.value.data[0] = 1.5;
+        let mut map = StateMap::new();
+        bn.save_state("model", &mut map);
+        let mut fresh = BatchNorm::new_2d("bn", 2);
+        fresh.load_state("model", &map).unwrap();
+        assert_eq!(fresh.running_mean, bn.running_mean);
+        assert_eq!(fresh.running_var, bn.running_var);
+        assert_eq!(fresh.gamma.value.data, bn.gamma.value.data);
+        assert_eq!(fresh.beta.value.data, bn.beta.value.data);
+        // A differently-named layer can't silently absorb these entries.
+        assert!(BatchNorm::new_2d("other", 2).load_state("model", &map).is_err());
     }
 
     #[test]

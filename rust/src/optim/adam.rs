@@ -7,11 +7,12 @@
 //! rounding under the paper's scheme. Moment buffers are stored in the
 //! update format like the momentum buffer of SGD.
 
-use super::Optimizer;
+use super::{check_algo, load_buffer_map, save_buffer_map, Optimizer};
 use crate::nn::linear::layer_hash;
 use crate::nn::{Layer, PrecisionPolicy};
 use crate::numerics::rng::RoundBits;
 use crate::numerics::{UpdatePrecision, Xoshiro256};
+use crate::state::{StateError, StateMap};
 use std::collections::BTreeMap;
 
 pub struct Adam {
@@ -102,6 +103,36 @@ impl Optimizer for Adam {
             p.zero_grad();
         });
     }
+
+    /// First moments live on the FP16 grid (they are re-quantized every
+    /// step under the paper's policy), so `pack_auto` stores them as raw
+    /// FP16 bit patterns; second moments are f32 statistics and persist as
+    /// exact f32 bits. `t` drives the bias correction and must survive —
+    /// it counts optimizer calls, not trainer steps.
+    fn save_state(&mut self, out: &mut StateMap) {
+        out.put_str("optim.algo", "adam");
+        out.put_u64("optim.t", self.t);
+        out.put_f32("optim.beta1", self.beta1);
+        out.put_f32("optim.beta2", self.beta2);
+        out.put_f32("optim.eps", self.eps);
+        out.put_f32("optim.weight_decay", self.weight_decay);
+        out.put_u64("optim.seed", self.seed);
+        save_buffer_map(out, "optim.m.", &self.m);
+        save_buffer_map(out, "optim.v.", &self.v);
+    }
+
+    fn load_state(&mut self, src: &StateMap) -> Result<(), StateError> {
+        check_algo(src, "adam")?;
+        self.t = src.get_u64("optim.t")?;
+        self.beta1 = src.get_f32("optim.beta1")?;
+        self.beta2 = src.get_f32("optim.beta2")?;
+        self.eps = src.get_f32("optim.eps")?;
+        self.weight_decay = src.get_f32("optim.weight_decay")?;
+        self.seed = src.get_u64("optim.seed")?;
+        self.m = load_buffer_map(src, "optim.m.")?;
+        self.v = load_buffer_map(src, "optim.v.")?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -149,6 +180,43 @@ mod tests {
         for &w in &m.w.value.data {
             assert!(w.abs() < 0.01, "w={w}");
         }
+    }
+
+    #[test]
+    fn adam_state_round_trips_and_moments_store_as_fp16() {
+        use crate::state::{FpFormat, StateDict, StateMap, StateValue};
+        let policy = PrecisionPolicy::fp8_paper();
+        let mut m = toy_model();
+        let mut opt = Adam::new(1e-4, 9);
+        opt.prepare(&mut m, &policy);
+        for step in 0..4 {
+            m.w.grad.data.fill(0.3 * policy.loss_scale);
+            opt.step(&mut m, &policy, 0.01, step);
+        }
+        let mut map = StateMap::new();
+        opt.save_state(&mut map);
+        assert_eq!(map.get_u64("optim.t").unwrap(), 4);
+        // Under the paper's policy the first moment sits on the FP16 grid,
+        // so the narrowest-lossless packer must have chosen ≤ 2 bytes/elem.
+        match map.get("optim.m.fc.w").expect("first moment saved") {
+            StateValue::Tensor(t) => assert_ne!(t.fmt, FpFormat::Fp32, "m should pack ≤ fp16"),
+            other => panic!("unexpected entry {other:?}"),
+        }
+        let mut fresh = Adam::new(0.0, 1);
+        fresh.load_state(&map).unwrap();
+        assert_eq!(fresh.t, 4);
+        assert_eq!(fresh.m, opt.m);
+        assert_eq!(fresh.v, opt.v);
+        // Continue both one step on replicated models: bit-identical.
+        let mut model_map = StateMap::new();
+        m.save_state("model", &mut model_map);
+        let mut m2 = toy_model();
+        m2.load_state("model", &model_map).unwrap();
+        m.w.grad.data.fill(0.2 * policy.loss_scale);
+        m2.w.grad.data.fill(0.2 * policy.loss_scale);
+        opt.step(&mut m, &policy, 0.01, 4);
+        fresh.step(&mut m2, &policy, 0.01, 4);
+        assert_eq!(m.w.value.data, m2.w.value.data);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::nn::linear::layer_hash;
 use crate::nn::{Layer, PrecisionPolicy};
 use crate::numerics::axpy::sgd_update;
 use crate::numerics::{RoundMode, Xoshiro256};
+use crate::state::{StateError, StateMap};
 use std::collections::BTreeMap;
 
 /// Shared optimizer interface: one call per training step, after the
@@ -36,6 +37,48 @@ pub trait Optimizer: Send {
             fmt.quantize_slice(&mut p.value.data, RoundMode::NearestEven);
             p.value.mark_mutated();
         });
+    }
+
+    /// Serialize optimizer state under `optim.*` keys: the algorithm tag,
+    /// hyper-parameters (restored on resume so the continuation is
+    /// bit-exact regardless of how the resuming process was configured)
+    /// and every moment buffer as exact bits.
+    fn save_state(&mut self, out: &mut StateMap);
+
+    /// Strict restore counterpart of [`save_state`](Self::save_state); a
+    /// checkpoint written by a different algorithm is rejected.
+    fn load_state(&mut self, src: &StateMap) -> Result<(), StateError>;
+}
+
+/// Shared helper: check the `optim.algo` tag of a checkpoint.
+fn check_algo(src: &StateMap, want: &str) -> Result<(), StateError> {
+    let algo = src.get_str("optim.algo")?;
+    if algo != want {
+        return Err(StateError::Incompatible(format!(
+            "checkpoint optimizer is {algo:?}, this engine runs {want:?}"
+        )));
+    }
+    Ok(())
+}
+
+/// Shared helper: restore a name → flat-buffer map saved under `prefix`
+/// (e.g. `optim.v.`), keyed by the parameter names after the prefix.
+fn load_buffer_map(
+    src: &StateMap,
+    prefix: &str,
+) -> Result<BTreeMap<String, Vec<f32>>, StateError> {
+    let mut out = BTreeMap::new();
+    for key in src.keys_with_prefix(prefix) {
+        let (_, data) = src.tensor_data(key)?;
+        out.insert(key[prefix.len()..].to_string(), data);
+    }
+    Ok(out)
+}
+
+/// Shared helper: save a name → flat-buffer map under `prefix`.
+fn save_buffer_map(out: &mut StateMap, prefix: &str, map: &BTreeMap<String, Vec<f32>>) {
+    for (name, buf) in map {
+        out.put_tensor(&format!("{prefix}{name}"), &[buf.len()], buf);
     }
 }
 
@@ -83,6 +126,23 @@ impl Optimizer for Sgd {
             p.value.mark_mutated(); // keep any packed-operand cache honest
             p.zero_grad();
         });
+    }
+
+    fn save_state(&mut self, out: &mut StateMap) {
+        out.put_str("optim.algo", "sgd");
+        out.put_f32("optim.momentum", self.momentum);
+        out.put_f32("optim.weight_decay", self.weight_decay);
+        out.put_u64("optim.seed", self.seed);
+        save_buffer_map(out, "optim.v.", &self.velocity);
+    }
+
+    fn load_state(&mut self, src: &StateMap) -> Result<(), StateError> {
+        check_algo(src, "sgd")?;
+        self.momentum = src.get_f32("optim.momentum")?;
+        self.weight_decay = src.get_f32("optim.weight_decay")?;
+        self.seed = src.get_u64("optim.seed")?;
+        self.velocity = load_buffer_map(src, "optim.v.")?;
+        Ok(())
     }
 }
 
@@ -168,6 +228,42 @@ mod tests {
         for &v in &m.w.value.data {
             assert!(FloatFormat::FP16.is_representable(v));
         }
+    }
+
+    #[test]
+    fn sgd_state_round_trips_bit_exactly() {
+        let policy = PrecisionPolicy::fp8_paper();
+        let mut m = toy_model();
+        let mut opt = Sgd::new(0.9, 1e-4, 77);
+        opt.prepare(&mut m, &policy);
+        for step in 0..3 {
+            m.w.grad.data.fill(0.25 * policy.loss_scale);
+            opt.step(&mut m, &policy, 0.05, step);
+        }
+        let mut map = StateMap::new();
+        opt.save_state(&mut map);
+        // A differently-configured optimizer is fully overwritten.
+        let mut fresh = Sgd::new(0.0, 0.0, 1);
+        fresh.load_state(&map).unwrap();
+        assert_eq!(fresh.momentum, 0.9);
+        assert_eq!(fresh.weight_decay, 1e-4);
+        assert_eq!(fresh.velocity, opt.velocity);
+        // Next step from restored state is bit-identical (replicate the
+        // model through its own StateDict round-trip).
+        use crate::state::StateDict;
+        let mut model_map = StateMap::new();
+        m.save_state("model", &mut model_map);
+        let mut m2 = toy_model();
+        m2.load_state("model", &model_map).unwrap();
+        m.w.grad.data.fill(0.1 * policy.loss_scale);
+        m2.w.grad.data.fill(0.1 * policy.loss_scale);
+        opt.step(&mut m, &policy, 0.05, 3);
+        fresh.step(&mut m2, &policy, 0.05, 3);
+        assert_eq!(m.w.value.data, m2.w.value.data);
+        // Wrong-algorithm checkpoints are rejected.
+        let mut bad = StateMap::new();
+        bad.put_str("optim.algo", "adam");
+        assert!(fresh.load_state(&bad).is_err());
     }
 
     #[test]

@@ -21,8 +21,9 @@ use super::manifest::{Manifest, TensorKind};
 use super::{artifacts_dir, Executable, HostTensor, Runtime};
 use crate::coordinator::Engine;
 use crate::data::Batch;
+use crate::error::{Context, Result};
 use crate::numerics::Xoshiro256;
-use anyhow::{Context, Result};
+use crate::state::{StateError, StateMap};
 
 pub struct PjrtEngine {
     step_exe: Executable,
@@ -151,6 +152,42 @@ impl Engine for PjrtEngine {
 
     fn num_params(&mut self) -> usize {
         self.manifest.num_param_elements()
+    }
+
+    /// Device-resident state mirrors to host tensors each step, so the
+    /// checkpoint is simply the manifest-ordered host state: params under
+    /// `model.*`, momentum under `optim.mom.*`, all as exact bits.
+    fn save_state(&mut self, out: &mut StateMap) {
+        out.put_str("engine.name", &self.name);
+        for (spec, t) in self.manifest.tensors.iter().zip(&self.state) {
+            let key = match spec.kind {
+                TensorKind::Param => format!("model.{}", spec.name),
+                TensorKind::Mom => format!("optim.mom.{}", spec.name),
+            };
+            out.put_tensor(&key, &t.shape, &t.data);
+        }
+    }
+
+    fn load_state(&mut self, src: &StateMap) -> Result<(), StateError> {
+        let name = src.get_str("engine.name")?;
+        if name != self.name {
+            return Err(StateError::Incompatible(format!(
+                "checkpoint was written by engine {name:?}, this engine is {:?}",
+                self.name
+            )));
+        }
+        let mut state = Vec::with_capacity(self.manifest.tensors.len());
+        for spec in &self.manifest.tensors {
+            let key = match spec.kind {
+                TensorKind::Param => format!("model.{}", spec.name),
+                TensorKind::Mom => format!("optim.mom.{}", spec.name),
+            };
+            let mut t = HostTensor::zeros(&spec.shape);
+            src.copy_tensor_into(&key, &spec.shape, &mut t.data)?;
+            state.push(t);
+        }
+        self.state = state;
+        Ok(())
     }
 }
 

@@ -17,7 +17,7 @@
 //! rank 1) and zero-fills `mom` tensors, then threads them through every
 //! `train_step` call.
 
-use anyhow::{bail, Context, Result};
+use crate::error::{Context, Result};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TensorKind {
@@ -82,7 +82,7 @@ impl Manifest {
                         .with_context(|| format!("line {}: bad meta value {rest:?}", lineno + 1))?;
                     m.meta.insert(name.to_string(), v);
                 }
-                other => bail!("line {}: unknown kind {other:?}", lineno + 1),
+                other => crate::bail!("line {}: unknown kind {other:?}", lineno + 1),
             }
         }
         Ok(m)

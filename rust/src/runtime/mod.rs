@@ -76,7 +76,7 @@ pub use pjrt_stub::{Executable, Runtime};
 #[cfg(fp8train_pjrt)]
 mod pjrt_xla {
     use super::{artifacts_dir, HostTensor, Input};
-    use anyhow::{Context, Result};
+    use crate::error::{Context, Result};
 
     /// A PJRT client wrapper; create once, load many executables.
     pub struct Runtime {
@@ -186,7 +186,8 @@ mod pjrt_xla {
 #[cfg(not(fp8train_pjrt))]
 mod pjrt_stub {
     use super::{HostTensor, Input};
-    use anyhow::{bail, Result};
+    use crate::bail;
+    use crate::error::Result;
 
     const UNAVAILABLE: &str = "PJRT support not compiled in: build with \
         RUSTFLAGS=\"--cfg fp8train_pjrt\" in an environment providing the \

@@ -1,0 +1,462 @@
+//! The `.fp8ck` chunked binary checkpoint container.
+//!
+//! Normative spec: `docs/state-format.md`. Summary (all integers
+//! little-endian):
+//!
+//! ```text
+//! 0   8   magic  = 89 46 50 38 43 4B 0D 0A   ("\x89FP8CK\r\n")
+//! 8   4   version (u32) = 1
+//! 12  4   chunk_count (u32)
+//! 16  8   index_off (u64, absolute offset of the chunk table)
+//! 24  …   chunk payloads, back to back, in chunk-table order
+//! idx …   chunk table: chunk_count records
+//!           key_len (u16) + key (UTF-8)
+//!           kind (u8)   0=tensor 1=u64 2=f64 3=f32 4=str 5=bytes
+//!           fmt  (u8)   tensors: 0=fp8 1=fp16 2=fp32; others 0
+//!           ndim (u8) + ndim × dim (u64)
+//!           payload_off (u64, absolute) + payload_len (u64)
+//!           payload_crc32 (u32, IEEE, over the payload bytes)
+//! end 4   table_crc32 (u32, IEEE, over the chunk-table bytes)
+//! ```
+//!
+//! Every payload and the table itself are CRC-checked; decoding verifies
+//! magic, version, bounds, CRCs, UTF-8 keys, tag validity, payload lengths
+//! against shapes, and duplicate keys — a truncated or bit-flipped file is
+//! always a loud [`StateError::Corrupt`], never a silently wrong resume.
+
+use super::{FpFormat, StateError, StateMap, StateValue, TensorState};
+
+/// `\x89` guards against 7-bit stripping, `\r\n` against newline
+/// translation — the PNG trick.
+pub const MAGIC: [u8; 8] = [0x89, b'F', b'P', b'8', b'C', b'K', 0x0D, 0x0A];
+pub const VERSION: u32 = 1;
+const HEADER_LEN: usize = 24;
+
+// ---- CRC-32 (IEEE 802.3, the zlib polynomial) ------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32/IEEE of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---- encoding --------------------------------------------------------------
+
+/// Append `v`'s payload bytes to `out` (no intermediate allocation — a
+/// checkpoint-sized clone per tensor would double the copying on the
+/// save path the bench tracks); returns `(kind, fmt)` wire tags.
+fn append_payload(v: &StateValue, out: &mut Vec<u8>) -> (u8, u8) {
+    match v {
+        StateValue::Tensor(t) => {
+            out.extend_from_slice(&t.payload);
+            (0, t.fmt.tag())
+        }
+        StateValue::U64(x) => {
+            out.extend_from_slice(&x.to_le_bytes());
+            (1, 0)
+        }
+        StateValue::F64Bits(b) => {
+            out.extend_from_slice(&b.to_le_bytes());
+            (2, 0)
+        }
+        StateValue::F32Bits(b) => {
+            out.extend_from_slice(&b.to_le_bytes());
+            (3, 0)
+        }
+        StateValue::Str(s) => {
+            out.extend_from_slice(s.as_bytes());
+            (4, 0)
+        }
+        StateValue::Bytes(b) => {
+            out.extend_from_slice(b);
+            (5, 0)
+        }
+    }
+}
+
+/// Serialize a [`StateMap`] into `.fp8ck` bytes.
+pub fn encode(map: &StateMap) -> Vec<u8> {
+    let mut payloads: Vec<u8> = Vec::new();
+    let mut table: Vec<u8> = Vec::new();
+    let empty: [usize; 0] = [];
+    for (key, val) in map.iter() {
+        let start = payloads.len();
+        let (kind, fmt) = append_payload(val, &mut payloads);
+        let payload_len = payloads.len() - start;
+        let dims: &[usize] = match val {
+            StateValue::Tensor(t) => &t.shape,
+            _ => &empty,
+        };
+        assert!(key.len() < u16::MAX as usize, "state key too long: {key:?}");
+        assert!(dims.len() < u8::MAX as usize, "tensor rank too high");
+        table.extend_from_slice(&(key.len() as u16).to_le_bytes());
+        table.extend_from_slice(key.as_bytes());
+        table.push(kind);
+        table.push(fmt);
+        table.push(dims.len() as u8);
+        for &d in dims {
+            table.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        table.extend_from_slice(&((HEADER_LEN + start) as u64).to_le_bytes());
+        table.extend_from_slice(&(payload_len as u64).to_le_bytes());
+        table.extend_from_slice(&crc32(&payloads[start..]).to_le_bytes());
+    }
+    let index_off = (HEADER_LEN + payloads.len()) as u64;
+    let mut out = Vec::with_capacity(HEADER_LEN + payloads.len() + table.len() + 4);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(map.len() as u32).to_le_bytes());
+    out.extend_from_slice(&index_off.to_le_bytes());
+    out.extend_from_slice(&payloads);
+    let table_crc = crc32(&table);
+    out.extend_from_slice(&table);
+    out.extend_from_slice(&table_crc.to_le_bytes());
+    out
+}
+
+// ---- decoding --------------------------------------------------------------
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], StateError> {
+        if self.pos + n > self.bytes.len() {
+            return Err(StateError::Corrupt(format!("truncated {what}")));
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, StateError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16, StateError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, StateError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, StateError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+/// One parsed chunk-table record (payload bounds already validated).
+struct RawChunk {
+    key: String,
+    kind: u8,
+    fmt: u8,
+    dims: Vec<u64>,
+    off: usize,
+    len: usize,
+}
+
+/// Parse + validate the envelope: magic, version, table CRC, per-chunk
+/// bounds and payload CRCs. Returns the version and the raw chunk records.
+fn parse(bytes: &[u8]) -> Result<(u32, Vec<RawChunk>), StateError> {
+    if bytes.len() < HEADER_LEN + 4 {
+        return Err(StateError::Corrupt(format!(
+            "file too short ({} bytes) for an .fp8ck header",
+            bytes.len()
+        )));
+    }
+    if bytes[0..8] != MAGIC {
+        return Err(StateError::Corrupt("bad magic (not an .fp8ck file)".into()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(StateError::Corrupt(format!(
+            "unsupported .fp8ck version {version} (this build reads {VERSION})"
+        )));
+    }
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    let index_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+    let table_end = bytes.len() - 4;
+    if index_off < HEADER_LEN as u64 || index_off > table_end as u64 {
+        return Err(StateError::Corrupt(format!("chunk-table offset {index_off} out of bounds")));
+    }
+    let index_off = index_off as usize;
+    let table = &bytes[index_off..table_end];
+    let stored = u32::from_le_bytes(bytes[table_end..].try_into().unwrap());
+    if crc32(table) != stored {
+        return Err(StateError::Corrupt("chunk-table CRC mismatch".into()));
+    }
+
+    let mut cur = Cursor { bytes: table, pos: 0 };
+    // Capacity from the (CRC-covered) table size, not the raw header
+    // count — a bit-flipped count must fail parsing below, not abort the
+    // process inside a huge with_capacity. Minimum record size: 2 (key
+    // len) + 3 (kind/fmt/ndim) + 16 (off/len) + 4 (crc) = 25 bytes.
+    let mut chunks = Vec::with_capacity((count as usize).min(table.len() / 25 + 1));
+    for i in 0..count {
+        let klen = cur.u16("chunk key length")? as usize;
+        let key = String::from_utf8(cur.take(klen, "chunk key")?.to_vec())
+            .map_err(|_| StateError::Corrupt(format!("chunk {i}: key is not UTF-8")))?;
+        let kind = cur.u8("chunk kind")?;
+        let fmt = cur.u8("chunk format tag")?;
+        let ndim = cur.u8("chunk rank")? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(cur.u64("chunk dim")?);
+        }
+        let off = cur.u64("chunk payload offset")?;
+        let len = cur.u64("chunk payload length")?;
+        let crc = cur.u32("chunk payload crc")?;
+        let end = off
+            .checked_add(len)
+            .ok_or_else(|| StateError::Corrupt(format!("chunk {key:?}: payload bounds overflow")))?;
+        if off < HEADER_LEN as u64 || end > index_off as u64 {
+            return Err(StateError::Corrupt(format!("chunk {key:?}: payload outside payload region")));
+        }
+        let (off, len) = (off as usize, len as usize);
+        if crc32(&bytes[off..off + len]) != crc {
+            return Err(StateError::Corrupt(format!("chunk {key:?}: payload CRC mismatch")));
+        }
+        chunks.push(RawChunk { key, kind, fmt, dims, off, len });
+    }
+    if cur.pos != table.len() {
+        return Err(StateError::Corrupt("trailing bytes after chunk table".into()));
+    }
+    Ok((version, chunks))
+}
+
+fn decode_chunk(c: &RawChunk, bytes: &[u8]) -> Result<StateValue, StateError> {
+    let payload = &bytes[c.off..c.off + c.len];
+    let fixed = |want: usize, what: &str| -> Result<(), StateError> {
+        if c.len != want {
+            return Err(StateError::Corrupt(format!(
+                "chunk {:?}: {what} payload is {} bytes, expected {want}",
+                c.key, c.len
+            )));
+        }
+        Ok(())
+    };
+    Ok(match c.kind {
+        0 => {
+            let fmt = FpFormat::from_tag(c.fmt).ok_or_else(|| {
+                StateError::Corrupt(format!("chunk {:?}: unknown tensor format tag {}", c.key, c.fmt))
+            })?;
+            let mut shape = Vec::with_capacity(c.dims.len());
+            let mut elems = 1usize;
+            for &d in &c.dims {
+                let d: usize = d.try_into().map_err(|_| {
+                    StateError::Corrupt(format!("chunk {:?}: dimension {d} too large", c.key))
+                })?;
+                elems = elems.checked_mul(d).ok_or_else(|| {
+                    StateError::Corrupt(format!("chunk {:?}: element count overflow", c.key))
+                })?;
+                shape.push(d);
+            }
+            // checked: a crafted dim like 2^62 must fail here as Corrupt,
+            // not wrap to a passing length and OOM later in unpack().
+            let want = elems.checked_mul(fmt.byte_width()).ok_or_else(|| {
+                StateError::Corrupt(format!("chunk {:?}: payload size overflow", c.key))
+            })?;
+            if c.len != want {
+                return Err(StateError::Corrupt(format!(
+                    "chunk {:?}: {} payload bytes for shape {:?} in {} ({want} expected)",
+                    c.key,
+                    c.len,
+                    shape,
+                    fmt.name(),
+                )));
+            }
+            StateValue::Tensor(TensorState { fmt, shape, payload: payload.to_vec() })
+        }
+        1 => {
+            fixed(8, "u64")?;
+            StateValue::U64(u64::from_le_bytes(payload.try_into().unwrap()))
+        }
+        2 => {
+            fixed(8, "f64")?;
+            StateValue::F64Bits(u64::from_le_bytes(payload.try_into().unwrap()))
+        }
+        3 => {
+            fixed(4, "f32")?;
+            StateValue::F32Bits(u32::from_le_bytes(payload.try_into().unwrap()))
+        }
+        4 => StateValue::Str(
+            String::from_utf8(payload.to_vec())
+                .map_err(|_| StateError::Corrupt(format!("chunk {:?}: string is not UTF-8", c.key)))?,
+        ),
+        5 => StateValue::Bytes(payload.to_vec()),
+        other => {
+            return Err(StateError::Corrupt(format!(
+                "chunk {:?}: unknown kind tag {other}",
+                c.key
+            )))
+        }
+    })
+}
+
+/// Decode `.fp8ck` bytes back into a [`StateMap`], verifying everything.
+pub fn decode(bytes: &[u8]) -> Result<StateMap, StateError> {
+    let (_version, chunks) = parse(bytes)?;
+    let mut map = StateMap::new();
+    for c in &chunks {
+        if map.get(&c.key).is_some() {
+            return Err(StateError::Corrupt(format!("duplicate chunk key {:?}", c.key)));
+        }
+        let v = decode_chunk(c, bytes)?;
+        map.insert(&c.key, v);
+    }
+    Ok(map)
+}
+
+/// One row of an [`inspect`] report.
+pub struct ChunkInfo {
+    pub key: String,
+    pub kind: &'static str,
+    pub fmt: &'static str,
+    pub shape: Vec<usize>,
+    pub payload_bytes: usize,
+}
+
+pub struct InspectReport {
+    pub version: u32,
+    pub chunks: Vec<ChunkInfo>,
+}
+
+/// Validate the container and describe its chunks — the programmatic
+/// inspection API (tests and tooling). The CLI's `checkpoint inspect`
+/// formats its own listing from a decoded [`StateMap`] so it can also
+/// echo scalar values; both go through the same `parse`/`decode_chunk`
+/// validators, so they cannot disagree on what is valid.
+pub fn inspect(bytes: &[u8]) -> Result<InspectReport, StateError> {
+    let (version, chunks) = parse(bytes)?;
+    let mut out = Vec::with_capacity(chunks.len());
+    for c in &chunks {
+        // Full decode so tag/shape/length validity is part of "inspect OK".
+        let v = decode_chunk(c, bytes)?;
+        let (fmt, shape) = match &v {
+            StateValue::Tensor(t) => (t.fmt.name(), t.shape.clone()),
+            _ => ("-", vec![]),
+        };
+        out.push(ChunkInfo {
+            key: c.key.clone(),
+            kind: v.kind_name(),
+            fmt,
+            shape,
+            payload_bytes: c.len,
+        });
+    }
+    Ok(InspectReport { version, chunks: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The canonical check value of CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn empty_map_round_trips() {
+        let m = StateMap::new();
+        let bytes = encode(&m);
+        assert_eq!(bytes.len(), 28); // header + table crc
+        assert_eq!(decode(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn mixed_map_round_trips() {
+        let mut m = StateMap::new();
+        m.put_tensor("w", &[3, 5], &[0.5; 15]);
+        m.put_u64("step", 42);
+        m.put_f64("loss", 0.125);
+        m.put_f32("lr", 0.02);
+        m.put_str("policy", "fp8_paper");
+        m.put_bytes("blob", vec![0, 255, 7]);
+        let bytes = encode(&m);
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, m);
+        let rep = inspect(&bytes).unwrap();
+        assert_eq!(rep.version, VERSION);
+        assert_eq!(rep.chunks.len(), 6);
+        // BTreeMap order: blob, loss, lr, policy, step, w.
+        assert_eq!(rep.chunks[5].key, "w");
+        assert_eq!(rep.chunks[5].fmt, "fp8");
+        assert_eq!(rep.chunks[5].shape, vec![3, 5]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut m = StateMap::new();
+        m.put_u64("x", 1);
+        let mut bytes = encode(&m);
+        bytes[0] ^= 0x40;
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.to_string().contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let mut bytes = encode(&StateMap::new());
+        bytes[8] = 99;
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+
+    #[test]
+    fn payload_bitflip_caught_by_crc() {
+        let mut m = StateMap::new();
+        m.put_tensor("w", &[4], &[1.0, 2.0, 3.0, 4.0]);
+        let mut bytes = encode(&m);
+        bytes[HEADER_LEN] ^= 1; // first payload byte
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.to_string().contains("CRC"), "{e}");
+    }
+
+    #[test]
+    fn table_bitflip_caught_by_crc() {
+        let mut m = StateMap::new();
+        m.put_u64("x", 7);
+        let mut bytes = encode(&m);
+        let index_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        bytes[index_off + 1] ^= 0xFF;
+        let e = decode(&bytes).unwrap_err();
+        assert!(e.to_string().contains("CRC"), "{e}");
+    }
+
+    #[test]
+    fn truncation_always_rejected() {
+        let mut m = StateMap::new();
+        m.put_tensor("w", &[2], &[1.0, 2.0]);
+        let bytes = encode(&m);
+        for cut in [0, 1, 8, 16, HEADER_LEN, bytes.len() - 5, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut]).is_err(), "cut={cut} accepted");
+        }
+    }
+}

@@ -1,0 +1,563 @@
+//! Bit-exact checkpointing & state persistence.
+//!
+//! The paper's claim is *numerical* fidelity — FP8 (1,5,2) representations,
+//! FP16 (1,6,9) chunk-accumulation and update arithmetic, stochastic
+//! rounding — so persisted training state must round-trip at the **bit**
+//! level: a run interrupted, checkpointed and resumed must be
+//! indistinguishable (weights, optimizer moments, eval curve) from one that
+//! never stopped. `rust/tests/resume_equivalence.rs` enforces exactly that.
+//!
+//! Three pieces:
+//!
+//! - [`StateMap`] — an ordered collection of named, typed entries: tensors
+//!   (shape + storage format + exact bit payload), `u64`/`f64`/`f32`
+//!   scalars (floats kept as raw bits), strings and byte blobs.
+//! - [`StateDict`] — the trait everything stateful implements: `nn` layers
+//!   and models (parameters + BatchNorm running statistics), the
+//!   optimizers (SGD velocity, Adam FP16 moments and step counter),
+//!   [`crate::numerics::Xoshiro256`] stream state, and the trainer's
+//!   progress (step, loss window, eval curve).
+//! - [`container`] — the `.fp8ck` chunked, CRC-checked binary file format
+//!   (spec: `docs/state-format.md`).
+//!
+//! Tensors are packed with [`TensorState::pack_auto`]: the narrowest of
+//! FP8 → FP16 → FP32 in which **every** element round-trips bit-exactly.
+//! Under the paper's policy that stores weights and first moments in two
+//! bytes per element (they live on the FP16 grid after every update) while
+//! second moments and BatchNorm statistics fall back to raw f32 bits —
+//! compression is only ever taken when it is provably lossless.
+
+pub mod container;
+
+use crate::numerics::FloatFormat;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Storage format of a checkpointed tensor payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FpFormat {
+    /// The paper's FP8 (1,5,2): one byte per element.
+    Fp8,
+    /// The paper's FP16 (1,6,9): two bytes per element.
+    Fp16,
+    /// Raw IEEE f32 bits: four bytes per element, always lossless.
+    Fp32,
+}
+
+impl FpFormat {
+    pub const ALL: [FpFormat; 3] = [FpFormat::Fp8, FpFormat::Fp16, FpFormat::Fp32];
+
+    /// Container format tag (stable on-disk identifier).
+    pub fn tag(self) -> u8 {
+        match self {
+            FpFormat::Fp8 => 0,
+            FpFormat::Fp16 => 1,
+            FpFormat::Fp32 => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<FpFormat> {
+        Some(match tag {
+            0 => FpFormat::Fp8,
+            1 => FpFormat::Fp16,
+            2 => FpFormat::Fp32,
+            _ => return None,
+        })
+    }
+
+    /// Bytes per element in the payload encoding.
+    pub fn byte_width(self) -> usize {
+        match self {
+            FpFormat::Fp8 => 1,
+            FpFormat::Fp16 => 2,
+            FpFormat::Fp32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FpFormat::Fp8 => "fp8",
+            FpFormat::Fp16 => "fp16",
+            FpFormat::Fp32 => "fp32",
+        }
+    }
+
+    fn float_format(self) -> FloatFormat {
+        match self {
+            FpFormat::Fp8 => FloatFormat::FP8,
+            FpFormat::Fp16 => FloatFormat::FP16,
+            FpFormat::Fp32 => FloatFormat::FP32,
+        }
+    }
+}
+
+/// A checkpointed tensor: shape, storage format, and the exact bit payload
+/// (little-endian element records of [`FpFormat::byte_width`] bytes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorState {
+    pub fmt: FpFormat,
+    pub shape: Vec<usize>,
+    pub payload: Vec<u8>,
+}
+
+impl TensorState {
+    pub fn num_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Pack `data` into `fmt` **only if** every element round-trips
+    /// bit-exactly (`decode(encode(x)).to_bits() == x.to_bits()`); `None`
+    /// otherwise. FP32 always succeeds (raw bits).
+    pub fn pack(fmt: FpFormat, shape: &[usize], data: &[f32]) -> Option<TensorState> {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "tensor state shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        let mut payload = Vec::with_capacity(data.len() * fmt.byte_width());
+        match fmt {
+            FpFormat::Fp32 => {
+                for &x in data {
+                    payload.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            FpFormat::Fp16 | FpFormat::Fp8 => {
+                let ff = fmt.float_format();
+                for &x in data {
+                    let bits = ff.encode(x);
+                    if ff.decode(bits).to_bits() != x.to_bits() {
+                        return None; // not exactly representable → refuse
+                    }
+                    match fmt {
+                        FpFormat::Fp8 => payload.push(bits as u8),
+                        FpFormat::Fp16 => payload.extend_from_slice(&(bits as u16).to_le_bytes()),
+                        FpFormat::Fp32 => unreachable!(),
+                    }
+                }
+            }
+        }
+        Some(TensorState {
+            fmt,
+            shape: shape.to_vec(),
+            payload,
+        })
+    }
+
+    /// Pack into the narrowest format that is provably lossless:
+    /// FP8 → FP16 → FP32. Always succeeds (FP32 is raw bits).
+    pub fn pack_auto(shape: &[usize], data: &[f32]) -> TensorState {
+        for fmt in [FpFormat::Fp8, FpFormat::Fp16] {
+            if let Some(t) = Self::pack(fmt, shape, data) {
+                return t;
+            }
+        }
+        Self::pack(FpFormat::Fp32, shape, data).expect("fp32 pack is infallible")
+    }
+
+    /// Decode the payload back to f32 values (bit-exact by construction).
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.num_elems()];
+        self.unpack_into(&mut out);
+        out
+    }
+
+    pub fn unpack_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.num_elems(), "unpack_into length");
+        match self.fmt {
+            FpFormat::Fp32 => {
+                for (o, c) in out.iter_mut().zip(self.payload.chunks_exact(4)) {
+                    *o = f32::from_bits(u32::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            FpFormat::Fp16 => {
+                let ff = FloatFormat::FP16;
+                for (o, c) in out.iter_mut().zip(self.payload.chunks_exact(2)) {
+                    *o = ff.decode(u16::from_le_bytes(c.try_into().unwrap()) as u32);
+                }
+            }
+            FpFormat::Fp8 => {
+                let ff = FloatFormat::FP8;
+                for (o, &b) in out.iter_mut().zip(self.payload.iter()) {
+                    *o = ff.decode(b as u32);
+                }
+            }
+        }
+    }
+}
+
+/// One named entry of a [`StateMap`]. Floats are held as raw bits so that
+/// equality (and therefore every resume test) is bit-exact, NaN included.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StateValue {
+    Tensor(TensorState),
+    U64(u64),
+    F64Bits(u64),
+    F32Bits(u32),
+    Str(String),
+    Bytes(Vec<u8>),
+}
+
+impl StateValue {
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            StateValue::Tensor(_) => "tensor",
+            StateValue::U64(_) => "u64",
+            StateValue::F64Bits(_) => "f64",
+            StateValue::F32Bits(_) => "f32",
+            StateValue::Str(_) => "str",
+            StateValue::Bytes(_) => "bytes",
+        }
+    }
+}
+
+/// Errors raised while serializing, deserializing or restoring state.
+#[derive(Debug)]
+pub enum StateError {
+    /// A required entry is absent.
+    Missing(String),
+    /// An entry exists but holds a different kind of value.
+    TypeMismatch { key: String, want: &'static str, got: &'static str },
+    /// A tensor entry's shape disagrees with the destination.
+    ShapeMismatch { key: String, want: Vec<usize>, got: Vec<usize> },
+    /// The checkpoint belongs to a different engine/optimizer/model.
+    Incompatible(String),
+    /// The container bytes are malformed (bad magic/version/CRC/bounds).
+    Corrupt(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for StateError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StateError::Missing(k) => write!(f, "missing state entry {k:?}"),
+            StateError::TypeMismatch { key, want, got } => {
+                write!(f, "state entry {key:?} is a {got}, expected a {want}")
+            }
+            StateError::ShapeMismatch { key, want, got } => {
+                write!(f, "state entry {key:?} has shape {got:?}, expected {want:?}")
+            }
+            StateError::Incompatible(m) => write!(f, "incompatible checkpoint: {m}"),
+            StateError::Corrupt(m) => write!(f, "corrupt checkpoint: {m}"),
+            StateError::Io(e) => write!(f, "checkpoint io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StateError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StateError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StateError {
+    fn from(e: std::io::Error) -> Self {
+        StateError::Io(e)
+    }
+}
+
+/// Join a key prefix and a name with a dot (empty prefix → bare name).
+pub fn key(prefix: &str, name: &str) -> String {
+    if prefix.is_empty() {
+        name.to_string()
+    } else {
+        format!("{prefix}.{name}")
+    }
+}
+
+/// An ordered map of named, typed state entries — the in-memory form of a
+/// checkpoint. `PartialEq` compares payload **bits**, so two maps are equal
+/// iff the states they describe are bit-identical.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StateMap {
+    entries: BTreeMap<String, StateValue>,
+}
+
+impl StateMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn insert(&mut self, key: &str, v: StateValue) {
+        self.entries.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&StateValue> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &StateValue)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Keys starting with `prefix`, in sorted order.
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.keys().filter(move |k| k.starts_with(prefix))
+    }
+
+    // ---- typed put/get ---------------------------------------------------
+
+    /// Store a tensor, packed into the narrowest lossless format.
+    pub fn put_tensor(&mut self, key: &str, shape: &[usize], data: &[f32]) {
+        self.insert(key, StateValue::Tensor(TensorState::pack_auto(shape, data)));
+    }
+
+    pub fn get_tensor(&self, key: &str) -> Result<&TensorState, StateError> {
+        match self.get(key) {
+            None => Err(StateError::Missing(key.to_string())),
+            Some(StateValue::Tensor(t)) => Ok(t),
+            Some(v) => Err(StateError::TypeMismatch {
+                key: key.to_string(),
+                want: "tensor",
+                got: v.kind_name(),
+            }),
+        }
+    }
+
+    /// Decode the tensor at `key` (shape-checked against `want_shape`)
+    /// into `out`.
+    pub fn copy_tensor_into(
+        &self,
+        key: &str,
+        want_shape: &[usize],
+        out: &mut [f32],
+    ) -> Result<(), StateError> {
+        let t = self.get_tensor(key)?;
+        if t.shape != want_shape {
+            return Err(StateError::ShapeMismatch {
+                key: key.to_string(),
+                want: want_shape.to_vec(),
+                got: t.shape.clone(),
+            });
+        }
+        t.unpack_into(out);
+        Ok(())
+    }
+
+    /// Decode the tensor at `key` as `(shape, values)`.
+    pub fn tensor_data(&self, key: &str) -> Result<(Vec<usize>, Vec<f32>), StateError> {
+        let t = self.get_tensor(key)?;
+        Ok((t.shape.clone(), t.unpack()))
+    }
+
+    pub fn put_u64(&mut self, key: &str, v: u64) {
+        self.insert(key, StateValue::U64(v));
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64, StateError> {
+        match self.get(key) {
+            None => Err(StateError::Missing(key.to_string())),
+            Some(StateValue::U64(v)) => Ok(*v),
+            Some(v) => Err(StateError::TypeMismatch {
+                key: key.to_string(),
+                want: "u64",
+                got: v.kind_name(),
+            }),
+        }
+    }
+
+    pub fn put_f64(&mut self, key: &str, v: f64) {
+        self.insert(key, StateValue::F64Bits(v.to_bits()));
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, StateError> {
+        match self.get(key) {
+            None => Err(StateError::Missing(key.to_string())),
+            Some(StateValue::F64Bits(b)) => Ok(f64::from_bits(*b)),
+            Some(v) => Err(StateError::TypeMismatch {
+                key: key.to_string(),
+                want: "f64",
+                got: v.kind_name(),
+            }),
+        }
+    }
+
+    pub fn put_f32(&mut self, key: &str, v: f32) {
+        self.insert(key, StateValue::F32Bits(v.to_bits()));
+    }
+
+    pub fn get_f32(&self, key: &str) -> Result<f32, StateError> {
+        match self.get(key) {
+            None => Err(StateError::Missing(key.to_string())),
+            Some(StateValue::F32Bits(b)) => Ok(f32::from_bits(*b)),
+            Some(v) => Err(StateError::TypeMismatch {
+                key: key.to_string(),
+                want: "f32",
+                got: v.kind_name(),
+            }),
+        }
+    }
+
+    pub fn put_str(&mut self, key: &str, v: &str) {
+        self.insert(key, StateValue::Str(v.to_string()));
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str, StateError> {
+        match self.get(key) {
+            None => Err(StateError::Missing(key.to_string())),
+            Some(StateValue::Str(s)) => Ok(s),
+            Some(v) => Err(StateError::TypeMismatch {
+                key: key.to_string(),
+                want: "str",
+                got: v.kind_name(),
+            }),
+        }
+    }
+
+    pub fn put_bytes(&mut self, key: &str, v: Vec<u8>) {
+        self.insert(key, StateValue::Bytes(v));
+    }
+
+    pub fn get_bytes(&self, key: &str) -> Result<&[u8], StateError> {
+        match self.get(key) {
+            None => Err(StateError::Missing(key.to_string())),
+            Some(StateValue::Bytes(b)) => Ok(b),
+            Some(v) => Err(StateError::TypeMismatch {
+                key: key.to_string(),
+                want: "bytes",
+                got: v.kind_name(),
+            }),
+        }
+    }
+
+    // ---- container io ----------------------------------------------------
+
+    /// Serialize to the `.fp8ck` container (see `docs/state-format.md`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        container::encode(self)
+    }
+
+    /// Deserialize a `.fp8ck` container, verifying every CRC.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, StateError> {
+        container::decode(bytes)
+    }
+
+    /// Write atomically: serialize, write `<path>.tmp`, rename over `path`.
+    /// The temp name is the full path plus a suffix (never
+    /// `with_extension`, which would make distinct targets sharing a stem
+    /// collide on one temp file).
+    pub fn save_file(&self, path: impl AsRef<Path>) -> Result<(), StateError> {
+        let path = path.as_ref();
+        let mut tmp = path.as_os_str().to_os_string();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load_file(path: impl AsRef<Path>) -> Result<Self, StateError> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// The checkpointing trait: everything stateful serializes itself into a
+/// [`StateMap`] under a key prefix and restores from one **strictly**
+/// (missing entries, wrong shapes, wrong kinds are errors — a silently
+/// partial restore could diverge without a trace, the exact failure mode
+/// reduced-precision training cannot afford).
+pub trait StateDict {
+    fn save_state(&mut self, prefix: &str, out: &mut StateMap);
+    fn load_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_joins_with_dot() {
+        assert_eq!(key("model", "c1.w"), "model.c1.w");
+        assert_eq!(key("", "c1.w"), "c1.w");
+    }
+
+    #[test]
+    fn pack_auto_picks_narrowest_lossless() {
+        // 1.25 is on the FP8 grid → one byte per element.
+        let t = TensorState::pack_auto(&[2], &[1.25, -0.5]);
+        assert_eq!(t.fmt, FpFormat::Fp8);
+        assert_eq!(t.payload.len(), 2);
+        assert_eq!(t.unpack(), vec![1.25, -0.5]);
+        // 1 + 2^-9 is on the FP16 (1,6,9) grid but not FP8.
+        let v = 1.0 + 2f32.powi(-9);
+        let t = TensorState::pack_auto(&[1], &[v]);
+        assert_eq!(t.fmt, FpFormat::Fp16);
+        assert_eq!(t.unpack(), vec![v]);
+        // 1 + 2^-23 needs full f32.
+        let v = 1.0 + 2f32.powi(-23);
+        let t = TensorState::pack_auto(&[1], &[v]);
+        assert_eq!(t.fmt, FpFormat::Fp32);
+        assert_eq!(t.unpack()[0].to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn pack_refuses_lossy_formats() {
+        assert!(TensorState::pack(FpFormat::Fp8, &[1], &[1.1]).is_none());
+        assert!(TensorState::pack(FpFormat::Fp16, &[1], &[1.0 + 2f32.powi(-23)]).is_none());
+        assert!(TensorState::pack(FpFormat::Fp32, &[1], &[1.1]).is_some());
+    }
+
+    #[test]
+    fn specials_round_trip_bit_exactly() {
+        // NaN payload bits and -0.0 survive (fp32 fallback keeps raw bits).
+        let weird = f32::from_bits(0x7FC0_0001); // non-canonical NaN
+        let t = TensorState::pack_auto(&[3], &[-0.0, f32::NAN, weird]);
+        let back = t.unpack();
+        assert!(back[0] == 0.0 && back[0].is_sign_negative());
+        assert!(back[1].is_nan());
+        assert_eq!(back[2].to_bits(), weird.to_bits());
+        // -0.0 alone is FP8-representable and keeps its sign there too.
+        let t = TensorState::pack_auto(&[1], &[-0.0]);
+        assert_eq!(t.fmt, FpFormat::Fp8);
+        assert!(t.unpack()[0].is_sign_negative());
+    }
+
+    #[test]
+    fn zero_sized_tensor_ok() {
+        let t = TensorState::pack_auto(&[0, 4], &[]);
+        assert_eq!(t.num_elems(), 0);
+        assert!(t.payload.is_empty());
+        assert!(t.unpack().is_empty());
+    }
+
+    #[test]
+    fn typed_accessors_and_mismatches() {
+        let mut m = StateMap::new();
+        m.put_u64("a", 7);
+        m.put_f64("b", f64::NAN);
+        m.put_f32("c", -0.0);
+        m.put_str("d", "héllo");
+        m.put_bytes("e", vec![1, 2, 3]);
+        m.put_tensor("t", &[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.get_u64("a").unwrap(), 7);
+        assert!(m.get_f64("b").unwrap().is_nan());
+        assert!(m.get_f32("c").unwrap().is_sign_negative());
+        assert_eq!(m.get_str("d").unwrap(), "héllo");
+        assert_eq!(m.get_bytes("e").unwrap(), &[1, 2, 3]);
+        assert_eq!(m.tensor_data("t").unwrap().0, vec![2, 2]);
+        // Missing and wrong-kind lookups are loud.
+        assert!(matches!(m.get_u64("zzz"), Err(StateError::Missing(_))));
+        assert!(matches!(m.get_u64("d"), Err(StateError::TypeMismatch { .. })));
+        assert!(matches!(
+            m.copy_tensor_into("t", &[4], &mut [0.0; 4]),
+            Err(StateError::ShapeMismatch { .. })
+        ));
+        assert_eq!(m.keys_with_prefix("t").count(), 1);
+    }
+}

@@ -1,6 +1,15 @@
 //! The trainer: an engine-agnostic training loop with LR scheduling,
-//! periodic evaluation, and CSV metrics — the machinery behind the
-//! convergence curves of Figs. 1/4/5 and the test errors of Tables 1–4.
+//! periodic evaluation, CSV metrics — and bit-exact checkpoint/resume.
+//!
+//! Checkpointing contract: a run that trains `k` steps, writes a
+//! checkpoint, and is resumed by a **fresh process** for the remaining
+//! `N−k` steps produces bit-identical weights, optimizer moments and eval
+//! curve to an uninterrupted `N`-step run (`rust/tests/
+//! resume_equivalence.rs`). This holds because every per-step stochastic
+//! stream is derived from `(seed, layer, role, step)` — nothing in the loop
+//! carries hidden cross-step RNG state — and the checkpoint captures the
+//! rest: engine state ([`crate::coordinator::Engine::save_state`]) plus the
+//! trainer's own [`TrainProgress`] (next step, running-loss window, curve).
 
 pub mod schedule;
 
@@ -9,6 +18,7 @@ pub use schedule::LrSchedule;
 use crate::coordinator::{evaluate, Engine};
 use crate::data::{Batch, SyntheticDataset};
 use crate::logging::CsvSink;
+use crate::state::{self, StateDict, StateError, StateMap};
 
 /// Training-run configuration.
 #[derive(Clone, Debug)]
@@ -19,8 +29,23 @@ pub struct TrainConfig {
     /// Evaluate every `eval_every` steps (and at the end). 0 = only final.
     pub eval_every: usize,
     /// Optional CSV path for the per-eval convergence curve (Fig. 4).
+    /// Note: the sink truncates, so a resumed run rewrites the curve from
+    /// its resume point onward.
     pub csv: Option<String>,
     pub verbose: bool,
+    /// Write a checkpoint every `save_every` steps (0 = only at the end,
+    /// and then only when `save_path` is set).
+    pub save_every: usize,
+    /// Checkpoint destination (one file, replaced atomically each save;
+    /// defaults to `checkpoint.fp8ck` when `save_every > 0`).
+    pub save_path: Option<String>,
+    /// Resume: restore engine + trainer progress from this `.fp8ck` file
+    /// before stepping.
+    pub resume: Option<String>,
+    /// Extra entries (typically `meta.*`) copied into every checkpoint so
+    /// a resuming process can reconstruct the run (model id, policy, seed,
+    /// step budget — see `cmd_train`).
+    pub save_meta: StateMap,
 }
 
 impl TrainConfig {
@@ -32,6 +57,10 @@ impl TrainConfig {
             eval_every: (steps / 8).max(1),
             csv: None,
             verbose: false,
+            save_every: 0,
+            save_path: None,
+            resume: None,
+            save_meta: StateMap::new(),
         }
     }
 }
@@ -63,30 +92,134 @@ impl TrainResult {
     }
 }
 
+/// The trainer's own persistent state: where the loop is, the running-loss
+/// window feeding the next eval point, and the curve so far. Everything a
+/// resumed process needs beyond the engine state.
+#[derive(Clone, Debug, Default)]
+pub struct TrainProgress {
+    /// First step the (resumed) loop executes.
+    pub next_step: usize,
+    /// Sum of per-step losses since the last eval point…
+    pub recent_loss: f64,
+    /// …over this many steps.
+    pub recent_n: usize,
+    pub curve: Vec<EvalPoint>,
+}
+
+/// Curve points serialize as fixed 32-byte records (u64 step + three f64
+/// bit patterns) so the eval-curve comparison of the resume guarantee is a
+/// byte comparison.
+const CURVE_RECORD: usize = 32;
+
+impl StateDict for TrainProgress {
+    fn save_state(&mut self, prefix: &str, out: &mut StateMap) {
+        out.put_u64(&state::key(prefix, "next_step"), self.next_step as u64);
+        out.put_f64(&state::key(prefix, "recent_loss"), self.recent_loss);
+        out.put_u64(&state::key(prefix, "recent_n"), self.recent_n as u64);
+        let mut bytes = Vec::with_capacity(self.curve.len() * CURVE_RECORD);
+        for p in &self.curve {
+            bytes.extend_from_slice(&(p.step as u64).to_le_bytes());
+            bytes.extend_from_slice(&p.train_loss.to_bits().to_le_bytes());
+            bytes.extend_from_slice(&p.test_loss.to_bits().to_le_bytes());
+            bytes.extend_from_slice(&p.test_err.to_bits().to_le_bytes());
+        }
+        out.put_bytes(&state::key(prefix, "curve"), bytes);
+    }
+
+    fn load_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError> {
+        self.next_step = src.get_u64(&state::key(prefix, "next_step"))? as usize;
+        self.recent_loss = src.get_f64(&state::key(prefix, "recent_loss"))?;
+        self.recent_n = src.get_u64(&state::key(prefix, "recent_n"))? as usize;
+        let bytes = src.get_bytes(&state::key(prefix, "curve"))?;
+        if bytes.len() % CURVE_RECORD != 0 {
+            return Err(StateError::Corrupt(format!(
+                "curve payload is {} bytes, not a multiple of {CURVE_RECORD}",
+                bytes.len()
+            )));
+        }
+        let u = |c: &[u8]| u64::from_le_bytes(c.try_into().unwrap());
+        self.curve = bytes
+            .chunks_exact(CURVE_RECORD)
+            .map(|c| EvalPoint {
+                step: u(&c[0..8]) as usize,
+                train_loss: f64::from_bits(u(&c[8..16])),
+                test_loss: f64::from_bits(u(&c[16..24])),
+                test_err: f64::from_bits(u(&c[24..32])),
+            })
+            .collect();
+        Ok(())
+    }
+}
+
+fn save_checkpoint(engine: &mut dyn Engine, progress: &mut TrainProgress, cfg: &TrainConfig) {
+    let path = cfg
+        .save_path
+        .clone()
+        .unwrap_or_else(|| "checkpoint.fp8ck".to_string());
+    let mut map = cfg.save_meta.clone();
+    engine.save_state(&mut map);
+    progress.save_state("train", &mut map);
+    map.save_file(&path)
+        .unwrap_or_else(|e| panic!("write checkpoint {path}: {e}"));
+    if cfg.verbose {
+        crate::log_info!("checkpoint → {path} (step {})", progress.next_step);
+    }
+}
+
 /// Run the training loop: engine + synthetic dataset + config.
+///
+/// # Panics
+///
+/// Panics if `cfg.resume` points at a missing/corrupt/incompatible
+/// checkpoint or a checkpoint write fails — consistent with the loop's
+/// existing `expect` style for CSV IO. The CLI pre-validates the resume
+/// file (it loads `meta.*` first and surfaces a clean contextual error),
+/// so these panics mark invariant violations, not user typos.
 pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) -> TrainResult {
     let test: Vec<Batch> = ds.test_batches(cfg.batch_size.max(16));
+    let mut progress = TrainProgress::default();
+    if let Some(path) = &cfg.resume {
+        let map = StateMap::load_file(path)
+            .unwrap_or_else(|e| panic!("resume: load checkpoint {path}: {e}"));
+        engine
+            .load_state(&map)
+            .unwrap_or_else(|e| panic!("resume: restore engine from {path}: {e}"));
+        progress
+            .load_state("train", &map)
+            .unwrap_or_else(|e| panic!("resume: restore trainer progress from {path}: {e}"));
+        assert!(
+            progress.next_step <= cfg.steps,
+            "checkpoint {path} is at step {}, beyond this run's {} steps",
+            progress.next_step,
+            cfg.steps
+        );
+        if cfg.verbose {
+            crate::log_info!(
+                "{} resumed from {path} at step {} ({} eval points so far)",
+                engine.name(),
+                progress.next_step,
+                progress.curve.len()
+            );
+        }
+    }
     let sink = cfg.csv.as_ref().map(|p| {
         CsvSink::create(p, &["step", "lr", "train_loss", "test_loss", "test_err"])
             .expect("create csv")
     });
-    let mut curve = Vec::new();
-    let mut recent_loss = 0f64;
-    let mut recent_n = 0usize;
     let spe = ds.steps_per_epoch(cfg.batch_size);
-    for step in 0..cfg.steps {
+    for step in progress.next_step..cfg.steps {
         let lr = cfg.schedule.lr_at(step);
         let batch = ds.train_batch(step % spe, cfg.batch_size);
         let loss = engine.train_step(&batch, lr, step as u64);
-        recent_loss += loss;
-        recent_n += 1;
+        progress.recent_loss += loss;
+        progress.recent_n += 1;
         let at_eval =
             (cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0) || step + 1 == cfg.steps;
         if at_eval {
             let (tl, te) = evaluate(engine, &test);
-            let train_loss = recent_loss / recent_n.max(1) as f64;
-            recent_loss = 0.0;
-            recent_n = 0;
+            let train_loss = progress.recent_loss / progress.recent_n.max(1) as f64;
+            progress.recent_loss = 0.0;
+            progress.recent_n = 0;
             let pt = EvalPoint {
                 step: step + 1,
                 train_loss,
@@ -97,7 +230,7 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
                 s.row(&[(step + 1) as f64, lr as f64, train_loss, tl, te]);
             }
             if cfg.verbose {
-                log::info!(
+                crate::log_info!(
                     "{} step {:>5} lr {:.4} train_loss {:.4} test_loss {:.4} test_err {:.2}%",
                     engine.name(),
                     step + 1,
@@ -107,13 +240,23 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
                     te
                 );
             }
-            curve.push(pt);
+            progress.curve.push(pt);
+        }
+        // Checkpointing is on iff either knob is set; an enabled run also
+        // always saves at the end (so `save_every` that doesn't divide
+        // `steps` never loses the last partial window).
+        let saving = cfg.save_every > 0 || cfg.save_path.is_some();
+        let at_save = (cfg.save_every > 0 && (step + 1) % cfg.save_every == 0)
+            || (saving && step + 1 == cfg.steps);
+        if at_save {
+            progress.next_step = step + 1;
+            save_checkpoint(engine, &mut progress, cfg);
         }
     }
     if let Some(s) = &sink {
         s.flush();
     }
-    let last = curve.last().copied().unwrap_or(EvalPoint {
+    let last = progress.curve.last().copied().unwrap_or(EvalPoint {
         step: 0,
         train_loss: f64::NAN,
         test_loss: f64::NAN,
@@ -122,7 +265,7 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
     TrainResult {
         final_test_err: last.test_err,
         final_train_loss: last.train_loss,
-        curve,
+        curve: progress.curve,
     }
 }
 
@@ -164,6 +307,62 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("step,lr,train_loss,test_loss,test_err"));
         assert!(text.lines().count() >= 2);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn progress_round_trips_bit_exactly() {
+        let mut p = TrainProgress {
+            next_step: 17,
+            recent_loss: 0.1 + 0.2, // not exactly 0.3 — bits must survive
+            recent_n: 3,
+            curve: vec![
+                EvalPoint { step: 8, train_loss: 1.5, test_loss: 1.25, test_err: 42.0 },
+                EvalPoint { step: 16, train_loss: f64::NAN, test_loss: 0.5, test_err: 10.0 },
+            ],
+        };
+        let mut map = StateMap::new();
+        p.save_state("train", &mut map);
+        let mut q = TrainProgress::default();
+        q.load_state("train", &map).unwrap();
+        assert_eq!(q.next_step, 17);
+        assert_eq!(q.recent_loss.to_bits(), p.recent_loss.to_bits());
+        assert_eq!(q.recent_n, 3);
+        assert_eq!(q.curve.len(), 2);
+        for (a, b) in p.curve.iter().zip(&q.curve) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.test_err.to_bits(), b.test_err.to_bits());
+        }
+    }
+
+    #[test]
+    fn trainer_writes_and_resumes_checkpoints() {
+        let dir = std::env::temp_dir().join("fp8train_test_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.fp8ck").to_string_lossy().into_owned();
+        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 9).with_sizes(32, 16);
+        let mut cfg = TrainConfig::quick(4);
+        cfg.batch_size = 8;
+        cfg.eval_every = 2;
+        cfg.save_every = 2;
+        cfg.save_path = Some(path.clone());
+        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 9);
+        let r = train(&mut e, &ds, &cfg);
+        // The final checkpoint restores to next_step == steps: resuming is
+        // a no-op that reproduces the recorded curve.
+        let mut cfg2 = cfg.clone();
+        cfg2.resume = Some(path.clone());
+        cfg2.save_path = None;
+        cfg2.save_every = 0;
+        let mut f = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 9);
+        let r2 = train(&mut f, &ds, &cfg2);
+        assert_eq!(r.curve.len(), r2.curve.len());
+        for (a, b) in r.curve.iter().zip(&r2.curve) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+        }
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,0 +1,223 @@
+//! Checkpoint-container coverage: round-trip property tests across every
+//! `FpFormat` and odd tensor shapes, bit-exactness on special values, and
+//! the error paths (truncation, bit flips vs CRCs, bad version, bad tags).
+
+use fp8train::numerics::{FloatFormat, RoundMode, Xoshiro256};
+use fp8train::state::container::{self, crc32};
+use fp8train::state::{FpFormat, StateError, StateMap, StateValue, TensorState};
+
+/// Random values already on the grid of `fmt` (so the auto-packer must
+/// keep them losslessly at ≤ that width).
+fn grid_values(fmt: FloatFormat, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..n)
+        .map(|_| {
+            let raw = (rng.next_f32() - 0.5) * 2f32.powi((rng.below(40) as i32) - 20);
+            fmt.quantize(raw, RoundMode::NearestEven)
+        })
+        .collect()
+}
+
+const ODD_SHAPES: [&[usize]; 5] = [&[1], &[7], &[3, 5], &[2, 1, 9], &[4, 0, 3]];
+
+#[test]
+fn round_trip_property_all_formats_and_odd_shapes() {
+    for (fmt, float) in [
+        (FpFormat::Fp8, FloatFormat::FP8),
+        (FpFormat::Fp16, FloatFormat::FP16),
+        (FpFormat::Fp32, FloatFormat::FP32),
+    ] {
+        for (si, shape) in ODD_SHAPES.into_iter().enumerate() {
+            let n: usize = shape.iter().product();
+            let data = grid_values(float, n, 1000 + si as u64);
+            let mut map = StateMap::new();
+            map.put_tensor("t", shape, &data);
+            let bytes = map.to_bytes();
+            let back = StateMap::from_bytes(&bytes).unwrap();
+            assert_eq!(back, map, "{fmt:?} shape {shape:?}");
+            let (got_shape, got) = back.tensor_data("t").unwrap();
+            assert_eq!(got_shape, shape);
+            for (a, b) in data.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?} {shape:?}");
+            }
+            // The packer never widens past `fmt` for on-grid data.
+            let t = back.get_tensor("t").unwrap();
+            assert!(
+                t.fmt.byte_width() <= fmt.byte_width(),
+                "{fmt:?} data stored as {:?}",
+                t.fmt
+            );
+        }
+    }
+}
+
+#[test]
+fn explicit_format_tags_survive_the_container() {
+    // pack() pins the format tag even when a narrower one would fit; the
+    // tag must round-trip through the file bytes.
+    let data = [1.0f32, -2.0, 0.5];
+    for fmt in FpFormat::ALL {
+        let t = TensorState::pack(fmt, &[3], &data).unwrap();
+        assert_eq!(t.fmt, fmt);
+        let mut map = StateMap::new();
+        map.insert("t", StateValue::Tensor(t));
+        let back = StateMap::from_bytes(&map.to_bytes()).unwrap();
+        assert_eq!(back.get_tensor("t").unwrap().fmt, fmt);
+        assert_eq!(back.tensor_data("t").unwrap().1, data.to_vec());
+    }
+}
+
+#[test]
+fn scalars_and_specials_bit_exact() {
+    let mut map = StateMap::new();
+    map.put_u64("step", u64::MAX);
+    map.put_f64("nan", f64::from_bits(0x7FF8_0000_0000_0001));
+    map.put_f64("neg_zero", -0.0);
+    map.put_f32("lr", f32::from_bits(0xFF80_0001)); // f32 NaN payload
+    map.put_str("unicode", "θ=½·∑");
+    map.put_bytes("blob", (0..=255).collect());
+    map.put_tensor("weird", &[4], &[-0.0, f32::NAN, f32::INFINITY, 1e-44]);
+    let back = StateMap::from_bytes(&map.to_bytes()).unwrap();
+    assert_eq!(back, map);
+    assert_eq!(back.get_u64("step").unwrap(), u64::MAX);
+    assert_eq!(
+        back.get_f64("nan").unwrap().to_bits(),
+        0x7FF8_0000_0000_0001
+    );
+    assert!(back.get_f64("neg_zero").unwrap().is_sign_negative());
+    assert_eq!(back.get_f32("lr").unwrap().to_bits(), 0xFF80_0001);
+    let (_, w) = back.tensor_data("weird").unwrap();
+    assert!(w[0].is_sign_negative() && w[0] == 0.0);
+    assert!(w[1].is_nan());
+    assert_eq!(w[2], f32::INFINITY);
+    assert_eq!(w[3].to_bits(), 1e-44f32.to_bits()); // f32 subnormal
+}
+
+#[test]
+fn file_save_load_round_trip() {
+    let dir = std::env::temp_dir().join("fp8ck_file_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("x.fp8ck");
+    let mut map = StateMap::new();
+    map.put_tensor("w", &[8, 3], &grid_values(FloatFormat::FP16, 24, 5));
+    map.put_str("meta.model", "cifar_cnn");
+    map.save_file(&path).unwrap();
+    assert_eq!(StateMap::load_file(&path).unwrap(), map);
+    // The atomic-write temp file must not linger, and its name must be
+    // unique per target (full path + suffix, not a shared stem).
+    assert!(!dir.join("x.fp8ck.tmp").exists());
+    std::fs::remove_file(path).ok();
+}
+
+fn sample_bytes() -> Vec<u8> {
+    let mut map = StateMap::new();
+    map.put_tensor("aaa.w", &[3, 3], &[0.25; 9]);
+    map.put_u64("step", 7);
+    map.to_bytes()
+}
+
+fn index_off(bytes: &[u8]) -> usize {
+    u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize
+}
+
+/// Patch the container, then re-sign the table CRC so the patch reaches
+/// the deeper validators (tag/shape/length checks) instead of dying at the
+/// CRC wall.
+fn patch_resigned(mut bytes: Vec<u8>, patch: impl Fn(&mut [u8], usize)) -> Vec<u8> {
+    let off = index_off(&bytes);
+    patch(&mut bytes, off);
+    let end = bytes.len() - 4;
+    let crc = crc32(&bytes[off..end]);
+    bytes[end..].copy_from_slice(&crc.to_le_bytes());
+    bytes
+}
+
+#[test]
+fn truncated_files_rejected_at_every_boundary() {
+    let bytes = sample_bytes();
+    for cut in [0, 5, 8, 12, 16, 23, 24, 30, bytes.len() - 6, bytes.len() - 1] {
+        let e = StateMap::from_bytes(&bytes[..cut]).unwrap_err();
+        assert!(matches!(e, StateError::Corrupt(_)), "cut={cut}: {e}");
+    }
+}
+
+#[test]
+fn bad_magic_and_version_rejected() {
+    let mut bytes = sample_bytes();
+    bytes[3] ^= 0x01;
+    assert!(StateMap::from_bytes(&bytes).unwrap_err().to_string().contains("magic"));
+    let mut bytes = sample_bytes();
+    bytes[8] = 42;
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("version 42"), "{e}");
+}
+
+#[test]
+fn payload_and_table_bitflips_fail_crc() {
+    // Payload flip: table CRC still valid, chunk CRC must catch it.
+    let mut bytes = sample_bytes();
+    bytes[24] ^= 0x80;
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("payload CRC"), "{e}");
+    // Table flip without re-signing: table CRC catches it.
+    let mut bytes = sample_bytes();
+    let off = index_off(&bytes);
+    bytes[off] ^= 0xFF;
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("chunk-table CRC"), "{e}");
+}
+
+#[test]
+fn unknown_format_tag_rejected() {
+    // First record: key "aaa.w" (len 5). fmt byte sits at
+    // table + 2 (key_len) + 5 (key) + 1 (kind).
+    let bytes = patch_resigned(sample_bytes(), |b, off| b[off + 8] = 9);
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("format tag 9"), "{e}");
+}
+
+#[test]
+fn unknown_kind_tag_rejected() {
+    let bytes = patch_resigned(sample_bytes(), |b, off| b[off + 7] = 200);
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("kind tag 200"), "{e}");
+}
+
+#[test]
+fn shape_payload_length_mismatch_rejected() {
+    // First dim of "aaa.w" (u64 after key_len+key+kind+fmt+ndim) 3 → 4:
+    // 4·3 elements ≠ 9-byte fp8 payload.
+    let bytes = patch_resigned(sample_bytes(), |b, off| b[off + 10] = 4);
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("payload bytes"), "{e}");
+}
+
+#[test]
+fn payload_bounds_outside_region_rejected() {
+    // Point the first chunk's payload offset past the payload region:
+    // offset field sits after key(7)+kind+fmt+ndim+2 dims = table+26.
+    let bytes = patch_resigned(sample_bytes(), |b, off| {
+        let field = off + 2 + 5 + 1 + 1 + 1 + 16;
+        b[field..field + 8].copy_from_slice(&(u64::MAX - 8).to_le_bytes());
+    });
+    let e = StateMap::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(e.contains("overflow") || e.contains("outside"), "{e}");
+}
+
+#[test]
+fn inspect_reports_chunks_and_validates() {
+    let bytes = sample_bytes();
+    let rep = container::inspect(&bytes).unwrap();
+    assert_eq!(rep.version, 1);
+    assert_eq!(rep.chunks.len(), 2);
+    assert_eq!(rep.chunks[0].key, "aaa.w");
+    assert_eq!(rep.chunks[0].kind, "tensor");
+    assert_eq!(rep.chunks[0].fmt, "fp8"); // 0.25 is on the FP8 grid
+    assert_eq!(rep.chunks[0].shape, vec![3, 3]);
+    assert_eq!(rep.chunks[1].key, "step");
+    assert_eq!(rep.chunks[1].kind, "u64");
+    // inspect also rejects corruption.
+    let mut bad = bytes.clone();
+    bad[24] ^= 1;
+    assert!(container::inspect(&bad).is_err());
+}

@@ -38,6 +38,7 @@ fn quick_cfg(steps: usize, batch: usize) -> TrainConfig {
         eval_every: steps,
         csv: None,
         verbose: false,
+        ..TrainConfig::quick(steps)
     }
 }
 

@@ -1,0 +1,170 @@
+//! The bit-exact resume guarantee (acceptance criterion of the checkpoint
+//! subsystem): train N steps uninterrupted vs train k steps → checkpoint →
+//! **fresh engine** resumes → train N−k steps. Weights, optimizer moments
+//! (SGD velocity / Adam m·v·t), BatchNorm running statistics and the eval
+//! curve must be element-wise bit-identical, for both `CifarCnn` and
+//! `Bn50Dnn`, under both the fp32 policy and the paper's FP8+SR policy.
+//!
+//! This holds because every stochastic-rounding stream is derived from
+//! `(seed, layer, role, step)` — no hidden cross-step RNG state — and the
+//! checkpoint captures everything else exactly (`.fp8ck` payloads are raw
+//! bit patterns).
+
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::models::ModelKind;
+use fp8train::nn::PrecisionPolicy;
+use fp8train::optim::{Adam, Optimizer, Sgd};
+use fp8train::state::StateMap;
+use fp8train::train::{train, LrSchedule, TrainConfig, TrainResult};
+
+// Budgets are deliberately tiny (the guarantee is bitwise, not
+// statistical) so the suite stays fast under the debug-profile `cargo
+// test` run; the CI smoke job re-runs this file in release as well.
+const N: usize = 4; // total steps
+const K: usize = 2; // interruption point (multiple of eval_every)
+const SEED: u64 = 11;
+
+fn snapshot(e: &mut NativeEngine) -> StateMap {
+    let mut m = StateMap::new();
+    e.save_state(&mut m);
+    m
+}
+
+/// Element-wise bit comparison with a per-key failure message.
+fn assert_states_identical(a: &StateMap, b: &StateMap, what: &str) {
+    let ka: Vec<&str> = a.keys().collect();
+    let kb: Vec<&str> = b.keys().collect();
+    assert_eq!(ka, kb, "{what}: key sets differ");
+    for k in ka {
+        assert!(
+            a.get(k) == b.get(k),
+            "{what}: entry {k:?} differs between uninterrupted and resumed run"
+        );
+    }
+}
+
+fn assert_curves_identical(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.curve.len(), b.curve.len(), "{what}: curve lengths differ");
+    for (pa, pb) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(pa.step, pb.step, "{what}: eval steps differ");
+        for (la, lb, which) in [
+            (pa.train_loss, pb.train_loss, "train_loss"),
+            (pa.test_loss, pb.test_loss, "test_loss"),
+            (pa.test_err, pb.test_err, "test_err"),
+        ] {
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "{what}: {which} at step {} differs ({la} vs {lb})",
+                pa.step
+            );
+        }
+    }
+}
+
+fn check(kind: ModelKind, policy: fn() -> PrecisionPolicy, opt_name: &str) {
+    let make_engine = || -> NativeEngine {
+        let opt: Box<dyn Optimizer> = match opt_name {
+            "adam" => Box::new(Adam::new(1e-4, SEED ^ 0x0117)),
+            _ => Box::new(Sgd::new(0.9, 1e-4, SEED ^ 0x0117)),
+        };
+        NativeEngine::with_optimizer(kind, policy(), opt, SEED)
+    };
+    let what = format!("{}/{}/{}", kind.id(), policy().name, opt_name);
+    let ds = SyntheticDataset::for_model(kind, SEED).with_sizes(32, 16);
+    let dir = std::env::temp_dir().join("fp8ck_resume_equivalence");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir
+        .join(format!("{}.fp8ck", what.replace('/', "_")))
+        .to_string_lossy()
+        .into_owned();
+
+    // The schedule spans the FULL budget in every phase (resume does not
+    // rebuild it), so LR milestones line up across the split.
+    let base = TrainConfig {
+        batch_size: 4,
+        steps: N,
+        schedule: LrSchedule::step_decay(0.02, N),
+        eval_every: K,
+        ..TrainConfig::quick(N)
+    };
+
+    // Uninterrupted N-step run.
+    let mut full = make_engine();
+    let r_full = train(&mut full, &ds, &base);
+
+    // Interrupted: k steps, checkpoint, process "dies".
+    let mut part1 = make_engine();
+    let mut c1 = base.clone();
+    c1.steps = K;
+    c1.save_every = K;
+    c1.save_path = Some(ck.clone());
+    train(&mut part1, &ds, &c1);
+
+    // A FRESH engine (different init is irrelevant — fully restored)
+    // resumes and finishes.
+    let mut part2 = make_engine();
+    let mut c2 = base.clone();
+    c2.resume = Some(ck.clone());
+    let r_resumed = train(&mut part2, &ds, &c2);
+
+    assert_states_identical(&snapshot(&mut full), &snapshot(&mut part2), &what);
+    assert_curves_identical(&r_full, &r_resumed, &what);
+    std::fs::remove_file(&ck).ok();
+}
+
+#[test]
+fn cifar_cnn_fp32_sgd() {
+    check(ModelKind::CifarCnn, PrecisionPolicy::fp32, "sgd");
+}
+
+#[test]
+fn cifar_cnn_fp8_paper_sgd() {
+    check(ModelKind::CifarCnn, PrecisionPolicy::fp8_paper, "sgd");
+}
+
+#[test]
+fn bn50_dnn_fp32_sgd() {
+    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp32, "sgd");
+}
+
+#[test]
+fn bn50_dnn_fp8_paper_sgd() {
+    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper, "sgd");
+}
+
+/// Adam coverage (FP16 moments + bias-correction counter survive) on the
+/// cheap MLP — the conv nets are already covered by the SGD configs.
+#[test]
+fn bn50_dnn_fp8_paper_adam() {
+    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper, "adam");
+}
+
+#[test]
+fn bn50_dnn_fp32_adam() {
+    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp32, "adam");
+}
+
+/// Negative control: resuming under the wrong policy must be rejected, not
+/// silently diverge.
+#[test]
+fn resume_under_wrong_policy_is_rejected() {
+    let kind = ModelKind::Bn50Dnn;
+    let ds = SyntheticDataset::for_model(kind, SEED).with_sizes(48, 24);
+    let dir = std::env::temp_dir().join("fp8ck_resume_equivalence");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("wrong_policy.fp8ck").to_string_lossy().into_owned();
+    let mut cfg = TrainConfig::quick(2);
+    cfg.batch_size = 8;
+    cfg.save_every = 2;
+    cfg.save_path = Some(ck.clone());
+    let mut e = NativeEngine::new(kind, PrecisionPolicy::fp8_paper(), SEED);
+    train(&mut e, &ds, &cfg);
+
+    let mut wrong = NativeEngine::new(kind, PrecisionPolicy::fp32(), SEED);
+    let map = StateMap::load_file(&ck).unwrap();
+    let err = wrong.load_state(&map).unwrap_err();
+    assert!(err.to_string().contains("engine"), "{err}");
+    std::fs::remove_file(&ck).ok();
+}

@@ -8,8 +8,7 @@
 
 use fp8train::coordinator::NativeEngine;
 use fp8train::data::SyntheticDataset;
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::PrecisionPolicy;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::numerics::accumulate::{acc_chunked, acc_f64, acc_sequential};
 use fp8train::numerics::{FloatFormat, RoundMode, Xoshiro256};
 use fp8train::train::{train, TrainConfig};
@@ -33,11 +32,11 @@ fn main() {
     println!("  FP16 chunked CL=64:        {chunked:.0}");
 
     // --- 3. FP8 training vs FP32 ----------------------------------------
-    let kind = ModelKind::CifarCnn;
-    let ds = SyntheticDataset::for_model(kind, 7).with_sizes(512, 256);
+    let spec = ModelSpec::cifar_cnn();
+    let ds = SyntheticDataset::for_model(&spec, 7).with_sizes(512, 256);
     for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
         let name = policy.name.clone();
-        let mut engine = NativeEngine::new(kind, policy, 7);
+        let mut engine = NativeEngine::new(&spec, policy, 7);
         let r = train(&mut engine, &ds, &TrainConfig::quick(150));
         println!(
             "{name:>10}: final train loss {:.3}, test error {:.1}%",

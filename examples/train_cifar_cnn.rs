@@ -9,8 +9,7 @@
 
 use fp8train::coordinator::{Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::PrecisionPolicy;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::runtime::{PjrtEngine, Runtime};
 use fp8train::train::{train, LrSchedule, TrainConfig};
 
@@ -19,14 +18,14 @@ fn main() -> fp8train::error::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let which = args.get(2).map(String::as_str).unwrap_or("fp8").to_string();
-    let kind = ModelKind::CifarCnn;
+    let spec = ModelSpec::cifar_cnn();
     let seed = 42;
 
     let rt = Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     let mut pjrt = PjrtEngine::load(&rt, &format!("cifar_cnn_{which}"), seed)?;
     let batch = pjrt.batch_size();
-    let ds = SyntheticDataset::for_model(kind, seed);
+    let ds = SyntheticDataset::for_model(&spec, seed);
     let cfg = TrainConfig {
         batch_size: batch,
         steps,
@@ -52,7 +51,7 @@ fn main() -> fp8train::error::Result<()> {
         "fp32" => PrecisionPolicy::fp32(),
         _ => PrecisionPolicy::fp8_paper(),
     };
-    let mut native = NativeEngine::new(kind, policy, seed);
+    let mut native = NativeEngine::new(&spec, policy, seed);
     let mut cfg_native = cfg.clone();
     cfg_native.csv = Some(format!("results/e2e_native_{which}.csv"));
     println!("\n=== Native engine ({}) ===", native.name());

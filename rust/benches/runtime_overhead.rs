@@ -8,8 +8,7 @@
 use fp8train::bench_util::run;
 use fp8train::coordinator::{Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::PrecisionPolicy;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::numerics::Xoshiro256;
 use fp8train::runtime::{artifacts_dir, HostTensor, PjrtEngine, Runtime};
 use std::time::Instant;
@@ -59,7 +58,7 @@ fn main() {
     });
 
     println!("\n== train-step latency: PJRT vs native (cifar_cnn, batch 32) ==");
-    let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 2);
+    let ds = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 2);
     for tag in ["fp32", "fp8"] {
         let mut engine = PjrtEngine::load(&rt, &format!("cifar_cnn_{tag}"), 2).unwrap();
         let batch = ds.train_batch(0, engine.batch_size());
@@ -71,7 +70,7 @@ fn main() {
     }
     for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
         let name = policy.name.clone();
-        let mut engine = NativeEngine::new(ModelKind::CifarCnn, policy, 2);
+        let mut engine = NativeEngine::new(&ModelSpec::cifar_cnn(), policy, 2);
         let batch = ds.train_batch(0, 32);
         let mut step = 0u64;
         run(&format!("native/train_step_{name}"), None, || {

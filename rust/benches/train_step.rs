@@ -7,8 +7,7 @@
 use fp8train::bench_util::run;
 use fp8train::coordinator::{Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::{Layer, PrecisionPolicy};
+use fp8train::nn::{Layer, ModelSpec, PrecisionPolicy};
 
 fn main() {
     std::env::set_var("FP8TRAIN_BENCH_FAST", "1"); // steps are seconds-scale
@@ -17,13 +16,13 @@ fn main() {
         fp8train::numerics::gemm::num_threads()
     );
     let batch = 16;
-    for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
-        let ds = SyntheticDataset::for_model(kind, 1);
+    for spec in [ModelSpec::cifar_cnn(), ModelSpec::bn50_dnn()] {
+        let ds = SyntheticDataset::for_model(&spec, 1);
         let b = ds.train_batch(0, batch);
-        let macs = kind.build(1).macs_per_example() as f64 * batch as f64 * 3.0; // fwd+bwd+grad
+        let macs = spec.build(1).macs_per_example() as f64 * batch as f64 * 3.0; // fwd+bwd+grad
         println!(
             "\n== {} (batch {batch}, ~{macs:.2e} emulated MACs/step) ==",
-            kind.id()
+            spec.id()
         );
         for policy in [
             PrecisionPolicy::fp32(),
@@ -31,9 +30,9 @@ fn main() {
             PrecisionPolicy::fp8_nochunk(),
         ] {
             let name = policy.name.clone();
-            let mut engine = NativeEngine::new(kind, policy, 1);
+            let mut engine = NativeEngine::new(&spec, policy, 1);
             let mut step = 0u64;
-            run(&format!("train_step/{}/{}", kind.id(), name), Some(macs), || {
+            run(&format!("train_step/{}/{}", spec.id(), name), Some(macs), || {
                 step += 1;
                 engine.train_step(&b, 0.02, step)
             });

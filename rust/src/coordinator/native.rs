@@ -2,8 +2,7 @@
 
 use super::Engine;
 use crate::data::Batch;
-use crate::nn::models::ModelKind;
-use crate::nn::{softmax_xent, Layer, PrecisionPolicy, QuantCtx, Sequential};
+use crate::nn::{softmax_xent, Layer, ModelSpec, PrecisionPolicy, QuantCtx, Sequential};
 use crate::optim::{Optimizer, Sgd};
 use crate::state::{StateDict, StateError, StateMap};
 
@@ -16,22 +15,24 @@ pub struct NativeEngine {
 
 impl NativeEngine {
     /// Standard construction: SGD(momentum 0.9, weight decay 1e-4), master
-    /// weights quantized into the policy's update format.
-    pub fn new(kind: ModelKind, policy: PrecisionPolicy, seed: u64) -> Self {
+    /// weights quantized into the policy's update format. The engine name
+    /// embeds `spec.id()` — the preset id for presets (so historical
+    /// checkpoints keep their engine tag) or the canonical DSL string.
+    pub fn new(spec: &ModelSpec, policy: PrecisionPolicy, seed: u64) -> Self {
         let opt = Box::new(Sgd::new(0.9, 1e-4, seed ^ 0x0117));
-        Self::with_optimizer(kind, policy, opt, seed)
+        Self::with_optimizer(spec, policy, opt, seed)
     }
 
     pub fn with_optimizer(
-        kind: ModelKind,
+        spec: &ModelSpec,
         policy: PrecisionPolicy,
         mut opt: Box<dyn Optimizer>,
         seed: u64,
     ) -> Self {
-        let mut model = kind.build(seed);
+        let mut model = spec.build(seed);
         opt.prepare(&mut model, &policy);
         Self {
-            name: format!("native:{}:{}", kind.id(), policy.name),
+            name: format!("native:{}:{}", spec.id(), policy.name),
             model,
             policy,
             opt,
@@ -114,8 +115,9 @@ mod tests {
 
     #[test]
     fn loss_decreases_on_tiny_problem() {
-        let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 1).with_sizes(64, 32);
-        let mut e = NativeEngine::new(ModelKind::CifarCnn, PrecisionPolicy::fp32(), 1);
+        let spec = ModelSpec::cifar_cnn();
+        let ds = SyntheticDataset::for_model(&spec, 1).with_sizes(64, 32);
+        let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp32(), 1);
         let first = e.train_step(&ds.train_batch(0, 16), 0.02, 0);
         let mut last = first;
         for step in 1..30 {
@@ -129,8 +131,9 @@ mod tests {
 
     #[test]
     fn evaluate_reports_error_percent() {
-        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 2).with_sizes(64, 48);
-        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 2);
+        let spec = ModelSpec::bn50_dnn();
+        let ds = SyntheticDataset::for_model(&spec, 2).with_sizes(64, 48);
+        let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp32(), 2);
         let (loss, err) = evaluate(&mut e, &ds.test_batches(16));
         assert!(loss > 0.0);
         assert!((0.0..=100.0).contains(&err));
@@ -138,15 +141,16 @@ mod tests {
 
     #[test]
     fn engine_state_round_trip_is_bit_exact_and_strict() {
-        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 5).with_sizes(32, 16);
-        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper(), 5);
+        let spec = ModelSpec::bn50_dnn();
+        let ds = SyntheticDataset::for_model(&spec, 5).with_sizes(32, 16);
+        let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 5);
         for step in 0..3 {
             e.train_step(&ds.train_batch(step % 2, 8), 0.05, step as u64);
         }
         let mut map = StateMap::new();
         e.save_state(&mut map);
         // A fresh engine with a different seed converges to identical state.
-        let mut f = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper(), 99);
+        let mut f = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 99);
         f.load_state(&map).unwrap();
         let mut map2 = StateMap::new();
         f.save_state(&mut map2);
@@ -157,14 +161,15 @@ mod tests {
         let lb = f.train_step(&b, 0.05, 3);
         assert_eq!(la.to_bits(), lb.to_bits());
         // Wrong (model, policy) pairings are rejected loudly.
-        let mut wrong = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 5);
+        let mut wrong = NativeEngine::new(&spec, PrecisionPolicy::fp32(), 5);
         assert!(wrong.load_state(&map).is_err());
     }
 
     #[test]
     fn fp8_engine_trains() {
-        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 3).with_sizes(64, 32);
-        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper(), 3);
+        let spec = ModelSpec::bn50_dnn();
+        let ds = SyntheticDataset::for_model(&spec, 3).with_sizes(64, 32);
+        let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 3);
         let first = e.train_step(&ds.train_batch(0, 16), 0.05, 0);
         let mut last = first;
         for step in 1..40 {

@@ -20,7 +20,8 @@
 //! converges but test error diverges") needs in order to show up.
 
 use super::Batch;
-use crate::nn::models::{InputKind, ModelKind};
+use crate::nn::models::InputKind;
+use crate::nn::ModelSpec;
 use crate::numerics::rng::SplitMix64;
 use crate::numerics::Xoshiro256;
 use crate::tensor::Tensor;
@@ -100,9 +101,11 @@ impl SyntheticDataset {
         }
     }
 
-    /// Dataset sized/shaped for one of the six models.
-    pub fn for_model(kind: ModelKind, seed: u64) -> Self {
-        Self::new(kind.input(), kind.classes(), seed)
+    /// Dataset sized/shaped for a model spec: input shape and class count
+    /// are derived from the spec's shape inference, so any spec-defined
+    /// architecture gets a matching workload.
+    pub fn for_model(spec: &ModelSpec, seed: u64) -> Self {
+        Self::new(spec.input(), spec.classes(), seed)
     }
 
     pub fn with_sizes(mut self, train: usize, test: usize) -> Self {
@@ -183,7 +186,7 @@ mod tests {
 
     #[test]
     fn deterministic_and_split_disjoint() {
-        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 42);
+        let d = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 42);
         let (a1, l1) = d.example(Split::Train, 17);
         let (a2, l2) = d.example(Split::Train, 17);
         assert_eq!(a1, a2);
@@ -194,7 +197,7 @@ mod tests {
 
     #[test]
     fn values_on_u8_grid_and_fp16_exact() {
-        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 1);
+        let d = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 1);
         let (x, _) = d.example(Split::Train, 3);
         for &v in &x {
             assert!((0.0..=2.0).contains(&v));
@@ -212,11 +215,11 @@ mod tests {
 
     #[test]
     fn batches_have_right_shapes_and_balanced_labels() {
-        let d = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 2);
+        let d = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 2);
         let b = d.train_batch(0, 16);
         assert_eq!(b.x.shape, vec![16, 440]);
         assert_eq!(b.len(), 16);
-        let img = SyntheticDataset::for_model(ModelKind::ResNet18, 2);
+        let img = SyntheticDataset::for_model(&ModelSpec::resnet18(), 2);
         let b = img.train_batch(3, 8);
         assert_eq!(b.x.shape, vec![8, 3, 32, 32]);
         // Labels cycle through classes.
@@ -225,7 +228,7 @@ mod tests {
 
     #[test]
     fn test_batches_cover_split_once() {
-        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 3).with_sizes(64, 50);
+        let d = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 3).with_sizes(64, 50);
         let batches = d.test_batches(16);
         let total: usize = batches.iter().map(Batch::len).sum();
         assert_eq!(total, 50);
@@ -234,7 +237,7 @@ mod tests {
 
     #[test]
     fn templates_are_class_distinct() {
-        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 4);
+        let d = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 4);
         let (a, _) = d.example(Split::Train, 0); // class 0
         let (b, _) = d.example(Split::Train, 1); // class 1
         let dist: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
@@ -244,7 +247,7 @@ mod tests {
     #[test]
     fn mean_is_near_one() {
         // The swamping-relevant property: non-zero-mean inputs.
-        let d = SyntheticDataset::for_model(ModelKind::CifarCnn, 5);
+        let d = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 5);
         let b = d.train_batch(0, 32);
         let mean = b.x.sum() / b.x.len() as f64;
         assert!((mean - 1.0).abs() < 0.25, "mean={mean}");

@@ -8,8 +8,7 @@
 //! - (c) FP16 weight updates with nearest rounding.
 
 use super::{run_training, ExpOpts};
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::error::Result;
 
 pub fn policies() -> Vec<PrecisionPolicy> {
@@ -24,7 +23,7 @@ pub fn policies() -> Vec<PrecisionPolicy> {
 pub fn run(opts: &ExpOpts) -> Result<()> {
     println!(
         "Fig 1: naive precision reduction on {} ({} steps, batch {})",
-        ModelKind::CifarCnn.id(),
+        ModelSpec::cifar_cnn().id(),
         opts.steps,
         opts.batch
     );
@@ -36,7 +35,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
     for policy in policies() {
         let name = policy.name.clone();
         let csv = opts.csv_path(&format!("fig1_{name}"));
-        let r = run_training(ModelKind::CifarCnn, policy, opts, Some(csv));
+        let r = run_training(&ModelSpec::cifar_cnn(), policy, opts, Some(csv));
         let gap = base_err.map(|b: f64| r.final_test_err - b);
         if base_err.is_none() {
             base_err = Some(r.final_test_err);

@@ -3,8 +3,7 @@
 //! with the full per-eval CSV series written for plotting.
 
 use super::{run_training, ExpOpts};
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::error::Result;
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
@@ -12,14 +11,14 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "Fig 4: convergence curves for all models, fp32 vs fp8_paper ({} steps)",
         opts.steps
     );
-    for kind in ModelKind::ALL {
+    for spec in ModelSpec::all_presets() {
         for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
-            let name = format!("fig4_{}_{}", kind.id(), policy.name);
+            let name = format!("fig4_{}_{}", spec.id(), policy.name);
             let csv = opts.csv_path(&name);
-            let r = run_training(kind, policy.clone(), opts, Some(csv.clone()));
+            let r = run_training(&spec, policy.clone(), opts, Some(csv.clone()));
             println!(
                 "{:<28} final train_loss {:.4} test_err {:>6.2}%  → {}",
-                format!("{}/{}", kind.id(), policy.name),
+                format!("{}/{}", spec.id(), policy.name),
                 r.final_train_loss,
                 r.final_test_err,
                 csv

@@ -5,9 +5,8 @@
 //! mechanism.
 
 use super::{run_training, ExpOpts};
-use crate::nn::models::ModelKind;
 use crate::nn::quant::GemmRole;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::error::Result;
 
 pub fn run_a(opts: &ExpOpts) -> Result<()> {
@@ -23,7 +22,7 @@ pub fn run_a(opts: &ExpOpts) -> Result<()> {
     ] {
         let name = policy.name.clone();
         let csv = opts.csv_path(&format!("fig5a_{name}"));
-        let r = run_training(ModelKind::ResNet50, policy, opts, Some(csv));
+        let r = run_training(&ModelSpec::resnet50(), policy, opts, Some(csv));
         println!(
             "{:<16} {:>12.4} {:>12.2}",
             name, r.final_train_loss, r.final_test_err
@@ -52,7 +51,7 @@ pub fn run_b(opts: &ExpOpts) -> Result<()> {
     for policy in policies {
         let name = policy.name.clone();
         let csv = opts.csv_path(&format!("fig5b_{name}"));
-        let r = run_training(ModelKind::ResNet18, policy, opts, Some(csv));
+        let r = run_training(&ModelSpec::resnet18(), policy, opts, Some(csv));
         println!(
             "{:<26} {:>12.4} {:>12.2}",
             name, r.final_train_loss, r.final_test_err

@@ -14,8 +14,7 @@ use crate::coordinator::{Engine, NativeEngine};
 use crate::data::SyntheticDataset;
 use crate::logging::CsvSink;
 use crate::nn::conv::Conv2d;
-use crate::nn::models::ModelKind;
-use crate::nn::{softmax_xent, Layer, PrecisionPolicy, QuantCtx, Residual};
+use crate::nn::{softmax_xent, Layer, ModelSpec, PrecisionPolicy, QuantCtx, Residual};
 use crate::numerics::gemm::{gemm, normalized_l2_distance};
 use crate::numerics::{FloatFormat, GemmPrecision, RoundMode};
 use crate::tensor::Tensor;
@@ -61,9 +60,9 @@ pub fn chunk_sweep(op: &Operands, chunks: &[usize]) -> Vec<(usize, f64)> {
 /// two different conv layers (one early, one late — the paper's "two
 /// different Conv layers").
 pub fn capture_operands(opts: &ExpOpts, warm_steps: usize) -> Result<Vec<Operands>> {
-    let kind = ModelKind::CifarResnet;
-    let ds = SyntheticDataset::for_model(kind, opts.seed);
-    let mut engine = NativeEngine::new(kind, PrecisionPolicy::fp32(), opts.seed);
+    let spec = ModelSpec::cifar_resnet();
+    let ds = SyntheticDataset::for_model(&spec, opts.seed);
+    let mut engine = NativeEngine::new(&spec, PrecisionPolicy::fp32(), opts.seed);
     for step in 0..warm_steps {
         let b = ds.train_batch(step % ds.steps_per_epoch(opts.batch), opts.batch);
         engine.train_step(&b, 0.05, step as u64);

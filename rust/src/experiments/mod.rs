@@ -22,8 +22,7 @@ pub mod table4;
 use crate::cli::Args;
 use crate::coordinator::NativeEngine;
 use crate::data::SyntheticDataset;
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::train::{train, LrSchedule, TrainConfig, TrainResult};
 use crate::error::Result;
 
@@ -69,10 +68,10 @@ impl Default for ExpOpts {
     }
 }
 
-/// Train `kind` under `policy` on its synthetic dataset; the workhorse the
+/// Train `spec` under `policy` on its synthetic dataset; the workhorse the
 /// table/figure harnesses share.
 pub fn run_training(
-    kind: ModelKind,
+    spec: &ModelSpec,
     policy: PrecisionPolicy,
     opts: &ExpOpts,
     csv: Option<String>,
@@ -80,12 +79,12 @@ pub fn run_training(
     // Committed-run budget: 1024 train / 128 test examples keeps the
     // emulated-GEMM evaluation cost bounded (the phenomena being measured
     // are numerical, not dataset-size-driven; see DESIGN.md §7).
-    let ds = SyntheticDataset::for_model(kind, opts.seed).with_sizes(1024, 128);
-    let mut engine = NativeEngine::new(kind, policy, opts.seed);
+    let ds = SyntheticDataset::for_model(spec, opts.seed).with_sizes(1024, 128);
+    let mut engine = NativeEngine::new(spec, policy, opts.seed);
     let cfg = TrainConfig {
         batch_size: opts.batch,
         steps: opts.steps,
-        schedule: LrSchedule::step_decay(base_lr(kind), opts.steps),
+        schedule: LrSchedule::step_decay(base_lr(spec), opts.steps),
         eval_every: (opts.steps / 5).max(1),
         csv,
         verbose: opts.verbose,
@@ -94,12 +93,12 @@ pub fn run_training(
     train(&mut engine, &ds, &cfg)
 }
 
-/// Per-model base learning rate (BN-less nets need a gentler LR).
-pub fn base_lr(kind: ModelKind) -> f32 {
-    match kind {
-        ModelKind::CifarCnn | ModelKind::AlexNet => 0.02,
-        ModelKind::Bn50Dnn => 0.05,
-        _ => 0.05, // BN-stabilized ResNets
+/// Per-model base learning rate (the BN-less presets need a gentler LR;
+/// spec-defined architectures get the conservative default).
+pub fn base_lr(spec: &ModelSpec) -> f32 {
+    match spec.preset_id() {
+        Some("cifar_cnn") | Some("alexnet") => 0.02,
+        _ => 0.05, // BN-stabilized ResNets, BN50, custom specs
     }
 }
 

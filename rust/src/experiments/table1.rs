@@ -7,27 +7,26 @@
 
 use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::error::Result;
 
 pub struct Row {
-    pub model: &'static str,
+    pub model: String,
     pub fp32_err: f64,
     pub fp32_mb: f64,
     pub fp8_err: f64,
     pub fp8_mb: f64,
 }
 
-pub fn compute(opts: &ExpOpts, models: &[ModelKind]) -> Vec<Row> {
+pub fn compute(opts: &ExpOpts, models: &[ModelSpec]) -> Vec<Row> {
     models
         .iter()
-        .map(|&kind| {
-            let params = kind.build(opts.seed).num_params() as f64;
-            let b = run_training(kind, PrecisionPolicy::fp32(), opts, None);
-            let f = run_training(kind, PrecisionPolicy::fp8_paper(), opts, None);
+        .map(|spec| {
+            let params = spec.build(opts.seed).num_params() as f64;
+            let b = run_training(spec, PrecisionPolicy::fp32(), opts, None);
+            let f = run_training(spec, PrecisionPolicy::fp8_paper(), opts, None);
             Row {
-                model: kind.id(),
+                model: spec.id(),
                 fp32_err: b.final_test_err,
                 fp32_mb: params * 4.0 / 1e6,
                 fp8_err: f.final_test_err,
@@ -42,7 +41,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "Table 1: test error (model size) across networks — {} steps, batch {}, seed {}",
         opts.steps, opts.batch, opts.seed
     );
-    let rows = compute(opts, &ModelKind::ALL);
+    let rows = compute(opts, &ModelSpec::all_presets());
     let sink = CsvSink::create(
         opts.csv_path("table1"),
         &["model_idx", "fp32_err", "fp32_mb", "fp8_err", "fp8_mb"],

@@ -8,8 +8,7 @@
 use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;
 use crate::nn::baselines::BaselineScheme;
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::error::Result;
 
 pub struct Scheme {
@@ -53,7 +52,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "Table 2: reduced-precision schemes, AlexNet top-1 accuracy ({} steps)",
         opts.steps
     );
-    let base = run_training(ModelKind::AlexNet, PrecisionPolicy::fp32(), opts, None);
+    let base = run_training(&ModelSpec::alexnet(), PrecisionPolicy::fp32(), opts, None);
     let fp32_acc = 100.0 - base.final_test_err;
     let sink = CsvSink::create(
         opts.csv_path("table2"),
@@ -64,7 +63,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "scheme", "bits W/x/dW/dx/acc", "FP32", "reduced"
     );
     for (i, s) in schemes().into_iter().enumerate() {
-        let r = run_training(ModelKind::AlexNet, s.policy, opts, None);
+        let r = run_training(&ModelSpec::alexnet(), s.policy, opts, None);
         let acc = 100.0 - r.final_test_err;
         sink.row(&[i as f64, fp32_acc, acc]);
         println!(

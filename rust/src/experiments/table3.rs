@@ -7,8 +7,7 @@
 
 use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::numerics::FloatFormat;
 use crate::error::Result;
 
@@ -34,7 +33,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "Table 3: last-layer precision on AlexNet ({} steps)",
         opts.steps
     );
-    let base = run_training(ModelKind::AlexNet, PrecisionPolicy::fp32(), opts, None);
+    let base = run_training(&ModelSpec::alexnet(), PrecisionPolicy::fp32(), opts, None);
     let sink = CsvSink::create(
         opts.csv_path("table3"),
         &["variant_idx", "test_err", "degradation"],
@@ -48,7 +47,7 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "(FP32 baseline)", base.final_test_err, "—"
     );
     for (i, (label, policy)) in variants().into_iter().enumerate() {
-        let r = run_training(ModelKind::AlexNet, policy, opts, None);
+        let r = run_training(&ModelSpec::alexnet(), policy, opts, None);
         let deg = r.final_test_err - base.final_test_err;
         sink.row(&[i as f64, r.final_test_err, deg]);
         println!("{:<32} {:>12.2} {:>+14.2}", label, r.final_test_err, deg);

@@ -5,8 +5,7 @@
 
 use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;
-use crate::nn::models::ModelKind;
-use crate::nn::PrecisionPolicy;
+use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::error::Result;
 
 pub fn run(opts: &ExpOpts) -> Result<()> {
@@ -22,19 +21,19 @@ pub fn run(opts: &ExpOpts) -> Result<()> {
         "{:<12} {:>14} {:>18} {:>20}",
         "model", "FP32 baseline", "Nearest Rounding", "Stochastic Rounding"
     );
-    for (i, kind) in [ModelKind::AlexNet, ModelKind::ResNet18].into_iter().enumerate() {
+    for (i, spec) in [ModelSpec::alexnet(), ModelSpec::resnet18()].into_iter().enumerate() {
         let accs: Vec<f64> = [
             PrecisionPolicy::fp32(),
             PrecisionPolicy::fp16_upd_nearest(),
             PrecisionPolicy::fp16_upd_stochastic(),
         ]
         .into_iter()
-        .map(|p| 100.0 - run_training(kind, p, opts, None).final_test_err)
+        .map(|p| 100.0 - run_training(&spec, p, opts, None).final_test_err)
         .collect();
         sink.row(&[i as f64, accs[0], accs[1], accs[2]]);
         println!(
             "{:<12} {:>13.2}% {:>17.2}% {:>19.2}%",
-            kind.id(),
+            spec.id(),
             accs[0],
             accs[1],
             accs[2]

@@ -12,7 +12,10 @@
 //! - [`tensor`], [`nn`], [`optim`], [`data`], [`train`] — a native training
 //!   engine with hand-written backward passes whose every GEMM is routed
 //!   through the reduced-precision emulation, used to regenerate every table
-//!   and figure of the paper's evaluation.
+//!   and figure of the paper's evaluation. Architectures are data:
+//!   [`nn::ModelSpec`] parses a compact DSL (`docs/model-spec.md`) and
+//!   compiles it onto the layer stack; the paper's six networks are named
+//!   preset specs with a bit-exactness bridge to the historical builders.
 //! - [`runtime`], [`coordinator`] — the deployable path: AOT-compiled
 //!   JAX/Pallas train-steps (HLO text artifacts) loaded via PJRT and driven
 //!   from Rust with device-resident parameters; Python never runs at

@@ -5,12 +5,13 @@
 //! fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
 //!                        [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
 //!                        [--save-every N] [--save PATH]
+//!     <model> = preset name or model-spec string (docs/model-spec.md)
 //! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
 //! fp8train eval --checkpoint PATH [--batch N]
 //! fp8train checkpoint inspect <path.fp8ck>
 //! fp8train formats                 # print the FP8/FP16 format tables
 //! fp8train artifacts [--dir DIR]   # verify AOT artifacts load & run
-//! fp8train bench [--json PATH] [--fast]
+//! fp8train bench [--json PATH] [--fast] [--model M]
 //! ```
 
 use fp8train::cli::Args;
@@ -18,8 +19,7 @@ use fp8train::coordinator::{evaluate, Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
 use fp8train::error::{Context, Result};
 use fp8train::experiments::{self, ExpOpts};
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::PrecisionPolicy;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::numerics::{FloatFormat, RoundMode};
 use fp8train::optim::{Adam, Optimizer, Sgd};
 use fp8train::runtime::{artifacts_dir, PjrtEngine, Runtime};
@@ -36,22 +36,28 @@ USAGE:
   fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
                          [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
                          [--save-every N] [--save PATH] [--verbose]
-      models:   cifar_cnn cifar_resnet bn50_dnn alexnet resnet18 resnet50
+      <model> (or --model M) is a preset name or a model-spec string
+      (docs/model-spec.md), e.g.  \"mlp(440,bn:256x3,30)\"  or
+      \"conv3x3(16)-res(2x32)-gap-fc(10)\"
+      presets:  cifar_cnn cifar_resnet bn50_dnn alexnet resnet18 resnet50
       policies: fp32 fp8_paper fp8_nochunk fp16_acc_nochunk fp16_upd_nearest
                 fp16_upd_stochastic fp8_reps_only dorefa wage dfp16 mpt_fp16 ...
+      --save may contain {step} for periodic retention, e.g. ck_{step}.fp8ck
   fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
-      continue a checkpointed run bit-exactly (model/policy/seed/batch/lr are
-      read back from the checkpoint's meta entries; --steps may extend it)
+      continue a checkpointed run bit-exactly (model spec/policy/seed/batch/lr
+      are read back from the checkpoint's meta entries; --steps may extend it)
   fp8train eval --checkpoint PATH [--batch N]
-      load a .fp8ck checkpoint into the native engine and evaluate it
+      load a .fp8ck checkpoint into the native engine and evaluate it (the
+      model is reconstructed from the spec embedded in the checkpoint)
   fp8train checkpoint inspect <path.fp8ck>
       validate a checkpoint (magic, version, every CRC) and list its chunks
   fp8train formats
   fp8train artifacts [--dir DIR]
-  fp8train bench [--json PATH] [--fast]
+  fp8train bench [--json PATH] [--fast] [--model M]
       GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
-      shapes plus checkpoint encode/decode throughput; --json writes a
-      machine-readable report (default BENCH_GEMM.json)
+      shapes, native train-step + conv-scratch-arena reuse, and checkpoint
+      encode/decode throughput; --json writes a machine-readable report
+      (schema 3, default BENCH_GEMM.json)
 ";
 
 fn main() {
@@ -98,9 +104,13 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 /// Everything `train` needs to (re)construct a run; on `--resume` it is
 /// read back from the checkpoint's `meta.*` entries so the continuation is
-/// bit-exact no matter how the resuming process was invoked.
+/// bit-exact no matter how the resuming process was invoked. `meta.model`
+/// stores the spec's identity string (preset name or canonical DSL), so
+/// arbitrary spec-defined architectures reconstruct from the checkpoint
+/// alone; `meta.model_spec` additionally records the full canonical DSL
+/// for `checkpoint inspect` readers even when a preset name is used.
 struct RunSpec {
-    kind: ModelKind,
+    model: ModelSpec,
     policy_name: String,
     opt_name: String,
     seed: u64,
@@ -113,7 +123,8 @@ struct RunSpec {
 impl RunSpec {
     fn to_meta(&self) -> StateMap {
         let mut m = StateMap::new();
-        m.put_str("meta.model", self.kind.id());
+        m.put_str("meta.model", &self.model.id());
+        m.put_str("meta.model_spec", &self.model.canonical());
         m.put_str("meta.policy", &self.policy_name);
         m.put_str("meta.opt", &self.opt_name);
         m.put_u64("meta.seed", self.seed);
@@ -126,11 +137,11 @@ impl RunSpec {
 
     fn from_meta(map: &StateMap, args: &Args) -> Result<Self> {
         let model = map.get_str("meta.model")?.to_string();
-        let kind = ModelKind::parse(&model)
+        let model = ModelSpec::resolve(&model)
             .with_context(|| format!("checkpoint names unknown model {model:?}"))?;
         let meta_steps = map.get_u64("meta.steps")? as usize;
         Ok(Self {
-            kind,
+            model,
             policy_name: map.get_str("meta.policy")?.to_string(),
             opt_name: map.get_str("meta.opt")?.to_string(),
             seed: map.get_u64("meta.seed")?,
@@ -144,21 +155,25 @@ impl RunSpec {
     }
 
     fn from_args(args: &Args) -> Result<Self> {
-        let model = args
-            .positional
-            .first()
-            .context("train needs a model (or --resume PATH)")?;
-        let kind = ModelKind::parse(model).with_context(|| format!("unknown model {model:?}"))?;
+        let model = match args.opt("model") {
+            Some(m) => m.to_string(),
+            None => args
+                .positional
+                .first()
+                .context("train needs a model — a preset name or spec string (or --resume PATH)")?
+                .clone(),
+        };
+        let model = ModelSpec::resolve(&model)?;
         let steps = args.opt_usize("steps", 300)?;
         Ok(Self {
-            kind,
             policy_name: args.opt_or("policy", "fp8_paper"),
             opt_name: args.opt_or("opt", "sgd"),
             seed: args.opt_u64("seed", 42)?,
             steps,
             batch: args.opt_usize("batch", 32)?,
-            lr: args.opt_f32("lr", experiments::base_lr(kind))?,
+            lr: args.opt_f32("lr", experiments::base_lr(&model))?,
             eval_every: (steps / 10).max(1),
+            model,
         })
     }
 }
@@ -169,17 +184,24 @@ fn build_native(spec: &RunSpec, policy: PrecisionPolicy) -> Result<NativeEngine>
         "adam" => Box::new(Adam::new(1e-4, spec.seed ^ 0x0117)),
         other => bail!("unknown optimizer {other:?} (sgd|adam)"),
     };
-    Ok(NativeEngine::with_optimizer(spec.kind, policy, opt, spec.seed))
+    Ok(NativeEngine::with_optimizer(&spec.model, policy, opt, spec.seed))
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
-        "policy", "opt", "engine", "steps", "batch", "seed", "lr", "csv", "verbose",
+        "model", "policy", "opt", "engine", "steps", "batch", "seed", "lr", "csv", "verbose",
         "save-every", "save", "resume",
     ])?;
     let resume = args.opt("resume").map(str::to_string);
     let spec = match &resume {
         Some(path) => {
+            // The checkpoint's meta pins the architecture; a conflicting
+            // explicit model must be rejected, not silently dropped.
+            ensure!(
+                args.opt("model").is_none() && args.positional.is_empty(),
+                "--resume reads the model from the checkpoint's meta entries; \
+                 drop the explicit model argument"
+            );
             let map = StateMap::load_file(path)
                 .with_context(|| format!("load resume checkpoint {path}"))?;
             let spec = RunSpec::from_meta(&map, args)?;
@@ -200,10 +222,10 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let save_every = args.opt_usize("save-every", 0)?;
     let save_path = args.opt("save").map(str::to_string).or_else(|| {
-        (save_every > 0).then(|| format!("{}.fp8ck", spec.kind.id()))
+        (save_every > 0).then(|| format!("{}.fp8ck", spec.model.file_stem()))
     });
 
-    let ds = SyntheticDataset::for_model(spec.kind, spec.seed);
+    let ds = SyntheticDataset::for_model(&spec.model, spec.seed);
     let mut cfg = TrainConfig::quick(spec.steps);
     cfg.batch_size = spec.batch;
     cfg.schedule = LrSchedule::step_decay(spec.lr, spec.steps);
@@ -218,8 +240,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut engine: Box<dyn Engine> = match engine_kind.as_str() {
         "native" => Box::new(build_native(&spec, policy)?),
         "pjrt" => {
+            let preset = spec.model.preset_id().with_context(|| {
+                format!(
+                    "engine pjrt needs a preset model (AOT artifacts exist per preset), \
+                     got spec {:?}",
+                    spec.model.id()
+                )
+            })?;
             let rt = Runtime::cpu()?;
-            let tag = format!("{}_{}", spec.kind.id(), short_policy(&spec.policy_name)?);
+            let tag = format!("{preset}_{}", short_policy(&spec.policy_name)?);
             let e = PjrtEngine::load(&rt, &tag, spec.seed)
                 .with_context(|| format!("load artifact set {tag:?} (run `make artifacts`)"))?;
             ensure!(
@@ -235,7 +264,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     println!(
         "training {} with {} ({} steps, batch {}, lr {}{})",
-        spec.kind.id(),
+        spec.model.id(),
         engine.name(),
         spec.steps,
         spec.batch,
@@ -265,7 +294,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let path = args.opt("checkpoint").context("eval needs --checkpoint PATH")?;
     let map = StateMap::load_file(path).with_context(|| format!("load checkpoint {path}"))?;
     let model = map.get_str("meta.model")?.to_string();
-    let kind = ModelKind::parse(&model)
+    let spec = ModelSpec::resolve(&model)
         .with_context(|| format!("checkpoint names unknown model {model:?}"))?;
     let policy_name = map.get_str("meta.policy")?.to_string();
     let policy = PrecisionPolicy::parse(&policy_name)
@@ -274,9 +303,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let batch = args.opt_usize("batch", map.get_u64("meta.batch").unwrap_or(32) as usize)?;
     let trained_steps = map.get_u64("train.next_step").unwrap_or(0);
 
-    let mut engine = NativeEngine::new(kind, policy, seed);
+    let mut engine = NativeEngine::new(&spec, policy, seed);
     engine.load_model_state(&map)?;
-    let ds = SyntheticDataset::for_model(kind, seed);
+    let ds = SyntheticDataset::for_model(&spec, seed);
     let (loss, err) = evaluate(&mut engine, &ds.test_batches(batch));
     println!(
         "{} @ step {trained_steps}: test_loss {loss:.4}, test_err {err:.2}% ({} params)",
@@ -370,8 +399,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use fp8train::bench_util;
     use fp8train::numerics::gemm::{gemm, num_threads};
     use fp8train::numerics::GemmPrecision;
+    use fp8train::tensor::scratch;
 
-    args.check_known(&["json", "fast"])?;
+    args.check_known(&["json", "fast", "model"])?;
     if args.flag("fast") {
         std::env::set_var("FP8TRAIN_BENCH_FAST", "1");
     }
@@ -411,10 +441,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ));
     }
 
+    // Native train-step + conv scratch-arena reuse: a few steps of the
+    // bench model (default cifar_cnn, override with --model) under the
+    // paper policy, reporting the per-thread arena's hit rate — the
+    // im2col/transpose-temporary recycling lever of the conv path.
+    let spec = ModelSpec::resolve(&args.opt_or("model", "cifar_cnn"))?;
+    let mut engine = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 7);
+    let ds = SyntheticDataset::for_model(&spec, 7).with_sizes(64, 32);
+    let bench_batch = ds.train_batch(0, 8);
+    println!("\n== train_step + scratch arena: {} (batch 8) ==", engine.name());
+    engine.train_step(&bench_batch, 0.02, 0); // warm the arena once
+    scratch::reset_stats();
+    let mut step = 0u64;
+    let r_step = bench_util::run("bench/train_step", None, || {
+        step += 1;
+        engine.train_step(&bench_batch, 0.02, step)
+    });
+    let sstats = scratch::stats();
+    println!(
+        "scratch arena: {} hits / {} misses ({:.1}% reuse, {:.2} MB re-leased)",
+        sstats.hits,
+        sstats.misses,
+        100.0 * sstats.hit_rate(),
+        sstats.bytes_reused as f64 / 1e6
+    );
+    let scratch_doc = format!(
+        "{{\"hits\":{},\"misses\":{},\"hit_rate\":{:.4},\"bytes_reused\":{},\"train_step\":{}}}",
+        sstats.hits,
+        sstats.misses,
+        sstats.hit_rate(),
+        sstats.bytes_reused,
+        r_step.to_json()
+    );
+
     // Checkpoint state-IO throughput: encode (engine → .fp8ck bytes) and
-    // decode+restore (bytes → engine), on a trained-shape CIFAR-CNN under
-    // the paper policy — the same trajectory tracking GEMM GF/s gets.
-    let mut engine = NativeEngine::new(ModelKind::CifarCnn, PrecisionPolicy::fp8_paper(), 7);
+    // decode+restore (bytes → engine), on the trained-shape bench model
+    // under the paper policy — the same trajectory tracking GEMM GF/s gets.
     let mut map = StateMap::new();
     engine.save_state(&mut map);
     let bytes = map.to_bytes();
@@ -440,10 +502,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     let doc = format!(
-        "{{\"schema\":2,\"threads\":{},\"fast_mode\":{},\"shapes\":[{}],\"checkpoint\":{}}}\n",
+        "{{\"schema\":3,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
+         \"scratch\":{},\"checkpoint\":{}}}\n",
         num_threads(),
         std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
+        spec.id(),
         shape_docs.join(","),
+        scratch_doc,
         checkpoint_doc
     );
     if let Some(path) = json_path {

@@ -85,10 +85,11 @@ fn rows_to_nchw(rows: &Tensor, n: usize, oc: usize, oh: usize, ow: usize) -> Ten
     out
 }
 
-/// NCHW → `[N·oh·ow, oc]` rows (adjoint of [`rows_to_nchw`]).
+/// NCHW → `[N·oh·ow, oc]` rows (adjoint of [`rows_to_nchw`]). The result is
+/// a step-local temporary, so it leases from the scratch arena.
 fn nchw_to_rows(x: &Tensor) -> Tensor {
     let (n, oc, oh, ow) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let mut out = Tensor::zeros(&[n * oh * ow, oc]);
+    let mut out = Tensor::zeros_pooled(&[n * oh * ow, oc]);
     for img in 0..n {
         for s in 0..oh * ow {
             let row = (img * oh * ow + s) * oc;
@@ -130,10 +131,17 @@ impl Layer for Conv2d {
         }
         let (oh, ow) = (self.geom.out_h(), self.geom.out_w());
         let y = rows_to_nchw(&rows, n, self.out_c, oh, ow);
+        rows.recycle();
         if ctx.train {
             self.cols_q = Some(cols_q);
             self.w_q = Some(w_q);
             self.batch = n;
+        } else {
+            // Eval drops the caches immediately — return the big patch
+            // matrix (and the weight copy) to the arena so eval loops
+            // re-lease instead of re-allocating every batch.
+            cols_q.recycle();
+            w_q.recycle();
         }
         y
     }
@@ -162,14 +170,18 @@ impl Layer for Conv2d {
             self.captured = Some((err.clone(), cols_q.clone()));
         }
 
-        // Gradient GEMM: dW = errᵀ · cols, K = N·oh·ow.
+        // Gradient GEMM: dW = errᵀ · cols, K = N·oh·ow. The transposed
+        // error operand is a step-local temporary → scratch arena.
         let prec_g = p.gemm_for(GemmRole::Gradient, self.pos);
-        let dw = err.t().matmul(
+        let err_t = err.t_pooled();
+        let dw = err_t.matmul(
             &cols_q,
             &prec_g,
             ctx.gemm_seed(self.layer_id, GemmRole::Gradient),
         );
+        err_t.recycle();
         self.w.grad.add_assign(&dw);
+        dw.recycle();
 
         // Backward GEMM: dCols = err · Wq, then col2im scatter.
         let prec_b = p.gemm_for(GemmRole::Backward, self.pos);
@@ -178,7 +190,13 @@ impl Layer for Conv2d {
             &prec_b,
             ctx.gemm_seed(self.layer_id, GemmRole::Backward),
         );
-        col2im(&dcols, &self.geom, n)
+        let dx = col2im(&dcols, &self.geom, n);
+        // Everything whose lifetime ended this step goes back to the arena.
+        dcols.recycle();
+        err.recycle();
+        cols_q.recycle();
+        w_q.recycle();
+        dx
     }
 
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {

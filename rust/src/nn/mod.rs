@@ -7,8 +7,12 @@
 //! machinery every experiment in `experiments/` runs on.
 //!
 //! Topology is explicit (no autograd): [`Sequential`] chains layers,
-//! [`block::Residual`] implements ResNet skip connections, and the model
-//! zoo under [`models`] assembles the paper's six benchmark networks.
+//! [`block::Residual`] implements ResNet skip connections, and
+//! architectures are described as data by [`spec::ModelSpec`] — a
+//! declarative, parseable layer list compiled onto these layers with
+//! spec-driven shape inference. The paper's six benchmark networks are
+//! named preset specs (hand-built reference builders live under
+//! [`models`] for the bit-exactness bridge tests).
 
 pub mod act;
 pub mod baselines;
@@ -20,12 +24,14 @@ pub mod models;
 pub mod norm;
 pub mod pool;
 pub mod quant;
+pub mod spec;
 
 pub use block::Residual;
 pub use conv::Conv2d;
 pub use linear::Linear;
 pub use loss::softmax_xent;
 pub use quant::{GemmRole, LayerPos, PrecisionPolicy, QuantCtx};
+pub use spec::{ModelSpec, SpecBuilder, SpecError};
 
 use crate::state::{self, StateDict, StateError, StateMap};
 use crate::tensor::Tensor;

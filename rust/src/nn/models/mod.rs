@@ -5,6 +5,14 @@
 //! time. The dot-product lengths (`in_c·k·k` after lowering, batch·H·W for
 //! Gradient GEMM) stay in the hundreds-to-thousands regime that Figs. 3/6
 //! study, which is what the swamping phenomena depend on.
+//!
+//! Construction now goes through [`crate::nn::spec::ModelSpec`] — the six
+//! networks are **named preset specs** (`ModelSpec::preset("cifar_cnn")`,
+//! …). The hand-built `build` functions in the submodules remain as the
+//! normative references for the preset bridge: `rust/tests/spec_bridge.rs`
+//! asserts that spec-built presets are bit-identical to them (same RNG
+//! draw order, same layer names, hence same SR streams and `StateDict`
+//! keys — old checkpoints keep loading).
 
 pub mod alexnet;
 pub mod bn50_dnn;
@@ -44,74 +52,24 @@ impl InputKind {
     }
 }
 
-/// The model zoo identifier.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ModelKind {
-    CifarCnn,
-    CifarResnet,
-    Bn50Dnn,
-    AlexNet,
-    ResNet18,
-    ResNet50,
-}
+/// The hand-built reference builders, keyed by preset id — the comparison
+/// side of the spec bridge (`rust/tests/spec_bridge.rs`).
+pub const REFERENCE_BUILDERS: [(&str, fn(&mut Xoshiro256) -> Sequential); 6] = [
+    ("cifar_cnn", cifar_cnn::build),
+    ("cifar_resnet", cifar_resnet::build),
+    ("bn50_dnn", bn50_dnn::build),
+    ("alexnet", alexnet::build),
+    ("resnet18", resnet18::build),
+    ("resnet50", resnet50::build),
+];
 
-impl ModelKind {
-    pub const ALL: [ModelKind; 6] = [
-        ModelKind::CifarCnn,
-        ModelKind::CifarResnet,
-        ModelKind::Bn50Dnn,
-        ModelKind::AlexNet,
-        ModelKind::ResNet18,
-        ModelKind::ResNet50,
-    ];
-
-    pub fn id(self) -> &'static str {
-        match self {
-            ModelKind::CifarCnn => "cifar_cnn",
-            ModelKind::CifarResnet => "cifar_resnet",
-            ModelKind::Bn50Dnn => "bn50_dnn",
-            ModelKind::AlexNet => "alexnet",
-            ModelKind::ResNet18 => "resnet18",
-            ModelKind::ResNet50 => "resnet50",
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Self> {
-        Self::ALL.into_iter().find(|m| m.id() == s)
-    }
-
-    pub fn input(self) -> InputKind {
-        match self {
-            ModelKind::Bn50Dnn => InputKind::Vector { dim: 440 },
-            _ => InputKind::Image { c: 3, h: 32, w: 32 },
-        }
-    }
-
-    /// Class count. CIFAR-scale sets keep their 10 classes; the
-    /// ImageNet-like and BN50-like synthetic sets are scaled to 10 and 30
-    /// classes respectively (from 1000 / 5999) so the committed few-dozen-
-    /// step runs see enough examples per class for policy contrasts to be
-    /// meaningful (DESIGN.md §7 — class count is orthogonal to the
-    /// numerics under study).
-    pub fn classes(self) -> usize {
-        match self {
-            ModelKind::Bn50Dnn => 30,
-            _ => 10,
-        }
-    }
-
-    /// Build the network with deterministic initialization.
-    pub fn build(self, seed: u64) -> Sequential {
-        let mut rng = Xoshiro256::seed_from_u64(seed);
-        match self {
-            ModelKind::CifarCnn => cifar_cnn::build(&mut rng),
-            ModelKind::CifarResnet => cifar_resnet::build(&mut rng),
-            ModelKind::Bn50Dnn => bn50_dnn::build(&mut rng),
-            ModelKind::AlexNet => alexnet::build(&mut rng),
-            ModelKind::ResNet18 => resnet18::build(&mut rng),
-            ModelKind::ResNet50 => resnet50::build(&mut rng),
-        }
-    }
+/// Build the hand-built reference model for `preset_id` with the same
+/// seeding convention as `ModelSpec::build`.
+pub fn reference_build(preset_id: &str, seed: u64) -> Option<Sequential> {
+    REFERENCE_BUILDERS
+        .iter()
+        .find(|(id, _)| *id == preset_id)
+        .map(|(_, build)| build(&mut Xoshiro256::seed_from_u64(seed)))
 }
 
 /// conv(k×k, stride, pad) → BN → ReLU, the standard ResNet unit.
@@ -237,38 +195,20 @@ pub(crate) fn bottleneck_block(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::nn::{ModelSpec, PrecisionPolicy, QuantCtx};
     use crate::tensor::Tensor;
-
-    #[test]
-    fn all_models_build_and_forward() {
-        let policy = PrecisionPolicy::fp32();
-        let ctx = QuantCtx::new(&policy, 0, false);
-        for kind in ModelKind::ALL {
-            let mut m = kind.build(7);
-            let x = Tensor::zeros(&kind.input().shape(2));
-            let y = m.forward(x, &ctx);
-            assert_eq!(
-                y.shape,
-                vec![2, kind.classes()],
-                "{} output shape",
-                kind.id()
-            );
-            assert!(m.num_params() > 1000, "{} too small", kind.id());
-        }
-    }
 
     #[test]
     fn all_models_backward_under_paper_policy() {
         let policy = PrecisionPolicy::fp8_paper();
         let ctx = QuantCtx::new(&policy, 1, true);
-        for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
-            let mut m = kind.build(7);
-            let x = Tensor::zeros(&kind.input().shape(2));
+        for spec in [ModelSpec::cifar_cnn(), ModelSpec::bn50_dnn()] {
+            let mut m = spec.build(7);
+            let x = Tensor::zeros(&spec.input().shape(2));
             let y = m.forward(x, &ctx);
             let dy = Tensor::full(&y.shape, 0.01);
             let dx = m.backward(dy, &ctx);
-            assert_eq!(dx.shape, kind.input().shape(2), "{}", kind.id());
+            assert_eq!(dx.shape, spec.input().shape(2), "{}", spec.id());
         }
     }
 
@@ -280,7 +220,8 @@ mod tests {
         // stats behind two levels of containers.
         let policy = PrecisionPolicy::fp32();
         let ctx = QuantCtx::new(&policy, 0, true);
-        let mut m = ModelKind::CifarResnet.build(3);
+        let spec = ModelSpec::cifar_resnet();
+        let mut m = spec.build(3);
         let x = Tensor::from_vec(
             &[2, 3, 32, 32],
             (0..2 * 3 * 32 * 32).map(|i| (i % 7) as f32 * 0.1).collect(),
@@ -294,22 +235,14 @@ mod tests {
             n
         };
         assert!(map.len() > n_params, "extra state (BN stats) must be saved");
-        let mut fresh = ModelKind::CifarResnet.build(99);
+        let mut fresh = spec.build(99);
         fresh.load_state("model", &map).unwrap();
         let mut map2 = StateMap::new();
         fresh.save_state("model", &mut map2);
         assert_eq!(map, map2, "restored model must serialize bit-identically");
         // Strictness: a truncated map is rejected.
         let empty = StateMap::new();
-        assert!(ModelKind::CifarResnet.build(0).load_state("model", &empty).is_err());
-    }
-
-    #[test]
-    fn kind_ids_roundtrip() {
-        for kind in ModelKind::ALL {
-            assert_eq!(ModelKind::parse(kind.id()), Some(kind));
-        }
-        assert_eq!(ModelKind::parse("bogus"), None);
+        assert!(spec.build(0).load_state("model", &empty).is_err());
     }
 
     #[test]
@@ -317,10 +250,19 @@ mod tests {
         // Table 1's model sizes are ordered CIFAR-CNN < CIFAR-ResNet <
         // ResNet18 < ResNet50 < AlexNet (FC-heavy); scaled versions must
         // preserve CNN < ResNet orderings at least.
-        let n = |k: ModelKind| k.build(0).num_params();
-        assert!(n(ModelKind::CifarCnn) < n(ModelKind::CifarResnet));
-        assert!(n(ModelKind::CifarResnet) < n(ModelKind::ResNet18));
-        assert!(n(ModelKind::ResNet18) < n(ModelKind::ResNet50));
+        let n = |id: &str| ModelSpec::preset(id).unwrap().build(0).num_params();
+        assert!(n("cifar_cnn") < n("cifar_resnet"));
+        assert!(n("cifar_resnet") < n("resnet18"));
+        assert!(n("resnet18") < n("resnet50"));
+    }
+
+    #[test]
+    fn reference_builders_cover_every_preset() {
+        for id in ModelSpec::PRESET_IDS {
+            let mut m = reference_build(id, 3).unwrap_or_else(|| panic!("{id}"));
+            assert!(m.num_params() > 1000, "{id}");
+        }
+        assert!(reference_build("nope", 0).is_none());
     }
 
     #[test]

@@ -1,0 +1,1508 @@
+//! `ModelSpec` — architecture as data.
+//!
+//! The model zoo used to be a closed enum (`ModelKind`) over six hand-wired
+//! structs; every new scenario cost a recompile. A [`ModelSpec`] instead
+//! *describes* an architecture — input shape, a list of layer items
+//! (convolutions, FC layers, BN, residual stages, pooling) with optional
+//! per-layer precision-position overrides — and compiles it onto the
+//! existing `nn/` layers with spec-driven shape inference. Specs parse from
+//! a compact text DSL (and print back canonically), so the CLI can train
+//! arbitrary architectures from a string and checkpoints can embed the
+//! architecture they were trained with.
+//!
+//! # DSL grammar (see `docs/model-spec.md` for the full reference)
+//!
+//! ```text
+//! spec      := "mlp(" dims ")" | item ("-" item)*
+//! item      := in | conv | maxpool | gap | flatten | relu | fc | res
+//! in        := "in(" C "x" H "x" W ")" | "in(" D ")"        (first item only)
+//! conv      := "conv" K "x" K "(" OC ["," arg]* ")" mods     args: sN pN bn bias nobias
+//! maxpool   := "maxpool" K ["s" S]
+//! fc        := "fc(" OUT ["," arg]* ")" mods                 args: bn bias nobias
+//! res       := "res(" N "x" W ["," arg]* ")" mods            args: bE sS
+//! mods      := ["#" name] ["@" ("first"|"middle"|"last")]
+//! dims      := D "," hidden ("," hidden)* "," D              hidden: ["bn:"] W ["x" R]
+//! ```
+//!
+//! Examples: `mlp(784,bn:256x3,10)`, `conv3x3(16)-res(2x32)-gap-fc(10)`.
+//!
+//! # Lowering rules
+//!
+//! - `conv` lowers to [`Conv2d`] (+ [`BatchNorm`] when `bn`) + [`Relu`];
+//!   bias defaults to `!bn`, padding to `k/2` (same-padding), stride to 1.
+//! - `fc` lowers to [`Linear`] (+ `BatchNorm` 1-D when `bn`); a `Flatten`
+//!   is inserted automatically when the incoming shape is an image.
+//! - `res(NxW)` lowers to `N` basic residual blocks of width `W` (`b E`
+//!   selects bottleneck blocks with expansion `E`). The first block of a
+//!   stage strides 2 unless it is the first `res` item of the spec
+//!   (overridable with `sS`) — the canonical ResNet stage pattern.
+//! - `mlp(d0, …, dn)` is sugar for `in(d0)` + hidden `fc(W[,bn])-relu`
+//!   pairs + final `fc(dn)`.
+//!
+//! # The stable walk: names and precision positions
+//!
+//! Layer names feed both checkpoint keys (`model.<name>.w`) and the
+//! stochastic-rounding seeds (`QuantCtx::gemm_seed` hashes the name), so
+//! they are assigned by a deterministic walk over the items:
+//!
+//! - conv items: `conv1`, `conv2`, … (1-based, conv items only);
+//! - fc items: `fc` when the spec has exactly one fc item, else `fc1…fcN`;
+//! - res stages: `s0`, `s1`, … with blocks `s{i}b{j}` (their inner layers
+//!   are named by the shared block builders: `.c1`, `.bn1`, `.proj`, …);
+//! - an explicit `#name` overrides the auto name (this is how the presets
+//!   pin historical names like `stem` and `fc6`).
+//!
+//! Precision positions generalize the paper's §4.1 first/last-layer rules:
+//! by default the first top-level GEMM item is [`LayerPos::First`], the
+//! last is [`LayerPos::Last`] (a single GEMM layer is `Last` — Softmax
+//! fidelity wins), everything else — including all res-internal convs — is
+//! `Middle`. `@first/@middle/@last` overrides any item, which turns the
+//! Table 2/3 first/last-layer ablations into one-line spec edits.
+//!
+//! # Presets
+//!
+//! The paper's six benchmark networks are named preset specs
+//! ([`ModelSpec::preset`]). Contract (enforced by `rust/tests/
+//! spec_bridge.rs`): spec-built presets are element-wise bit-identical to
+//! the historical hand-built models — same construction-RNG draw order,
+//! same layer names (hence same SR streams and `StateDict` keys) — so
+//! checkpoints written before this API existed keep loading.
+
+use super::act::Relu;
+use super::conv::Conv2d;
+use super::linear::Linear;
+use super::models::{basic_block, bottleneck_block, InputKind};
+use super::norm::BatchNorm;
+use super::pool::{GlobalAvgPool, MaxPool2d};
+use super::quant::LayerPos;
+use super::{Flatten, Layer, Sequential};
+use crate::numerics::Xoshiro256;
+use crate::tensor::Conv2dGeom;
+use std::fmt;
+
+/// A malformed or inconsistent model spec (parse error, shape-inference
+/// failure, name collision, …).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecError(pub String);
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "model spec: {}", self.0)
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, SpecError> {
+    Err(SpecError(msg.into()))
+}
+
+/// One declarative item of a [`ModelSpec`] (one DSL token).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ItemSpec {
+    /// k×k convolution (+ optional BN) + ReLU.
+    Conv {
+        k: usize,
+        out_c: usize,
+        stride: usize,
+        pad: usize,
+        bias: bool,
+        bn: bool,
+        name: Option<String>,
+        pos: Option<LayerPos>,
+    },
+    /// k×k max pooling.
+    MaxPool { k: usize, stride: usize },
+    /// Global average pooling (NCHW → [N, C]).
+    Gap,
+    /// Explicit NCHW → [N, C·H·W] reshape (also inserted automatically
+    /// before an `fc` that receives an image).
+    Flatten,
+    /// Standalone ReLU (fc items do not add one implicitly).
+    Relu,
+    /// Fully-connected layer (+ optional 1-D BN).
+    Fc {
+        out: usize,
+        bias: bool,
+        bn: bool,
+        name: Option<String>,
+        pos: Option<LayerPos>,
+    },
+    /// A residual stage: `blocks` basic (or bottleneck, when
+    /// `expand.is_some()`) blocks of `width` channels.
+    Res {
+        blocks: usize,
+        width: usize,
+        expand: Option<usize>,
+        stride: Option<usize>,
+        name: Option<String>,
+    },
+}
+
+/// A declarative, parseable model description. Construct via
+/// [`ModelSpec::resolve`] (preset name or DSL string), [`ModelSpec::parse`]
+/// (DSL only) or [`SpecBuilder`]; every constructor validates shapes, names
+/// and positions, so [`ModelSpec::build`] cannot fail.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Set when this spec was resolved from a named preset; pins the
+    /// engine/checkpoint identity to the historical short id.
+    preset: Option<&'static str>,
+    input: InputKind,
+    items: Vec<ItemSpec>,
+}
+
+/// Architecture equality: two specs are equal iff they describe the same
+/// network — the preset tag is identity metadata, not architecture.
+impl PartialEq for ModelSpec {
+    fn eq(&self, other: &Self) -> bool {
+        self.input == other.input && self.items == other.items
+    }
+}
+
+/// The validated lowering plan: one entry per concrete layer-group, with
+/// resolved names, positions and shapes. Produced by the stable walk.
+struct Plan {
+    steps: Vec<PlanStep>,
+    classes: usize,
+}
+
+enum PlanStep {
+    Conv {
+        name: String,
+        geom: Conv2dGeom,
+        out_c: usize,
+        bias: bool,
+        bn: bool,
+        pos: LayerPos,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+    },
+    Gap,
+    Flatten,
+    Relu,
+    Fc {
+        name: String,
+        in_dim: usize,
+        out: usize,
+        bias: bool,
+        bn: bool,
+        pos: LayerPos,
+        flatten_first: bool,
+    },
+    Block {
+        name: String,
+        in_c: usize,
+        hw: usize,
+        width: usize,
+        expand: Option<usize>,
+        stride: usize,
+    },
+}
+
+/// Shape state threaded through the inference walk.
+#[derive(Clone, Copy, Debug)]
+enum Shape {
+    Img { c: usize, h: usize, w: usize },
+    Flat { d: usize },
+}
+
+/// The six paper networks as named preset specs (Appendix A, scaled per
+/// DESIGN.md §7). The DSL strings pin the historical layer names where the
+/// stable walk would pick different ones (`#stem`, `#fc6`…).
+pub const PRESETS: [(&str, &str); 6] = [
+    (
+        "cifar_cnn",
+        "conv5x5(16)-maxpool2-conv5x5(32)-maxpool2-conv5x5(32)-maxpool2-fc(10)#fc",
+    ),
+    (
+        "cifar_resnet",
+        "conv3x3(16,bn)#stem-res(2x16)-res(2x32)-res(2x64)-gap-fc(10)#fc",
+    ),
+    ("bn50_dnn", "mlp(440,256x5,30)"),
+    (
+        "alexnet",
+        "conv3x3(24)-maxpool2-conv3x3(48)-maxpool2-conv3x3(64)-conv3x3(64)-conv3x3(48)-maxpool2-\
+         fc(256)#fc6-relu-fc(256)#fc7-relu-fc(10)#fc8",
+    ),
+    (
+        "resnet18",
+        "conv3x3(16,bn)#stem-res(2x16)-res(2x32)-res(2x64)-res(2x128)-gap-fc(10)#fc",
+    ),
+    (
+        "resnet50",
+        "conv3x3(16,bn)#stem-res(2x16,b4)-res(2x32,b4)-res(2x64,b4)-res(2x128,b4)-gap-fc(10)#fc",
+    ),
+];
+
+impl ModelSpec {
+    /// The preset ids, in the paper's Table 1 order.
+    pub const PRESET_IDS: [&'static str; 6] = [
+        "cifar_cnn",
+        "cifar_resnet",
+        "bn50_dnn",
+        "alexnet",
+        "resnet18",
+        "resnet50",
+    ];
+
+    /// Look up a named preset.
+    pub fn preset(id: &str) -> Option<ModelSpec> {
+        PRESETS.iter().find(|(p, _)| *p == id).map(|&(p, dsl)| {
+            let mut spec = Self::parse(dsl).expect("preset spec must parse");
+            spec.preset = Some(p);
+            spec
+        })
+    }
+
+    pub fn cifar_cnn() -> ModelSpec {
+        Self::preset("cifar_cnn").unwrap()
+    }
+
+    pub fn cifar_resnet() -> ModelSpec {
+        Self::preset("cifar_resnet").unwrap()
+    }
+
+    pub fn bn50_dnn() -> ModelSpec {
+        Self::preset("bn50_dnn").unwrap()
+    }
+
+    pub fn alexnet() -> ModelSpec {
+        Self::preset("alexnet").unwrap()
+    }
+
+    pub fn resnet18() -> ModelSpec {
+        Self::preset("resnet18").unwrap()
+    }
+
+    pub fn resnet50() -> ModelSpec {
+        Self::preset("resnet50").unwrap()
+    }
+
+    /// All six presets, in Table 1 order.
+    pub fn all_presets() -> Vec<ModelSpec> {
+        Self::PRESET_IDS
+            .iter()
+            .map(|id| Self::preset(id).unwrap())
+            .collect()
+    }
+
+    /// The CLI/checkpoint entry point: a preset name or a DSL string.
+    pub fn resolve(s: &str) -> Result<ModelSpec, SpecError> {
+        let s = s.trim();
+        if let Some(spec) = Self::preset(s) {
+            return Ok(spec);
+        }
+        Self::parse(s).map_err(|e| {
+            SpecError(format!(
+                "{} (not a preset either; presets: {})",
+                e.0,
+                Self::PRESET_IDS.join(", ")
+            ))
+        })
+    }
+
+    /// Parse a DSL string (`mlp(…)` sugar or the dash form).
+    pub fn parse(s: &str) -> Result<ModelSpec, SpecError> {
+        let s = s.trim();
+        if s.is_empty() {
+            return err("empty spec");
+        }
+        let (input, items) = if let Some(inner) = strip_call(s, "mlp") {
+            parse_mlp(inner)?
+        } else {
+            parse_dash(s)?
+        };
+        let spec = ModelSpec {
+            preset: None,
+            input,
+            items,
+        };
+        spec.plan()?; // validate shapes, names, positions
+        Ok(spec)
+    }
+
+    /// The preset id this spec was resolved from, if any.
+    pub fn preset_id(&self) -> Option<&'static str> {
+        self.preset
+    }
+
+    /// Stable identity string: the preset id when this is a preset
+    /// (keeping historical engine tags / checkpoint compatibility), the
+    /// canonical DSL otherwise.
+    pub fn id(&self) -> String {
+        match self.preset {
+            Some(p) => p.to_string(),
+            None => self.canonical(),
+        }
+    }
+
+    /// Canonical dash-form DSL (round-trips through [`ModelSpec::parse`]).
+    pub fn canonical(&self) -> String {
+        let mut out = match self.input {
+            InputKind::Image { c, h, w } => format!("in({c}x{h}x{w})"),
+            InputKind::Vector { dim } => format!("in({dim})"),
+        };
+        for item in &self.items {
+            out.push('-');
+            out.push_str(&print_item(item));
+        }
+        out
+    }
+
+    /// A filesystem-safe stem for default checkpoint paths.
+    pub fn file_stem(&self) -> String {
+        let id = self.id();
+        let mut stem: String = id
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        stem.truncate(48);
+        stem
+    }
+
+    /// What the model consumes (drives the synthetic data generators).
+    pub fn input(&self) -> InputKind {
+        self.input
+    }
+
+    /// Output width of the final layer = class count of the workload.
+    pub fn classes(&self) -> usize {
+        self.validated_plan().classes
+    }
+
+    pub fn items(&self) -> &[ItemSpec] {
+        &self.items
+    }
+
+    fn validated_plan(&self) -> Plan {
+        self.plan()
+            .expect("ModelSpec invariant: validated at construction")
+    }
+
+    /// Compile the spec into the layer stack with deterministic
+    /// initialization — the replacement for the per-model hand wiring.
+    pub fn build(&self, seed: u64) -> Sequential {
+        let plan = self.validated_plan();
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut layers: Vec<Box<dyn Layer>> = Vec::new();
+        for step in &plan.steps {
+            match step {
+                PlanStep::Conv {
+                    name,
+                    geom,
+                    out_c,
+                    bias,
+                    bn,
+                    pos,
+                } => {
+                    layers.push(Box::new(Conv2d::new(name, *geom, *out_c, *pos, *bias, &mut rng)));
+                    if *bn {
+                        layers.push(Box::new(BatchNorm::new_2d(&format!("{name}.bn"), *out_c)));
+                    }
+                    layers.push(Box::new(Relu::new()));
+                }
+                PlanStep::MaxPool { k, stride } => {
+                    layers.push(Box::new(MaxPool2d::new(*k, *stride)));
+                }
+                PlanStep::Gap => layers.push(Box::new(GlobalAvgPool::new())),
+                PlanStep::Flatten => layers.push(Box::new(Flatten::new())),
+                PlanStep::Relu => layers.push(Box::new(Relu::new())),
+                PlanStep::Fc {
+                    name,
+                    in_dim,
+                    out,
+                    bias,
+                    bn,
+                    pos,
+                    flatten_first,
+                } => {
+                    if *flatten_first {
+                        layers.push(Box::new(Flatten::new()));
+                    }
+                    let mut l = Linear::new(name, *in_dim, *out, *pos, &mut rng);
+                    if !bias {
+                        l = l.no_bias();
+                    }
+                    layers.push(Box::new(l));
+                    if *bn {
+                        layers.push(Box::new(BatchNorm::new_1d(&format!("{name}.bn"), *out)));
+                    }
+                }
+                PlanStep::Block {
+                    name,
+                    in_c,
+                    hw,
+                    width,
+                    expand,
+                    stride,
+                } => match expand {
+                    Some(e) => {
+                        let (block, _, _) =
+                            bottleneck_block(name, *in_c, *hw, *width, *e, *stride, &mut rng);
+                        layers.push(Box::new(block));
+                    }
+                    None => {
+                        let (block, _) = basic_block(name, *in_c, *hw, *width, *stride, &mut rng);
+                        layers.push(Box::new(block));
+                    }
+                },
+            }
+        }
+        Sequential::new(layers)
+    }
+
+    /// The stable walk: shape inference + name/position assignment +
+    /// validation, in one deterministic pass.
+    fn plan(&self) -> Result<Plan, SpecError> {
+        if self.items.is_empty() {
+            return err("spec has no layers");
+        }
+        match self.input {
+            InputKind::Image { c, h, w } => {
+                check_dims(&[(c, "input channels"), (h, "input height"), (w, "input width")])?
+            }
+            InputKind::Vector { dim } => check_dims(&[(dim, "input dim")])?,
+        }
+        // Pass 1: counts and first/last top-level GEMM items.
+        let fc_total = self
+            .items
+            .iter()
+            .filter(|i| matches!(i, ItemSpec::Fc { .. }))
+            .count();
+        let gemm_idx: Vec<usize> = self
+            .items
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| matches!(i, ItemSpec::Conv { .. } | ItemSpec::Fc { .. }))
+            .map(|(n, _)| n)
+            .collect();
+        let auto_pos = |idx: usize| -> LayerPos {
+            // A single GEMM layer feeds the Softmax: Last wins (§4.1 —
+            // Softmax fidelity dominates, and Last already implies wide
+            // operands under the paper scheme).
+            if Some(&idx) == gemm_idx.last() {
+                LayerPos::Last
+            } else if Some(&idx) == gemm_idx.first() {
+                LayerPos::First
+            } else {
+                LayerPos::Middle
+            }
+        };
+
+        // Pass 2: the walk.
+        let mut shape = match self.input {
+            InputKind::Image { c, h, w } => Shape::Img { c, h, w },
+            InputKind::Vector { dim } => Shape::Flat { d: dim },
+        };
+        let mut steps = Vec::with_capacity(self.items.len());
+        let mut names: Vec<String> = Vec::new();
+        let (mut conv_n, mut fc_n, mut res_n) = (0usize, 0usize, 0usize);
+        for (idx, item) in self.items.iter().enumerate() {
+            match item {
+                ItemSpec::Conv {
+                    k,
+                    out_c,
+                    stride,
+                    pad,
+                    bias,
+                    bn,
+                    name,
+                    pos,
+                } => {
+                    conv_n += 1;
+                    let Shape::Img { c, h, w } = shape else {
+                        return err(format!("conv #{conv_n} needs an image input, got a vector"));
+                    };
+                    check_dims(&[(*k, "kernel"), (*out_c, "channels"), (*stride, "stride")])?;
+                    let (oh, ow) = conv_out(h, w, *k, *stride, *pad)
+                        .ok_or_else(|| SpecError(format!(
+                            "conv #{conv_n}: {k}x{k} kernel (pad {pad}) exceeds {h}x{w} input"
+                        )))?;
+                    let name = resolve_name(name, format!("conv{conv_n}"))?;
+                    names.push(name.clone());
+                    steps.push(PlanStep::Conv {
+                        name,
+                        geom: Conv2dGeom {
+                            in_c: c,
+                            in_h: h,
+                            in_w: w,
+                            k: *k,
+                            stride: *stride,
+                            pad: *pad,
+                        },
+                        out_c: *out_c,
+                        bias: *bias,
+                        bn: *bn,
+                        pos: pos.unwrap_or_else(|| auto_pos(idx)),
+                    });
+                    shape = Shape::Img {
+                        c: *out_c,
+                        h: oh,
+                        w: ow,
+                    };
+                }
+                ItemSpec::MaxPool { k, stride } => {
+                    let Shape::Img { c, h, w } = shape else {
+                        return err("maxpool needs an image input, got a vector");
+                    };
+                    check_dims(&[(*k, "kernel"), (*stride, "stride")])?;
+                    if *k > h || *k > w {
+                        return err(format!("maxpool{k} exceeds {h}x{w} input"));
+                    }
+                    steps.push(PlanStep::MaxPool {
+                        k: *k,
+                        stride: *stride,
+                    });
+                    shape = Shape::Img {
+                        c,
+                        h: (h - k) / stride + 1,
+                        w: (w - k) / stride + 1,
+                    };
+                }
+                ItemSpec::Gap => {
+                    let Shape::Img { c, .. } = shape else {
+                        return err("gap needs an image input, got a vector");
+                    };
+                    steps.push(PlanStep::Gap);
+                    shape = Shape::Flat { d: c };
+                }
+                ItemSpec::Flatten => {
+                    let Shape::Img { c, h, w } = shape else {
+                        return err("flatten needs an image input, got a vector");
+                    };
+                    steps.push(PlanStep::Flatten);
+                    shape = Shape::Flat { d: c * h * w };
+                }
+                ItemSpec::Relu => steps.push(PlanStep::Relu),
+                ItemSpec::Fc {
+                    out,
+                    bias,
+                    bn,
+                    name,
+                    pos,
+                } => {
+                    fc_n += 1;
+                    check_dims(&[(*out, "width")])?;
+                    let (in_dim, flatten_first) = match shape {
+                        Shape::Flat { d } => (d, false),
+                        Shape::Img { c, h, w } => (c * h * w, true),
+                    };
+                    let auto = if fc_total == 1 {
+                        "fc".to_string()
+                    } else {
+                        format!("fc{fc_n}")
+                    };
+                    let name = resolve_name(name, auto)?;
+                    names.push(name.clone());
+                    steps.push(PlanStep::Fc {
+                        name,
+                        in_dim,
+                        out: *out,
+                        bias: *bias,
+                        bn: *bn,
+                        pos: pos.unwrap_or_else(|| auto_pos(idx)),
+                        flatten_first,
+                    });
+                    shape = Shape::Flat { d: *out };
+                }
+                ItemSpec::Res {
+                    blocks,
+                    width,
+                    expand,
+                    stride,
+                    name,
+                } => {
+                    let stage = res_n;
+                    res_n += 1;
+                    check_dims(&[(*blocks, "block count"), (*width, "width")])?;
+                    if let Some(e) = expand {
+                        check_dims(&[(*e, "expansion")])?;
+                    }
+                    if let Some(s) = stride {
+                        check_dims(&[(*s, "stride")])?;
+                    }
+                    let stage_name = resolve_name(name, format!("s{stage}"))?;
+                    for b in 0..*blocks {
+                        let Shape::Img { c, h, w } = shape else {
+                            return err(format!(
+                                "res stage {stage_name} needs an image input, got a vector"
+                            ));
+                        };
+                        if h != w {
+                            return err(format!(
+                                "res stage {stage_name} needs a square input, got {h}x{w}"
+                            ));
+                        }
+                        // The canonical stage pattern: the first block of
+                        // every stage but the spec's first strides 2.
+                        let s = if b == 0 {
+                            stride.unwrap_or(if stage > 0 { 2 } else { 1 })
+                        } else {
+                            1
+                        };
+                        let out_hw = (h + 2).checked_sub(3).map(|d| d / s + 1).ok_or_else(|| {
+                            SpecError(format!("res stage {stage_name}: input {h}x{w} too small"))
+                        })?;
+                        let out_c = width * expand.unwrap_or(1);
+                        names.push(format!("{stage_name}b{b}"));
+                        steps.push(PlanStep::Block {
+                            name: format!("{stage_name}b{b}"),
+                            in_c: c,
+                            hw: h,
+                            width: *width,
+                            expand: *expand,
+                            stride: s,
+                        });
+                        shape = Shape::Img {
+                            c: out_c,
+                            h: out_hw,
+                            w: out_hw,
+                        };
+                    }
+                }
+            }
+        }
+        // Distinct layer-name prefixes (conv/fc names and every residual
+        // block's `s{i}b{j}`). Exact duplicates would alias SR streams and
+        // checkpoint keys outright; a name that extends another with a `.`
+        // segment (e.g. an explicit `#s0b0.c1` next to a res stage `s0`)
+        // could collide with block-internal names (`.c1`, `.bn1`, `.proj`,
+        // …), so dotted-prefix overlaps are rejected too.
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                if a == b {
+                    return err(format!("duplicate layer name {a:?}"));
+                }
+                let (a_dot, b_dot) = (format!("{a}."), format!("{b}."));
+                if a.starts_with(b_dot.as_str()) || b.starts_with(a_dot.as_str()) {
+                    return err(format!(
+                        "layer names {a:?} and {b:?} overlap (one is a dotted prefix of the \
+                         other), which would alias checkpoint keys"
+                    ));
+                }
+            }
+        }
+        let Shape::Flat { d } = shape else {
+            return err("model must end with a 2-D output (finish with fc or gap)");
+        };
+        Ok(Plan { steps, classes: d })
+    }
+}
+
+impl fmt::Display for ModelSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.canonical())
+    }
+}
+
+fn check_dims(dims: &[(usize, &str)]) -> Result<(), SpecError> {
+    for (v, what) in dims {
+        if *v == 0 {
+            return err(format!("{what} must be ≥ 1"));
+        }
+    }
+    Ok(())
+}
+
+/// Output spatial dims of a conv, or `None` when the kernel exceeds the
+/// padded input.
+fn conv_out(h: usize, w: usize, k: usize, stride: usize, pad: usize) -> Option<(usize, usize)> {
+    let oh = (h + 2 * pad).checked_sub(k)? / stride + 1;
+    let ow = (w + 2 * pad).checked_sub(k)? / stride + 1;
+    Some((oh, ow))
+}
+
+fn resolve_name(explicit: &Option<String>, auto: String) -> Result<String, SpecError> {
+    match explicit {
+        None => Ok(auto),
+        Some(n) => {
+            if n.is_empty() || !n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.')
+            {
+                return err(format!(
+                    "layer name {n:?} must be non-empty [A-Za-z0-9_.]"
+                ));
+            }
+            Ok(n.clone())
+        }
+    }
+}
+
+// ---- printing --------------------------------------------------------------
+
+fn print_mods(name: &Option<String>, pos: &Option<LayerPos>) -> String {
+    let mut out = String::new();
+    if let Some(n) = name {
+        out.push('#');
+        out.push_str(n);
+    }
+    if let Some(p) = pos {
+        out.push('@');
+        out.push_str(pos_id(*p));
+    }
+    out
+}
+
+fn pos_id(pos: LayerPos) -> &'static str {
+    match pos {
+        LayerPos::First => "first",
+        LayerPos::Middle => "middle",
+        LayerPos::Last => "last",
+    }
+}
+
+fn print_item(item: &ItemSpec) -> String {
+    match item {
+        ItemSpec::Conv {
+            k,
+            out_c,
+            stride,
+            pad,
+            bias,
+            bn,
+            name,
+            pos,
+        } => {
+            let mut args = format!("{out_c}");
+            if *stride != 1 {
+                args.push_str(&format!(",s{stride}"));
+            }
+            if *pad != k / 2 {
+                args.push_str(&format!(",p{pad}"));
+            }
+            if *bn {
+                args.push_str(",bn");
+            }
+            // bias defaults to !bn; print only the deviation.
+            if *bias == *bn {
+                args.push_str(if *bias { ",bias" } else { ",nobias" });
+            }
+            format!("conv{k}x{k}({args}){}", print_mods(name, pos))
+        }
+        ItemSpec::MaxPool { k, stride } => {
+            if stride == k {
+                format!("maxpool{k}")
+            } else {
+                format!("maxpool{k}s{stride}")
+            }
+        }
+        ItemSpec::Gap => "gap".into(),
+        ItemSpec::Flatten => "flatten".into(),
+        ItemSpec::Relu => "relu".into(),
+        ItemSpec::Fc {
+            out,
+            bias,
+            bn,
+            name,
+            pos,
+        } => {
+            let mut args = format!("{out}");
+            if *bn {
+                args.push_str(",bn");
+            }
+            if !bias {
+                args.push_str(",nobias");
+            }
+            format!("fc({args}){}", print_mods(name, pos))
+        }
+        ItemSpec::Res {
+            blocks,
+            width,
+            expand,
+            stride,
+            name,
+        } => {
+            let mut args = format!("{blocks}x{width}");
+            if let Some(e) = expand {
+                args.push_str(&format!(",b{e}"));
+            }
+            if let Some(s) = stride {
+                args.push_str(&format!(",s{s}"));
+            }
+            format!("res({args}){}", print_mods(name, &None))
+        }
+    }
+}
+
+// ---- parsing ---------------------------------------------------------------
+
+/// `"head(inner)"` → `Some(inner)` (whole-string match).
+fn strip_call<'a>(s: &'a str, head: &str) -> Option<&'a str> {
+    s.strip_prefix(head)?
+        .strip_prefix('(')?
+        .strip_suffix(')')
+}
+
+fn num(s: &str, what: &str) -> Result<usize, SpecError> {
+    s.parse()
+        .map_err(|_| SpecError(format!("cannot parse {what} from {s:?}")))
+}
+
+/// Split `"...#name@pos"` modifier suffixes off a token body.
+fn split_mods(tok: &str) -> Result<(&str, Option<String>, Option<LayerPos>), SpecError> {
+    let (rest, pos) = match tok.rsplit_once('@') {
+        Some((rest, p)) => {
+            let pos = match p {
+                "first" => LayerPos::First,
+                "middle" => LayerPos::Middle,
+                "last" => LayerPos::Last,
+                other => return err(format!("unknown position {other:?} (first|middle|last)")),
+            };
+            (rest, Some(pos))
+        }
+        None => (tok, None),
+    };
+    let (core, name) = match rest.rsplit_once('#') {
+        Some((core, n)) => (core, Some(n.to_string())),
+        None => (rest, None),
+    };
+    if let Some(n) = &name {
+        resolve_name(&Some(n.clone()), String::new())?;
+    }
+    Ok((core, name, pos))
+}
+
+fn parse_input(inner: &str) -> Result<InputKind, SpecError> {
+    let dims: Vec<&str> = inner.split('x').collect();
+    match dims.as_slice() {
+        [d] => Ok(InputKind::Vector {
+            dim: num(d, "input dim")?,
+        }),
+        [c, h, w] => Ok(InputKind::Image {
+            c: num(c, "input channels")?,
+            h: num(h, "input height")?,
+            w: num(w, "input width")?,
+        }),
+        _ => err(format!("in({inner}): expected in(C x H x W) or in(D)")),
+    }
+}
+
+fn parse_conv(core: &str) -> Result<(usize, String), SpecError> {
+    // "conv3x3(...)" → (k, args); both kernel dims must agree.
+    let body = core.strip_prefix("conv").unwrap_or(core);
+    let open = body
+        .find('(')
+        .ok_or_else(|| SpecError(format!("conv item {core:?} missing (…)")))?;
+    let (kk, rest) = body.split_at(open);
+    let args = rest
+        .strip_prefix('(')
+        .and_then(|r| r.strip_suffix(')'))
+        .ok_or_else(|| SpecError(format!("conv item {core:?} missing closing paren")))?;
+    let (ka, kb) = kk
+        .split_once('x')
+        .ok_or_else(|| SpecError(format!("conv kernel {kk:?} must be KxK")))?;
+    let (ka, kb) = (num(ka, "kernel")?, num(kb, "kernel")?);
+    if ka != kb {
+        return err(format!("only square kernels are supported, got {ka}x{kb}"));
+    }
+    Ok((ka, args.to_string()))
+}
+
+fn parse_item(tok: &str, first: bool) -> Result<Option<ItemSpec>, SpecError> {
+    // Returns None for the `in(...)` pseudo-item (handled by the caller).
+    let (core, name, pos) = split_mods(tok)?;
+    if core.starts_with("in(") {
+        if !first {
+            return err("in(...) must be the first item");
+        }
+        return Ok(None);
+    }
+    let item = if core.starts_with("conv") {
+        let (k, args) = parse_conv(core)?;
+        let mut parts = args.split(',');
+        let out_c = num(
+            parts.next().filter(|s| !s.is_empty()).ok_or_else(|| {
+                SpecError(format!("conv item {core:?} needs an output-channel count"))
+            })?,
+            "channels",
+        )?;
+        let (mut stride, mut pad, mut bn) = (1usize, k / 2, false);
+        let mut bias: Option<bool> = None;
+        for a in parts {
+            match a {
+                "bn" => bn = true,
+                "bias" => bias = Some(true),
+                "nobias" => bias = Some(false),
+                _ if a.starts_with('s') => stride = num(&a[1..], "stride")?,
+                _ if a.starts_with('p') => pad = num(&a[1..], "padding")?,
+                other => return err(format!("unknown conv argument {other:?}")),
+            }
+        }
+        ItemSpec::Conv {
+            k,
+            out_c,
+            stride,
+            pad,
+            bias: bias.unwrap_or(!bn),
+            bn,
+            name,
+            pos,
+        }
+    } else if let Some(rest) = core.strip_prefix("maxpool") {
+        if name.is_some() || pos.is_some() {
+            return err("maxpool takes no #name/@pos modifiers");
+        }
+        let (k, stride) = match rest.split_once('s') {
+            Some((k, s)) => (num(k, "kernel")?, num(s, "stride")?),
+            None => {
+                let k = num(rest, "kernel")?;
+                (k, k)
+            }
+        };
+        ItemSpec::MaxPool { k, stride }
+    } else if core == "gap" || core == "flatten" || core == "relu" {
+        if name.is_some() || pos.is_some() {
+            return err(format!("{core} takes no #name/@pos modifiers"));
+        }
+        match core {
+            "gap" => ItemSpec::Gap,
+            "flatten" => ItemSpec::Flatten,
+            _ => ItemSpec::Relu,
+        }
+    } else if let Some(args) = strip_call(core, "fc") {
+        let mut parts = args.split(',');
+        let out = num(
+            parts
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or_else(|| SpecError(format!("fc item {core:?} needs a width")))?,
+            "width",
+        )?;
+        let (mut bn, mut bias) = (false, true);
+        for a in parts {
+            match a {
+                "bn" => bn = true,
+                "bias" => bias = true,
+                "nobias" => bias = false,
+                other => return err(format!("unknown fc argument {other:?}")),
+            }
+        }
+        ItemSpec::Fc {
+            out,
+            bias,
+            bn,
+            name,
+            pos,
+        }
+    } else if let Some(args) = strip_call(core, "res") {
+        if pos.is_some() {
+            return err("res takes no @pos modifier (blocks are always middle layers)");
+        }
+        let mut parts = args.split(',');
+        let nw = parts
+            .next()
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| SpecError(format!("res item {core:?} needs NxW")))?;
+        let (n, w) = nw
+            .split_once('x')
+            .ok_or_else(|| SpecError(format!("res shape {nw:?} must be NxW")))?;
+        let (blocks, width) = (num(n, "block count")?, num(w, "width")?);
+        let (mut expand, mut stride) = (None, None);
+        for a in parts {
+            match a {
+                _ if a.starts_with('b') => expand = Some(num(&a[1..], "expansion")?),
+                _ if a.starts_with('s') => stride = Some(num(&a[1..], "stride")?),
+                other => return err(format!("unknown res argument {other:?}")),
+            }
+        }
+        ItemSpec::Res {
+            blocks,
+            width,
+            expand,
+            stride,
+            name,
+        }
+    } else {
+        return err(format!(
+            "unknown item {tok:?} (expected in/conv/maxpool/gap/flatten/relu/fc/res)"
+        ));
+    };
+    Ok(Some(item))
+}
+
+fn parse_dash(s: &str) -> Result<(InputKind, Vec<ItemSpec>), SpecError> {
+    let mut input: Option<InputKind> = None;
+    let mut items = Vec::new();
+    for (i, tok) in s.split('-').enumerate() {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            return err(format!("empty item in {s:?}"));
+        }
+        match parse_item(tok, i == 0)? {
+            Some(item) => items.push(item),
+            None => {
+                let inner = strip_call(tok, "in")
+                    .ok_or_else(|| SpecError(format!("malformed in(...) item {tok:?}")))?;
+                input = Some(parse_input(inner)?);
+            }
+        }
+    }
+    let input = match input {
+        Some(k) => k,
+        None => {
+            // Default: CIFAR-scale images; a leading fc needs an explicit
+            // in(D).
+            if matches!(items.first(), Some(ItemSpec::Fc { .. })) {
+                return err("a spec starting with fc needs an explicit in(D) input item");
+            }
+            InputKind::Image { c: 3, h: 32, w: 32 }
+        }
+    };
+    Ok((input, items))
+}
+
+/// `mlp(d0, hidden…, dn)` sugar → `in(d0)` + `fc(W[,bn])-relu` pairs +
+/// `fc(dn)`.
+fn parse_mlp(inner: &str) -> Result<(InputKind, Vec<ItemSpec>), SpecError> {
+    let dims: Vec<&str> = inner.split(',').map(str::trim).collect();
+    if dims.len() < 2 {
+        return err(format!("mlp({inner}): need at least input and output dims"));
+    }
+    let input = InputKind::Vector {
+        dim: num(dims[0], "mlp input dim")?,
+    };
+    let mut items = Vec::new();
+    for hidden in &dims[1..dims.len() - 1] {
+        let (bn, rest) = match hidden.strip_prefix("bn:") {
+            Some(r) => (true, r),
+            None => (false, *hidden),
+        };
+        let (width, repeat) = match rest.split_once('x') {
+            Some((w, r)) => (num(w, "mlp width")?, num(r, "mlp repeat")?),
+            None => (num(rest, "mlp width")?, 1),
+        };
+        check_dims(&[(repeat, "mlp repeat")])?;
+        for _ in 0..repeat {
+            items.push(ItemSpec::Fc {
+                out: width,
+                bias: true,
+                bn,
+                name: None,
+                pos: None,
+            });
+            items.push(ItemSpec::Relu);
+        }
+    }
+    items.push(ItemSpec::Fc {
+        out: num(dims[dims.len() - 1], "mlp output dim")?,
+        bias: true,
+        bn: false,
+        name: None,
+        pos: None,
+    });
+    Ok((input, items))
+}
+
+// ---- builder ---------------------------------------------------------------
+
+/// Programmatic spec construction; validated by [`SpecBuilder::finish`].
+///
+/// ```
+/// use fp8train::nn::spec::SpecBuilder;
+/// let spec = SpecBuilder::image(3, 32, 32)
+///     .conv(3, 16).bn().named("stem")
+///     .res(2, 32)
+///     .gap()
+///     .fc(10)
+///     .finish()
+///     .unwrap();
+/// assert_eq!(spec.classes(), 10);
+/// ```
+#[derive(Clone, Debug)]
+pub struct SpecBuilder {
+    input: InputKind,
+    items: Vec<ItemSpec>,
+}
+
+impl SpecBuilder {
+    pub fn image(c: usize, h: usize, w: usize) -> Self {
+        Self {
+            input: InputKind::Image { c, h, w },
+            items: Vec::new(),
+        }
+    }
+
+    pub fn vector(dim: usize) -> Self {
+        Self {
+            input: InputKind::Vector { dim },
+            items: Vec::new(),
+        }
+    }
+
+    pub fn conv(mut self, k: usize, out_c: usize) -> Self {
+        self.items.push(ItemSpec::Conv {
+            k,
+            out_c,
+            stride: 1,
+            pad: k / 2,
+            bias: true,
+            bn: false,
+            name: None,
+            pos: None,
+        });
+        self
+    }
+
+    pub fn maxpool(mut self, k: usize) -> Self {
+        self.items.push(ItemSpec::MaxPool { k, stride: k });
+        self
+    }
+
+    pub fn gap(mut self) -> Self {
+        self.items.push(ItemSpec::Gap);
+        self
+    }
+
+    pub fn flatten(mut self) -> Self {
+        self.items.push(ItemSpec::Flatten);
+        self
+    }
+
+    pub fn relu(mut self) -> Self {
+        self.items.push(ItemSpec::Relu);
+        self
+    }
+
+    pub fn fc(mut self, out: usize) -> Self {
+        self.items.push(ItemSpec::Fc {
+            out,
+            bias: true,
+            bn: false,
+            name: None,
+            pos: None,
+        });
+        self
+    }
+
+    pub fn res(mut self, blocks: usize, width: usize) -> Self {
+        self.items.push(ItemSpec::Res {
+            blocks,
+            width,
+            expand: None,
+            stride: None,
+            name: None,
+        });
+        self
+    }
+
+    pub fn bottleneck(mut self, blocks: usize, width: usize, expand: usize) -> Self {
+        self.items.push(ItemSpec::Res {
+            blocks,
+            width,
+            expand: Some(expand),
+            stride: None,
+            name: None,
+        });
+        self
+    }
+
+    /// Add BN to the last conv/fc item (convs also drop their bias, the
+    /// conv-BN convention). Panics when the last item takes no BN.
+    pub fn bn(mut self) -> Self {
+        match self.items.last_mut() {
+            Some(ItemSpec::Conv { bn, bias, .. }) => {
+                *bn = true;
+                *bias = false;
+            }
+            Some(ItemSpec::Fc { bn, .. }) => *bn = true,
+            other => panic!("bn() needs a preceding conv/fc item, got {other:?}"),
+        }
+        self
+    }
+
+    /// Set the stride of the last conv/maxpool/res item.
+    pub fn stride(mut self, s: usize) -> Self {
+        match self.items.last_mut() {
+            Some(ItemSpec::Conv { stride, .. }) | Some(ItemSpec::MaxPool { stride, .. }) => {
+                *stride = s
+            }
+            Some(ItemSpec::Res { stride, .. }) => *stride = Some(s),
+            other => panic!("stride() needs a preceding conv/maxpool/res item, got {other:?}"),
+        }
+        self
+    }
+
+    /// Set the padding of the last conv item.
+    pub fn pad(mut self, p: usize) -> Self {
+        match self.items.last_mut() {
+            Some(ItemSpec::Conv { pad, .. }) => *pad = p,
+            other => panic!("pad() needs a preceding conv item, got {other:?}"),
+        }
+        self
+    }
+
+    /// Drop the bias of the last conv/fc item.
+    pub fn no_bias(mut self) -> Self {
+        match self.items.last_mut() {
+            Some(ItemSpec::Conv { bias, .. }) | Some(ItemSpec::Fc { bias, .. }) => *bias = false,
+            other => panic!("no_bias() needs a preceding conv/fc item, got {other:?}"),
+        }
+        self
+    }
+
+    /// Name the last conv/fc/res item (overriding the stable-walk name).
+    pub fn named(mut self, n: &str) -> Self {
+        match self.items.last_mut() {
+            Some(ItemSpec::Conv { name, .. })
+            | Some(ItemSpec::Fc { name, .. })
+            | Some(ItemSpec::Res { name, .. }) => *name = Some(n.to_string()),
+            other => panic!("named() needs a preceding conv/fc/res item, got {other:?}"),
+        }
+        self
+    }
+
+    /// Override the precision position of the last conv/fc item — the
+    /// generalized §4.1 first/last-layer lever.
+    pub fn pos(mut self, p: LayerPos) -> Self {
+        match self.items.last_mut() {
+            Some(ItemSpec::Conv { pos, .. }) | Some(ItemSpec::Fc { pos, .. }) => *pos = Some(p),
+            other => panic!("pos() needs a preceding conv/fc item, got {other:?}"),
+        }
+        self
+    }
+
+    /// Validate and seal the spec.
+    pub fn finish(self) -> Result<ModelSpec, SpecError> {
+        let spec = ModelSpec {
+            preset: None,
+            input: self.input,
+            items: self.items,
+        };
+        spec.plan()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{PrecisionPolicy, QuantCtx};
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn presets_resolve_and_report_workload_shapes() {
+        for id in ModelSpec::PRESET_IDS {
+            let spec = ModelSpec::resolve(id).unwrap();
+            assert_eq!(spec.preset_id(), Some(id));
+            assert_eq!(spec.id(), id);
+            let classes = if id == "bn50_dnn" { 30 } else { 10 };
+            assert_eq!(spec.classes(), classes, "{id}");
+            match spec.input() {
+                InputKind::Vector { dim } => assert_eq!(dim, 440, "{id}"),
+                InputKind::Image { c, h, w } => assert_eq!((c, h, w), (3, 32, 32), "{id}"),
+            }
+        }
+        assert!(ModelSpec::resolve("not_a_model(").is_err());
+    }
+
+    #[test]
+    fn presets_build_and_forward() {
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        for spec in ModelSpec::all_presets() {
+            let mut m = spec.build(7);
+            let x = Tensor::zeros(&spec.input().shape(2));
+            let y = m.forward(x, &ctx);
+            assert_eq!(y.shape, vec![2, spec.classes()], "{}", spec.id());
+            assert!(m.num_params() > 1000, "{} too small", spec.id());
+        }
+    }
+
+    #[test]
+    fn canonical_round_trips_every_preset() {
+        for spec in ModelSpec::all_presets() {
+            let printed = spec.canonical();
+            let back = ModelSpec::parse(&printed)
+                .unwrap_or_else(|e| panic!("{}: {printed} → {e}", spec.id()));
+            assert_eq!(back, spec, "{}", spec.id());
+            // And the canonical form is a fixed point.
+            assert_eq!(back.canonical(), printed);
+        }
+    }
+
+    #[test]
+    fn mlp_sugar_lowers_to_fc_relu_chain() {
+        let spec = ModelSpec::parse("mlp(784,bn:256x3,10)").unwrap();
+        assert_eq!(spec.input(), InputKind::Vector { dim: 784 });
+        assert_eq!(spec.classes(), 10);
+        // 3 hidden (fc+relu) pairs + final fc.
+        assert_eq!(spec.items().len(), 7);
+        assert!(matches!(
+            spec.items()[0],
+            ItemSpec::Fc { out: 256, bn: true, .. }
+        ));
+        assert!(matches!(spec.items()[1], ItemSpec::Relu));
+        assert!(matches!(
+            spec.items()[6],
+            ItemSpec::Fc { out: 10, bn: false, .. }
+        ));
+        // Equivalent dash form parses to the same spec.
+        let dash = ModelSpec::parse(&spec.canonical()).unwrap();
+        assert_eq!(dash, spec);
+    }
+
+    #[test]
+    fn stable_walk_names_and_positions() {
+        let spec = ModelSpec::parse("conv3x3(8)-maxpool2-conv3x3(16)-gap-fc(10)").unwrap();
+        let mut m = spec.build(1);
+        let mut names = Vec::new();
+        m.visit_params(&mut |p| names.push(p.name.clone()));
+        assert_eq!(
+            names,
+            vec!["conv1.w", "conv1.b", "conv2.w", "conv2.b", "fc.w", "fc.b"]
+        );
+        // Multiple fcs number fc1..fcN.
+        let spec = ModelSpec::parse("in(12)-fc(8)-relu-fc(4)").unwrap();
+        let mut m = spec.build(1);
+        let mut names = Vec::new();
+        m.visit_params(&mut |p| names.push(p.name.clone()));
+        assert_eq!(names, vec!["fc1.w", "fc1.b", "fc2.w", "fc2.b"]);
+    }
+
+    #[test]
+    fn pos_overrides_and_defaults() {
+        // Default: first GEMM First, last GEMM Last.
+        let spec = ModelSpec::parse("in(8)-fc(8)-relu-fc(8)-relu-fc(4)").unwrap();
+        let plan = spec.plan().unwrap();
+        let fc_pos: Vec<LayerPos> = plan
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Fc { pos, .. } => Some(*pos),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fc_pos, vec![LayerPos::First, LayerPos::Middle, LayerPos::Last]);
+        // A single GEMM layer is Last.
+        let spec = ModelSpec::parse("in(8)-fc(4)").unwrap();
+        let plan = spec.plan().unwrap();
+        assert!(matches!(
+            plan.steps[0],
+            PlanStep::Fc { pos: LayerPos::Last, .. }
+        ));
+        // Explicit override wins — the generalized Table 3 lever.
+        let spec = ModelSpec::parse("in(8)-fc(8)-relu-fc(4)@middle").unwrap();
+        let plan = spec.plan().unwrap();
+        assert!(matches!(
+            plan.steps.last().unwrap(),
+            PlanStep::Fc { pos: LayerPos::Middle, .. }
+        ));
+    }
+
+    #[test]
+    fn shape_inference_tracks_conv_geometry() {
+        // 3x32x32 → conv s2 → 16x16 → maxpool2 → 8x8 → flatten = 16·64.
+        let spec = ModelSpec::parse("conv3x3(16,s2)-maxpool2-flatten-fc(10)").unwrap();
+        let mut m = spec.build(3);
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, false);
+        let y = m.forward(Tensor::zeros(&[2, 3, 32, 32]), &ctx);
+        assert_eq!(y.shape, vec![2, 10]);
+        // The auto-flatten path gives the same dims without `flatten`.
+        let auto = ModelSpec::parse("conv3x3(16,s2)-maxpool2-fc(10)").unwrap();
+        assert_eq!(auto.classes(), 10);
+        let mut m2 = auto.build(3);
+        let y2 = m2.forward(Tensor::zeros(&[2, 3, 32, 32]), &ctx);
+        assert_eq!(y2.shape, vec![2, 10]);
+    }
+
+    #[test]
+    fn res_stage_stride_pattern_and_override() {
+        let spec = ModelSpec::parse("conv3x3(16,bn)#stem-res(2x16)-res(2x32)-gap-fc(10)").unwrap();
+        let plan = spec.plan().unwrap();
+        let strides: Vec<usize> = plan
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Block { stride, .. } => Some(*stride),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strides, vec![1, 1, 2, 1]);
+        // Explicit sN pins the stage-entry stride.
+        let spec = ModelSpec::parse("conv3x3(16,bn)-res(2x32,s1)-gap-fc(10)").unwrap();
+        let plan = spec.plan().unwrap();
+        let strides: Vec<usize> = plan
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Block { stride, .. } => Some(*stride),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strides, vec![1, 1]);
+    }
+
+    #[test]
+    fn builder_matches_parsed_spec() {
+        let built = SpecBuilder::image(3, 32, 32)
+            .conv(3, 16)
+            .bn()
+            .named("stem")
+            .res(2, 16)
+            .res(2, 32)
+            .gap()
+            .fc(10)
+            .named("fc")
+            .finish()
+            .unwrap();
+        let parsed =
+            ModelSpec::parse("conv3x3(16,bn)#stem-res(2x16)-res(2x32)-gap-fc(10)#fc").unwrap();
+        assert_eq!(built, parsed);
+        assert_eq!(built.canonical(), parsed.canonical());
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected_with_context() {
+        for (spec, why) in [
+            ("", "empty"),
+            ("conv3x3(16)", "no 2-D output"),
+            ("fc(10)", "fc without in(D)"),
+            ("in(10)-conv3x3(4)-fc(2)", "conv on a vector"),
+            ("in(3x4x4)-maxpool8-fc(2)", "pool exceeds input"),
+            ("conv3x4(8)-gap-fc(2)", "non-square kernel"),
+            ("in(3x4x4)-conv9x9(8,p0)-gap-fc(2)", "kernel exceeds padded input"),
+            ("in(3x8x4)-res(1x8)-gap-fc(2)", "res needs square input"),
+            ("conv3x3(0)-gap-fc(2)", "zero channels"),
+            ("conv3x3(8)#a-conv3x3(8)#a-gap-fc(2)", "duplicate names"),
+            ("conv3x3(8)#s0b0.c1-res(1x8)-gap-fc(2)", "collides with block-internal names"),
+            ("res(1x8)#a-res(1x8)#a-gap-fc(2)", "duplicate stage names collide at block level"),
+            ("conv3x3(8,zz)-gap-fc(2)", "unknown conv arg"),
+            ("warp(9)-fc(2)", "unknown item"),
+            ("conv3x3(8)-gap-fc(2)@sideways", "unknown position"),
+            ("conv3x3(8)-gap-fc(2)#bad name", "bad name chars"),
+            ("mlp(10)", "mlp needs two dims"),
+            ("mlp(10,bn:,5)", "mlp bad hidden"),
+            ("gap-in(3x8x8)-fc(2)", "in not first"),
+            ("conv3x3(8)--gap-fc(2)", "empty item"),
+            ("res(1x8)-gap-fc(2)@first#x", "mods in wrong order"),
+        ] {
+            assert!(ModelSpec::parse(spec).is_err(), "{why}: {spec:?} parsed");
+        }
+    }
+
+    #[test]
+    fn spec_models_train_a_step() {
+        // A fully custom spec trains end-to-end through the layer stack.
+        let spec = ModelSpec::parse("mlp(12,bn:8,4)").unwrap();
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut m = spec.build(5);
+        let x = Tensor::from_vec(&[2, 12], (0..24).map(|i| 0.1 * i as f32).collect());
+        let y = m.forward(x, &ctx);
+        assert_eq!(y.shape, vec![2, 4]);
+        let dx = m.backward(Tensor::full(&[2, 4], 0.1), &ctx);
+        assert_eq!(dx.shape, vec![2, 12]);
+    }
+
+    #[test]
+    fn file_stem_is_filesystem_safe() {
+        assert_eq!(ModelSpec::cifar_cnn().file_stem(), "cifar_cnn");
+        let spec = ModelSpec::parse("conv3x3(8)-gap-fc(2)").unwrap();
+        let stem = spec.file_stem();
+        assert!(stem.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'));
+        assert!(stem.len() <= 48);
+    }
+}

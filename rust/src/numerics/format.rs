@@ -113,27 +113,57 @@ impl FloatFormat {
             FloatFormat::FP32 => "fp32".into(),
             FloatFormat::IEEE_HALF => "ieee_half".into(),
             FloatFormat::BF16 => "bf16".into(),
-            f => format!("f(1,{},{})", f.ebits, f.mbits),
+            f => f.community_name(),
         }
     }
 
+    /// The compact community spelling (`e5m2`, `e4m3`, …) used by the
+    /// related FP8 papers (Graphcore's format study, Mellempudi et al.) —
+    /// defined for every format, including the named constants.
+    pub fn community_name(self) -> String {
+        format!("e{}m{}", self.ebits, self.mbits)
+    }
+
+    /// The `sign-exponent-mantissa` spelling (`1-5-2`, `1-4-3`, …).
+    pub fn dashed_name(self) -> String {
+        format!("1-{}-{}", self.ebits, self.mbits)
+    }
+
+    /// Accepts the in-tree names (`fp8`, `fp16`, `bf16`, …), the
+    /// parametric `f(1,e,m)` form, and the community spellings `e5m2` /
+    /// `1-5-2` used by the related papers — so CLI sweeps can speak either
+    /// dialect. Widths are bounds-checked (`ebits` 2–8, `mbits` 0–23, the
+    /// range the f32-based quantizer supports).
     pub fn parse(s: &str) -> Option<FloatFormat> {
-        Some(match s {
+        let fmt = match s {
             "fp8" => FloatFormat::FP8,
             "fp16" => FloatFormat::FP16,
             "fp32" => FloatFormat::FP32,
             "ieee_half" | "half" => FloatFormat::IEEE_HALF,
             "bf16" | "bfloat16" => FloatFormat::BF16,
             _ => {
-                // "f(1,e,m)" form
-                let body = s.strip_prefix("f(1,")?.strip_suffix(')')?;
-                let (e, m) = body.split_once(',')?;
+                let (e, m) = if let Some(body) = s.strip_prefix("f(1,").and_then(|b| b.strip_suffix(')')) {
+                    // "f(1,e,m)" form
+                    let (e, m) = body.split_once(',')?;
+                    (e.trim().to_string(), m.trim().to_string())
+                } else if let Some(body) = s.strip_prefix("1-") {
+                    // "1-e-m" community form
+                    let (e, m) = body.split_once('-')?;
+                    (e.to_string(), m.to_string())
+                } else if let Some(body) = s.strip_prefix('e') {
+                    // "e5m2"-style community form
+                    let (e, m) = body.split_once('m')?;
+                    (e.to_string(), m.to_string())
+                } else {
+                    return None;
+                };
                 FloatFormat {
-                    ebits: e.trim().parse().ok()?,
-                    mbits: m.trim().parse().ok()?,
+                    ebits: e.parse().ok()?,
+                    mbits: m.parse().ok()?,
                 }
             }
-        })
+        };
+        ((2..=8).contains(&fmt.ebits) && fmt.mbits <= 23).then_some(fmt)
     }
 
     /// Quantize `x` to this format, returning the representable value as an
@@ -647,6 +677,40 @@ mod tests {
             Some(FloatFormat { ebits: 4, mbits: 3 })
         );
         assert_eq!(FloatFormat::parse("nope"), None);
+    }
+
+    #[test]
+    fn parse_community_spellings() {
+        // e5m2-style: the related papers' names for the paper's formats.
+        assert_eq!(FloatFormat::parse("e5m2"), Some(FloatFormat::FP8));
+        assert_eq!(FloatFormat::parse("e4m3"), Some(FloatFormat { ebits: 4, mbits: 3 }));
+        assert_eq!(FloatFormat::parse("e6m9"), Some(FloatFormat::FP16));
+        // 1-e-m style.
+        assert_eq!(FloatFormat::parse("1-5-2"), Some(FloatFormat::FP8));
+        assert_eq!(FloatFormat::parse("1-4-3"), Some(FloatFormat { ebits: 4, mbits: 3 }));
+        // Malformed / out-of-range spellings are rejected.
+        for bad in ["e5", "em", "e5m", "1-5", "1-5-2-0", "e1m2", "e9m2", "e5m24", "f(1,9,3)"] {
+            assert_eq!(FloatFormat::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn community_names_round_trip() {
+        for fmt in [
+            FloatFormat::FP8,
+            FloatFormat::FP16,
+            FloatFormat::BF16,
+            FloatFormat { ebits: 4, mbits: 3 },
+        ] {
+            assert_eq!(FloatFormat::parse(&fmt.community_name()), Some(fmt));
+            assert_eq!(FloatFormat::parse(&fmt.dashed_name()), Some(fmt));
+            // name() of every format parses back to itself.
+            assert_eq!(FloatFormat::parse(&fmt.name()), Some(fmt));
+        }
+        assert_eq!(FloatFormat::FP8.community_name(), "e5m2");
+        assert_eq!(FloatFormat::FP8.dashed_name(), "1-5-2");
+        // Non-constant formats emit the community spelling from name().
+        assert_eq!(FloatFormat { ebits: 4, mbits: 3 }.name(), "e4m3");
     }
 
     #[test]

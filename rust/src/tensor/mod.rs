@@ -10,6 +10,7 @@
 //! precision plumbing of Fig. 2 explicit.
 
 pub mod init;
+pub mod scratch;
 
 use crate::numerics::gemm::{gemm_bt_into, transpose_into};
 use crate::numerics::GemmPrecision;
@@ -91,6 +92,24 @@ impl Tensor {
             data: vec![v; shape.iter().product()],
             packed: PackedCell::new(),
         }
+    }
+
+    /// Like [`zeros`](Self::zeros), but leasing the backing buffer from the
+    /// per-thread [`scratch`] arena. Semantically identical (the lease is
+    /// zero-filled); pair with [`recycle`](Self::recycle) on temporaries
+    /// whose lifetime ends inside a step (the conv path does).
+    pub fn zeros_pooled(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: scratch::take(shape.iter().product()),
+            packed: PackedCell::new(),
+        }
+    }
+
+    /// Return this tensor's backing buffer to the [`scratch`] arena. Any
+    /// tensor qualifies, pooled-allocated or not.
+    pub fn recycle(self) {
+        scratch::recycle(self.data);
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
@@ -195,6 +214,17 @@ impl Tensor {
         assert_eq!(self.ndim(), 2, "t() needs a 2-D tensor");
         let (r, s) = (self.shape[0], self.shape[1]);
         let mut out = Tensor::zeros(&[s, r]);
+        transpose_into(&self.data, &mut out.data, r, s);
+        out
+    }
+
+    /// [`t`](Self::t) with the output leased from the [`scratch`] arena —
+    /// bit-identical result; used for transpose temporaries the caller
+    /// recycles (the Gradient-GEMM error operand in the conv path).
+    pub fn t_pooled(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2, "t_pooled() needs a 2-D tensor");
+        let (r, s) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros_pooled(&[s, r]);
         transpose_into(&self.data, &mut out.data, r, s);
         out
     }
@@ -344,7 +374,9 @@ pub fn im2col(x: &Tensor, g: &Conv2dGeom) -> Tensor {
     assert_eq!(w, g.in_w);
     let (oh, ow) = (g.out_h(), g.out_w());
     let cols = g.patch_len();
-    let mut out = Tensor::zeros(&[n * oh * ow, cols]);
+    // Leased from the per-thread arena (zero-filled — padding relies on
+    // it); the conv layer recycles the patch matrix when its step ends.
+    let mut out = Tensor::zeros_pooled(&[n * oh * ow, cols]);
     let src = &x.data;
     for img in 0..n {
         for oy in 0..oh {

@@ -1,0 +1,203 @@
+//! Per-thread scratch arena for short-lived f32 buffers.
+//!
+//! The conv path allocates large temporaries every step — the im2col patch
+//! matrix, the `[N·oh·ow, oc]` GEMM row blocks, and the transposed error
+//! operand of the Gradient GEMM — whose sizes repeat exactly across steps
+//! and eval batches. This arena recycles those allocations: [`take`] leases
+//! a zeroed buffer (reusing the best-fitting pooled allocation when one
+//! exists), [`recycle`] returns a buffer to the pool. The pool is
+//! per-thread (`thread_local`, no locks — layer code runs on the caller's
+//! thread; the GEMM worker pool never touches it), bounded to
+//! [`MAX_POOLED`] buffers, and purely an allocation cache: leased buffers
+//! are always zero-filled, so results are bit-identical to fresh
+//! `vec![0.0; len]` allocations.
+//!
+//! Hit/miss/bytes counters are exposed via [`stats`] and reported by
+//! `fp8train bench --json` (schema 3, `"scratch"` section) so the reuse
+//! rate of the conv path stays observable across PRs.
+
+use std::cell::RefCell;
+
+/// Maximum buffers kept per thread. Conv2d needs at most a handful of
+/// distinct temporary shapes per layer and the pool keeps the largest
+/// capacities, so 16 covers the deepest preset with headroom.
+const MAX_POOLED: usize = 16;
+
+#[derive(Default)]
+struct Pool {
+    bufs: Vec<Vec<f32>>,
+    hits: u64,
+    misses: u64,
+    bytes_reused: u64,
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+/// Reuse counters of the current thread's arena.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// `take` calls served from the pool.
+    pub hits: u64,
+    /// `take` calls that fell back to a fresh allocation.
+    pub misses: u64,
+    /// Bytes of allocation avoided by hits (requested length × 4).
+    pub bytes_reused: u64,
+}
+
+impl ScratchStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Lease a zero-filled buffer of `len` elements, reusing the smallest
+/// pooled buffer whose capacity fits when one exists.
+pub fn take(len: usize) -> Vec<f32> {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        let mut best: Option<usize> = None;
+        for (i, b) in p.bufs.iter().enumerate() {
+            if b.capacity() >= len && best.is_none_or(|j| b.capacity() < p.bufs[j].capacity()) {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                let mut v = p.bufs.swap_remove(i);
+                p.hits += 1;
+                p.bytes_reused += 4 * len as u64;
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                p.misses += 1;
+                vec![0.0; len]
+            }
+        }
+    })
+}
+
+/// Return a buffer to the pool. When the pool is full the smallest
+/// capacity is evicted, so the arena converges on the workload's largest
+/// recurring temporaries.
+pub fn recycle(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.bufs.len() >= MAX_POOLED {
+            let smallest = p
+                .bufs
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i)
+                .expect("pool is non-empty");
+            if p.bufs[smallest].capacity() >= v.capacity() {
+                return; // incoming buffer is no better than what we hold
+            }
+            p.bufs.swap_remove(smallest);
+        }
+        let mut v = v;
+        v.clear();
+        p.bufs.push(v);
+    });
+}
+
+/// Current thread's reuse counters.
+pub fn stats() -> ScratchStats {
+    POOL.with(|p| {
+        let p = p.borrow();
+        ScratchStats {
+            hits: p.hits,
+            misses: p.misses,
+            bytes_reused: p.bytes_reused,
+        }
+    })
+}
+
+/// Zero the counters (bench sections measure deltas).
+pub fn reset_stats() {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        p.hits = 0;
+        p.misses = 0;
+        p.bytes_reused = 0;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain the pool so tests don't observe each other's buffers.
+    fn drain() {
+        POOL.with(|p| p.borrow_mut().bufs.clear());
+        reset_stats();
+    }
+
+    #[test]
+    fn take_recycle_take_reuses_the_allocation() {
+        drain();
+        let v = take(1000);
+        assert_eq!(v.len(), 1000);
+        assert!(v.iter().all(|&x| x == 0.0));
+        let cap = v.capacity();
+        recycle(v);
+        let v2 = take(500); // smaller request still reuses the big buffer
+        assert!(v2.capacity() >= cap.min(1000));
+        assert_eq!(v2.len(), 500);
+        assert!(v2.iter().all(|&x| x == 0.0), "leased buffers are zeroed");
+        let s = stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.bytes_reused, 4 * 500);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        drain();
+    }
+
+    #[test]
+    fn leased_buffers_are_zeroed_even_after_dirty_recycle() {
+        drain();
+        let mut v = take(64);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        recycle(v);
+        let v2 = take(64);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        drain();
+    }
+
+    #[test]
+    fn pool_is_bounded_and_keeps_large_buffers() {
+        drain();
+        for len in 1..=MAX_POOLED + 8 {
+            recycle(vec![0.0; len * 10]);
+        }
+        let pooled = POOL.with(|p| p.borrow().bufs.len());
+        assert!(pooled <= MAX_POOLED);
+        // The largest recurring buffer survived the evictions.
+        let max_cap = POOL.with(|p| {
+            p.borrow().bufs.iter().map(Vec::capacity).max().unwrap()
+        });
+        assert!(max_cap >= (MAX_POOLED + 8) * 10);
+        drain();
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate_buffer() {
+        drain();
+        recycle(vec![0.0; 10_000]);
+        recycle(vec![0.0; 100]);
+        let v = take(50);
+        assert!(v.capacity() < 10_000, "should lease the 100-cap buffer");
+        drain();
+    }
+}

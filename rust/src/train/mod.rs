@@ -36,8 +36,11 @@ pub struct TrainConfig {
     /// Write a checkpoint every `save_every` steps (0 = only at the end,
     /// and then only when `save_path` is set).
     pub save_every: usize,
-    /// Checkpoint destination (one file, replaced atomically each save;
-    /// defaults to `checkpoint.fp8ck` when `save_every > 0`).
+    /// Checkpoint destination (replaced atomically each save; defaults to
+    /// `checkpoint.fp8ck` when `save_every > 0`). A literal `{step}` in
+    /// the path is substituted with the checkpoint's step number, turning
+    /// the single rolling file into periodic retention
+    /// (`ck_{step}.fp8ck` → `ck_100.fp8ck`, `ck_200.fp8ck`, …).
     pub save_path: Option<String>,
     /// Resume: restore engine + trainer progress from this `.fp8ck` file
     /// before stepping.
@@ -155,7 +158,8 @@ fn save_checkpoint(engine: &mut dyn Engine, progress: &mut TrainProgress, cfg: &
     let path = cfg
         .save_path
         .clone()
-        .unwrap_or_else(|| "checkpoint.fp8ck".to_string());
+        .unwrap_or_else(|| "checkpoint.fp8ck".to_string())
+        .replace("{step}", &progress.next_step.to_string());
     let mut map = cfg.save_meta.clone();
     engine.save_state(&mut map);
     progress.save_state("train", &mut map);
@@ -273,13 +277,12 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
 mod tests {
     use super::*;
     use crate::coordinator::NativeEngine;
-    use crate::nn::models::ModelKind;
-    use crate::nn::PrecisionPolicy;
+    use crate::nn::{ModelSpec, PrecisionPolicy};
 
     #[test]
     fn trainer_improves_over_random() {
-        let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 7).with_sizes(128, 64);
-        let mut e = NativeEngine::new(ModelKind::CifarCnn, PrecisionPolicy::fp32(), 7);
+        let ds = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 7).with_sizes(128, 64);
+        let mut e = NativeEngine::new(&ModelSpec::cifar_cnn(), PrecisionPolicy::fp32(), 7);
         let cfg = TrainConfig::quick(60);
         let r = train(&mut e, &ds, &cfg);
         // Random = 90% error on 10 classes; the tiny run must beat it.
@@ -298,8 +301,8 @@ mod tests {
         let dir = std::env::temp_dir().join("fp8train_test_csv");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("curve.csv");
-        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 8).with_sizes(32, 16);
-        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 8);
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 8).with_sizes(32, 16);
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 8);
         let mut cfg = TrainConfig::quick(4);
         cfg.batch_size = 8;
         cfg.csv = Some(path.to_string_lossy().into_owned());
@@ -338,17 +341,44 @@ mod tests {
     }
 
     #[test]
+    fn step_templated_save_path_retains_periodic_checkpoints() {
+        let dir = std::env::temp_dir().join("fp8train_test_retention");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tpl = dir.join("ck_{step}.fp8ck").to_string_lossy().into_owned();
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 13).with_sizes(16, 8);
+        let mut cfg = TrainConfig::quick(4);
+        cfg.batch_size = 4;
+        cfg.save_every = 2;
+        cfg.save_path = Some(tpl);
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 13);
+        train(&mut e, &ds, &cfg);
+        // save_every=2 over 4 steps → two retained files, nothing rolling.
+        let ck2 = dir.join("ck_2.fp8ck");
+        let ck4 = dir.join("ck_4.fp8ck");
+        assert!(ck2.exists(), "periodic checkpoint at step 2 missing");
+        assert!(ck4.exists(), "periodic checkpoint at step 4 missing");
+        assert!(!dir.join("ck_{step}.fp8ck").exists(), "template left unexpanded");
+        // The retained files are valid, distinct checkpoints.
+        let m2 = StateMap::load_file(&ck2).unwrap();
+        let m4 = StateMap::load_file(&ck4).unwrap();
+        assert_eq!(m2.get_u64("train.next_step").unwrap(), 2);
+        assert_eq!(m4.get_u64("train.next_step").unwrap(), 4);
+        std::fs::remove_file(ck2).ok();
+        std::fs::remove_file(ck4).ok();
+    }
+
+    #[test]
     fn trainer_writes_and_resumes_checkpoints() {
         let dir = std::env::temp_dir().join("fp8train_test_ck");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.fp8ck").to_string_lossy().into_owned();
-        let ds = SyntheticDataset::for_model(ModelKind::Bn50Dnn, 9).with_sizes(32, 16);
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 9).with_sizes(32, 16);
         let mut cfg = TrainConfig::quick(4);
         cfg.batch_size = 8;
         cfg.eval_every = 2;
         cfg.save_every = 2;
         cfg.save_path = Some(path.clone());
-        let mut e = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 9);
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 9);
         let r = train(&mut e, &ds, &cfg);
         // The final checkpoint restores to next_step == steps: resuming is
         // a no-op that reproduces the recorded curve.
@@ -356,7 +386,7 @@ mod tests {
         cfg2.resume = Some(path.clone());
         cfg2.save_path = None;
         cfg2.save_every = 0;
-        let mut f = NativeEngine::new(ModelKind::Bn50Dnn, PrecisionPolicy::fp32(), 9);
+        let mut f = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 9);
         let r2 = train(&mut f, &ds, &cfg2);
         assert_eq!(r.curve.len(), r2.curve.len());
         for (a, b) in r.curve.iter().zip(&r2.curve) {

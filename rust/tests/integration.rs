@@ -5,8 +5,7 @@
 use fp8train::coordinator::{evaluate, Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
 use fp8train::experiments::{self, ExpOpts};
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::PrecisionPolicy;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::runtime::{artifacts_dir, PjrtEngine, Runtime};
 use fp8train::train::{train, LrSchedule, TrainConfig};
 
@@ -44,8 +43,9 @@ fn quick_cfg(steps: usize, batch: usize) -> TrainConfig {
 
 #[test]
 fn native_fp32_learns_cifar_cnn() {
-    let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 1).with_sizes(256, 128);
-    let mut e = NativeEngine::new(ModelKind::CifarCnn, PrecisionPolicy::fp32(), 1);
+    let spec = ModelSpec::cifar_cnn();
+    let ds = SyntheticDataset::for_model(&spec, 1).with_sizes(256, 128);
+    let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp32(), 1);
     let r = train(&mut e, &ds, &quick_cfg(80, 32));
     assert!(r.final_test_err < 70.0, "err {}", r.final_test_err);
 }
@@ -54,10 +54,10 @@ fn native_fp32_learns_cifar_cnn() {
 fn native_fp8_tracks_fp32_on_bn50() {
     // The headline claim at a tiny budget: fp8_paper must land in the same
     // accuracy band as fp32, and both must beat the broken fp8_nochunk.
-    let kind = ModelKind::Bn50Dnn;
-    let ds = SyntheticDataset::for_model(kind, 2).with_sizes(512, 256);
+    let spec = ModelSpec::bn50_dnn();
+    let ds = SyntheticDataset::for_model(&spec, 2).with_sizes(512, 256);
     let run = |policy: PrecisionPolicy| {
-        let mut e = NativeEngine::new(kind, policy, 2);
+        let mut e = NativeEngine::new(&spec, policy, 2);
         let mut cfg = quick_cfg(120, 32);
         cfg.schedule = LrSchedule::Constant(0.05);
         train(&mut e, &ds, &cfg).final_test_err
@@ -78,10 +78,10 @@ fn native_fp8_tracks_fp32_on_bn50() {
 #[test]
 fn adam_optimizer_through_engine() {
     use fp8train::optim::Adam;
-    let kind = ModelKind::Bn50Dnn;
-    let ds = SyntheticDataset::for_model(kind, 3).with_sizes(128, 64);
+    let spec = ModelSpec::bn50_dnn();
+    let ds = SyntheticDataset::for_model(&spec, 3).with_sizes(128, 64);
     let mut e = NativeEngine::with_optimizer(
-        kind,
+        &spec,
         PrecisionPolicy::fp8_paper(),
         Box::new(Adam::new(1e-4, 3)),
         3,
@@ -98,7 +98,7 @@ fn adam_optimizer_through_engine() {
 
 #[test]
 fn evaluate_handles_empty() {
-    let mut e = NativeEngine::new(ModelKind::CifarCnn, PrecisionPolicy::fp32(), 1);
+    let mut e = NativeEngine::new(&ModelSpec::cifar_cnn(), PrecisionPolicy::fp32(), 1);
     let (loss, err) = evaluate(&mut e, &[]);
     assert_eq!(loss, 0.0);
     assert_eq!(err, 100.0);
@@ -114,7 +114,7 @@ fn pjrt_engine_trains_and_matches_native_band() {
     };
     let mut pjrt = PjrtEngine::load(&rt, "cifar_cnn_fp32", 4).unwrap();
     let batch = pjrt.batch_size();
-    let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 4).with_sizes(128, 64);
+    let ds = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 4).with_sizes(128, 64);
     let l0 = pjrt.train_step(&ds.train_batch(0, batch), 0.02, 0);
     let mut last = l0;
     for s in 1..12 {
@@ -138,7 +138,7 @@ fn pjrt_fp8_engine_steps() {
     };
     let mut pjrt = PjrtEngine::load(&rt, "cifar_cnn_fp8", 5).unwrap();
     let batch = pjrt.batch_size();
-    let ds = SyntheticDataset::for_model(ModelKind::CifarCnn, 5).with_sizes(64, 32);
+    let ds = SyntheticDataset::for_model(&ModelSpec::cifar_cnn(), 5).with_sizes(64, 32);
     let mut losses = Vec::new();
     for s in 0..4 {
         losses.push(pjrt.train_step(&ds.train_batch(s, batch), 0.02, s as u64));
@@ -208,10 +208,10 @@ fn policies_give_different_training_trajectories() {
     // fp8_nochunk must visibly diverge from fp8_paper on the same data —
     // the Fig. 5(a) mechanism at micro scale (distinct losses after a few
     // steps).
-    let kind = ModelKind::Bn50Dnn;
-    let ds = SyntheticDataset::for_model(kind, 6).with_sizes(64, 32);
+    let spec = ModelSpec::bn50_dnn();
+    let ds = SyntheticDataset::for_model(&spec, 6).with_sizes(64, 32);
     let run = |policy: PrecisionPolicy| {
-        let mut e = NativeEngine::new(kind, policy, 6);
+        let mut e = NativeEngine::new(&spec, policy, 6);
         let mut out = Vec::new();
         for s in 0..6 {
             out.push(e.train_step(&ds.train_batch(s % 2, 16), 0.05, s as u64));

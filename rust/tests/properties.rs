@@ -3,7 +3,6 @@
 //! failures). Each property encodes an invariant the paper's scheme relies
 //! on.
 
-use fp8train::nn::models::ModelKind;
 use fp8train::nn::{softmax_xent, PrecisionPolicy, QuantCtx};
 use fp8train::numerics::accumulate::{acc_chunked, acc_f64};
 use fp8train::numerics::axpy::sgd_update;
@@ -317,15 +316,18 @@ fn model_backward_shapes_match_input_under_every_policy() {
         PrecisionPolicy::fp8_nochunk(),
         PrecisionPolicy::fp16_upd_nearest(),
     ];
-    for kind in [ModelKind::CifarCnn, ModelKind::Bn50Dnn] {
+    for spec in [
+        fp8train::nn::ModelSpec::cifar_cnn(),
+        fp8train::nn::ModelSpec::bn50_dnn(),
+    ] {
         for policy in &policies {
-            let mut m = kind.build(3);
+            let mut m = spec.build(3);
             let ctx = QuantCtx::new(policy, 0, true);
-            let x = Tensor::zeros(&kind.input().shape(2));
+            let x = Tensor::zeros(&spec.input().shape(2));
             let y = m.forward(x, &ctx);
-            assert_eq!(y.shape, vec![2, kind.classes()]);
+            assert_eq!(y.shape, vec![2, spec.classes()]);
             let dx = m.backward(Tensor::full(&y.shape, 0.1), &ctx);
-            assert_eq!(dx.shape, kind.input().shape(2), "{} {}", kind.id(), policy.name);
+            assert_eq!(dx.shape, spec.input().shape(2), "{} {}", spec.id(), policy.name);
         }
     }
 }

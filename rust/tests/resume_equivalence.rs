@@ -12,8 +12,7 @@
 
 use fp8train::coordinator::{Engine, NativeEngine};
 use fp8train::data::SyntheticDataset;
-use fp8train::nn::models::ModelKind;
-use fp8train::nn::PrecisionPolicy;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::optim::{Adam, Optimizer, Sgd};
 use fp8train::state::StateMap;
 use fp8train::train::{train, LrSchedule, TrainConfig, TrainResult};
@@ -63,16 +62,16 @@ fn assert_curves_identical(a: &TrainResult, b: &TrainResult, what: &str) {
     }
 }
 
-fn check(kind: ModelKind, policy: fn() -> PrecisionPolicy, opt_name: &str) {
+fn check(spec: &ModelSpec, policy: fn() -> PrecisionPolicy, opt_name: &str) {
     let make_engine = || -> NativeEngine {
         let opt: Box<dyn Optimizer> = match opt_name {
             "adam" => Box::new(Adam::new(1e-4, SEED ^ 0x0117)),
             _ => Box::new(Sgd::new(0.9, 1e-4, SEED ^ 0x0117)),
         };
-        NativeEngine::with_optimizer(kind, policy(), opt, SEED)
+        NativeEngine::with_optimizer(spec, policy(), opt, SEED)
     };
-    let what = format!("{}/{}/{}", kind.id(), policy().name, opt_name);
-    let ds = SyntheticDataset::for_model(kind, SEED).with_sizes(32, 16);
+    let what = format!("{}/{}/{}", spec.file_stem(), policy().name, opt_name);
+    let ds = SyntheticDataset::for_model(spec, SEED).with_sizes(32, 16);
     let dir = std::env::temp_dir().join("fp8ck_resume_equivalence");
     std::fs::create_dir_all(&dir).unwrap();
     let ck = dir
@@ -116,42 +115,42 @@ fn check(kind: ModelKind, policy: fn() -> PrecisionPolicy, opt_name: &str) {
 
 #[test]
 fn cifar_cnn_fp32_sgd() {
-    check(ModelKind::CifarCnn, PrecisionPolicy::fp32, "sgd");
+    check(&ModelSpec::cifar_cnn(), PrecisionPolicy::fp32, "sgd");
 }
 
 #[test]
 fn cifar_cnn_fp8_paper_sgd() {
-    check(ModelKind::CifarCnn, PrecisionPolicy::fp8_paper, "sgd");
+    check(&ModelSpec::cifar_cnn(), PrecisionPolicy::fp8_paper, "sgd");
 }
 
 #[test]
 fn bn50_dnn_fp32_sgd() {
-    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp32, "sgd");
+    check(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32, "sgd");
 }
 
 #[test]
 fn bn50_dnn_fp8_paper_sgd() {
-    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper, "sgd");
+    check(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp8_paper, "sgd");
 }
 
 /// Adam coverage (FP16 moments + bias-correction counter survive) on the
 /// cheap MLP — the conv nets are already covered by the SGD configs.
 #[test]
 fn bn50_dnn_fp8_paper_adam() {
-    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp8_paper, "adam");
+    check(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp8_paper, "adam");
 }
 
 #[test]
 fn bn50_dnn_fp32_adam() {
-    check(ModelKind::Bn50Dnn, PrecisionPolicy::fp32, "adam");
+    check(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32, "adam");
 }
 
 /// Negative control: resuming under the wrong policy must be rejected, not
 /// silently diverge.
 #[test]
 fn resume_under_wrong_policy_is_rejected() {
-    let kind = ModelKind::Bn50Dnn;
-    let ds = SyntheticDataset::for_model(kind, SEED).with_sizes(48, 24);
+    let spec = ModelSpec::bn50_dnn();
+    let ds = SyntheticDataset::for_model(&spec, SEED).with_sizes(48, 24);
     let dir = std::env::temp_dir().join("fp8ck_resume_equivalence");
     std::fs::create_dir_all(&dir).unwrap();
     let ck = dir.join("wrong_policy.fp8ck").to_string_lossy().into_owned();
@@ -159,10 +158,10 @@ fn resume_under_wrong_policy_is_rejected() {
     cfg.batch_size = 8;
     cfg.save_every = 2;
     cfg.save_path = Some(ck.clone());
-    let mut e = NativeEngine::new(kind, PrecisionPolicy::fp8_paper(), SEED);
+    let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), SEED);
     train(&mut e, &ds, &cfg);
 
-    let mut wrong = NativeEngine::new(kind, PrecisionPolicy::fp32(), SEED);
+    let mut wrong = NativeEngine::new(&spec, PrecisionPolicy::fp32(), SEED);
     let map = StateMap::load_file(&ck).unwrap();
     let err = wrong.load_state(&map).unwrap_err();
     assert!(err.to_string().contains("engine"), "{err}");

@@ -1,0 +1,400 @@
+//! Bench-report comparison: a zero-dependency JSON reader plus the
+//! per-metric delta logic behind `fp8train bench --compare <old.json>`.
+//!
+//! The repo carries no `serde` (offline, zero external crates), so this
+//! module implements the small JSON subset `BENCH_GEMM.json` needs:
+//! objects, arrays, strings (with escapes), f64 numbers, booleans and
+//! null. On top of it, [`compare`] extracts the tracked throughput
+//! metrics from two reports (schema 3 and 4 share the shapes/scratch/
+//! checkpoint layout) and classifies each delta — the CI bench job runs
+//! this against the committed baseline so the perf trajectory is a
+//! *checked* number, not just an uploaded artifact.
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value (the subset the bench reports use).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing whitespace allowed).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let b = text.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+
+    /// Walk a `.`-separated path of object keys / array indices.
+    pub fn at(&self, path: &str) -> Option<&Json> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = match cur {
+                Json::Obj(m) => m.get(part)?,
+                Json::Arr(a) => a.get(part.parse::<usize>().ok()?)?,
+                _ => return None,
+            };
+        }
+        Some(cur)
+    }
+
+    pub fn num(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn str_val(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut m = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    other => return Err(format!("object key must be a string, got {other:?}")),
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}", pos = *pos));
+                }
+                *pos += 1;
+                m.insert(key, parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(m));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}", pos = *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut a = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(a));
+            }
+            loop {
+                a.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(a));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}", pos = *pos)),
+                }
+            }
+        }
+        Some(b'"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some(b'"') => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    Some(b'\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some(b'"') => s.push('"'),
+                            Some(b'\\') => s.push('\\'),
+                            Some(b'/') => s.push('/'),
+                            Some(b'n') => s.push('\n'),
+                            Some(b't') => s.push('\t'),
+                            Some(b'r') => s.push('\r'),
+                            Some(b'b') => s.push('\u{8}'),
+                            Some(b'f') => s.push('\u{c}'),
+                            Some(b'u') => {
+                                let hex = b
+                                    .get(*pos + 1..*pos + 5)
+                                    .ok_or("truncated \\u escape")?;
+                                let code = u32::from_str_radix(
+                                    std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                                    16,
+                                )
+                                .map_err(|e| e.to_string())?;
+                                // Bench names never contain surrogate
+                                // pairs; map unpaired surrogates to U+FFFD.
+                                s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                                *pos += 4;
+                            }
+                            other => return Err(format!("bad escape {other:?}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(&c) => {
+                        // Copy raw UTF-8 bytes through.
+                        let chunk = b
+                            .get(*pos..*pos + utf8_len(c))
+                            .ok_or("truncated UTF-8 sequence")?;
+                        s.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                        *pos += utf8_len(c);
+                    }
+                }
+            }
+        }
+        Some(b't') => lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => lit(b, pos, "false", Json::Bool(false)),
+        Some(b'n') => lit(b, pos, "null", Json::Null),
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&b[start..*pos]).map_err(|e| e.to_string())?;
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|_| format!("bad number {s:?} at byte {start}"))
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}", pos = *pos))
+    }
+}
+
+/// Direction of a tracked metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    Higher,
+    Lower,
+}
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct Delta {
+    pub name: String,
+    pub old: f64,
+    pub new: f64,
+    pub better: Better,
+}
+
+impl Delta {
+    /// Signed change in percent, oriented so positive = improvement.
+    pub fn improvement_pct(&self) -> f64 {
+        if self.old == 0.0 {
+            return 0.0;
+        }
+        let raw = (self.new - self.old) / self.old * 100.0;
+        match self.better {
+            Better::Higher => raw,
+            Better::Lower => -raw,
+        }
+    }
+
+    /// Regression beyond `threshold_pct`?
+    pub fn regressed(&self, threshold_pct: f64) -> bool {
+        self.improvement_pct() < -threshold_pct
+    }
+}
+
+/// Pull the tracked `(path, direction)` metric set out of one report.
+/// Shared by both sides of the comparison so only mutually-present
+/// metrics are compared (schema drift degrades to a narrower table, not
+/// an error).
+fn metrics(doc: &Json) -> Vec<(String, f64, Better)> {
+    let mut out = Vec::new();
+    if let Some(Json::Arr(shapes)) = doc.at("shapes") {
+        for shape in shapes {
+            let label = shape
+                .at("label")
+                .and_then(Json::str_val)
+                .unwrap_or("?")
+                .to_string();
+            if let Some(Json::Obj(paths)) = shape.at("paths") {
+                for (pname, p) in paths {
+                    if let Some(v) = p.at("gmacs_per_sec").and_then(Json::num) {
+                        out.push((format!("gemm/{label}/{pname} GMAC/s"), v, Better::Higher));
+                    }
+                }
+            }
+        }
+    }
+    if let Some(v) = doc.at("scratch.train_step.mean_ns").and_then(Json::num) {
+        out.push(("train_step mean_ns".into(), v, Better::Lower));
+    }
+    for ck in ["encode", "decode_restore"] {
+        if let Some(v) = doc
+            .at(&format!("checkpoint.paths.{ck}.mb_per_sec"))
+            .and_then(Json::num)
+        {
+            out.push((format!("checkpoint/{ck} MB/s"), v, Better::Higher));
+        }
+    }
+    out
+}
+
+/// Compare two bench reports; returns the per-metric deltas for every
+/// metric present in both (empty when the baseline is a bootstrap stub).
+pub fn compare(old: &Json, new: &Json) -> Vec<Delta> {
+    let old_m: BTreeMap<String, (f64, Better)> = metrics(old)
+        .into_iter()
+        .map(|(n, v, b)| (n, (v, b)))
+        .collect();
+    metrics(new)
+        .into_iter()
+        .filter_map(|(name, new_v, better)| {
+            old_m.get(&name).map(|&(old_v, _)| Delta {
+                name,
+                old: old_v,
+                new: new_v,
+                better,
+            })
+        })
+        .collect()
+}
+
+/// Render the comparison table; returns the regressed metric names
+/// (> `threshold_pct` worse than the baseline).
+pub fn report(deltas: &[Delta], threshold_pct: f64) -> Vec<String> {
+    let mut regressed = Vec::new();
+    println!(
+        "{:<44} {:>14} {:>14} {:>9}",
+        "metric", "baseline", "current", "delta"
+    );
+    for d in deltas {
+        let pct = d.improvement_pct();
+        let flag = if d.regressed(threshold_pct) {
+            regressed.push(d.name.clone());
+            "  REGRESSED"
+        } else {
+            ""
+        };
+        println!(
+            "{:<44} {:>14.4} {:>14.4} {:>+8.1}%{flag}",
+            d.name, d.old, d.new, pct
+        );
+    }
+    regressed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_arrays_objects() {
+        let v = Json::parse(r#"{"a":[1,2.5,-3e2],"b":{"c":"x\n\"y\""},"d":true,"e":null}"#)
+            .unwrap();
+        assert_eq!(v.at("a.1").unwrap().num(), Some(2.5));
+        assert_eq!(v.at("a.2").unwrap().num(), Some(-300.0));
+        assert_eq!(v.at("b.c").unwrap().str_val(), Some("x\n\"y\""));
+        assert_eq!(v.at("d"), Some(&Json::Bool(true)));
+        assert_eq!(v.at("e"), Some(&Json::Null));
+        assert!(v.at("nope").is_none());
+        assert!(v.at("a.9").is_none());
+    }
+
+    #[test]
+    fn parses_unicode_escapes_and_rejects_garbage() {
+        let v = Json::parse(r#"{"s":"Aé"}"#).unwrap();
+        assert_eq!(v.at("s").unwrap().str_val(), Some("Aé"));
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{} x").is_err());
+        assert!(Json::parse(r#"{"a":}"#).is_err());
+        assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn parses_a_real_bench_result_fragment() {
+        // The exact shape bench_util::BenchResult::to_json emits.
+        let frag = r#"{"name":"bench/x/\"odd\"","iters":10,"mean_ns":1500,"p50_ns":1400,"p99_ns":2000,"units_per_iter":1.000000e2,"units_per_sec":6.666667e7}"#;
+        let v = Json::parse(frag).unwrap();
+        assert_eq!(v.at("mean_ns").unwrap().num(), Some(1500.0));
+        assert_eq!(v.at("units_per_sec").unwrap().num(), Some(6.666667e7));
+        assert_eq!(v.at("name").unwrap().str_val(), Some("bench/x/\"odd\""));
+    }
+
+    fn doc(gmacs: f64, step_ns: f64, enc: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"schema":4,"shapes":[{{"label":"sq","m":1,"k":1,"n":1,
+                "paths":{{"fp32":{{"gmacs_per_sec":{gmacs}}}}}}}],
+                "scratch":{{"train_step":{{"mean_ns":{step_ns}}}}},
+                "checkpoint":{{"paths":{{"encode":{{"mb_per_sec":{enc}}}}}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn compare_classifies_improvements_and_regressions() {
+        let old = doc(10.0, 1000.0, 50.0);
+        // GEMM 20% faster, train step 20% slower, encode unchanged.
+        let new = doc(12.0, 1200.0, 50.0);
+        let deltas = compare(&old, &new);
+        assert_eq!(deltas.len(), 3);
+        let by_name = |n: &str| deltas.iter().find(|d| d.name.contains(n)).unwrap();
+        assert!(by_name("gemm").improvement_pct() > 19.0);
+        assert!(!by_name("gemm").regressed(10.0));
+        assert!(by_name("train_step").regressed(10.0));
+        assert!(!by_name("encode").regressed(10.0));
+        // 10% threshold is exclusive: a 5% slip is not a regression.
+        let mild = doc(9.5, 1000.0, 50.0);
+        assert!(!compare(&old, &mild)[0].regressed(10.0));
+    }
+
+    #[test]
+    fn bootstrap_baseline_compares_empty() {
+        let old = Json::parse(r#"{"schema":4,"bootstrap":true}"#).unwrap();
+        let new = doc(10.0, 1000.0, 50.0);
+        assert!(compare(&old, &new).is_empty());
+    }
+}

@@ -73,7 +73,9 @@ impl Engine for NativeEngine {
             self.policy.loss_scale,
         );
         self.model.backward(out.dlogits, &ctx);
-        self.opt.step(&mut self.model, &self.policy, lr, step);
+        crate::perf::timed(crate::perf::Phase::Update, || {
+            self.opt.step(&mut self.model, &self.policy, lr, step)
+        });
         out.loss
     }
 

@@ -33,6 +33,7 @@
 //! and the bench harnesses under `rust/benches/`.
 
 pub mod bench_util;
+pub mod benchcmp;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
@@ -43,6 +44,7 @@ pub mod logging;
 pub mod nn;
 pub mod numerics;
 pub mod optim;
+pub mod perf;
 pub mod runtime;
 pub mod state;
 pub mod tensor;

@@ -4,14 +4,15 @@
 //! fp8train exp <id|all> [--steps N] [--batch N] [--seed S] [--out DIR]
 //! fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
 //!                        [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
-//!                        [--save-every N] [--save PATH]
+//!                        [--save-every N] [--save PATH] [--keep-last K]
 //!     <model> = preset name or model-spec string (docs/model-spec.md)
 //! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
 //! fp8train eval --checkpoint PATH [--batch N]
 //! fp8train checkpoint inspect <path.fp8ck>
 //! fp8train formats                 # print the FP8/FP16 format tables
 //! fp8train artifacts [--dir DIR]   # verify AOT artifacts load & run
-//! fp8train bench [--json PATH] [--fast] [--model M]
+//! fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
+//! fp8train bench compare <old.json> <new.json>
 //! ```
 
 use fp8train::cli::Args;
@@ -35,14 +36,15 @@ USAGE:
       ids: fig1 fig3b table1 fig4 table2 table3 fig5a fig5b fig6 table4 fig7
   fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
                          [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
-                         [--save-every N] [--save PATH] [--verbose]
+                         [--save-every N] [--save PATH] [--keep-last K] [--verbose]
       <model> (or --model M) is a preset name or a model-spec string
       (docs/model-spec.md), e.g.  \"mlp(440,bn:256x3,30)\"  or
       \"conv3x3(16)-res(2x32)-gap-fc(10)\"
       presets:  cifar_cnn cifar_resnet bn50_dnn alexnet resnet18 resnet50
       policies: fp32 fp8_paper fp8_nochunk fp16_acc_nochunk fp16_upd_nearest
                 fp16_upd_stochastic fp8_reps_only dorefa wage dfp16 mpt_fp16 ...
-      --save may contain {step} for periodic retention, e.g. ck_{step}.fp8ck
+      --save may contain {step} for periodic retention, e.g. ck_{step}.fp8ck;
+      --keep-last K prunes older {step}-templated saves after each write
   fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
       continue a checkpointed run bit-exactly (model spec/policy/seed/batch/lr
       are read back from the checkpoint's meta entries; --steps may extend it)
@@ -53,11 +55,16 @@ USAGE:
       validate a checkpoint (magic, version, every CRC) and list its chunks
   fp8train formats
   fp8train artifacts [--dir DIR]
-  fp8train bench [--json PATH] [--fast] [--model M]
+  fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
       GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
-      shapes, native train-step + conv-scratch-arena reuse, and checkpoint
+      shapes, native train-step with per-phase timing (quantize/pack/gemm/
+      update) + scratch-arena and quantized-pack-cache reuse, and checkpoint
       encode/decode throughput; --json writes a machine-readable report
-      (schema 3, default BENCH_GEMM.json)
+      (schema 4, default BENCH_GEMM.json); --compare diffs against an older
+      report and exits non-zero on a >10% regression
+  fp8train bench compare <old.json> <new.json>
+      file-vs-file comparison of two bench reports (no benchmarking);
+      exits non-zero on a >10% regression of any shared throughput metric
 ";
 
 fn main() {
@@ -190,7 +197,7 @@ fn build_native(spec: &RunSpec, policy: PrecisionPolicy) -> Result<NativeEngine>
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "model", "policy", "opt", "engine", "steps", "batch", "seed", "lr", "csv", "verbose",
-        "save-every", "save", "resume",
+        "save-every", "save", "resume", "keep-last",
     ])?;
     let resume = args.opt("resume").map(str::to_string);
     let spec = match &resume {
@@ -234,6 +241,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.verbose = true;
     cfg.save_every = save_every;
     cfg.save_path = save_path;
+    cfg.keep_last = args.opt_usize("keep-last", 0)?;
     cfg.resume = resume;
     cfg.save_meta = spec.to_meta();
 
@@ -390,18 +398,32 @@ const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
     ("square_256", 256, 256, 256),
 ];
 
-/// `fp8train bench [--json PATH] [--fast]` — GEMM throughput for the three
-/// emulation paths at the Fig. 6 shapes, plus checkpoint encode/decode
-/// throughput, optionally as a JSON report so the perf trajectory stays
-/// machine-readable across PRs. Pin `FP8TRAIN_THREADS=1` for stable
-/// single-core numbers.
+/// `fp8train bench [--json PATH] [--fast] [--compare OLD.json]` — GEMM
+/// throughput for the three emulation paths at the Fig. 6 shapes, the
+/// native train step with per-phase timing (quantize/pack/gemm/update),
+/// scratch-arena and quantized-pack cache reuse rates, and checkpoint
+/// encode/decode throughput, optionally as a JSON report (schema 4) so the
+/// perf trajectory stays machine-readable across PRs. `--compare` diffs
+/// the fresh numbers against a previous report and **exits non-zero on a
+/// >10% regression** of any shared throughput metric. Pin
+/// `FP8TRAIN_THREADS=1` for stable single-core numbers.
 fn cmd_bench(args: &Args) -> Result<()> {
     use fp8train::bench_util;
     use fp8train::numerics::gemm::{gemm, num_threads};
     use fp8train::numerics::GemmPrecision;
     use fp8train::tensor::scratch;
 
-    args.check_known(&["json", "fast", "model"])?;
+    args.check_known(&["json", "fast", "model", "compare"])?;
+    // `bench compare <old.json> <new.json>`: pure file-vs-file comparison,
+    // no benchmarking — CI uses this so a bench failure and a compare
+    // regression stay distinguishable exit codes on separate steps.
+    if args.positional.first().map(String::as_str) == Some("compare") {
+        let (old_path, new_path) = match (args.positional.get(1), args.positional.get(2)) {
+            (Some(o), Some(n)) => (o.as_str(), n.as_str()),
+            _ => bail!("usage: fp8train bench compare <old.json> <new.json>"),
+        };
+        return run_bench_compare(old_path, &read_bench_json(new_path)?);
+    }
     if args.flag("fast") {
         std::env::set_var("FP8TRAIN_BENCH_FAST", "1");
     }
@@ -450,14 +472,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let ds = SyntheticDataset::for_model(&spec, 7).with_sizes(64, 32);
     let bench_batch = ds.train_batch(0, 8);
     println!("\n== train_step + scratch arena: {} (batch 8) ==", engine.name());
-    engine.train_step(&bench_batch, 0.02, 0); // warm the arena once
+    engine.train_step(&bench_batch, 0.02, 0); // warm the arena + pack caches once
     scratch::reset_stats();
+    fp8train::tensor::reset_pack_cache_stats();
+    fp8train::perf::reset();
     let mut step = 0u64;
     let r_step = bench_util::run("bench/train_step", None, || {
         step += 1;
         engine.train_step(&bench_batch, 0.02, step)
     });
+    let steps_run = step;
     let sstats = scratch::stats();
+    let phases = fp8train::perf::snapshot();
+    let wstats = fp8train::tensor::pack_cache_stats();
     println!(
         "scratch arena: {} hits / {} misses ({:.1}% reuse, {:.2} MB re-leased)",
         sstats.hits,
@@ -465,6 +492,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
         100.0 * sstats.hit_rate(),
         sstats.bytes_reused as f64 / 1e6
     );
+    println!(
+        "quantized-pack cache: {} lookups, {} builds, {} quantize passes \
+         ({:.1}% of weight-operand lookups served without a build; \
+         {:.2} quantize passes/step)",
+        wstats.lookups,
+        wstats.builds,
+        wstats.quantize_passes,
+        100.0 * wstats.hit_rate(),
+        wstats.quantize_passes as f64 / steps_run.max(1) as f64
+    );
+    {
+        use fp8train::perf::Phase;
+        let per = |p: Phase| phases.ns_of(p) as f64 / steps_run.max(1) as f64 / 1e3;
+        println!(
+            "per-step phases: quantize {:.1}µs | pack {:.1}µs | gemm {:.1}µs | update {:.1}µs",
+            per(Phase::Quantize),
+            per(Phase::Pack),
+            per(Phase::Gemm),
+            per(Phase::Update)
+        );
+    }
     let scratch_doc = format!(
         "{{\"hits\":{},\"misses\":{},\"hit_rate\":{:.4},\"bytes_reused\":{},\"train_step\":{}}}",
         sstats.hits,
@@ -472,6 +520,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
         sstats.hit_rate(),
         sstats.bytes_reused,
         r_step.to_json()
+    );
+    let phases_doc = format!(
+        "{{\"steps\":{steps_run},\"by_phase\":{}}}",
+        phases.to_json(steps_run)
+    );
+    let wcache_doc = format!(
+        "{{\"lookups\":{},\"builds\":{},\"quantize_passes\":{},\"hit_rate\":{:.4}}}",
+        wstats.lookups,
+        wstats.builds,
+        wstats.quantize_passes,
+        wstats.hit_rate()
     );
 
     // Checkpoint state-IO throughput: encode (engine → .fp8ck bytes) and
@@ -502,20 +561,64 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     let doc = format!(
-        "{{\"schema\":3,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
-         \"scratch\":{},\"checkpoint\":{}}}\n",
+        "{{\"schema\":4,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
+         \"scratch\":{},\"phases\":{},\"wcache\":{},\"checkpoint\":{}}}\n",
         num_threads(),
         std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
         spec.id(),
         shape_docs.join(","),
         scratch_doc,
+        phases_doc,
+        wcache_doc,
         checkpoint_doc
     );
-    if let Some(path) = json_path {
-        std::fs::write(&path, &doc).with_context(|| format!("write {path}"))?;
+    if let Some(path) = &json_path {
+        std::fs::write(path, &doc).with_context(|| format!("write {path}"))?;
         println!("\nwrote {path}");
     } else {
         println!("\n{doc}");
+    }
+
+    // --compare OLD.json: per-metric deltas against a previous report;
+    // a >10% regression of any shared throughput metric fails the command.
+    if let Some(base_path) = args.opt("compare") {
+        let new = match fp8train::benchcmp::Json::parse(&doc) {
+            Ok(v) => v,
+            Err(e) => bail!("internal: fresh bench report is not valid JSON: {e}"),
+        };
+        run_bench_compare(base_path, &new)?;
+    }
+    Ok(())
+}
+
+fn read_bench_json(path: &str) -> Result<fp8train::benchcmp::Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read bench report {path}"))?;
+    match fp8train::benchcmp::Json::parse(&text) {
+        Ok(v) => Ok(v),
+        Err(e) => bail!("parse bench report {path}: {e}"),
+    }
+}
+
+/// Diff `new` against the report at `old_path`; exits non-zero (via `Err`)
+/// on a >10% regression of any shared throughput metric.
+fn run_bench_compare(old_path: &str, new: &fp8train::benchcmp::Json) -> Result<()> {
+    use fp8train::benchcmp;
+    let old = read_bench_json(old_path)?;
+    let deltas = benchcmp::compare(&old, new);
+    println!("\n== bench compare vs {old_path} ==");
+    if deltas.is_empty() {
+        println!(
+            "no shared metrics with the baseline (bootstrap stub or schema drift) — \
+             nothing to gate; commit a CI-produced BENCH_GEMM.json to start the trajectory"
+        );
+    } else {
+        let regressed = benchcmp::report(&deltas, 10.0);
+        ensure!(
+            regressed.is_empty(),
+            ">10% bench regression vs {old_path}: {}",
+            regressed.join(", ")
+        );
+        println!("no metric regressed >10% vs {old_path}");
     }
     Ok(())
 }

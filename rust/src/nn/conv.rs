@@ -13,14 +13,23 @@
 //! ```
 //!
 //! Quantization points mirror [`super::linear::Linear`]: activations and
-//! errors are quantized once where they are produced/stored, weights at
-//! GEMM time.
+//! errors are quantized once where they are produced/stored — **fused into
+//! the copy passes that already exist** where that is a win (errors always
+//! fuse into the NCHW→rows repack, which copies each element exactly once;
+//! activations fuse into the im2col lowering only when it replicates each
+//! source element into few patches — dense kernels keep the single
+//! vectorized pre-lowering pass). Both routes are bit-identical
+//! (`docs/perf.md`). Weight operands come from the weight tensor's
+//! version-keyed quantized pack cache (quantized once per update, no
+//! per-GEMM clone). Table 2 baseline schemes keep the explicit two-pass
+//! dataflow.
 
 use super::linear::layer_hash;
 use super::quant::{GemmRole, LayerPos, QuantCtx};
 use super::{Layer, Param};
-use crate::numerics::Xoshiro256;
-use crate::tensor::{col2im, im2col, init, Conv2dGeom, Tensor};
+use crate::numerics::format::NeQuantizer;
+use crate::numerics::{RoundMode, Xoshiro256};
+use crate::tensor::{col2im, im2col, im2col_q, init, scratch, Conv2dGeom, Tensor};
 
 pub struct Conv2d {
     pub w: Param, // [oc, in_c·k·k]
@@ -74,31 +83,52 @@ impl Conv2d {
 /// `[N·oh·ow, oc]` GEMM-output rows → NCHW.
 fn rows_to_nchw(rows: &Tensor, n: usize, oc: usize, oh: usize, ow: usize) -> Tensor {
     let mut out = Tensor::zeros(&[n, oc, oh, ow]);
-    for img in 0..n {
-        for s in 0..oh * ow {
-            let row = (img * oh * ow + s) * oc;
-            for c in 0..oc {
-                out.data[((img * oc) + c) * oh * ow + s] = rows.data[row + c];
+    crate::perf::timed(crate::perf::Phase::Pack, || {
+        for img in 0..n {
+            for s in 0..oh * ow {
+                let row = (img * oh * ow + s) * oc;
+                for c in 0..oc {
+                    out.data[((img * oc) + c) * oh * ow + s] = rows.data[row + c];
+                }
             }
         }
-    }
+    });
     out
 }
 
 /// NCHW → `[N·oh·ow, oc]` rows (adjoint of [`rows_to_nchw`]). The result is
-/// a step-local temporary, so it leases from the scratch arena.
-fn nchw_to_rows(x: &Tensor) -> Tensor {
+/// a step-local temporary, so it leases from the scratch arena. When a
+/// quantizer is supplied, quantization is fused into the repack — each
+/// element is copied exactly once, so this eliminates the separate
+/// full-tensor error-quantize pass for free (bit-identical: elementwise
+/// deterministic quantization commutes with the permutation).
+fn nchw_to_rows_q(x: &Tensor, quant: Option<NeQuantizer>) -> Tensor {
     let (n, oc, oh, ow) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let mut out = Tensor::zeros_pooled(&[n * oh * ow, oc]);
-    for img in 0..n {
-        for s in 0..oh * ow {
-            let row = (img * oh * ow + s) * oc;
-            for c in 0..oc {
-                out.data[row + c] = x.data[((img * oc) + c) * oh * ow + s];
+    crate::perf::timed(crate::perf::Phase::Pack, || {
+        for img in 0..n {
+            for s in 0..oh * ow {
+                let row = (img * oh * ow + s) * oc;
+                match quant {
+                    None => {
+                        for c in 0..oc {
+                            out.data[row + c] = x.data[((img * oc) + c) * oh * ow + s];
+                        }
+                    }
+                    Some(q) => {
+                        for c in 0..oc {
+                            out.data[row + c] = q.quantize(x.data[((img * oc) + c) * oh * ow + s]);
+                        }
+                    }
+                }
             }
         }
-    }
+    });
     out
+}
+
+fn nchw_to_rows(x: &Tensor) -> Tensor {
+    nchw_to_rows_q(x, None)
 }
 
 impl Layer for Conv2d {
@@ -107,25 +137,59 @@ impl Layer for Conv2d {
         let n = x.shape[0];
         let p = ctx.policy;
 
-        // Stored activation: quantize before lowering (padding zeros are
-        // exactly representable, so quantize-then-im2col == im2col-then-
-        // quantize; the former quantizes C·H·W instead of C·k²·oh·ow
-        // values).
-        let mut x_q = x;
-        p.quantize_act(&mut x_q.data, GemmRole::Forward, self.pos);
-        let cols_q = im2col(&x_q, &self.geom);
-
-        let mut w_q = self.w.value.clone();
-        p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
+        // Stored activation. When the lowering replicates each source
+        // element into few patches (1×1 kernels, heavily strided convs),
+        // quantization is fused into the im2col copy pass — eliminating
+        // the separate full-tensor sweep over NCHW. Dense kernels
+        // replicate ~(k/stride)² times, where the fused path would run the
+        // per-element quantizer once per copy; there the single
+        // vectorized `quantize_batch` pass before lowering stays cheaper.
+        // Both routes are bit-identical (padding zeros are exactly
+        // representable and the elementwise quantizer is deterministic,
+        // so every replicated copy quantizes to the same bits —
+        // `fused_im2col_matches_separate_pass` enforces it).
+        let g = self.geom;
+        let low_replication = g.out_h() * g.out_w() * g.k * g.k <= 2 * g.in_h * g.in_w;
+        let cols_q = match p.plain_act_fmt(GemmRole::Forward, self.pos) {
+            Some(fmt) if fmt.is_identity() => im2col(&x, &g),
+            Some(fmt) if low_replication => im2col_q(&x, &g, Some(NeQuantizer::new(fmt))),
+            Some(_) | None => {
+                // Dense kernels and baseline schemes: quantize before
+                // lowering (one pass over C·H·W instead of per-copy work
+                // on C·k²·oh·ow values).
+                let mut x_q = x;
+                p.quantize_act(&mut x_q.data, GemmRole::Forward, self.pos);
+                im2col(&x_q, &g)
+            }
+        };
 
         let prec = p.gemm_for(GemmRole::Forward, self.pos);
+        let seed = ctx.gemm_seed(self.layer_id, GemmRole::Forward);
         // W is stored [oc, in_c·k·k] — already the packed-Bᵀ layout for
-        // Y = Cols·Wᵀ, so the forward GEMM performs no transpose.
-        let mut rows = cols_q.matmul_t(
-            &w_q,
-            &prec,
-            ctx.gemm_seed(self.layer_id, GemmRole::Forward),
-        );
+        // Y = Cols·Wᵀ: no transpose, and the quantized operand comes from
+        // the weight tensor's version-keyed pack cache.
+        let mut rows = match p.plain_weight_fmt(GemmRole::Forward, self.pos) {
+            // Identity formats (fp32 policies): the stored [oc, patch]
+            // data IS the packed operand — no copy, no cache entry.
+            Some(fmt) if fmt.is_identity() => {
+                cols_q.matmul_packed(&self.w.value.data, self.out_c, &prec, seed)
+            }
+            Some(fmt) => {
+                let w_pack = self.w.value.quantized(fmt, RoundMode::NearestEven);
+                cols_q.matmul_packed(&w_pack, self.out_c, &prec, seed)
+            }
+            None => {
+                let mut w_q = self.w.value.clone();
+                p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
+                let rows = cols_q.matmul_t(&w_q, &prec, seed);
+                if ctx.train {
+                    self.w_q = Some(w_q);
+                } else {
+                    w_q.recycle();
+                }
+                rows
+            }
+        };
         if let Some(b) = &self.b {
             rows.add_row(&b.value.data);
         }
@@ -134,14 +198,12 @@ impl Layer for Conv2d {
         rows.recycle();
         if ctx.train {
             self.cols_q = Some(cols_q);
-            self.w_q = Some(w_q);
             self.batch = n;
         } else {
-            // Eval drops the caches immediately — return the big patch
-            // matrix (and the weight copy) to the arena so eval loops
-            // re-lease instead of re-allocating every batch.
+            // Eval drops the cache immediately — return the big patch
+            // matrix to the arena so eval loops re-lease instead of
+            // re-allocating every batch.
             cols_q.recycle();
-            w_q.recycle();
         }
         y
     }
@@ -149,22 +211,51 @@ impl Layer for Conv2d {
     fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor {
         let p = ctx.policy;
         let cols_q = self.cols_q.take().expect("backward before forward");
-        let w_q = self.w_q.take().expect("backward before forward");
         let n = self.batch;
         assert_eq!(dy.shape, self.out_shape(n).to_vec());
 
-        let mut err = nchw_to_rows(&dy); // [N·oh·ow, oc]
+        // Bias gradient in full precision, straight from the raw NCHW
+        // error. Channel-outer loop order keeps every read contiguous (one
+        // `[oh·ow]` plane at a time) while each channel still accumulates
+        // its terms in the exact (image, site) order the old rows-matrix
+        // `sum_rows` used, from a zeroed scratch start — bit-identical.
         if let Some(b) = &mut self.b {
-            for (g, v) in b.grad.data.iter_mut().zip(err.sum_rows()) {
+            let (oc, ohw) = (self.out_c, dy.shape[2] * dy.shape[3]);
+            let mut sums = scratch::take(oc);
+            for (c, acc) in sums.iter_mut().enumerate() {
+                for img in 0..n {
+                    let plane = (img * oc + c) * ohw;
+                    for &v in &dy.data[plane..plane + ohw] {
+                        *acc += v;
+                    }
+                }
+            }
+            for (g, v) in b.grad.data.iter_mut().zip(&sums) {
                 *g += v;
             }
+            scratch::recycle(sums);
         }
-        p.quantize_err(
-            &mut err.data,
-            GemmRole::Backward,
-            self.pos,
-            ctx.gemm_seed(self.layer_id, GemmRole::Backward) ^ 0xE44,
-        );
+
+        // Error rows [N·oh·ow, oc]: quantization fused into the repack —
+        // each element is copied exactly once, so the old separate
+        // full-tensor quantize pass disappears entirely.
+        let err = match p.plain_err_fmt(GemmRole::Backward, self.pos) {
+            Some(fmt) => {
+                let q = (!fmt.is_identity()).then(|| NeQuantizer::new(fmt));
+                nchw_to_rows_q(&dy, q)
+            }
+            None => {
+                let mut err = nchw_to_rows(&dy);
+                p.quantize_err(
+                    &mut err.data,
+                    GemmRole::Backward,
+                    self.pos,
+                    ctx.gemm_seed(self.layer_id, GemmRole::Backward) ^ 0xE44,
+                );
+                err
+            }
+        };
+        dy.recycle();
 
         if self.capture {
             self.captured = Some((err.clone(), cols_q.clone()));
@@ -183,19 +274,33 @@ impl Layer for Conv2d {
         self.w.grad.add_assign(&dw);
         dw.recycle();
 
-        // Backward GEMM: dCols = err · Wq, then col2im scatter.
+        // Backward GEMM: dCols = err · Wq, then col2im scatter. The weight
+        // operand is the stored (Forward-format) quantized copy, served
+        // from the cache in its transposed packed form.
         let prec_b = p.gemm_for(GemmRole::Backward, self.pos);
-        let dcols = err.matmul(
-            &w_q,
-            &prec_b,
-            ctx.gemm_seed(self.layer_id, GemmRole::Backward),
-        );
+        let seed_b = ctx.gemm_seed(self.layer_id, GemmRole::Backward);
+        let dcols = match p.plain_weight_fmt(GemmRole::Forward, self.pos) {
+            // Identity formats: the plain transpose cache suffices.
+            Some(fmt) if fmt.is_identity() => {
+                let w_pack = self.w.value.packed_t();
+                err.matmul_packed(&w_pack, self.geom.patch_len(), &prec_b, seed_b)
+            }
+            Some(fmt) => {
+                let w_pack = self.w.value.quantized_t(fmt, RoundMode::NearestEven);
+                err.matmul_packed(&w_pack, self.geom.patch_len(), &prec_b, seed_b)
+            }
+            None => {
+                let w_q = self.w_q.take().expect("backward before forward");
+                let dcols = err.matmul(&w_q, &prec_b, seed_b);
+                w_q.recycle();
+                dcols
+            }
+        };
         let dx = col2im(&dcols, &self.geom, n);
         // Everything whose lifetime ended this step goes back to the arena.
         dcols.recycle();
         err.recycle();
         cols_q.recycle();
-        w_q.recycle();
         dx
     }
 
@@ -319,6 +424,111 @@ mod tests {
                 dw.data[i]
             );
         }
+    }
+
+    #[test]
+    fn fused_cached_dataflow_matches_explicit_two_pass() {
+        // The quantize-on-pack pipeline (fused im2col / fused error repack /
+        // cached quantized weight packs) vs the pre-refactor explicit
+        // dataflow (quantize full tensors separately, clone the weight per
+        // GEMM): every output, gradient and stored operand bit-identical.
+        for policy in [PrecisionPolicy::fp8_paper(), PrecisionPolicy::fp32()] {
+            let ctx = QuantCtx::new(&policy, 3, true);
+            let g = small_geom();
+            let pos = LayerPos::Middle;
+            let mut rng = Xoshiro256::seed_from_u64(8);
+            let mut conv = Conv2d::new("c1", g, 4, pos, true, &mut rng);
+            let n = 2;
+            let x = Tensor::from_vec(
+                &[n, 2, 5, 5],
+                (0..n * 2 * 5 * 5).map(|i| (i as f32 - 25.0) * 0.037).collect(),
+            );
+            let dy = Tensor::from_vec(
+                &[n, 4, 5, 5],
+                (0..n * 4 * 5 * 5)
+                    .map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.21)
+                    .collect(),
+            );
+
+            let y = conv.forward(x.clone(), &ctx);
+            let dx = conv.backward(dy.clone(), &ctx);
+            let id = layer_hash("c1");
+
+            // --- the explicit (pre-refactor) dataflow ---
+            let p = &policy;
+            let mut x_q = x;
+            p.quantize_act(&mut x_q.data, GemmRole::Forward, pos);
+            let cols_q = im2col(&x_q, &g);
+            let mut w_q = conv.w.value.clone();
+            p.quantize_weight(&mut w_q.data, GemmRole::Forward, pos);
+            let prec = p.gemm_for(GemmRole::Forward, pos);
+            let mut rows = cols_q.matmul_t(&w_q, &prec, ctx.gemm_seed(id, GemmRole::Forward));
+            rows.add_row(&conv.b.as_ref().unwrap().value.data);
+            let y_ref = rows_to_nchw(&rows, n, 4, 5, 5);
+            assert_eq!(y, y_ref, "{} forward", policy.name);
+
+            let mut err = nchw_to_rows(&dy);
+            let bias_ref = err.sum_rows();
+            p.quantize_err(
+                &mut err.data,
+                GemmRole::Backward,
+                pos,
+                ctx.gemm_seed(id, GemmRole::Backward) ^ 0xE44,
+            );
+            let prec_g = p.gemm_for(GemmRole::Gradient, pos);
+            let dw_ref = err
+                .t()
+                .matmul(&cols_q, &prec_g, ctx.gemm_seed(id, GemmRole::Gradient));
+            assert_eq!(conv.w.grad, dw_ref, "{} dW", policy.name);
+            assert_eq!(
+                conv.b.as_ref().unwrap().grad.data,
+                bias_ref,
+                "{} db",
+                policy.name
+            );
+            let prec_b = p.gemm_for(GemmRole::Backward, pos);
+            let dcols = err.matmul(&w_q, &prec_b, ctx.gemm_seed(id, GemmRole::Backward));
+            let dx_ref = col2im(&dcols, &g, n);
+            assert_eq!(dx, dx_ref, "{} dX", policy.name);
+        }
+    }
+
+    #[test]
+    fn low_replication_fused_im2col_path_matches_explicit() {
+        // 1×1 kernel (replication factor 1): the layer takes the fused
+        // quantize-on-lower route; outputs must equal the explicit
+        // quantize-then-lower dataflow bitwise.
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 1, true);
+        let g = Conv2dGeom {
+            in_c: 3,
+            in_h: 4,
+            in_w: 4,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let mut conv = Conv2d::new("cp", g, 5, LayerPos::Middle, false, &mut rng);
+        let x = Tensor::from_vec(
+            &[2, 3, 4, 4],
+            (0..96).map(|i| (i as f32 - 48.0) * 0.083).collect(),
+        );
+        let y = conv.forward(x.clone(), &ctx);
+
+        let mut x_q = x;
+        policy.quantize_act(&mut x_q.data, GemmRole::Forward, LayerPos::Middle);
+        let cols = im2col(&x_q, &g);
+        let mut w_q = conv.w.value.clone();
+        policy.quantize_weight(&mut w_q.data, GemmRole::Forward, LayerPos::Middle);
+        let prec = policy.gemm_for(GemmRole::Forward, LayerPos::Middle);
+        let rows = cols.matmul_t(
+            &w_q,
+            &prec,
+            ctx.gemm_seed(layer_hash("cp"), GemmRole::Forward),
+        );
+        let y_ref = rows_to_nchw(&rows, 2, 5, 4, 4);
+        assert_eq!(y, y_ref);
     }
 
     #[test]

@@ -13,12 +13,16 @@
 //! when produced (stored in FP8) and that same stored value feeds both the
 //! Forward and Gradient GEMMs; likewise the error tensor is quantized once
 //! and feeds both Backward and Gradient GEMMs. Weights live in the master
-//! format (FP16 under the paper's scheme) and are re-quantized to FP8 at
-//! GEMM time.
+//! format (FP16 under the paper's scheme); their FP8 GEMM operands come
+//! from the version-keyed **quantized pack cache** on the weight tensor
+//! (`Tensor::quantized`/`quantized_t`, `docs/perf.md`) — quantized once per
+//! weight update and shared by the Forward and Backward GEMMs, with no
+//! per-GEMM clone. Table 2 baseline schemes (custom quantizers) keep the
+//! explicit clone-and-quantize dataflow.
 
 use super::quant::{GemmRole, LayerPos, QuantCtx};
 use super::{Layer, Param};
-use crate::numerics::Xoshiro256;
+use crate::numerics::{RoundMode, Xoshiro256};
 use crate::tensor::{init, Tensor};
 
 pub struct Linear {
@@ -28,7 +32,8 @@ pub struct Linear {
     layer_id: u64,
     in_dim: usize,
     out_dim: usize,
-    // caches for backward
+    // caches for backward: the stored activation, and (baseline schemes
+    // only) the scheme-quantized weight copy.
     x_q: Option<Tensor>,
     w_q: Option<Tensor>,
 }
@@ -71,23 +76,43 @@ impl Layer for Linear {
         assert_eq!(x.shape[1], self.in_dim);
         let p = ctx.policy;
 
-        // Quantize the stored representations once (nearest — conversions
-        // in the paper's data path use nearest; SR is reserved for updates).
+        // Quantize the stored activation once (nearest — conversions in
+        // the paper's data path use nearest; SR is reserved for updates).
         let mut x_q = x;
         p.quantize_act(&mut x_q.data, GemmRole::Forward, self.pos);
-        let mut w_q = self.w.value.clone();
-        p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
 
         let prec = p.gemm_for(GemmRole::Forward, self.pos);
+        let seed = ctx.gemm_seed(self.layer_id, GemmRole::Forward);
         // W is stored [out, in] — exactly the packed-Bᵀ layout the GEMM
-        // consumes for Y = X·Wᵀ, so the forward pass performs no transpose.
-        let mut y = x_q.matmul_t(&w_q, &prec, ctx.gemm_seed(self.layer_id, GemmRole::Forward));
+        // consumes for Y = X·Wᵀ, so the forward pass performs no transpose;
+        // the quantized operand comes straight from the weight tensor's
+        // version-keyed pack cache (no clone, quantized once per update).
+        let mut y = match p.plain_weight_fmt(GemmRole::Forward, self.pos) {
+            // Identity formats (fp32 policies): the stored [out, in] data
+            // IS the packed operand — no copy, no cache entry.
+            Some(fmt) if fmt.is_identity() => {
+                x_q.matmul_packed(&self.w.value.data, self.out_dim, &prec, seed)
+            }
+            Some(fmt) => {
+                let w_pack = self.w.value.quantized(fmt, RoundMode::NearestEven);
+                x_q.matmul_packed(&w_pack, self.out_dim, &prec, seed)
+            }
+            None => {
+                // Baseline schemes: explicit clone + custom quantizer.
+                let mut w_q = self.w.value.clone();
+                p.quantize_weight(&mut w_q.data, GemmRole::Forward, self.pos);
+                let y = x_q.matmul_t(&w_q, &prec, seed);
+                if ctx.train {
+                    self.w_q = Some(w_q);
+                }
+                y
+            }
+        };
         if let Some(b) = &self.b {
             y.add_row(&b.value.data);
         }
         if ctx.train {
             self.x_q = Some(x_q);
-            self.w_q = Some(w_q);
         }
         y
     }
@@ -95,7 +120,6 @@ impl Layer for Linear {
     fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor {
         let p = ctx.policy;
         let x_q = self.x_q.take().expect("backward before forward");
-        let w_q = self.w_q.take().expect("backward before forward");
         let n = dy.shape[0];
         assert_eq!(dy.shape, vec![n, self.out_dim]);
 
@@ -115,16 +139,41 @@ impl Layer for Linear {
             ctx.gemm_seed(self.layer_id, GemmRole::Backward) ^ 0xE44,
         );
 
-        // Gradient GEMM: dW = errᵀ · Xq, K = batch dimension.
+        // Gradient GEMM: dW = errᵀ · Xq, K = batch dimension. The
+        // transposed error operand and the gradient are step-local
+        // temporaries → scratch arena.
         let prec_g = p.gemm_for(GemmRole::Gradient, self.pos);
-        let dw = err
-            .t()
-            .matmul(&x_q, &prec_g, ctx.gemm_seed(self.layer_id, GemmRole::Gradient));
+        let err_t = err.t_pooled();
+        let dw = err_t.matmul(&x_q, &prec_g, ctx.gemm_seed(self.layer_id, GemmRole::Gradient));
+        err_t.recycle();
         self.w.grad.add_assign(&dw);
+        dw.recycle();
+        x_q.recycle();
 
-        // Backward GEMM: dX = err · Wq.
+        // Backward GEMM: dX = err · Wq. The weight operand is the same
+        // stored (Forward-format) quantized copy the forward pass used —
+        // served from the cache in its transposed packed form.
         let prec_b = p.gemm_for(GemmRole::Backward, self.pos);
-        err.matmul(&w_q, &prec_b, ctx.gemm_seed(self.layer_id, GemmRole::Backward))
+        let seed_b = ctx.gemm_seed(self.layer_id, GemmRole::Backward);
+        let dx = match p.plain_weight_fmt(GemmRole::Forward, self.pos) {
+            // Identity formats: the plain transpose cache suffices.
+            Some(fmt) if fmt.is_identity() => {
+                let w_pack = self.w.value.packed_t();
+                err.matmul_packed(&w_pack, self.in_dim, &prec_b, seed_b)
+            }
+            Some(fmt) => {
+                let w_pack = self.w.value.quantized_t(fmt, RoundMode::NearestEven);
+                err.matmul_packed(&w_pack, self.in_dim, &prec_b, seed_b)
+            }
+            None => {
+                let w_q = self.w_q.take().expect("backward before forward");
+                let dx = err.matmul(&w_q, &prec_b, seed_b);
+                w_q.recycle();
+                dx
+            }
+        };
+        err.recycle();
+        dx
     }
 
     fn visit_params(&mut self, f: &mut dyn FnMut(&mut Param)) {
@@ -222,6 +271,65 @@ mod tests {
         l.backward(dy, &ctx);
         for (a, b) in l.w.grad.data.iter().zip(&g1) {
             assert!((a - 2.0 * b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cached_weight_pack_dataflow_matches_explicit_clone() {
+        // The cached quantized-pack dataflow vs the pre-refactor explicit
+        // clone-and-quantize dataflow — outputs, dX and dW bit-identical,
+        // across two consecutive steps (the second step exercises
+        // post-mutation cache rebuilds after the direct weight write).
+        for policy in [PrecisionPolicy::fp8_paper(), PrecisionPolicy::fp32()] {
+            let mut rng = Xoshiro256::seed_from_u64(12);
+            let mut l = Linear::new("fc", 6, 4, LayerPos::Middle, &mut rng);
+            let id = layer_hash("fc");
+            for step in 0..2u64 {
+                let ctx = QuantCtx::new(&policy, step, true);
+                let x = Tensor::from_vec(
+                    &[3, 6],
+                    (0..18).map(|i| (i as f32 - 9.0) * 0.173).collect(),
+                );
+                let dy = Tensor::from_vec(
+                    &[3, 4],
+                    (0..12).map(|i| ((i * 5 % 7) as f32 - 3.0) * 0.31).collect(),
+                );
+                l.visit_params(&mut |p| p.zero_grad());
+                let y = l.forward(x.clone(), &ctx);
+                let dx = l.backward(dy.clone(), &ctx);
+
+                // --- the explicit (pre-refactor) dataflow ---
+                let p = &policy;
+                let mut x_q = x;
+                p.quantize_act(&mut x_q.data, GemmRole::Forward, LayerPos::Middle);
+                let mut w_q = l.w.value.clone();
+                p.quantize_weight(&mut w_q.data, GemmRole::Forward, LayerPos::Middle);
+                let prec = p.gemm_for(GemmRole::Forward, LayerPos::Middle);
+                let mut y_ref = x_q.matmul_t(&w_q, &prec, ctx.gemm_seed(id, GemmRole::Forward));
+                y_ref.add_row(&l.b.as_ref().unwrap().value.data);
+                assert_eq!(y, y_ref, "{} step {step} forward", policy.name);
+
+                let mut err = dy;
+                p.quantize_err(
+                    &mut err.data,
+                    GemmRole::Backward,
+                    LayerPos::Middle,
+                    ctx.gemm_seed(id, GemmRole::Backward) ^ 0xE44,
+                );
+                let prec_g = p.gemm_for(GemmRole::Gradient, LayerPos::Middle);
+                let dw_ref = err
+                    .t()
+                    .matmul(&x_q, &prec_g, ctx.gemm_seed(id, GemmRole::Gradient));
+                assert_eq!(l.w.grad, dw_ref, "{} step {step} dW", policy.name);
+                let prec_b = p.gemm_for(GemmRole::Backward, LayerPos::Middle);
+                let dx_ref = err.matmul(&w_q, &prec_b, ctx.gemm_seed(id, GemmRole::Backward));
+                assert_eq!(dx, dx_ref, "{} step {step} dX", policy.name);
+
+                // Mutate the master weight between steps (as the update
+                // AXPY would) so step 1 must rebuild every cached pack.
+                l.w.value.data[0] += 0.5;
+                l.w.value.mark_mutated();
+            }
         }
     }
 

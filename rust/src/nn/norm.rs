@@ -11,7 +11,7 @@
 use super::quant::QuantCtx;
 use super::{Layer, Param};
 use crate::state::{self, StateError, StateMap};
-use crate::tensor::Tensor;
+use crate::tensor::{scratch, Tensor};
 
 pub struct BatchNorm {
     pub gamma: Param,
@@ -98,13 +98,18 @@ impl Layer for BatchNorm {
         }
         let m = self.count_per_channel(&shape);
 
+        // The per-channel reduction vectors and the normalized-activation
+        // cache are step-local recurring temporaries → scratch arena
+        // (leases are zero-filled, so results are bit-identical to fresh
+        // allocations — the ROADMAP "extend the arena to the BN scratch
+        // vectors" lever).
         let (mean, var) = if ctx.train {
-            let mut mean = vec![0f32; c];
+            let mut mean = scratch::take(c);
             self.for_each(&shape, |ch, i| mean[ch] += x.data[i]);
             for v in &mut mean {
                 *v /= m;
             }
-            let mut var = vec![0f32; c];
+            let mut var = scratch::take(c);
             self.for_each(&shape, |ch, i| {
                 let d = x.data[i] - mean[ch];
                 var[ch] += d * d;
@@ -120,21 +125,33 @@ impl Layer for BatchNorm {
             }
             (mean, var)
         } else {
-            (self.running_mean.clone(), self.running_var.clone())
+            let mut mean = scratch::take(c);
+            mean.copy_from_slice(&self.running_mean);
+            let mut var = scratch::take(c);
+            var.copy_from_slice(&self.running_var);
+            (mean, var)
         };
 
-        let inv_std: Vec<f32> = var.iter().map(|&v| 1.0 / (v + self.eps).sqrt()).collect();
-        let mut x_hat = vec![0f32; x.len()];
+        let mut inv_std = scratch::take(c);
+        for (o, &v) in inv_std.iter_mut().zip(&var) {
+            *o = 1.0 / (v + self.eps).sqrt();
+        }
+        let mut x_hat = scratch::take(x.len());
         let (g, b) = (&self.gamma.value.data, &self.beta.value.data);
         self.for_each(&shape, |ch, i| {
             let h = (x.data[i] - mean[ch]) * inv_std[ch];
             x_hat[i] = h;
             x.data[i] = g[ch] * h + b[ch];
         });
+        scratch::recycle(mean);
+        scratch::recycle(var);
         if ctx.train {
-            self.x_hat = x_hat;
-            self.inv_std = inv_std;
+            scratch::recycle(std::mem::replace(&mut self.x_hat, x_hat));
+            scratch::recycle(std::mem::replace(&mut self.inv_std, inv_std));
             self.in_shape = shape;
+        } else {
+            scratch::recycle(x_hat);
+            scratch::recycle(inv_std);
         }
         x
     }
@@ -145,9 +162,9 @@ impl Layer for BatchNorm {
         let c = self.channels;
         let m = self.count_per_channel(&shape);
 
-        // Per-channel reductions: Σdy and Σdy·x̂.
-        let mut sum_dy = vec![0f32; c];
-        let mut sum_dyh = vec![0f32; c];
+        // Per-channel reductions: Σdy and Σdy·x̂ (arena-leased, zeroed).
+        let mut sum_dy = scratch::take(c);
+        let mut sum_dyh = scratch::take(c);
         self.for_each(&shape, |ch, i| {
             sum_dy[ch] += dy.data[i];
             sum_dyh[ch] += dy.data[i] * self.x_hat[i];
@@ -165,6 +182,11 @@ impl Layer for BatchNorm {
             dy.data[i] = g[ch] * inv_std[ch] / m
                 * (m * dy.data[i] - sum_dy[ch] - x_hat[i] * sum_dyh[ch]);
         });
+        scratch::recycle(sum_dy);
+        scratch::recycle(sum_dyh);
+        // The forward caches' lifetime ends here — back to the arena.
+        scratch::recycle(std::mem::take(&mut self.x_hat));
+        scratch::recycle(std::mem::take(&mut self.inv_std));
         dy
     }
 

@@ -251,38 +251,74 @@ impl PrecisionPolicy {
     }
 
     /// Quantize a *stored activation* tensor (data operand) in place.
+    /// Wall time lands in the `quantize` phase of [`crate::perf`].
     pub fn quantize_act(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos) {
-        match self.baseline {
+        crate::perf::timed(crate::perf::Phase::Quantize, || match self.baseline {
             // Baselines keep first/last layers full precision ([23], [3] —
             // see §4.1's discussion of this convention).
             Some(s) if pos == LayerPos::Middle => s.quantize_act(xs),
             Some(_) => {}
             None => self
                 .act_fmt(role, pos)
-                .quantize_slice(xs, RoundMode::NearestEven),
-        }
+                .quantize_batch(xs, RoundMode::NearestEven),
+        })
     }
 
-    /// Quantize a weight tensor in place at GEMM time.
+    /// Quantize a weight tensor in place at GEMM time. (The hot layers no
+    /// longer call this per GEMM — weight operands come from the
+    /// version-keyed quantized-pack cache, see `docs/perf.md` — but
+    /// baseline schemes and experiment harnesses still route through it.)
     pub fn quantize_weight(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos) {
-        match self.baseline {
+        crate::perf::timed(crate::perf::Phase::Quantize, || match self.baseline {
             Some(s) if pos == LayerPos::Middle => s.quantize_weight(xs),
             Some(_) => {}
             None => self
                 .weight_fmt(role, pos)
-                .quantize_slice(xs, RoundMode::NearestEven),
-        }
+                .quantize_batch(xs, RoundMode::NearestEven),
+        })
     }
 
     /// Quantize a stored error tensor in place (`seed` drives the
     /// stochastic baseline gradient quantizers).
     pub fn quantize_err(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos, seed: u64) {
-        match self.baseline {
+        crate::perf::timed(crate::perf::Phase::Quantize, || match self.baseline {
             Some(s) if pos == LayerPos::Middle => s.quantize_err(xs, seed),
             Some(_) => {}
             None => self
                 .err_fmt(role, pos)
-                .quantize_slice(xs, RoundMode::NearestEven),
+                .quantize_batch(xs, RoundMode::NearestEven),
+        })
+    }
+
+    /// The data-path quantizer for a stored tensor **when it is a plain
+    /// single-format nearest-even pass** — the condition for the fused /
+    /// cached operand-preparation fast paths (`docs/perf.md`). Table 2
+    /// baseline schemes return `None` (their custom quantizers are neither
+    /// cacheable by format key nor fusable into copy passes) and the layer
+    /// falls back to the explicit clone-and-quantize dataflow.
+    #[inline]
+    pub fn plain_act_fmt(&self, role: GemmRole, pos: LayerPos) -> Option<FloatFormat> {
+        match self.baseline {
+            Some(_) => None,
+            None => Some(self.act_fmt(role, pos)),
+        }
+    }
+
+    /// [`plain_act_fmt`](Self::plain_act_fmt) for the weight operand.
+    #[inline]
+    pub fn plain_weight_fmt(&self, role: GemmRole, pos: LayerPos) -> Option<FloatFormat> {
+        match self.baseline {
+            Some(_) => None,
+            None => Some(self.weight_fmt(role, pos)),
+        }
+    }
+
+    /// [`plain_act_fmt`](Self::plain_act_fmt) for the error operand.
+    #[inline]
+    pub fn plain_err_fmt(&self, role: GemmRole, pos: LayerPos) -> Option<FloatFormat> {
+        match self.baseline {
+            Some(_) => None,
+            None => Some(self.err_fmt(role, pos)),
         }
     }
 

@@ -194,6 +194,45 @@ pub(crate) fn dot_f32_strip(
     }
 }
 
+/// Lane-preserving strip accumulator for the K-blocked f32 kernel:
+/// like [`dot_f32_strip`], but instead of finalizing each column it adds
+/// the segment's products into four **caller-held lanes per column**
+/// (`lanes[4c + l]` = lane `l` of strip column `c`), so a row's K axis can
+/// be walked in blocks while reproducing `dot_f32`'s per-lane addition
+/// sequence exactly. `a.len()` must be a multiple of 4 (callers align
+/// blocks to the unroll; the global `k % 4` tail is folded in after the
+/// final lane combine).
+#[inline]
+pub(crate) fn dot_f32_strip_acc(
+    a: &[f32],
+    bt: &[f32],
+    col0: usize,
+    stride: usize,
+    off: usize,
+    w: usize,
+    lanes: &mut [f32],
+) {
+    debug_assert!(a.len() % 4 == 0);
+    debug_assert!(w >= 1 && w <= NR);
+    debug_assert_eq!(lanes.len(), 4 * w);
+    debug_assert!(off + a.len() <= stride);
+    debug_assert!((col0 + w) * stride <= bt.len());
+    let len = a.len();
+    let mut i = 0;
+    while i < len {
+        let (a0, a1, a2, a3) = (a[i], a[i + 1], a[i + 2], a[i + 3]);
+        for c in 0..w {
+            let cb = (col0 + c) * stride + off + i;
+            let l = &mut lanes[4 * c..4 * c + 4];
+            l[0] += a0 * bt[cb];
+            l[1] += a1 * bt[cb + 1];
+            l[2] += a2 * bt[cb + 2];
+            l[3] += a3 * bt[cb + 3];
+        }
+        i += 4;
+    }
+}
+
 impl GemmPrecision {
     /// SR bit draws the fast emulated path consumes per output element:
     /// one for the per-chunk partial quantization plus one for the
@@ -348,6 +387,53 @@ mod tests {
                         want.to_bits(),
                         "len={len} w={w} c={c}: {} vs {want}",
                         out[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strip_acc_blocked_matches_dot_f32_bitwise() {
+        // Walking K in 4-aligned blocks with persistent lanes, then
+        // combining + tail, must reproduce dot_f32 exactly — for every
+        // tail length and strip width.
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        for len in [0usize, 3, 4, 7, 8, 12, 19, 64, 67, 130] {
+            let stride = len + 2;
+            let a: Vec<f32> = (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let ncols = NR + 1;
+            let bt: Vec<f32> = (0..ncols * stride).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let n4 = len & !3;
+            for w in 1..=NR.min(ncols) {
+                let mut lanes = vec![0f32; 4 * w];
+                // Deliberately uneven 4-aligned block splits.
+                let mut k0 = 0;
+                for block in [8usize, 4, 16, usize::MAX] {
+                    if k0 >= n4 {
+                        break;
+                    }
+                    let k1 = (k0.saturating_add(block)).min(n4);
+                    dot_f32_strip_acc(&a[k0..k1], &bt, 0, stride, k0, w, &mut lanes);
+                    k0 = k1;
+                }
+                while k0 < n4 {
+                    let k1 = (k0 + 4).min(n4);
+                    dot_f32_strip_acc(&a[k0..k1], &bt, 0, stride, k0, w, &mut lanes);
+                    k0 = k1;
+                }
+                for c in 0..w {
+                    let l = &lanes[4 * c..4 * c + 4];
+                    let mut acc = (l[0] + l[1]) + (l[2] + l[3]);
+                    let cb = c * stride;
+                    for p in n4..len {
+                        acc += a[p] * bt[cb + p];
+                    }
+                    let want = dot_f32(&a, &bt[cb..cb + len]);
+                    assert_eq!(
+                        acc.to_bits(),
+                        want.to_bits(),
+                        "len={len} w={w} c={c}: {acc} vs {want}"
                     );
                 }
             }

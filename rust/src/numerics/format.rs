@@ -99,6 +99,13 @@ impl FloatFormat {
         1 + self.ebits + self.mbits
     }
 
+    /// Is quantizing to this format the identity on every f32 (FP32 or
+    /// wider)? Callers use this to skip copies/passes entirely.
+    #[inline]
+    pub const fn is_identity(self) -> bool {
+        self.mbits >= 23 && self.ebits >= 8
+    }
+
     /// The swamping threshold of §2.3: once two addends' magnitudes differ
     /// by ≥ `2^(mbits+1)`, the smaller is entirely truncated by alignment.
     #[inline]
@@ -295,33 +302,63 @@ impl FloatFormat {
         x.is_nan() || self.quantize(x, RoundMode::Truncate) == x
     }
 
-    /// Quantize a slice in place (deterministic modes).
+    /// Quantize a slice in place (deterministic modes). Alias of
+    /// [`quantize_batch`](Self::quantize_batch), kept as the historical
+    /// call-site name.
+    #[inline]
+    pub fn quantize_slice(self, xs: &mut [f32], mode: RoundMode) {
+        self.quantize_batch(xs, mode);
+    }
+
+    /// Quantize a slice in place with a deterministic mode — the
+    /// batch-shaped quantizer of the operand-preparation pipeline
+    /// (`docs/perf.md`).
     ///
     /// Nearest-even (the data-path conversion mode, applied to every stored
-    /// activation/weight/error tensor each step) takes a branch-hoisted
-    /// slice loop: format constants are computed once and each in-range
-    /// element runs the straight-line add-half-ulp bit trick, with the rare
-    /// specials (NaN/Inf, target-subnormal range) falling through to the
-    /// general path. Bit-identical to per-element [`quantize`](Self::quantize).
-    pub fn quantize_slice(self, xs: &mut [f32], mode: RoundMode) {
-        if self.mbits >= 23 && self.ebits >= 8 {
+    /// activation/weight/error tensor each step) runs a **branchless,
+    /// unrolled** core: format constants are hoisted, and every element of
+    /// a 64-wide chunk unconditionally executes the straight-line
+    /// add-half-ulp bit trick (pure u32 arithmetic — no data-dependent
+    /// branches, so LLVM auto-vectorizes the loop). Elements the trick does
+    /// not cover (NaN/Inf, the target's subnormal range, f32 subnormals)
+    /// are *flagged* into a per-chunk bitmask and patched afterwards from
+    /// their stashed original bits via the scalar quantizer — rare in
+    /// training tensors, so the fix-up loop almost never runs.
+    ///
+    /// Bit-identical to per-element
+    /// [`quantize_with_bits`](Self::quantize_with_bits) for every input,
+    /// enforced by `quantize_batch_matches_scalar_for_any_format` and the
+    /// property suite in `rust/tests/properties.rs`.
+    pub fn quantize_batch(self, xs: &mut [f32], mode: RoundMode) {
+        debug_assert!(
+            !mode.is_stochastic(),
+            "stochastic rounding needs a bit source; use quantize_batch_rng"
+        );
+        if self.is_identity() {
             return; // fp32 (or wider): identity
         }
         if matches!(mode, RoundMode::NearestEven) && self.mbits < 23 {
-            let shift = 23 - self.mbits;
-            let emin = self.emin();
-            let max_bits = self.max_normal().to_bits();
-            let half = (1u32 << (shift - 1)) - 1;
-            let keep_mask = !((1u32 << shift) - 1);
-            for v in xs.iter_mut() {
-                let u = v.to_bits();
-                let e_field = (u >> 23) & 0xFF;
-                if e_field != 0 && e_field != 0xFF && (e_field as i32 - 127) >= emin {
-                    let round = ((u >> shift) & 1) + half;
-                    let q = (((u & 0x7FFF_FFFF) + round) & keep_mask).min(max_bits);
-                    *v = f32::from_bits((u & 0x8000_0000) | q);
-                } else {
-                    *v = self.quantize_with_bits(*v, RoundMode::NearestEven, 0);
+            let q = NeQuantizer::new(self);
+            const QB: usize = 64;
+            let mut orig = [0u32; QB];
+            for chunk in xs.chunks_mut(QB) {
+                let mut fixups = 0u64;
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    let u = v.to_bits();
+                    orig[i] = u;
+                    // Unconditional fast-path compute; the in-range test
+                    // only feeds the fix-up mask.
+                    *v = f32::from_bits(q.fast_bits(u));
+                    fixups |= (!q.in_range(u) as u64) << i;
+                }
+                while fixups != 0 {
+                    let i = fixups.trailing_zeros() as usize;
+                    chunk[i] = self.quantize_with_bits(
+                        f32::from_bits(orig[i]),
+                        RoundMode::NearestEven,
+                        0,
+                    );
+                    fixups &= fixups - 1;
                 }
             }
             return;
@@ -335,9 +372,22 @@ impl FloatFormat {
     ///
     /// SR bits are drawn in fixed-size batches — one `u32` per element, in
     /// slice order, so the stream consumption is identical to the scalar
-    /// loop it replaces.
+    /// loop it replaces. Alias of
+    /// [`quantize_batch_rng`](Self::quantize_batch_rng).
+    #[inline]
     pub fn quantize_slice_rng<R: RoundBits>(self, xs: &mut [f32], mode: RoundMode, rng: &mut R) {
+        self.quantize_batch_rng(xs, mode, rng);
+    }
+
+    /// Batch quantizer with a stochastic bit source: SR draws one `u32` per
+    /// element in slice order (stream-order identical to the scalar loop);
+    /// deterministic modes delegate to [`quantize_batch`](Self::quantize_batch)
+    /// without consuming any bits.
+    pub fn quantize_batch_rng<R: RoundBits>(self, xs: &mut [f32], mode: RoundMode, rng: &mut R) {
         if mode.is_stochastic() {
+            // No identity short-circuit here: the scalar loop draws one
+            // u32 per element *before* the quantizer's fp32 early-return,
+            // so the batch path must consume the stream identically.
             const BATCH: usize = 64;
             let mut bits = [0u32; BATCH];
             for chunk in xs.chunks_mut(BATCH) {
@@ -347,7 +397,7 @@ impl FloatFormat {
                 }
             }
         } else {
-            self.quantize_slice(xs, mode);
+            self.quantize_batch(xs, mode);
         }
     }
 
@@ -428,6 +478,94 @@ impl FloatFormat {
             }
         }
         out
+    }
+}
+
+/// Precomputed nearest-even quantizer constants for one format — the
+/// per-element engine behind [`FloatFormat::quantize_batch`] and the fused
+/// quantize-on-copy passes (`tensor::im2col_q`, the conv error repack, the
+/// quantized packed-operand cache).
+///
+/// [`quantize`](Self::quantize) is bit-identical to
+/// `fmt.quantize_with_bits(x, RoundMode::NearestEven, 0)` for every input:
+/// in-range values run the branchless add-half-ulp trick (the same
+/// straight-line formula as the scalar quantizer's fast path), everything
+/// else defers to the scalar general path.
+#[derive(Clone, Copy, Debug)]
+pub struct NeQuantizer {
+    fmt: FloatFormat,
+    /// `mbits ≥ 23` (e.g. a parseable `e5m23`): the add-half-ulp trick has
+    /// no discarded mantissa bits to round, so [`quantize`](Self::quantize)
+    /// routes every element through the scalar quantizer instead.
+    scalar_only: bool,
+    /// Discarded-bit count `23 − mbits` (≥ 1 whenever `!scalar_only`).
+    shift: u32,
+    /// `(1 << (shift−1)) − 1`: half-ulp minus one (the `&1` term supplies
+    /// the ties-to-even increment).
+    half: u32,
+    keep_mask: u32,
+    max_bits: u32,
+    /// Biased-f32 exponent of the smallest target-normal value.
+    elo: u32,
+    /// `255 − elo`: in-range test span (see [`in_range`](Self::in_range)).
+    span: u32,
+}
+
+impl NeQuantizer {
+    /// Build for any format. The branchless fast path applies to
+    /// `mbits < 23`; wider mantissas (only reachable through parsed custom
+    /// formats like `e5m23`) get a scalar-only quantizer with inert fast
+    /// constants, so every composition of `FloatFormat::parse` with the
+    /// fused copy passes stays bit-correct in release builds too. Callers
+    /// using [`in_range`](Self::in_range)/[`fast_bits`](Self::fast_bits)
+    /// directly must check `mbits < 23` themselves (the batch quantizer
+    /// does).
+    pub fn new(fmt: FloatFormat) -> Self {
+        let scalar_only = fmt.mbits >= 23;
+        // Inert-but-safe constants for the scalar-only case (shift 1).
+        let shift = if scalar_only { 1 } else { 23 - fmt.mbits };
+        let elo = (fmt.emin() + 127) as u32; // ≥ 1 for every ebits ≤ 8
+        Self {
+            fmt,
+            scalar_only,
+            shift,
+            half: (1u32 << (shift - 1)) - 1,
+            keep_mask: !((1u32 << shift) - 1),
+            max_bits: fmt.max_normal().to_bits(),
+            elo,
+            span: 255 - elo,
+        }
+    }
+
+    /// Does the branchless trick cover this bit pattern? True iff the
+    /// biased exponent lies in `[elo, 255)` — i.e. a finite value in the
+    /// target's normal range (one unsigned compare after a wrapping
+    /// subtract; zeros/f32-subnormals wrap below, Inf/NaN sit at 255).
+    #[inline(always)]
+    pub fn in_range(&self, u: u32) -> bool {
+        ((u >> 23) & 0xFF).wrapping_sub(self.elo) < self.span
+    }
+
+    /// The straight-line add-half-ulp rounding on a raw f32 bit pattern —
+    /// meaningful only when [`in_range`](Self::in_range); branchless.
+    #[inline(always)]
+    pub fn fast_bits(&self, u: u32) -> u32 {
+        let round = ((u >> self.shift) & 1) + self.half;
+        let q = (((u & 0x7FFF_FFFF) + round) & self.keep_mask).min(self.max_bits);
+        (u & 0x8000_0000) | q
+    }
+
+    /// Quantize one value: fast trick in range, scalar general path for
+    /// the rare specials (and for `mbits ≥ 23` formats entirely).
+    /// Bit-identical to the scalar quantizer.
+    #[inline(always)]
+    pub fn quantize(&self, x: f32) -> f32 {
+        let u = x.to_bits();
+        if !self.scalar_only && self.in_range(u) {
+            f32::from_bits(self.fast_bits(u))
+        } else {
+            self.fmt.quantize_with_bits(x, RoundMode::NearestEven, 0)
+        }
     }
 }
 
@@ -606,6 +744,89 @@ mod tests {
                         "{fmt} {mode:?}: x={x} slice={q} scalar={want}"
                     );
                 }
+            }
+        }
+    }
+
+    /// Edge-heavy input set: normals across many binades, target
+    /// subnormals, f32 subnormals, specials, saturation boundaries.
+    fn edge_inputs(seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut xs: Vec<f32> = (0..2048)
+            .map(|_| (rng.next_f32() - 0.5) * 2f32.powi((rng.below(100) as i32) - 50))
+            .collect();
+        xs.extend_from_slice(&[
+            0.0,
+            -0.0,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1e-40,
+            -1e-40,
+            1e9,
+            -1e9,
+            f32::MAX,
+            f32::MIN,
+            2f32.powi(-14),
+            2f32.powi(-16),
+            2f32.powi(-17),
+            3.0 * 2f32.powi(-17),
+            57344.0,
+            57345.0,
+            61440.0, // FP8 overflow-on-round boundary
+        ]);
+        xs
+    }
+
+    #[test]
+    fn quantize_batch_matches_scalar_for_any_format() {
+        // The branchless batch core vs the normative scalar quantizer,
+        // across the full parametric format family (every ebits, a spread
+        // of mbits including the 0 / 22 / 23 edges).
+        let xs = edge_inputs(91);
+        for ebits in 2..=8u32 {
+            for mbits in [0u32, 1, 2, 3, 7, 9, 10, 22, 23] {
+                let fmt = FloatFormat { ebits, mbits };
+                for mode in [RoundMode::NearestEven, RoundMode::Truncate, RoundMode::NearestAway] {
+                    let mut got = xs.clone();
+                    fmt.quantize_batch(&mut got, mode);
+                    for (&x, &q) in xs.iter().zip(&got) {
+                        let want = fmt.quantize_with_bits(x, mode, 0);
+                        assert!(
+                            q.to_bits() == want.to_bits() || (q.is_nan() && want.is_nan()),
+                            "e{ebits}m{mbits} {mode:?}: x={x} ({:#x}) batch={q} scalar={want}",
+                            x.to_bits()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ne_quantizer_matches_scalar() {
+        let xs = edge_inputs(92);
+        for fmt in [
+            FloatFormat::FP8,
+            FloatFormat::FP16,
+            FloatFormat::IEEE_HALF,
+            FloatFormat::BF16,
+            FloatFormat { ebits: 4, mbits: 3 },
+            FloatFormat { ebits: 2, mbits: 0 },
+            // mbits ≥ 23 (parseable as "e5m23"): scalar-only route.
+            FloatFormat { ebits: 5, mbits: 23 },
+        ] {
+            let q = NeQuantizer::new(fmt);
+            for &x in &xs {
+                let got = q.quantize(x);
+                let want = fmt.quantize_with_bits(x, RoundMode::NearestEven, 0);
+                assert!(
+                    got.to_bits() == want.to_bits() || (got.is_nan() && want.is_nan()),
+                    "{fmt}: x={x} ({:#x}) ne={got} scalar={want}",
+                    x.to_bits()
+                );
             }
         }
     }

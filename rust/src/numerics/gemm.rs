@@ -20,9 +20,11 @@
 //! packed operand, see [`gemm_bt_into`] and `Tensor::packed_t`), and each
 //! A row is swept against [`NR`]-column strips of `bt`, computing all strip
 //! columns in one cache-resident pass per chunk before the per-chunk
-//! `FP_acc` rounding. Rows are distributed over the persistent worker pool
-//! in [`super::pool`] when the `m·n·k` cost model says the job is worth
-//! fanning out.
+//! `FP_acc` rounding. Rows with very large K additionally cache-block the
+//! A panel over the reduction axis ([`KC_F32`]/[`KC_EMU`]) — the dW
+//! Gradient-GEMM regime, where K spans the whole minibatch. Rows are
+//! distributed over the persistent worker pool in [`super::pool`] when the
+//! `m·n·k` cost model says the job is worth fanning out.
 //!
 //! Determinism under parallelism: stochastic rounding derives one RNG
 //! stream per output row from the caller's seed, and the panel kernel
@@ -30,7 +32,7 @@
 //! sequential per-dot path would use — so results are identical regardless
 //! of thread count, scheduling, or panel width.
 
-use super::dot::{dot, dot_f32_strip, GemmPrecision, NR};
+use super::dot::{dot, dot_f32_strip, dot_f32_strip_acc, GemmPrecision, NR};
 use super::pool::{self, parallel_worthwhile, SendPtr};
 use super::rng::{RoundBits, SplitMix64, Xoshiro256};
 
@@ -99,7 +101,8 @@ pub fn gemm_bt(
     c
 }
 
-/// In-place packed-operand GEMM (see [`gemm_bt`]).
+/// In-place packed-operand GEMM (see [`gemm_bt`]). Wall time is attributed
+/// to the `gemm` phase of [`crate::perf`].
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_bt_into(
     prec: &GemmPrecision,
@@ -111,7 +114,9 @@ pub fn gemm_bt_into(
     n: usize,
     seed: u64,
 ) {
-    gemm_bt_into_with_threads(prec, a, bt, c, m, k, n, seed, num_threads());
+    crate::perf::timed(crate::perf::Phase::Gemm, || {
+        gemm_bt_into_with_threads(prec, a, bt, c, m, k, n, seed, num_threads())
+    });
 }
 
 /// [`gemm_bt_into`] with an explicit worker-count cap. Results are
@@ -210,10 +215,31 @@ where
     });
 }
 
+/// K-block length of the cache-blocked A panel (f32 path): a multiple of
+/// the ×4 unroll, sized so one A-row segment (~8 KB) stays L1-resident
+/// across every strip sweep of the row. Engaged only when `k` exceeds it —
+/// the very-large-K regime of the dW Gradient GEMM, whose reduction axis
+/// is the whole minibatch (§4.2).
+const KC_F32: usize = 2048;
+
+/// K-block target for the fast emulated path (rounded to a multiple of the
+/// accumulation chunk CL so block boundaries never split a chunk).
+const KC_EMU: usize = 2048;
+
 /// f32 panel kernel: per row, sweep `NR`-column strips of packed Bᵀ.
 /// Bit-identical per element to `dot_f32(a_row, b_col)` — the pre-panel
 /// kernel — because the strip microkernel preserves its accumulation order.
+/// Large-K rows run the cache-blocked variant: the K axis is walked in
+/// [`KC_F32`]-element blocks with the four unroll lanes of every column
+/// held live across blocks, so each lane receives exactly the additions,
+/// in exactly the order, of the unblocked kernel (lane `l` sums indices
+/// `≡ l (mod 4)` ascending; the `k % 4` tail folds in after the lane
+/// combine) — still bit-identical to `dot_f32`.
 fn gemm_f32_bt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    if k > KC_F32 {
+        gemm_f32_bt_blocked(a, bt, c, m, k, n, threads);
+        return;
+    }
     parallel_rows(c, m, n, k, threads, move |i, row| {
         let arow = &a[i * k..(i + 1) * k];
         let mut out = [0f32; NR];
@@ -223,6 +249,49 @@ fn gemm_f32_bt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
             dot_f32_strip(arow, bt, j0, k, 0, w, &mut out);
             row[j0..j0 + w].copy_from_slice(&out[..w]);
             j0 += w;
+        }
+    });
+}
+
+/// Cache-blocked f32 kernel (see [`gemm_f32_bt`]).
+fn gemm_f32_bt_blocked(
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    let n4 = k & !3; // ×4-unrolled prefix; the tail folds in at finalize
+    parallel_rows(c, m, n, k, threads, move |i, row| {
+        let arow = &a[i * k..(i + 1) * k];
+        // Four live accumulator lanes per output column, kept across
+        // K blocks (amortized over ≥ KC_F32·n MACs per row).
+        let mut lanes = vec![0f32; 4 * n];
+        let mut k0 = 0;
+        while k0 < n4 {
+            let k1 = (k0 + KC_F32).min(n4);
+            let seg = &arow[k0..k1];
+            let mut j0 = 0;
+            while j0 < n {
+                let w = NR.min(n - j0);
+                dot_f32_strip_acc(seg, bt, j0, k, k0, w, &mut lanes[4 * j0..4 * (j0 + w)]);
+                j0 += w;
+            }
+            k0 = k1;
+        }
+        for (j, out) in row.iter_mut().enumerate() {
+            let l = &lanes[4 * j..4 * j + 4];
+            // Identical combine + tail order to `dot_f32`.
+            let mut acc = (l[0] + l[1]) + (l[2] + l[3]);
+            let cb = j * k;
+            let mut p = n4;
+            while p < k {
+                acc += arow[p] * bt[cb + p];
+                p += 1;
+            }
+            *out = acc;
         }
     });
 }
@@ -250,6 +319,12 @@ fn gemm_emulated_fast(
     let draws_per_col = prec.fast_draws_per_dot(k);
     let fmt_acc = prec.fmt_acc;
     let round = prec.round;
+    // Very large K (the dW Gradient GEMM): cache-block the A panel over K.
+    let block = chunk.saturating_mul((KC_EMU / chunk).max(1));
+    if k > block {
+        gemm_emulated_fast_blocked(prec, a, bt, c, m, k, n, seed, threads, block);
+        return;
+    }
     parallel_rows(c, m, n, k, threads, move |i, row| {
         let arow = &a[i * k..(i + 1) * k];
         let mut rng = row_rng(seed, i);
@@ -287,6 +362,89 @@ fn gemm_emulated_fast(
             row[j0..j0 + w].copy_from_slice(&inter[..w]);
             j0 += w;
         }
+    });
+}
+
+/// K-blocked fast emulated kernel: identical arithmetic to
+/// [`gemm_emulated_fast`], restructured so each row walks K in
+/// chunk-aligned blocks (`block` is a multiple of CL, so block boundaries
+/// never split an accumulation chunk) sweeping every strip per block —
+/// the A-row segment stays cache-resident across the whole strip sweep.
+///
+/// Bit-identity argument: per output column the sequence of
+/// `(chunk partial, FP_acc rounding, inter-chunk accumulate)` operations
+/// is byte-for-byte the unblocked sequence — chunks are visited in
+/// ascending order with the same `dot_f32_strip` sub-segment calls, and
+/// columns never interact. SR draws are batched for the whole row upfront
+/// in strip order, consuming the per-row stream at exactly the positions
+/// the strip-at-a-time batching would; each column indexes its draws by
+/// global chunk index, so every rounding sees the same bits.
+#[allow(clippy::too_many_arguments)]
+fn gemm_emulated_fast_blocked(
+    prec: &GemmPrecision,
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    seed: u64,
+    threads: usize,
+    block: usize,
+) {
+    let chunk = prec.chunk.max(1).min(k);
+    let sr = prec.round.is_stochastic();
+    let draws_per_col = prec.fast_draws_per_dot(k);
+    let fmt_acc = prec.fmt_acc;
+    let round = prec.round;
+    parallel_rows(c, m, n, k, threads, move |i, row| {
+        let arow = &a[i * k..(i + 1) * k];
+        let mut rng = row_rng(seed, i);
+        // All SR bits for the row, filled strip-by-strip in the order the
+        // unblocked kernel draws them (strip `s` owns the contiguous
+        // `[j0·draws_per_col, (j0+w)·draws_per_col)` range).
+        let mut bits: Vec<u32> = Vec::new();
+        if sr {
+            bits = vec![0u32; n * draws_per_col];
+            let mut j0 = 0;
+            while j0 < n {
+                let w = NR.min(n - j0);
+                rng.fill_bits(&mut bits[j0 * draws_per_col..(j0 + w) * draws_per_col]);
+                j0 += w;
+            }
+        }
+        let mut inter = vec![0f32; n];
+        let mut partial = [0f32; NR];
+        let mut p0 = 0;
+        while p0 < k {
+            let p1 = (p0 + block).min(k);
+            let ci0 = p0 / chunk; // global index of the block's first chunk
+            let mut j0 = 0;
+            while j0 < n {
+                let w = NR.min(n - j0);
+                let mut ci = ci0;
+                let mut q0 = p0;
+                while q0 < p1 {
+                    let q1 = (q0 + chunk).min(p1);
+                    dot_f32_strip(&arow[q0..q1], bt, j0, k, q0, w, &mut partial);
+                    for (cidx, it) in inter[j0..j0 + w].iter_mut().enumerate() {
+                        let (bq, ba) = if sr {
+                            let base = (j0 + cidx) * draws_per_col + 2 * ci;
+                            (bits[base], bits[base + 1])
+                        } else {
+                            (0, 0)
+                        };
+                        let pq = fmt_acc.quantize_with_bits(partial[cidx], round, bq);
+                        *it = fmt_acc.quantize_with_bits(*it + pq, round, ba);
+                    }
+                    ci += 1;
+                    q0 = q1;
+                }
+                j0 += w;
+            }
+            p0 = p1;
+        }
+        row.copy_from_slice(&inter);
     });
 }
 
@@ -447,6 +605,58 @@ mod tests {
                     .zip(&want)
                     .all(|(x, y)| x.to_bits() == y.to_bits());
                 assert!(same, "m={m} k={k} n={n} prec={prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_blocked_panels_match_per_dot_reference_bitwise() {
+        // K beyond the blocking thresholds (the dW Gradient-GEMM regime):
+        // the cache-blocked f32 and fast emulated kernels must reproduce
+        // the per-dot reference exactly, including stochastic rounding and
+        // odd chunk sizes relative to the block boundary.
+        let precs = [
+            GemmPrecision::fp32(),
+            GemmPrecision::fp8_paper(),
+            GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic),
+            GemmPrecision::fp8_paper().with_chunk(1),
+            GemmPrecision::fp8_paper().with_chunk(100), // does not divide the block target
+            GemmPrecision::fp8_paper().with_chunk(usize::MAX),
+        ];
+        for &(m, k, n) in &[(3usize, 2501usize, 9usize), (2, 4099, 17), (1, 8192, 3)] {
+            let mut a = rand_mat(m, k, 61 + k as u64, -1.0, 1.0);
+            let mut b = rand_mat(k, n, 62 + n as u64, -1.0, 1.0);
+            FloatFormat::FP8.quantize_slice(&mut a, RoundMode::NearestEven);
+            FloatFormat::FP8.quantize_slice(&mut b, RoundMode::NearestEven);
+            for prec in &precs {
+                let got = gemm(prec, &a, &b, m, k, n, 55);
+                let want = crate::testkit::reference_gemm(prec, &a, &b, m, k, n, 55);
+                let same = got
+                    .iter()
+                    .zip(&want)
+                    .all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "m={m} k={k} n={n} prec={prec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_blocked_deterministic_across_thread_counts() {
+        let (m, k, n) = (8, 4099, 11);
+        let mut a = rand_mat(m, k, 71, -1.0, 1.0);
+        let mut b = rand_mat(k, n, 72, -1.0, 1.0);
+        FloatFormat::FP8.quantize_slice(&mut a, RoundMode::NearestEven);
+        FloatFormat::FP8.quantize_slice(&mut b, RoundMode::NearestEven);
+        let bt = transpose(&b, k, n);
+        for prec in [
+            GemmPrecision::fp32(),
+            GemmPrecision::fp8_paper().with_round(RoundMode::Stochastic),
+        ] {
+            let baseline = gemm(&prec, &a, &b, m, k, n, 13);
+            for threads in [1usize, 4, num_threads().max(2)] {
+                let mut c = vec![0f32; m * n];
+                gemm_bt_into_with_threads(&prec, &a, &bt, &mut c, m, k, n, 13, threads);
+                assert_eq!(c, baseline, "threads={threads} {prec:?}");
             }
         }
     }

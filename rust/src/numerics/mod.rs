@@ -21,8 +21,9 @@
 //!
 //! Every experiment funnels through the emulated GEMM, so its throughput
 //! is the binding constraint on how many scenarios the repo can sweep.
-//! Four coordinated mechanisms keep the hot path fast **without changing
-//! results**:
+//! The coordinated mechanisms below keep the hot path fast **without
+//! changing results** (the operand-preparation side is documented in
+//! `docs/perf.md`):
 //!
 //! - **Persistent worker pool** ([`pool`]): `num_threads() − 1` long-lived
 //!   workers parked on a condvar replace the per-call `thread::scope`
@@ -36,20 +37,33 @@
 //!   pass before the per-chunk `FP_acc` rounding. Per column the strip
 //!   microkernel preserves the scalar `dot_f32` accumulation order, so
 //!   f32/exact outputs are bit-identical to the pre-panel kernels.
-//! - **Packed-operand cache** (`tensor::Tensor::packed_t`): 2-D tensors
-//!   cache their transposed (GEMM-packed) copy keyed by a mutation
-//!   version counter, and `Tensor::matmul_t` accepts an already-packed
-//!   right operand — the Forward GEMM of `nn::Linear`/`nn::Conv2d` now
-//!   performs **zero** transposes per call.
-//! - **Batched rounding**: `FloatFormat::quantize_slice{,_rng}` run
-//!   branch-hoisted slice loops, and the GEMM fast path draws SR bits in
-//!   per-strip batches from the per-row streams.
+//! - **K-blocked A panels** ([`gemm`]): rows with very large reduction
+//!   lengths (the dW Gradient GEMM — K is the whole minibatch, §4.2) walk
+//!   K in cache-blocked segments swept against every strip, with the f32
+//!   unroll lanes (and the emulated inter-chunk accumulators) held live
+//!   across blocks — the same additions in the same order, so still
+//!   bit-identical to the unblocked kernels.
+//! - **Quantized packed-operand cache** (`tensor::Tensor::{packed_t,
+//!   quantized, quantized_t}`): 2-D tensors cache their GEMM operand
+//!   forms — plain transpose *and* quantized copies keyed by
+//!   `(version, format, round-mode, transposed)` — so weight operands are
+//!   quantized+packed once per weight update instead of once per GEMM per
+//!   step, and `Tensor::matmul_packed`/`matmul_t` consume them with zero
+//!   per-call clones or transposes.
+//! - **Batch quantizer + fused conversion** ([`format`]):
+//!   `FloatFormat::quantize_batch` runs a branchless unrolled
+//!   nearest-even core (rare specials patched from a fix-up bitmask),
+//!   `format::NeQuantizer` fuses the same kernel into copy passes
+//!   (im2col, the conv error repack), and the GEMM fast path draws SR
+//!   bits in per-strip batches from the per-row streams.
 //!
 //! **Determinism contract**: emulated results depend only on
 //! `(operands, precision, seed)`. SR streams are derived per output row,
 //! and batched draws preserve the sequential per-column draw order, so
-//! results are bit-identical across thread counts, scheduling, and panel
-//! width. `rust/tests/gemm_equivalence.rs` enforces all of this.
+//! results are bit-identical across thread counts, scheduling, panel
+//! width, K-blocking, fused-vs-separate quantization and cached-vs-fresh
+//! packs. `rust/tests/gemm_equivalence.rs` (plus the pipeline suites in
+//! `tensor`, `nn` and `rust/tests/properties.rs`) enforces all of this.
 
 pub mod accumulate;
 pub mod axpy;

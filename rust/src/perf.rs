@@ -1,0 +1,156 @@
+//! Lightweight per-phase wall-time accounting for the training hot path.
+//!
+//! The operand-preparation pipeline (`docs/perf.md`) splits a train step
+//! into four phases — **quantize** (data-path format conversions, including
+//! quantized-pack builds), **pack** (transposes / im2col / layout copies),
+//! **gemm** (the emulated GEMM kernels) and **update** (the optimizer's
+//! AXPYs). Each instrumentation point wraps its region in [`timed`]; the
+//! accumulators are process-wide relaxed atomics, so the cost per probe is
+//! two `Instant::now()` calls and one `fetch_add` (~tens of ns against
+//! µs–ms regions — unconditionally on).
+//!
+//! `fp8train bench --json` (schema 4) resets the counters, runs the
+//! train-step benchmark, and reports per-step phase times — making "where
+//! does a step go?" a tracked number instead of a guess, and exposing the
+//! amortization claim of the quantized-operand cache (weight quantization
+//! ~once per step) as a measurable.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One accounted phase of a training step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Data-path format conversions: activation/weight/error quantizes and
+    /// quantized-pack builds.
+    Quantize = 0,
+    /// Layout work: packed transposes, im2col/col2im, NCHW↔rows copies.
+    Pack = 1,
+    /// The GEMM kernels (wall time at the `gemm_bt_into` entry, including
+    /// worker-pool fan-out).
+    Gemm = 2,
+    /// The optimizer's weight-update AXPYs.
+    Update = 3,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] = [Phase::Quantize, Phase::Pack, Phase::Gemm, Phase::Update];
+
+    pub fn id(self) -> &'static str {
+        match self {
+            Phase::Quantize => "quantize",
+            Phase::Pack => "pack",
+            Phase::Gemm => "gemm",
+            Phase::Update => "update",
+        }
+    }
+}
+
+static NS: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+static CALLS: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Run `f`, attributing its wall time to `phase`.
+#[inline]
+pub fn timed<T>(phase: Phase, f: impl FnOnce() -> T) -> T {
+    let start = Instant::now();
+    let out = f();
+    let ns = start.elapsed().as_nanos() as u64;
+    NS[phase as usize].fetch_add(ns, Ordering::Relaxed);
+    CALLS[phase as usize].fetch_add(1, Ordering::Relaxed);
+    out
+}
+
+/// Snapshot of the per-phase accumulators.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseSnapshot {
+    pub ns: [u64; 4],
+    pub calls: [u64; 4],
+}
+
+impl PhaseSnapshot {
+    pub fn ns_of(&self, phase: Phase) -> u64 {
+        self.ns[phase as usize]
+    }
+
+    pub fn calls_of(&self, phase: Phase) -> u64 {
+        self.calls[phase as usize]
+    }
+
+    /// Render as a JSON object mapping phase id → `{ns, calls}` plus the
+    /// per-iteration times when `iters > 0` is supplied.
+    pub fn to_json(&self, iters: u64) -> String {
+        let fields: Vec<String> = Phase::ALL
+            .iter()
+            .map(|&p| {
+                let ns = self.ns_of(p);
+                let per = if iters > 0 { ns / iters } else { 0 };
+                format!(
+                    "\"{}\":{{\"ns\":{ns},\"calls\":{},\"ns_per_iter\":{per}}}",
+                    p.id(),
+                    self.calls_of(p)
+                )
+            })
+            .collect();
+        format!("{{{}}}", fields.join(","))
+    }
+}
+
+/// Read the process-wide phase accumulators.
+pub fn snapshot() -> PhaseSnapshot {
+    let mut s = PhaseSnapshot::default();
+    for i in 0..4 {
+        s.ns[i] = NS[i].load(Ordering::Relaxed);
+        s.calls[i] = CALLS[i].load(Ordering::Relaxed);
+    }
+    s
+}
+
+/// Zero the accumulators (bench sections measure deltas).
+pub fn reset() {
+    for i in 0..4 {
+        NS[i].store(0, Ordering::Relaxed);
+        CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_accumulates() {
+        // NOTE: the accumulators are process-wide and the test harness runs
+        // threads concurrently, so this asserts monotone deltas only.
+        let before = snapshot();
+        let v = timed(Phase::Gemm, || {
+            std::hint::black_box((0..1000).map(|i| i as f64).sum::<f64>())
+        });
+        assert!(v > 0.0);
+        timed(Phase::Gemm, || ());
+        let after = snapshot();
+        assert!(after.calls_of(Phase::Gemm) >= before.calls_of(Phase::Gemm) + 2);
+        assert!(after.ns_of(Phase::Gemm) >= before.ns_of(Phase::Gemm));
+        let j = after.to_json(2);
+        assert!(j.contains("\"gemm\":{"), "{j}");
+        assert!(j.contains("\"quantize\":{"), "{j}");
+    }
+
+    #[test]
+    fn phase_ids_stable() {
+        // The bench JSON schema depends on these ids.
+        assert_eq!(
+            Phase::ALL.map(|p| p.id()),
+            ["quantize", "pack", "gemm", "update"]
+        );
+    }
+}

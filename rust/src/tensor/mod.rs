@@ -12,17 +12,22 @@
 pub mod init;
 pub mod scratch;
 
+use crate::numerics::format::NeQuantizer;
 use crate::numerics::gemm::{gemm_bt_into, transpose_into};
-use crate::numerics::GemmPrecision;
+use crate::numerics::rounding::RoundMode;
+use crate::numerics::{FloatFormat, GemmPrecision};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// A dense row-major f32 tensor.
 ///
-/// Carries a lazily-built, version-keyed cache of its transposed
-/// (GEMM-packed) copy — see [`Tensor::packed_t`]. The cache is metadata:
-/// `Clone` starts the copy with an empty cache and `PartialEq`/`Debug` see
-/// only `shape`/`data`.
+/// Carries a lazily-built, version-keyed cache of its GEMM-packed operand
+/// forms — the plain transpose ([`Tensor::packed_t`]) and *quantized* packs
+/// keyed by `(version, format, round-mode, transposed)`
+/// ([`Tensor::quantized`] / [`Tensor::quantized_t`]) so weight operands are
+/// quantized+packed once per mutation instead of once per GEMM per step.
+/// The cache is metadata: `Clone` starts the copy with an empty cache and
+/// `PartialEq`/`Debug` see only `shape`/`data`.
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
@@ -35,21 +40,84 @@ pub struct Tensor {
 /// tensor is next used as a GEMM right-operand.
 struct PackedCell {
     version: AtomicU64,
-    cache: Mutex<Option<PackedT>>,
+    cache: Mutex<Vec<PackEntry>>,
 }
 
-struct PackedT {
+/// One cached operand form. `fmt == None` is the plain (unquantized)
+/// transpose; `Some(fmt)` is a copy quantized to `fmt` under `mode`, in
+/// the tensor's own layout (`transposed == false`) or transposed into the
+/// packed-Bᵀ layout (`transposed == true`).
+struct PackEntry {
     version: u64,
+    fmt: Option<FloatFormat>,
+    mode: RoundMode,
+    transposed: bool,
     data: Arc<Vec<f32>>,
 }
+
+/// Entries kept per tensor: a weight serves at most a quantized forward
+/// pack, a quantized transposed pack (possibly at a second format for a
+/// last-layer role) and the plain transpose.
+const MAX_PACKS: usize = 4;
 
 impl PackedCell {
     fn new() -> Self {
         Self {
             version: AtomicU64::new(0),
-            cache: Mutex::new(None),
+            cache: Mutex::new(Vec::new()),
         }
     }
+}
+
+// Global counters for the quantized-pack cache (reported by
+// `fp8train bench --json` schema 4): how often a GEMM asked for a
+// quantized weight operand, how many pack materializations that cost, and
+// how many of those had to run a full quantize pass (a transposed pack
+// built from a live same-version quantized pack re-packs without
+// re-quantizing).
+static PACK_LOOKUPS: AtomicU64 = AtomicU64::new(0);
+static PACK_BUILDS: AtomicU64 = AtomicU64::new(0);
+static PACK_QUANTIZES: AtomicU64 = AtomicU64::new(0);
+
+/// Quantized-pack cache counters (process-wide).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PackCacheStats {
+    /// Quantized-operand lookups ([`Tensor::quantized`] /
+    /// [`Tensor::quantized_t`] calls).
+    pub lookups: u64,
+    /// Lookups that materialized a new pack (cache misses).
+    pub builds: u64,
+    /// Builds that ran a full quantize pass over the tensor (a transposed
+    /// build that could start from a cached same-version quantized copy
+    /// only transposes).
+    pub quantize_passes: u64,
+}
+
+impl PackCacheStats {
+    /// Fraction of lookups served without materializing a pack.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            1.0 - self.builds as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// Snapshot the process-wide quantized-pack cache counters.
+pub fn pack_cache_stats() -> PackCacheStats {
+    PackCacheStats {
+        lookups: PACK_LOOKUPS.load(Ordering::Relaxed),
+        builds: PACK_BUILDS.load(Ordering::Relaxed),
+        quantize_passes: PACK_QUANTIZES.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero the quantized-pack cache counters (bench sections measure deltas).
+pub fn reset_pack_cache_stats() {
+    PACK_LOOKUPS.store(0, Ordering::Relaxed);
+    PACK_BUILDS.store(0, Ordering::Relaxed);
+    PACK_QUANTIZES.store(0, Ordering::Relaxed);
 }
 
 impl Clone for Tensor {
@@ -152,20 +220,131 @@ impl Tensor {
             .cache
             .lock()
             .unwrap_or_else(|p| p.into_inner());
-        if let Some(p) = guard.as_ref() {
-            if p.version == v {
-                return Arc::clone(&p.data);
-            }
+        if let Some(p) = guard
+            .iter()
+            .find(|p| p.version == v && p.fmt.is_none() && p.transposed)
+        {
+            return Arc::clone(&p.data);
         }
         let (r, s) = (self.shape[0], self.shape[1]);
         let mut t = vec![0f32; r * s];
-        transpose_into(&self.data, &mut t, r, s);
-        let data = Arc::new(t);
-        *guard = Some(PackedT {
-            version: v,
-            data: Arc::clone(&data),
+        crate::perf::timed(crate::perf::Phase::Pack, || {
+            transpose_into(&self.data, &mut t, r, s)
         });
+        let data = Arc::new(t);
+        Self::cache_insert(
+            &mut guard,
+            PackEntry {
+                version: v,
+                fmt: None,
+                mode: RoundMode::NearestEven,
+                transposed: true,
+                data: Arc::clone(&data),
+            },
+        );
         data
+    }
+
+    /// The tensor's data quantized to `fmt` under `mode`, in the tensor's
+    /// own row-major layout — the quantized packed operand for GEMMs whose
+    /// right operand is stored pre-transposed (`Y = X · Wᵀ` weights,
+    /// consumed via [`matmul_packed`](Self::matmul_packed)). Cached under
+    /// `(version, fmt, mode)`: repeated GEMMs against an unmutated tensor
+    /// (both roles of a training step, every batch of an eval loop) run
+    /// **zero** quantize passes after the first.
+    ///
+    /// Identity formats (FP32 or wider) delegate to a plain cached copy, so
+    /// the result is always exactly `quantize_batch` applied to `data`.
+    pub fn quantized(&self, fmt: FloatFormat, mode: RoundMode) -> Arc<Vec<f32>> {
+        self.quantized_pack(fmt, mode, false)
+    }
+
+    /// [`quantized`](Self::quantized) composed with the packed transpose:
+    /// the quantized data in the `[cols, rows]` packed-Bᵀ layout, for GEMMs
+    /// whose right operand is stored un-transposed (`dX = dY · W`).
+    /// Bit-identical to `transpose(quantize_batch(data))` (quantization is
+    /// elementwise, so quantize-then-transpose == transpose-then-quantize).
+    /// A cached same-version [`quantized`](Self::quantized) pack seeds the
+    /// build, so the step's second weight role re-packs without
+    /// re-quantizing.
+    pub fn quantized_t(&self, fmt: FloatFormat, mode: RoundMode) -> Arc<Vec<f32>> {
+        self.quantized_pack(fmt, mode, true)
+    }
+
+    fn quantized_pack(&self, fmt: FloatFormat, mode: RoundMode, transposed: bool) -> Arc<Vec<f32>> {
+        assert_eq!(self.ndim(), 2, "quantized packs need a 2-D tensor");
+        debug_assert!(
+            !mode.is_stochastic(),
+            "quantized packs are deterministic (data-path conversions)"
+        );
+        PACK_LOOKUPS.fetch_add(1, Ordering::Relaxed);
+        let v = self.packed.version.load(Ordering::Acquire);
+        let mut guard = self
+            .packed
+            .cache
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let hit = |p: &&PackEntry| {
+            p.version == v && p.fmt == Some(fmt) && p.mode == mode && p.transposed == transposed
+        };
+        if let Some(p) = guard.iter().find(hit) {
+            return Arc::clone(&p.data);
+        }
+        PACK_BUILDS.fetch_add(1, Ordering::Relaxed);
+        let (r, s) = (self.shape[0], self.shape[1]);
+        // Seed from a live same-version quantized copy when one exists —
+        // then only the layout differs and a transpose suffices.
+        let seed = guard
+            .iter()
+            .find(|p| p.version == v && p.fmt == Some(fmt) && p.mode == mode && !p.transposed)
+            .map(|p| Arc::clone(&p.data));
+        let data = crate::perf::timed(crate::perf::Phase::Quantize, || {
+            let q = match (&seed, transposed) {
+                (Some(src), true) => {
+                    // Already-quantized copy at this version: only the
+                    // layout differs.
+                    let mut t = vec![0f32; r * s];
+                    transpose_into(src, &mut t, r, s);
+                    t
+                }
+                _ => {
+                    PACK_QUANTIZES.fetch_add(1, Ordering::Relaxed);
+                    let mut q = if transposed {
+                        let mut t = vec![0f32; r * s];
+                        transpose_into(&self.data, &mut t, r, s);
+                        t
+                    } else {
+                        self.data.clone()
+                    };
+                    // Elementwise, so quantize-after-transpose is
+                    // bit-identical to transpose-after-quantize.
+                    fmt.quantize_batch(&mut q, mode);
+                    q
+                }
+            };
+            Arc::new(q)
+        });
+        Self::cache_insert(
+            &mut guard,
+            PackEntry {
+                version: v,
+                fmt: Some(fmt),
+                mode,
+                transposed,
+                data: Arc::clone(&data),
+            },
+        );
+        data
+    }
+
+    /// Insert a pack, dropping stale-version entries first and bounding the
+    /// cache to [`MAX_PACKS`] live forms (oldest evicted).
+    fn cache_insert(cache: &mut Vec<PackEntry>, entry: PackEntry) {
+        cache.retain(|p| p.version == entry.version);
+        if cache.len() >= MAX_PACKS {
+            cache.remove(0);
+        }
+        cache.push(entry);
     }
 
     #[inline]
@@ -225,7 +404,9 @@ impl Tensor {
         assert_eq!(self.ndim(), 2, "t_pooled() needs a 2-D tensor");
         let (r, s) = (self.shape[0], self.shape[1]);
         let mut out = Tensor::zeros_pooled(&[s, r]);
-        transpose_into(&self.data, &mut out.data, r, s);
+        crate::perf::timed(crate::perf::Phase::Pack, || {
+            transpose_into(&self.data, &mut out.data, r, s)
+        });
         out
     }
 
@@ -257,6 +438,22 @@ impl Tensor {
         let (m, k, n) = (self.shape[0], self.shape[1], rhs_t.shape[0]);
         let mut out = Tensor::zeros(&[m, n]);
         gemm_bt_into(prec, &self.data, &rhs_t.data, &mut out.data, m, k, n, seed);
+        out
+    }
+
+    /// `self · B` against a **pre-packed** right operand: `bt` is Bᵀ,
+    /// row-major `[n, k]` — exactly what [`quantized`](Self::quantized) /
+    /// [`quantized_t`](Self::quantized_t) / [`packed_t`](Self::packed_t)
+    /// return. No cloning, quantizing or transposing happens here; the
+    /// output leases its buffer from the [`scratch`] arena (zero-filled, so
+    /// results are bit-identical to a fresh allocation — recycle it when
+    /// its lifetime ends inside a step).
+    pub fn matmul_packed(&self, bt: &[f32], n: usize, prec: &GemmPrecision, seed: u64) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        assert_eq!(bt.len(), n * k, "packed operand shape");
+        let mut out = Tensor::zeros_pooled(&[m, n]);
+        gemm_bt_into(prec, &self.data, bt, &mut out.data, m, k, n, seed);
         out
     }
 
@@ -367,6 +564,20 @@ impl Conv2dGeom {
 /// im2col: lower an NCHW batch into the `[N·out_h·out_w, in_c·k·k]` patch
 /// matrix so convolution = patch-matrix · kernel-matrix (§2.2).
 pub fn im2col(x: &Tensor, g: &Conv2dGeom) -> Tensor {
+    im2col_q(x, g, None)
+}
+
+/// [`im2col`] with quantization **fused into the copy pass**: every element
+/// is quantized (nearest-even, the data-path conversion mode) as it is
+/// written into the patch matrix, eliminating the separate full-tensor
+/// quantize pass over the NCHW input and its read/write sweep.
+///
+/// Bit-identical to `quantize_batch(x)` followed by plain [`im2col`]:
+/// quantization is elementwise and deterministic, so each source element
+/// quantizes to the same bits in every patch that replicates it, and
+/// padding zeros are exactly representable in every format
+/// (`fused_im2col_matches_separate_pass` enforces this).
+pub fn im2col_q(x: &Tensor, g: &Conv2dGeom, quant: Option<NeQuantizer>) -> Tensor {
     assert_eq!(x.ndim(), 4, "im2col wants NCHW");
     let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     assert_eq!(c, g.in_c);
@@ -378,35 +589,52 @@ pub fn im2col(x: &Tensor, g: &Conv2dGeom) -> Tensor {
     // it); the conv layer recycles the patch matrix when its step ends.
     let mut out = Tensor::zeros_pooled(&[n * oh * ow, cols]);
     let src = &x.data;
-    for img in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((img * oh + oy) * ow + ox) * cols;
-                let mut idx = row;
-                for ci in 0..c {
-                    let plane = (img * c + ci) * h * w;
-                    for ky in 0..g.k {
-                        let iy = (oy * g.stride + ky) as isize - g.pad as isize;
-                        if iy < 0 || iy >= h as isize {
-                            // whole kernel row out of bounds → zeros
-                            idx += g.k;
-                            continue;
-                        }
-                        let src_row = plane + iy as usize * w;
-                        for kx in 0..g.k {
-                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
-                            out.data[idx] = if ix < 0 || ix >= w as isize {
-                                0.0
-                            } else {
-                                src[src_row + ix as usize]
-                            };
-                            idx += 1;
+    crate::perf::timed(crate::perf::Phase::Pack, || {
+        for img in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((img * oh + oy) * ow + ox) * cols;
+                    let mut idx = row;
+                    for ci in 0..c {
+                        let plane = (img * c + ci) * h * w;
+                        for ky in 0..g.k {
+                            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                // whole kernel row out of bounds → zeros
+                                idx += g.k;
+                                continue;
+                            }
+                            let src_row = plane + iy as usize * w;
+                            match quant {
+                                None => {
+                                    for kx in 0..g.k {
+                                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                                        out.data[idx] = if ix < 0 || ix >= w as isize {
+                                            0.0
+                                        } else {
+                                            src[src_row + ix as usize]
+                                        };
+                                        idx += 1;
+                                    }
+                                }
+                                Some(q) => {
+                                    for kx in 0..g.k {
+                                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                                        out.data[idx] = if ix < 0 || ix >= w as isize {
+                                            0.0
+                                        } else {
+                                            q.quantize(src[src_row + ix as usize])
+                                        };
+                                        idx += 1;
+                                    }
+                                }
+                            }
                         }
                     }
                 }
             }
         }
-    }
+    });
     out
 }
 
@@ -544,6 +772,155 @@ mod tests {
         let v = t.version();
         let t = t.map(|x| x + 1.0);
         assert!(t.version() > v);
+    }
+
+    #[test]
+    fn quantized_pack_matches_fresh_quantize() {
+        use crate::numerics::rounding::RoundMode;
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(17);
+        let t = Tensor::from_vec(&[5, 7], (0..35).map(|_| rng.uniform(-4.0, 4.0)).collect());
+        for fmt in [FloatFormat::FP8, FloatFormat::FP16, FloatFormat::FP32] {
+            let q = t.quantized(fmt, RoundMode::NearestEven);
+            let mut want = t.data.clone();
+            fmt.quantize_batch(&mut want, RoundMode::NearestEven);
+            assert_eq!(*q, want, "{fmt}");
+            // Transposed pack == transpose of the quantized copy.
+            let qt = t.quantized_t(fmt, RoundMode::NearestEven);
+            let want_t = Tensor::from_vec(&[5, 7], want).t();
+            assert_eq!(*qt, want_t.data, "{fmt} transposed");
+        }
+    }
+
+    #[test]
+    fn quantized_pack_cache_hits_and_invalidates() {
+        use crate::numerics::rounding::RoundMode;
+        let ne = RoundMode::NearestEven;
+        let mut t = Tensor::from_vec(&[2, 3], vec![1.1, 2.2, 3.3, 4.4, 5.5, 6.6]);
+        let q1 = t.quantized(FloatFormat::FP8, ne);
+        let q2 = t.quantized(FloatFormat::FP8, ne);
+        assert!(std::sync::Arc::ptr_eq(&q1, &q2), "same (version, fmt) must hit");
+        // A different format is a distinct entry, not a stale hit.
+        let h1 = t.quantized(FloatFormat::FP16, ne);
+        assert_ne!(*q1, *h1);
+        // Both coexist (neither evicted the other).
+        assert!(std::sync::Arc::ptr_eq(&q1, &t.quantized(FloatFormat::FP8, ne)));
+        assert!(std::sync::Arc::ptr_eq(&h1, &t.quantized(FloatFormat::FP16, ne)));
+        // The transposed pack at the same version reuses the quantized
+        // copy's values exactly.
+        let qt = t.quantized_t(FloatFormat::FP8, ne);
+        let mut want = t.data.clone();
+        FloatFormat::FP8.quantize_batch(&mut want, ne);
+        assert_eq!(*qt, Tensor::from_vec(&[2, 3], want).t().data);
+        // Mutation invalidates every form; post-mutation packs are
+        // bit-identical to fresh quantizes of the new data.
+        t.data[0] = 100.0;
+        t.mark_mutated();
+        let q3 = t.quantized(FloatFormat::FP8, ne);
+        assert!(!std::sync::Arc::ptr_eq(&q1, &q3));
+        let mut want = t.data.clone();
+        FloatFormat::FP8.quantize_batch(&mut want, ne);
+        assert_eq!(*q3, want);
+        let qt3 = t.quantized_t(FloatFormat::FP8, ne);
+        assert_eq!(*qt3, Tensor::from_vec(&[2, 3], want).t().data);
+    }
+
+    #[test]
+    fn quantized_pack_property_mutation_sequences() {
+        // Property: after any sequence of mutations, every cached form is
+        // bit-identical to the same form computed on a fresh clone (the
+        // cache can never serve stale or mixed-version data).
+        use crate::numerics::rounding::RoundMode;
+        let ne = RoundMode::NearestEven;
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(23);
+        let mut t = Tensor::from_vec(&[4, 6], (0..24).map(|_| rng.uniform(-2.0, 2.0)).collect());
+        for step in 0..50 {
+            match rng.below(4) {
+                0 => t.scale(1.0 + rng.next_f32() * 0.5),
+                1 => {
+                    let row: Vec<f32> = (0..6).map(|_| rng.uniform(-0.1, 0.1)).collect();
+                    t.add_row(&row);
+                }
+                2 => {
+                    let i = rng.below(24) as usize;
+                    t.data[i] = rng.uniform(-3.0, 3.0);
+                    t.mark_mutated();
+                }
+                _ => {} // lookups against an unchanged version must hit
+            }
+            let fmt = if step % 2 == 0 { FloatFormat::FP8 } else { FloatFormat::FP16 };
+            let fresh = t.clone();
+            assert_eq!(*t.quantized(fmt, ne), *fresh.quantized(fmt, ne), "step {step}");
+            assert_eq!(*t.quantized_t(fmt, ne), *fresh.quantized_t(fmt, ne), "step {step} t");
+            assert_eq!(*t.packed_t(), *fresh.packed_t(), "step {step} plain");
+        }
+    }
+
+    #[test]
+    fn matmul_packed_matches_matmul_t() {
+        use crate::numerics::rounding::RoundMode;
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(19);
+        let a_raw: Vec<f32> = (0..5 * 7).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let w_raw: Vec<f32> = (0..3 * 7).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for prec in [GemmPrecision::fp32(), GemmPrecision::fp8_paper()] {
+            // The old dataflow: quantize a weight clone, multiply.
+            let mut a = Tensor::from_vec(&[5, 7], a_raw.clone());
+            prec.fmt_mult.quantize_batch(&mut a.data, RoundMode::NearestEven);
+            let wt = Tensor::from_vec(&[3, 7], w_raw.clone());
+            let mut w_q = wt.clone();
+            prec.fmt_mult
+                .quantize_batch(&mut w_q.data, RoundMode::NearestEven);
+            let want = a.matmul_t(&w_q, &prec, 4);
+            // The new dataflow: cached quantized pack, no clone.
+            let got = a.matmul_packed(
+                &wt.quantized(prec.fmt_mult, RoundMode::NearestEven),
+                3,
+                &prec,
+                4,
+            );
+            assert_eq!(got, want, "{prec:?}");
+            // And the transposed pack drives B-layout GEMMs identically.
+            let w = w_q.t(); // [7, 3] un-transposed layout
+            let want_b = a.matmul(&w, &prec, 9);
+            let got_b = a.matmul_packed(
+                &wt.t().quantized_t(prec.fmt_mult, RoundMode::NearestEven),
+                3,
+                &prec,
+                9,
+            );
+            assert_eq!(got_b, want_b, "{prec:?} B-layout");
+        }
+    }
+
+    #[test]
+    fn fused_im2col_matches_separate_pass() {
+        use crate::numerics::format::NeQuantizer;
+        use crate::numerics::rounding::RoundMode;
+        let g = Conv2dGeom {
+            in_c: 3,
+            in_h: 6,
+            in_w: 5,
+            k: 3,
+            stride: 2,
+            pad: 1,
+        };
+        let mut rng = crate::numerics::Xoshiro256::seed_from_u64(29);
+        let n = 2;
+        let x = Tensor::from_vec(
+            &[n, 3, 6, 5],
+            (0..n * 3 * 6 * 5)
+                .map(|_| rng.uniform(-8.0, 8.0) * 2f32.powi(rng.below(30) as i32 - 15))
+                .collect(),
+        );
+        for fmt in [FloatFormat::FP8, FloatFormat::FP16] {
+            let fused = im2col_q(&x, &g, Some(NeQuantizer::new(fmt)));
+            let mut x_q = x.clone();
+            fmt.quantize_batch(&mut x_q.data, RoundMode::NearestEven);
+            let separate = im2col(&x_q, &g);
+            assert_eq!(fused.shape, separate.shape);
+            for (i, (a, b)) in fused.data.iter().zip(&separate.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt} element {i}");
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Per-thread scratch arena for short-lived f32 buffers.
 //!
-//! The conv path allocates large temporaries every step — the im2col patch
-//! matrix, the `[N·oh·ow, oc]` GEMM row blocks, and the transposed error
-//! operand of the Gradient GEMM — whose sizes repeat exactly across steps
-//! and eval batches. This arena recycles those allocations: [`take`] leases
+//! The training hot path allocates recurring temporaries every step — the
+//! im2col patch matrix, the `[N·oh·ow, oc]` GEMM row blocks, the
+//! transposed error operands of the Gradient GEMMs (conv *and* linear),
+//! pooled GEMM outputs, and the BatchNorm reduction/normalization vectors
+//! — whose sizes repeat exactly across steps and eval batches. This arena
+//! recycles those allocations: [`take`] leases
 //! a zeroed buffer (reusing the best-fitting pooled allocation when one
 //! exists), [`recycle`] returns a buffer to the pool. The pool is
 //! per-thread (`thread_local`, no locks — layer code runs on the caller's
@@ -13,15 +15,17 @@
 //! `vec![0.0; len]` allocations.
 //!
 //! Hit/miss/bytes counters are exposed via [`stats`] and reported by
-//! `fp8train bench --json` (schema 3, `"scratch"` section) so the reuse
-//! rate of the conv path stays observable across PRs.
+//! `fp8train bench --json` (`"scratch"` section) so the reuse rate of the
+//! hot path stays observable across PRs.
 
 use std::cell::RefCell;
 
-/// Maximum buffers kept per thread. Conv2d needs at most a handful of
-/// distinct temporary shapes per layer and the pool keeps the largest
-/// capacities, so 16 covers the deepest preset with headroom.
-const MAX_POOLED: usize = 16;
+/// Maximum buffers kept per thread. Conv2d needs a handful of distinct
+/// temporary shapes per layer, and the arena now also serves the Linear
+/// backward transpose, the BatchNorm reduction/normalization vectors and
+/// the pooled GEMM outputs; the pool keeps the largest capacities, so 32
+/// covers the deepest preset with headroom while staying bounded.
+const MAX_POOLED: usize = 32;
 
 #[derive(Default)]
 struct Pool {

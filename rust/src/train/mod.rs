@@ -42,6 +42,13 @@ pub struct TrainConfig {
     /// the single rolling file into periodic retention
     /// (`ck_{step}.fp8ck` → `ck_100.fp8ck`, `ck_200.fp8ck`, …).
     pub save_path: Option<String>,
+    /// Retention for `{step}`-templated `save_path`s: after each save keep
+    /// only the newest `keep_last` step-numbered checkpoints, deleting the
+    /// rest (0 = keep everything; ignored for non-templated paths, which
+    /// roll a single file anyway). Pruning runs strictly **after** the new
+    /// checkpoint is durably written, so an interrupted save never costs a
+    /// previously retained file.
+    pub keep_last: usize,
     /// Resume: restore engine + trainer progress from this `.fp8ck` file
     /// before stepping.
     pub resume: Option<String>,
@@ -62,6 +69,7 @@ impl TrainConfig {
             verbose: false,
             save_every: 0,
             save_path: None,
+            keep_last: 0,
             resume: None,
             save_meta: StateMap::new(),
         }
@@ -155,11 +163,11 @@ impl StateDict for TrainProgress {
 }
 
 fn save_checkpoint(engine: &mut dyn Engine, progress: &mut TrainProgress, cfg: &TrainConfig) {
-    let path = cfg
+    let template = cfg
         .save_path
         .clone()
-        .unwrap_or_else(|| "checkpoint.fp8ck".to_string())
-        .replace("{step}", &progress.next_step.to_string());
+        .unwrap_or_else(|| "checkpoint.fp8ck".to_string());
+    let path = template.replace("{step}", &progress.next_step.to_string());
     let mut map = cfg.save_meta.clone();
     engine.save_state(&mut map);
     progress.save_state("train", &mut map);
@@ -167,6 +175,74 @@ fn save_checkpoint(engine: &mut dyn Engine, progress: &mut TrainProgress, cfg: &
         .unwrap_or_else(|e| panic!("write checkpoint {path}: {e}"));
     if cfg.verbose {
         crate::log_info!("checkpoint → {path} (step {})", progress.next_step);
+    }
+    // Retention pruning runs only once the new save is complete (the save
+    // itself is an atomic rename), so a crash anywhere in this function
+    // leaves at least the previously retained set on disk.
+    if cfg.keep_last > 0 {
+        prune_retained(&template, cfg.keep_last, progress.next_step as u64, cfg.verbose);
+    }
+}
+
+/// Delete all but the newest `keep` step-numbered expansions of a
+/// `{step}`-templated checkpoint path, considering only steps `≤
+/// current_step` — files this run has (or could have) written. Stale
+/// higher-numbered checkpoints left behind by a previous, longer run are
+/// deliberately *not* candidates: they neither occupy retention slots
+/// (which would get every fresh save deleted immediately) nor get removed
+/// (never delete data this run did not produce). Non-templated paths (and
+/// templated *directories*, which retention does not support) are left
+/// untouched; files that do not match `prefix<digits>suffix` exactly are
+/// never candidates, so unrelated checkpoints in the same directory
+/// survive.
+fn prune_retained(template: &str, keep: usize, current_step: u64, verbose: bool) {
+    let (dir, file_tpl) = match template.rfind('/') {
+        Some(i) => (&template[..i + 1], &template[i + 1..]),
+        None => ("", template),
+    };
+    let Some((pre, suf)) = file_tpl.split_once("{step}") else {
+        return; // rolling single file — nothing to prune
+    };
+    if dir.contains("{step}") || suf.contains("{step}") {
+        return; // unsupported template shapes: never delete on a guess
+    }
+    let read_dir = if dir.is_empty() { "." } else { dir };
+    let Ok(entries) = std::fs::read_dir(read_dir) else {
+        return;
+    };
+    let mut found: Vec<(u64, String)> = Vec::new();
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(mid) = name
+            .strip_prefix(pre)
+            .and_then(|rest| rest.strip_suffix(suf))
+        else {
+            continue;
+        };
+        if mid.is_empty() || !mid.bytes().all(|b| b.is_ascii_digit()) {
+            continue;
+        }
+        let Ok(step) = mid.parse::<u64>() else { continue };
+        if step > current_step {
+            continue; // another run's (or future) save — not ours to manage
+        }
+        found.push((step, format!("{dir}{name}")));
+    }
+    // Newest (highest step) first; everything past `keep` goes.
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    for (step, path) in found.into_iter().skip(keep) {
+        match std::fs::remove_file(&path) {
+            Ok(()) => {
+                if verbose {
+                    crate::log_info!("retention: pruned {path} (step {step})");
+                }
+            }
+            // Already gone (e.g. a concurrent prune) is fine; anything
+            // else is worth a warning but must not kill training.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => crate::log_warn!("retention: could not prune {path}: {e}"),
+        }
     }
 }
 
@@ -365,6 +441,65 @@ mod tests {
         assert_eq!(m4.get_u64("train.next_step").unwrap(), 4);
         std::fs::remove_file(ck2).ok();
         std::fs::remove_file(ck4).ok();
+    }
+
+    #[test]
+    fn keep_last_prunes_old_templated_checkpoints() {
+        let dir = std::env::temp_dir().join("fp8train_test_keep_last");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Unrelated files — same dir, same suffix, non-matching names —
+        // must survive pruning, and so must a stale *higher-numbered*
+        // checkpoint from a previous longer run (steps beyond this run are
+        // neither retention candidates nor slot occupants, so they can
+        // never evict the run's fresh saves).
+        let decoy1 = dir.join("other_10.fp8ck");
+        let decoy2 = dir.join("ck_x9.fp8ck");
+        let stale_hi = dir.join("ck_500.fp8ck");
+        std::fs::write(&decoy1, b"decoy").unwrap();
+        std::fs::write(&decoy2, b"decoy").unwrap();
+        std::fs::write(&stale_hi, b"previous run").unwrap();
+        let tpl = dir.join("ck_{step}.fp8ck").to_string_lossy().into_owned();
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 21).with_sizes(16, 8);
+        let mut cfg = TrainConfig::quick(6);
+        cfg.batch_size = 4;
+        cfg.save_every = 1;
+        cfg.save_path = Some(tpl);
+        cfg.keep_last = 2;
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 21);
+        train(&mut e, &ds, &cfg);
+        // Six saves, keep-last 2 → only steps 5 and 6 remain.
+        for gone in 1..=4u64 {
+            assert!(
+                !dir.join(format!("ck_{gone}.fp8ck")).exists(),
+                "ck_{gone} should have been pruned"
+            );
+        }
+        let ck5 = dir.join("ck_5.fp8ck");
+        let ck6 = dir.join("ck_6.fp8ck");
+        assert!(ck5.exists() && ck6.exists(), "newest two must be retained");
+        // Retained files are valid checkpoints; decoys untouched.
+        assert_eq!(StateMap::load_file(&ck6).unwrap().get_u64("train.next_step").unwrap(), 6);
+        assert!(decoy1.exists() && decoy2.exists(), "non-matching files must survive");
+        assert!(stale_hi.exists(), "higher-step stale checkpoints are not ours to prune");
+        for f in [ck5, ck6, decoy1, decoy2, stale_hi] {
+            std::fs::remove_file(f).ok();
+        }
+    }
+
+    #[test]
+    fn prune_retained_ignores_non_templated_and_weird_templates() {
+        let dir = std::env::temp_dir().join("fp8train_test_keep_guard");
+        std::fs::create_dir_all(&dir).unwrap();
+        let victim = dir.join("solo.fp8ck");
+        std::fs::write(&victim, b"x").unwrap();
+        // Non-templated path: no-op.
+        prune_retained(&victim.to_string_lossy(), 1, u64::MAX, false);
+        assert!(victim.exists());
+        // Template in the directory component: refused, no deletions.
+        let weird = dir.join("{step}").join("ck_{step}.fp8ck");
+        prune_retained(&weird.to_string_lossy(), 1, u64::MAX, false);
+        assert!(victim.exists());
+        std::fs::remove_file(victim).ok();
     }
 
     #[test]

@@ -348,3 +348,126 @@ fn gemm_sr_determinism_per_seed() {
         Ok(())
     });
 }
+
+#[test]
+fn quantize_batch_bit_identical_to_scalar_across_formats() {
+    // The branchless batch quantizer is the data-path workhorse
+    // (activations/weights/errors every step); it must agree with the
+    // normative scalar quantizer bit-for-bit for every parametric format
+    // and every input class — normals, target subnormals, f32 subnormals,
+    // specials, saturation.
+    forall("quantize_batch == map(quantize_with_bits)", |g| {
+        let fmt = FloatFormat {
+            ebits: g.usize_in(2, 9) as u32,
+            mbits: g.usize_in(0, 24) as u32,
+        };
+        let n = g.usize_in(1, 200);
+        let mut xs = g.vec_any(n);
+        xs.extend_from_slice(&[
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.0,
+            -0.0,
+            1e-40,
+            fmt.max_normal(),
+            fmt.min_subnormal(),
+            fmt.min_subnormal() * 0.5,
+            fmt.min_subnormal() * 0.25,
+        ]);
+        for mode in [RoundMode::NearestEven, RoundMode::Truncate] {
+            let mut got = xs.clone();
+            fmt.quantize_batch(&mut got, mode);
+            for (&x, &q) in xs.iter().zip(&got) {
+                let want = fmt.quantize_with_bits(x, mode, 0);
+                if q.to_bits() != want.to_bits() && !(q.is_nan() && want.is_nan()) {
+                    return Err(format!(
+                        "{fmt} {mode:?}: x={x} ({:#010x}) batch={q} scalar={want}",
+                        x.to_bits()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantize_batch_rng_preserves_sr_draw_order() {
+    // Stochastic batch quantization must consume the bit stream exactly as
+    // the scalar loop would (one u32 per element, in slice order), for any
+    // format — resume/replay equivalence depends on it.
+    forall("batched SR == scalar SR stream", |g| {
+        let fmt = FloatFormat {
+            ebits: g.usize_in(2, 9) as u32,
+            mbits: g.usize_in(0, 23) as u32,
+        };
+        let n = g.usize_in(1, 300);
+        let xs = g.vec_any(n);
+        let seed = g.rng.next_u64();
+        let mut batched = xs.clone();
+        let mut r1 = Xoshiro256::seed_from_u64(seed);
+        fmt.quantize_batch_rng(&mut batched, RoundMode::Stochastic, &mut r1);
+        let mut scalar = xs.clone();
+        let mut r2 = Xoshiro256::seed_from_u64(seed);
+        for v in scalar.iter_mut() {
+            *v = fmt.quantize_rng(*v, RoundMode::Stochastic, &mut r2);
+        }
+        for (i, (&a, &b)) in batched.iter().zip(&scalar).enumerate() {
+            if a.to_bits() != b.to_bits() && !(a.is_nan() && b.is_nan()) {
+                return Err(format!("{fmt}: element {i}: {a} vs {b}"));
+            }
+        }
+        // And the generators end in the same position.
+        if r1.next_u64() != r2.next_u64() {
+            return Err(format!("{fmt}: stream positions diverged"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_pack_cache_hits_bit_identical_to_fresh_packs() {
+    // The quantized packed-operand cache under a random mutate/lookup
+    // workload: every lookup (hit or rebuild) must equal the pack computed
+    // on a fresh uncached clone, for both layouts, after every
+    // mark_mutated.
+    forall("cached quantized packs == fresh packs", |g| {
+        let (r, s) = (g.usize_in(1, 8), g.usize_in(1, 8));
+        let mut t = Tensor::from_vec(&[r, s], g.vec_any(r * s));
+        for _ in 0..6 {
+            match g.usize_in(0, 3) {
+                0 => {
+                    let i = g.usize_in(0, r * s);
+                    t.data[i] = g.f32_any();
+                    t.mark_mutated();
+                }
+                1 => t.scale(1.0 + g.f32_in(0.0, 0.5)),
+                _ => {} // lookup without mutation must hit, bit-identically
+            }
+            let fmt = if g.usize_in(0, 2) == 0 {
+                FloatFormat::FP8
+            } else {
+                FloatFormat::FP16
+            };
+            let fresh = t.clone();
+            let (a, b) = (
+                t.quantized(fmt, RoundMode::NearestEven),
+                fresh.quantized(fmt, RoundMode::NearestEven),
+            );
+            let same = a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+            if !same {
+                return Err(format!("quantized({fmt}) diverged from fresh"));
+            }
+            let (at, bt) = (
+                t.quantized_t(fmt, RoundMode::NearestEven),
+                fresh.quantized_t(fmt, RoundMode::NearestEven),
+            );
+            let same_t = at.iter().zip(bt.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+            if !same_t {
+                return Err(format!("quantized_t({fmt}) diverged from fresh"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -60,20 +60,11 @@ impl BenchResult {
     }
 }
 
-/// Escape a string for embedding in a JSON document.
+/// Escape a string for embedding in a JSON document. Delegates to the
+/// crate's single writer-side escaper ([`crate::benchcmp::escape`]) so
+/// the bench and sweep artifacts can never drift apart in encoding.
 pub fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => {
-                out.push_str(&format!("\\u{:04x}", c as u32));
-            }
-            c => out.push(c),
-        }
-    }
-    out
+    crate::benchcmp::escape(s)
 }
 
 fn human_rate(r: f64) -> String {
@@ -201,7 +192,9 @@ mod tests {
 
     #[test]
     fn json_escape_controls() {
-        assert_eq!(super::json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\u000ad");
+        // Shared escaper (benchcmp::escape): common controls use the short
+        // escapes, everything else below 0x20 the \uXXXX form.
+        assert_eq!(super::json_escape("a\"b\\c\nd\u{1}"), "a\\\"b\\\\c\\nd\\u0001");
     }
 
     #[test]

@@ -9,6 +9,13 @@
 //! checkpoint layout) and classifies each delta — the CI bench job runs
 //! this against the committed baseline so the perf trajectory is a
 //! *checked* number, not just an uploaded artifact.
+//!
+//! The reader/writer pair ([`Json::parse`] / [`Json::dump`] + [`escape`])
+//! is also the substrate of the sweep artifact (`SWEEP.json`,
+//! `docs/sweep.md`) and its `sweep diff` comparator, so the parser is
+//! hardened to be *total* over arbitrary files: truncated input, garbage,
+//! and pathological nesting (bounded by [`MAX_DEPTH`]) return `Err` —
+//! never a panic or a stack overflow.
 
 use std::collections::BTreeMap;
 
@@ -23,17 +30,80 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Containers deeper than this are rejected with an `Err` instead of
+/// recursing toward a stack overflow — malformed/adversarial inputs (e.g.
+/// `"[".repeat(1 << 20)`) must never abort the process. Every report this
+/// crate emits nests < 10 deep.
+const MAX_DEPTH: usize = 128;
+
 impl Json {
     /// Parse a complete JSON document (trailing whitespace allowed).
+    ///
+    /// Total: every input — truncated, deeply nested, garbage — returns
+    /// `Ok` or `Err`, never panics (the `sweep diff`/`bench compare`
+    /// comparators feed this user-supplied files).
     pub fn parse(text: &str) -> Result<Json, String> {
         let b = text.as_bytes();
         let mut pos = 0;
-        let v = parse_value(b, &mut pos)?;
+        let v = parse_value(b, &mut pos, 0)?;
         skip_ws(b, &mut pos);
         if pos != b.len() {
             return Err(format!("trailing garbage at byte {pos}"));
         }
         Ok(v)
+    }
+
+    /// Serialize back to compact JSON text that re-parses to an equal
+    /// value. Non-finite numbers (never produced by the parser, but
+    /// constructible) serialize as `null` so the output is always valid
+    /// JSON. Used by the sweep runner to carry completed-cell records from
+    /// an existing artifact into the merged one verbatim.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    out.push_str(&format!("{v}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                out.push_str(&escape(s));
+                out.push('"');
+            }
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.dump_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push('"');
+                    out.push_str(&escape(k));
+                    out.push_str("\":");
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
+        }
     }
 
     /// Walk a `.`-separated path of object keys / array indices.
@@ -64,13 +134,38 @@ impl Json {
     }
 }
 
+/// JSON string escaping for the hand-rolled writers ([`Json::dump`] and
+/// the sweep artifact emitter): quotes, backslashes and control characters
+/// become escapes; everything else passes through as UTF-8.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 fn skip_ws(b: &[u8], pos: &mut usize) {
     while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
         *pos += 1;
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!(
+            "nesting deeper than {MAX_DEPTH} at byte {pos}",
+            pos = *pos
+        ));
+    }
     skip_ws(b, pos);
     match b.get(*pos) {
         None => Err("unexpected end of input".into()),
@@ -84,7 +179,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
             }
             loop {
                 skip_ws(b, pos);
-                let key = match parse_value(b, pos)? {
+                let key = match parse_value(b, pos, depth + 1)? {
                     Json::Str(s) => s,
                     other => return Err(format!("object key must be a string, got {other:?}")),
                 };
@@ -93,7 +188,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                     return Err(format!("expected ':' at byte {pos}", pos = *pos));
                 }
                 *pos += 1;
-                m.insert(key, parse_value(b, pos)?);
+                m.insert(key, parse_value(b, pos, depth + 1)?);
                 skip_ws(b, pos);
                 match b.get(*pos) {
                     Some(b',') => *pos += 1,
@@ -114,7 +209,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                 return Ok(Json::Arr(a));
             }
             loop {
-                a.push(parse_value(b, pos)?);
+                a.push(parse_value(b, pos, depth + 1)?);
                 skip_ws(b, pos);
                 match b.get(*pos) {
                     Some(b',') => *pos += 1,
@@ -352,6 +447,77 @@ mod tests {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse(r#"{"a":}"#).is_err());
         assert!(Json::parse("[1,]").is_err());
+    }
+
+    #[test]
+    fn exponent_and_signed_zero_numbers_parse_exactly() {
+        // The sweep comparator feeds this arbitrary artifact files, so the
+        // number grammar corners must parse (or Err) — never panic.
+        let v = Json::parse(r#"[1e2,1E2,1.5e-3,2e+4,-0.0,-0,0.25,123456789.0]"#).unwrap();
+        assert_eq!(v.at("0").unwrap().num(), Some(100.0));
+        assert_eq!(v.at("1").unwrap().num(), Some(100.0));
+        assert_eq!(v.at("2").unwrap().num(), Some(0.0015));
+        assert_eq!(v.at("3").unwrap().num(), Some(20000.0));
+        // Negative zero keeps its sign bit through parse and dump.
+        let nz = v.at("4").unwrap().num().unwrap();
+        assert_eq!(nz, 0.0);
+        assert!(nz.is_sign_negative(), "-0.0 lost its sign");
+        assert_eq!(v.at("5").unwrap().num().map(f64::is_sign_negative), Some(true));
+        let back = Json::parse(&v.dump()).unwrap();
+        assert_eq!(back.at("4").unwrap().num().map(f64::is_sign_negative), Some(true));
+        // Malformed exponent/sign forms are errors, not panics.
+        for bad in ["1e", "1e+", "--1", "+-2", "1.2.3", ".", "-", "e5"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn deep_nesting_returns_err_not_stack_overflow() {
+        // 128 levels is fine; tens of thousands used to recurse the parser
+        // off the stack (process abort, not an Err).
+        let ok = format!("{}0{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+        let deep_arr = "[".repeat(100_000);
+        assert!(Json::parse(&deep_arr).is_err());
+        let deep_obj = "{\"k\":".repeat(100_000);
+        assert!(Json::parse(&deep_obj).is_err());
+        let over = format!("{}0{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&over).is_err());
+    }
+
+    #[test]
+    fn truncated_inputs_return_err() {
+        for bad in [
+            "",
+            "{",
+            "[1,2",
+            r#"{"a""#,
+            r#"{"a":"#,
+            r#"{"a":1,"#,
+            r#""unterminated"#,
+            r#""bad \u00"#,
+            r#""bad \"#,
+            "tru",
+            "nul",
+            "[1,2,",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should be an error");
+        }
+    }
+
+    #[test]
+    fn dump_round_trips_escapes_and_structure() {
+        let src = r#"{"a":[1,2.5,null,true],"s":"x\n\"y\"\\z","n":-0.125,"o":{"k":"v"}}"#;
+        let v = Json::parse(src).unwrap();
+        let dumped = v.dump();
+        assert_eq!(Json::parse(&dumped).unwrap(), v);
+        // Control characters escape on the way out.
+        let s = Json::Str("a\u{1}\tb".into());
+        assert_eq!(s.dump(), "\"a\\u0001\\tb\"");
+        assert_eq!(Json::parse(&s.dump()).unwrap(), s);
+        // Non-finite constructed numbers degrade to null, not invalid JSON.
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
     }
 
     #[test]

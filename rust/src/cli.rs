@@ -106,6 +106,22 @@ impl Args {
         self.opt_parse(name, default, "u64")
     }
 
+    /// Comma-separated list option (`--formats fp32,fp8_paper`): trimmed,
+    /// empty tokens dropped; `default` when the option is absent. An
+    /// explicitly supplied but empty list (`--formats ""`) is preserved as
+    /// empty so callers can reject it with context.
+    pub fn opt_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.opt(name) {
+            Some(raw) => raw
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
     /// Reject options outside `known` (typo protection mirroring
     /// `Ini::check_known`).
     pub fn check_known(&self, known: &[&str]) -> Result<(), CliError> {
@@ -149,6 +165,15 @@ mod tests {
         let a = parse("train --steps 5 --typo 1");
         assert!(a.check_known(&["steps"]).is_err());
         assert!(a.check_known(&["steps", "typo"]).is_ok());
+    }
+
+    #[test]
+    fn opt_list_splits_and_defaults() {
+        let a = parse("sweep tpl --formats fp32,fp8_paper,,e4m3");
+        assert_eq!(a.opt_list("formats", &["x"]), vec!["fp32", "fp8_paper", "e4m3"]);
+        assert_eq!(a.opt_list("rounds", &["default"]), vec!["default"]);
+        let b = parse("sweep tpl --formats=");
+        assert!(b.opt_list("formats", &["x"]).is_empty());
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! seed and hyper-parameters; reports top-1 *accuracy* (the paper's Table 2
 //! metric) for the scheme and its FP32 baseline. Bit-precision columns are
 //! quoted from the schemes' definitions.
+//!
+//! Grid form: `fp8train sweep table2` runs the same scheme comparison as a
+//! resumable format-axis sweep emitting `SWEEP.json`
+//! (`crate::sweep::presets`); this harness remains the paper-faithful
+//! table printer.
 
 use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;

@@ -4,6 +4,12 @@
 //! Three configurations: all-FP16 last layer (the paper's default),
 //! all-FP8 including the Softmax input (10% degradation in the paper), and
 //! FP8 GEMMs with the Softmax input preserved in FP16 (recovers baseline).
+//!
+//! Grid form: `fp8train sweep table3` covers the last-layer lever as a
+//! precision-position axis (`auto` = FP16 last layer, `middle` = FP8
+//! GEMMs + FP16 Softmax input) in a resumable `SWEEP.json`
+//! (`crate::sweep::presets`); the all-FP8-Softmax row needs this harness's
+//! `with_last_layer` policy and stays here.
 
 use super::{run_training, ExpOpts};
 use crate::logging::CsvSink;

@@ -47,6 +47,7 @@ pub mod optim;
 pub mod perf;
 pub mod runtime;
 pub mod state;
+pub mod sweep;
 pub mod tensor;
 pub mod testkit;
 pub mod train;

@@ -9,6 +9,11 @@
 //! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
 //! fp8train eval --checkpoint PATH [--batch N]
 //! fp8train checkpoint inspect <path.fp8ck>
+//! fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
+//!                                  [--chunks L] [--steps N] [--batch N] [--seed S]
+//!                                  [--out SWEEP.json] [--max-cells N]
+//!                                  [--timeout-per-cell SECS] [--list]
+//! fp8train sweep diff <A.json> <B.json>
 //! fp8train formats                 # print the FP8/FP16 format tables
 //! fp8train artifacts [--dir DIR]   # verify AOT artifacts load & run
 //! fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
@@ -22,7 +27,7 @@ use fp8train::error::{Context, Result};
 use fp8train::experiments::{self, ExpOpts};
 use fp8train::nn::{ModelSpec, PrecisionPolicy};
 use fp8train::numerics::{FloatFormat, RoundMode};
-use fp8train::optim::{Adam, Optimizer, Sgd};
+use fp8train::optim::standard_optimizer;
 use fp8train::runtime::{artifacts_dir, PjrtEngine, Runtime};
 use fp8train::state::StateMap;
 use fp8train::train::{train, LrSchedule, TrainConfig};
@@ -53,6 +58,23 @@ USAGE:
       model is reconstructed from the spec embedded in the checkpoint)
   fp8train checkpoint inspect <path.fp8ck>
       validate a checkpoint (magic, version, every CRC) and list its chunks
+  fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
+                 [--chunks L] [--steps N] [--batch N] [--seed S] [--out SWEEP.json]
+                 [--max-cells N] [--timeout-per-cell SECS] [--list] [--verbose]
+      expand a model template × format/round/pos/opt/chunk grid into a
+      deterministic cell list, train every cell, and write one resumable
+      machine-readable artifact (docs/sweep.md). <template> is a spec/preset
+      string with optional {a,b,c} placeholder axes, e.g.
+      \"conv3x3({8,16})-res(1x{16,32})-gap-fc(10)\", or a sweep preset:
+      formats_x_arch table2 table3 fig6_chunks. Axis lists are
+      comma-separated: --formats takes policy presets or float formats
+      (e4m3, 1-5-2, …); --rounds default|nearest|nearest_away|truncate|
+      stochastic; --pos auto|first|middle|last (last GEMM item override);
+      --opts sgd|adam; --chunks 0 = policy default. Re-running against an
+      existing artifact skips completed cells; interrupted cells resume
+      from their checkpoints under <out>.cells/.
+  fp8train sweep diff <A.json> <B.json>
+      per-cell comparison of two sweep artifacts
   fp8train formats
   fp8train artifacts [--dir DIR]
   fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
@@ -86,6 +108,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "exp" => cmd_exp(args),
         "train" => cmd_train(args),
+        "sweep" => cmd_sweep(args),
         "eval" => cmd_eval(args),
         "checkpoint" => cmd_checkpoint(args),
         "formats" => cmd_formats(),
@@ -186,11 +209,8 @@ impl RunSpec {
 }
 
 fn build_native(spec: &RunSpec, policy: PrecisionPolicy) -> Result<NativeEngine> {
-    let opt: Box<dyn Optimizer> = match spec.opt_name.as_str() {
-        "sgd" => Box::new(Sgd::new(0.9, 1e-4, spec.seed ^ 0x0117)),
-        "adam" => Box::new(Adam::new(1e-4, spec.seed ^ 0x0117)),
-        other => bail!("unknown optimizer {other:?} (sgd|adam)"),
-    };
+    let opt = standard_optimizer(&spec.opt_name, spec.seed)
+        .with_context(|| format!("unknown optimizer {:?} (sgd|adam)", spec.opt_name))?;
     Ok(NativeEngine::with_optimizer(&spec.model, policy, opt, spec.seed))
 }
 
@@ -290,6 +310,85 @@ fn cmd_train(args: &Args) -> Result<()> {
         r.best_test_err()
     );
     Ok(())
+}
+
+/// `fp8train sweep …` — the format × architecture grid harness
+/// (`rust/src/sweep/`, schema in `docs/sweep.md`). The grid and its cell
+/// ids are fully determined by the description (template + axes + budget),
+/// so re-running the same command against an existing `SWEEP.json` skips
+/// completed cells and resumes interrupted ones.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use fp8train::cli::CliError;
+    use fp8train::sweep::{self, RunOpts, SweepDef};
+    if args.positional.first().map(String::as_str) == Some("diff") {
+        args.check_known(&[])?;
+        let (a, b) = match (args.positional.get(1), args.positional.get(2)) {
+            (Some(a), Some(b)) => (a.as_str(), b.as_str()),
+            _ => bail!("usage: fp8train sweep diff <A.json> <B.json>"),
+        };
+        return sweep::diff(a, b);
+    }
+    args.check_known(&[
+        "formats",
+        "rounds",
+        "pos",
+        "opts",
+        "chunks",
+        "steps",
+        "batch",
+        "seed",
+        "out",
+        "cells-dir",
+        "max-cells",
+        "timeout-per-cell",
+        "tail",
+        "list",
+        "verbose",
+    ])?;
+    let head = args.positional.first().with_context(|| {
+        format!(
+            "sweep needs a spec template, a sweep preset name, or 'diff A B' (presets: {})",
+            sweep::presets::IDS.join(", ")
+        )
+    })?;
+    let mut def = sweep::presets::get(head).unwrap_or_else(|| SweepDef::new(head));
+    if args.opt("formats").is_some() {
+        def.formats = args.opt_list("formats", &[]);
+    }
+    if args.opt("rounds").is_some() {
+        def.rounds = args.opt_list("rounds", &[]);
+    }
+    if args.opt("pos").is_some() {
+        def.pos = args.opt_list("pos", &[]);
+    }
+    if args.opt("opts").is_some() {
+        def.opts = args.opt_list("opts", &[]);
+    }
+    if args.opt("chunks").is_some() {
+        def.chunks = Vec::new();
+        for tok in args.opt_list("chunks", &[]) {
+            let c = tok
+                .parse()
+                .map_err(|_| CliError::BadValue("chunks".into(), tok.clone(), "usize"))?;
+            def.chunks.push(c);
+        }
+    }
+    def.steps = args.opt_usize("steps", def.steps)?;
+    def.batch = args.opt_usize("batch", def.batch)?;
+    def.seed = args.opt_u64("seed", def.seed)?;
+    if args.flag("list") {
+        return sweep::list(&def);
+    }
+    let out = args.opt_or("out", "SWEEP.json");
+    let run_opts = RunOpts {
+        cells_dir: args.opt_or("cells-dir", &format!("{out}.cells")),
+        max_cells: args.opt_usize("max-cells", 0)?,
+        timeout_per_cell: args.opt_f32("timeout-per-cell", 0.0)? as f64,
+        tail: args.opt_usize("tail", 5)?,
+        verbose: args.flag("verbose"),
+        out,
+    };
+    sweep::run(&def, &run_opts)
 }
 
 /// `fp8train eval --checkpoint PATH [--batch N]` — restore a trained model

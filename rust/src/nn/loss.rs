@@ -52,13 +52,20 @@ pub fn softmax_xent(
         let z: f64 = exps.iter().sum();
         let p_label = exps[label] / z;
         loss -= p_label.max(1e-30).ln();
-        let pred = q
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(j, _)| j)
-            .unwrap();
-        if pred == label {
+        // Total, first-max-wins argmax. NaN logits are reachable the moment
+        // a run diverges (a sweep cell, an aggressive format), so the
+        // comparison must not panic: NaN candidates never win, ties keep
+        // the earliest index, and a row with no comparable value (all NaN)
+        // yields no prediction and counts as incorrect.
+        let mut pred: Option<usize> = None;
+        let mut best = f32::NEG_INFINITY;
+        for (j, &v) in q.iter().enumerate() {
+            if !v.is_nan() && (pred.is_none() || v > best) {
+                pred = Some(j);
+                best = v;
+            }
+        }
+        if pred == Some(label) {
             correct += 1;
         }
         let scale = loss_scale / n as f32;
@@ -143,6 +150,35 @@ mod tests {
         // FP8 rounds both to 4.0: the margin vanishes, loss becomes ln 2.
         assert!(fp32.loss < fp8.loss);
         assert!((fp8.loss - (2f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_logits_do_not_panic_and_count_incorrect() {
+        // Regression: the argmax used partial_cmp(..).unwrap() and panicked
+        // on the first NaN logit (reachable whenever a sweep cell
+        // diverges). Row 0 is all-NaN (no prediction → incorrect), row 1
+        // mixes a NaN into an otherwise-winning row (NaN never wins),
+        // row 2 is clean.
+        let nan = f32::NAN;
+        let logits = Tensor::from_vec(
+            &[3, 3],
+            vec![nan, nan, nan, 1.0, nan, 5.0, 0.0, 9.0, 1.0],
+        );
+        let out = softmax_xent(&logits, &[0, 2, 1], FloatFormat::FP32, 1.0);
+        assert_eq!(out.correct, 2); // rows 1 and 2; the all-NaN row is wrong
+    }
+
+    #[test]
+    fn argmax_tie_keeps_first_index() {
+        // First-max-wins: a tied row predicts the earliest class, totally
+        // ordered regardless of float comparison quirks (-inf rows
+        // included).
+        let ninf = f32::NEG_INFINITY;
+        let logits = Tensor::from_vec(&[2, 3], vec![2.0, 2.0, 1.0, ninf, ninf, ninf]);
+        let out = softmax_xent(&logits, &[0, 0], FloatFormat::FP32, 1.0);
+        assert_eq!(out.correct, 2);
+        let out = softmax_xent(&logits, &[1, 1], FloatFormat::FP32, 1.0);
+        assert_eq!(out.correct, 0);
     }
 
     #[test]

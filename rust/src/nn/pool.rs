@@ -43,13 +43,23 @@ impl Layer for MaxPool2d {
                 let oplane = (img * c + ch) * oh * ow;
                 for oy in 0..oh {
                     for ox in 0..ow {
-                        let mut best = f32::NEG_INFINITY;
-                        let mut best_i = 0usize;
+                        // Seed the scan from the window's own first element:
+                        // a window that is all-NaN or all -inf must keep its
+                        // argmax inside the window (a 0-initialized flat
+                        // index would route the backward gradient to element
+                        // 0 of image 0, channel 0).
+                        let first = plane + oy * self.stride * w + ox * self.stride;
+                        let mut best = x.data[first];
+                        let mut best_i = first;
                         for ky in 0..self.k {
                             for kx in 0..self.k {
                                 let i = plane + (oy * self.stride + ky) * w + ox * self.stride + kx;
-                                if x.data[i] > best {
-                                    best = x.data[i];
+                                let v = x.data[i];
+                                // NaN-safe: a NaN candidate never wins over a
+                                // comparable value; a NaN incumbent loses to
+                                // the first comparable value.
+                                if (best.is_nan() && !v.is_nan()) || v > best {
+                                    best = v;
                                     best_i = i;
                                 }
                             }
@@ -63,11 +73,24 @@ impl Layer for MaxPool2d {
         if ctx.train {
             self.argmax = argmax;
             self.in_shape = x.shape.clone();
+        } else {
+            // Invalidate saved state: a backward after an eval-mode forward
+            // would otherwise silently reuse the argmax/shape of an earlier
+            // training batch (misrouted gradients, wrong dx shape).
+            self.argmax.clear();
+            self.in_shape.clear();
         }
         out
     }
 
     fn backward(&mut self, dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        assert!(
+            !self.in_shape.is_empty() && self.argmax.len() == dy.len(),
+            "maxpool backward without a matching train-mode forward \
+             (saved argmax covers {} elements, dy has {})",
+            self.argmax.len(),
+            dy.len()
+        );
         let mut dx = Tensor::zeros(&self.in_shape.clone());
         for (i, &src) in self.argmax.iter().enumerate() {
             dx.data[src] += dy.data[i];
@@ -106,13 +129,29 @@ impl Layer for GlobalAvgPool {
         }
         if ctx.train {
             self.in_shape = x.shape.clone();
+        } else {
+            // See MaxPool2d::forward: eval-mode forwards invalidate the
+            // saved shape so a stale backward cannot misroute gradients.
+            self.in_shape.clear();
         }
         out
     }
 
     fn backward(&mut self, dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        assert!(
+            !self.in_shape.is_empty(),
+            "gap backward without a matching train-mode forward"
+        );
         let shape = self.in_shape.clone();
         let (n, c, hw) = (shape[0], shape[1], shape[2] * shape[3]);
+        assert_eq!(
+            dy.len(),
+            n * c,
+            "gap backward: dy has {} elements, saved input shape {:?} implies {}",
+            dy.len(),
+            shape,
+            n * c
+        );
         let mut dx = Tensor::zeros(&shape);
         for img in 0..n {
             for ch in 0..c {
@@ -174,6 +213,69 @@ mod tests {
         assert_eq!(y.data, vec![2.5, 10.0]);
         let dx = g.backward(Tensor::from_vec(&[1, 2], vec![4.0, 8.0]), &ctx);
         assert_eq!(dx.data, vec![1., 1., 1., 1., 2., 2., 2., 2.]);
+    }
+
+    #[test]
+    fn maxpool_nan_and_neg_inf_windows_stay_in_window() {
+        // Regression: best_i used to start at flat index 0, so an all-NaN
+        // or all -inf window routed its gradient to element 0 of the whole
+        // buffer (image 0, channel 0).
+        let policy = PrecisionPolicy::fp32();
+        let ctx = QuantCtx::new(&policy, 0, true);
+        let mut p = MaxPool2d::new(2, 2);
+        let nan = f32::NAN;
+        let ninf = f32::NEG_INFINITY;
+        let x = Tensor::from_vec(
+            &[1, 1, 4, 4],
+            vec![
+                1., 2., nan, nan, //
+                3., 4., nan, nan, //
+                ninf, ninf, 5., nan, //
+                ninf, ninf, 6., 7.,
+            ],
+        );
+        let y = p.forward(x, &ctx);
+        assert_eq!(y.data[0], 4.0); // finite window unaffected
+        assert!(y.data[1].is_nan()); // all-NaN window forwards NaN
+        assert_eq!(y.data[2], ninf); // all -inf window forwards -inf
+        assert_eq!(y.data[3], 7.0); // NaN candidates never beat finite ones
+        let dy = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let dx = p.backward(dy, &ctx);
+        // Element 0 only receives the finite window's gradient — nothing
+        // leaks from the degenerate windows.
+        assert_eq!(dx.data[0], 0.0);
+        assert_eq!(dx.data[5], 1.0); // value 4
+        assert_eq!(dx.data[2], 2.0); // all-NaN window → its first element
+        assert_eq!(dx.data[8], 3.0); // all -inf window → its first element
+        assert_eq!(dx.data[15], 4.0); // value 7
+        assert_eq!(dx.data.iter().filter(|&&v| v != 0.0).count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "maxpool backward without a matching train-mode forward")]
+    fn maxpool_backward_after_eval_forward_panics() {
+        let policy = PrecisionPolicy::fp32();
+        let train = QuantCtx::new(&policy, 0, true);
+        let eval = QuantCtx::new(&policy, 0, false);
+        let mut p = MaxPool2d::new(2, 2);
+        // A train forward on a *different* batch shape plants stale state…
+        p.forward(Tensor::zeros(&[2, 1, 4, 4]), &train);
+        // …the eval forward must invalidate it, so this backward asserts
+        // instead of silently misrouting gradients through the old argmax.
+        p.forward(Tensor::zeros(&[1, 1, 4, 4]), &eval);
+        p.backward(Tensor::zeros(&[1, 1, 2, 2]), &eval);
+    }
+
+    #[test]
+    #[should_panic(expected = "gap backward without a matching train-mode forward")]
+    fn gap_backward_after_eval_forward_panics() {
+        let policy = PrecisionPolicy::fp32();
+        let train = QuantCtx::new(&policy, 0, true);
+        let eval = QuantCtx::new(&policy, 0, false);
+        let mut g = GlobalAvgPool::new();
+        g.forward(Tensor::zeros(&[2, 3, 2, 2]), &train);
+        g.forward(Tensor::zeros(&[1, 3, 2, 2]), &eval);
+        g.backward(Tensor::zeros(&[1, 3]), &eval);
     }
 
     #[test]

@@ -232,6 +232,20 @@ impl PrecisionPolicy {
         self
     }
 
+    /// Override the GEMM accumulation rounding mode everywhere but the
+    /// FP32 paths (the `sweep` round-mode axis — nearest vs stochastic vs
+    /// truncate on otherwise-identical cells). The weight-update path is
+    /// deliberately untouched: its rounding is part of the update scheme
+    /// (Table 4), not of the GEMM accumulation study.
+    pub fn with_round(mut self, round: RoundMode) -> Self {
+        for g in self.gemm.iter_mut().chain(self.gemm_last.iter_mut()) {
+            if !g.is_fp32() {
+                g.round = round;
+            }
+        }
+        self
+    }
+
     pub fn renamed(mut self, name: &str) -> Self {
         self.name = name.to_string();
         self
@@ -506,6 +520,27 @@ mod tests {
         assert_eq!(p.gemm_for(GemmRole::Forward, LayerPos::Middle).chunk, 128);
         let b = PrecisionPolicy::fp32().with_chunk(128);
         assert!(b.gemm_for(GemmRole::Forward, LayerPos::Middle).is_fp32());
+    }
+
+    #[test]
+    fn round_override_spares_fp32_and_update_path() {
+        let p = PrecisionPolicy::fp8_paper().with_round(RoundMode::Stochastic);
+        assert_eq!(
+            p.gemm_for(GemmRole::Forward, LayerPos::Middle).round,
+            RoundMode::Stochastic
+        );
+        assert_eq!(
+            p.gemm_for(GemmRole::Gradient, LayerPos::Last).round,
+            RoundMode::Stochastic
+        );
+        // The update AXPY keeps its own scheme.
+        assert_eq!(p.update.round, PrecisionPolicy::fp8_paper().update.round);
+        let b = PrecisionPolicy::fp32().with_round(RoundMode::Truncate);
+        assert!(b.gemm_for(GemmRole::Forward, LayerPos::Middle).is_fp32());
+        assert_eq!(
+            b.gemm_for(GemmRole::Forward, LayerPos::Middle).round,
+            PrecisionPolicy::fp32().gemm_for(GemmRole::Forward, LayerPos::Middle).round
+        );
     }
 
     #[test]

@@ -324,6 +324,50 @@ impl ModelSpec {
         Ok(spec)
     }
 
+    /// Expand a spec *template* — a DSL (or preset-name) string with
+    /// `{a,b,c}` placeholder axes — into the list of concrete spec
+    /// strings, in deterministic order.
+    ///
+    /// Placeholders are plain textual alternations, so one syntax covers
+    /// width axes (`conv3x3({8,16})`), depth axes (`res({1,2}x32)`,
+    /// `mlp(440,bn:256x{3,5},30)`) *and* precision-position axes
+    /// (`fc(10)@{middle,last}`). Ordering contract (the sweep grid and
+    /// cell ids depend on it): the **leftmost placeholder varies
+    /// slowest**; a template without placeholders expands to itself.
+    /// Nesting and unmatched braces are errors, as is a grid wider than
+    /// [`MAX_TEMPLATE_EXPANSIONS`]. The expansions are *not* parsed here —
+    /// callers validate each with [`ModelSpec::resolve`] so error messages
+    /// can point at the offending concrete spec.
+    pub fn expand_template(template: &str) -> Result<Vec<String>, SpecError> {
+        let mut out = Vec::new();
+        expand_template_into(template, &mut out)?;
+        Ok(out)
+    }
+
+    /// Re-derive this spec with the precision position of its **last**
+    /// conv/fc item overridden — the sweep's `pos` axis (the §4.1/Table 3
+    /// last-layer lever applied to arbitrary architectures). The result is
+    /// re-validated and loses any preset tag (its identity is the
+    /// canonical DSL, which records the override).
+    pub fn with_pos_override(&self, pos: LayerPos) -> Result<ModelSpec, SpecError> {
+        let mut items = self.items.clone();
+        let slot = items.iter_mut().rev().find_map(|i| match i {
+            ItemSpec::Conv { pos, .. } | ItemSpec::Fc { pos, .. } => Some(pos),
+            _ => None,
+        });
+        match slot {
+            Some(p) => *p = Some(pos),
+            None => return err("spec has no conv/fc item to position-override"),
+        }
+        let spec = ModelSpec {
+            preset: None,
+            input: self.input,
+            items,
+        };
+        spec.plan()?;
+        Ok(spec)
+    }
+
     /// The preset id this spec was resolved from, if any.
     pub fn preset_id(&self) -> Option<&'static str> {
         self.preset
@@ -728,6 +772,54 @@ fn resolve_name(explicit: &Option<String>, auto: String) -> Result<String, SpecE
             Ok(n.clone())
         }
     }
+}
+
+// ---- template expansion ----------------------------------------------------
+
+/// Widest grid a single template may expand to; a typo like
+/// `{1,2,3,4,5,6,7,8}` repeated across many axes should fail loudly, not
+/// allocate a million strings.
+pub const MAX_TEMPLATE_EXPANSIONS: usize = 4096;
+
+/// Recursive worker behind [`ModelSpec::expand_template`]: substitute each
+/// alternative of the leftmost `{…}` and recurse on the result, so the
+/// leftmost axis varies slowest.
+fn expand_template_into(s: &str, out: &mut Vec<String>) -> Result<(), SpecError> {
+    let Some(open) = s.find('{') else {
+        if s.contains('}') {
+            return err(format!("unmatched '}}' in template {s:?}"));
+        }
+        if out.len() >= MAX_TEMPLATE_EXPANSIONS {
+            return err(format!(
+                "template expands to more than {MAX_TEMPLATE_EXPANSIONS} specs"
+            ));
+        }
+        out.push(s.to_string());
+        return Ok(());
+    };
+    if s[..open].contains('}') {
+        return err(format!("unmatched '}}' in template {s:?}"));
+    }
+    let rest = &s[open + 1..];
+    let close = rest
+        .find('}')
+        .ok_or_else(|| SpecError(format!("unmatched '{{' in template {s:?}")))?;
+    let inner = &rest[..close];
+    if inner.contains('{') {
+        return err(format!("nested '{{' in template {s:?}"));
+    }
+    if inner.is_empty() {
+        return err(format!("empty placeholder {{}} in template {s:?}"));
+    }
+    for alt in inner.split(',') {
+        let alt = alt.trim();
+        if alt.is_empty() {
+            return err(format!("empty alternative in {{{inner}}} of template {s:?}"));
+        }
+        let expanded = format!("{}{}{}", &s[..open], alt, &rest[close + 1..]);
+        expand_template_into(&expanded, out)?;
+    }
+    Ok(())
 }
 
 // ---- printing --------------------------------------------------------------
@@ -1495,6 +1587,78 @@ mod tests {
         assert_eq!(y.shape, vec![2, 4]);
         let dx = m.backward(Tensor::full(&[2, 4], 0.1), &ctx);
         assert_eq!(dx.shape, vec![2, 12]);
+    }
+
+    #[test]
+    fn template_expansion_order_and_validity() {
+        // No placeholder → identity.
+        assert_eq!(
+            ModelSpec::expand_template("cifar_cnn").unwrap(),
+            vec!["cifar_cnn"]
+        );
+        // Leftmost axis varies slowest; every expansion parses.
+        let got = ModelSpec::expand_template("mlp(8,{4,6}x{1,2},3)").unwrap();
+        assert_eq!(
+            got,
+            vec![
+                "mlp(8,4x1,3)",
+                "mlp(8,4x2,3)",
+                "mlp(8,6x1,3)",
+                "mlp(8,6x2,3)"
+            ]
+        );
+        for s in &got {
+            ModelSpec::resolve(s).unwrap();
+        }
+        // A position axis is just another alternation.
+        let got = ModelSpec::expand_template("in(8)-fc(6)-relu-fc(4)@{middle,last}").unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(got[0].ends_with("@middle") && got[1].ends_with("@last"));
+        // Deterministic: same template → same list.
+        assert_eq!(got, ModelSpec::expand_template("in(8)-fc(6)-relu-fc(4)@{middle,last}").unwrap());
+    }
+
+    #[test]
+    fn template_expansion_rejects_malformed_and_huge() {
+        for (tpl, why) in [
+            ("conv3x3({8,16)-gap-fc(2)", "unmatched open"),
+            ("conv3x3(8})-gap-fc(2)", "unmatched close"),
+            ("conv3x3(8)}-{gap-fc(2)", "close before open"),
+            ("conv3x3({8,{16}})-gap-fc(2)", "nested"),
+            ("conv3x3({})-gap-fc(2)", "empty placeholder"),
+            ("conv3x3({8,})-gap-fc(2)", "empty alternative"),
+        ] {
+            assert!(ModelSpec::expand_template(tpl).is_err(), "{why}: {tpl:?}");
+        }
+        // 8^5 = 32768 > MAX_TEMPLATE_EXPANSIONS: refused, not allocated.
+        let axis = "{1,2,3,4,5,6,7,8}";
+        let huge = format!("mlp(8,{axis}x{axis},{axis}x{axis},{axis},3)");
+        assert!(ModelSpec::expand_template(&huge).is_err());
+    }
+
+    #[test]
+    fn pos_override_rewrites_last_gemm_item() {
+        // The last GEMM item of a preset flips Last → Middle (the Table 3
+        // lever), re-validates, and round-trips through the canonical DSL.
+        let spec = ModelSpec::cifar_resnet().with_pos_override(LayerPos::Middle).unwrap();
+        assert_eq!(spec.preset_id(), None);
+        let plan = spec.plan().unwrap();
+        let last_fc = plan
+            .steps
+            .iter()
+            .rev()
+            .find_map(|s| match s {
+                PlanStep::Fc { pos, .. } => Some(*pos),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(last_fc, LayerPos::Middle);
+        assert!(spec.canonical().contains("@middle"));
+        let back = ModelSpec::parse(&spec.canonical()).unwrap();
+        assert_eq!(back, spec);
+        // A spec with no GEMM item cannot be overridden.
+        let gapless = ModelSpec::parse("in(3x4x4)-gap").unwrap();
+        assert!(gapless.with_pos_override(LayerPos::Last).is_err());
     }
 
     #[test]

@@ -249,6 +249,10 @@ impl FloatFormat {
         let sig = (1u32 << 23) | m_field; // 24-bit true significand
         let mut keep = sig >> shift;
         let rem = sig & ((1u32 << shift) - 1);
+        // round_up invariant: `1 <= shift <= 31` (only debug-asserted
+        // there; release coverage is the wide-integer property test in
+        // numerics/rounding.rs). Here the `shift <= 0` early-return and the
+        // `shift > 26` flush bound it to 1..=26.
         if rem != 0 && round_up(mode, keep, rem, shift, rbits) {
             keep += 1;
         }

@@ -146,6 +146,61 @@ mod tests {
         }
     }
 
+    /// Wide-integer reference for [`round_up`]: every decision is computed
+    /// in u64 on `2·rem` vs `2^shift` (no shift-dependent masks or
+    /// half-ulp constants), so it cannot share an overflow bug with the
+    /// u32 implementation.
+    fn reference_round_up(mode: RoundMode, keep: u64, rem: u64, shift: u32, rbits: u32) -> bool {
+        let top = 1u64 << shift; // exact for every shift ≤ 31
+        match mode {
+            RoundMode::Truncate => false,
+            RoundMode::NearestEven => 2 * rem > top || (2 * rem == top && keep & 1 == 1),
+            RoundMode::NearestAway => 2 * rem >= top,
+            RoundMode::Stochastic => rem + ((rbits as u64) >> (32 - shift)) >= top,
+        }
+    }
+
+    #[test]
+    fn round_up_matches_wide_reference_for_every_shift_and_mode() {
+        // The implementation only debug_asserts `1 <= shift <= 31`; this
+        // property test is what covers *release* builds across the whole
+        // legal shift range (quantizers reach shifts up to 26 — see the
+        // call site in numerics/format.rs — but the contract is 1..=31).
+        // Boundary remainders (0, 1, around half, top−1) plus random
+        // interior samples, crossed with even/odd keeps, random SR words
+        // and all four modes.
+        let mut rng = Xoshiro256::seed_from_u64(0xD1CE_2026);
+        let modes = [
+            RoundMode::Truncate,
+            RoundMode::NearestEven,
+            RoundMode::NearestAway,
+            RoundMode::Stochastic,
+        ];
+        for shift in 1..=31u32 {
+            let top = 1u64 << shift;
+            let half = top / 2;
+            let mut rems = vec![0, 1, half.saturating_sub(1), half, half + 1, top - 1];
+            for _ in 0..16 {
+                rems.push(rng.next_u64() % top);
+            }
+            for rem in rems {
+                let rem = rem.min(top - 1);
+                for keep in [0u32, 1, 2, 3, 0x007F_FFFF] {
+                    for mode in modes {
+                        for rbits in [0u32, 1, 0x8000_0000, 0xFFFF_FFFF, rng.next_u32()] {
+                            let got = round_up(mode, keep, rem as u32, shift, rbits);
+                            let want = reference_round_up(mode, keep as u64, rem, shift, rbits);
+                            assert_eq!(
+                                got, want,
+                                "mode {mode:?} shift {shift} rem {rem} keep {keep} rbits {rbits:#010x}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     #[test]
     fn stochastic_extremes() {
         // rem = 0 never rounds up regardless of random bits.

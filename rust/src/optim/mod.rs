@@ -23,6 +23,20 @@ use crate::numerics::{RoundMode, Xoshiro256};
 use crate::state::{StateError, StateMap};
 use std::collections::BTreeMap;
 
+/// The standard optimizer configurations, by CLI name — the single
+/// definition behind `fp8train train --opt` *and* the sweep harness's
+/// optimizer axis, so sweep cells stay comparable with train runs
+/// (SGD momentum 0.9 / weight decay 1e-4; Adam weight decay 1e-4; the
+/// shared `seed ^ 0x0117` stream split). Returns `None` for unknown
+/// names.
+pub fn standard_optimizer(name: &str, seed: u64) -> Option<Box<dyn Optimizer>> {
+    Some(match name {
+        "sgd" => Box::new(Sgd::new(0.9, 1e-4, seed ^ 0x0117)),
+        "adam" => Box::new(Adam::new(1e-4, seed ^ 0x0117)),
+        _ => return None,
+    })
+}
+
 /// Shared optimizer interface: one call per training step, after the
 /// backward pass has accumulated gradients.
 pub trait Optimizer: Send {
@@ -156,6 +170,16 @@ mod tests {
     fn toy_model() -> Linear {
         let mut rng = Xoshiro256::seed_from_u64(0);
         Linear::new("fc", 2, 2, LayerPos::Middle, &mut rng)
+    }
+
+    #[test]
+    fn standard_optimizer_knows_both_names() {
+        // The single constructor behind `train --opt` and the sweep's opt
+        // axis: both names resolve, anything else is None (callers attach
+        // their own context).
+        assert!(standard_optimizer("sgd", 7).is_some());
+        assert!(standard_optimizer("adam", 7).is_some());
+        assert!(standard_optimizer("lbfgs", 7).is_none());
     }
 
     #[test]

@@ -86,6 +86,18 @@ impl PhaseSnapshot {
         self.calls[phase as usize]
     }
 
+    /// The per-phase delta `self − earlier` (saturating): lets a caller
+    /// attribute a scoped region (e.g. one sweep cell) without resetting
+    /// the process-wide accumulators out from under concurrent readers.
+    pub fn since(&self, earlier: &PhaseSnapshot) -> PhaseSnapshot {
+        let mut out = PhaseSnapshot::default();
+        for i in 0..4 {
+            out.ns[i] = self.ns[i].saturating_sub(earlier.ns[i]);
+            out.calls[i] = self.calls[i].saturating_sub(earlier.calls[i]);
+        }
+        out
+    }
+
     /// Render as a JSON object mapping phase id → `{ns, calls}` plus the
     /// per-iteration times when `iters > 0` is supplied.
     pub fn to_json(&self, iters: u64) -> String {
@@ -143,6 +155,24 @@ mod tests {
         let j = after.to_json(2);
         assert!(j.contains("\"gemm\":{"), "{j}");
         assert!(j.contains("\"quantize\":{"), "{j}");
+    }
+
+    #[test]
+    fn since_subtracts_per_phase() {
+        let a = PhaseSnapshot {
+            ns: [100, 200, 300, 400],
+            calls: [1, 2, 3, 4],
+        };
+        let b = PhaseSnapshot {
+            ns: [150, 200, 350, 1000],
+            calls: [2, 2, 4, 10],
+        };
+        let d = b.since(&a);
+        assert_eq!(d.ns, [50, 0, 50, 600]);
+        assert_eq!(d.calls, [1, 0, 1, 6]);
+        // Saturating, never panicking, when counters were reset in between.
+        let z = a.since(&b);
+        assert_eq!(z.ns, [0, 0, 0, 0]);
     }
 
     #[test]

@@ -1,0 +1,958 @@
+//! `fp8train sweep` — format × architecture grid runs.
+//!
+//! The paper's headline claim is accuracy "on a spectrum of Deep Learning
+//! models and datasets", and the follow-up studies (Graphcore's *8-bit
+//! Numerical Formats for DNNs*, Mellempudi et al.) show the interesting
+//! science lives in the **format × architecture grid**, not in single
+//! runs. This module is the scenario-diversity harness for that grid:
+//!
+//! - a [`SweepDef`] crosses a **model-template axis** (a `ModelSpec` DSL
+//!   string with `{a,b,c}` placeholders — widths, depths, even
+//!   `@{middle,last}` precision positions; see
+//!   [`ModelSpec::expand_template`]) with **format** (policy presets *or*
+//!   bare float formats like `e4m3`), **round-mode**, **precision-position**
+//!   (`auto|first|middle|last`, applied to the last GEMM item), **optimizer**
+//!   and **chunk-size** axes;
+//! - [`expand`] turns it into a deterministic, ordered list of [`Cell`]s —
+//!   the leftmost/model axis varies slowest, and every cell has a
+//!   canonical id string (the resume key);
+//! - [`run`] drives each cell through the existing trainer
+//!   (`train::train`, the same committed-run budget as
+//!   `experiments::run_training`) and appends one record per cell to a
+//!   single machine-readable artifact, `SWEEP.json` (schema documented in
+//!   `docs/sweep.md`), with final loss/accuracy, the loss-curve tail,
+//!   wall time and the per-phase [`crate::perf`] timings.
+//!
+//! **Resumable**: cells already recorded as `done` in an existing artifact
+//! are skipped (their records carry over verbatim via
+//! [`crate::benchcmp::Json::dump`]); a cell interrupted mid-run resumes
+//! from its own `.fp8ck` checkpoint under `<out>.cells/` — the same
+//! bit-exact `{step}`-checkpoint machinery the trainer uses, so an
+//! interrupted-and-resumed cell is element-wise identical to an
+//! uninterrupted one (`rust/tests/resume_equivalence.rs`).
+//!
+//! **Budgeted**: `--max-cells` bounds how many cells one invocation runs
+//! (the rest are deferred, not forgotten), `--steps` bounds each cell, and
+//! `--timeout-per-cell` is a soft wall-clock budget checked at segment
+//! boundaries (a timed-out cell is recorded as `timeout`, keeps its
+//! checkpoint, and is re-attempted — resumed, not restarted — by the next
+//! invocation).
+//!
+//! `sweep diff A B` compares two artifacts per-cell on the zero-dependency
+//! JSON reader in [`crate::benchcmp`].
+
+pub mod presets;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::benchcmp::{escape, Json};
+use crate::coordinator::NativeEngine;
+use crate::data::SyntheticDataset;
+use crate::error::{Context, Result};
+use crate::experiments;
+use crate::nn::{LayerPos, ModelSpec, PrecisionPolicy};
+use crate::nn::linear::layer_hash;
+use crate::numerics::{FloatFormat, RoundMode};
+use crate::optim::standard_optimizer;
+use crate::perf::PhaseSnapshot;
+use crate::state::StateMap;
+use crate::train::{train, LrSchedule, TrainConfig, TrainResult};
+use crate::{bail, ensure};
+
+/// Artifact schema version (`SWEEP.json` → `"schema"`).
+pub const SCHEMA: u64 = 1;
+
+/// A sweep description: one template axis crossed with five value axes
+/// plus the shared per-cell training budget. Every field participates in
+/// the cell ids, so editing any of them re-keys the grid.
+#[derive(Clone, Debug)]
+pub struct SweepDef {
+    /// Model template: a preset name or DSL string, with optional `{a,b,c}`
+    /// placeholder axes.
+    pub template: String,
+    /// Format axis: policy presets (`fp32`, `fp8_paper`, `dorefa`, …) or
+    /// bare float formats (`e4m3`, `1-5-2`, `bf16`, …) which run the
+    /// paper's scheme with that GEMM operand format.
+    pub formats: Vec<String>,
+    /// Round-mode axis: `default` (the policy's own) or a
+    /// [`RoundMode`] id applied to every non-FP32 GEMM.
+    pub rounds: Vec<String>,
+    /// Precision-position axis: `auto` (spec defaults) or
+    /// `first|middle|last` applied to the last GEMM item.
+    pub pos: Vec<String>,
+    /// Optimizer axis: `sgd` | `adam`.
+    pub opts: Vec<String>,
+    /// Chunk-size axis: `0` keeps the policy's chunk, anything else
+    /// overrides it (Fig. 6's accumulation-length lever).
+    pub chunks: Vec<usize>,
+    /// Training steps per cell.
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl SweepDef {
+    /// A single-cell-per-model description: paper policy, default round
+    /// mode / positions / chunking, SGD — each axis then widens from the
+    /// CLI or a preset.
+    pub fn new(template: &str) -> Self {
+        Self {
+            template: template.to_string(),
+            formats: vec!["fp8_paper".into()],
+            rounds: vec!["default".into()],
+            pos: vec!["auto".into()],
+            opts: vec!["sgd".into()],
+            chunks: vec![0],
+            steps: 300,
+            batch: 32,
+            seed: 42,
+        }
+    }
+}
+
+/// One concrete grid cell (resolved model id × one value per axis × the
+/// shared budget).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Cell {
+    /// Resolved model identity ([`ModelSpec::id`]): preset id or canonical
+    /// DSL.
+    pub model: String,
+    pub fmt: String,
+    pub round: String,
+    pub pos: String,
+    pub opt: String,
+    pub chunk: usize,
+    pub steps: usize,
+    pub batch: usize,
+    pub seed: u64,
+}
+
+impl Cell {
+    /// The canonical cell id — the resume key. Built from the resolved
+    /// model id and every axis + budget knob, so identical descriptions
+    /// produce identical ids and *any* change re-runs the cell rather than
+    /// silently reusing stale results.
+    pub fn id(&self) -> String {
+        format!(
+            "{}|fmt={}|round={}|pos={}|opt={}|chunk={}|steps={}|batch={}|seed={}",
+            self.model,
+            self.fmt,
+            self.round,
+            self.pos,
+            self.opt,
+            self.chunk,
+            self.steps,
+            self.batch,
+            self.seed
+        )
+    }
+}
+
+/// Runtime knobs of one `sweep` invocation (everything that does *not*
+/// re-key the grid).
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Artifact path (`SWEEP.json`).
+    pub out: String,
+    /// Directory for in-cell durability checkpoints.
+    pub cells_dir: String,
+    /// Run at most this many cells this invocation (0 = unlimited); the
+    /// rest are deferred to the next invocation, which skips completed
+    /// cells.
+    pub max_cells: usize,
+    /// Soft per-cell wall-clock budget in seconds (0 = none), checked at
+    /// segment boundaries.
+    pub timeout_per_cell: f64,
+    /// Loss-curve points kept per cell record.
+    pub tail: usize,
+    pub verbose: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            out: "SWEEP.json".into(),
+            cells_dir: "SWEEP.json.cells".into(),
+            max_cells: 0,
+            timeout_per_cell: 0.0,
+            tail: 5,
+            verbose: false,
+        }
+    }
+}
+
+/// Resolve a format-axis token: a [`PrecisionPolicy`] preset name first
+/// (`fp32`, `fp8_paper`, the Table 2 baselines, …), else a bare
+/// [`FloatFormat`] spelling (`e4m3`, `1-5-2`, `bf16`, …) which runs the
+/// paper's scheme — FP16 chunked accumulation, FP16-SR updates, FP16
+/// first/last layers — with that GEMM operand format. The latter is the
+/// Graphcore-style format axis.
+pub fn resolve_policy(token: &str) -> Result<PrecisionPolicy> {
+    if let Some(p) = PrecisionPolicy::parse(token) {
+        return Ok(p);
+    }
+    if let Some(fmt) = FloatFormat::parse(token) {
+        let mut p = PrecisionPolicy::fp8_paper();
+        for g in p.gemm.iter_mut() {
+            g.fmt_mult = fmt;
+        }
+        return Ok(p.renamed(&format!("paper_{}", fmt.community_name())));
+    }
+    bail!(
+        "unknown format-axis value {token:?} (policy presets: {}, …; or a float format: e4m3, 1-5-2, bf16, …)",
+        PrecisionPolicy::PRESETS.join(", ")
+    )
+}
+
+fn parse_round_axis(token: &str) -> Result<Option<RoundMode>> {
+    if token == "default" {
+        return Ok(None);
+    }
+    match RoundMode::parse(token) {
+        Some(m) => Ok(Some(m)),
+        None => bail!(
+            "unknown round-axis value {token:?} (default|nearest|nearest_away|truncate|stochastic)"
+        ),
+    }
+}
+
+fn parse_pos_axis(token: &str) -> Result<Option<LayerPos>> {
+    Ok(match token {
+        "auto" => None,
+        "first" => Some(LayerPos::First),
+        "middle" => Some(LayerPos::Middle),
+        "last" => Some(LayerPos::Last),
+        other => bail!("unknown pos-axis value {other:?} (auto|first|middle|last)"),
+    })
+}
+
+fn ensure_unique(axis: &str, values: &[String]) -> Result<()> {
+    for (i, a) in values.iter().enumerate() {
+        ensure!(
+            !values[i + 1..].contains(a),
+            "duplicate {axis}-axis value {a:?} would alias cell ids"
+        );
+    }
+    Ok(())
+}
+
+/// Expand a description into the ordered cell list. Deterministic — the
+/// contract the resume key depends on: model (template order, leftmost
+/// placeholder slowest) ≫ format ≫ round ≫ pos ≫ opt ≫ chunk. Every axis
+/// value is validated here, once, so `run` cannot trip over a typo five
+/// cells in.
+pub fn expand(def: &SweepDef) -> Result<Vec<Cell>> {
+    ensure!(def.steps > 0, "sweep needs --steps ≥ 1");
+    ensure!(def.batch > 0, "sweep needs --batch ≥ 1");
+    // The artifact stores numbers as f64 (the zero-dep JSON reader), so a
+    // seed above 2^53 would canonicalize to a *different* integer than
+    // the one in the cell id. Refuse rather than silently drift.
+    ensure!(
+        def.seed <= (1u64 << 53),
+        "sweep seeds must fit in 53 bits (JSON numbers are f64), got {}",
+        def.seed
+    );
+    for (axis, values) in [
+        ("format", &def.formats),
+        ("round", &def.rounds),
+        ("pos", &def.pos),
+        ("opt", &def.opts),
+    ] {
+        ensure!(!values.is_empty(), "sweep needs at least one {axis}-axis value");
+        ensure_unique(axis, values)?;
+    }
+    // Raw-spelling dedup above catches literal repeats; alias spellings
+    // ("e4m3" vs "1-4-3", "stochastic" vs "sr") would still train
+    // byte-identical cells under distinct ids, so dedup the value axes on
+    // their *resolved* identity too (the model axis does the same via
+    // spec.id()).
+    ensure_unique(
+        "format (resolved)",
+        &def.formats
+            .iter()
+            .map(|f| resolve_policy(f).map(|p| p.name))
+            .collect::<Result<Vec<_>>>()?,
+    )?;
+    ensure_unique(
+        "round (resolved)",
+        &def.rounds
+            .iter()
+            .map(|r| Ok(parse_round_axis(r)?.map_or("default", RoundMode::id).to_string()))
+            .collect::<Result<Vec<_>>>()?,
+    )?;
+    ensure_unique(
+        "pos (resolved)",
+        &def.pos
+            .iter()
+            .map(|p| Ok(format!("{:?}", parse_pos_axis(p)?)))
+            .collect::<Result<Vec<_>>>()?,
+    )?;
+    ensure!(!def.chunks.is_empty(), "sweep needs at least one chunk-axis value");
+    for (i, c) in def.chunks.iter().enumerate() {
+        ensure!(
+            !def.chunks[i + 1..].contains(c),
+            "duplicate chunk-axis value {c} would alias cell ids"
+        );
+    }
+    let expansions = ModelSpec::expand_template(&def.template)
+        .with_context(|| format!("expand template {:?}", def.template))?;
+    let mut models = Vec::with_capacity(expansions.len());
+    for m in &expansions {
+        let spec =
+            ModelSpec::resolve(m).with_context(|| format!("template expansion {m:?}"))?;
+        // Validate every pos override against every model now (a spec with
+        // no GEMM item, say, must fail at expansion time).
+        for p in &def.pos {
+            if let Some(pos) = parse_pos_axis(p)? {
+                spec.with_pos_override(pos).with_context(|| {
+                    format!("pos-axis value {p:?} on template expansion {m:?}")
+                })?;
+            }
+        }
+        let id = spec.id();
+        ensure!(
+            !models.contains(&id),
+            "template expansions {m:?} and an earlier one both resolve to model {id:?}"
+        );
+        models.push(id);
+    }
+    // (formats and rounds were validated by the resolved-dedup pass above.)
+    for o in &def.opts {
+        ensure!(
+            standard_optimizer(o, 0).is_some(),
+            "unknown opt-axis value {o:?} (sgd|adam)"
+        );
+    }
+    let mut cells = Vec::new();
+    for m in &models {
+        for f in &def.formats {
+            for r in &def.rounds {
+                for p in &def.pos {
+                    for o in &def.opts {
+                        for &c in &def.chunks {
+                            cells.push(Cell {
+                                model: m.clone(),
+                                fmt: f.clone(),
+                                round: r.clone(),
+                                pos: p.clone(),
+                                opt: o.clone(),
+                                chunk: c,
+                                steps: def.steps,
+                                batch: def.batch,
+                                seed: def.seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// `sweep … --list`: print the expanded grid (cell ids in run order)
+/// without training anything — the determinism contract made visible.
+pub fn list(def: &SweepDef) -> Result<()> {
+    let cells = expand(def)?;
+    println!("{} cells:", cells.len());
+    for (i, c) in cells.iter().enumerate() {
+        println!("[{i:>4}] {}", c.id());
+    }
+    Ok(())
+}
+
+/// `null` for non-finite values (a diverged cell's loss is NaN; the
+/// artifact must stay valid JSON).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// What the table renderer needs to say about one cell.
+struct CellSummary {
+    status: String,
+    final_err: Option<f64>,
+    final_loss: Option<f64>,
+    wall_ms: Option<f64>,
+    /// Durability checkpoint to delete once the caller has persisted the
+    /// record (only set for `done` cells).
+    ck_to_remove: Option<String>,
+}
+
+/// Serialize one cell record (`docs/sweep.md` documents the schema).
+fn cell_json(
+    cell: &Cell,
+    status: &str,
+    steps_done: usize,
+    wall_ms: f64,
+    r: Option<&TrainResult>,
+    phases: &PhaseSnapshot,
+    stepped: u64,
+    tail: usize,
+) -> String {
+    let (final_train_loss, final_test_loss, final_test_err, best_test_err) = match r {
+        Some(r) => (
+            jnum(r.final_train_loss),
+            jnum(r.curve.last().map(|p| p.test_loss).unwrap_or(f64::NAN)),
+            jnum(r.final_test_err),
+            jnum(r.best_test_err()),
+        ),
+        None => ("null".into(), "null".into(), "null".into(), "null".into()),
+    };
+    let curve_tail = match r {
+        Some(r) => {
+            let skip = r.curve.len().saturating_sub(tail);
+            let pts: Vec<String> = r.curve[skip..]
+                .iter()
+                .map(|p| {
+                    format!(
+                        "{{\"step\":{},\"train_loss\":{},\"test_loss\":{},\"test_err\":{}}}",
+                        p.step,
+                        jnum(p.train_loss),
+                        jnum(p.test_loss),
+                        jnum(p.test_err)
+                    )
+                })
+                .collect();
+            format!("[{}]", pts.join(","))
+        }
+        None => "[]".into(),
+    };
+    format!(
+        "{{\"id\":\"{}\",\"model\":\"{}\",\"fmt\":\"{}\",\"round\":\"{}\",\"pos\":\"{}\",\
+         \"opt\":\"{}\",\"chunk\":{},\"steps\":{},\"batch\":{},\"seed\":{},\
+         \"status\":\"{}\",\"steps_done\":{},\"wall_ms\":{},\
+         \"final_train_loss\":{},\"final_test_loss\":{},\"final_test_err\":{},\
+         \"best_test_err\":{},\"curve_tail\":{},\"phases\":{}}}",
+        escape(&cell.id()),
+        escape(&cell.model),
+        escape(&cell.fmt),
+        escape(&cell.round),
+        escape(&cell.pos),
+        escape(&cell.opt),
+        cell.chunk,
+        cell.steps,
+        cell.batch,
+        cell.seed,
+        status,
+        steps_done,
+        jnum(wall_ms),
+        final_train_loss,
+        final_test_loss,
+        final_test_err,
+        best_test_err,
+        curve_tail,
+        phases.to_json(stepped)
+    )
+}
+
+/// Atomically (write + rename) emit the artifact from the records
+/// collected so far, in grid order.
+fn write_artifact(path: &str, def: &SweepDef, records: &[String]) -> Result<()> {
+    let strs = |v: &[String]| {
+        v.iter()
+            .map(|s| format!("\"{}\"", escape(s)))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let chunks = def
+        .chunks
+        .iter()
+        .map(|c| c.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    let doc = format!(
+        "{{\"schema\":{},\"description\":{{\"template\":\"{}\",\"formats\":[{}],\
+         \"rounds\":[{}],\"pos\":[{}],\"opts\":[{}],\"chunks\":[{}],\"steps\":{},\
+         \"batch\":{},\"seed\":{}}},\"cells\":[{}]}}\n",
+        SCHEMA,
+        escape(&def.template),
+        strs(&def.formats),
+        strs(&def.rounds),
+        strs(&def.pos),
+        strs(&def.opts),
+        chunks,
+        def.steps,
+        def.batch,
+        def.seed,
+        records.join(",")
+    );
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, &doc).with_context(|| format!("write {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp} → {path}"))?;
+    Ok(())
+}
+
+/// Read an existing artifact's cell records (id → record). A missing file
+/// is an empty map; an unreadable or wrong-schema file is an error (never
+/// silently overwrite something that wasn't ours).
+fn load_artifact(path: &str) -> Result<BTreeMap<String, Json>> {
+    let mut out = BTreeMap::new();
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        // Anything else (permissions, I/O) must not read as "no artifact"
+        // — that would re-train the grid and clobber the real file.
+        Err(e) => bail!("read existing artifact {path}: {e}"),
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => bail!(
+            "existing artifact {path} is not valid JSON ({e}); move it aside or delete it"
+        ),
+    };
+    let schema = doc.at("schema").and_then(Json::num).unwrap_or(0.0);
+    ensure!(
+        schema == SCHEMA as f64,
+        "artifact {path} has schema {schema}, this build reads schema {}",
+        SCHEMA
+    );
+    if let Some(Json::Arr(cells)) = doc.at("cells") {
+        for cell in cells {
+            if let Some(id) = cell.at("id").and_then(Json::str_val) {
+                out.insert(id.to_string(), cell.clone());
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Train one cell, in eval-aligned segments with checkpoint durability.
+///
+/// Segments: `eval_every = max(1, steps/5)` (the `run_training` cadence)
+/// doubles as the segment length, and every segment end writes the cell's
+/// `.fp8ck`. Because eval points align with segment boundaries, the
+/// recorded curve — and, by the bit-exact resume contract, the weights —
+/// are identical however often the cell was interrupted.
+/// `prior_wall_ms` is the wall time already recorded for this cell by a
+/// previous (interrupted/timed-out) invocation; the emitted `wall_ms`
+/// accumulates it, so the artifact reports the cell's total wall time
+/// across resumes.
+fn run_cell(cell: &Cell, opts: &RunOpts, prior_wall_ms: f64) -> Result<(String, CellSummary)> {
+    let spec = ModelSpec::resolve(&cell.model)?;
+    // LR comes from the *un-overridden* spec: a pos override drops the
+    // preset tag, and the pos axis must not smuggle in a different
+    // base_lr (cells across the axis share every other hyper-parameter).
+    let base_lr = experiments::base_lr(&spec);
+    let spec = match parse_pos_axis(&cell.pos)? {
+        Some(pos) => spec.with_pos_override(pos)?,
+        None => spec,
+    };
+    let mut policy = resolve_policy(&cell.fmt)?;
+    if let Some(mode) = parse_round_axis(&cell.round)? {
+        policy = policy.with_round(mode);
+    }
+    if cell.chunk > 0 {
+        policy = policy.with_chunk(cell.chunk);
+    }
+    let opt = standard_optimizer(&cell.opt, cell.seed)
+        .with_context(|| format!("unknown opt-axis value {:?} (sgd|adam)", cell.opt))?;
+    // The committed-run budget of experiments::run_training: 1024 train /
+    // 128 test examples — cells stay comparable with the table harnesses.
+    let ds = SyntheticDataset::for_model(&spec, cell.seed).with_sizes(1024, 128);
+    let mut engine = NativeEngine::with_optimizer(&spec, policy, opt, cell.seed);
+
+    std::fs::create_dir_all(&opts.cells_dir)
+        .with_context(|| format!("create cell-checkpoint dir {}", opts.cells_dir))?;
+    let ck = format!("{}/cell_{:016x}.fp8ck", opts.cells_dir, layer_hash(&cell.id()));
+    // In-cell durability: a half-finished cell resumes from its checkpoint.
+    let mut next = 0usize;
+    let mut have_ck = false;
+    if std::path::Path::new(&ck).exists() {
+        match StateMap::load_file(&ck).and_then(|m| m.get_u64("train.next_step")) {
+            Ok(n) => {
+                next = n as usize;
+                have_ck = true;
+            }
+            Err(_) => {
+                // Unreadable leftovers (or a hash collision with some other
+                // file) restart the cell rather than poisoning it.
+                std::fs::remove_file(&ck).ok();
+            }
+        }
+    }
+    let seg = (cell.steps / 5).max(1);
+    let mut cfg = TrainConfig::quick(cell.steps);
+    cfg.batch_size = cell.batch;
+    cfg.schedule = LrSchedule::step_decay(base_lr, cell.steps);
+    cfg.eval_every = seg;
+    cfg.verbose = opts.verbose;
+    cfg.save_path = Some(ck.clone());
+    cfg.save_every = 0; // one save per segment (at its final step)
+
+    let start = Instant::now();
+    let p0 = crate::perf::snapshot();
+    let mut stepped = 0u64;
+    let mut result: Option<TrainResult> = None;
+    let mut timed_out = false;
+    loop {
+        let target = ((next + seg).min(cell.steps)).max(next);
+        cfg.steps = target;
+        cfg.resume = have_ck.then(|| ck.clone());
+        let r = train(&mut engine, &ds, &cfg);
+        stepped += (target - next) as u64;
+        next = target;
+        have_ck = true;
+        result = Some(r);
+        if next >= cell.steps {
+            break;
+        }
+        if opts.timeout_per_cell > 0.0
+            && start.elapsed().as_secs_f64() >= opts.timeout_per_cell
+        {
+            timed_out = true;
+            break;
+        }
+    }
+    let wall_ms = prior_wall_ms + start.elapsed().as_secs_f64() * 1e3;
+    let phases = crate::perf::snapshot().since(&p0);
+    let status = if timed_out { "timeout" } else { "done" };
+    let r = result.as_ref();
+    let record = cell_json(cell, status, next, wall_ms, r, &phases, stepped, opts.tail);
+    // Normalize through the parser (also a self-check): carried-over and
+    // fresh records then share one canonical serialization, so a re-run
+    // over a complete grid rewrites the artifact byte-identically.
+    let record = match Json::parse(&record) {
+        Ok(v) => v.dump(),
+        Err(e) => bail!("internal: record for cell {} is not valid JSON: {e}", cell.id()),
+    };
+    let summary = CellSummary {
+        status: status.to_string(),
+        final_err: r.map(|r| r.final_test_err),
+        final_loss: r.map(|r| r.final_train_loss),
+        wall_ms: Some(wall_ms),
+        // A done cell's record supersedes its checkpoint; a timed-out cell
+        // keeps it so the next invocation resumes instead of restarting.
+        ck_to_remove: (!timed_out).then_some(ck),
+    };
+    Ok((record, summary))
+}
+
+/// Run the grid: skip cells already `done` in the artifact, resume
+/// interrupted/timed-out ones, honor the `--max-cells` budget, rewrite the
+/// artifact after every completed cell, and render the summary table.
+pub fn run(def: &SweepDef, opts: &RunOpts) -> Result<()> {
+    let cells = expand(def)?;
+    let old = load_artifact(&opts.out)?;
+    println!(
+        "sweep: {} cells from template {:?} → {}",
+        cells.len(),
+        def.template,
+        opts.out
+    );
+    // One record slot per grid cell, pre-seeded with the existing
+    // artifact's record for that cell (any status). Every write emits the
+    // whole slot list, so a mid-pass interrupt can never drop a record for
+    // a cell this pass has not reached yet — previously-done cells later
+    // in grid order (whose checkpoints are already gone) and timeout
+    // records of deferred cells all survive.
+    let mut slots: Vec<Option<String>> = cells
+        .iter()
+        .map(|c| old.get(&c.id()).map(Json::dump))
+        .collect();
+    let emit = |slots: &[Option<String>]| -> Result<()> {
+        let records: Vec<String> = slots.iter().flatten().cloned().collect();
+        write_artifact(&opts.out, def, &records)
+    };
+    let mut rows: Vec<(Cell, String, Option<f64>, Option<f64>, Option<f64>)> = Vec::new();
+    let (mut ran, mut skipped, mut deferred, mut timeouts) = (0usize, 0usize, 0usize, 0usize);
+    for (idx, cell) in cells.iter().enumerate() {
+        let id = cell.id();
+        let done_before = old
+            .get(&id)
+            .is_some_and(|rec| rec.at("status").and_then(Json::str_val) == Some("done"));
+        if done_before {
+            let rec = &old[&id];
+            rows.push((
+                cell.clone(),
+                "done (skipped)".into(),
+                rec.at("final_test_err").and_then(Json::num),
+                rec.at("final_train_loss").and_then(Json::num),
+                rec.at("wall_ms").and_then(Json::num),
+            ));
+            skipped += 1;
+            continue;
+        }
+        if opts.max_cells > 0 && ran >= opts.max_cells {
+            deferred += 1;
+            rows.push((cell.clone(), "deferred".into(), None, None, None));
+            continue;
+        }
+        if opts.verbose {
+            crate::log_info!("sweep cell {id}");
+        }
+        let prior_wall = old
+            .get(&id)
+            .and_then(|r| r.at("wall_ms").and_then(Json::num))
+            .unwrap_or(0.0);
+        let (record, s) = run_cell(cell, opts, prior_wall)?;
+        slots[idx] = Some(record);
+        // Persist after every cell so an interrupt costs at most one cell
+        // — and delete the in-cell checkpoint only once its record is
+        // durable.
+        emit(&slots)?;
+        if let Some(ck) = &s.ck_to_remove {
+            std::fs::remove_file(ck).ok();
+        }
+        if s.status == "timeout" {
+            timeouts += 1;
+        }
+        ran += 1;
+        rows.push((cell.clone(), s.status, s.final_err, s.final_loss, s.wall_ms));
+    }
+    emit(&slots)?;
+    render_table(&rows);
+    println!(
+        "sweep complete: {ran} run, {skipped} skipped (already complete in {}), \
+         {deferred} deferred by --max-cells, {timeouts} timed out",
+        opts.out
+    );
+    Ok(())
+}
+
+/// The compact terminal table: one row per grid cell, in run order.
+fn render_table(rows: &[(Cell, String, Option<f64>, Option<f64>, Option<f64>)]) {
+    let num = |v: &Option<f64>| match v {
+        Some(v) => format!("{v:.3}"),
+        None => "-".into(),
+    };
+    println!(
+        "{:<34} {:<12} {:<10} {:<6} {:<4} {:>5} {:<15} {:>8} {:>9} {:>10}",
+        "model", "fmt", "round", "pos", "opt", "chunk", "status", "err_%", "loss", "wall_ms"
+    );
+    for (c, status, err, loss, wall) in rows {
+        let mut model = c.model.clone();
+        if model.len() > 34 {
+            model.truncate(31);
+            model.push_str("...");
+        }
+        println!(
+            "{:<34} {:<12} {:<10} {:<6} {:<4} {:>5} {:<15} {:>8} {:>9} {:>10}",
+            model,
+            c.fmt,
+            c.round,
+            c.pos,
+            c.opt,
+            c.chunk,
+            status,
+            num(err),
+            num(loss),
+            num(wall)
+        );
+    }
+}
+
+/// `fp8train sweep diff A B` — per-cell comparison of two artifacts (the
+/// CI smoke job diffs an artifact against itself to validate it).
+pub fn diff(a_path: &str, b_path: &str) -> Result<()> {
+    ensure!(
+        std::path::Path::new(a_path).exists(),
+        "no sweep artifact at {a_path}"
+    );
+    ensure!(
+        std::path::Path::new(b_path).exists(),
+        "no sweep artifact at {b_path}"
+    );
+    let a = load_artifact(a_path)?;
+    let b = load_artifact(b_path)?;
+    println!("== sweep diff: A = {a_path}, B = {b_path} ==");
+    println!(
+        "{:<64} {:>9} {:>9} {:>9}",
+        "cell", "A err_%", "B err_%", "delta"
+    );
+    let (mut compared, mut only_a, mut only_b) = (0usize, 0usize, 0usize);
+    for (id, ra) in &a {
+        let Some(rb) = b.get(id) else {
+            only_a += 1;
+            continue;
+        };
+        compared += 1;
+        let ea = ra.at("final_test_err").and_then(Json::num);
+        let eb = rb.at("final_test_err").and_then(Json::num);
+        let fmt1 = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.3}"));
+        let delta = match (ea, eb) {
+            (Some(x), Some(y)) => format!("{:+.3}", y - x),
+            _ => "-".into(),
+        };
+        let mut short = id.clone();
+        if short.len() > 64 {
+            short.truncate(61);
+            short.push_str("...");
+        }
+        println!("{:<64} {:>9} {:>9} {:>9}", short, fmt1(ea), fmt1(eb), delta);
+    }
+    for id in b.keys() {
+        if !a.contains_key(id) {
+            only_b += 1;
+        }
+    }
+    println!(
+        "{compared} shared cells, {only_a} only in A, {only_b} only in B"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_def() -> SweepDef {
+        let mut def = SweepDef::new("mlp(6,{4,5},3)");
+        def.formats = vec!["fp32".into(), "fp8_paper".into()];
+        def.steps = 2;
+        def.batch = 4;
+        def.seed = 9;
+        def
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_ordered() {
+        let def = tiny_def();
+        let a = expand(&def).unwrap();
+        let b = expand(&def).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        // Model axis varies slowest, format axis inside it.
+        let ids: Vec<String> = a.iter().map(Cell::id).collect();
+        assert!(ids[0].starts_with("in(6)-fc(4)-relu-fc(3)|fmt=fp32|"), "{}", ids[0]);
+        assert!(ids[1].starts_with("in(6)-fc(4)-relu-fc(3)|fmt=fp8_paper|"), "{}", ids[1]);
+        assert!(ids[2].starts_with("in(6)-fc(5)-relu-fc(3)|fmt=fp32|"), "{}", ids[2]);
+        // Budget knobs are part of the id: changing steps re-keys the grid.
+        let mut def2 = tiny_def();
+        def2.steps = 3;
+        let c = expand(&def2).unwrap();
+        assert_ne!(ids[0], c[0].id());
+    }
+
+    #[test]
+    fn expansion_validates_every_axis_value_up_front() {
+        for (mutate, why) in [
+            ((|d: &mut SweepDef| d.formats.push("warp9".into())) as fn(&mut SweepDef), "bad format"),
+            (|d: &mut SweepDef| d.rounds.push("sideways".into()), "bad round"),
+            (|d: &mut SweepDef| d.pos.push("beside".into()), "bad pos"),
+            (|d: &mut SweepDef| d.opts.push("lbfgs".into()), "bad opt"),
+            (|d: &mut SweepDef| d.formats.push("fp32".into()), "duplicate format"),
+            (|d: &mut SweepDef| d.template = "mlp(6,{4,4},3)".into(), "aliasing models"),
+            (|d: &mut SweepDef| d.template = "warp({1,2})".into(), "bad template"),
+            (|d: &mut SweepDef| d.steps = 0, "zero steps"),
+            (|d: &mut SweepDef| d.chunks = vec![], "empty chunk axis"),
+        ] {
+            let mut def = tiny_def();
+            mutate(&mut def);
+            assert!(expand(&def).is_err(), "{why} should fail expansion");
+        }
+        // A pos override that no expansion supports fails at expand time.
+        let mut def = tiny_def();
+        def.template = "in(3x4x4)-gap".into();
+        def.pos = vec!["last".into()];
+        assert!(expand(&def).is_err());
+        // Alias spellings resolve to the same axis value: rejected, not
+        // trained twice under distinct ids.
+        let mut def = tiny_def();
+        def.formats = vec!["e4m3".into(), "1-4-3".into()];
+        assert!(expand(&def).is_err(), "aliased format spellings");
+        let mut def = tiny_def();
+        def.rounds = vec!["stochastic".into(), "sr".into()];
+        assert!(expand(&def).is_err(), "aliased round spellings");
+        // Seeds beyond f64's exact-integer range would corrupt on the
+        // parse→dump canonicalization: refused up front.
+        let mut def = tiny_def();
+        def.seed = u64::MAX;
+        assert!(expand(&def).is_err(), "seed beyond 2^53");
+    }
+
+    #[test]
+    fn format_axis_accepts_presets_and_bare_formats() {
+        assert_eq!(resolve_policy("fp32").unwrap().name, "fp32");
+        assert_eq!(resolve_policy("dorefa").unwrap().name, "dorefa");
+        let p = resolve_policy("e4m3").unwrap();
+        assert_eq!(p.name, "paper_e4m3");
+        assert_eq!(
+            p.gemm[0].fmt_mult,
+            FloatFormat { ebits: 4, mbits: 3 }
+        );
+        // Last layer keeps the paper's FP16 rule.
+        assert_eq!(p.gemm_last[0].fmt_mult, FloatFormat::FP16);
+        assert!(resolve_policy("zz9").is_err());
+    }
+
+    #[test]
+    fn cell_records_and_artifact_are_valid_json() {
+        let cells = expand(&tiny_def()).unwrap();
+        let phases = PhaseSnapshot::default();
+        // A cell with no result (NaN-free nulls) and one with a NaN curve
+        // both serialize to parseable JSON.
+        let rec = cell_json(&cells[0], "timeout", 1, 12.5, None, &phases, 1, 5);
+        let v = Json::parse(&rec).unwrap();
+        assert_eq!(v.at("status").and_then(Json::str_val), Some("timeout"));
+        assert_eq!(v.at("final_test_err"), Some(&Json::Null));
+        let r = TrainResult {
+            curve: vec![crate::train::EvalPoint {
+                step: 2,
+                train_loss: f64::NAN,
+                test_loss: 1.5,
+                test_err: 50.0,
+            }],
+            final_test_err: 50.0,
+            final_train_loss: f64::NAN,
+        };
+        let rec = cell_json(&cells[1], "done", 2, 3.25, Some(&r), &phases, 2, 5);
+        let v = Json::parse(&rec).unwrap();
+        assert_eq!(v.at("final_train_loss"), Some(&Json::Null));
+        assert_eq!(v.at("curve_tail.0.test_err").and_then(Json::num), Some(50.0));
+        assert_eq!(v.at("id").and_then(Json::str_val), Some(cells[1].id().as_str()));
+    }
+
+    #[test]
+    fn artifact_write_load_round_trips() {
+        let dir = std::env::temp_dir().join("fp8train_sweep_artifact");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("SWEEP.json").to_string_lossy().into_owned();
+        let def = tiny_def();
+        let cells = expand(&def).unwrap();
+        let phases = PhaseSnapshot::default();
+        let recs: Vec<String> = cells
+            .iter()
+            .map(|c| cell_json(c, "done", 2, 1.0, None, &phases, 2, 5))
+            .collect();
+        write_artifact(&path, &def, &recs).unwrap();
+        let loaded = load_artifact(&path).unwrap();
+        assert_eq!(loaded.len(), 4);
+        for c in &cells {
+            let rec = &loaded[&c.id()];
+            assert_eq!(rec.at("status").and_then(Json::str_val), Some("done"));
+        }
+        // A garbage artifact is an error, not an overwrite.
+        std::fs::write(&path, "not json").unwrap();
+        assert!(load_artifact(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_hash_is_stable() {
+        // Cell checkpoint file names are keyed by the crate's shared
+        // layer-hash (`nn::linear::layer_hash`, an FNV-1a variant) over
+        // the cell id; pin its vectors so resumable checkpoints never
+        // silently re-key between builds. (Note: its multiplier is
+        // 0x1000000001b3 — not the textbook FNV prime — and is frozen:
+        // it also seeds the per-layer SR streams.)
+        assert_eq!(layer_hash(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(layer_hash("a"), 0xaf74_d84c_8601_ec8c);
+        assert_ne!(layer_hash("cell_a"), layer_hash("cell_b"));
+    }
+
+    #[test]
+    fn timeout_record_wall_time_accumulates() {
+        // run_cell adds the prior (interrupted) invocation's wall_ms, so a
+        // resumed cell's record reports total wall time across resumes.
+        let cells = expand(&tiny_def()).unwrap();
+        let phases = PhaseSnapshot::default();
+        let rec = cell_json(&cells[0], "timeout", 1, 1500.0 + 12.5, None, &phases, 1, 5);
+        let v = Json::parse(&rec).unwrap();
+        assert_eq!(v.at("wall_ms").and_then(Json::num), Some(1512.5));
+    }
+}

@@ -1,0 +1,88 @@
+//! Named sweep presets: the paper-table grids and the related-work format
+//! studies expressed as thin [`SweepDef`]s, so `fp8train sweep table2`
+//! replays a whole comparison as one resumable artifact instead of a
+//! hand-driven loop. The `exp` harnesses (`experiments/table2.rs`,
+//! `table3.rs`, `fig6.rs`) remain the paper-faithful single-table
+//! printers; these presets are the grid-shaped, machine-readable versions
+//! of the same studies (every CLI axis/budget flag still overrides).
+
+use super::SweepDef;
+
+/// Preset ids, stable for the CLI help text.
+pub const IDS: [&str; 4] = ["formats_x_arch", "table2", "table3", "fig6_chunks"];
+
+fn strs(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// Look up a named sweep preset.
+pub fn get(name: &str) -> Option<SweepDef> {
+    Some(match name {
+        // The Graphcore-style study: candidate 8-bit operand formats ×
+        // a small conv/res architecture grid. `e4m3`/`e3m4` run the
+        // paper's scheme with the alternative operand format (see
+        // `sweep::resolve_policy`), so the grid isolates the (ebits,
+        // mbits) trade-off across model shapes.
+        "formats_x_arch" => {
+            let mut d = SweepDef::new("conv3x3({8,16})-res(1x{16,32})-gap-fc(10)");
+            d.formats = strs(&["fp32", "fp8_paper", "e4m3", "e3m4"]);
+            d
+        }
+        // Table 2: reduced-precision training schemes on AlexNet — the
+        // baseline schemes are policy presets, so the whole comparison is
+        // one format axis.
+        "table2" => {
+            let mut d = SweepDef::new("alexnet");
+            d.formats = strs(&["fp32", "dorefa", "wage", "dfp16", "mpt_fp16", "fp8_paper"]);
+            d
+        }
+        // Table 3's last-layer lever as a position axis: `auto` keeps the
+        // paper's FP16 last layer; `middle` demotes it to the FP8 middle
+        // scheme while the Softmax input stays FP16 (the "FP8 GEMMs, FP16
+        // softmax-in" row). The fp32 column shows the axis is a no-op for
+        // full-precision policies.
+        "table3" => {
+            let mut d = SweepDef::new("alexnet");
+            d.formats = strs(&["fp32", "fp8_paper"]);
+            d.pos = strs(&["auto", "middle"]);
+            d
+        }
+        // Fig. 6's accumulation-chunk-length lever on the CIFAR10 CNN.
+        "fig6_chunks" => {
+            let mut d = SweepDef::new("cifar_cnn");
+            d.chunks = vec![1, 8, 64, 512];
+            d
+        }
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::expand;
+
+    #[test]
+    fn every_preset_expands() {
+        for id in IDS {
+            let def = get(id).unwrap_or_else(|| panic!("preset {id}"));
+            let cells = expand(&def).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(!cells.is_empty(), "{id}");
+            // Deterministic ids, no aliasing.
+            let mut ids: Vec<String> = cells.iter().map(|c| c.id()).collect();
+            let n = ids.len();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "{id} grid has aliased cell ids");
+        }
+        assert!(get("nope").is_none());
+    }
+
+    #[test]
+    fn preset_grid_shapes() {
+        assert_eq!(expand(&get("formats_x_arch").unwrap()).unwrap().len(), 4 * 4);
+        assert_eq!(expand(&get("table2").unwrap()).unwrap().len(), 6);
+        assert_eq!(expand(&get("table3").unwrap()).unwrap().len(), 4);
+        assert_eq!(expand(&get("fig6_chunks").unwrap()).unwrap().len(), 4);
+    }
+}

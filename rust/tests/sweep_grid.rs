@@ -1,0 +1,142 @@
+//! End-to-end contract tests for the `sweep` grid harness
+//! (`rust/src/sweep/`):
+//!
+//! 1. **Determinism** — the same description expands to the same ordered
+//!    cell list with the same canonical ids, twice.
+//! 2. **Resumability** — a budget-interrupted sweep (`max_cells`) leaves a
+//!    valid partial artifact; re-running the same description completes the
+//!    grid while carrying the already-done cell records over **verbatim**
+//!    (no re-training — their `wall_ms`/losses are byte-identical).
+//! 3. **Artifact validity** — `SWEEP.json` parses with the zero-dep JSON
+//!    reader, and `sweep::diff` of the artifact against itself succeeds.
+
+use fp8train::benchcmp::Json;
+use fp8train::sweep::{self, expand, RunOpts, SweepDef};
+
+fn tiny_def() -> SweepDef {
+    // The CI smoke grid: a 2-model template × {fp32, fp8_paper}.
+    let mut def = SweepDef::new("mlp(12,{8,10},4)");
+    def.formats = vec!["fp32".into(), "fp8_paper".into()];
+    def.steps = 4;
+    def.batch = 8;
+    def.seed = 5;
+    def
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fp8train_sweep_grid_{tag}"));
+    // Stale state from a previous test run must not leak into this one.
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn same_description_same_cells_and_ids() {
+    let a = expand(&tiny_def()).unwrap();
+    let b = expand(&tiny_def()).unwrap();
+    assert_eq!(a, b);
+    let ids: Vec<String> = a.iter().map(|c| c.id()).collect();
+    assert_eq!(ids.len(), 4);
+    // Model axis slowest, format axis within it; ids embed the budget.
+    assert_eq!(
+        ids[0],
+        "in(12)-fc(8)-relu-fc(4)|fmt=fp32|round=default|pos=auto|opt=sgd|chunk=0|steps=4|batch=8|seed=5"
+    );
+    assert_eq!(
+        ids[3],
+        "in(12)-fc(10)-relu-fc(4)|fmt=fp8_paper|round=default|pos=auto|opt=sgd|chunk=0|steps=4|batch=8|seed=5"
+    );
+}
+
+#[test]
+fn interrupted_sweep_resumes_and_skips_completed_cells() {
+    let dir = temp_dir("resume");
+    let out = dir.join("SWEEP.json").to_string_lossy().into_owned();
+    let def = tiny_def();
+    let mut opts = RunOpts {
+        out: out.clone(),
+        cells_dir: dir.join("cells").to_string_lossy().into_owned(),
+        max_cells: 2,
+        timeout_per_cell: 0.0,
+        tail: 5,
+        verbose: false,
+    };
+
+    // Pass 1: budget of 2 → exactly 2 of the 4 cells complete.
+    sweep::run(&def, &opts).unwrap();
+    let partial = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let cells = match partial.at("cells") {
+        Some(Json::Arr(a)) => a.clone(),
+        other => panic!("cells missing: {other:?}"),
+    };
+    assert_eq!(cells.len(), 2, "budgeted pass must record exactly 2 cells");
+    let done_ids: Vec<String> = cells
+        .iter()
+        .map(|c| c.at("id").and_then(Json::str_val).unwrap().to_string())
+        .collect();
+    let first_records: Vec<String> = cells.iter().map(|c| c.dump()).collect();
+
+    // Pass 2: same description, no budget → the grid completes; the two
+    // already-done cells are carried over verbatim, not re-trained.
+    opts.max_cells = 0;
+    sweep::run(&def, &opts).unwrap();
+    let full = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let cells = match full.at("cells") {
+        Some(Json::Arr(a)) => a.clone(),
+        other => panic!("cells missing: {other:?}"),
+    };
+    assert_eq!(cells.len(), 4, "second pass must complete the grid");
+    let expected_ids: Vec<String> = expand(&def).unwrap().iter().map(|c| c.id()).collect();
+    let got_ids: Vec<String> = cells
+        .iter()
+        .map(|c| c.at("id").and_then(Json::str_val).unwrap().to_string())
+        .collect();
+    assert_eq!(got_ids, expected_ids, "artifact order must be grid order");
+    for (id, rec) in done_ids.iter().zip(&first_records) {
+        let now = cells
+            .iter()
+            .find(|c| c.at("id").and_then(Json::str_val) == Some(id.as_str()))
+            .unwrap();
+        assert_eq!(
+            &now.dump(),
+            rec,
+            "completed cell {id} must carry over verbatim (it was re-run)"
+        );
+    }
+    for c in &cells {
+        assert_eq!(c.at("status").and_then(Json::str_val), Some("done"));
+        assert_eq!(c.at("steps_done").and_then(Json::num), Some(4.0));
+        assert!(c.at("final_test_err").and_then(Json::num).is_some());
+        assert!(c.at("phases.gemm.ns").and_then(Json::num).is_some());
+    }
+    // Done cells leave no checkpoints behind.
+    let leftovers = std::fs::read_dir(dir.join("cells"))
+        .map(|d| d.count())
+        .unwrap_or(0);
+    assert_eq!(leftovers, 0, "done cells must clean up their checkpoints");
+
+    // Pass 3: everything already done → pure skip, artifact unchanged.
+    let before = std::fs::read_to_string(&out).unwrap();
+    sweep::run(&def, &opts).unwrap();
+    let after = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(before, after, "an all-complete sweep must be a no-op");
+
+    // The artifact diffs cleanly against itself.
+    sweep::diff(&out, &out).unwrap();
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn changed_budget_rekeys_the_grid() {
+    // steps participates in cell ids: a different budget never reuses old
+    // results.
+    let mut def = tiny_def();
+    let a = expand(&def).unwrap();
+    def.steps = 6;
+    let b = expand(&def).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_ne!(x.id(), y.id());
+    }
+}

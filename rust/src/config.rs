@@ -21,6 +21,9 @@ pub struct Ini {
 pub enum ConfigError {
     Malformed(usize, String),
     Missing(String, String),
+    /// A key present in the file but not in the consumer's known set —
+    /// distinct from [`ConfigError::Missing`] (a required key absent).
+    Unknown(String, String, String),
     BadValue(String, String, String, &'static str),
     Io(std::io::Error),
 }
@@ -30,6 +33,9 @@ impl std::fmt::Display for ConfigError {
         match self {
             ConfigError::Malformed(line, raw) => write!(f, "line {line}: malformed line: {raw:?}"),
             ConfigError::Missing(s, k) => write!(f, "missing key [{s}] {k}"),
+            ConfigError::Unknown(s, k, known) => {
+                write!(f, "[{s}]: unknown key {k:?} (expected one of {known})")
+            }
             ConfigError::BadValue(s, k, v, ty) => {
                 write!(f, "[{s}] {k}: cannot parse {v:?} as {ty}")
             }
@@ -174,9 +180,10 @@ impl Ini {
         if let Some(kv) = self.sections.get(section) {
             for k in kv.keys() {
                 if !known.contains(&k.as_str()) {
-                    return Err(ConfigError::Missing(
+                    return Err(ConfigError::Unknown(
                         section.into(),
-                        format!("unknown key {k:?} (expected one of {known:?})"),
+                        k.clone(),
+                        known.join(", "),
                     ));
                 }
             }
@@ -242,7 +249,10 @@ policy = fp8_paper
     #[test]
     fn unknown_key_detection() {
         let ini = Ini::parse("[t]\nx = 1\ntypo = 2").unwrap();
-        assert!(ini.check_known("t", &["x"]).is_err());
+        let err = ini.check_known("t", &["x"]).unwrap_err();
+        assert!(matches!(err, ConfigError::Unknown(_, _, _)), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("typo") && msg.contains("unknown key"), "{msg}");
         assert!(ini.check_known("t", &["x", "typo"]).is_ok());
         assert!(ini.check_known("absent_section", &[]).is_ok());
     }

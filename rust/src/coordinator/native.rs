@@ -168,6 +168,24 @@ mod tests {
     }
 
     #[test]
+    fn wrong_engine_tag_error_names_both_engines() {
+        // A supervisor deciding "restart this cell from scratch" gets its
+        // signal from this message — it must identify both sides.
+        let spec = ModelSpec::bn50_dnn();
+        let mut e = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 1);
+        let mut map = StateMap::new();
+        e.save_state(&mut map);
+        let mut wrong = NativeEngine::new(&spec, PrecisionPolicy::fp32(), 1);
+        let err = wrong.load_state(&map).unwrap_err();
+        assert!(matches!(err, StateError::Incompatible(_)), "{err}");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("fp8_paper") && msg.contains("fp32"),
+            "{msg}"
+        );
+    }
+
+    #[test]
     fn fp8_engine_trains() {
         let spec = ModelSpec::bn50_dnn();
         let ds = SyntheticDataset::for_model(&spec, 3).with_sizes(64, 32);

@@ -1,0 +1,231 @@
+//! Deterministic fault injection (`FP8TRAIN_FAULT`).
+//!
+//! Robustness machinery is only trustworthy if its failure paths can be
+//! exercised *deterministically*: "the supervisor retries crashed cells"
+//! is a claim, "a cell killed at step k retries and produces a
+//! byte-identical `SWEEP.json`" is a test. This module provides the fault
+//! spec that test infrastructure injects through the environment:
+//!
+//! ```text
+//! FP8TRAIN_FAULT = <kind>@<step>[@<attempt>][#<cell-substr>]
+//! kind := exit | abort | stall | nan
+//! ```
+//!
+//! - `exit@k` — the process calls `std::process::exit(3)` immediately
+//!   **before** executing step `k` (a clean crash; any checkpoint written
+//!   at or before step `k` is intact, so the retry resumes bit-exactly).
+//! - `abort@k` — `std::process::abort()` (SIGABRT, no unwinding).
+//! - `stall@k` — the step loop sleeps forever (a hang, for exercising
+//!   heartbeat staleness and hard timeouts).
+//! - `nan@k` — the recorded training loss is overwritten with NaN from
+//!   step `k` onwards (synthetic numerical divergence, for the
+//!   divergence guard — the process itself stays healthy).
+//!
+//! The optional `@attempt` gates the fault on the `FP8TRAIN_ATTEMPT`
+//! environment variable (set by the sweep supervisor on every child it
+//! spawns; absent means attempt 0), so an injected crash fires on the
+//! first attempt and **not** on the retry — without it, a persistent
+//! `exit@k` would re-fire after every resume and turn the retry loop into
+//! a crash loop. The optional `#substr` restricts the fault to sweep
+//! cells whose id contains the substring (e.g. `#fmt=fp8_paper`).
+//!
+//! The spec is parsed once and threaded through [`crate::train::TrainConfig`],
+//! so firing is a deterministic function of `(spec, step, attempt, cell)` —
+//! never of wall-clock time.
+
+use crate::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// What the injected fault does when it fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `std::process::exit(3)` before executing the trigger step.
+    Exit,
+    /// `std::process::abort()` before executing the trigger step.
+    Abort,
+    /// Sleep forever at the trigger step (heartbeat goes stale).
+    Stall,
+    /// Overwrite the training loss with NaN from the trigger step on.
+    Nan,
+}
+
+impl FaultKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "exit" => FaultKind::Exit,
+            "abort" => FaultKind::Abort,
+            "stall" => FaultKind::Stall,
+            "nan" => FaultKind::Nan,
+            other => bail!("unknown fault kind {other:?} (exit|abort|stall|nan)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Exit => "exit",
+            FaultKind::Abort => "abort",
+            FaultKind::Stall => "stall",
+            FaultKind::Nan => "nan",
+        }
+    }
+}
+
+/// A parsed fault-injection spec: fire `kind` at `step`, but only in the
+/// process attempt `attempt` and only for cells matching `cell_substr`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Step index the fault triggers at (crash kinds fire *before* the
+    /// step executes; `nan` poisons this step's loss and every later one).
+    pub step: usize,
+    /// Process attempt the fault is armed for (`FP8TRAIN_ATTEMPT` gate).
+    pub attempt: u64,
+    /// Restrict to sweep cells whose id contains this substring.
+    pub cell_substr: Option<String>,
+}
+
+/// The current process attempt (`FP8TRAIN_ATTEMPT`, default 0). The sweep
+/// supervisor sets this on every child it spawns; everywhere else it is 0.
+pub fn current_attempt() -> u64 {
+    std::env::var("FP8TRAIN_ATTEMPT")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+impl FaultSpec {
+    /// Parse `kind@step[@attempt][#cell-substr]`.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (body, cell_substr) = match spec.split_once('#') {
+            Some((b, c)) => (b, Some(c.to_string())),
+            None => (spec, None),
+        };
+        let mut parts = body.split('@');
+        let kind = FaultKind::parse(parts.next().unwrap_or(""))
+            .with_context(|| format!("fault spec {spec:?}"))?;
+        let step = parts
+            .next()
+            .with_context(|| {
+                format!("fault spec {spec:?} is missing @step (grammar: kind@step[@attempt][#cell-substr])")
+            })?
+            .parse()
+            .ok()
+            .with_context(|| format!("fault spec {spec:?}: step is not a usize"))?;
+        let attempt = match parts.next() {
+            None => 0,
+            Some(a) => a
+                .parse()
+                .ok()
+                .with_context(|| format!("fault spec {spec:?}: attempt is not a u64"))?,
+        };
+        ensure!(
+            parts.next().is_none(),
+            "fault spec {spec:?} has trailing '@' fields (grammar: kind@step[@attempt][#cell-substr])"
+        );
+        Ok(FaultSpec { kind, step, attempt, cell_substr })
+    }
+
+    /// Read `FP8TRAIN_FAULT`, returning the spec only when the current
+    /// process attempt matches the spec's attempt gate. A malformed spec
+    /// is an error (silently ignoring it would make fault tests pass
+    /// vacuously); an unset/empty variable is `None`.
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        let Ok(raw) = std::env::var("FP8TRAIN_FAULT") else {
+            return Ok(None);
+        };
+        let raw = raw.trim();
+        if raw.is_empty() {
+            return Ok(None);
+        }
+        let spec = Self::parse(raw)?;
+        Ok((spec.attempt == current_attempt()).then_some(spec))
+    }
+
+    /// Does this fault apply to the given sweep cell id? (Non-sweep
+    /// callers pass any string; a spec without `#substr` applies to all.)
+    pub fn applies(&self, cell_id: &str) -> bool {
+        self.cell_substr
+            .as_deref()
+            .is_none_or(|s| cell_id.contains(s))
+    }
+
+    /// Execute a crash-class fault (`exit`/`abort`/`stall`). The trainer
+    /// calls this at the top of the step loop when `step == self.step`;
+    /// `nan` perturbs the loss instead of the process and is a no-op here.
+    pub fn fire_process_fault(&self) {
+        match self.kind {
+            FaultKind::Exit => {
+                eprintln!("fault-injection: exit(3) before step {}", self.step);
+                std::process::exit(3);
+            }
+            FaultKind::Abort => {
+                eprintln!("fault-injection: abort before step {}", self.step);
+                std::process::abort();
+            }
+            FaultKind::Stall => {
+                eprintln!("fault-injection: stalling at step {}", self.step);
+                loop {
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+            }
+            FaultKind::Nan => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_spec() {
+        let f = FaultSpec::parse("exit@5").unwrap();
+        assert_eq!(f.kind, FaultKind::Exit);
+        assert_eq!(f.step, 5);
+        assert_eq!(f.attempt, 0);
+        assert_eq!(f.cell_substr, None);
+    }
+
+    #[test]
+    fn parses_attempt_and_cell_filter() {
+        let f = FaultSpec::parse("stall@12@2#fmt=fp8_paper").unwrap();
+        assert_eq!(f.kind, FaultKind::Stall);
+        assert_eq!(f.step, 12);
+        assert_eq!(f.attempt, 2);
+        assert_eq!(f.cell_substr.as_deref(), Some("fmt=fp8_paper"));
+        assert!(f.applies("mlp|fmt=fp8_paper|seed=1"));
+        assert!(!f.applies("mlp|fmt=fp32|seed=1"));
+    }
+
+    #[test]
+    fn no_cell_filter_applies_everywhere() {
+        let f = FaultSpec::parse("nan@0").unwrap();
+        assert_eq!(f.kind, FaultKind::Nan);
+        assert!(f.applies("anything at all"));
+    }
+
+    #[test]
+    fn all_kinds_parse() {
+        for (name, kind) in [
+            ("exit", FaultKind::Exit),
+            ("abort", FaultKind::Abort),
+            ("stall", FaultKind::Stall),
+            ("nan", FaultKind::Nan),
+        ] {
+            let f = FaultSpec::parse(&format!("{name}@3")).unwrap();
+            assert_eq!(f.kind, kind);
+            assert_eq!(f.kind.name(), name);
+        }
+    }
+
+    #[test]
+    fn malformed_specs_error_with_grammar() {
+        for bad in ["", "exit", "exit@", "exit@x", "flood@3", "exit@3@y", "exit@1@2@3"] {
+            let err = FaultSpec::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("fault") || err.contains("kind"),
+                "unhelpful error for {bad:?}: {err}"
+            );
+        }
+    }
+}

@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod experiments;
+pub mod faults;
 pub mod logging;
 pub mod nn;
 pub mod numerics;
@@ -47,6 +48,7 @@ pub mod optim;
 pub mod perf;
 pub mod runtime;
 pub mod state;
+pub mod supervisor;
 pub mod sweep;
 pub mod tensor;
 pub mod testkit;

@@ -61,6 +61,8 @@ USAGE:
   fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
                  [--chunks L] [--steps N] [--batch N] [--seed S] [--out SWEEP.json]
                  [--max-cells N] [--timeout-per-cell SECS] [--list] [--verbose]
+                 [--workers N] [--retries N] [--backoff-ms MS]
+                 [--heartbeat-secs SECS] [--deterministic]
       expand a model template × format/round/pos/opt/chunk grid into a
       deterministic cell list, train every cell, and write one resumable
       machine-readable artifact (docs/sweep.md). <template> is a spec/preset
@@ -73,6 +75,10 @@ USAGE:
       --opts sgd|adam; --chunks 0 = policy default. Re-running against an
       existing artifact skips completed cells; interrupted cells resume
       from their checkpoints under <out>.cells/.
+      --workers N (N > 1) runs cells as supervised child processes with
+      heartbeat monitoring, hard kill+resume timeouts, and bounded retry
+      with exponential backoff (docs/robustness.md); --deterministic zeroes
+      the timing fields so repeated runs emit byte-identical artifacts.
   fp8train sweep diff <A.json> <B.json>
       per-cell comparison of two sweep artifacts
   fp8train formats
@@ -109,6 +115,9 @@ fn dispatch(args: &Args) -> Result<()> {
         "exp" => cmd_exp(args),
         "train" => cmd_train(args),
         "sweep" => cmd_sweep(args),
+        // Hidden: the supervised-sweep child process (one cell per run;
+        // spawned by `sweep --workers N`, not intended for direct use).
+        "sweep-worker" => fp8train::supervisor::worker_main(args),
         "eval" => cmd_eval(args),
         "checkpoint" => cmd_checkpoint(args),
         "formats" => cmd_formats(),
@@ -344,6 +353,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "tail",
         "list",
         "verbose",
+        "workers",
+        "retries",
+        "backoff-ms",
+        "heartbeat-secs",
+        "deterministic",
     ])?;
     let head = args.positional.first().with_context(|| {
         format!(
@@ -380,13 +394,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return sweep::list(&def);
     }
     let out = args.opt_or("out", "SWEEP.json");
+    let defaults = RunOpts::default();
     let run_opts = RunOpts {
         cells_dir: args.opt_or("cells-dir", &format!("{out}.cells")),
         max_cells: args.opt_usize("max-cells", 0)?,
         timeout_per_cell: args.opt_f32("timeout-per-cell", 0.0)? as f64,
         tail: args.opt_usize("tail", 5)?,
         verbose: args.flag("verbose"),
+        workers: args.opt_usize("workers", defaults.workers)?,
+        retries: args.opt_usize("retries", defaults.retries)?,
+        backoff_ms: args.opt_u64("backoff-ms", defaults.backoff_ms)?,
+        heartbeat_secs: args.opt_f32("heartbeat-secs", defaults.heartbeat_secs as f32)? as f64,
+        deterministic: args.flag("deterministic"),
         out,
+        ..defaults
     };
     sweep::run(&def, &run_opts)
 }

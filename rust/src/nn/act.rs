@@ -45,6 +45,14 @@ impl Layer for Relu {
     fn name(&self) -> String {
         "relu".into()
     }
+
+    fn invalidate_backward_state(&mut self) {
+        // Without this, an eval forward between a train forward and its
+        // backward would leave the *previous training batch's* mask in
+        // place — and when the batch sizes coincide, the shape assert above
+        // cannot catch the mixup.
+        self.mask.clear();
+    }
 }
 
 #[cfg(test)]

@@ -56,6 +56,7 @@ impl Layer for Residual {
 
     fn backward(&mut self, mut dy: Tensor, ctx: &QuantCtx) -> Tensor {
         // Through the final ReLU.
+        assert_eq!(dy.len(), self.mask.len(), "residual backward shape");
         for (v, &m) in dy.data.iter_mut().zip(&self.mask) {
             if !m {
                 *v = 0.0;
@@ -108,6 +109,19 @@ impl Layer for Residual {
             s.load_extra_state(prefix, src)?;
         }
         Ok(())
+    }
+
+    fn invalidate_backward_state(&mut self) {
+        // The block's own ReLU mask, plus both branches' layer caches.
+        // (During an eval forward the branches already self-invalidate —
+        // they run through `Sequential::forward` — but a direct call must
+        // cover the whole subtree.)
+        self.mask.clear();
+        self.x_cache = None;
+        self.main.invalidate_backward_state();
+        if let Some(s) = &mut self.shortcut {
+            s.invalidate_backward_state();
+        }
     }
 }
 

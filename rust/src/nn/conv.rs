@@ -322,6 +322,20 @@ impl Layer for Conv2d {
     fn as_any_mut(&mut self) -> Option<&mut dyn std::any::Any> {
         Some(self)
     }
+
+    fn invalidate_backward_state(&mut self) {
+        // Return the cached patch matrix / quantized weight to the arena
+        // and zero `batch`, so a mispaired backward hits the
+        // "backward before forward" expect instead of consuming operands
+        // from the previous training batch.
+        if let Some(t) = self.cols_q.take() {
+            t.recycle();
+        }
+        if let Some(t) = self.w_q.take() {
+            t.recycle();
+        }
+        self.batch = 0;
+    }
 }
 
 #[cfg(test)]

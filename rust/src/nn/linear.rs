@@ -190,6 +190,19 @@ impl Layer for Linear {
     fn macs_per_example(&self) -> u64 {
         (self.in_dim * self.out_dim) as u64
     }
+
+    fn invalidate_backward_state(&mut self) {
+        // Eval forwards don't refresh `x_q`/`w_q`; a stale copy from the
+        // last training batch would satisfy `backward`'s `take()` and feed
+        // the Gradient GEMM the wrong activations whenever batch shapes
+        // coincide. Recycle rather than drop — these are arena tensors.
+        if let Some(t) = self.x_q.take() {
+            t.recycle();
+        }
+        if let Some(t) = self.w_q.take() {
+            t.recycle();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -372,5 +385,17 @@ mod tests {
         let mut l = Linear::new("fc", 2, 2, LayerPos::Middle, &mut rng);
         l.forward(Tensor::zeros(&[1, 2]), &ctx);
         assert!(l.x_q.is_none());
+    }
+
+    #[test]
+    fn invalidation_drops_the_stale_train_cache() {
+        let policy = PrecisionPolicy::fp32();
+        let train = QuantCtx::new(&policy, 0, true);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let mut l = Linear::new("fc", 2, 2, LayerPos::Middle, &mut rng);
+        l.forward(Tensor::zeros(&[1, 2]), &train);
+        assert!(l.x_q.is_some(), "train forward must cache the activation");
+        l.invalidate_backward_state();
+        assert!(l.x_q.is_none(), "invalidation must drop the cache");
     }
 }

@@ -93,6 +93,16 @@ pub trait Layer: Send {
         None
     }
 
+    /// Drop any cached backward state from a previous *train-mode*
+    /// forward. Layers only refresh their activation caches when
+    /// `ctx.train` is set, so an eval-mode forward would otherwise leave
+    /// caches from the last training batch in place — and a subsequent
+    /// `backward` would silently mix batches whenever the shapes happen to
+    /// line up. [`Sequential::forward`] calls this on every child after an
+    /// eval-mode forward, so the hazard is closed in one place for every
+    /// layer kind; stateless layers keep the default no-op.
+    fn invalidate_backward_state(&mut self) {}
+
     /// Checkpoint hook for layer state that is **not** a [`Param`] —
     /// parameters are handled generically through
     /// [`visit_params`](Self::visit_params) by [`save_layer_state`].
@@ -201,6 +211,14 @@ impl Layer for Sequential {
     fn forward(&mut self, mut x: Tensor, ctx: &QuantCtx) -> Tensor {
         for l in &mut self.layers {
             x = l.forward(x, ctx);
+            if !ctx.train {
+                // Eval forwards do not refresh backward caches; invalidate
+                // whatever a previous training forward left behind so a
+                // mispaired backward fails loudly instead of mixing
+                // batches (the eval-then-backward hazard — see the trait
+                // method's docs).
+                l.invalidate_backward_state();
+            }
         }
         x
     }
@@ -238,6 +256,15 @@ impl Layer for Sequential {
         }
         Ok(())
     }
+
+    fn invalidate_backward_state(&mut self) {
+        // Covers direct-call uses (a Sequential nested inside another
+        // container); the forward walk above already invalidates children
+        // during its own eval forwards.
+        for l in &mut self.layers {
+            l.invalidate_backward_state();
+        }
+    }
 }
 
 /// Reshape NCHW feature maps to `[N, C·H·W]` rows for the FC head.
@@ -261,11 +288,19 @@ impl Layer for Flatten {
     }
 
     fn backward(&mut self, dy: Tensor, _ctx: &QuantCtx) -> Tensor {
+        assert!(
+            !self.in_shape.is_empty(),
+            "flatten backward without a matching train-mode forward"
+        );
         dy.reshape(&self.in_shape.clone())
     }
 
     fn name(&self) -> String {
         "flatten".into()
+    }
+
+    fn invalidate_backward_state(&mut self) {
+        self.in_shape.clear();
     }
 }
 
@@ -283,6 +318,118 @@ mod tests {
         assert_eq!(y.shape, vec![2, 48]);
         let dx = f.backward(y, &ctx);
         assert_eq!(dx.shape, vec![2, 3, 4, 4]);
+    }
+
+    /// The eval-then-backward hazard, exercised for **every** stateful
+    /// layer kind through the one place that now owns the invalidation
+    /// (`Sequential::forward`): a train forward plants caches, an eval
+    /// forward must drop them, and the mispaired backward has to fail
+    /// loudly rather than silently reuse the previous training batch.
+    #[test]
+    fn eval_forward_invalidates_every_layer_kind() {
+        use crate::numerics::Xoshiro256;
+        use crate::tensor::Conv2dGeom;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        let policy = PrecisionPolicy::fp32();
+        let train = QuantCtx::new(&policy, 0, true);
+        let eval = QuantCtx::new(&policy, 0, false);
+
+        let geom = Conv2dGeom {
+            in_c: 2,
+            in_h: 4,
+            in_w: 4,
+            k: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let residual = Residual::new(Sequential::new(vec![Box::new(act::Relu::new())]), None);
+
+        // (kind, model, input shape, dy shape) — one row per layer kind
+        // that caches backward state.
+        let cases: Vec<(&str, Sequential, Vec<usize>, Vec<usize>)> = vec![
+            (
+                "linear",
+                Sequential::new(vec![Box::new(Linear::new(
+                    "fc",
+                    8,
+                    4,
+                    LayerPos::Middle,
+                    &mut rng,
+                ))]),
+                vec![2, 8],
+                vec![2, 4],
+            ),
+            (
+                "conv2d",
+                Sequential::new(vec![Box::new(Conv2d::new(
+                    "c",
+                    geom,
+                    3,
+                    LayerPos::Middle,
+                    true,
+                    &mut rng,
+                ))]),
+                vec![2, 2, 4, 4],
+                vec![2, 3, 4, 4],
+            ),
+            (
+                "relu",
+                Sequential::new(vec![Box::new(act::Relu::new())]),
+                vec![2, 8],
+                vec![2, 8],
+            ),
+            (
+                "batchnorm",
+                Sequential::new(vec![Box::new(norm::BatchNorm::new_2d("bn", 2))]),
+                vec![2, 2, 4, 4],
+                vec![2, 2, 4, 4],
+            ),
+            (
+                "maxpool",
+                Sequential::new(vec![Box::new(pool::MaxPool2d::new(2, 2))]),
+                vec![2, 2, 4, 4],
+                vec![2, 2, 2, 2],
+            ),
+            (
+                "gap",
+                Sequential::new(vec![Box::new(pool::GlobalAvgPool::new())]),
+                vec![2, 2, 4, 4],
+                vec![2, 2],
+            ),
+            (
+                "flatten",
+                Sequential::new(vec![Box::new(Flatten::new())]),
+                vec![2, 2, 4, 4],
+                vec![2, 32],
+            ),
+            (
+                "residual",
+                Sequential::new(vec![Box::new(residual)]),
+                vec![2, 8],
+                vec![2, 8],
+            ),
+        ];
+
+        for (kind, mut model, in_shape, dy_shape) in cases {
+            // Sanity: a properly paired train forward/backward works.
+            model.forward(Tensor::zeros(&in_shape), &train);
+            model.backward(Tensor::zeros(&dy_shape), &train);
+            // Plant caches, then run an eval forward over the same shapes —
+            // the most dangerous variant, since no shape assert can save us
+            // if the stale caches survive.
+            model.forward(Tensor::zeros(&in_shape), &train);
+            model.forward(Tensor::zeros(&in_shape), &eval);
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                model.backward(Tensor::zeros(&dy_shape), &eval);
+            }));
+            assert!(
+                r.is_err(),
+                "{kind}: backward after an eval forward must panic, not \
+                 reuse the previous training batch's caches"
+            );
+        }
     }
 
     #[test]

@@ -199,6 +199,16 @@ impl Layer for BatchNorm {
         self.gamma.name.trim_end_matches(".gamma").to_string()
     }
 
+    fn invalidate_backward_state(&mut self) {
+        // The eval branch of `forward` recycles its *own* scratch but
+        // leaves these caches from the last training batch untouched; a
+        // backward would consume them. Clearing `in_shape` makes the shape
+        // assert in `backward` fire instead.
+        scratch::recycle(std::mem::take(&mut self.x_hat));
+        scratch::recycle(std::mem::take(&mut self.inv_std));
+        self.in_shape.clear();
+    }
+
     /// Running statistics are eval-time state (the forward pass consumes
     /// them whenever `ctx.train` is false), so they checkpoint alongside
     /// the learnable γ/β. Raw f32 → stored as exact bits.

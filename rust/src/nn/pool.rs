@@ -73,13 +73,10 @@ impl Layer for MaxPool2d {
         if ctx.train {
             self.argmax = argmax;
             self.in_shape = x.shape.clone();
-        } else {
-            // Invalidate saved state: a backward after an eval-mode forward
-            // would otherwise silently reuse the argmax/shape of an earlier
-            // training batch (misrouted gradients, wrong dx shape).
-            self.argmax.clear();
-            self.in_shape.clear();
         }
+        // Eval-mode invalidation of the saved argmax/shape is hoisted into
+        // the `Sequential` forward walk (`invalidate_backward_state`),
+        // which covers every layer kind in one place.
         out
     }
 
@@ -100,6 +97,11 @@ impl Layer for MaxPool2d {
 
     fn name(&self) -> String {
         format!("maxpool{}x{}", self.k, self.k)
+    }
+
+    fn invalidate_backward_state(&mut self) {
+        self.argmax.clear();
+        self.in_shape.clear();
     }
 }
 
@@ -129,10 +131,6 @@ impl Layer for GlobalAvgPool {
         }
         if ctx.train {
             self.in_shape = x.shape.clone();
-        } else {
-            // See MaxPool2d::forward: eval-mode forwards invalidate the
-            // saved shape so a stale backward cannot misroute gradients.
-            self.in_shape.clear();
         }
         out
     }
@@ -167,6 +165,10 @@ impl Layer for GlobalAvgPool {
 
     fn name(&self) -> String {
         "gap".into()
+    }
+
+    fn invalidate_backward_state(&mut self) {
+        self.in_shape.clear();
     }
 }
 
@@ -254,16 +256,18 @@ mod tests {
     #[test]
     #[should_panic(expected = "maxpool backward without a matching train-mode forward")]
     fn maxpool_backward_after_eval_forward_panics() {
+        // Eval-mode invalidation is now owned by the `Sequential` walk, so
+        // the hazard is exercised through a container (as engines do).
         let policy = PrecisionPolicy::fp32();
         let train = QuantCtx::new(&policy, 0, true);
         let eval = QuantCtx::new(&policy, 0, false);
-        let mut p = MaxPool2d::new(2, 2);
+        let mut model = crate::nn::Sequential::new(vec![Box::new(MaxPool2d::new(2, 2))]);
         // A train forward on a *different* batch shape plants stale state…
-        p.forward(Tensor::zeros(&[2, 1, 4, 4]), &train);
+        model.forward(Tensor::zeros(&[2, 1, 4, 4]), &train);
         // …the eval forward must invalidate it, so this backward asserts
         // instead of silently misrouting gradients through the old argmax.
-        p.forward(Tensor::zeros(&[1, 1, 4, 4]), &eval);
-        p.backward(Tensor::zeros(&[1, 1, 2, 2]), &eval);
+        model.forward(Tensor::zeros(&[1, 1, 4, 4]), &eval);
+        model.backward(Tensor::zeros(&[1, 1, 2, 2]), &eval);
     }
 
     #[test]
@@ -272,10 +276,10 @@ mod tests {
         let policy = PrecisionPolicy::fp32();
         let train = QuantCtx::new(&policy, 0, true);
         let eval = QuantCtx::new(&policy, 0, false);
-        let mut g = GlobalAvgPool::new();
-        g.forward(Tensor::zeros(&[2, 3, 2, 2]), &train);
-        g.forward(Tensor::zeros(&[1, 3, 2, 2]), &eval);
-        g.backward(Tensor::zeros(&[1, 3]), &eval);
+        let mut model = crate::nn::Sequential::new(vec![Box::new(GlobalAvgPool::new())]);
+        model.forward(Tensor::zeros(&[2, 3, 2, 2]), &train);
+        model.forward(Tensor::zeros(&[1, 3, 2, 2]), &eval);
+        model.backward(Tensor::zeros(&[1, 3]), &eval);
     }
 
     #[test]

@@ -21,6 +21,41 @@
 
 use super::rng::RoundBits;
 use super::rounding::{round_up, RoundMode};
+use std::cell::Cell;
+
+thread_local! {
+    /// Per-thread count of non-finite (NaN/±Inf) inputs seen by the
+    /// deterministic batch quantizer since the last [`take_nonfinite`].
+    ///
+    /// This is the cheap in-trainer divergence sensor: every stored
+    /// activation/weight/error tensor already funnels through
+    /// [`FloatFormat::quantize_batch`] each step, and non-finite inputs
+    /// always land in its special-case path (they fail the fast-path
+    /// in-range test), so counting them there costs nothing on healthy
+    /// data. Two deliberate gaps, both documented where they matter:
+    /// the fp32 identity early-return skips the scan (keeping fp32 runs
+    /// zero-cost — the trainer's loss check is the backstop there), and
+    /// the stochastic-rounding path is not instrumented (SR draws flow
+    /// through the GEMM's own per-row streams).
+    static NONFINITE: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Record `n` non-finite values observed by a quantize pass (this thread).
+#[inline]
+pub fn note_nonfinite(n: u64) {
+    if n > 0 {
+        NONFINITE.with(|c| c.set(c.get() + n));
+    }
+}
+
+/// Drain this thread's non-finite counter, returning the count seen since
+/// the previous call. The trainer drains it once per step; sampling is
+/// per-thread, which matches the trainer because operand preparation runs
+/// on the training thread (the GEMM worker pool only executes dot
+/// products).
+pub fn take_nonfinite() -> u64 {
+    NONFINITE.with(|c| c.replace(0))
+}
 
 /// 2^e as f32 by bit construction; `e` must be in the normal range
 /// [-126, 127] (callers clamp).
@@ -345,6 +380,7 @@ impl FloatFormat {
             let q = NeQuantizer::new(self);
             const QB: usize = 64;
             let mut orig = [0u32; QB];
+            let mut nonfinite = 0u64;
             for chunk in xs.chunks_mut(QB) {
                 let mut fixups = 0u64;
                 for (i, v) in chunk.iter_mut().enumerate() {
@@ -357,19 +393,23 @@ impl FloatFormat {
                 }
                 while fixups != 0 {
                     let i = fixups.trailing_zeros() as usize;
-                    chunk[i] = self.quantize_with_bits(
-                        f32::from_bits(orig[i]),
-                        RoundMode::NearestEven,
-                        0,
-                    );
+                    // NaN/Inf always fail the in-range test, so counting
+                    // them here (off the hot path) sees every one.
+                    let x = f32::from_bits(orig[i]);
+                    nonfinite += !x.is_finite() as u64;
+                    chunk[i] = self.quantize_with_bits(x, RoundMode::NearestEven, 0);
                     fixups &= fixups - 1;
                 }
             }
+            note_nonfinite(nonfinite);
             return;
         }
+        let mut nonfinite = 0u64;
         for v in xs {
+            nonfinite += !v.is_finite() as u64;
             *v = self.quantize(*v, mode);
         }
+        note_nonfinite(nonfinite);
     }
 
     /// Quantize a slice in place, drawing stochastic bits from `rng`.
@@ -583,6 +623,28 @@ impl std::fmt::Display for FloatFormat {
 mod tests {
     use super::*;
     use crate::numerics::rng::Xoshiro256;
+
+    #[test]
+    fn nonfinite_counter_sees_nan_and_inf_in_both_batch_paths() {
+        let _ = take_nonfinite(); // drain residue from other tests on this thread
+        // Fast nearest-even path (mbits < 23): NaN/Inf land in the fix-up
+        // mask, healthy values do not touch the counter.
+        let mut xs = vec![1.0f32, f32::NAN, -0.5, f32::INFINITY, f32::NEG_INFINITY, 2.0];
+        FloatFormat::FP8.quantize_batch(&mut xs, RoundMode::NearestEven);
+        assert_eq!(take_nonfinite(), 3);
+        // Scalar fallback path (truncate mode).
+        let mut ys = vec![f32::NAN, 4.0f32];
+        FloatFormat::FP16.quantize_batch(&mut ys, RoundMode::Truncate);
+        assert_eq!(take_nonfinite(), 1);
+        // fp32 identity early-return deliberately skips the scan.
+        let mut zs = vec![f32::NAN];
+        FloatFormat::FP32.quantize_batch(&mut zs, RoundMode::NearestEven);
+        assert_eq!(take_nonfinite(), 0);
+        // Healthy data leaves the counter untouched.
+        let mut ws = vec![0.25f32, -3.0, 1e-9];
+        FloatFormat::FP8.quantize_batch(&mut ws, RoundMode::NearestEven);
+        assert_eq!(take_nonfinite(), 0);
+    }
 
     #[test]
     fn paper_format_constants() {

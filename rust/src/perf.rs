@@ -135,6 +135,67 @@ pub fn reset() {
     }
 }
 
+// --- sweep-supervisor counters -------------------------------------------
+//
+// Process-management accounting for `fp8train sweep --workers N`
+// (`crate::supervisor`): worker spawns, kills (hard timeout / stale
+// heartbeat), retry requeues, and time the supervisor spent sleeping in
+// its poll loop. Kept as separate statics — NOT new `Phase` variants —
+// because the phase arrays' 4-slot layout and ids are pinned by the bench
+// JSON schema (`phase_ids_stable`).
+
+/// `[spawns, kills, retries, wait_ns]`.
+static SUP: [AtomicU64; 4] = [
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+    AtomicU64::new(0),
+];
+
+/// Snapshot of the supervisor counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SupervisorCounters {
+    /// Worker processes spawned (first attempts and retries alike).
+    pub spawns: u64,
+    /// Workers killed for a hard timeout or a stale heartbeat.
+    pub kills: u64,
+    /// Attempts re-queued after a crash/kill (terminal records excluded).
+    pub retries: u64,
+    /// Total supervisor poll-loop sleep time.
+    pub wait_ns: u64,
+}
+
+pub fn sup_note_spawn() {
+    SUP[0].fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn sup_note_kill() {
+    SUP[1].fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn sup_note_retry() {
+    SUP[2].fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn sup_note_wait(ns: u64) {
+    SUP[3].fetch_add(ns, Ordering::Relaxed);
+}
+
+pub fn supervisor_counters() -> SupervisorCounters {
+    SupervisorCounters {
+        spawns: SUP[0].load(Ordering::Relaxed),
+        kills: SUP[1].load(Ordering::Relaxed),
+        retries: SUP[2].load(Ordering::Relaxed),
+        wait_ns: SUP[3].load(Ordering::Relaxed),
+    }
+}
+
+pub fn supervisor_reset() {
+    for c in &SUP {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +234,31 @@ mod tests {
         // Saturating, never panicking, when counters were reset in between.
         let z = a.since(&b);
         assert_eq!(z.ns, [0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn supervisor_counters_accumulate_and_reset() {
+        // Only the sweep supervisor (never exercised by unit tests) and
+        // this test touch these statics, so reset + exact asserts are safe
+        // under the parallel test harness.
+        supervisor_reset();
+        sup_note_spawn();
+        sup_note_spawn();
+        sup_note_kill();
+        sup_note_retry();
+        sup_note_wait(5);
+        let c = supervisor_counters();
+        assert_eq!(
+            c,
+            SupervisorCounters {
+                spawns: 2,
+                kills: 1,
+                retries: 1,
+                wait_ns: 5
+            }
+        );
+        supervisor_reset();
+        assert_eq!(supervisor_counters(), SupervisorCounters::default());
     }
 
     #[test]

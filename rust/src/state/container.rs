@@ -145,7 +145,11 @@ struct Cursor<'a> {
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], StateError> {
         if self.pos + n > self.bytes.len() {
-            return Err(StateError::Corrupt(format!("truncated {what}")));
+            return Err(StateError::Corrupt(format!(
+                "truncated {what} (need {n} bytes at table offset {}, {} available)",
+                self.pos,
+                self.bytes.len() - self.pos.min(self.bytes.len())
+            )));
         }
         let s = &self.bytes[self.pos..self.pos + n];
         self.pos += n;
@@ -201,13 +205,19 @@ fn parse(bytes: &[u8]) -> Result<(u32, Vec<RawChunk>), StateError> {
     let index_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
     let table_end = bytes.len() - 4;
     if index_off < HEADER_LEN as u64 || index_off > table_end as u64 {
-        return Err(StateError::Corrupt(format!("chunk-table offset {index_off} out of bounds")));
+        return Err(StateError::Corrupt(format!(
+            "chunk-table offset {index_off} out of bounds (file is {} bytes — truncated mid-chunk?)",
+            bytes.len()
+        )));
     }
     let index_off = index_off as usize;
     let table = &bytes[index_off..table_end];
     let stored = u32::from_le_bytes(bytes[table_end..].try_into().unwrap());
-    if crc32(table) != stored {
-        return Err(StateError::Corrupt("chunk-table CRC mismatch".into()));
+    let computed = crc32(table);
+    if computed != stored {
+        return Err(StateError::Corrupt(format!(
+            "chunk-table CRC mismatch (stored {stored:#010x}, computed {computed:#010x})"
+        )));
     }
 
     let mut cur = Cursor { bytes: table, pos: 0 };
@@ -237,8 +247,11 @@ fn parse(bytes: &[u8]) -> Result<(u32, Vec<RawChunk>), StateError> {
             return Err(StateError::Corrupt(format!("chunk {key:?}: payload outside payload region")));
         }
         let (off, len) = (off as usize, len as usize);
-        if crc32(&bytes[off..off + len]) != crc {
-            return Err(StateError::Corrupt(format!("chunk {key:?}: payload CRC mismatch")));
+        let computed = crc32(&bytes[off..off + len]);
+        if computed != crc {
+            return Err(StateError::Corrupt(format!(
+                "chunk {key:?}: payload CRC mismatch (stored {crc:#010x}, computed {computed:#010x})"
+            )));
         }
         chunks.push(RawChunk { key, kind, fmt, dims, off, len });
     }
@@ -448,6 +461,67 @@ mod tests {
         bytes[index_off + 1] ^= 0xFF;
         let e = decode(&bytes).unwrap_err();
         assert!(e.to_string().contains("CRC"), "{e}");
+    }
+
+    #[test]
+    fn truncation_mid_payload_says_truncated() {
+        let mut m = StateMap::new();
+        m.put_tensor("w", &[8], &[1.0; 8]);
+        let bytes = encode(&m);
+        // Cut inside the payload region: the header survives but its
+        // chunk-table offset now points past the end of the file.
+        let e = decode(&bytes[..HEADER_LEN + 6]).unwrap_err();
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn truncated_chunk_table_reports_offset_and_need() {
+        // Craft a table that *claims* a longer key than it stores: the
+        // error must say what was being read, where, and how much was
+        // missing — not just "truncated".
+        let mut m = StateMap::new();
+        m.put_u64("step", 7);
+        let mut bytes = encode(&m);
+        let index_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        // Bump key_len from 4 to 200 and re-sign the table so the CRC
+        // check passes and the cursor bound is what trips.
+        bytes[index_off] = 200;
+        let table_end = bytes.len() - 4;
+        let crc = crc32(&bytes[index_off..table_end]);
+        let crc_bytes = crc.to_le_bytes();
+        bytes[table_end..].copy_from_slice(&crc_bytes);
+        let msg = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            msg.contains("truncated chunk key") && msg.contains("need 200 bytes"),
+            "{msg}"
+        );
+    }
+
+    #[test]
+    fn payload_crc_error_reports_stored_and_computed() {
+        let mut m = StateMap::new();
+        m.put_tensor("w", &[4], &[1.0, 2.0, 3.0, 4.0]);
+        let mut bytes = encode(&m);
+        bytes[HEADER_LEN] ^= 1;
+        let msg = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            msg.contains("\"w\"") && msg.contains("stored 0x") && msg.contains("computed 0x"),
+            "{msg}"
+        );
+    }
+
+    #[test]
+    fn table_crc_error_reports_stored_and_computed() {
+        let mut m = StateMap::new();
+        m.put_u64("x", 7);
+        let mut bytes = encode(&m);
+        let index_off = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+        bytes[index_off + 1] ^= 0xFF;
+        let msg = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            msg.contains("chunk-table CRC mismatch") && msg.contains("stored 0x"),
+            "{msg}"
+        );
     }
 
     #[test]

@@ -462,8 +462,21 @@ impl StateMap {
         Ok(())
     }
 
+    /// Errors carry the file name: a supervisor juggling dozens of cell
+    /// checkpoints needs "which file, which chunk, what was wrong" from
+    /// the message alone.
     pub fn load_file(path: impl AsRef<Path>) -> Result<Self, StateError> {
-        Self::from_bytes(&std::fs::read(path)?)
+        let path = path.as_ref();
+        let bytes = std::fs::read(path).map_err(|e| {
+            StateError::Io(std::io::Error::new(
+                e.kind(),
+                format!("{}: {e}", path.display()),
+            ))
+        })?;
+        Self::from_bytes(&bytes).map_err(|e| match e {
+            StateError::Corrupt(m) => StateError::Corrupt(format!("{}: {m}", path.display())),
+            other => other,
+        })
     }
 }
 
@@ -559,5 +572,22 @@ mod tests {
             Err(StateError::ShapeMismatch { .. })
         ));
         assert_eq!(m.keys_with_prefix("t").count(), 1);
+    }
+
+    #[test]
+    fn load_file_errors_name_the_file() {
+        let dir = std::env::temp_dir().join("fp8ck_load_file_context");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cell.fp8ck");
+        // Corrupt container → the path leads the message.
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        let e = StateMap::load_file(&path).unwrap_err();
+        assert!(matches!(e, StateError::Corrupt(_)), "{e}");
+        assert!(e.to_string().contains("cell.fp8ck"), "{e}");
+        // Missing file → the io error carries the path too.
+        let e = StateMap::load_file(dir.join("nope.fp8ck")).unwrap_err();
+        assert!(matches!(e, StateError::Io(_)), "{e}");
+        assert!(e.to_string().contains("nope.fp8ck"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,526 @@
+//! The sweep supervisor: `fp8train sweep --workers N`.
+//!
+//! Runs each grid cell as a child `fp8train sweep-worker` process
+//! (`std::process::Command` — zero new dependencies) under a supervisor
+//! that provides the robustness layer a long grid study needs:
+//!
+//! - **Heartbeat monitoring** — the worker's training loop writes the
+//!   current step number to a per-cell heartbeat file every step
+//!   ([`crate::train::TrainConfig::heartbeat`]); the supervisor watches
+//!   the file's *content* and kills a worker whose heartbeat has not
+//!   changed for `--heartbeat-secs` (distinguishing "slow" from "stuck").
+//! - **Hard timeouts** — under the supervisor, `--timeout-per-cell`
+//!   becomes a kill deadline rather than the serial path's soft
+//!   segment-boundary check. A killed cell resumes bit-exactly from its
+//!   last segment checkpoint on the next attempt.
+//! - **Bounded retry with backoff** — attempts that make *no progress*
+//!   (the cell's checkpoint `train.next_step` did not advance across the
+//!   attempt) count against `--retries`; an attempt that progressed
+//!   resets the budget, so a cell that keeps moving is never given up on.
+//!   Re-spawns wait `backoff_ms × 2^(n−1)` (the slot is freed for other
+//!   cells while the backoff elapses).
+//! - **Terminal statuses** — a cell that exhausts its retry budget is
+//!   recorded in the artifact as `failed` (crashes, with the worker's
+//!   exit description in the record's `error` field) or `timeout`
+//!   (kills); its checkpoint is kept so a later invocation can resume.
+//!
+//! **Determinism**: workers inherit `FP8TRAIN_FAULT` and get
+//! `FP8TRAIN_ATTEMPT` set to their per-cell attempt index, so an injected
+//! fault ([`crate::faults`]) fires on exactly one attempt and the retry
+//! completes the cell from its checkpoint. Under `--deterministic` the
+//! supervised artifact is byte-identical to a serial no-fault run
+//! (`rust/tests/sweep_fault_tolerance.rs`, `docs/robustness.md`).
+//!
+//! Worker protocol: the child runs ONE cell to a terminal record
+//! (`done`/`diverged` — never a soft timeout), checkpointing every
+//! segment, and atomically (tmp + rename) writes the canonical record
+//! JSON to `--record-out`. Exit 0 with a record file means the record is
+//! trustworthy; anything else is an attempt failure. The supervisor owns
+//! the artifact: it folds worker records into the slot list, re-emits
+//! after every terminal record, and only then deletes the cell's
+//! checkpoint/heartbeat/record files.
+
+use std::collections::VecDeque;
+use std::process::{Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::benchcmp::Json;
+use crate::cli::Args;
+use crate::error::{Context, Result};
+use crate::perf::{self, PhaseSnapshot};
+use crate::state::StateMap;
+use crate::sweep::{
+    cell_ck_path, cell_json, expand, load_artifact, render_table, run_cell, write_artifact, Cell,
+    RunOpts, SweepDef,
+};
+
+/// One not-yet-terminal cell: where it lives in the grid and its retry
+/// accounting.
+struct Task {
+    /// Index into the expanded cell list (and the artifact slot list).
+    idx: usize,
+    /// Total spawns so far — becomes the child's `FP8TRAIN_ATTEMPT`.
+    attempts: u64,
+    /// Consecutive attempts whose checkpoint did not advance.
+    no_progress: usize,
+    /// Wall time accumulated by killed/crashed attempts plus any prior
+    /// invocation's record — handed to the worker as `--prior-wall-ms`.
+    prior_wall_ms: f64,
+    /// Backoff gate: not re-spawned before this instant.
+    not_before: Instant,
+}
+
+/// A live worker and everything needed to judge it.
+struct Slot {
+    task: Task,
+    child: std::process::Child,
+    started: Instant,
+    /// `train.next_step` of the cell's checkpoint at spawn time — the
+    /// progress baseline for the retry budget.
+    spawned_step: u64,
+    ck: String,
+    hb: String,
+    rec: String,
+    last_hb: Vec<u8>,
+    last_change: Instant,
+}
+
+/// What the poll pass decided about one worker.
+enum Event {
+    /// Still running and healthy.
+    None,
+    /// Exited on its own (record file decides success vs crash).
+    Exited(ExitStatus),
+    /// Killed by the supervisor (hard timeout or stale heartbeat).
+    Fail { why: String, terminal: &'static str },
+}
+
+/// `base × 2^(n−1)` milliseconds, saturating (n ≥ 1 attempts without
+/// progress; the exponent is clamped so huge counts cannot overflow).
+fn backoff_delay(backoff_ms: u64, no_progress: usize) -> Duration {
+    let exp = (no_progress as u32).saturating_sub(1).min(16);
+    Duration::from_millis(backoff_ms.saturating_mul(1u64 << exp))
+}
+
+/// The cell checkpoint's `train.next_step`, or 0 when there is no readable
+/// checkpoint (missing and corrupt both read as "no progress recorded").
+fn ck_next_step(ck: &str) -> u64 {
+    if !std::path::Path::new(ck).exists() {
+        return 0;
+    }
+    StateMap::load_file(ck)
+        .and_then(|m| m.get_u64("train.next_step"))
+        .unwrap_or(0)
+}
+
+/// Re-emit the artifact from the slot list (grid order, skipping empty
+/// slots) — the same atomic write the serial path uses.
+fn emit(out: &str, def: &SweepDef, slots: &[Option<String>]) -> Result<()> {
+    let records: Vec<String> = slots.iter().flatten().cloned().collect();
+    write_artifact(out, def, &records)
+}
+
+/// Spawn one worker attempt for `cell`. Clears the previous attempt's
+/// record/heartbeat files first so nothing stale can be mistaken for this
+/// attempt's output.
+fn spawn_worker(exe: &str, cell: &Cell, mut task: Task, opts: &RunOpts) -> Result<Slot> {
+    let ck = cell_ck_path(&opts.cells_dir, cell);
+    let hb = format!("{ck}.hb");
+    let rec = format!("{ck}.rec");
+    std::fs::remove_file(&hb).ok();
+    std::fs::remove_file(&rec).ok();
+    let spawned_step = ck_next_step(&ck);
+    let mut cmd = Command::new(exe);
+    cmd.arg("sweep-worker")
+        .args(["--model", &cell.model])
+        .args(["--fmt", &cell.fmt])
+        .args(["--round", &cell.round])
+        .args(["--pos", &cell.pos])
+        .args(["--opt", &cell.opt])
+        .args(["--chunk", &cell.chunk.to_string()])
+        .args(["--steps", &cell.steps.to_string()])
+        .args(["--batch", &cell.batch.to_string()])
+        .args(["--seed", &cell.seed.to_string()])
+        .args(["--cells-dir", &opts.cells_dir])
+        .args(["--record-out", &rec])
+        .args(["--heartbeat", &hb])
+        .args(["--tail", &opts.tail.to_string()])
+        .args(["--prior-wall-ms", &format!("{}", task.prior_wall_ms)]);
+    if opts.deterministic {
+        cmd.arg("--deterministic");
+    }
+    if opts.verbose {
+        cmd.arg("--verbose");
+    } else {
+        cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    }
+    // Attempt gating for deterministic fault injection: FP8TRAIN_FAULT is
+    // inherited, FP8TRAIN_ATTEMPT selects which attempt it arms on.
+    cmd.env("FP8TRAIN_ATTEMPT", task.attempts.to_string());
+    let child = cmd
+        .spawn()
+        .with_context(|| format!("spawn sweep worker {exe:?}"))?;
+    perf::sup_note_spawn();
+    task.attempts += 1;
+    let now = Instant::now();
+    Ok(Slot {
+        task,
+        child,
+        started: now,
+        spawned_step,
+        ck,
+        hb,
+        rec,
+        last_hb: Vec::new(),
+        last_change: now,
+    })
+}
+
+/// Run the grid under worker-process supervision (`opts.workers` > 1; the
+/// dispatch lives in [`crate::sweep::run`]). Artifact semantics match the
+/// serial path exactly: skip terminal cells, pre-seed slots from the
+/// existing artifact, re-emit after every terminal record.
+pub fn run_supervised(def: &SweepDef, opts: &RunOpts) -> Result<()> {
+    let cells = expand(def)?;
+    let old = load_artifact(&opts.out)?;
+    println!(
+        "sweep: {} cells from template {:?} → {}",
+        cells.len(),
+        def.template,
+        opts.out
+    );
+    std::fs::create_dir_all(&opts.cells_dir)
+        .with_context(|| format!("create cell-checkpoint dir {}", opts.cells_dir))?;
+    let exe = match &opts.worker_exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .context("resolve the current executable to spawn sweep workers")?
+            .to_string_lossy()
+            .into_owned(),
+    };
+    let mut slots_json: Vec<Option<String>> = cells
+        .iter()
+        .map(|c| old.get(&c.id()).map(Json::dump))
+        .collect();
+    type Row = (Cell, String, Option<f64>, Option<f64>, Option<f64>);
+    let mut rows: Vec<Option<Row>> = vec![None; cells.len()];
+    let (mut ran, mut skipped, mut deferred, mut timeouts, mut diverged, mut failed) =
+        (0usize, 0usize, 0usize, 0usize, 0usize, 0usize);
+    let mut pending: VecDeque<Task> = VecDeque::new();
+    let start = Instant::now();
+    for (idx, cell) in cells.iter().enumerate() {
+        let id = cell.id();
+        let prior_status = old
+            .get(&id)
+            .and_then(|rec| rec.at("status").and_then(Json::str_val));
+        if let Some(status @ ("done" | "diverged")) = prior_status {
+            let rec = &old[&id];
+            rows[idx] = Some((
+                cell.clone(),
+                format!("{status} (skipped)"),
+                rec.at("final_test_err").and_then(Json::num),
+                rec.at("final_train_loss").and_then(Json::num),
+                rec.at("wall_ms").and_then(Json::num),
+            ));
+            skipped += 1;
+            continue;
+        }
+        if opts.max_cells > 0 && pending.len() >= opts.max_cells {
+            deferred += 1;
+            rows[idx] = Some((cell.clone(), "deferred".into(), None, None, None));
+            continue;
+        }
+        let prior_wall = old
+            .get(&id)
+            .and_then(|r| r.at("wall_ms").and_then(Json::num))
+            .unwrap_or(0.0);
+        pending.push_back(Task {
+            idx,
+            attempts: 0,
+            no_progress: 0,
+            prior_wall_ms: prior_wall,
+            not_before: start,
+        });
+    }
+
+    let mut running: Vec<Slot> = Vec::new();
+    while !pending.is_empty() || !running.is_empty() {
+        // Fill free worker slots with backoff-eligible tasks.
+        while running.len() < opts.workers {
+            let now = Instant::now();
+            let Some(pos) = pending.iter().position(|t| t.not_before <= now) else {
+                break;
+            };
+            let task = pending.remove(pos).expect("position() came from pending");
+            let cell = &cells[task.idx];
+            if opts.verbose {
+                crate::log_info!("sweep cell {} (attempt {})", cell.id(), task.attempts);
+            }
+            running.push(spawn_worker(&exe, cell, task, opts)?);
+        }
+        // Poll every live worker: reap exits, kill the timed-out/stalled.
+        let mut i = 0;
+        while i < running.len() {
+            let event = {
+                let slot = &mut running[i];
+                match slot.child.try_wait().context("poll a sweep worker")? {
+                    Some(status) => Event::Exited(status),
+                    None => {
+                        if opts.timeout_per_cell > 0.0
+                            && slot.started.elapsed().as_secs_f64() >= opts.timeout_per_cell
+                        {
+                            slot.child.kill().ok();
+                            slot.child.wait().ok();
+                            perf::sup_note_kill();
+                            Event::Fail {
+                                why: format!(
+                                    "killed: exceeded the hard --timeout-per-cell budget ({}s)",
+                                    opts.timeout_per_cell
+                                ),
+                                terminal: "timeout",
+                            }
+                        } else if opts.heartbeat_secs > 0.0 {
+                            let beat = std::fs::read(&slot.hb).unwrap_or_default();
+                            if beat != slot.last_hb {
+                                slot.last_hb = beat;
+                                slot.last_change = Instant::now();
+                                Event::None
+                            } else if slot.last_change.elapsed().as_secs_f64()
+                                >= opts.heartbeat_secs
+                            {
+                                slot.child.kill().ok();
+                                slot.child.wait().ok();
+                                perf::sup_note_kill();
+                                Event::Fail {
+                                    why: format!(
+                                        "killed: heartbeat unchanged for {}s (worker stalled)",
+                                        opts.heartbeat_secs
+                                    ),
+                                    terminal: "timeout",
+                                }
+                            } else {
+                                Event::None
+                            }
+                        } else {
+                            Event::None
+                        }
+                    }
+                }
+            };
+            if matches!(&event, Event::None) {
+                i += 1;
+                continue;
+            }
+            let slot = running.swap_remove(i);
+            let (why, terminal) = match event {
+                Event::Exited(status) => {
+                    let parsed = std::fs::read_to_string(&slot.rec)
+                        .ok()
+                        .and_then(|t| Json::parse(&t).ok());
+                    if let (true, Some(v)) = (status.success(), parsed) {
+                        // A durable record: fold it into the artifact, then
+                        // (and only then) drop the cell's working files.
+                        let cell = &cells[slot.task.idx];
+                        let st = v
+                            .at("status")
+                            .and_then(Json::str_val)
+                            .unwrap_or("done")
+                            .to_string();
+                        rows[slot.task.idx] = Some((
+                            cell.clone(),
+                            st.clone(),
+                            v.at("final_test_err").and_then(Json::num),
+                            v.at("final_train_loss").and_then(Json::num),
+                            v.at("wall_ms").and_then(Json::num),
+                        ));
+                        slots_json[slot.task.idx] = Some(v.dump());
+                        emit(&opts.out, def, &slots_json)?;
+                        std::fs::remove_file(&slot.rec).ok();
+                        std::fs::remove_file(&slot.hb).ok();
+                        std::fs::remove_file(&slot.ck).ok();
+                        if st == "diverged" {
+                            diverged += 1;
+                        }
+                        ran += 1;
+                        continue;
+                    }
+                    let why = if status.success() {
+                        "worker exited cleanly without writing its record".to_string()
+                    } else {
+                        format!("worker crashed ({status})")
+                    };
+                    (why, "failed")
+                }
+                Event::Fail { why, terminal } => (why, terminal),
+                Event::None => unreachable!("handled above"),
+            };
+            // Attempt failure: charge the retry budget (unless the
+            // checkpoint advanced), then re-queue or go terminal.
+            let progressed_to = ck_next_step(&slot.ck);
+            let mut task = slot.task;
+            if progressed_to > slot.spawned_step {
+                task.no_progress = 0;
+            }
+            task.no_progress += 1;
+            task.prior_wall_ms += slot.started.elapsed().as_secs_f64() * 1e3;
+            std::fs::remove_file(&slot.rec).ok();
+            let cell = &cells[task.idx];
+            if task.no_progress > opts.retries {
+                // Terminal: record it (with the failure description), keep
+                // the checkpoint so a later invocation can resume.
+                let wall = if opts.deterministic { 0.0 } else { task.prior_wall_ms };
+                let record = cell_json(
+                    cell,
+                    terminal,
+                    progressed_to as usize,
+                    wall,
+                    None,
+                    &PhaseSnapshot::default(),
+                    0,
+                    opts.tail,
+                    None,
+                    Some(&why),
+                );
+                let record = match Json::parse(&record) {
+                    Ok(v) => v.dump(),
+                    Err(_) => record,
+                };
+                slots_json[task.idx] = Some(record);
+                emit(&opts.out, def, &slots_json)?;
+                std::fs::remove_file(&slot.hb).ok();
+                rows[task.idx] =
+                    Some((cell.clone(), terminal.to_string(), None, None, Some(wall)));
+                if terminal == "timeout" {
+                    timeouts += 1;
+                } else {
+                    failed += 1;
+                }
+                ran += 1;
+                crate::log_warn!(
+                    "cell {}: {why}; giving up after {} attempts without progress",
+                    cell.id(),
+                    task.no_progress
+                );
+            } else {
+                let delay = backoff_delay(opts.backoff_ms, task.no_progress);
+                if opts.verbose {
+                    crate::log_info!(
+                        "cell {}: {why}; retrying in {:.0}ms (attempt {} next)",
+                        cell.id(),
+                        delay.as_secs_f64() * 1e3,
+                        task.attempts
+                    );
+                }
+                task.not_before = Instant::now() + delay;
+                perf::sup_note_retry();
+                pending.push_back(task);
+            }
+        }
+        if !pending.is_empty() || !running.is_empty() {
+            let nap = Duration::from_millis(10);
+            std::thread::sleep(nap);
+            perf::sup_note_wait(nap.as_nanos() as u64);
+        }
+    }
+    emit(&opts.out, def, &slots_json)?;
+    let rows: Vec<Row> = rows.into_iter().flatten().collect();
+    render_table(&rows);
+    println!(
+        "sweep complete: {ran} run, {skipped} skipped (already complete in {}), \
+         {deferred} deferred by --max-cells, {timeouts} timed out, \
+         {diverged} diverged, {failed} failed",
+        opts.out
+    );
+    let c = perf::supervisor_counters();
+    println!(
+        "supervisor: {} spawns, {} kills, {} retries",
+        c.spawns, c.kills, c.retries
+    );
+    Ok(())
+}
+
+/// The hidden `fp8train sweep-worker` entry: run ONE cell to a terminal
+/// record under the supervisor's protocol (see the module docs). Called
+/// from `main.rs` dispatch; never intended for direct human use.
+pub fn worker_main(args: &Args) -> Result<()> {
+    args.check_known(&[
+        "model",
+        "fmt",
+        "round",
+        "pos",
+        "opt",
+        "chunk",
+        "steps",
+        "batch",
+        "seed",
+        "cells-dir",
+        "record-out",
+        "tail",
+        "heartbeat",
+        "prior-wall-ms",
+        "deterministic",
+        "verbose",
+    ])?;
+    let req = |name: &str| -> Result<String> {
+        args.opt(name)
+            .map(String::from)
+            .with_context(|| format!("sweep-worker needs --{name}"))
+    };
+    let cell = Cell {
+        model: req("model")?,
+        fmt: req("fmt")?,
+        round: req("round")?,
+        pos: req("pos")?,
+        opt: req("opt")?,
+        chunk: args.opt_usize("chunk", 0)?,
+        steps: args.opt_usize("steps", 0)?,
+        batch: args.opt_usize("batch", 0)?,
+        seed: args.opt_u64("seed", 0)?,
+    };
+    let record_out = req("record-out")?;
+    let run_opts = RunOpts {
+        cells_dir: req("cells-dir")?,
+        tail: args.opt_usize("tail", 5)?,
+        verbose: args.flag("verbose"),
+        deterministic: args.flag("deterministic"),
+        ..RunOpts::default()
+    };
+    let prior_wall_ms = args.opt_parse("prior-wall-ms", 0.0f64, "f64")?;
+    let heartbeat = args.opt("heartbeat").map(String::from);
+    // soft_timeout = false: a worker never times itself out; the
+    // supervisor enforces budgets by kill, so every worker record is
+    // terminal (done/diverged).
+    let (record, _summary) = run_cell(&cell, &run_opts, prior_wall_ms, heartbeat.as_deref(), false)?;
+    let tmp = format!("{record_out}.tmp");
+    std::fs::write(&tmp, &record).with_context(|| format!("write {tmp}"))?;
+    std::fs::rename(&tmp, &record_out)
+        .with_context(|| format!("rename {tmp} → {record_out}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        assert_eq!(backoff_delay(250, 1), Duration::from_millis(250));
+        assert_eq!(backoff_delay(250, 2), Duration::from_millis(500));
+        assert_eq!(backoff_delay(250, 3), Duration::from_millis(1000));
+        assert_eq!(backoff_delay(250, 4), Duration::from_millis(2000));
+        // Enormous no-progress counts saturate rather than overflow.
+        assert_eq!(backoff_delay(u64::MAX, 80), Duration::from_millis(u64::MAX));
+    }
+
+    #[test]
+    fn worker_main_requires_its_options() {
+        let args = Args::parse(["sweep-worker".to_string()]).unwrap();
+        let err = worker_main(&args).unwrap_err();
+        assert!(format!("{err}").contains("--model"), "{err}");
+    }
+
+    #[test]
+    fn missing_checkpoint_reads_as_zero_progress() {
+        assert_eq!(ck_next_step("/nonexistent/dir/none.fp8ck"), 0);
+    }
+}

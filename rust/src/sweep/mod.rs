@@ -38,6 +38,20 @@
 //! checkpoint, and is re-attempted — resumed, not restarted — by the next
 //! invocation).
 //!
+//! **Supervised** (`--workers N`, N > 1): cells run as child
+//! `fp8train sweep-worker` processes under [`crate::supervisor`] —
+//! heartbeat monitoring, hard (kill + resume) timeouts, bounded retry
+//! with backoff, and terminal `failed` statuses, so one crashing or
+//! hanging cell never sinks the study (`docs/robustness.md`). The
+//! serial and supervised paths emit byte-identical records under
+//! `--deterministic`.
+//!
+//! **Guarded**: every cell trains under the numerical divergence guard
+//! ([`crate::train::GuardCfg`]) — a cell whose loss goes non-finite for
+//! consecutive steps, or blows past 1000× its first eval-window loss,
+//! ends early with terminal status `diverged` instead of burning its
+//! step budget.
+//!
 //! `sweep diff A B` compares two artifacts per-cell on the zero-dependency
 //! JSON reader in [`crate::benchcmp`].
 
@@ -51,17 +65,20 @@ use crate::coordinator::NativeEngine;
 use crate::data::SyntheticDataset;
 use crate::error::{Context, Result};
 use crate::experiments;
+use crate::faults::FaultSpec;
 use crate::nn::{LayerPos, ModelSpec, PrecisionPolicy};
 use crate::nn::linear::layer_hash;
 use crate::numerics::{FloatFormat, RoundMode};
 use crate::optim::standard_optimizer;
 use crate::perf::PhaseSnapshot;
-use crate::state::StateMap;
-use crate::train::{train, LrSchedule, TrainConfig, TrainResult};
+use crate::state::{StateDict, StateError, StateMap};
+use crate::train::{train_with, GuardCfg, LrSchedule, TrainConfig, TrainProgress, TrainResult};
 use crate::{bail, ensure};
 
-/// Artifact schema version (`SWEEP.json` → `"schema"`).
-pub const SCHEMA: u64 = 1;
+/// Artifact schema version (`SWEEP.json` → `"schema"`). Schema 2 added
+/// the per-record `diverged_at` (null | step count) and `error`
+/// (null | message) fields.
+pub const SCHEMA: u64 = 2;
 
 /// A sweep description: one template axis crossed with five value axes
 /// plus the shared per-cell training budget. Every field participates in
@@ -167,6 +184,29 @@ pub struct RunOpts {
     /// Loss-curve points kept per cell record.
     pub tail: usize,
     pub verbose: bool,
+    /// Worker-process parallelism: 0 or 1 runs cells in-process (serial);
+    /// N > 1 dispatches cells to N child `fp8train sweep-worker`
+    /// processes under the supervisor ([`crate::supervisor`]), which also
+    /// turns `timeout_per_cell` into a *hard* (kill + resume) timeout.
+    pub workers: usize,
+    /// Supervisor: attempts **without progress** (the cell's checkpoint
+    /// did not advance across the attempt) tolerated per cell before it is
+    /// recorded terminally as `failed` (crash) or `timeout` (stall/hard
+    /// timeout).
+    pub retries: usize,
+    /// Supervisor: base respawn backoff; attempt n without progress waits
+    /// `backoff_ms × 2^(n−1)` before the next spawn.
+    pub backoff_ms: u64,
+    /// Supervisor: a worker whose heartbeat-file *content* has not changed
+    /// for this long is considered stuck and killed (0 disables).
+    pub heartbeat_secs: f64,
+    /// Zero the non-reproducible record fields (`wall_ms`, `phases`) so
+    /// two runs of the same grid — serial or supervised, interrupted or
+    /// not — emit byte-identical artifacts (the fault-tolerance CI check).
+    pub deterministic: bool,
+    /// Supervisor: worker binary to spawn (defaults to the current
+    /// executable; a test hook).
+    pub worker_exe: Option<String>,
 }
 
 impl Default for RunOpts {
@@ -178,6 +218,12 @@ impl Default for RunOpts {
             timeout_per_cell: 0.0,
             tail: 5,
             verbose: false,
+            workers: 0,
+            retries: 3,
+            backoff_ms: 250,
+            heartbeat_secs: 30.0,
+            deterministic: false,
+            worker_exe: None,
         }
     }
 }
@@ -373,18 +419,28 @@ fn jnum(v: f64) -> String {
 }
 
 /// What the table renderer needs to say about one cell.
-struct CellSummary {
-    status: String,
-    final_err: Option<f64>,
-    final_loss: Option<f64>,
-    wall_ms: Option<f64>,
+pub(crate) struct CellSummary {
+    pub(crate) status: String,
+    pub(crate) final_err: Option<f64>,
+    pub(crate) final_loss: Option<f64>,
+    pub(crate) wall_ms: Option<f64>,
     /// Durability checkpoint to delete once the caller has persisted the
-    /// record (only set for `done` cells).
-    ck_to_remove: Option<String>,
+    /// record (set for the terminal `done`/`diverged` statuses).
+    pub(crate) ck_to_remove: Option<String>,
+}
+
+/// The durability-checkpoint path of a cell — shared by the serial
+/// runner, the worker and the supervisor, which must all agree on it.
+pub(crate) fn cell_ck_path(cells_dir: &str, cell: &Cell) -> String {
+    format!("{}/cell_{:016x}.fp8ck", cells_dir, layer_hash(&cell.id()))
 }
 
 /// Serialize one cell record (`docs/sweep.md` documents the schema).
-fn cell_json(
+/// `diverged_at` is the divergence-guard step for `diverged` records;
+/// `error` is the failure description for supervisor-emitted `failed`
+/// records. Both serialize as `null` when absent.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn cell_json(
     cell: &Cell,
     status: &str,
     steps_done: usize,
@@ -393,6 +449,8 @@ fn cell_json(
     phases: &PhaseSnapshot,
     stepped: u64,
     tail: usize,
+    diverged_at: Option<usize>,
+    error: Option<&str>,
 ) -> String {
     let (final_train_loss, final_test_loss, final_test_err, best_test_err) = match r {
         Some(r) => (
@@ -422,12 +480,14 @@ fn cell_json(
         }
         None => "[]".into(),
     };
+    let diverged_at = diverged_at.map_or_else(|| "null".to_string(), |d| d.to_string());
+    let error = error.map_or_else(|| "null".to_string(), |e| format!("\"{}\"", escape(e)));
     format!(
         "{{\"id\":\"{}\",\"model\":\"{}\",\"fmt\":\"{}\",\"round\":\"{}\",\"pos\":\"{}\",\
          \"opt\":\"{}\",\"chunk\":{},\"steps\":{},\"batch\":{},\"seed\":{},\
          \"status\":\"{}\",\"steps_done\":{},\"wall_ms\":{},\
          \"final_train_loss\":{},\"final_test_loss\":{},\"final_test_err\":{},\
-         \"best_test_err\":{},\"curve_tail\":{},\"phases\":{}}}",
+         \"best_test_err\":{},\"diverged_at\":{},\"error\":{},\"curve_tail\":{},\"phases\":{}}}",
         escape(&cell.id()),
         escape(&cell.model),
         escape(&cell.fmt),
@@ -445,6 +505,8 @@ fn cell_json(
         final_test_loss,
         final_test_err,
         best_test_err,
+        diverged_at,
+        error,
         curve_tail,
         phases.to_json(stepped)
     )
@@ -452,7 +514,7 @@ fn cell_json(
 
 /// Atomically (write + rename) emit the artifact from the records
 /// collected so far, in grid order.
-fn write_artifact(path: &str, def: &SweepDef, records: &[String]) -> Result<()> {
+pub(crate) fn write_artifact(path: &str, def: &SweepDef, records: &[String]) -> Result<()> {
     let strs = |v: &[String]| {
         v.iter()
             .map(|s| format!("\"{}\"", escape(s)))
@@ -490,7 +552,7 @@ fn write_artifact(path: &str, def: &SweepDef, records: &[String]) -> Result<()> 
 /// Read an existing artifact's cell records (id → record). A missing file
 /// is an empty map; an unreadable or wrong-schema file is an error (never
 /// silently overwrite something that wasn't ours).
-fn load_artifact(path: &str) -> Result<BTreeMap<String, Json>> {
+pub(crate) fn load_artifact(path: &str) -> Result<BTreeMap<String, Json>> {
     let mut out = BTreeMap::new();
     let text = match std::fs::read_to_string(path) {
         Ok(t) => t,
@@ -528,11 +590,28 @@ fn load_artifact(path: &str) -> Result<BTreeMap<String, Json>> {
 /// `.fp8ck`. Because eval points align with segment boundaries, the
 /// recorded curve — and, by the bit-exact resume contract, the weights —
 /// are identical however often the cell was interrupted.
+///
+/// Every cell trains under the divergence guard (`GuardCfg`: patience 3,
+/// 1000× loss-window factor) — a diverged cell breaks out of the segment
+/// loop with terminal status `diverged` and no further checkpoints. A
+/// `FP8TRAIN_FAULT` spec matching this cell (and the current attempt) is
+/// threaded into the trainer for deterministic fault injection.
+///
 /// `prior_wall_ms` is the wall time already recorded for this cell by a
 /// previous (interrupted/timed-out) invocation; the emitted `wall_ms`
 /// accumulates it, so the artifact reports the cell's total wall time
-/// across resumes.
-fn run_cell(cell: &Cell, opts: &RunOpts, prior_wall_ms: f64) -> Result<(String, CellSummary)> {
+/// across resumes. `heartbeat` is the liveness file a supervised worker
+/// touches every step; `soft_timeout` gates the `--timeout-per-cell`
+/// segment-boundary check (the supervisor enforces timeouts by kill
+/// instead, so its workers run with `soft_timeout = false`).
+pub(crate) fn run_cell(
+    cell: &Cell,
+    opts: &RunOpts,
+    prior_wall_ms: f64,
+    heartbeat: Option<&str>,
+    soft_timeout: bool,
+) -> Result<(String, CellSummary)> {
+    let id = cell.id();
     let spec = ModelSpec::resolve(&cell.model)?;
     // LR comes from the *un-overridden* spec: a pos override drops the
     // preset tag, and the pos axis must not smuggle in a different
@@ -549,30 +628,48 @@ fn run_cell(cell: &Cell, opts: &RunOpts, prior_wall_ms: f64) -> Result<(String, 
     if cell.chunk > 0 {
         policy = policy.with_chunk(cell.chunk);
     }
-    let opt = standard_optimizer(&cell.opt, cell.seed)
-        .with_context(|| format!("unknown opt-axis value {:?} (sgd|adam)", cell.opt))?;
+    // Engine construction is repeatable: a corrupt checkpoint may have
+    // partially mutated the engine before its load failed, so
+    // restart-from-scratch rebuilds rather than reuses.
+    let make_engine = |policy: &PrecisionPolicy| -> Result<NativeEngine> {
+        let opt = standard_optimizer(&cell.opt, cell.seed)
+            .with_context(|| format!("unknown opt-axis value {:?} (sgd|adam)", cell.opt))?;
+        Ok(NativeEngine::with_optimizer(&spec, policy.clone(), opt, cell.seed))
+    };
     // The committed-run budget of experiments::run_training: 1024 train /
     // 128 test examples — cells stay comparable with the table harnesses.
     let ds = SyntheticDataset::for_model(&spec, cell.seed).with_sizes(1024, 128);
-    let mut engine = NativeEngine::with_optimizer(&spec, policy, opt, cell.seed);
+    let mut engine = make_engine(&policy)?;
 
     std::fs::create_dir_all(&opts.cells_dir)
         .with_context(|| format!("create cell-checkpoint dir {}", opts.cells_dir))?;
-    let ck = format!("{}/cell_{:016x}.fp8ck", opts.cells_dir, layer_hash(&cell.id()));
+    let ck = cell_ck_path(&opts.cells_dir, cell);
     // In-cell durability: a half-finished cell resumes from its checkpoint.
-    let mut next = 0usize;
-    let mut have_ck = false;
+    // The progress struct is caller-held (satellite of `train_with`) so one
+    // restore covers every segment this invocation runs.
+    let mut progress = TrainProgress::default();
     if std::path::Path::new(&ck).exists() {
-        match StateMap::load_file(&ck).and_then(|m| m.get_u64("train.next_step")) {
-            Ok(n) => {
-                next = n as usize;
-                have_ck = true;
+        let restored = (|| -> std::result::Result<(), StateError> {
+            let map = StateMap::load_file(&ck)?;
+            engine.load_state(&map)?;
+            progress.load_state("train", &map)?;
+            if progress.next_step > cell.steps {
+                return Err(StateError::Incompatible(format!(
+                    "checkpoint is at step {}, beyond the cell's {}-step budget",
+                    progress.next_step, cell.steps
+                )));
             }
-            Err(_) => {
-                // Unreadable leftovers (or a hash collision with some other
-                // file) restart the cell rather than poisoning it.
-                std::fs::remove_file(&ck).ok();
-            }
+            Ok(())
+        })();
+        if let Err(e) = restored {
+            // Truncated/corrupt/mismatched leftovers (or a hash collision
+            // with some other file) restart the cell rather than poisoning
+            // it — the supervisor relies on this after killing a worker
+            // mid-checkpoint-write.
+            crate::log_warn!("cell checkpoint {ck} is unusable ({e}); restarting cell from scratch");
+            std::fs::remove_file(&ck).ok();
+            engine = make_engine(&policy)?;
+            progress = TrainProgress::default();
         }
     }
     let seg = (cell.steps / 5).max(1);
@@ -583,59 +680,98 @@ fn run_cell(cell: &Cell, opts: &RunOpts, prior_wall_ms: f64) -> Result<(String, 
     cfg.verbose = opts.verbose;
     cfg.save_path = Some(ck.clone());
     cfg.save_every = 0; // one save per segment (at its final step)
+    cfg.guard = GuardCfg {
+        nan_patience: 3,
+        diverge_factor: 1e3,
+    };
+    cfg.fault = FaultSpec::from_env()?.filter(|f| f.applies(&id));
+    cfg.heartbeat = heartbeat.map(String::from);
 
     let start = Instant::now();
     let p0 = crate::perf::snapshot();
     let mut stepped = 0u64;
-    let mut result: Option<TrainResult> = None;
     let mut timed_out = false;
-    loop {
+    let (diverged_at, result) = loop {
+        let next = progress.next_step;
         let target = ((next + seg).min(cell.steps)).max(next);
         cfg.steps = target;
-        cfg.resume = have_ck.then(|| ck.clone());
-        let r = train(&mut engine, &ds, &cfg);
-        stepped += (target - next) as u64;
-        next = target;
-        have_ck = true;
-        result = Some(r);
-        if next >= cell.steps {
-            break;
+        let r = train_with(&mut engine, &ds, &cfg, &mut progress);
+        stepped += (r.diverged_at.unwrap_or(target).saturating_sub(next)) as u64;
+        // A diverged segment does not advance next_step — break on it
+        // explicitly or the loop would re-run the same segment forever.
+        if r.diverged_at.is_some() || progress.next_step >= cell.steps {
+            break (r.diverged_at, r);
         }
-        if opts.timeout_per_cell > 0.0
+        if soft_timeout
+            && opts.timeout_per_cell > 0.0
             && start.elapsed().as_secs_f64() >= opts.timeout_per_cell
         {
             timed_out = true;
-            break;
+            break (None, r);
         }
-    }
-    let wall_ms = prior_wall_ms + start.elapsed().as_secs_f64() * 1e3;
-    let phases = crate::perf::snapshot().since(&p0);
-    let status = if timed_out { "timeout" } else { "done" };
-    let r = result.as_ref();
-    let record = cell_json(cell, status, next, wall_ms, r, &phases, stepped, opts.tail);
+    };
+    // --deterministic zeroes every timing-derived field so two runs of the
+    // same grid — serial vs supervised, interrupted vs not — emit
+    // byte-identical records.
+    let (wall_ms, phases, stepped) = if opts.deterministic {
+        (0.0, PhaseSnapshot::default(), 0)
+    } else {
+        (
+            prior_wall_ms + start.elapsed().as_secs_f64() * 1e3,
+            crate::perf::snapshot().since(&p0),
+            stepped,
+        )
+    };
+    let status = if diverged_at.is_some() {
+        "diverged"
+    } else if timed_out {
+        "timeout"
+    } else {
+        "done"
+    };
+    let steps_done = diverged_at.unwrap_or(progress.next_step);
+    let record = cell_json(
+        cell,
+        status,
+        steps_done,
+        wall_ms,
+        Some(&result),
+        &phases,
+        stepped,
+        opts.tail,
+        diverged_at,
+        None,
+    );
     // Normalize through the parser (also a self-check): carried-over and
     // fresh records then share one canonical serialization, so a re-run
     // over a complete grid rewrites the artifact byte-identically.
     let record = match Json::parse(&record) {
         Ok(v) => v.dump(),
-        Err(e) => bail!("internal: record for cell {} is not valid JSON: {e}", cell.id()),
+        Err(e) => bail!("internal: record for cell {id} is not valid JSON: {e}"),
     };
     let summary = CellSummary {
         status: status.to_string(),
-        final_err: r.map(|r| r.final_test_err),
-        final_loss: r.map(|r| r.final_train_loss),
+        final_err: Some(result.final_test_err),
+        final_loss: Some(result.final_train_loss),
         wall_ms: Some(wall_ms),
-        // A done cell's record supersedes its checkpoint; a timed-out cell
-        // keeps it so the next invocation resumes instead of restarting.
+        // A terminal (done/diverged) record supersedes its checkpoint; a
+        // timed-out cell keeps it so the next invocation resumes instead
+        // of restarting.
         ck_to_remove: (!timed_out).then_some(ck),
     };
     Ok((record, summary))
 }
 
-/// Run the grid: skip cells already `done` in the artifact, resume
-/// interrupted/timed-out ones, honor the `--max-cells` budget, rewrite the
-/// artifact after every completed cell, and render the summary table.
+/// Run the grid: skip cells already terminal (`done`/`diverged`) in the
+/// artifact, resume interrupted/timed-out ones, honor the `--max-cells`
+/// budget, rewrite the artifact after every completed cell, and render the
+/// summary table. With `--workers N` (N > 1) the grid runs under
+/// [`crate::supervisor::run_supervised`] instead — child processes,
+/// heartbeats, kill-based timeouts and bounded retry.
 pub fn run(def: &SweepDef, opts: &RunOpts) -> Result<()> {
+    if opts.workers > 1 {
+        return crate::supervisor::run_supervised(def, opts);
+    }
     let cells = expand(def)?;
     let old = load_artifact(&opts.out)?;
     println!(
@@ -659,17 +795,21 @@ pub fn run(def: &SweepDef, opts: &RunOpts) -> Result<()> {
         write_artifact(&opts.out, def, &records)
     };
     let mut rows: Vec<(Cell, String, Option<f64>, Option<f64>, Option<f64>)> = Vec::new();
-    let (mut ran, mut skipped, mut deferred, mut timeouts) = (0usize, 0usize, 0usize, 0usize);
+    let (mut ran, mut skipped, mut deferred, mut timeouts, mut diverged) =
+        (0usize, 0usize, 0usize, 0usize, 0usize);
     for (idx, cell) in cells.iter().enumerate() {
         let id = cell.id();
-        let done_before = old
+        let prior_status = old
             .get(&id)
-            .is_some_and(|rec| rec.at("status").and_then(Json::str_val) == Some("done"));
-        if done_before {
+            .and_then(|rec| rec.at("status").and_then(Json::str_val));
+        // `done` and `diverged` are both terminal: re-running a diverged
+        // cell would deterministically diverge again. `timeout` and
+        // `failed` (supervised runs) are re-attempted.
+        if let Some(status @ ("done" | "diverged")) = prior_status {
             let rec = &old[&id];
             rows.push((
                 cell.clone(),
-                "done (skipped)".into(),
+                format!("{status} (skipped)"),
                 rec.at("final_test_err").and_then(Json::num),
                 rec.at("final_train_loss").and_then(Json::num),
                 rec.at("wall_ms").and_then(Json::num),
@@ -689,7 +829,7 @@ pub fn run(def: &SweepDef, opts: &RunOpts) -> Result<()> {
             .get(&id)
             .and_then(|r| r.at("wall_ms").and_then(Json::num))
             .unwrap_or(0.0);
-        let (record, s) = run_cell(cell, opts, prior_wall)?;
+        let (record, s) = run_cell(cell, opts, prior_wall, None, true)?;
         slots[idx] = Some(record);
         // Persist after every cell so an interrupt costs at most one cell
         // — and delete the in-cell checkpoint only once its record is
@@ -701,21 +841,29 @@ pub fn run(def: &SweepDef, opts: &RunOpts) -> Result<()> {
         if s.status == "timeout" {
             timeouts += 1;
         }
+        if s.status == "diverged" {
+            diverged += 1;
+        }
         ran += 1;
         rows.push((cell.clone(), s.status, s.final_err, s.final_loss, s.wall_ms));
     }
     emit(&slots)?;
     render_table(&rows);
+    // `failed` is a supervised-only terminal status (a worker crashing
+    // repeatedly); the serial path can't produce it but reports the column
+    // so the two paths' summaries line up.
+    let failed = 0usize;
     println!(
         "sweep complete: {ran} run, {skipped} skipped (already complete in {}), \
-         {deferred} deferred by --max-cells, {timeouts} timed out",
+         {deferred} deferred by --max-cells, {timeouts} timed out, \
+         {diverged} diverged, {failed} failed",
         opts.out
     );
     Ok(())
 }
 
 /// The compact terminal table: one row per grid cell, in run order.
-fn render_table(rows: &[(Cell, String, Option<f64>, Option<f64>, Option<f64>)]) {
+pub(crate) fn render_table(rows: &[(Cell, String, Option<f64>, Option<f64>, Option<f64>)]) {
     let num = |v: &Option<f64>| match v {
         Some(v) => format!("{v:.3}"),
         None => "-".into(),
@@ -886,7 +1034,7 @@ mod tests {
         let phases = PhaseSnapshot::default();
         // A cell with no result (NaN-free nulls) and one with a NaN curve
         // both serialize to parseable JSON.
-        let rec = cell_json(&cells[0], "timeout", 1, 12.5, None, &phases, 1, 5);
+        let rec = cell_json(&cells[0], "timeout", 1, 12.5, None, &phases, 1, 5, None, None);
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("status").and_then(Json::str_val), Some("timeout"));
         assert_eq!(v.at("final_test_err"), Some(&Json::Null));
@@ -899,8 +1047,9 @@ mod tests {
             }],
             final_test_err: 50.0,
             final_train_loss: f64::NAN,
+            diverged_at: None,
         };
-        let rec = cell_json(&cells[1], "done", 2, 3.25, Some(&r), &phases, 2, 5);
+        let rec = cell_json(&cells[1], "done", 2, 3.25, Some(&r), &phases, 2, 5, None, None);
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("final_train_loss"), Some(&Json::Null));
         assert_eq!(v.at("curve_tail.0.test_err").and_then(Json::num), Some(50.0));
@@ -917,7 +1066,7 @@ mod tests {
         let phases = PhaseSnapshot::default();
         let recs: Vec<String> = cells
             .iter()
-            .map(|c| cell_json(c, "done", 2, 1.0, None, &phases, 2, 5))
+            .map(|c| cell_json(c, "done", 2, 1.0, None, &phases, 2, 5, None, None))
             .collect();
         write_artifact(&path, &def, &recs).unwrap();
         let loaded = load_artifact(&path).unwrap();
@@ -951,8 +1100,35 @@ mod tests {
         // resumed cell's record reports total wall time across resumes.
         let cells = expand(&tiny_def()).unwrap();
         let phases = PhaseSnapshot::default();
-        let rec = cell_json(&cells[0], "timeout", 1, 1500.0 + 12.5, None, &phases, 1, 5);
+        let rec =
+            cell_json(&cells[0], "timeout", 1, 1500.0 + 12.5, None, &phases, 1, 5, None, None);
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("wall_ms").and_then(Json::num), Some(1512.5));
+    }
+
+    #[test]
+    fn diverged_and_error_fields_serialize() {
+        let cells = expand(&tiny_def()).unwrap();
+        let phases = PhaseSnapshot::default();
+        let rec = cell_json(&cells[0], "diverged", 7, 0.0, None, &phases, 0, 5, Some(7), None);
+        let v = Json::parse(&rec).unwrap();
+        assert_eq!(v.at("status").and_then(Json::str_val), Some("diverged"));
+        assert_eq!(v.at("diverged_at").and_then(Json::num), Some(7.0));
+        assert_eq!(v.at("error"), Some(&Json::Null));
+        let rec = cell_json(
+            &cells[0],
+            "failed",
+            2,
+            1.0,
+            None,
+            &phases,
+            0,
+            5,
+            None,
+            Some("exit status 3"),
+        );
+        let v = Json::parse(&rec).unwrap();
+        assert_eq!(v.at("error").and_then(Json::str_val), Some("exit status 3"));
+        assert_eq!(v.at("diverged_at"), Some(&Json::Null));
     }
 }

@@ -17,8 +17,30 @@ pub use schedule::LrSchedule;
 
 use crate::coordinator::{evaluate, Engine};
 use crate::data::{Batch, SyntheticDataset};
+use crate::faults::{FaultKind, FaultSpec};
 use crate::logging::CsvSink;
 use crate::state::{self, StateDict, StateError, StateMap};
+
+/// Numerical divergence guard thresholds. Both default to **off** — the
+/// plain trainer records whatever happens; the sweep runner enables the
+/// guard so a doomed cell ends early as `diverged` instead of burning its
+/// full step budget (`docs/robustness.md`).
+///
+/// Detection is deterministic: both signals are functions of the training
+/// stream and state that the checkpoint persists ([`TrainProgress`]'s
+/// `nan_streak` and eval curve), so a resumed run declares divergence at
+/// the same step an uninterrupted one would.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GuardCfg {
+    /// Declare divergence after this many *consecutive* steps whose loss is
+    /// non-finite or whose quantize passes saw non-finite tensor values
+    /// ([`crate::numerics::format::take_nonfinite`]). 0 disables.
+    pub nan_patience: usize,
+    /// At each eval point (once a baseline exists), declare divergence when
+    /// the eval-window train loss exceeds `diverge_factor ×` the first
+    /// recorded eval point's train loss. 0.0 disables.
+    pub diverge_factor: f64,
+}
 
 /// Training-run configuration.
 #[derive(Clone, Debug)]
@@ -56,6 +78,16 @@ pub struct TrainConfig {
     /// a resuming process can reconstruct the run (model id, policy, seed,
     /// step budget — see `cmd_train`).
     pub save_meta: StateMap,
+    /// Numerical divergence guard (off by default; the sweep enables it).
+    pub guard: GuardCfg,
+    /// Deterministic fault injection (`FP8TRAIN_FAULT`): crash-class
+    /// faults fire at the top of the step loop *before* their trigger step
+    /// executes; `nan` poisons the recorded loss from the trigger step on.
+    pub fault: Option<FaultSpec>,
+    /// Liveness beacon: when set, the loop writes the current step number
+    /// to this file at the top of every step. The sweep supervisor watches
+    /// the file's *content* to distinguish "slow" from "stuck".
+    pub heartbeat: Option<String>,
 }
 
 impl TrainConfig {
@@ -72,6 +104,9 @@ impl TrainConfig {
             keep_last: 0,
             resume: None,
             save_meta: StateMap::new(),
+            guard: GuardCfg::default(),
+            fault: None,
+            heartbeat: None,
         }
     }
 }
@@ -92,6 +127,10 @@ pub struct TrainResult {
     pub curve: Vec<EvalPoint>,
     pub final_test_err: f64,
     pub final_train_loss: f64,
+    /// `Some(step)` when the divergence guard ended the run early after
+    /// executing `step` steps; the final checkpoint (if any) predates the
+    /// divergence window, and no checkpoint is written on the way out.
+    pub diverged_at: Option<usize>,
 }
 
 impl TrainResult {
@@ -114,6 +153,10 @@ pub struct TrainProgress {
     pub recent_loss: f64,
     /// …over this many steps.
     pub recent_n: usize,
+    /// Consecutive non-finite steps seen by the divergence guard.
+    /// Persisted so a run resumed mid-streak trips the guard at exactly
+    /// the step the uninterrupted run would have.
+    pub nan_streak: usize,
     pub curve: Vec<EvalPoint>,
 }
 
@@ -127,6 +170,7 @@ impl StateDict for TrainProgress {
         out.put_u64(&state::key(prefix, "next_step"), self.next_step as u64);
         out.put_f64(&state::key(prefix, "recent_loss"), self.recent_loss);
         out.put_u64(&state::key(prefix, "recent_n"), self.recent_n as u64);
+        out.put_u64(&state::key(prefix, "nan_streak"), self.nan_streak as u64);
         let mut bytes = Vec::with_capacity(self.curve.len() * CURVE_RECORD);
         for p in &self.curve {
             bytes.extend_from_slice(&(p.step as u64).to_le_bytes());
@@ -141,6 +185,7 @@ impl StateDict for TrainProgress {
         self.next_step = src.get_u64(&state::key(prefix, "next_step"))? as usize;
         self.recent_loss = src.get_f64(&state::key(prefix, "recent_loss"))?;
         self.recent_n = src.get_u64(&state::key(prefix, "recent_n"))? as usize;
+        self.nan_streak = src.get_u64(&state::key(prefix, "nan_streak"))? as usize;
         let bytes = src.get_bytes(&state::key(prefix, "curve"))?;
         if bytes.len() % CURVE_RECORD != 0 {
             return Err(StateError::Corrupt(format!(
@@ -256,7 +301,6 @@ fn prune_retained(template: &str, keep: usize, current_step: u64, verbose: bool)
 /// file (it loads `meta.*` first and surfaces a clean contextual error),
 /// so these panics mark invariant violations, not user typos.
 pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) -> TrainResult {
-    let test: Vec<Batch> = ds.test_batches(cfg.batch_size.max(16));
     let mut progress = TrainProgress::default();
     if let Some(path) = &cfg.resume {
         let map = StateMap::load_file(path)
@@ -282,17 +326,89 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
             );
         }
     }
+    train_with(engine, ds, cfg, &mut progress)
+}
+
+/// The training loop against **caller-held** progress: runs from
+/// `progress.next_step` to `cfg.steps`, ignoring `cfg.resume` entirely.
+///
+/// This is the segmented-execution entry: a caller driving a run in
+/// eval-aligned segments (the sweep) keeps one engine and one
+/// [`TrainProgress`] alive across segments instead of round-tripping
+/// through the checkpoint it just wrote. Bit-exactness is unaffected —
+/// the loop body is the same one `train` runs, and the checkpoint already
+/// captures everything the loop carries across steps.
+pub fn train_with(
+    engine: &mut dyn Engine,
+    ds: &SyntheticDataset,
+    cfg: &TrainConfig,
+    progress: &mut TrainProgress,
+) -> TrainResult {
+    assert!(
+        progress.next_step <= cfg.steps,
+        "progress is at step {}, beyond this run's {} steps",
+        progress.next_step,
+        cfg.steps
+    );
+    let test: Vec<Batch> = ds.test_batches(cfg.batch_size.max(16));
     let sink = cfg.csv.as_ref().map(|p| {
         CsvSink::create(p, &["step", "lr", "train_loss", "test_loss", "test_err"])
             .expect("create csv")
     });
     let spe = ds.steps_per_epoch(cfg.batch_size);
+    // Start the guard from a clean counter: residue from other work on
+    // this thread must not leak into the first step's signal.
+    let _ = crate::numerics::format::take_nonfinite();
+    let mut diverged_at = None;
     for step in progress.next_step..cfg.steps {
+        if let Some(hb) = &cfg.heartbeat {
+            // Liveness, not state: best-effort, never kills training.
+            std::fs::write(hb, step.to_string()).ok();
+        }
+        if let Some(f) = &cfg.fault {
+            if step == f.step {
+                // Crash-class faults fire before the step executes, so the
+                // newest checkpoint is intact and a retry resumes exactly
+                // here. `nan` is handled below.
+                f.fire_process_fault();
+            }
+        }
         let lr = cfg.schedule.lr_at(step);
         let batch = ds.train_batch(step % spe, cfg.batch_size);
-        let loss = engine.train_step(&batch, lr, step as u64);
+        let mut loss = engine.train_step(&batch, lr, step as u64);
+        if let Some(f) = &cfg.fault {
+            if f.kind == FaultKind::Nan && step >= f.step {
+                loss = f64::NAN;
+            }
+        }
         progress.recent_loss += loss;
         progress.recent_n += 1;
+        // Divergence guard, signal 1: consecutive non-finite steps. The
+        // quantizer counter is drained every step (and re-drained after
+        // eval below) so the signal is a function of this step's training
+        // pass alone — resume-invariant by construction.
+        let quant_nonfinite = crate::numerics::format::take_nonfinite();
+        if cfg.guard.nan_patience > 0 {
+            if !loss.is_finite() || quant_nonfinite > 0 {
+                progress.nan_streak += 1;
+            } else {
+                progress.nan_streak = 0;
+            }
+            if progress.nan_streak >= cfg.guard.nan_patience {
+                diverged_at = Some(step + 1);
+                if cfg.verbose {
+                    crate::log_info!(
+                        "{} diverged at step {} ({} consecutive non-finite steps)",
+                        engine.name(),
+                        step + 1,
+                        progress.nan_streak
+                    );
+                }
+                // No checkpoint on the way out: the run is terminal, and
+                // the newest saved state predates the divergence window.
+                break;
+            }
+        }
         let at_eval =
             (cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0) || step + 1 == cfg.steps;
         if at_eval {
@@ -321,6 +437,30 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
                 );
             }
             progress.curve.push(pt);
+            // Eval forwards also quantize; drain their counts so they are
+            // not attributed to the next training step (an in-process eval
+            // happens at different steps than a resumed run would see).
+            let _ = crate::numerics::format::take_nonfinite();
+            // Divergence guard, signal 2: the loss-window watchdog. The
+            // baseline is the first persisted eval point, so the
+            // comparison is identical for resumed and uninterrupted runs.
+            if cfg.guard.diverge_factor > 0.0 && progress.curve.len() >= 2 {
+                let first = progress.curve[0].train_loss;
+                if first.is_finite() && pt.train_loss > first * cfg.guard.diverge_factor {
+                    diverged_at = Some(step + 1);
+                    if cfg.verbose {
+                        crate::log_info!(
+                            "{} diverged at step {}: train loss {:.4} exceeds {}x first eval ({:.4})",
+                            engine.name(),
+                            step + 1,
+                            pt.train_loss,
+                            cfg.guard.diverge_factor,
+                            first
+                        );
+                    }
+                    break;
+                }
+            }
         }
         // Checkpointing is on iff either knob is set; an enabled run also
         // always saves at the end (so `save_every` that doesn't divide
@@ -330,7 +470,7 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
             || (saving && step + 1 == cfg.steps);
         if at_save {
             progress.next_step = step + 1;
-            save_checkpoint(engine, &mut progress, cfg);
+            save_checkpoint(engine, progress, cfg);
         }
     }
     if let Some(s) = &sink {
@@ -345,7 +485,8 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
     TrainResult {
         final_test_err: last.test_err,
         final_train_loss: last.train_loss,
-        curve: progress.curve,
+        diverged_at,
+        curve: progress.curve.clone(),
     }
 }
 
@@ -395,6 +536,7 @@ mod tests {
             next_step: 17,
             recent_loss: 0.1 + 0.2, // not exactly 0.3 — bits must survive
             recent_n: 3,
+            nan_streak: 2,
             curve: vec![
                 EvalPoint { step: 8, train_loss: 1.5, test_loss: 1.25, test_err: 42.0 },
                 EvalPoint { step: 16, train_loss: f64::NAN, test_loss: 0.5, test_err: 10.0 },
@@ -407,6 +549,7 @@ mod tests {
         assert_eq!(q.next_step, 17);
         assert_eq!(q.recent_loss.to_bits(), p.recent_loss.to_bits());
         assert_eq!(q.recent_n, 3);
+        assert_eq!(q.nan_streak, 2);
         assert_eq!(q.curve.len(), 2);
         for (a, b) in p.curve.iter().zip(&q.curve) {
             assert_eq!(a.step, b.step);
@@ -500,6 +643,97 @@ mod tests {
         prune_retained(&weird.to_string_lossy(), 1, u64::MAX, false);
         assert!(victim.exists());
         std::fs::remove_file(victim).ok();
+    }
+
+    #[test]
+    fn nan_fault_trips_divergence_guard_without_a_checkpoint() {
+        use crate::faults::{FaultKind, FaultSpec};
+        let dir = std::env::temp_dir().join("fp8train_test_diverge");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("diverge.fp8ck");
+        std::fs::remove_file(&ck).ok();
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 11).with_sizes(32, 16);
+        let mut cfg = TrainConfig::quick(20);
+        cfg.batch_size = 8;
+        cfg.guard.nan_patience = 3;
+        cfg.save_path = Some(ck.to_string_lossy().into_owned());
+        cfg.fault = Some(FaultSpec {
+            kind: FaultKind::Nan,
+            step: 4,
+            attempt: 0,
+            cell_substr: None,
+        });
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 11);
+        let r = train(&mut e, &ds, &cfg);
+        // NaN from step 4 → streak hits 3 after steps 4, 5, 6 → diverged
+        // having executed 7 steps, well short of the 20-step budget.
+        assert_eq!(r.diverged_at, Some(7));
+        assert!(
+            !ck.exists(),
+            "a diverged run must not write a checkpoint on the way out"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loss_window_watchdog_fires_against_first_eval_baseline() {
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 12).with_sizes(32, 16);
+        let mut cfg = TrainConfig::quick(10);
+        cfg.batch_size = 8;
+        cfg.eval_every = 1;
+        // A factor so small any healthy positive loss "exceeds" it: the
+        // watchdog must fire at the second eval point (the first one is
+        // the baseline and is never compared against itself).
+        cfg.guard.diverge_factor = 1e-9;
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 12);
+        let r = train(&mut e, &ds, &cfg);
+        assert_eq!(r.diverged_at, Some(2));
+        assert_eq!(r.curve.len(), 2);
+    }
+
+    #[test]
+    fn heartbeat_file_tracks_the_step_loop() {
+        let dir = std::env::temp_dir().join("fp8train_test_heartbeat");
+        std::fs::create_dir_all(&dir).unwrap();
+        let hb = dir.join("hb");
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 14).with_sizes(16, 8);
+        let mut cfg = TrainConfig::quick(3);
+        cfg.batch_size = 4;
+        cfg.heartbeat = Some(hb.to_string_lossy().into_owned());
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32(), 14);
+        train(&mut e, &ds, &cfg);
+        let beat = std::fs::read_to_string(&hb).unwrap();
+        assert_eq!(beat, "2", "heartbeat must hold the last executed step");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_with_segments_match_an_uninterrupted_run_bit_exactly() {
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 15).with_sizes(32, 16);
+        let mut cfg = TrainConfig::quick(4);
+        cfg.batch_size = 8;
+        cfg.eval_every = 2;
+        // Uninterrupted 4-step run.
+        let mut e = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp8_paper(), 15);
+        let whole = train(&mut e, &ds, &cfg);
+        // Two 2-step segments against one caller-held progress — no
+        // checkpoint round-trip between them.
+        let mut f = NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp8_paper(), 15);
+        let mut progress = TrainProgress::default();
+        let mut seg_cfg = cfg.clone();
+        seg_cfg.steps = 2;
+        train_with(&mut f, &ds, &seg_cfg, &mut progress);
+        assert_eq!(progress.next_step, 0, "no save knobs → next_step untouched");
+        progress.next_step = 2; // segment driver advances the cursor
+        seg_cfg.steps = 4;
+        let parts = train_with(&mut f, &ds, &seg_cfg, &mut progress);
+        assert_eq!(whole.curve.len(), parts.curve.len());
+        for (a, b) in whole.curve.iter().zip(&parts.curve) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.test_err.to_bits(), b.test_err.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,361 @@
+//! Fault-tolerance contract tests for the sweep supervisor
+//! (`fp8train sweep --workers N`, `rust/src/supervisor/`), driving the
+//! real binary end-to-end with deterministic fault injection
+//! (`FP8TRAIN_FAULT`, `rust/src/faults.rs`):
+//!
+//! 1. **Crash recovery** — a worker killed by an injected `exit` resumes
+//!    bit-exactly from its segment checkpoint, and the finished artifact
+//!    is **byte-identical** to a serial no-fault run (`--deterministic`).
+//! 2. **Stall detection** — a worker whose heartbeat stops changing is
+//!    killed and retried; a hard `--timeout-per-cell` kill behaves the
+//!    same. Both paths end byte-identical to the clean run.
+//! 3. **Numerical divergence** — an injected `nan` loss trips the guard
+//!    into a terminal `diverged` record (with `diverged_at`) instead of
+//!    burning the step budget, and is skipped on re-runs.
+//! 4. **Retry exhaustion** — a worker that never makes progress goes
+//!    terminal `failed` (error message recorded, checkpoint kept) and is
+//!    re-attempted — to byte-identical completion — by a later invocation.
+//! 5. **Corrupt checkpoints** — an unreadable cell checkpoint restarts
+//!    the cell from scratch rather than poisoning the sweep.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use fp8train::benchcmp::Json;
+use fp8train::sweep::{self, RunOpts, SweepDef};
+
+/// 2 models × {fp32, fp8_paper} = 4 cells; steps=5 → segment length 1, so
+/// every step checkpoints and an `exit@2` fault leaves `train.next_step=2`.
+const GRID: &str = "mlp(6,{4,5},3)";
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fp8train_fault_tolerance_{tag}"));
+    // Stale state from a previous test run must not leak into this one.
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A deterministic sweep invocation of the real binary over [`GRID`],
+/// writing `<dir>/<out>` (checkpoints under `<dir>/<out>.cells`). Fault
+/// env vars are scrubbed; tests opt back in per-command.
+fn sweep_cmd(dir: &Path, out: &str, extra: &[&str]) -> Command {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_fp8train"));
+    cmd.arg("sweep")
+        .arg(GRID)
+        .args(["--formats", "fp32,fp8_paper"])
+        .args(["--steps", "5"])
+        .args(["--batch", "4"])
+        .args(["--seed", "9"])
+        .args(["--out", &dir.join(out).to_string_lossy().into_owned()])
+        .args([
+            "--cells-dir",
+            &dir.join(format!("{out}.cells")).to_string_lossy().into_owned(),
+        ])
+        .arg("--deterministic")
+        .args(extra.iter().copied());
+    cmd.env_remove("FP8TRAIN_FAULT");
+    cmd.env_remove("FP8TRAIN_ATTEMPT");
+    cmd
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("spawn the fp8train binary");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "sweep failed: {}\nstdout:\n{stdout}\nstderr:\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    stdout
+}
+
+fn read_bytes(dir: &Path, name: &str) -> Vec<u8> {
+    std::fs::read(dir.join(name)).unwrap_or_else(|e| panic!("read {name}: {e}"))
+}
+
+/// `(spawns, kills, retries)` from the supervisor's summary line.
+fn sup_counts(stdout: &str) -> (u64, u64, u64) {
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("supervisor:"))
+        .unwrap_or_else(|| panic!("no supervisor summary in:\n{stdout}"));
+    let nums: Vec<u64> = line
+        .split(|c: char| !c.is_ascii_digit())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().unwrap())
+        .collect();
+    (nums[0], nums[1], nums[2])
+}
+
+fn cell_records(dir: &Path, name: &str) -> Vec<Json> {
+    let text = std::fs::read_to_string(dir.join(name)).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.at("schema").and_then(Json::num), Some(2.0), "{name}");
+    match v.at("cells") {
+        Some(Json::Arr(a)) => a.clone(),
+        other => panic!("{name}: cells missing: {other:?}"),
+    }
+}
+
+#[test]
+fn injected_crash_retries_to_a_byte_identical_artifact() {
+    let dir = temp_dir("crash");
+    // Reference: serial (in-process), no faults.
+    run_ok(&mut sweep_cmd(&dir, "SERIAL.json", &[]));
+    // Supervised, with both fp8_paper workers crashing before step 2 on
+    // their first attempt. The retry resumes from the step-2 checkpoint.
+    let mut cmd = sweep_cmd(&dir, "WORKERS.json", &["--workers", "2", "--backoff-ms", "10"]);
+    cmd.env("FP8TRAIN_FAULT", "exit@2#fmt=fp8_paper");
+    let stdout = run_ok(&mut cmd);
+
+    assert_eq!(
+        read_bytes(&dir, "SERIAL.json"),
+        read_bytes(&dir, "WORKERS.json"),
+        "crash-retried supervised artifact must be byte-identical to the serial clean run"
+    );
+    // 4 first attempts + 2 retries (one per crashed fp8_paper cell), no kills.
+    assert_eq!(sup_counts(&stdout), (6, 0, 2), "{stdout}");
+    assert!(stdout.contains("0 failed"), "{stdout}");
+    // Completed cells clean up their working files.
+    let leftovers = std::fs::read_dir(dir.join("WORKERS.json.cells"))
+        .map(|d| d.count())
+        .unwrap_or(0);
+    assert_eq!(leftovers, 0, "done cells must leave no checkpoints");
+
+    // Re-running the finished grid is a pure skip: artifact unchanged.
+    let before = read_bytes(&dir, "WORKERS.json");
+    let stdout = run_ok(&mut sweep_cmd(
+        &dir,
+        "WORKERS.json",
+        &["--workers", "2", "--backoff-ms", "10"],
+    ));
+    assert!(stdout.contains("4 skipped"), "{stdout}");
+    assert_eq!(before, read_bytes(&dir, "WORKERS.json"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stale_heartbeat_kill_resumes_bit_exactly() {
+    let dir = temp_dir("stall");
+    run_ok(&mut sweep_cmd(&dir, "SERIAL.json", &[]));
+    // Both fp32 workers hang before step 3 on attempt 0; their heartbeat
+    // file stops changing, the supervisor kills them, and the retry
+    // resumes from the step-3 checkpoint. Generous --retries absorbs any
+    // spurious slow-start kill on a loaded machine (a killed-but-healthy
+    // attempt that progressed resets the budget anyway).
+    let mut cmd = sweep_cmd(
+        &dir,
+        "WORKERS.json",
+        &[
+            "--workers",
+            "2",
+            "--backoff-ms",
+            "10",
+            "--retries",
+            "8",
+            "--heartbeat-secs",
+            "1.5",
+        ],
+    );
+    cmd.env("FP8TRAIN_FAULT", "stall@3#fmt=fp32");
+    let stdout = run_ok(&mut cmd);
+
+    assert_eq!(
+        read_bytes(&dir, "SERIAL.json"),
+        read_bytes(&dir, "WORKERS.json"),
+        "kill-resumed supervised artifact must be byte-identical to the serial clean run"
+    );
+    let (_spawns, kills, retries) = sup_counts(&stdout);
+    assert!(kills >= 2, "both stalled workers must be killed: {stdout}");
+    assert!(retries >= 2, "both killed cells must be retried: {stdout}");
+    assert!(stdout.contains("0 timed out"), "{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hard_timeout_kill_resumes_bit_exactly() {
+    let dir = temp_dir("hard_timeout");
+    run_ok(&mut sweep_cmd(&dir, "SERIAL.json", &[]));
+    // Same stall, but detected by the hard per-cell budget (heartbeat
+    // monitoring disabled) — under the supervisor the budget is a kill
+    // deadline, and the killed cell still completes bit-exactly.
+    let mut cmd = sweep_cmd(
+        &dir,
+        "WORKERS.json",
+        &[
+            "--workers",
+            "2",
+            "--backoff-ms",
+            "10",
+            "--retries",
+            "8",
+            "--heartbeat-secs",
+            "0",
+            "--timeout-per-cell",
+            "1.5",
+        ],
+    );
+    cmd.env("FP8TRAIN_FAULT", "stall@3#fmt=fp32");
+    let stdout = run_ok(&mut cmd);
+
+    assert_eq!(
+        read_bytes(&dir, "SERIAL.json"),
+        read_bytes(&dir, "WORKERS.json"),
+        "timeout-killed supervised artifact must be byte-identical to the serial clean run"
+    );
+    let (_spawns, kills, retries) = sup_counts(&stdout);
+    assert!(kills >= 2, "both stalled workers must be killed: {stdout}");
+    assert!(retries >= 2, "both killed cells must be retried: {stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn nan_fault_records_terminal_diverged() {
+    let dir = temp_dir("nan");
+    let fault = "nan@1#fmt=fp8_paper";
+    let mut cmd = sweep_cmd(&dir, "NAN.json", &[]);
+    cmd.env("FP8TRAIN_FAULT", fault);
+    let stdout = run_ok(&mut cmd);
+    assert!(stdout.contains("2 diverged"), "{stdout}");
+
+    for rec in cell_records(&dir, "NAN.json") {
+        let id = rec.at("id").and_then(Json::str_val).unwrap().to_string();
+        if id.contains("fmt=fp8_paper") {
+            assert_eq!(rec.at("status").and_then(Json::str_val), Some("diverged"), "{id}");
+            let at = rec
+                .at("diverged_at")
+                .and_then(Json::num)
+                .unwrap_or_else(|| panic!("{id}: diverged record needs diverged_at"));
+            assert!((1.0..=5.0).contains(&at), "{id}: diverged_at={at}");
+            assert_eq!(rec.at("steps_done").and_then(Json::num), Some(at), "{id}");
+            assert_eq!(rec.at("error"), Some(&Json::Null), "{id}");
+        } else {
+            assert_eq!(rec.at("status").and_then(Json::str_val), Some("done"), "{id}");
+            assert_eq!(rec.at("diverged_at"), Some(&Json::Null), "{id}");
+        }
+    }
+
+    // Diverged is terminal: the re-run skips those cells verbatim.
+    let before = read_bytes(&dir, "NAN.json");
+    let mut cmd = sweep_cmd(&dir, "NAN.json", &[]);
+    cmd.env("FP8TRAIN_FAULT", fault);
+    let stdout = run_ok(&mut cmd);
+    assert!(stdout.contains("4 skipped"), "{stdout}");
+    assert_eq!(before, read_bytes(&dir, "NAN.json"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn one_cell_def() -> SweepDef {
+    let mut def = SweepDef::new("mlp(6,4,3)");
+    def.formats = vec!["fp8_paper".into()];
+    def.steps = 5;
+    def.batch = 4;
+    def.seed = 9;
+    def
+}
+
+fn path_str(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}
+
+#[cfg(unix)]
+#[test]
+fn exhausted_retries_record_failed_then_reattempt_completes() {
+    let dir = temp_dir("failed");
+    let def = one_cell_def();
+    let out = path_str(&dir.join("SWEEP.json"));
+    // A "worker" that exits non-zero instantly and never writes a record:
+    // every attempt is progress-free, so the retry budget exhausts.
+    let mut opts = RunOpts {
+        out: out.clone(),
+        cells_dir: path_str(&dir.join("cells")),
+        workers: 2,
+        retries: 1,
+        backoff_ms: 1,
+        deterministic: true,
+        worker_exe: Some("/bin/false".into()),
+        ..RunOpts::default()
+    };
+    sweep::run(&def, &opts).unwrap();
+
+    let recs = cell_records(&dir, "SWEEP.json");
+    assert_eq!(recs.len(), 1);
+    assert_eq!(recs[0].at("status").and_then(Json::str_val), Some("failed"));
+    assert_eq!(recs[0].at("steps_done").and_then(Json::num), Some(0.0));
+    assert_eq!(recs[0].at("wall_ms").and_then(Json::num), Some(0.0));
+    let why = recs[0].at("error").and_then(Json::str_val).unwrap_or_default();
+    assert!(why.contains("worker"), "error must describe the failure: {why:?}");
+
+    // `failed` is NOT terminal-for-skip: a later invocation with a working
+    // worker re-attempts the cell and completes it...
+    opts.worker_exe = Some(env!("CARGO_BIN_EXE_fp8train").into());
+    sweep::run(&def, &opts).unwrap();
+    let recs = cell_records(&dir, "SWEEP.json");
+    assert_eq!(recs[0].at("status").and_then(Json::str_val), Some("done"));
+
+    // ...to the same bytes a clean serial run produces.
+    let clean = RunOpts {
+        out: path_str(&dir.join("CLEAN.json")),
+        cells_dir: path_str(&dir.join("clean_cells")),
+        deterministic: true,
+        ..RunOpts::default()
+    };
+    sweep::run(&def, &clean).unwrap();
+    assert_eq!(
+        read_bytes(&dir, "SWEEP.json"),
+        read_bytes(&dir, "CLEAN.json"),
+        "re-attempted artifact must match the clean serial run"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_checkpoint_restarts_the_cell_from_scratch() {
+    let dir = temp_dir("corrupt_ck");
+    let def = one_cell_def();
+    // Clean reference.
+    let clean = RunOpts {
+        out: path_str(&dir.join("CLEAN.json")),
+        cells_dir: path_str(&dir.join("clean_cells")),
+        deterministic: true,
+        ..RunOpts::default()
+    };
+    sweep::run(&def, &clean).unwrap();
+
+    // A soft-timeout pass records `timeout` and keeps the checkpoint...
+    let mut opts = RunOpts {
+        out: path_str(&dir.join("SWEEP.json")),
+        cells_dir: path_str(&dir.join("cells")),
+        timeout_per_cell: 1e-9,
+        deterministic: true,
+        ..RunOpts::default()
+    };
+    sweep::run(&def, &opts).unwrap();
+    let ck = std::fs::read_dir(dir.join("cells"))
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .find(|p| p.extension().is_some_and(|x| x == "fp8ck"))
+        .expect("a timed-out cell must keep its checkpoint");
+    // ...which we vandalize: the resume must detect the corruption and
+    // restart the cell from scratch instead of failing the sweep.
+    std::fs::write(&ck, b"garbage: not a checkpoint").unwrap();
+    opts.timeout_per_cell = 0.0;
+    sweep::run(&def, &opts).unwrap();
+
+    let recs = cell_records(&dir, "SWEEP.json");
+    assert_eq!(recs[0].at("status").and_then(Json::str_val), Some("done"));
+    assert_eq!(
+        read_bytes(&dir, "SWEEP.json"),
+        read_bytes(&dir, "CLEAN.json"),
+        "a from-scratch restart must reproduce the clean artifact"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -58,9 +58,7 @@ fn interrupted_sweep_resumes_and_skips_completed_cells() {
         out: out.clone(),
         cells_dir: dir.join("cells").to_string_lossy().into_owned(),
         max_cells: 2,
-        timeout_per_cell: 0.0,
-        tail: 5,
-        verbose: false,
+        ..RunOpts::default()
     };
 
     // Pass 1: budget of 2 → exactly 2 of the 4 cells complete.

@@ -50,6 +50,7 @@ pub mod runtime;
 pub mod state;
 pub mod supervisor;
 pub mod sweep;
+pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
 pub mod train;

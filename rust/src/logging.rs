@@ -38,17 +38,39 @@ impl Level {
 /// Highest level that prints; default `Info` even before [`init`].
 static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
 
+/// Resolve an `FP8TRAIN_LOG` value to a level, plus a warning for values
+/// that name no level (a misspelled `FP8TRAIN_LOG=dbug` silently running
+/// at info would hide exactly the diagnostics the user asked for). Unset
+/// and `info` both map cleanly to the default.
+fn parse_level(var: Option<&str>) -> (Level, Option<String>) {
+    match var {
+        Some("error") => (Level::Error, None),
+        Some("warn") => (Level::Warn, None),
+        Some("info") | None => (Level::Info, None),
+        Some("debug") => (Level::Debug, None),
+        Some("trace") => (Level::Trace, None),
+        Some(other) => (
+            Level::Info,
+            Some(format!(
+                "[FP8TRAIN_LOG]: unknown value {other:?} (expected one of error, warn, info, \
+                 debug, trace); using info"
+            )),
+        ),
+    }
+}
+
 /// Set the level from `FP8TRAIN_LOG` (error|warn|info|debug|trace, default
-/// info). Idempotent.
+/// info). Idempotent; an unrecognized value warns once and keeps the
+/// default rather than failing startup.
 pub fn init() {
-    let level = match std::env::var("FP8TRAIN_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    };
+    let (level, warning) = parse_level(std::env::var("FP8TRAIN_LOG").ok().as_deref());
     MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+    if let Some(w) = warning {
+        static WARNED: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+        if !WARNED.swap(true, Ordering::Relaxed) {
+            log(Level::Warn, "logging", format_args!("{w}"));
+        }
+    }
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -134,9 +156,18 @@ impl CsvSink {
             "CSV row arity mismatch"
         );
         let mut w = self.inner.lock().unwrap();
+        // Non-finite values serialize as the empty cell — `NaN`/`inf` are
+        // not valid CSV numbers and break downstream numeric parsers; an
+        // empty cell is the canonical "no value" every reader understands.
         let line = values
             .iter()
-            .map(|v| format!("{v}"))
+            .map(|v| {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    String::new()
+                }
+            })
             .collect::<Vec<_>>()
             .join(",");
         writeln!(w, "{line}").expect("csv write");
@@ -160,6 +191,37 @@ mod tests {
     }
 
     #[test]
+    fn parse_level_accepts_the_documented_set() {
+        for (s, want) in [
+            ("error", Level::Error),
+            ("warn", Level::Warn),
+            ("info", Level::Info),
+            ("debug", Level::Debug),
+            ("trace", Level::Trace),
+        ] {
+            let (level, warning) = parse_level(Some(s));
+            assert_eq!(level, want, "FP8TRAIN_LOG={s}");
+            assert!(warning.is_none(), "FP8TRAIN_LOG={s} should not warn");
+        }
+        let (level, warning) = parse_level(None);
+        assert_eq!(level, Level::Info);
+        assert!(warning.is_none());
+    }
+
+    #[test]
+    fn parse_level_warns_once_style_on_unknown_value() {
+        let (level, warning) = parse_level(Some("dbug"));
+        assert_eq!(level, Level::Info, "unknown value keeps the default");
+        let msg = warning.expect("unknown value must produce a warning");
+        assert!(msg.contains("[FP8TRAIN_LOG]"), "{msg}");
+        assert!(msg.contains("unknown value \"dbug\""), "{msg}");
+        assert!(
+            msg.contains("error, warn, info, debug, trace"),
+            "warning must name the accepted set: {msg}"
+        );
+    }
+
+    #[test]
     fn csv_roundtrip() {
         let dir = std::env::temp_dir().join("fp8train_test_csv");
         let path = dir.join("m.csv");
@@ -169,6 +231,20 @@ mod tests {
         sink.flush();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "step,loss\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn csv_non_finite_values_become_empty_cells() {
+        let dir = std::env::temp_dir().join("fp8train_test_csv_nonfinite");
+        let path = dir.join("m.csv");
+        let sink = CsvSink::create(&path, &["step", "loss", "err"]).unwrap();
+        sink.row(&[1.0, f64::NAN, 0.5]);
+        sink.row(&[2.0, f64::INFINITY, f64::NEG_INFINITY]);
+        sink.row(&[3.0, 0.25, 0.125]);
+        sink.flush();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss,err\n1,,0.5\n2,,\n3,0.25,0.125\n");
+        assert!(!text.contains("NaN") && !text.contains("inf"));
     }
 
     #[test]

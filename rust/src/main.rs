@@ -5,8 +5,10 @@
 //! fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
 //!                        [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
 //!                        [--save-every N] [--save PATH] [--keep-last K]
+//!                        [--trace PATH] [--stats-every N] [--deterministic]
 //!     <model> = preset name or model-spec string (docs/model-spec.md)
 //! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
+//! fp8train trace <summarize|validate> <trace.jsonl> [--csv]
 //! fp8train eval --checkpoint PATH [--batch N]
 //! fp8train checkpoint inspect <path.fp8ck>
 //! fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
@@ -42,6 +44,7 @@ USAGE:
   fp8train train <model> [--policy P] [--opt sgd|adam] [--engine native|pjrt]
                          [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
                          [--save-every N] [--save PATH] [--keep-last K] [--verbose]
+                         [--trace PATH] [--stats-every N] [--deterministic]
       <model> (or --model M) is a preset name or a model-spec string
       (docs/model-spec.md), e.g.  \"mlp(440,bn:256x3,30)\"  or
       \"conv3x3(16)-res(2x32)-gap-fc(10)\"
@@ -49,10 +52,18 @@ USAGE:
       policies: fp32 fp8_paper fp8_nochunk fp16_acc_nochunk fp16_upd_nearest
                 fp16_upd_stochastic fp8_reps_only dorefa wage dfp16 mpt_fp16 ...
       --save may contain {step} for periodic retention, e.g. ck_{step}.fp8ck;
-      --keep-last K prunes older {step}-templated saves after each write
+      --keep-last K prunes older {step}-templated saves after each write;
+      --trace writes a JSONL numerics trace (docs/observability.md) with a
+      step record every --stats-every N steps; --deterministic zeroes its
+      wall-clock fields so re-runs produce byte-identical traces
   fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
       continue a checkpointed run bit-exactly (model spec/policy/seed/batch/lr
       are read back from the checkpoint's meta entries; --steps may extend it)
+  fp8train trace <summarize|validate> <trace.jsonl> [--csv]
+      consumers for a --trace file: summarize renders the per-(layer, role)
+      saturation/underflow/range report (--csv for machine-readable rows);
+      validate checks every record against the documented schema and exits
+      non-zero on any violation
   fp8train eval --checkpoint PATH [--batch N]
       load a .fp8ck checkpoint into the native engine and evaluate it (the
       model is reconstructed from the spec embedded in the checkpoint)
@@ -86,10 +97,11 @@ USAGE:
   fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
       GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
       shapes, native train-step with per-phase timing (quantize/pack/gemm/
-      update) + scratch-arena and quantized-pack-cache reuse, and checkpoint
-      encode/decode throughput; --json writes a machine-readable report
-      (schema 4, default BENCH_GEMM.json); --compare diffs against an older
-      report and exits non-zero on a >10% regression
+      update) + scratch-arena and quantized-pack-cache reuse, numerics-
+      telemetry overhead (counters on vs off), supervisor counters, and
+      checkpoint encode/decode throughput; --json writes a machine-readable
+      report (schema 5, default BENCH_GEMM.json); --compare diffs against an
+      older report and exits non-zero on a >10% regression
   fp8train bench compare <old.json> <new.json>
       file-vs-file comparison of two bench reports (no benchmarking);
       exits non-zero on a >10% regression of any shared throughput metric
@@ -119,6 +131,7 @@ fn dispatch(args: &Args) -> Result<()> {
         // spawned by `sweep --workers N`, not intended for direct use).
         "sweep-worker" => fp8train::supervisor::worker_main(args),
         "eval" => cmd_eval(args),
+        "trace" => cmd_trace(args),
         "checkpoint" => cmd_checkpoint(args),
         "formats" => cmd_formats(),
         "artifacts" => cmd_artifacts(args),
@@ -226,7 +239,7 @@ fn build_native(spec: &RunSpec, policy: PrecisionPolicy) -> Result<NativeEngine>
 fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "model", "policy", "opt", "engine", "steps", "batch", "seed", "lr", "csv", "verbose",
-        "save-every", "save", "resume", "keep-last",
+        "save-every", "save", "resume", "keep-last", "trace", "stats-every", "deterministic",
     ])?;
     let resume = args.opt("resume").map(str::to_string);
     let spec = match &resume {
@@ -273,6 +286,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.keep_last = args.opt_usize("keep-last", 0)?;
     cfg.resume = resume;
     cfg.save_meta = spec.to_meta();
+    cfg.trace = args.opt("trace").map(str::to_string);
+    cfg.stats_every = args.opt_usize("stats-every", 0)?;
+    cfg.deterministic = args.flag("deterministic");
 
     let mut engine: Box<dyn Engine> = match engine_kind.as_str() {
         "native" => Box::new(build_native(&spec, policy)?),
@@ -443,6 +459,44 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fp8train trace <summarize|validate> <trace.jsonl> [--csv]` — consumers
+/// for the JSONL numerics trace written by `train --trace`
+/// (`docs/observability.md`). `validate` checks every record against the
+/// documented per-type field sets with the in-tree JSON parser and fails
+/// (non-zero exit) on any violation; `summarize` renders the
+/// per-(layer, role) saturation/underflow/range report, or CSV rows with
+/// `--csv`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_known(&["csv"])?;
+    let sub = args
+        .positional
+        .first()
+        .context("trace needs a subcommand (summarize|validate)")?;
+    let path = args
+        .positional
+        .get(1)
+        .with_context(|| format!("usage: fp8train trace {sub} <trace.jsonl>"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
+    use fp8train::telemetry::trace;
+    match sub.as_str() {
+        "validate" => match trace::validate(&text) {
+            Ok(n) => {
+                println!("{path}: {n} records, all valid (schema {})", trace::TRACE_SCHEMA);
+                Ok(())
+            }
+            Err(e) => bail!("{path}: invalid trace: {e}"),
+        },
+        "summarize" => match trace::summarize(&text, args.flag("csv")) {
+            Ok(out) => {
+                print!("{out}");
+                Ok(())
+            }
+            Err(e) => bail!("{path}: {e}"),
+        },
+        other => bail!("unknown trace subcommand {other:?} (summarize|validate)"),
+    }
+}
+
 /// `fp8train checkpoint inspect <path>` — validate the container (magic,
 /// version, chunk-table CRC, every payload CRC, tag/shape/length
 /// consistency) and print the chunk table.
@@ -522,7 +576,7 @@ const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
 /// throughput for the three emulation paths at the Fig. 6 shapes, the
 /// native train step with per-phase timing (quantize/pack/gemm/update),
 /// scratch-arena and quantized-pack cache reuse rates, and checkpoint
-/// encode/decode throughput, optionally as a JSON report (schema 4) so the
+/// encode/decode throughput, optionally as a JSON report (schema 5) so the
 /// perf trajectory stays machine-readable across PRs. `--compare` diffs
 /// the fresh numbers against a previous report and **exits non-zero on a
 /// >10% regression** of any shared throughput metric. Pin
@@ -653,6 +707,42 @@ fn cmd_bench(args: &Args) -> Result<()> {
         wstats.hit_rate()
     );
 
+    // Numerics-telemetry overhead: re-run the train-step bench with the
+    // per-(layer, role) counters disabled; the delta against the
+    // counters-on run above is the cost of the always-on telemetry (the
+    // <2% contract of docs/observability.md).
+    fp8train::telemetry::set_enabled(false);
+    let r_step_off = bench_util::run("bench/train_step/telemetry_off", None, || {
+        step += 1;
+        engine.train_step(&bench_batch, 0.02, step)
+    });
+    fp8train::telemetry::set_enabled(true);
+    let on_ns = r_step.mean.as_nanos() as f64;
+    let off_ns = r_step_off.mean.as_nanos() as f64;
+    let overhead_pct = if off_ns > 0.0 {
+        (on_ns - off_ns) / off_ns * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "numerics telemetry: {:.1}µs/step counters on, {:.1}µs/step off ({overhead_pct:+.2}% overhead)",
+        on_ns / 1e3,
+        off_ns / 1e3
+    );
+    let telemetry_doc = format!(
+        "{{\"counters_on_ns\":{on_ns},\"counters_off_ns\":{off_ns},\"overhead_pct\":{overhead_pct:.4},\"result_off\":{}}}",
+        r_step_off.to_json()
+    );
+
+    // Supervisor counters (spawns/kills/retries/wait): zero in a bench-only
+    // process, but the section keeps the schema aligned with what a
+    // supervised sweep in this process would report.
+    let sup = fp8train::perf::supervisor_counters();
+    let supervisor_doc = format!(
+        "{{\"spawns\":{},\"kills\":{},\"retries\":{},\"wait_ns\":{}}}",
+        sup.spawns, sup.kills, sup.retries, sup.wait_ns
+    );
+
     // Checkpoint state-IO throughput: encode (engine → .fp8ck bytes) and
     // decode+restore (bytes → engine), on the trained-shape bench model
     // under the paper policy — the same trajectory tracking GEMM GF/s gets.
@@ -681,8 +771,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     let doc = format!(
-        "{{\"schema\":4,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
-         \"scratch\":{},\"phases\":{},\"wcache\":{},\"checkpoint\":{}}}\n",
+        "{{\"schema\":5,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
+         \"scratch\":{},\"phases\":{},\"wcache\":{},\"telemetry\":{},\"supervisor\":{},\
+         \"checkpoint\":{}}}\n",
         num_threads(),
         std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
         spec.id(),
@@ -690,6 +781,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         scratch_doc,
         phases_doc,
         wcache_doc,
+        telemetry_doc,
+        supervisor_doc,
         checkpoint_doc
     );
     if let Some(path) = &json_path {

@@ -135,6 +135,7 @@ impl Layer for Conv2d {
     fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
         assert_eq!(x.ndim(), 4, "conv expects NCHW");
         let n = x.shape[0];
+        let _tel = crate::telemetry::layer_scope(self.w.name.trim_end_matches(".w"));
         let p = ctx.policy;
 
         // Stored activation. When the lowering replicates each source
@@ -209,6 +210,7 @@ impl Layer for Conv2d {
     }
 
     fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor {
+        let _tel = crate::telemetry::layer_scope(self.w.name.trim_end_matches(".w"));
         let p = ctx.policy;
         let cols_q = self.cols_q.take().expect("backward before forward");
         let n = self.batch;

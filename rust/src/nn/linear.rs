@@ -74,6 +74,7 @@ impl Layer for Linear {
     fn forward(&mut self, x: Tensor, ctx: &QuantCtx) -> Tensor {
         assert_eq!(x.ndim(), 2, "linear expects [N, in]");
         assert_eq!(x.shape[1], self.in_dim);
+        let _tel = crate::telemetry::layer_scope(self.w.name.trim_end_matches(".w"));
         let p = ctx.policy;
 
         // Quantize the stored activation once (nearest — conversions in
@@ -118,6 +119,7 @@ impl Layer for Linear {
     }
 
     fn backward(&mut self, dy: Tensor, ctx: &QuantCtx) -> Tensor {
+        let _tel = crate::telemetry::layer_scope(self.w.name.trim_end_matches(".w"));
         let p = ctx.policy;
         let x_q = self.x_q.take().expect("backward before forward");
         let n = dy.shape[0];

@@ -47,6 +47,16 @@ impl GemmRole {
             GemmRole::Gradient => 2,
         }
     }
+
+    /// The telemetry role this GEMM role reports under.
+    #[inline]
+    fn telemetry(self) -> crate::telemetry::Role {
+        match self {
+            GemmRole::Forward => crate::telemetry::Role::Forward,
+            GemmRole::Backward => crate::telemetry::Role::Backward,
+            GemmRole::Gradient => crate::telemetry::Role::Gradient,
+        }
+    }
 }
 
 /// Where a GEMM layer sits in the network — the paper treats first and last
@@ -267,14 +277,17 @@ impl PrecisionPolicy {
     /// Quantize a *stored activation* tensor (data operand) in place.
     /// Wall time lands in the `quantize` phase of [`crate::perf`].
     pub fn quantize_act(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos) {
-        crate::perf::timed(crate::perf::Phase::Quantize, || match self.baseline {
-            // Baselines keep first/last layers full precision ([23], [3] —
-            // see §4.1's discussion of this convention).
-            Some(s) if pos == LayerPos::Middle => s.quantize_act(xs),
-            Some(_) => {}
-            None => self
-                .act_fmt(role, pos)
-                .quantize_batch(xs, RoundMode::NearestEven),
+        crate::perf::timed(crate::perf::Phase::Quantize, || {
+            let _role = crate::telemetry::role_scope(role.telemetry());
+            match self.baseline {
+                // Baselines keep first/last layers full precision ([23], [3]
+                // — see §4.1's discussion of this convention).
+                Some(s) if pos == LayerPos::Middle => s.quantize_act(xs),
+                Some(_) => {}
+                None => self
+                    .act_fmt(role, pos)
+                    .quantize_batch(xs, RoundMode::NearestEven),
+            }
         })
     }
 
@@ -283,24 +296,30 @@ impl PrecisionPolicy {
     /// version-keyed quantized-pack cache, see `docs/perf.md` — but
     /// baseline schemes and experiment harnesses still route through it.)
     pub fn quantize_weight(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos) {
-        crate::perf::timed(crate::perf::Phase::Quantize, || match self.baseline {
-            Some(s) if pos == LayerPos::Middle => s.quantize_weight(xs),
-            Some(_) => {}
-            None => self
-                .weight_fmt(role, pos)
-                .quantize_batch(xs, RoundMode::NearestEven),
+        crate::perf::timed(crate::perf::Phase::Quantize, || {
+            let _role = crate::telemetry::role_scope(role.telemetry());
+            match self.baseline {
+                Some(s) if pos == LayerPos::Middle => s.quantize_weight(xs),
+                Some(_) => {}
+                None => self
+                    .weight_fmt(role, pos)
+                    .quantize_batch(xs, RoundMode::NearestEven),
+            }
         })
     }
 
     /// Quantize a stored error tensor in place (`seed` drives the
     /// stochastic baseline gradient quantizers).
     pub fn quantize_err(&self, xs: &mut [f32], role: GemmRole, pos: LayerPos, seed: u64) {
-        crate::perf::timed(crate::perf::Phase::Quantize, || match self.baseline {
-            Some(s) if pos == LayerPos::Middle => s.quantize_err(xs, seed),
-            Some(_) => {}
-            None => self
-                .err_fmt(role, pos)
-                .quantize_batch(xs, RoundMode::NearestEven),
+        crate::perf::timed(crate::perf::Phase::Quantize, || {
+            let _role = crate::telemetry::role_scope(role.telemetry());
+            match self.baseline {
+                Some(s) if pos == LayerPos::Middle => s.quantize_err(xs, seed),
+                Some(_) => {}
+                None => self
+                    .err_fmt(role, pos)
+                    .quantize_batch(xs, RoundMode::NearestEven),
+            }
         })
     }
 

@@ -376,6 +376,11 @@ impl FloatFormat {
         if self.is_identity() {
             return; // fp32 (or wider): identity
         }
+        // Telemetry rides the chunk loops below off the stashed original
+        // bits + written outputs: strictly read-only (no emitted number
+        // changes), and `None` — two thread-local reads — unless a
+        // layer/role scope is active (`crate::telemetry`).
+        let mut rec = crate::telemetry::quant_recorder(self);
         if matches!(mode, RoundMode::NearestEven) && self.mbits < 23 {
             let q = NeQuantizer::new(self);
             const QB: usize = 64;
@@ -400,16 +405,36 @@ impl FloatFormat {
                     chunk[i] = self.quantize_with_bits(x, RoundMode::NearestEven, 0);
                     fixups &= fixups - 1;
                 }
+                if let Some(r) = rec.as_mut() {
+                    r.record(&orig[..chunk.len()], chunk);
+                }
             }
             note_nonfinite(nonfinite);
+            if let Some(r) = rec {
+                r.commit();
+            }
             return;
         }
+        // Scalar fallback (Truncate / wide-mantissa NE): chunked only so
+        // the recorder sees stashed original bits; the per-element
+        // quantize order — and therefore every output — is unchanged.
+        const QB: usize = 64;
+        let mut orig = [0u32; QB];
         let mut nonfinite = 0u64;
-        for v in xs {
-            nonfinite += !v.is_finite() as u64;
-            *v = self.quantize(*v, mode);
+        for chunk in xs.chunks_mut(QB) {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                orig[i] = v.to_bits();
+                nonfinite += !v.is_finite() as u64;
+                *v = self.quantize(*v, mode);
+            }
+            if let Some(r) = rec.as_mut() {
+                r.record(&orig[..chunk.len()], chunk);
+            }
         }
         note_nonfinite(nonfinite);
+        if let Some(r) = rec {
+            r.commit();
+        }
     }
 
     /// Quantize a slice in place, drawing stochastic bits from `rng`.
@@ -432,13 +457,24 @@ impl FloatFormat {
             // No identity short-circuit here: the scalar loop draws one
             // u32 per element *before* the quantizer's fp32 early-return,
             // so the batch path must consume the stream identically.
+            // Telemetry recording consumes no draws (it reads stashed
+            // input bits + outputs), keeping the SR stream untouched.
+            let mut rec = crate::telemetry::quant_recorder(self);
             const BATCH: usize = 64;
             let mut bits = [0u32; BATCH];
+            let mut orig = [0u32; BATCH];
             for chunk in xs.chunks_mut(BATCH) {
                 rng.fill_bits(&mut bits[..chunk.len()]);
-                for (v, &b) in chunk.iter_mut().zip(bits.iter()) {
+                for (i, (v, &b)) in chunk.iter_mut().zip(bits.iter()).enumerate() {
+                    orig[i] = v.to_bits();
                     *v = self.quantize_with_bits(*v, mode, b);
                 }
+                if let Some(r) = rec.as_mut() {
+                    r.record(&orig[..chunk.len()], chunk);
+                }
+            }
+            if let Some(r) = rec {
+                r.commit();
             }
         } else {
             self.quantize_batch(xs, mode);

@@ -48,6 +48,13 @@ pub trait Optimizer: Send {
     fn prepare(&mut self, model: &mut dyn Layer, policy: &PrecisionPolicy) {
         let fmt = policy.update.fmt;
         model.visit_params(&mut |p| {
+            // Telemetry: the master-weight quantize reports per parameter
+            // name under the Update role. (The per-step AXPYs quantize
+            // element-wise through `numerics::axpy`, off the batch
+            // quantizer — their distributions surface via the next
+            // forward's Pack-role pass instead; see docs/observability.md.)
+            let _tl = crate::telemetry::layer_scope(&p.name);
+            let _tr = crate::telemetry::role_scope(crate::telemetry::Role::Update);
             fmt.quantize_slice(&mut p.value.data, RoundMode::NearestEven);
             p.value.mark_mutated();
         });

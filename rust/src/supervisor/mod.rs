@@ -83,6 +83,9 @@ struct Slot {
     rec: String,
     last_hb: Vec<u8>,
     last_change: Instant,
+    /// Drains the worker's piped stderr, re-printing each line tagged
+    /// with the cell id; joined once the child is gone.
+    stderr_relay: Option<std::thread::JoinHandle<()>>,
 }
 
 /// What the poll pass decided about one worker.
@@ -152,15 +155,31 @@ fn spawn_worker(exe: &str, cell: &Cell, mut task: Task, opts: &RunOpts) -> Resul
     if opts.verbose {
         cmd.arg("--verbose");
     } else {
-        cmd.stdout(Stdio::null()).stderr(Stdio::null());
+        cmd.stdout(Stdio::null());
     }
+    // Worker stderr is always relayed line-by-line, each line prefixed
+    // with the cell id, so diagnostics from N interleaved workers
+    // (fault-injection notices, warnings, panics) stay attributable.
+    cmd.stderr(Stdio::piped());
     // Attempt gating for deterministic fault injection: FP8TRAIN_FAULT is
     // inherited, FP8TRAIN_ATTEMPT selects which attempt it arms on.
     cmd.env("FP8TRAIN_ATTEMPT", task.attempts.to_string());
-    let child = cmd
+    let mut child = cmd
         .spawn()
         .with_context(|| format!("spawn sweep worker {exe:?}"))?;
     perf::sup_note_spawn();
+    let stderr_relay = child.stderr.take().map(|err| {
+        let tag = cell.id();
+        std::thread::spawn(move || {
+            use std::io::BufRead;
+            for line in std::io::BufReader::new(err)
+                .lines()
+                .map_while(std::result::Result::ok)
+            {
+                eprintln!("[{tag}] {line}");
+            }
+        })
+    });
     task.attempts += 1;
     let now = Instant::now();
     Ok(Slot {
@@ -173,6 +192,7 @@ fn spawn_worker(exe: &str, cell: &Cell, mut task: Task, opts: &RunOpts) -> Resul
         rec,
         last_hb: Vec::new(),
         last_change: now,
+        stderr_relay,
     })
 }
 
@@ -311,7 +331,13 @@ pub fn run_supervised(def: &SweepDef, opts: &RunOpts) -> Result<()> {
                 i += 1;
                 continue;
             }
-            let slot = running.swap_remove(i);
+            let mut slot = running.swap_remove(i);
+            // Every non-None event path has already reaped (or killed and
+            // waited on) the child, so its stderr is at EOF — join the
+            // relay to flush the tagged tail before folding the result.
+            if let Some(h) = slot.stderr_relay.take() {
+                h.join().ok();
+            }
             let (why, terminal) = match event {
                 Event::Exited(status) => {
                     let parsed = std::fs::read_to_string(&slot.rec)
@@ -380,6 +406,9 @@ pub fn run_supervised(def: &SweepDef, opts: &RunOpts) -> Result<()> {
                     opts.tail,
                     None,
                     Some(&why),
+                    // No numerics summary: a failed cell's counters live in
+                    // its kept checkpoint, not in this process.
+                    None,
                 );
                 let record = match Json::parse(&record) {
                     Ok(v) => v.dump(),

@@ -77,8 +77,11 @@ use crate::{bail, ensure};
 
 /// Artifact schema version (`SWEEP.json` → `"schema"`). Schema 2 added
 /// the per-record `diverged_at` (null | step count) and `error`
-/// (null | message) fields.
-pub const SCHEMA: u64 = 2;
+/// (null | message) fields; schema 3 added `numerics` (null | the
+/// [`crate::telemetry`] summary: first non-finite step and the top
+/// saturating/underflowing (layer, role) entries), which makes a
+/// `diverged` record self-explaining.
+pub const SCHEMA: u64 = 3;
 
 /// A sweep description: one template axis crossed with five value axes
 /// plus the shared per-cell training budget. Every field participates in
@@ -438,7 +441,9 @@ pub(crate) fn cell_ck_path(cells_dir: &str, cell: &Cell) -> String {
 /// Serialize one cell record (`docs/sweep.md` documents the schema).
 /// `diverged_at` is the divergence-guard step for `diverged` records;
 /// `error` is the failure description for supervisor-emitted `failed`
-/// records. Both serialize as `null` when absent.
+/// records; `numerics` is the cell's telemetry summary
+/// ([`crate::telemetry::numerics_summary_json`], already-serialized
+/// JSON). All three serialize as `null` when absent.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn cell_json(
     cell: &Cell,
@@ -451,6 +456,7 @@ pub(crate) fn cell_json(
     tail: usize,
     diverged_at: Option<usize>,
     error: Option<&str>,
+    numerics: Option<&str>,
 ) -> String {
     let (final_train_loss, final_test_loss, final_test_err, best_test_err) = match r {
         Some(r) => (
@@ -482,12 +488,14 @@ pub(crate) fn cell_json(
     };
     let diverged_at = diverged_at.map_or_else(|| "null".to_string(), |d| d.to_string());
     let error = error.map_or_else(|| "null".to_string(), |e| format!("\"{}\"", escape(e)));
+    let numerics = numerics.unwrap_or("null");
     format!(
         "{{\"id\":\"{}\",\"model\":\"{}\",\"fmt\":\"{}\",\"round\":\"{}\",\"pos\":\"{}\",\
          \"opt\":\"{}\",\"chunk\":{},\"steps\":{},\"batch\":{},\"seed\":{},\
          \"status\":\"{}\",\"steps_done\":{},\"wall_ms\":{},\
          \"final_train_loss\":{},\"final_test_loss\":{},\"final_test_err\":{},\
-         \"best_test_err\":{},\"diverged_at\":{},\"error\":{},\"curve_tail\":{},\"phases\":{}}}",
+         \"best_test_err\":{},\"diverged_at\":{},\"error\":{},\"numerics\":{},\
+         \"curve_tail\":{},\"phases\":{}}}",
         escape(&cell.id()),
         escape(&cell.model),
         escape(&cell.fmt),
@@ -507,6 +515,7 @@ pub(crate) fn cell_json(
         best_test_err,
         diverged_at,
         error,
+        numerics,
         curve_tail,
         phases.to_json(stepped)
     )
@@ -648,6 +657,11 @@ pub(crate) fn run_cell(
     // The progress struct is caller-held (satellite of `train_with`) so one
     // restore covers every segment this invocation runs.
     let mut progress = TrainProgress::default();
+    // Telemetry counters start from zero for a fresh cell; a successful
+    // checkpoint restore below *replaces* them (the blob rides in the
+    // checkpoint), so a resumed cell's numerics summary is identical to
+    // an uninterrupted one's — the deterministic-artifact contract.
+    crate::telemetry::reset();
     if std::path::Path::new(&ck).exists() {
         let restored = (|| -> std::result::Result<(), StateError> {
             let map = StateMap::load_file(&ck)?;
@@ -670,6 +684,9 @@ pub(crate) fn run_cell(
             std::fs::remove_file(&ck).ok();
             engine = make_engine(&policy)?;
             progress = TrainProgress::default();
+            // The failed restore may have gotten far enough to replace the
+            // telemetry state from the bad checkpoint — back to zero.
+            crate::telemetry::reset();
         }
     }
     let seg = (cell.steps / 5).max(1);
@@ -730,6 +747,12 @@ pub(crate) fn run_cell(
         "done"
     };
     let steps_done = diverged_at.unwrap_or(progress.next_step);
+    // The cumulative numerics summary — for a `diverged` cell this is the
+    // explanation: the first non-finite step and which (layer, role)
+    // pairs were saturating/underflowing. Counter state is deterministic
+    // (persisted through checkpoints, no clocks), so it is emitted even
+    // under --deterministic.
+    let numerics = crate::telemetry::numerics_summary_json();
     let record = cell_json(
         cell,
         status,
@@ -741,6 +764,7 @@ pub(crate) fn run_cell(
         opts.tail,
         diverged_at,
         None,
+        Some(&numerics),
     );
     // Normalize through the parser (also a self-check): carried-over and
     // fresh records then share one canonical serialization, so a re-run
@@ -1034,10 +1058,11 @@ mod tests {
         let phases = PhaseSnapshot::default();
         // A cell with no result (NaN-free nulls) and one with a NaN curve
         // both serialize to parseable JSON.
-        let rec = cell_json(&cells[0], "timeout", 1, 12.5, None, &phases, 1, 5, None, None);
+        let rec = cell_json(&cells[0], "timeout", 1, 12.5, None, &phases, 1, 5, None, None, None);
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("status").and_then(Json::str_val), Some("timeout"));
         assert_eq!(v.at("final_test_err"), Some(&Json::Null));
+        assert_eq!(v.at("numerics"), Some(&Json::Null));
         let r = TrainResult {
             curve: vec![crate::train::EvalPoint {
                 step: 2,
@@ -1049,9 +1074,25 @@ mod tests {
             final_train_loss: f64::NAN,
             diverged_at: None,
         };
-        let rec = cell_json(&cells[1], "done", 2, 3.25, Some(&r), &phases, 2, 5, None, None);
+        let numerics = crate::telemetry::numerics_summary_json();
+        let rec = cell_json(
+            &cells[1],
+            "done",
+            2,
+            3.25,
+            Some(&r),
+            &phases,
+            2,
+            5,
+            None,
+            None,
+            Some(&numerics),
+        );
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("final_train_loss"), Some(&Json::Null));
+        // The numerics summary nests as an object with its documented keys.
+        assert!(v.at("numerics.elems").and_then(Json::num).is_some(), "{rec}");
+        assert!(v.at("numerics.layers").is_some(), "{rec}");
         assert_eq!(v.at("curve_tail.0.test_err").and_then(Json::num), Some(50.0));
         assert_eq!(v.at("id").and_then(Json::str_val), Some(cells[1].id().as_str()));
     }
@@ -1066,7 +1107,7 @@ mod tests {
         let phases = PhaseSnapshot::default();
         let recs: Vec<String> = cells
             .iter()
-            .map(|c| cell_json(c, "done", 2, 1.0, None, &phases, 2, 5, None, None))
+            .map(|c| cell_json(c, "done", 2, 1.0, None, &phases, 2, 5, None, None, None))
             .collect();
         write_artifact(&path, &def, &recs).unwrap();
         let loaded = load_artifact(&path).unwrap();
@@ -1100,8 +1141,19 @@ mod tests {
         // resumed cell's record reports total wall time across resumes.
         let cells = expand(&tiny_def()).unwrap();
         let phases = PhaseSnapshot::default();
-        let rec =
-            cell_json(&cells[0], "timeout", 1, 1500.0 + 12.5, None, &phases, 1, 5, None, None);
+        let rec = cell_json(
+            &cells[0],
+            "timeout",
+            1,
+            1500.0 + 12.5,
+            None,
+            &phases,
+            1,
+            5,
+            None,
+            None,
+            None,
+        );
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("wall_ms").and_then(Json::num), Some(1512.5));
     }
@@ -1110,7 +1162,8 @@ mod tests {
     fn diverged_and_error_fields_serialize() {
         let cells = expand(&tiny_def()).unwrap();
         let phases = PhaseSnapshot::default();
-        let rec = cell_json(&cells[0], "diverged", 7, 0.0, None, &phases, 0, 5, Some(7), None);
+        let rec =
+            cell_json(&cells[0], "diverged", 7, 0.0, None, &phases, 0, 5, Some(7), None, None);
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("status").and_then(Json::str_val), Some("diverged"));
         assert_eq!(v.at("diverged_at").and_then(Json::num), Some(7.0));
@@ -1126,6 +1179,7 @@ mod tests {
             5,
             None,
             Some("exit status 3"),
+            None,
         );
         let v = Json::parse(&rec).unwrap();
         assert_eq!(v.at("error").and_then(Json::str_val), Some("exit status 3"));

@@ -1,0 +1,810 @@
+//! Numerics telemetry: per-(layer, role) quantization counters, tensor
+//! range tracking, and magnitude histograms — the observability layer of
+//! `docs/observability.md`.
+//!
+//! The paper's argument is numerical fidelity under FP8 (gradients must
+//! survive quantization, §2/Fig. 1; accumulation must not swamp, §3), and
+//! the related format studies (Graphcore's *8-bit Numerical Formats*,
+//! Mellempudi et al.) choose scalings from exactly the statistics this
+//! module collects: how often a tensor's values clip against
+//! `max_normal`, flush to zero below the subnormal range, or land in the
+//! denormalized tail — and where the magnitude distribution sits relative
+//! to the format's dynamic range.
+//!
+//! Like the PR 6 non-finite counter the design piggybacks on, collection
+//! rides the conversion passes the data path already runs: every stored
+//! activation/weight/error tensor funnels through
+//! [`FloatFormat::quantize_batch`](crate::numerics::FloatFormat::quantize_batch)
+//! (or `_rng`), which asks this module for a [`QuantRecorder`] per call.
+//! The recorder is `None` — a two-branch early-out — unless a **layer
+//! scope** and a **role scope** are both active on the thread; the `nn/`
+//! layers push the layer scope around forward/backward, the policy
+//! quantizers and the pack cache push the role. Operand preparation runs
+//! on the training thread (the GEMM pool only executes dot products), so
+//! thread-local collection sees every pass, exactly like the non-finite
+//! counter.
+//!
+//! **Read-only contract:** telemetry never changes an emitted number and
+//! never consumes an RNG draw. Recording happens from the *stashed
+//! original bits* and the already-written outputs of the quantize chunk
+//! loops; enabling or disabling it (or the `--trace` sink built on it)
+//! leaves weights, curves and checkpoints element-wise identical —
+//! enforced by `rust/tests/trace_readonly.rs` and the CI `cmp` gate.
+//!
+//! Counter state is part of the trainer checkpoint (a versioned bytes
+//! blob under `train.telemetry`), so a resumed run's terminal counts
+//! equal an uninterrupted run's — which is what lets the sweep put a
+//! numerics summary into `SWEEP.json` without breaking the byte-identical
+//! artifact contract of `docs/robustness.md`.
+
+pub mod trace;
+
+use crate::numerics::FloatFormat;
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+/// Which conversion pass a quantize call belongs to. `Forward`/
+/// `Backward`/`Gradient` mirror [`crate::nn::quant::GemmRole`] (operand
+/// preparation for the three GEMMs); `Update` is the optimizer's
+/// master-weight quantization; `Pack` is the version-keyed quantized
+/// pack-cache build (weight operands, once per weight version).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Role {
+    Forward = 0,
+    Backward = 1,
+    Gradient = 2,
+    Update = 3,
+    Pack = 4,
+}
+
+impl Role {
+    pub const ALL: [Role; 5] = [
+        Role::Forward,
+        Role::Backward,
+        Role::Gradient,
+        Role::Update,
+        Role::Pack,
+    ];
+
+    /// Compact id used in trace records and table headers.
+    pub fn id(self) -> &'static str {
+        match self {
+            Role::Forward => "fwd",
+            Role::Backward => "bwd",
+            Role::Gradient => "grad",
+            Role::Update => "upd",
+            Role::Pack => "pack",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<Role> {
+        Role::ALL.into_iter().find(|r| *r as u8 == v)
+    }
+}
+
+const NO_LAYER: u32 = u32::MAX;
+const NO_ROLE: u8 = u8::MAX;
+
+/// Per-thread layer-name interning: scope pushes happen per layer per
+/// step, so the hot path carries a `u32` id, not a `String`.
+#[derive(Default)]
+struct Registry {
+    names: Vec<String>,
+    ids: BTreeMap<String, u32>,
+}
+
+thread_local! {
+    static LAYER: Cell<u32> = const { Cell::new(NO_LAYER) };
+    static ROLE: Cell<u8> = const { Cell::new(NO_ROLE) };
+    static REGISTRY: RefCell<Registry> = RefCell::new(Registry::default());
+    static STATS: RefCell<BTreeMap<(u32, u8), QuantStats>> = RefCell::new(BTreeMap::new());
+    static FIRST_NONFINITE: Cell<Option<u64>> = const { Cell::new(None) };
+}
+
+/// Counters are on by default (their cost is bounded by the `telemetry`
+/// section of `bench --json` at <2% of step time); `FP8TRAIN_TELEMETRY=0`
+/// (or `off`) disables collection process-wide, and [`set_enabled`] flips
+/// it programmatically (the bench overhead measurement uses that).
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static ENV_INIT: Once = Once::new();
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if matches!(
+            std::env::var("FP8TRAIN_TELEMETRY").as_deref(),
+            Ok("0") | Ok("off")
+        ) {
+            ENABLED.store(false, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Is counter collection on (env-gated default: on)?
+#[inline]
+pub fn enabled() -> bool {
+    init_from_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Programmatic override of the collection switch (wins over the env).
+pub fn set_enabled(on: bool) {
+    init_from_env();
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// RAII guard restoring the previous layer scope on drop.
+pub struct LayerScope {
+    prev: u32,
+}
+
+/// Push `name` as the active layer scope for this thread; the returned
+/// guard restores the previous scope (scopes nest). A no-op when
+/// collection is disabled.
+pub fn layer_scope(name: &str) -> LayerScope {
+    if !enabled() {
+        return LayerScope {
+            prev: LAYER.with(|c| c.get()),
+        };
+    }
+    let id = REGISTRY.with(|r| {
+        let mut r = r.borrow_mut();
+        if let Some(&id) = r.ids.get(name) {
+            id
+        } else {
+            let id = r.names.len() as u32;
+            r.names.push(name.to_string());
+            r.ids.insert(name.to_string(), id);
+            id
+        }
+    });
+    LayerScope {
+        prev: LAYER.with(|c| c.replace(id)),
+    }
+}
+
+impl Drop for LayerScope {
+    fn drop(&mut self) {
+        LAYER.with(|c| c.set(self.prev));
+    }
+}
+
+/// RAII guard restoring the previous role scope on drop.
+pub struct RoleScope {
+    prev: u8,
+}
+
+/// Push `role` as the active role scope for this thread.
+pub fn role_scope(role: Role) -> RoleScope {
+    RoleScope {
+        prev: ROLE.with(|c| c.replace(role as u8)),
+    }
+}
+
+impl Drop for RoleScope {
+    fn drop(&mut self) {
+        ROLE.with(|c| c.set(self.prev));
+    }
+}
+
+/// Cumulative quantization statistics for one (layer, role) pair.
+///
+/// Definitions (per element, from the pre-quantize input bits `x` and the
+/// post-quantize output `q`, target format `F`):
+///
+/// - `elems` — every element that passed through the quantizer;
+/// - `nonfinite` — NaN/±Inf *inputs* (excluded from every other counter
+///   and from the range/histogram);
+/// - `saturated` — finite `|x| > F::max_normal` (the output clipped);
+/// - `underflowed` — finite `x ≠ 0` whose output is exactly `±0` (flushed
+///   below the subnormal range);
+/// - `subnormal` — output `q ≠ 0` with `|q| < F::min_normal` (landed in
+///   the denormalized tail — gradual-underflow territory);
+/// - `abs_min/abs_max` — running range of nonzero finite `|x|`, kept as
+///   exact f32 bit patterns;
+/// - `hist` — input-magnitude histogram binned by the biased f32 exponent
+///   byte (`|x|` in `[2^(b−127), 2^(b−126))` for bin `b`; bin 0 is the
+///   f32-subnormal tail). Zeros are skipped (a ReLU net would otherwise
+///   drown every distribution in its zero mass).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct QuantStats {
+    pub elems: u64,
+    pub saturated: u64,
+    pub underflowed: u64,
+    pub subnormal: u64,
+    pub nonfinite: u64,
+    pub abs_min_bits: u32,
+    pub abs_max_bits: u32,
+    pub hist: [u64; 256],
+}
+
+impl Default for QuantStats {
+    fn default() -> Self {
+        Self {
+            elems: 0,
+            saturated: 0,
+            underflowed: 0,
+            subnormal: 0,
+            nonfinite: 0,
+            abs_min_bits: u32::MAX,
+            abs_max_bits: 0,
+            hist: [0; 256],
+        }
+    }
+}
+
+impl QuantStats {
+    fn merge(&mut self, o: &QuantStats) {
+        self.elems += o.elems;
+        self.saturated += o.saturated;
+        self.underflowed += o.underflowed;
+        self.subnormal += o.subnormal;
+        self.nonfinite += o.nonfinite;
+        self.abs_min_bits = self.abs_min_bits.min(o.abs_min_bits);
+        self.abs_max_bits = self.abs_max_bits.max(o.abs_max_bits);
+        for (a, b) in self.hist.iter_mut().zip(o.hist.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Smallest nonzero finite `|x|` seen, if any.
+    pub fn abs_min(&self) -> Option<f32> {
+        (self.abs_min_bits != u32::MAX).then(|| f32::from_bits(self.abs_min_bits))
+    }
+
+    /// Largest finite `|x|` seen, if any.
+    pub fn abs_max(&self) -> Option<f32> {
+        (self.abs_min_bits != u32::MAX).then(|| f32::from_bits(self.abs_max_bits))
+    }
+
+    pub fn sat_rate(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            self.saturated as f64 / self.elems as f64
+        }
+    }
+
+    pub fn underflow_rate(&self) -> f64 {
+        if self.elems == 0 {
+            0.0
+        } else {
+            self.underflowed as f64 / self.elems as f64
+        }
+    }
+}
+
+/// One quantize pass's recorder: precomputed format thresholds plus a
+/// local [`QuantStats`] accumulated chunk-by-chunk and merged into the
+/// thread's map on [`commit`](Self::commit). `None` (see
+/// [`quant_recorder`]) when collection is off, the format is the fp32
+/// identity, or either scope is unset — the cost of a non-recorded pass
+/// is two thread-local reads.
+pub struct QuantRecorder {
+    key: (u32, u8),
+    max_bits: u32,
+    min_normal_bits: u32,
+    stats: QuantStats,
+}
+
+/// Recorder for one batch-quantize call to `fmt`, or `None` when nothing
+/// should be recorded.
+pub fn quant_recorder(fmt: FloatFormat) -> Option<QuantRecorder> {
+    if fmt.is_identity() || !enabled() {
+        return None;
+    }
+    let layer = LAYER.with(|c| c.get());
+    if layer == NO_LAYER {
+        return None;
+    }
+    let role = ROLE.with(|c| c.get());
+    if role == NO_ROLE {
+        return None;
+    }
+    Some(QuantRecorder {
+        key: (layer, role),
+        max_bits: fmt.max_normal().to_bits(),
+        min_normal_bits: fmt.min_normal().to_bits(),
+        stats: QuantStats::default(),
+    })
+}
+
+impl QuantRecorder {
+    /// Record one chunk: `orig` holds the pre-quantize f32 bit patterns,
+    /// `out` the quantized values written in place. Pure integer compares
+    /// on the magnitude bits (IEEE ordering for non-negative patterns) —
+    /// no branches on the data beyond the nonfinite/zero skips.
+    #[inline]
+    pub fn record(&mut self, orig: &[u32], out: &[f32]) {
+        debug_assert_eq!(orig.len(), out.len());
+        let s = &mut self.stats;
+        s.elems += orig.len() as u64;
+        for (&u, &q) in orig.iter().zip(out) {
+            let a = u & 0x7FFF_FFFF;
+            if a >= 0x7F80_0000 {
+                s.nonfinite += 1;
+                continue;
+            }
+            if a == 0 {
+                continue;
+            }
+            let qa = q.to_bits() & 0x7FFF_FFFF;
+            s.saturated += (a > self.max_bits) as u64;
+            s.underflowed += (qa == 0) as u64;
+            s.subnormal += (qa != 0 && qa < self.min_normal_bits) as u64;
+            if a < s.abs_min_bits {
+                s.abs_min_bits = a;
+            }
+            if a > s.abs_max_bits {
+                s.abs_max_bits = a;
+            }
+            s.hist[(a >> 23) as usize] += 1;
+        }
+    }
+
+    /// Fold the pass's counts into the thread's cumulative map.
+    pub fn commit(self) {
+        if self.stats.elems == 0 {
+            return;
+        }
+        STATS.with(|m| {
+            m.borrow_mut()
+                .entry(self.key)
+                .or_default()
+                .merge(&self.stats);
+        });
+    }
+}
+
+/// Clear this thread's counters and first-nonfinite mark. The trainer
+/// calls this wherever it creates a *fresh* `TrainProgress` (a new run);
+/// resuming from a checkpoint instead [`restore`]s the persisted state —
+/// together these keep serial multi-run processes (tests, sweeps) from
+/// leaking counts across runs.
+pub fn reset() {
+    STATS.with(|m| m.borrow_mut().clear());
+    FIRST_NONFINITE.with(|c| c.set(None));
+}
+
+/// Note the first training step at which a non-finite value was observed
+/// (a non-finite loss, or a nonzero quantize-pass non-finite count).
+/// First write wins; persisted with the counters.
+pub fn note_first_nonfinite(step: u64) {
+    FIRST_NONFINITE.with(|c| {
+        if c.get().is_none() {
+            c.set(Some(step));
+        }
+    });
+}
+
+pub fn first_nonfinite_step() -> Option<u64> {
+    FIRST_NONFINITE.with(|c| c.get())
+}
+
+/// This thread's cumulative counters, sorted by (layer name, role) —
+/// name order, not interning order, so two runs that touched layers in
+/// different orders still serialize identically.
+pub fn snapshot() -> Vec<(String, Role, QuantStats)> {
+    let mut out: Vec<(String, Role, QuantStats)> = STATS.with(|m| {
+        REGISTRY.with(|r| {
+            let r = r.borrow();
+            m.borrow()
+                .iter()
+                .filter_map(|(&(layer, role), s)| {
+                    let name = r.names.get(layer as usize)?.clone();
+                    Some((name, Role::from_u8(role)?, s.clone()))
+                })
+                .collect()
+        })
+    });
+    out.sort_by(|a, b| a.0.cmp(&b.0).then((a.1 as u8).cmp(&(b.1 as u8))));
+    out
+}
+
+/// Version tag of the [`serialize`] blob layout.
+pub const STATE_VERSION: u32 = 1;
+
+/// Serialize this thread's telemetry state into a little-endian bytes
+/// blob (the `train.telemetry` checkpoint entry): version, optional
+/// first-nonfinite step, then per-(layer, role) counters with the
+/// histogram stored sparsely as `(bin u8, count u64)` pairs. Entries are
+/// sorted by (layer name, role), so the blob — and with it the
+/// checkpoint — is byte-deterministic.
+pub fn serialize() -> Vec<u8> {
+    let entries = snapshot();
+    let mut out = Vec::new();
+    out.extend_from_slice(&STATE_VERSION.to_le_bytes());
+    match first_nonfinite_step() {
+        Some(s) => {
+            out.push(1);
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        None => out.push(0),
+    }
+    out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (name, role, s) in entries {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(role as u8);
+        for v in [s.elems, s.saturated, s.underflowed, s.subnormal, s.nonfinite] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&s.abs_min_bits.to_le_bytes());
+        out.extend_from_slice(&s.abs_max_bits.to_le_bytes());
+        let nz: Vec<(u8, u64)> = s
+            .hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0)
+            .map(|(b, &c)| (b as u8, c))
+            .collect();
+        out.extend_from_slice(&(nz.len() as u32).to_le_bytes());
+        for (b, c) in nz {
+            out.push(b);
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+    }
+    out
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let s = self
+            .b
+            .get(self.pos..self.pos + n)
+            .ok_or_else(|| format!("telemetry blob truncated at byte {}", self.pos))?;
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Restore the thread's telemetry state from a [`serialize`]d blob,
+/// **replacing** whatever was accumulated before (resume semantics: the
+/// checkpoint is the truth). The blob is parsed fully before any state
+/// changes, so a malformed blob leaves the state untouched.
+pub fn restore(bytes: &[u8]) -> Result<(), String> {
+    let mut c = Cursor { b: bytes, pos: 0 };
+    let version = c.u32()?;
+    if version != STATE_VERSION {
+        return Err(format!(
+            "telemetry blob version {version} (this build reads {STATE_VERSION})"
+        ));
+    }
+    let first = match c.u8()? {
+        0 => None,
+        1 => Some(c.u64()?),
+        other => return Err(format!("bad first-nonfinite tag {other}")),
+    };
+    let n = c.u32()? as usize;
+    let mut entries = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = c.u32()? as usize;
+        let name = String::from_utf8(c.take(name_len)?.to_vec())
+            .map_err(|e| format!("bad layer name: {e}"))?;
+        let role = Role::from_u8(c.u8()?).ok_or("bad role byte")?;
+        let mut s = QuantStats {
+            elems: c.u64()?,
+            saturated: c.u64()?,
+            underflowed: c.u64()?,
+            subnormal: c.u64()?,
+            nonfinite: c.u64()?,
+            abs_min_bits: c.u32()?,
+            abs_max_bits: c.u32()?,
+            ..QuantStats::default()
+        };
+        let nhist = c.u32()? as usize;
+        for _ in 0..nhist {
+            let bin = c.u8()? as usize;
+            s.hist[bin] = c.u64()?;
+        }
+        entries.push((name, role, s));
+    }
+    if c.pos != bytes.len() {
+        return Err(format!("trailing garbage at byte {}", c.pos));
+    }
+    // Parsed clean — replace the thread state.
+    reset();
+    FIRST_NONFINITE.with(|c| c.set(first));
+    for (name, role, s) in entries {
+        let guard = layer_scope(&name);
+        let id = LAYER.with(|c| c.get());
+        drop(guard);
+        STATS.with(|m| m.borrow_mut().insert((id, role as u8), s));
+    }
+    Ok(())
+}
+
+/// The compact per-cell numerics summary the sweep embeds in each
+/// `SWEEP.json` record: the first non-finite step, grid-total
+/// saturation/underflow rates, and the top-3 (layer, role) entries by
+/// saturation (then underflow) count. Canonical `benchcmp::Json` dump
+/// (sorted keys), fully deterministic given the counters — which the
+/// checkpoint persistence makes resume-invariant.
+pub fn numerics_summary_json() -> String {
+    use crate::benchcmp::Json;
+    let entries = snapshot();
+    let (mut elems, mut sat, mut under) = (0u64, 0u64, 0u64);
+    for (_, _, s) in &entries {
+        elems += s.elems;
+        sat += s.saturated;
+        under += s.underflowed;
+    }
+    let rate = |n: u64| {
+        if elems == 0 {
+            0.0
+        } else {
+            n as f64 / elems as f64
+        }
+    };
+    let mut top: Vec<&(String, Role, QuantStats)> =
+        entries.iter().filter(|e| e.2.elems > 0).collect();
+    top.sort_by(|a, b| {
+        b.2.saturated
+            .cmp(&a.2.saturated)
+            .then(b.2.underflowed.cmp(&a.2.underflowed))
+            .then(a.0.cmp(&b.0))
+            .then((a.1 as u8).cmp(&(b.1 as u8)))
+    });
+    top.truncate(3);
+    let mut obj = BTreeMap::new();
+    obj.insert(
+        "first_nonfinite_step".into(),
+        match first_nonfinite_step() {
+            Some(s) => Json::Num(s as f64),
+            None => Json::Null,
+        },
+    );
+    obj.insert("elems".into(), Json::Num(elems as f64));
+    obj.insert("sat_rate".into(), Json::Num(rate(sat)));
+    obj.insert("underflow_rate".into(), Json::Num(rate(under)));
+    let layers: Vec<Json> = top
+        .into_iter()
+        .map(|(name, role, s)| {
+            let mut l = BTreeMap::new();
+            l.insert("name".into(), Json::Str(format!("{name}/{}", role.id())));
+            l.insert("elems".into(), Json::Num(s.elems as f64));
+            l.insert("sat_rate".into(), Json::Num(s.sat_rate()));
+            l.insert("underflow_rate".into(), Json::Num(s.underflow_rate()));
+            Json::Obj(l)
+        })
+        .collect();
+    obj.insert("layers".into(), Json::Arr(layers));
+    Json::Obj(obj).dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rounding::RoundMode;
+
+    /// Serialized test state: every test in this module mutates the same
+    /// thread-locals, so each starts from reset() and the suite relies on
+    /// per-test isolation only within a thread.
+    fn record_pass(layer: &str, role: Role, fmt: FloatFormat, xs: &[f32]) {
+        let _l = layer_scope(layer);
+        let _r = role_scope(role);
+        let mut v = xs.to_vec();
+        fmt.quantize_batch(&mut v, RoundMode::NearestEven);
+        let _ = crate::numerics::format::take_nonfinite();
+    }
+
+    #[test]
+    fn counters_classify_saturation_underflow_subnormal() {
+        reset();
+        // FP8 (1,5,2): max_normal 57344, min_normal 2^-14, min_sub 2^-16.
+        let xs = [
+            1.0f32,     // healthy normal
+            1e9,        // saturates
+            -1e9,       // saturates
+            1e-30,      // flushes to zero (underflow)
+            2f32.powi(-15), // lands subnormal
+            0.0,        // skipped entirely
+            f32::NAN,   // nonfinite
+        ];
+        record_pass("fc1", Role::Forward, FloatFormat::FP8, &xs);
+        let snap = snapshot();
+        assert_eq!(snap.len(), 1);
+        let (name, role, s) = &snap[0];
+        assert_eq!(name, "fc1");
+        assert_eq!(*role, Role::Forward);
+        assert_eq!(s.elems, 7);
+        assert_eq!(s.saturated, 2);
+        assert_eq!(s.underflowed, 1);
+        assert_eq!(s.subnormal, 1);
+        assert_eq!(s.nonfinite, 1);
+        assert_eq!(s.abs_min(), Some(1e-30));
+        assert_eq!(s.abs_max(), Some(1e9));
+        // Histogram: 5 finite nonzero inputs, one bin hit each.
+        assert_eq!(s.hist.iter().sum::<u64>(), 5);
+        reset();
+    }
+
+    #[test]
+    fn no_scope_means_no_recording() {
+        reset();
+        let mut xs = vec![1e9f32, 1.0];
+        // No layer scope: nothing recorded.
+        FloatFormat::FP8.quantize_batch(&mut xs, RoundMode::NearestEven);
+        assert!(snapshot().is_empty());
+        // Layer but no role: still nothing.
+        {
+            let _l = layer_scope("fc1");
+            let mut ys = vec![1e9f32];
+            FloatFormat::FP8.quantize_batch(&mut ys, RoundMode::NearestEven);
+        }
+        assert!(snapshot().is_empty());
+        // fp32 identity records nothing even in scope.
+        {
+            let _l = layer_scope("fc1");
+            let _r = role_scope(Role::Forward);
+            let mut zs = vec![1e9f32];
+            FloatFormat::FP32.quantize_batch(&mut zs, RoundMode::NearestEven);
+        }
+        assert!(snapshot().is_empty());
+        reset();
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        reset();
+        {
+            let _a = layer_scope("outer");
+            {
+                let _b = layer_scope("inner");
+                let _r = role_scope(Role::Backward);
+                record_pass("inner", Role::Backward, FloatFormat::FP8, &[1.0]);
+            }
+            // Back to "outer" after the inner guard drops.
+            let _r = role_scope(Role::Forward);
+            let mut xs = vec![2.0f32];
+            FloatFormat::FP8.quantize_batch(&mut xs, RoundMode::NearestEven);
+        }
+        let snap = snapshot();
+        let names: Vec<&str> = snap.iter().map(|(n, _, _)| n.as_str()).collect();
+        assert_eq!(names, ["inner", "outer"]);
+        reset();
+    }
+
+    #[test]
+    fn recording_covers_all_three_batch_paths() {
+        use crate::numerics::rng::Xoshiro256;
+        reset();
+        let xs = [1e9f32, 1.0, 1e-30, 0.5];
+        // Nearest-even (branchless chunked path).
+        record_pass("l", Role::Forward, FloatFormat::FP8, &xs);
+        // Truncate (scalar fallback path).
+        {
+            let _l = layer_scope("l");
+            let _r = role_scope(Role::Backward);
+            let mut v = xs.to_vec();
+            FloatFormat::FP8.quantize_batch(&mut v, RoundMode::Truncate);
+            let _ = crate::numerics::format::take_nonfinite();
+        }
+        // Stochastic (rng path) — recording consumes no draws, checked by
+        // quantize_slice_rng_matches_scalar_stream staying green.
+        {
+            let _l = layer_scope("l");
+            let _r = role_scope(Role::Gradient);
+            let mut v = xs.to_vec();
+            let mut rng = Xoshiro256::seed_from_u64(3);
+            FloatFormat::FP8.quantize_batch_rng(&mut v, RoundMode::Stochastic, &mut rng);
+        }
+        let snap = snapshot();
+        assert_eq!(snap.len(), 3);
+        for (_, _, s) in &snap {
+            assert_eq!(s.elems, 4);
+            // Saturation classifies the *input* against the format range,
+            // so it is rounding-mode-independent.
+            assert_eq!(s.saturated, 1);
+        }
+        // Underflow reads the output; assert it only for the two
+        // deterministic modes (snapshot order: fwd=NE, bwd=Truncate).
+        assert_eq!(snap[0].2.underflowed, 1);
+        assert_eq!(snap[1].2.underflowed, 1);
+        reset();
+    }
+
+    #[test]
+    fn state_round_trips_through_the_blob() {
+        reset();
+        record_pass("conv1", Role::Forward, FloatFormat::FP8, &[1e9, 1.0, 1e-30]);
+        record_pass("conv1", Role::Pack, FloatFormat::FP8, &[0.25; 100]);
+        record_pass("fc", Role::Update, FloatFormat::FP16, &[3.0001]);
+        note_first_nonfinite(17);
+        note_first_nonfinite(99); // first write wins
+        let before = snapshot();
+        let blob = serialize();
+        // Restore replaces state (clobber it first to prove that).
+        record_pass("garbage", Role::Forward, FloatFormat::FP8, &[5.0]);
+        restore(&blob).unwrap();
+        assert_eq!(snapshot(), before);
+        assert_eq!(first_nonfinite_step(), Some(17));
+        // And the re-serialized blob is byte-identical.
+        assert_eq!(serialize(), blob);
+        reset();
+    }
+
+    #[test]
+    fn restore_rejects_garbage_without_clobbering() {
+        reset();
+        record_pass("keep", Role::Forward, FloatFormat::FP8, &[1.0]);
+        let before = snapshot();
+        assert!(restore(&[]).is_err());
+        assert!(restore(&[9, 0, 0, 0]).is_err()); // wrong version
+        let mut truncated = serialize();
+        truncated.truncate(truncated.len() - 3);
+        assert!(restore(&truncated).is_err());
+        assert_eq!(snapshot(), before, "failed restore must not clobber");
+        reset();
+    }
+
+    #[test]
+    fn disabling_collection_stops_recording() {
+        reset();
+        set_enabled(false);
+        record_pass("off", Role::Forward, FloatFormat::FP8, &[1e9]);
+        assert!(snapshot().is_empty());
+        set_enabled(true);
+        record_pass("on", Role::Forward, FloatFormat::FP8, &[1e9]);
+        assert_eq!(snapshot().len(), 1);
+        reset();
+    }
+
+    #[test]
+    fn summary_json_is_valid_and_deterministic() {
+        use crate::benchcmp::Json;
+        reset();
+        record_pass("a", Role::Forward, FloatFormat::FP8, &[1e9, 1.0]);
+        record_pass("b", Role::Gradient, FloatFormat::FP8, &[1e-30, 1.0]);
+        note_first_nonfinite(3);
+        let s1 = numerics_summary_json();
+        let v = Json::parse(&s1).unwrap();
+        assert_eq!(v.at("first_nonfinite_step").unwrap().num(), Some(3.0));
+        assert_eq!(v.at("elems").unwrap().num(), Some(4.0));
+        assert_eq!(v.at("sat_rate").unwrap().num(), Some(0.25));
+        assert_eq!(v.at("underflow_rate").unwrap().num(), Some(0.25));
+        // Saturating entry ranks first.
+        assert_eq!(
+            v.at("layers.0.name").unwrap().str_val(),
+            Some("a/fwd")
+        );
+        assert_eq!(s1, numerics_summary_json());
+        // Round-trip through the checkpoint blob leaves the summary
+        // byte-identical (the sweep's resume-invariance requirement).
+        let blob = serialize();
+        reset();
+        restore(&blob).unwrap();
+        assert_eq!(s1, numerics_summary_json());
+        reset();
+    }
+
+    #[test]
+    fn empty_summary_is_well_formed() {
+        use crate::benchcmp::Json;
+        reset();
+        let s = numerics_summary_json();
+        let v = Json::parse(&s).unwrap();
+        assert_eq!(v.at("first_nonfinite_step"), Some(&Json::Null));
+        assert_eq!(v.at("elems").unwrap().num(), Some(0.0));
+        assert_eq!(v.at("sat_rate").unwrap().num(), Some(0.0));
+        reset();
+    }
+}

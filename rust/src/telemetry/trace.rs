@@ -1,0 +1,511 @@
+//! The structured JSONL trace: sink, record helpers, and the `fp8train
+//! trace` consumers (`validate`, `summarize`).
+//!
+//! One record per line, each a [`benchcmp::Json`](crate::benchcmp::Json)
+//! object dumped canonically (`BTreeMap` ⇒ sorted keys), so a
+//! `--deterministic` trace — where every wall-clock field is zeroed — is
+//! byte-reproducible across re-runs (the CI `cmp` gate). Four record
+//! types, discriminated by `"type"` (full schema in
+//! `docs/observability.md`):
+//!
+//! - `run` — one header line: engine, step/batch budget, cadence knobs;
+//! - `step` — every `--stats-every N` steps: loss, lr, wall/per-phase
+//!   time deltas over the window, cumulative per-(layer/role) counters;
+//! - `eval` — per eval point: the CSV curve's fields;
+//! - `end` — one trailer: steps done, first non-finite step, divergence,
+//!   and the final counters *with* magnitude histograms.
+//!
+//! The trace is strictly an observer: records are built from counters the
+//! data path already maintains, clocks, and values the trainer already
+//! computed. Nothing here feeds back into training (`rust/tests/
+//! trace_readonly.rs` holds the proof obligation).
+
+use crate::benchcmp::Json;
+use crate::perf::{Phase, PhaseSnapshot};
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+/// Version of the trace record layout (the `run` record carries it).
+pub const TRACE_SCHEMA: u64 = 1;
+
+/// Line-buffered JSONL writer. IO errors are swallowed: the trace is
+/// best-effort observability and a full disk must not alter training
+/// (consumers catch a truncated file via `trace validate`).
+pub struct TraceSink {
+    w: BufWriter<File>,
+}
+
+impl TraceSink {
+    pub fn create(path: &str) -> std::io::Result<TraceSink> {
+        Ok(TraceSink {
+            w: BufWriter::new(File::create(path)?),
+        })
+    }
+
+    pub fn emit(&mut self, rec: &Json) {
+        let _ = writeln!(self.w, "{}", rec.dump());
+    }
+
+    pub fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// Build a `Json::Obj` from literal key/value pairs.
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(
+        pairs
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+fn opt_num(v: Option<u64>) -> Json {
+    match v {
+        Some(n) => Json::Num(n as f64),
+        None => Json::Null,
+    }
+}
+
+/// The cumulative per-(layer, role) counter map as a JSON object keyed
+/// `"<layer>/<role>"`. With `with_hist`, each entry carries its magnitude
+/// histogram as `[log2_bin, count]` pairs (`log2_bin` = biased f32
+/// exponent − 127; values in `[2^bin, 2^(bin+1))`; bin −127 is the
+/// f32-subnormal tail).
+pub fn quant_json(with_hist: bool) -> Json {
+    let mut m = BTreeMap::new();
+    for (name, role, s) in super::snapshot() {
+        let mut e = BTreeMap::new();
+        e.insert("elems".to_string(), Json::Num(s.elems as f64));
+        e.insert("saturated".to_string(), Json::Num(s.saturated as f64));
+        e.insert("underflowed".to_string(), Json::Num(s.underflowed as f64));
+        e.insert("subnormal".to_string(), Json::Num(s.subnormal as f64));
+        e.insert("nonfinite".to_string(), Json::Num(s.nonfinite as f64));
+        e.insert(
+            "abs_min".to_string(),
+            match s.abs_min() {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        );
+        e.insert(
+            "abs_max".to_string(),
+            match s.abs_max() {
+                Some(v) => Json::Num(v as f64),
+                None => Json::Null,
+            },
+        );
+        if with_hist {
+            let bins: Vec<Json> = s
+                .hist
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c != 0)
+                .map(|(b, &c)| {
+                    Json::Arr(vec![Json::Num(b as f64 - 127.0), Json::Num(c as f64)])
+                })
+                .collect();
+            e.insert("hist".to_string(), Json::Arr(bins));
+        }
+        m.insert(format!("{name}/{}", role.id()), Json::Obj(e));
+    }
+    Json::Obj(m)
+}
+
+/// A phase-delta window as `{phase: {ns, calls}}`. Callers zero the `ns`
+/// side under `--deterministic` (call counts are functions of the work,
+/// so they stay — and stay reproducible).
+pub fn phases_json(d: &PhaseSnapshot) -> Json {
+    let mut m = BTreeMap::new();
+    for p in Phase::ALL {
+        let mut e = BTreeMap::new();
+        e.insert("ns".to_string(), Json::Num(d.ns_of(p) as f64));
+        e.insert("calls".to_string(), Json::Num(d.calls_of(p) as f64));
+        m.insert(p.id().to_string(), Json::Obj(e));
+    }
+    Json::Obj(m)
+}
+
+/// The `run` header record.
+#[allow(clippy::too_many_arguments)]
+pub fn run_record(
+    engine: &str,
+    steps: usize,
+    batch: usize,
+    eval_every: usize,
+    stats_every: usize,
+    deterministic: bool,
+    start_step: usize,
+) -> Json {
+    obj(vec![
+        ("type", Json::Str("run".into())),
+        ("schema", Json::Num(TRACE_SCHEMA as f64)),
+        ("engine", Json::Str(engine.into())),
+        ("steps", Json::Num(steps as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("eval_every", Json::Num(eval_every as f64)),
+        ("stats_every", Json::Num(stats_every as f64)),
+        ("deterministic", Json::Bool(deterministic)),
+        ("start_step", Json::Num(start_step as f64)),
+    ])
+}
+
+/// A `step` window record (cumulative counters, windowed clocks).
+pub fn step_record(step: usize, loss: f64, lr: f32, wall_ns: u64, phases: &PhaseSnapshot) -> Json {
+    obj(vec![
+        ("type", Json::Str("step".into())),
+        ("step", Json::Num((step + 1) as f64)),
+        ("loss", Json::Num(loss)), // non-finite dumps as null
+        ("lr", Json::Num(lr as f64)),
+        ("wall_ns", Json::Num(wall_ns as f64)),
+        ("phases", phases_json(phases)),
+        ("quant", quant_json(false)),
+    ])
+}
+
+/// An `eval` record mirroring one CSV curve row.
+pub fn eval_record(step: usize, train_loss: f64, test_loss: f64, test_err: f64) -> Json {
+    obj(vec![
+        ("type", Json::Str("eval".into())),
+        ("step", Json::Num(step as f64)),
+        ("train_loss", Json::Num(train_loss)),
+        ("test_loss", Json::Num(test_loss)),
+        ("test_err", Json::Num(test_err)),
+    ])
+}
+
+/// The `end` trailer record (full counters, with histograms).
+pub fn end_record(steps_done: usize, diverged_at: Option<usize>, wall_ns: u64) -> Json {
+    obj(vec![
+        ("type", Json::Str("end".into())),
+        ("steps_done", Json::Num(steps_done as f64)),
+        (
+            "first_nonfinite_step",
+            opt_num(super::first_nonfinite_step()),
+        ),
+        ("diverged_at", opt_num(diverged_at.map(|s| s as u64))),
+        ("wall_ns", Json::Num(wall_ns as f64)),
+        ("quant", quant_json(true)),
+    ])
+}
+
+/// Required fields per record type — the contract `trace validate`
+/// enforces and `docs/observability.md` documents.
+fn required_fields(ty: &str) -> Option<&'static [&'static str]> {
+    match ty {
+        "run" => Some(&[
+            "schema",
+            "engine",
+            "steps",
+            "batch",
+            "eval_every",
+            "stats_every",
+            "deterministic",
+            "start_step",
+        ]),
+        "step" => Some(&["step", "loss", "lr", "wall_ns", "phases", "quant"]),
+        "eval" => Some(&["step", "train_loss", "test_loss", "test_err"]),
+        "end" => Some(&[
+            "steps_done",
+            "first_nonfinite_step",
+            "diverged_at",
+            "wall_ns",
+            "quant",
+        ]),
+        _ => None,
+    }
+}
+
+/// Validate a trace file's text: every line parses with the in-tree JSON
+/// parser, carries a known `"type"`, and has that type's documented
+/// field set; the first record is `run` and the last is `end`. Returns
+/// the record count.
+pub fn validate(text: &str) -> Result<usize, String> {
+    let mut n = 0usize;
+    let mut last_type = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let ln = i + 1;
+        let v = Json::parse(line).map_err(|e| format!("line {ln}: {e}"))?;
+        let ty = v
+            .at("type")
+            .and_then(Json::str_val)
+            .ok_or(format!("line {ln}: missing \"type\""))?;
+        let req = required_fields(ty)
+            .ok_or(format!("line {ln}: unknown record type {ty:?}"))?;
+        for k in req {
+            if v.at(k).is_none() {
+                return Err(format!("line {ln}: {ty} record missing field {k:?}"));
+            }
+        }
+        if n == 0 && ty != "run" {
+            return Err(format!("line 1: expected a run record, got {ty:?}"));
+        }
+        last_type = ty.to_string();
+        n += 1;
+    }
+    if n == 0 {
+        return Err("empty trace".into());
+    }
+    if last_type != "end" {
+        return Err(format!(
+            "last record is {last_type:?}, expected \"end\" (truncated trace?)"
+        ));
+    }
+    Ok(n)
+}
+
+fn pct(num: f64, den: f64) -> String {
+    if den == 0.0 {
+        "-".to_string()
+    } else {
+        format!("{:.3}%", num / den * 100.0)
+    }
+}
+
+fn cell(v: Option<f64>) -> String {
+    // The canonical empty-cell convention for absent/non-finite values
+    // (same as CsvSink).
+    match v {
+        Some(x) if x.is_finite() => format!("{x:e}"),
+        _ => String::new(),
+    }
+}
+
+/// Render the `trace summarize` report from a trace file's text: record
+/// counts, the first non-finite / first saturating steps, the
+/// per-(layer, role) range table (text or CSV), and the top saturating
+/// entries.
+pub fn summarize(text: &str, csv: bool) -> Result<String, String> {
+    let mut end: Option<Json> = None;
+    let mut first_sat_step: Option<f64> = None;
+    let mut records = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        records += 1;
+        match v.at("type").and_then(Json::str_val) {
+            Some("step") => {
+                if first_sat_step.is_none() {
+                    let sat: f64 = match v.at("quant") {
+                        Some(Json::Obj(m)) => m
+                            .values()
+                            .filter_map(|e| e.at("saturated").and_then(Json::num))
+                            .sum(),
+                        _ => 0.0,
+                    };
+                    if sat > 0.0 {
+                        first_sat_step = v.at("step").and_then(Json::num);
+                    }
+                }
+            }
+            Some("end") => end = Some(v),
+            _ => {}
+        }
+    }
+    let end = end.ok_or("no end record (truncated trace?)")?;
+    let quant = match end.at("quant") {
+        Some(Json::Obj(m)) => m.clone(),
+        _ => return Err("end record has no quant object".into()),
+    };
+    // (key, elems, saturated, underflowed, subnormal, nonfinite, min, max)
+    let mut rows: Vec<(String, f64, f64, f64, f64, f64, Option<f64>, Option<f64>)> = quant
+        .iter()
+        .map(|(k, e)| {
+            let f = |n: &str| e.at(n).and_then(Json::num).unwrap_or(0.0);
+            (
+                k.clone(),
+                f("elems"),
+                f("saturated"),
+                f("underflowed"),
+                f("subnormal"),
+                f("nonfinite"),
+                e.at("abs_min").and_then(Json::num),
+                e.at("abs_max").and_then(Json::num),
+            )
+        })
+        .collect();
+    let mut out = String::new();
+    if csv {
+        out.push_str("layer_role,elems,saturated,underflowed,subnormal,nonfinite,abs_min,abs_max\n");
+        for (k, elems, sat, under, sub, nf, mn, mx) in &rows {
+            out.push_str(&format!(
+                "{k},{elems},{sat},{under},{sub},{nf},{},{}\n",
+                cell(*mn),
+                cell(*mx)
+            ));
+        }
+        return Ok(out);
+    }
+    let steps_done = end.at("steps_done").and_then(Json::num).unwrap_or(0.0);
+    out.push_str(&format!("trace: {records} records, {steps_done} steps\n"));
+    out.push_str(&format!(
+        "first non-finite step: {}\n",
+        match end.at("first_nonfinite_step").and_then(Json::num) {
+            Some(s) => format!("{s}"),
+            None => "none".to_string(),
+        }
+    ));
+    out.push_str(&format!(
+        "first saturating step record: {}\n",
+        match first_sat_step {
+            Some(s) => format!("{s}"),
+            None => "none".to_string(),
+        }
+    ));
+    if let Some(d) = end.at("diverged_at").and_then(Json::num) {
+        out.push_str(&format!("diverged at step: {d}\n"));
+    }
+    out.push_str(&format!(
+        "\n{:<24} {:>12} {:>9} {:>9} {:>9} {:>24}\n",
+        "layer/role", "elems", "sat", "under", "sub", "|x| range"
+    ));
+    for (k, elems, sat, under, sub, _nf, mn, mx) in &rows {
+        let range = match (mn, mx) {
+            (Some(a), Some(b)) => format!("[{a:.3e}, {b:.3e}]"),
+            _ => "-".to_string(),
+        };
+        out.push_str(&format!(
+            "{k:<24} {elems:>12} {:>9} {:>9} {:>9} {range:>24}\n",
+            pct(*sat, *elems),
+            pct(*under, *elems),
+            pct(*sub, *elems)
+        ));
+    }
+    // Top saturating entries (then by underflow), most-pressured first.
+    rows.sort_by(|a, b| {
+        let ka = (a.2 / a.1.max(1.0), a.3 / a.1.max(1.0));
+        let kb = (b.2 / b.1.max(1.0), b.3 / b.1.max(1.0));
+        kb.partial_cmp(&ka).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    out.push_str("\ntop saturating:\n");
+    for (k, elems, sat, under, ..) in rows.iter().take(3) {
+        out.push_str(&format!(
+            "  {k:<24} sat {} under {}\n",
+            pct(*sat, *elems),
+            pct(*under, *elems)
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_trace() -> String {
+        let run = run_record("native", 4, 8, 2, 2, true, 0);
+        let end = end_record(4, None, 0);
+        let step = obj(vec![
+            ("type", Json::Str("step".into())),
+            ("step", Json::Num(2.0)),
+            ("loss", Json::Num(1.5)),
+            ("lr", Json::Num(0.05)),
+            ("wall_ns", Json::Num(0.0)),
+            ("phases", phases_json(&PhaseSnapshot::default())),
+            (
+                "quant",
+                obj(vec![(
+                    "fc1/fwd",
+                    obj(vec![
+                        ("elems", Json::Num(100.0)),
+                        ("saturated", Json::Num(3.0)),
+                        ("underflowed", Json::Num(1.0)),
+                        ("subnormal", Json::Num(2.0)),
+                        ("nonfinite", Json::Num(0.0)),
+                        ("abs_min", Json::Num(1e-9)),
+                        ("abs_max", Json::Num(2000.0)),
+                    ]),
+                )]),
+            ),
+        ]);
+        let eval = eval_record(2, 1.5, 1.4, 42.0);
+        format!(
+            "{}\n{}\n{}\n{}\n",
+            run.dump(),
+            step.dump(),
+            eval.dump(),
+            end.dump()
+        )
+    }
+
+    #[test]
+    fn validate_accepts_builder_output_and_counts_records() {
+        assert_eq!(validate(&toy_trace()), Ok(4));
+    }
+
+    #[test]
+    fn validate_rejects_malformed_traces() {
+        assert!(validate("").is_err());
+        assert!(validate("not json\n").is_err());
+        // Wrong first record.
+        let e = end_record(1, None, 0).dump();
+        assert!(validate(&format!("{e}\n")).unwrap_err().contains("run"));
+        // Missing end (truncated).
+        let r = run_record("native", 1, 1, 1, 0, false, 0).dump();
+        assert!(validate(&format!("{r}\n")).unwrap_err().contains("end"));
+        // A step record missing a required field.
+        let bad = r#"{"type":"step","step":1,"loss":0.5}"#;
+        let err = validate(&format!("{r}\n{bad}\n{e}\n")).unwrap_err();
+        assert!(err.contains("missing field"), "{err}");
+        // Unknown record type.
+        let unk = r#"{"type":"wat"}"#;
+        assert!(validate(&format!("{r}\n{unk}\n{e}\n"))
+            .unwrap_err()
+            .contains("unknown record type"));
+    }
+
+    #[test]
+    fn nan_loss_dumps_as_null_and_still_validates() {
+        let s = step_record(0, f64::NAN, 0.1, 0, &PhaseSnapshot::default());
+        let line = s.dump();
+        assert!(line.contains("\"loss\":null"), "{line}");
+        let r = run_record("native", 1, 1, 1, 1, true, 0).dump();
+        let e = end_record(1, Some(1), 0).dump();
+        assert_eq!(validate(&format!("{r}\n{line}\n{e}\n")), Ok(3));
+    }
+
+    #[test]
+    fn summarize_reports_saturation_and_ranges() {
+        super::super::reset();
+        let text = toy_trace();
+        let s = summarize(&text, false).unwrap();
+        assert!(s.contains("4 records"), "{s}");
+        assert!(s.contains("first non-finite step: none"), "{s}");
+        assert!(s.contains("first saturating step record: 2"), "{s}");
+        let csv = summarize(&text, true).unwrap();
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "layer_role,elems,saturated,underflowed,subnormal,nonfinite,abs_min,abs_max"
+        );
+        // No per-(layer,role) counters accumulated in this thread → the
+        // end record built by toy_trace() has an empty quant map, so only
+        // the header row... unless the step record's quant carried rows —
+        // summarize reads the END record's quant, which is empty here.
+        assert_eq!(lines.count(), 0);
+        super::super::reset();
+    }
+
+    #[test]
+    fn summarize_uses_the_end_records_counters() {
+        use crate::numerics::rounding::RoundMode;
+        use crate::numerics::FloatFormat;
+        super::super::reset();
+        {
+            let _l = super::super::layer_scope("fc9");
+            let _r = super::super::role_scope(super::super::Role::Forward);
+            let mut xs = vec![1e9f32, 1.0, 1e-30, 0.5];
+            FloatFormat::FP8.quantize_batch(&mut xs, RoundMode::NearestEven);
+        }
+        let r = run_record("native", 1, 1, 1, 0, true, 0).dump();
+        let e = end_record(1, None, 0).dump();
+        let text = format!("{r}\n{e}\n");
+        let s = summarize(&text, false).unwrap();
+        assert!(s.contains("fc9/fwd"), "{s}");
+        assert!(s.contains("25.000%"), "one of four saturated: {s}");
+        let csv = summarize(&text, true).unwrap();
+        assert!(csv.lines().any(|l| l.starts_with("fc9/fwd,4,1,1,")), "{csv}");
+        super::super::reset();
+    }
+}

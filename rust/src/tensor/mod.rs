@@ -70,7 +70,7 @@ impl PackedCell {
 }
 
 // Global counters for the quantized-pack cache (reported by
-// `fp8train bench --json` schema 4): how often a GEMM asked for a
+// `fp8train bench --json` schema 5): how often a GEMM asked for a
 // quantized weight operand, how many pack materializations that cost, and
 // how many of those had to run a full quantize pass (a transposed pack
 // built from a live same-version quantized pack re-packs without
@@ -299,6 +299,9 @@ impl Tensor {
             .find(|p| p.version == v && p.fmt == Some(fmt) && p.mode == mode && !p.transposed)
             .map(|p| Arc::clone(&p.data));
         let data = crate::perf::timed(crate::perf::Phase::Quantize, || {
+            // Telemetry: pack builds report under the ambient layer's Pack
+            // role (weight-operand quantization, once per weight version).
+            let _tel = crate::telemetry::role_scope(crate::telemetry::Role::Pack);
             let q = match (&seed, transposed) {
                 (Some(src), true) => {
                     // Already-quantized copy at this version: only the

@@ -88,6 +88,17 @@ pub struct TrainConfig {
     /// to this file at the top of every step. The sweep supervisor watches
     /// the file's *content* to distinguish "slow" from "stuck".
     pub heartbeat: Option<String>,
+    /// Structured JSONL trace destination (`--trace`). The trace is a
+    /// strict observer: enabling it changes no RNG draw and no emitted
+    /// number (`rust/tests/trace_readonly.rs`), and a failed create
+    /// degrades to an untraced run with a warning.
+    pub trace: Option<String>,
+    /// Emit a `step` trace record every `stats_every` steps (0 = none).
+    pub stats_every: usize,
+    /// Zero every wall-clock field in trace records (per-phase `ns` and
+    /// `wall_ns`; call counts stay — they are functions of the work) so a
+    /// re-run of the same spec produces a byte-identical trace.
+    pub deterministic: bool,
 }
 
 impl TrainConfig {
@@ -107,6 +118,9 @@ impl TrainConfig {
             guard: GuardCfg::default(),
             fault: None,
             heartbeat: None,
+            trace: None,
+            stats_every: 0,
+            deterministic: false,
         }
     }
 }
@@ -179,6 +193,12 @@ impl StateDict for TrainProgress {
             bytes.extend_from_slice(&p.test_err.to_bits().to_le_bytes());
         }
         out.put_bytes(&state::key(prefix, "curve"), bytes);
+        // The numerics-telemetry counters ride in the checkpoint so a
+        // resumed run's cumulative per-(layer, role) statistics match an
+        // uninterrupted run's — the sweep's per-cell numerics summary must
+        // stay byte-identical under crash+retry. The blob serializes in a
+        // canonical sorted order, so checkpoint bytes stay deterministic.
+        out.put_bytes(&state::key(prefix, "telemetry"), crate::telemetry::serialize());
     }
 
     fn load_state(&mut self, prefix: &str, src: &StateMap) -> Result<(), StateError> {
@@ -203,6 +223,18 @@ impl StateDict for TrainProgress {
                 test_err: f64::from_bits(u(&c[24..32])),
             })
             .collect();
+        // Telemetry counters are observability, not training state: a
+        // checkpoint without the key (written before the telemetry
+        // subsystem existed) or with a malformed blob resets the
+        // collector instead of failing the resume.
+        match src.get_bytes(&state::key(prefix, "telemetry")) {
+            Ok(b) => {
+                if crate::telemetry::restore(b).is_err() {
+                    crate::telemetry::reset();
+                }
+            }
+            Err(_) => crate::telemetry::reset(),
+        }
         Ok(())
     }
 }
@@ -325,6 +357,12 @@ pub fn train(engine: &mut dyn Engine, ds: &SyntheticDataset, cfg: &TrainConfig) 
                 progress.curve.len()
             );
         }
+    } else {
+        // Fresh run: start the telemetry counters from zero — residue
+        // from other work on this thread (a previous run, a test) must
+        // not leak into this run's statistics. (The resume branch above
+        // replaces the state via `TrainProgress::load_state` instead.)
+        crate::telemetry::reset();
     }
     train_with(engine, ds, cfg, &mut progress)
 }
@@ -356,6 +394,32 @@ pub fn train_with(
             .expect("create csv")
     });
     let spe = ds.steps_per_epoch(cfg.batch_size);
+    // The JSONL trace sink. Best-effort by contract: a failed create
+    // degrades to an untraced run with a warning, and nothing emitted
+    // here feeds back into training.
+    let mut trace = cfg.trace.as_ref().and_then(|p| {
+        match crate::telemetry::trace::TraceSink::create(p) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                crate::log_warn!("trace: create {p}: {e} — continuing untraced");
+                None
+            }
+        }
+    });
+    if let Some(t) = &mut trace {
+        t.emit(&crate::telemetry::trace::run_record(
+            engine.name(),
+            cfg.steps,
+            cfg.batch_size,
+            cfg.eval_every,
+            cfg.stats_every,
+            cfg.deterministic,
+            progress.next_step,
+        ));
+    }
+    let run_start = std::time::Instant::now();
+    let mut window_start = run_start;
+    let mut window_phases = crate::perf::snapshot();
     // Start the guard from a clean counter: residue from other work on
     // this thread must not leak into the first step's signal.
     let _ = crate::numerics::format::take_nonfinite();
@@ -388,6 +452,26 @@ pub fn train_with(
         // eval below) so the signal is a function of this step's training
         // pass alone — resume-invariant by construction.
         let quant_nonfinite = crate::numerics::format::take_nonfinite();
+        // Telemetry: remember the first step whose loss or quantize
+        // passes went non-finite (1-based, matching `diverged_at` and the
+        // trace's step numbering). First write wins; purely observational.
+        if !loss.is_finite() || quant_nonfinite > 0 {
+            crate::telemetry::note_first_nonfinite((step + 1) as u64);
+        }
+        // A `step` trace record every `stats_every` steps: cumulative
+        // counters, clocks windowed since the previous record.
+        let at_stats = cfg.stats_every > 0 && (step + 1) % cfg.stats_every == 0;
+        if let Some(t) = trace.as_mut().filter(|_| at_stats) {
+            let mut d = crate::perf::snapshot().since(&window_phases);
+            let mut wall = window_start.elapsed().as_nanos() as u64;
+            if cfg.deterministic {
+                d.ns = [0; 4];
+                wall = 0;
+            }
+            t.emit(&crate::telemetry::trace::step_record(step, loss, lr, wall, &d));
+            window_phases = crate::perf::snapshot();
+            window_start = std::time::Instant::now();
+        }
         if cfg.guard.nan_patience > 0 {
             if !loss.is_finite() || quant_nonfinite > 0 {
                 progress.nan_streak += 1;
@@ -424,6 +508,9 @@ pub fn train_with(
             };
             if let Some(s) = &sink {
                 s.row(&[(step + 1) as f64, lr as f64, train_loss, tl, te]);
+            }
+            if let Some(t) = &mut trace {
+                t.emit(&crate::telemetry::trace::eval_record(step + 1, train_loss, tl, te));
             }
             if cfg.verbose {
                 crate::log_info!(
@@ -475,6 +562,21 @@ pub fn train_with(
     }
     if let Some(s) = &sink {
         s.flush();
+    }
+    if let Some(t) = &mut trace {
+        let wall = if cfg.deterministic {
+            0
+        } else {
+            run_start.elapsed().as_nanos() as u64
+        };
+        // The loop runs to cfg.steps unless the guard broke out, in which
+        // case `diverged_at` holds the (1-based) last executed step.
+        t.emit(&crate::telemetry::trace::end_record(
+            diverged_at.unwrap_or(cfg.steps),
+            diverged_at,
+            wall,
+        ));
+        t.flush();
     }
     let last = progress.curve.last().copied().unwrap_or(EvalPoint {
         step: 0,
@@ -528,6 +630,37 @@ mod tests {
         assert!(text.starts_with("step,lr,train_loss,test_loss,test_err"));
         assert!(text.lines().count() >= 2);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn trace_file_validates_and_is_deterministic() {
+        let dir = std::env::temp_dir().join("fp8train_test_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ds = SyntheticDataset::for_model(&ModelSpec::bn50_dnn(), 19).with_sizes(32, 16);
+        let run = |path: &std::path::Path| {
+            let mut cfg = TrainConfig::quick(4);
+            cfg.batch_size = 8;
+            cfg.eval_every = 2;
+            cfg.stats_every = 2;
+            cfg.deterministic = true;
+            cfg.trace = Some(path.to_string_lossy().into_owned());
+            let mut e =
+                NativeEngine::new(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp8_paper(), 19);
+            train(&mut e, &ds, &cfg);
+        };
+        let p1 = dir.join("a.jsonl");
+        let p2 = dir.join("b.jsonl");
+        run(&p1);
+        run(&p2);
+        let t1 = std::fs::read_to_string(&p1).unwrap();
+        let t2 = std::fs::read_to_string(&p2).unwrap();
+        // run + two step records (stats_every=2) + two evals + end.
+        assert_eq!(crate::telemetry::trace::validate(&t1), Ok(6), "{t1}");
+        // FP8 training quantizes through scoped layers, so the end record
+        // must carry real per-(layer, role) counters.
+        assert!(t1.contains("/fwd\""), "no layer/role counters: {t1}");
+        assert_eq!(t1, t2, "deterministic traces must be byte-identical");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -59,16 +59,22 @@ fn sweep_cmd(dir: &Path, out: &str, extra: &[&str]) -> Command {
     cmd
 }
 
-fn run_ok(cmd: &mut Command) -> String {
+/// Run to success, returning `(stdout, stderr)` — the supervisor relays
+/// worker stderr tagged with the cell id, and some tests assert on it.
+fn run_ok_capture(cmd: &mut Command) -> (String, String) {
     let out = cmd.output().expect("spawn the fp8train binary");
     let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
     assert!(
         out.status.success(),
-        "sweep failed: {}\nstdout:\n{stdout}\nstderr:\n{}",
+        "sweep failed: {}\nstdout:\n{stdout}\nstderr:\n{stderr}",
         out.status,
-        String::from_utf8_lossy(&out.stderr)
     );
-    stdout
+    (stdout, stderr)
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    run_ok_capture(cmd).0
 }
 
 fn read_bytes(dir: &Path, name: &str) -> Vec<u8> {
@@ -92,7 +98,7 @@ fn sup_counts(stdout: &str) -> (u64, u64, u64) {
 fn cell_records(dir: &Path, name: &str) -> Vec<Json> {
     let text = std::fs::read_to_string(dir.join(name)).unwrap();
     let v = Json::parse(&text).unwrap();
-    assert_eq!(v.at("schema").and_then(Json::num), Some(2.0), "{name}");
+    assert_eq!(v.at("schema").and_then(Json::num), Some(3.0), "{name}");
     match v.at("cells") {
         Some(Json::Arr(a)) => a.clone(),
         other => panic!("{name}: cells missing: {other:?}"),
@@ -108,7 +114,17 @@ fn injected_crash_retries_to_a_byte_identical_artifact() {
     // their first attempt. The retry resumes from the step-2 checkpoint.
     let mut cmd = sweep_cmd(&dir, "WORKERS.json", &["--workers", "2", "--backoff-ms", "10"]);
     cmd.env("FP8TRAIN_FAULT", "exit@2#fmt=fp8_paper");
-    let stdout = run_ok(&mut cmd);
+    let (stdout, stderr) = run_ok_capture(&mut cmd);
+
+    // The supervisor relays worker stderr line-by-line, each line prefixed
+    // with the owning cell's id — the injected crash notice must arrive
+    // attributed to an fp8_paper cell.
+    let tagged = stderr.lines().any(|l| {
+        l.starts_with('[')
+            && l.contains("fmt=fp8_paper")
+            && l.contains("] fault-injection: exit(3) before step 2")
+    });
+    assert!(tagged, "worker stderr must be cell-id tagged:\n{stderr}");
 
     assert_eq!(
         read_bytes(&dir, "SERIAL.json"),
@@ -234,9 +250,33 @@ fn nan_fault_records_terminal_diverged() {
             assert!((1.0..=5.0).contains(&at), "{id}: diverged_at={at}");
             assert_eq!(rec.at("steps_done").and_then(Json::num), Some(at), "{id}");
             assert_eq!(rec.at("error"), Some(&Json::Null), "{id}");
+            // The schema-3 `numerics` summary makes the record
+            // self-explaining: `nan@1` poisons 0-based step 1, so the
+            // first non-finite step is 2 (1-based), and per-layer
+            // saturation/underflow rates name the hottest operands.
+            let first = rec
+                .at("numerics.first_nonfinite_step")
+                .and_then(Json::num)
+                .unwrap_or_else(|| panic!("{id}: diverged record needs numerics.first_nonfinite_step"));
+            assert_eq!(first, 2.0, "{id}");
+            assert!(first <= at, "{id}: first non-finite after divergence?");
+            assert!(
+                rec.at("numerics.elems").and_then(Json::num).unwrap_or(0.0) > 0.0,
+                "{id}: fp8 cells quantize, so counters must have seen elements"
+            );
+            assert!(rec.at("numerics.sat_rate").and_then(Json::num).is_some(), "{id}");
+            assert!(rec.at("numerics.underflow_rate").and_then(Json::num).is_some(), "{id}");
+            match rec.at("numerics.layers") {
+                Some(Json::Arr(a)) if !a.is_empty() => {}
+                other => panic!("{id}: numerics.layers must be non-empty: {other:?}"),
+            }
         } else {
             assert_eq!(rec.at("status").and_then(Json::str_val), Some("done"), "{id}");
             assert_eq!(rec.at("diverged_at"), Some(&Json::Null), "{id}");
+            // fp32 cells quantize through identity formats (no recorder),
+            // so the summary is present but empty.
+            assert_eq!(rec.at("numerics.elems").and_then(Json::num), Some(0.0), "{id}");
+            assert_eq!(rec.at("numerics.first_nonfinite_step"), Some(&Json::Null), "{id}");
         }
     }
 

@@ -1,0 +1,137 @@
+//! The telemetry read-only guarantee (acceptance criterion of the
+//! numerics-observability subsystem): enabling the JSONL trace changes no
+//! RNG draw and no emitted number. The same spec trained with
+//! `--trace --stats-every 1 --deterministic` vs fully untraced must
+//! produce element-wise bit-identical weights/optimizer state, an
+//! identical eval curve, and **byte-identical** checkpoint files.
+//!
+//! This holds because every trace hook only *reads*: counters accumulate
+//! off values the quantizer was computing anyway, the sink formats
+//! snapshots, and nothing on the training path branches on whether a sink
+//! exists. The checkpoint comparison is the sharp edge — the telemetry
+//! counter blob rides inside `.fp8ck` files, and it must be a function of
+//! the training work alone, never of the tracing configuration.
+
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
+use fp8train::state::StateMap;
+use fp8train::train::{train, LrSchedule, TrainConfig, TrainResult};
+
+const N: usize = 4;
+const SEED: u64 = 23;
+
+fn snapshot(e: &mut NativeEngine) -> StateMap {
+    let mut m = StateMap::new();
+    e.save_state(&mut m);
+    m
+}
+
+fn assert_states_identical(a: &StateMap, b: &StateMap, what: &str) {
+    let ka: Vec<&str> = a.keys().collect();
+    let kb: Vec<&str> = b.keys().collect();
+    assert_eq!(ka, kb, "{what}: key sets differ");
+    for k in ka {
+        assert!(
+            a.get(k) == b.get(k),
+            "{what}: entry {k:?} differs between traced and untraced run"
+        );
+    }
+}
+
+fn assert_curves_identical(a: &TrainResult, b: &TrainResult, what: &str) {
+    assert_eq!(a.curve.len(), b.curve.len(), "{what}: curve lengths differ");
+    for (pa, pb) in a.curve.iter().zip(&b.curve) {
+        assert_eq!(pa.step, pb.step, "{what}: eval steps differ");
+        for (la, lb, which) in [
+            (pa.train_loss, pb.train_loss, "train_loss"),
+            (pa.test_loss, pb.test_loss, "test_loss"),
+            (pa.test_err, pb.test_err, "test_err"),
+        ] {
+            assert_eq!(
+                la.to_bits(),
+                lb.to_bits(),
+                "{what}: {which} at step {} differs ({la} vs {lb})",
+                pa.step
+            );
+        }
+    }
+}
+
+/// Train `spec` twice from identical engines — once with the trace sink
+/// wide open (a record every step), once fully untraced — and demand the
+/// two runs are indistinguishable everywhere except the trace file.
+fn check(spec: &ModelSpec, policy: fn() -> PrecisionPolicy) {
+    let what = format!("{}/{}", spec.file_stem(), policy().name);
+    let ds = SyntheticDataset::for_model(spec, SEED).with_sizes(32, 16);
+    let dir = std::env::temp_dir().join("fp8train_trace_readonly");
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = what.replace('/', "_");
+    let path = |name: &str| {
+        dir.join(format!("{stem}.{name}"))
+            .to_string_lossy()
+            .into_owned()
+    };
+
+    let base = TrainConfig {
+        batch_size: 4,
+        steps: N,
+        schedule: LrSchedule::step_decay(0.02, N),
+        eval_every: 2,
+        save_every: N,
+        ..TrainConfig::quick(N)
+    };
+
+    // Traced run: a `step` record every step, deterministic clocks.
+    let mut traced = NativeEngine::new(spec, policy(), SEED);
+    let mut c1 = base.clone();
+    c1.save_path = Some(path("traced.fp8ck"));
+    c1.trace = Some(path("trace.jsonl"));
+    c1.stats_every = 1;
+    c1.deterministic = true;
+    let r_traced = train(&mut traced, &ds, &c1);
+
+    // Untraced run: same work, no observer.
+    let mut plain = NativeEngine::new(spec, policy(), SEED);
+    let mut c2 = base.clone();
+    c2.save_path = Some(path("untraced.fp8ck"));
+    let r_plain = train(&mut plain, &ds, &c2);
+
+    assert_states_identical(&snapshot(&mut traced), &snapshot(&mut plain), &what);
+    assert_curves_identical(&r_traced, &r_plain, &what);
+    let ck_traced = std::fs::read(path("traced.fp8ck")).unwrap();
+    let ck_plain = std::fs::read(path("untraced.fp8ck")).unwrap();
+    assert_eq!(
+        ck_traced, ck_plain,
+        "{what}: checkpoint bytes must not depend on tracing"
+    );
+
+    // Sanity: the observer did observe — the trace exists and validates.
+    let text = std::fs::read_to_string(path("trace.jsonl")).unwrap();
+    let n = fp8train::telemetry::trace::validate(&text)
+        .unwrap_or_else(|e| panic!("{what}: invalid trace: {e}"));
+    // run + N step + N/2 eval + end.
+    assert_eq!(n, 1 + N + N / 2 + 1, "{what}");
+
+    for name in ["traced.fp8ck", "untraced.fp8ck", "trace.jsonl"] {
+        std::fs::remove_file(path(name)).ok();
+    }
+}
+
+#[test]
+fn bn50_dnn_fp8_paper_trace_is_readonly() {
+    check(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp8_paper);
+}
+
+/// Conv coverage: the CNN exercises the im2col pack-cache telemetry path.
+#[test]
+fn cifar_cnn_fp8_paper_trace_is_readonly() {
+    check(&ModelSpec::cifar_cnn(), PrecisionPolicy::fp8_paper);
+}
+
+/// fp32 control: identity formats record nothing, but the trace machinery
+/// still runs (empty quant sections) and must still be a strict observer.
+#[test]
+fn bn50_dnn_fp32_trace_is_readonly() {
+    check(&ModelSpec::bn50_dnn(), PrecisionPolicy::fp32);
+}

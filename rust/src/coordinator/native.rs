@@ -56,6 +56,18 @@ impl NativeEngine {
     pub fn load_model_state(&mut self, src: &StateMap) -> Result<(), StateError> {
         self.model.load_state("model", src)
     }
+
+    /// Raw logits under the eval quantization context (step 0, train
+    /// false — exactly what [`Engine::eval`] uses). This is the serving
+    /// entry (`fp8train serve`): every output row depends only on its own
+    /// input row and the weights (eval BatchNorm reads running statistics,
+    /// GEMM output elements have a fixed summation order), so a
+    /// micro-batched forward is bit-identical to N single-row forwards —
+    /// the determinism contract `rust/tests/serve_equivalence.rs` enforces.
+    pub fn predict_logits(&mut self, x: crate::tensor::Tensor) -> crate::tensor::Tensor {
+        let ctx = QuantCtx::new(&self.policy, 0, false);
+        self.model.forward(x, &ctx)
+    }
 }
 
 impl Engine for NativeEngine {

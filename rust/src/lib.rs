@@ -20,6 +20,10 @@
 //!   JAX/Pallas train-steps (HLO text artifacts) loaded via PJRT and driven
 //!   from Rust with device-resident parameters; Python never runs at
 //!   request time.
+//! - [`serve`] — the zero-dependency inference daemon (`fp8train serve`):
+//!   hand-rolled HTTP/1.1 over `std::net`, request micro-batching, an
+//!   `Arc`-shared worker pool and hot checkpoint reload
+//!   (`docs/serving.md`).
 //!
 //! Cross-cutting: [`state`] is the bit-exact checkpoint subsystem (the
 //! `.fp8ck` container plus the `StateDict` rollout across layers,
@@ -47,6 +51,7 @@ pub mod numerics;
 pub mod optim;
 pub mod perf;
 pub mod runtime;
+pub mod serve;
 pub mod state;
 pub mod supervisor;
 pub mod sweep;

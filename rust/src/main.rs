@@ -10,12 +10,18 @@
 //! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
 //! fp8train trace <summarize|validate> <trace.jsonl> [--csv]
 //! fp8train eval --checkpoint PATH [--batch N]
+//! fp8train serve --checkpoint PATH [--addr HOST:PORT] [--workers N]
+//!                [--max-batch B] [--max-wait-us D] [--queue-depth Q]
+//!                [--port-file PATH]
+//! fp8train serve-bench [--addr HOST:PORT | --checkpoint PATH] [--clients N]
+//!                      [--requests N] [--rows N] [--smoke]
 //! fp8train checkpoint inspect <path.fp8ck>
 //! fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
 //!                                  [--chunks L] [--steps N] [--batch N] [--seed S]
 //!                                  [--out SWEEP.json] [--max-cells N]
 //!                                  [--timeout-per-cell SECS] [--list]
 //! fp8train sweep diff <A.json> <B.json>
+//! fp8train sweep render <SWEEP.json> [--csv] [--out PATH]
 //! fp8train formats                 # print the FP8/FP16 format tables
 //! fp8train artifacts [--dir DIR]   # verify AOT artifacts load & run
 //! fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
@@ -67,6 +73,21 @@ USAGE:
   fp8train eval --checkpoint PATH [--batch N]
       load a .fp8ck checkpoint into the native engine and evaluate it (the
       model is reconstructed from the spec embedded in the checkpoint)
+  fp8train serve --checkpoint PATH [--addr HOST:PORT] [--workers N]
+                 [--max-batch B] [--max-wait-us D] [--queue-depth Q]
+                 [--port-file PATH]
+      zero-dependency inference daemon (docs/serving.md): micro-batched
+      POST /v1/predict (JSON rows in, logits/argmax out), GET /healthz,
+      GET /admin/status, hot checkpoint reload on SIGHUP or
+      POST /admin/reload. --addr with port 0 picks an ephemeral port;
+      --port-file publishes the bound address for scripts. Responses are
+      bit-identical regardless of --workers/--max-batch.
+  fp8train serve-bench [--addr HOST:PORT | --checkpoint PATH] [--clients N]
+                       [--requests N] [--rows N] [--smoke]
+      loopback load generator for the daemon: p50/p95/p99 latency, req/s
+      and micro-batch occupancy. --checkpoint spins an in-process daemon
+      on an ephemeral port; --smoke uses the small CI budget. Exits
+      non-zero if any request fails.
   fp8train checkpoint inspect <path.fp8ck>
       validate a checkpoint (magic, version, every CRC) and list its chunks
   fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
@@ -92,16 +113,22 @@ USAGE:
       the timing fields so repeated runs emit byte-identical artifacts.
   fp8train sweep diff <A.json> <B.json>
       per-cell comparison of two sweep artifacts
+  fp8train sweep render <SWEEP.json> [--csv] [--out PATH]
+      commit-friendly report from a sweep artifact: a markdown grid table
+      (default) or CSV rows; diverged cells carry diverged_at plus the top
+      saturating layer from the schema-3 numerics summary
   fp8train formats
   fp8train artifacts [--dir DIR]
   fp8train bench [--json PATH] [--fast] [--model M] [--compare OLD.json]
       GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
       shapes, native train-step with per-phase timing (quantize/pack/gemm/
       update) + scratch-arena and quantized-pack-cache reuse, numerics-
-      telemetry overhead (counters on vs off), supervisor counters, and
-      checkpoint encode/decode throughput; --json writes a machine-readable
-      report (schema 5, default BENCH_GEMM.json); --compare diffs against an
-      older report and exits non-zero on a >10% regression
+      telemetry overhead (counters on vs off), supervisor counters,
+      checkpoint encode/decode throughput, and serve daemon latency
+      percentiles + throughput over loopback; --json writes a
+      machine-readable report (schema 6, default BENCH_GEMM.json);
+      --compare diffs against an older report and exits non-zero on a >10%
+      regression
   fp8train bench compare <old.json> <new.json>
       file-vs-file comparison of two bench reports (no benchmarking);
       exits non-zero on a >10% regression of any shared throughput metric
@@ -131,6 +158,8 @@ fn dispatch(args: &Args) -> Result<()> {
         // spawned by `sweep --workers N`, not intended for direct use).
         "sweep-worker" => fp8train::supervisor::worker_main(args),
         "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
+        "serve-bench" => cmd_serve_bench(args),
         "trace" => cmd_trace(args),
         "checkpoint" => cmd_checkpoint(args),
         "formats" => cmd_formats(),
@@ -353,6 +382,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         };
         return sweep::diff(a, b);
     }
+    if args.positional.first().map(String::as_str) == Some("render") {
+        args.check_known(&["csv", "out"])?;
+        let path = args
+            .positional
+            .get(1)
+            .context("usage: fp8train sweep render <SWEEP.json> [--csv] [--out PATH]")?;
+        return sweep::render(path, args.flag("csv"), args.opt("out"));
+    }
     args.check_known(&[
         "formats",
         "rounds",
@@ -455,6 +492,97 @@ fn cmd_eval(args: &Args) -> Result<()> {
         "{} @ step {trained_steps}: test_loss {loss:.4}, test_err {err:.2}% ({} params)",
         engine.name(),
         engine.num_params()
+    );
+    Ok(())
+}
+
+/// `fp8train serve --checkpoint PATH …` — the long-running zero-dependency
+/// inference daemon (`rust/src/serve/`, `docs/serving.md`): micro-batched
+/// `POST /v1/predict`, `GET /healthz`, `GET /admin/status`, hot checkpoint
+/// reload on SIGHUP or `POST /admin/reload`. Blocks until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fp8train::serve::{self, ServeConfig};
+    args.check_known(&[
+        "checkpoint",
+        "addr",
+        "workers",
+        "max-batch",
+        "max-wait-us",
+        "queue-depth",
+        "port-file",
+    ])?;
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        checkpoint: args
+            .opt("checkpoint")
+            .context("serve needs --checkpoint PATH")?
+            .to_string(),
+        addr: args.opt_or("addr", &d.addr),
+        workers: args.opt_usize("workers", d.workers)?.max(1),
+        max_batch: args.opt_usize("max-batch", d.max_batch)?.max(1),
+        max_wait_us: args.opt_u64("max-wait-us", d.max_wait_us)?,
+        queue_depth: args.opt_usize("queue-depth", d.queue_depth)?.max(1),
+        port_file: args.opt("port-file").map(str::to_string),
+    };
+    serve::run(cfg)
+}
+
+/// `fp8train serve-bench …` — loopback load generator for the daemon.
+/// `--addr` drives a daemon that is already up; `--checkpoint` spins an
+/// in-process one on an ephemeral port first. Fails (non-zero exit) if any
+/// request errors, so the CI smoke doubles as a correctness gate.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    use fp8train::serve::{self, bench as serve_bench, ServeConfig};
+    args.check_known(&[
+        "addr",
+        "checkpoint",
+        "clients",
+        "requests",
+        "rows",
+        "workers",
+        "max-batch",
+        "max-wait-us",
+        "smoke",
+    ])?;
+    let smoke = args.flag("smoke");
+    let clients = args.opt_usize("clients", if smoke { 2 } else { 4 })?.max(1);
+    let requests = args.opt_usize("requests", if smoke { 8 } else { 64 })?.max(1);
+    let rows = args.opt_usize("rows", 1)?.max(1);
+    let (addr, handle) = match args.opt("addr") {
+        Some(a) => (a.to_string(), None),
+        None => {
+            let ck = args
+                .opt("checkpoint")
+                .context("serve-bench needs --addr HOST:PORT or --checkpoint PATH")?;
+            let cfg = ServeConfig {
+                checkpoint: ck.to_string(),
+                addr: "127.0.0.1:0".into(),
+                workers: args.opt_usize("workers", 2)?.max(1),
+                max_batch: args.opt_usize("max-batch", 4)?.max(1),
+                max_wait_us: args.opt_u64("max-wait-us", 200)?,
+                ..ServeConfig::default()
+            };
+            let h = serve::start(cfg)?;
+            (h.addr.to_string(), Some(h))
+        }
+    };
+    let opts = serve_bench::BenchOpts {
+        addr,
+        clients,
+        requests_per_client: requests,
+        rows_per_request: rows,
+    };
+    let result = serve_bench::run(&opts);
+    if let Some(h) = handle {
+        h.shutdown();
+    }
+    let summary = result?;
+    summary.print();
+    ensure!(
+        summary.errors == 0,
+        "{} of {} serve-bench requests failed",
+        summary.errors,
+        summary.requests
     );
     Ok(())
 }
@@ -575,9 +703,10 @@ const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
 /// `fp8train bench [--json PATH] [--fast] [--compare OLD.json]` — GEMM
 /// throughput for the three emulation paths at the Fig. 6 shapes, the
 /// native train step with per-phase timing (quantize/pack/gemm/update),
-/// scratch-arena and quantized-pack cache reuse rates, and checkpoint
-/// encode/decode throughput, optionally as a JSON report (schema 5) so the
-/// perf trajectory stays machine-readable across PRs. `--compare` diffs
+/// scratch-arena and quantized-pack cache reuse rates, checkpoint
+/// encode/decode throughput, and the serving daemon's latency/throughput
+/// SLO, optionally as a JSON report (schema 6) so the perf trajectory
+/// stays machine-readable across PRs. `--compare` diffs
 /// the fresh numbers against a previous report and **exits non-zero on a
 /// >10% regression** of any shared throughput metric. Pin
 /// `FP8TRAIN_THREADS=1` for stable single-core numbers.
@@ -770,10 +899,55 @@ fn cmd_bench(args: &Args) -> Result<()> {
         r_dec.to_json()
     );
 
+    // Serving SLO: spin the zero-dependency daemon on an ephemeral loopback
+    // port against a checkpoint of the bench model and drive it with the
+    // in-process serve-bench client. p50/p99 latency, requests/s and
+    // micro-batch occupancy join the perf trajectory as the schema-6
+    // `serve` section (`docs/serving.md`).
+    let fast = std::env::var("FP8TRAIN_BENCH_FAST").is_ok();
+    let serve_dir =
+        std::env::temp_dir().join(format!("fp8train_bench_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&serve_dir)
+        .with_context(|| format!("create {}", serve_dir.display()))?;
+    let ck_path = serve_dir.join("bench.fp8ck");
+    let mut ck = map.clone();
+    ck.put_str("meta.model", &spec.id());
+    ck.put_str("meta.policy", "fp8_paper");
+    ck.put_u64("meta.seed", 7);
+    ck.save_file(&ck_path)?;
+    println!("\n== serve: 2 workers, max-batch 4, loopback ==");
+    let serve_handle = fp8train::serve::start(fp8train::serve::ServeConfig {
+        checkpoint: ck_path.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_batch: 4,
+        max_wait_us: 200,
+        ..fp8train::serve::ServeConfig::default()
+    })?;
+    let serve_res = fp8train::serve::bench::run(&fp8train::serve::bench::BenchOpts {
+        addr: serve_handle.addr.to_string(),
+        clients: 2,
+        requests_per_client: if fast { 8 } else { 64 },
+        rows_per_request: 1,
+    });
+    serve_handle.shutdown();
+    let _ = std::fs::remove_dir_all(&serve_dir);
+    let serve_sum = serve_res?;
+    serve_sum.print();
+    ensure!(
+        serve_sum.errors == 0,
+        "serve bench saw {} failed requests",
+        serve_sum.errors
+    );
+    let serve_doc = format!(
+        "{{\"workers\":2,\"max_batch\":4,\"max_wait_us\":200,\"clients\":2,\"result\":{}}}",
+        serve_sum.to_json()
+    );
+
     let doc = format!(
-        "{{\"schema\":5,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
+        "{{\"schema\":6,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
          \"scratch\":{},\"phases\":{},\"wcache\":{},\"telemetry\":{},\"supervisor\":{},\
-         \"checkpoint\":{}}}\n",
+         \"checkpoint\":{},\"serve\":{}}}\n",
         num_threads(),
         std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
         spec.id(),
@@ -783,7 +957,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         wcache_doc,
         telemetry_doc,
         supervisor_doc,
-        checkpoint_doc
+        checkpoint_doc,
+        serve_doc
     );
     if let Some(path) = &json_path {
         std::fs::write(path, &doc).with_context(|| format!("write {path}"))?;

@@ -105,7 +105,13 @@ fn rows_to_nchw(rows: &Tensor, n: usize, oc: usize, oh: usize, ow: usize) -> Ten
 fn nchw_to_rows_q(x: &Tensor, quant: Option<NeQuantizer>) -> Tensor {
     let (n, oc, oh, ow) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let mut out = Tensor::zeros_pooled(&[n * oh * ow, oc]);
+    // Same telemetry contract as `quantize_batch`: stash the original bits
+    // per output row and record (orig, quantized) pairs, `None` — two
+    // thread-local reads — unless a layer/role scope is active.
+    let mut rec = quant.and_then(|q| crate::telemetry::quant_recorder(q.fmt()));
+    let mut orig = vec![0u32; if rec.is_some() { oc } else { 0 }];
     crate::perf::timed(crate::perf::Phase::Pack, || {
+        let stash = !orig.is_empty();
         for img in 0..n {
             for s in 0..oh * ow {
                 let row = (img * oh * ow + s) * oc;
@@ -117,13 +123,23 @@ fn nchw_to_rows_q(x: &Tensor, quant: Option<NeQuantizer>) -> Tensor {
                     }
                     Some(q) => {
                         for c in 0..oc {
-                            out.data[row + c] = q.quantize(x.data[((img * oc) + c) * oh * ow + s]);
+                            let v = x.data[((img * oc) + c) * oh * ow + s];
+                            if stash {
+                                orig[c] = v.to_bits();
+                            }
+                            out.data[row + c] = q.quantize(v);
+                        }
+                        if let Some(r) = rec.as_mut() {
+                            r.record(&orig, &out.data[row..row + oc]);
                         }
                     }
                 }
             }
         }
     });
+    if let Some(r) = rec {
+        r.commit();
+    }
     out
 }
 
@@ -153,7 +169,12 @@ impl Layer for Conv2d {
         let low_replication = g.out_h() * g.out_w() * g.k * g.k <= 2 * g.in_h * g.in_w;
         let cols_q = match p.plain_act_fmt(GemmRole::Forward, self.pos) {
             Some(fmt) if fmt.is_identity() => im2col(&x, &g),
-            Some(fmt) if low_replication => im2col_q(&x, &g, Some(NeQuantizer::new(fmt))),
+            Some(fmt) if low_replication => {
+                // Role scope so the fused quantize-on-copy records under
+                // (layer, fwd) exactly like the separate-pass route.
+                let _role = crate::telemetry::role_scope(crate::telemetry::Role::Forward);
+                im2col_q(&x, &g, Some(NeQuantizer::new(fmt)))
+            }
             Some(_) | None => {
                 // Dense kernels and baseline schemes: quantize before
                 // lowering (one pass over C·H·W instead of per-copy work
@@ -243,6 +264,7 @@ impl Layer for Conv2d {
         // full-tensor quantize pass disappears entirely.
         let err = match p.plain_err_fmt(GemmRole::Backward, self.pos) {
             Some(fmt) => {
+                let _role = crate::telemetry::role_scope(crate::telemetry::Role::Backward);
                 let q = (!fmt.is_identity()).then(|| NeQuantizer::new(fmt));
                 nchw_to_rows_q(&dy, q)
             }
@@ -545,6 +567,48 @@ mod tests {
         );
         let y_ref = rows_to_nchw(&rows, 2, 5, 4, 4);
         assert_eq!(y, y_ref);
+    }
+
+    #[test]
+    fn fused_conv_passes_report_telemetry() {
+        use crate::telemetry::{self, Role};
+        // The fused quantize-on-copy routes (im2col_q on the 1×1 forward,
+        // the NCHW→rows error repack on backward) must show up in the
+        // per-(layer, role) counters like any batch-quantize pass.
+        telemetry::reset();
+        let policy = PrecisionPolicy::fp8_paper();
+        let ctx = QuantCtx::new(&policy, 1, true);
+        let g = Conv2dGeom {
+            in_c: 3,
+            in_h: 4,
+            in_w: 4,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut conv = Conv2d::new("ct", g, 5, LayerPos::Middle, false, &mut rng);
+        let x = Tensor::from_vec(
+            &[2, 3, 4, 4],
+            (0..96).map(|i| (i as f32 - 48.0) * 0.083).collect(),
+        );
+        let dy = Tensor::from_vec(
+            &[2, 5, 4, 4],
+            (0..160).map(|i| ((i * 7 % 11) as f32 - 5.0) * 0.21).collect(),
+        );
+        conv.forward(x, &ctx);
+        conv.backward(dy, &ctx);
+        let snap = telemetry::snapshot();
+        let elems = |role: Role| {
+            snap.iter()
+                .find(|(name, r, _)| name == "ct" && *r == role)
+                .map(|(_, _, s)| s.elems)
+        };
+        // Forward im2col_q: 2 images × 16 sites × patch length 3.
+        assert_eq!(elems(Role::Forward), Some(96));
+        // Backward error repack: 2 images × 16 sites × 5 out channels.
+        assert_eq!(elems(Role::Backward), Some(160));
+        telemetry::reset();
     }
 
     #[test]

@@ -635,6 +635,13 @@ impl NeQuantizer {
         (u & 0x8000_0000) | q
     }
 
+    /// The format this quantizer rounds into — what the fused copy passes
+    /// hand to [`crate::telemetry::quant_recorder`] so quantize-on-copy
+    /// shows up in the per-(layer, role) counters like any batch pass.
+    pub fn fmt(&self) -> FloatFormat {
+        self.fmt
+    }
+
     /// Quantize one value: fast trick in range, scalar general path for
     /// the rare specials (and for `mbits ≥ 23` formats entirely).
     /// Bit-identical to the scalar quantizer.

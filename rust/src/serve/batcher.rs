@@ -1,0 +1,237 @@
+//! Micro-batching queue: parsed predict requests wait here until a worker
+//! coalesces them into one GEMM batch. Dispatch fires when `max_batch`
+//! rows are queued or the **oldest** pending request has waited
+//! `max_wait` — the explicit latency-vs-throughput lever
+//! (`docs/serving.md` documents the deadline math).
+//!
+//! The dispatch predicate ([`dispatch_ready`]) and the drain
+//! ([`take_batch`]) are pure functions so the deadline math is unit-tested
+//! without threads; [`BatchQueue`] wraps them in a `Mutex` + `Condvar`.
+//!
+//! Coalescing cannot change emitted numbers: the engine's eval forward
+//! computes every output row independently of its batch neighbours
+//! (`NativeEngine::predict_logits`, enforced end-to-end by
+//! `tests/serve_equivalence.rs`), so batching is purely a throughput
+//! decision.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One logit row of a predict response.
+#[derive(Clone, Debug)]
+pub struct RowOut {
+    pub argmax: usize,
+    pub logits: Vec<f32>,
+}
+
+/// A parsed, validated predict request waiting for a worker. The
+/// connection thread blocks on the receiving end of `resp`.
+pub struct Pending {
+    pub rows: Vec<Vec<f32>>,
+    pub resp: Sender<Result<Vec<RowOut>, String>>,
+    pub enqueued: Instant,
+}
+
+impl Pending {
+    pub fn nrows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// The dispatch predicate: fire when the queue holds a full batch, or the
+/// oldest request's deadline has arrived. With `max_wait` zero every
+/// arrival dispatches immediately (pure latency mode); with a large
+/// `max_wait` the queue fills to `max_batch` first (pure throughput mode).
+pub fn dispatch_ready(
+    queued_rows: usize,
+    oldest_wait: Duration,
+    max_batch: usize,
+    max_wait: Duration,
+) -> bool {
+    queued_rows >= max_batch || oldest_wait >= max_wait
+}
+
+/// Drain pendings off the queue front until adding the next one would
+/// exceed `max_rows`. Always takes at least the first pending — a single
+/// multi-row request larger than `max_rows` forms its own oversized batch
+/// rather than deadlocking.
+pub fn take_batch(q: &mut VecDeque<Pending>, max_rows: usize) -> Vec<Pending> {
+    let mut out = Vec::new();
+    let mut rows = 0usize;
+    while let Some(p) = q.front() {
+        if !out.is_empty() && rows + p.nrows() > max_rows {
+            break;
+        }
+        rows += p.nrows();
+        out.push(q.pop_front().unwrap());
+    }
+    out
+}
+
+/// The bounded pending queue shared by connection threads (producers) and
+/// the worker pool (consumers).
+pub struct BatchQueue {
+    inner: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    capacity_rows: usize,
+}
+
+impl BatchQueue {
+    pub fn new(capacity_rows: usize) -> Self {
+        Self {
+            inner: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            capacity_rows: capacity_rows.max(1),
+        }
+    }
+
+    /// Rows currently queued — the `/admin/status` queue-depth signal.
+    pub fn depth_rows(&self) -> usize {
+        self.inner.lock().unwrap().iter().map(Pending::nrows).sum()
+    }
+
+    /// Enqueue, or hand the pending back when the bounded queue is full
+    /// (the caller answers 503). An oversized request is still accepted
+    /// into an empty queue so it can never be unservable.
+    pub fn push(&self, p: Pending) -> Result<(), Pending> {
+        let mut q = self.inner.lock().unwrap();
+        let depth: usize = q.iter().map(Pending::nrows).sum();
+        if !q.is_empty() && depth + p.nrows() > self.capacity_rows {
+            return Err(p);
+        }
+        q.push_back(p);
+        drop(q);
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until a batch is ready per [`dispatch_ready`], then drain and
+    /// return it. Returns `None` once `shutdown` is set and the queue has
+    /// fully drained — in-flight work always completes.
+    pub fn next_batch(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+        shutdown: &AtomicBool,
+    ) -> Option<Vec<Pending>> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            let oldest = q
+                .front()
+                .map(|f| (f.enqueued.elapsed(), q.iter().map(Pending::nrows).sum::<usize>()));
+            match oldest {
+                Some((waited, rows)) => {
+                    // Shutdown flushes immediately: no point holding rows
+                    // to their deadline when the daemon is draining.
+                    if dispatch_ready(rows, waited, max_batch, max_wait)
+                        || shutdown.load(Ordering::SeqCst)
+                    {
+                        return Some(take_batch(&mut q, max_batch));
+                    }
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(q, max_wait.saturating_sub(waited))
+                        .unwrap();
+                    q = guard;
+                }
+                None if shutdown.load(Ordering::SeqCst) => return None,
+                None => {
+                    // Idle: nap until a push notifies (the timeout bounds
+                    // how long a worker can miss a shutdown signal).
+                    let (guard, _) = self
+                        .cv
+                        .wait_timeout(q, Duration::from_millis(25))
+                        .unwrap();
+                    q = guard;
+                }
+            }
+        }
+    }
+
+    /// Wake every blocked worker (shutdown path).
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn pending(nrows: usize) -> Pending {
+        // The receiver drops immediately — these tests never send on resp.
+        let (tx, _rx) = mpsc::channel();
+        Pending {
+            rows: vec![vec![0.0]; nrows],
+            resp: tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn dispatch_deadline_math() {
+        let ms = Duration::from_millis;
+        // Full batch fires regardless of wait.
+        assert!(dispatch_ready(8, ms(0), 8, ms(100)));
+        // Under-full batch waits out the deadline…
+        assert!(!dispatch_ready(3, ms(99), 8, ms(100)));
+        // …and fires exactly at it.
+        assert!(dispatch_ready(3, ms(100), 8, ms(100)));
+        // max_wait zero = dispatch on arrival.
+        assert!(dispatch_ready(1, ms(0), 8, ms(0)));
+    }
+
+    #[test]
+    fn take_batch_respects_row_budget_but_never_starves() {
+        let mut q: VecDeque<Pending> = [3, 3, 3].into_iter().map(pending).collect();
+        let batch = take_batch(&mut q, 7);
+        // 3 + 3 fit; adding the third would exceed 7.
+        assert_eq!(batch.iter().map(Pending::nrows).sum::<usize>(), 6);
+        assert_eq!(q.len(), 1);
+
+        // An oversized request still forms its own batch.
+        let mut q: VecDeque<Pending> = [10, 1].into_iter().map(pending).collect();
+        let batch = take_batch(&mut q, 4);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].nrows(), 10);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn push_bounds_the_queue_and_next_batch_drains_on_shutdown() {
+        let bq = BatchQueue::new(4);
+        assert!(bq.push(pending(3)).is_ok());
+        assert!(bq.push(pending(1)).is_ok());
+        // Full: 4 of 4 rows queued.
+        assert!(bq.push(pending(1)).is_err());
+        assert_eq!(bq.depth_rows(), 4);
+
+        // Shutdown set: the queued rows still come out (drain), then None.
+        let shutdown = AtomicBool::new(true);
+        let batch = bq
+            .next_batch(8, Duration::from_secs(10), &shutdown)
+            .expect("queued rows must drain");
+        assert_eq!(batch.iter().map(Pending::nrows).sum::<usize>(), 4);
+        assert!(bq.next_batch(8, Duration::from_secs(10), &shutdown).is_none());
+    }
+
+    #[test]
+    fn full_batch_dispatches_without_waiting_for_the_deadline() {
+        let bq = BatchQueue::new(64);
+        for _ in 0..4 {
+            bq.push(pending(1)).unwrap();
+        }
+        let shutdown = AtomicBool::new(false);
+        let t0 = Instant::now();
+        let batch = bq
+            .next_batch(4, Duration::from_secs(30), &shutdown)
+            .unwrap();
+        assert_eq!(batch.len(), 4);
+        // Must not have slept anywhere near the 30 s deadline.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+}

@@ -1,0 +1,263 @@
+//! `fp8train serve-bench` — loopback load generator for the daemon.
+//! In-process client threads (no network dependency beyond loopback, so
+//! it runs in CI) hammer `/v1/predict` with deterministic synthetic rows
+//! and report p50/p95/p99 latency, requests/s and the achieved
+//! micro-batch occupancy (from the `/admin/status` counters before vs
+//! after). `fp8train bench --json` embeds the same summary as the
+//! schema-6 `serve` section so the serving SLO joins the CI perf
+//! trajectory (`docs/serving.md`).
+
+use std::time::{Duration, Instant};
+
+use super::http;
+use crate::benchcmp::Json;
+use crate::error::{Context, Result};
+use crate::{bail, ensure};
+
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    pub addr: String,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub rows_per_request: usize,
+}
+
+pub struct BenchSummary {
+    pub requests: usize,
+    pub errors: usize,
+    pub wall: Duration,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub requests_per_sec: f64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    /// `rows / (batches · max_batch)` over the bench window — 1.0 means
+    /// every dispatched batch was full.
+    pub occupancy: f64,
+}
+
+impl BenchSummary {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"requests\":{},\"errors\":{},\"wall_ms\":{:.3},\"mean_us\":{:.3},\
+             \"p50_us\":{:.3},\"p95_us\":{:.3},\"p99_us\":{:.3},\"requests_per_sec\":{:.3},\
+             \"batches\":{},\"batched_rows\":{},\"occupancy\":{:.4}}}",
+            self.requests,
+            self.errors,
+            self.wall.as_secs_f64() * 1e3,
+            self.mean_us,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.requests_per_sec,
+            self.batches,
+            self.batched_rows,
+            self.occupancy
+        )
+    }
+
+    pub fn print(&self) {
+        println!(
+            "serve-bench: {} requests ({} errors) in {:.1} ms — {:.0} req/s",
+            self.requests,
+            self.errors,
+            self.wall.as_secs_f64() * 1e3,
+            self.requests_per_sec
+        );
+        println!(
+            "  latency: mean {:.0} µs, p50 {:.0} µs, p95 {:.0} µs, p99 {:.0} µs",
+            self.mean_us, self.p50_us, self.p95_us, self.p99_us
+        );
+        println!(
+            "  batching: {} batches / {} rows ({:.1}% occupancy)",
+            self.batches,
+            self.batched_rows,
+            self.occupancy * 100.0
+        );
+    }
+}
+
+/// Deterministic synthetic feature row: a splitmix-style hash of
+/// (index, salt) mapped onto a coarse `[-2, +2)` grid of multiples of
+/// 1/64 — exactly representable in f32 and trivially round-trippable
+/// through decimal JSON.
+pub fn synthetic_row(features: usize, salt: u64) -> Vec<f32> {
+    (0..features as u64)
+        .map(|i| {
+            let h = i
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(salt.wrapping_mul(0x517C_C1B7_2722_0A95));
+            ((h >> 32) % 256) as f32 / 64.0 - 2.0
+        })
+        .collect()
+}
+
+/// Serialize a `/v1/predict` body with `rows` synthetic rows.
+pub fn predict_body(rows: usize, features: usize, salt: u64) -> String {
+    let mut out = String::from("{\"rows\":[");
+    for r in 0..rows {
+        if r > 0 {
+            out.push(',');
+        }
+        out.push('[');
+        for (j, v) in synthetic_row(features, salt.wrapping_add(r as u64))
+            .iter()
+            .enumerate()
+        {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{v}"));
+        }
+        out.push(']');
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Counters sampled from `/admin/status`.
+struct StatusSample {
+    batches: u64,
+    rows: u64,
+    input_features: usize,
+    max_batch: usize,
+}
+
+fn sample_status(addr: &str) -> Result<StatusSample> {
+    let (code, body) = http::request(addr, "GET", "/admin/status", "")?;
+    ensure!(code == 200, "GET /admin/status returned {code}: {body}");
+    let doc = match Json::parse(&body) {
+        Ok(d) => d,
+        Err(e) => bail!("unparseable /admin/status body: {e}"),
+    };
+    let num = |p: &str| doc.at(p).and_then(Json::num);
+    Ok(StatusSample {
+        batches: num("batches.dispatched").unwrap_or(0.0) as u64,
+        rows: num("batches.rows").unwrap_or(0.0) as u64,
+        input_features: num("input_features")
+            .context("/admin/status has no input_features")? as usize,
+        max_batch: num("max_batch").unwrap_or(1.0) as usize,
+    })
+}
+
+fn client_loop(addr: &str, requests: usize, body: &str) -> (Vec<u64>, usize) {
+    let mut lat_ns = Vec::with_capacity(requests);
+    let mut errors = 0usize;
+    for _ in 0..requests {
+        let t0 = Instant::now();
+        match http::request(addr, "POST", "/v1/predict", body) {
+            Ok((200, resp)) if resp.contains("\"argmax\"") => {
+                lat_ns.push(t0.elapsed().as_nanos() as u64);
+            }
+            _ => errors += 1,
+        }
+    }
+    (lat_ns, errors)
+}
+
+/// Drive the daemon at `opts.addr` and aggregate the percentile summary.
+pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
+    let before = sample_status(&opts.addr)?;
+    let clients = opts.clients.max(1);
+    let per_client = opts.requests_per_client.max(1);
+    let rows_per = opts.rows_per_request.max(1);
+    let started = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = opts.addr.clone();
+            // Distinct salt per client so concurrent batches mix rows.
+            let body = predict_body(rows_per, before.input_features, c as u64 * 1009);
+            std::thread::spawn(move || client_loop(&addr, per_client, &body))
+        })
+        .collect();
+    let mut lat_ns: Vec<u64> = Vec::new();
+    let mut errors = 0usize;
+    for h in handles {
+        match h.join() {
+            Ok((mut l, e)) => {
+                lat_ns.append(&mut l);
+                errors += e;
+            }
+            // A panicked client: all of its requests count as failed.
+            Err(_) => errors += per_client,
+        }
+    }
+    let wall = started.elapsed();
+    let after = sample_status(&opts.addr)?;
+
+    lat_ns.sort_unstable();
+    let pct = |q: f64| -> f64 {
+        if lat_ns.is_empty() {
+            return 0.0;
+        }
+        let idx = ((lat_ns.len() - 1) as f64 * q).round() as usize;
+        lat_ns[idx] as f64 / 1e3
+    };
+    let mean_us = if lat_ns.is_empty() {
+        0.0
+    } else {
+        lat_ns.iter().sum::<u64>() as f64 / lat_ns.len() as f64 / 1e3
+    };
+    let batches = after.batches.saturating_sub(before.batches);
+    let batched_rows = after.rows.saturating_sub(before.rows);
+    let occupancy = if batches == 0 {
+        0.0
+    } else {
+        batched_rows as f64 / (batches as f64 * after.max_batch.max(1) as f64)
+    };
+    Ok(BenchSummary {
+        requests: lat_ns.len() + errors,
+        errors,
+        wall,
+        mean_us,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        requests_per_sec: lat_ns.len() as f64 / wall.as_secs_f64().max(1e-9),
+        batches,
+        batched_rows,
+        occupancy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_rows_are_deterministic_and_grid_aligned() {
+        let a = synthetic_row(16, 3);
+        let b = synthetic_row(16, 3);
+        assert_eq!(a, b);
+        assert_ne!(a, synthetic_row(16, 4));
+        for v in &a {
+            // Multiples of 1/64 in [-2, 2): exact in f32 and in decimal.
+            assert!((-2.0..2.0).contains(v));
+            assert_eq!(v * 64.0, (v * 64.0).round());
+        }
+    }
+
+    #[test]
+    fn predict_body_round_trips_through_the_json_parser() {
+        let body = predict_body(2, 3, 9);
+        let doc = Json::parse(&body).unwrap();
+        let rows = match doc.at("rows") {
+            Some(Json::Arr(r)) => r,
+            other => panic!("rows missing: {other:?}"),
+        };
+        assert_eq!(rows.len(), 2);
+        for (r, row) in rows.iter().enumerate() {
+            let vals = match row {
+                Json::Arr(v) => v,
+                other => panic!("row {r} not an array: {other:?}"),
+            };
+            let want = synthetic_row(3, 9 + r as u64);
+            for (j, v) in vals.iter().enumerate() {
+                // Bit-exact decimal round-trip: f32 → shortest decimal → f64 → f32.
+                assert_eq!(v.num().unwrap() as f32, want[j]);
+            }
+        }
+    }
+}

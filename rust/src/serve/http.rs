@@ -1,0 +1,226 @@
+//! Minimal HTTP/1.1 on `std::net` — the workspace carries zero external
+//! crates, so the daemon speaks just enough of the protocol for its own
+//! endpoints: request-line + headers + `Content-Length` body in, one
+//! `Connection: close` response out. No chunked encoding, no keep-alive,
+//! no TLS — `docs/serving.md` documents the contract.
+//!
+//! The same module provides the loopback client side used by
+//! `fp8train serve-bench`, the CI smoke and `tests/serve_equivalence.rs`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::error::{Context, Result};
+
+/// Request bodies above this are refused with `413` before any read of
+/// the payload (a predict row is a few KB of JSON; 1 MiB is generous).
+pub const MAX_BODY: usize = 1 << 20;
+
+/// One parsed request: method + path + raw body bytes.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be parsed. `TooLarge` maps to `413`, `Bad` to
+/// `400`; `Disconnected` (peer closed before a request line) is dropped
+/// silently — health probes routinely do this.
+pub enum RequestError {
+    TooLarge(usize),
+    Bad(String),
+    Disconnected,
+}
+
+/// Read one request off the stream. `Content-Length` is the only body
+/// framing the server accepts (no `Transfer-Encoding`), matched
+/// case-insensitively per RFC 9112.
+pub fn read_request(stream: &TcpStream) -> std::result::Result<Request, RequestError> {
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => return Err(RequestError::Disconnected),
+        Ok(_) => {}
+        Err(e) => return Err(RequestError::Bad(format!("read request line: {e}"))),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1") {
+        return Err(RequestError::Bad(format!(
+            "malformed request line {:?}",
+            line.trim_end()
+        )));
+    }
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        match r.read_line(&mut h) {
+            Ok(0) => return Err(RequestError::Bad("connection closed mid-headers".into())),
+            Ok(_) => {}
+            Err(e) => return Err(RequestError::Bad(format!("read header: {e}"))),
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| RequestError::Bad(format!("bad Content-Length {:?}", v.trim())))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(RequestError::TooLarge(content_length));
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|e| RequestError::Bad(format!("read body: {e}")))?;
+    Ok(Request { method, path, body })
+}
+
+/// Write one complete response and signal close. Always JSON — every
+/// endpoint (including errors) answers with a JSON body.
+pub fn write_response(stream: &TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    let mut w = stream;
+    w.write_all(head.as_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// Loopback client: one request, one `(status, body)` response. Relies on
+/// the server's `Connection: close` framing (read to EOF), with a read
+/// timeout so a wedged server fails the caller instead of hanging it.
+pub fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    stream.set_nodelay(true).ok();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let mut w = &stream;
+    w.write_all(req.as_bytes())
+        .with_context(|| format!("send {method} {path}"))?;
+    let mut buf = Vec::new();
+    let mut r = &stream;
+    r.read_to_end(&mut buf)
+        .with_context(|| format!("read {method} {path} response"))?;
+    let text = String::from_utf8_lossy(&buf);
+    let (head, rest) = text
+        .split_once("\r\n\r\n")
+        .context("response has no header terminator")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {:?}", head.lines().next().unwrap_or("")))?;
+    Ok((status, rest.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// One server turn: accept a connection, parse, run `f` on the parse
+    /// result to pick (status, body), respond.
+    fn serve_once<F>(listener: TcpListener, f: F) -> std::thread::JoinHandle<()>
+    where
+        F: FnOnce(std::result::Result<Request, RequestError>) -> (u16, String) + Send + 'static,
+    {
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let (status, body) = f(read_request(&stream));
+            write_response(&stream, status, &body).unwrap();
+        })
+    }
+
+    #[test]
+    fn round_trip_request_and_response() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = serve_once(listener, |req| {
+            let req = req.ok().unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/predict");
+            assert_eq!(req.body, b"{\"row\":[1]}");
+            (200, "{\"ok\":true}".into())
+        });
+        let (status, body) = request(&addr, "POST", "/v1/predict", "{\"row\":[1]}").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"ok\":true}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_content_length_is_too_large_before_reading_payload() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = serve_once(listener, |req| match req {
+            Err(RequestError::TooLarge(n)) => {
+                assert!(n > MAX_BODY);
+                (413, "{\"error\":\"too large\"}".into())
+            }
+            _ => panic!("expected TooLarge"),
+        });
+        // Claim a huge body but never send it: the server must reject on
+        // the header alone.
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = &stream;
+        w.write_all(
+            format!(
+                "POST /v1/predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                MAX_BODY + 1
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut out = String::new();
+        let mut r = &stream;
+        r.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 413 "), "got {out:?}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_request_line_is_bad() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = serve_once(listener, |req| match req {
+            Err(RequestError::Bad(_)) => (400, "{}".into()),
+            _ => panic!("expected Bad"),
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = &stream;
+        w.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut out = String::new();
+        let mut r = &stream;
+        r.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400 "));
+        h.join().unwrap();
+    }
+}

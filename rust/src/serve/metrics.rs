@@ -1,0 +1,223 @@
+//! Serve-side counters: per-endpoint request/error totals, micro-batch
+//! dispatch accounting (occupancy), request-latency aggregates, and a
+//! cross-worker roll-up of the numerics telemetry counters
+//! ([`crate::telemetry`] is thread-local, so each worker folds its
+//! snapshot in here after every batch for `/admin/status`).
+//!
+//! Everything on the request path is a relaxed atomic bump; the only
+//! mutexes guard the telemetry roll-up map and the last-reload-error
+//! string, neither of which the predict hot path touches.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::telemetry::{QuantStats, Role};
+
+/// One endpoint's request/error pair.
+#[derive(Default)]
+pub struct EndpointCounters {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl EndpointCounters {
+    pub fn hit(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn err(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> (u64, u64) {
+        (
+            self.requests.load(Ordering::Relaxed),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Per-(layer, role) quantization roll-up — the three counters
+/// `/admin/status` reports as the saturation summary.
+#[derive(Clone, Copy, Default)]
+pub struct QuantAgg {
+    pub elems: u64,
+    pub saturated: u64,
+    pub underflowed: u64,
+}
+
+pub struct Metrics {
+    pub started: Instant,
+    pub predict: EndpointCounters,
+    pub healthz: EndpointCounters,
+    pub status: EndpointCounters,
+    pub reload: EndpointCounters,
+    /// Rows answered successfully via `/v1/predict` (a request may carry
+    /// several rows).
+    pub predict_rows: AtomicU64,
+    /// Predict requests bounced with 503 because the bounded queue was full.
+    pub rejected_queue_full: AtomicU64,
+    /// Micro-batches dispatched to an engine.
+    pub batches: AtomicU64,
+    /// Rows across all dispatched micro-batches (occupancy numerator).
+    pub batched_rows: AtomicU64,
+    /// Enqueue→response latency sum/count over completed predict rows.
+    pub latency_ns_sum: AtomicU64,
+    pub latency_count: AtomicU64,
+    /// Why the most recent reload failed, if it did (cleared on success).
+    pub last_reload_error: Mutex<Option<String>>,
+    /// Cross-worker telemetry roll-up, keyed `"layer/role"` (the
+    /// [`Role::id`] suffix — same key shape as the sweep numerics summary).
+    quant: Mutex<BTreeMap<String, QuantAgg>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            predict: EndpointCounters::default(),
+            healthz: EndpointCounters::default(),
+            status: EndpointCounters::default(),
+            reload: EndpointCounters::default(),
+            predict_rows: AtomicU64::new(0),
+            rejected_queue_full: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            latency_ns_sum: AtomicU64::new(0),
+            latency_count: AtomicU64::new(0),
+            last_reload_error: Mutex::new(None),
+            quant: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// One dispatched micro-batch of `rows` rows.
+    pub fn note_batch(&self, rows: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// One completed pending request's enqueue→response latency.
+    pub fn note_latency(&self, lat: Duration) {
+        self.latency_ns_sum
+            .fetch_add(lat.as_nanos() as u64, Ordering::Relaxed);
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn set_reload_error(&self, err: Option<String>) {
+        *self.last_reload_error.lock().unwrap() = err;
+    }
+
+    /// Fold one worker thread's telemetry snapshot into the shared
+    /// roll-up (the worker resets its thread-local counters afterwards,
+    /// so every count lands here exactly once).
+    pub fn merge_quant(&self, snap: &[(String, Role, QuantStats)]) {
+        if snap.is_empty() {
+            return;
+        }
+        let mut m = self.quant.lock().unwrap();
+        for (name, role, s) in snap {
+            let e = m.entry(format!("{name}/{}", role.id())).or_default();
+            e.elems += s.elems;
+            e.saturated += s.saturated;
+            e.underflowed += s.underflowed;
+        }
+    }
+
+    /// Grid totals plus the top-3 keys by saturation rate (then name) —
+    /// the `/admin/status` `telemetry` section, mirroring the sweep
+    /// numerics summary shape.
+    pub fn quant_summary(&self) -> (QuantAgg, Vec<(String, QuantAgg)>) {
+        let m = self.quant.lock().unwrap();
+        let mut total = QuantAgg::default();
+        let mut layers: Vec<(String, QuantAgg)> =
+            m.iter().map(|(k, v)| (k.clone(), *v)).collect();
+        for (_, v) in &layers {
+            total.elems += v.elems;
+            total.saturated += v.saturated;
+            total.underflowed += v.underflowed;
+        }
+        layers.sort_by(|a, b| {
+            rate(b.1.saturated, b.1.elems)
+                .partial_cmp(&rate(a.1.saturated, a.1.elems))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.0.cmp(&b.0))
+        });
+        layers.truncate(3);
+        (total, layers)
+    }
+
+    pub fn errors_total(&self) -> u64 {
+        self.predict.errors.load(Ordering::Relaxed)
+            + self.healthz.errors.load(Ordering::Relaxed)
+            + self.status.errors.load(Ordering::Relaxed)
+            + self.reload.errors.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.latency_count.load(Ordering::Relaxed);
+        if n == 0 {
+            0.0
+        } else {
+            self.latency_ns_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+        }
+    }
+}
+
+pub fn rate(n: u64, d: u64) -> f64 {
+    if d == 0 {
+        0.0
+    } else {
+        n as f64 / d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_rollup_merges_across_workers_and_ranks_by_sat_rate() {
+        let m = Metrics::new();
+        let stats = |elems, saturated, underflowed| QuantStats {
+            elems,
+            saturated,
+            underflowed,
+            ..QuantStats::default()
+        };
+        // Two "workers" report overlapping keys.
+        m.merge_quant(&[
+            ("conv1".into(), Role::Forward, stats(100, 5, 1)),
+            ("fc2".into(), Role::Forward, stats(100, 50, 0)),
+        ]);
+        m.merge_quant(&[("conv1".into(), Role::Forward, stats(100, 5, 1))]);
+        let (total, layers) = m.quant_summary();
+        assert_eq!(total.elems, 300);
+        assert_eq!(total.saturated, 60);
+        assert_eq!(total.underflowed, 2);
+        // fc2 saturates at 50% vs conv1's 5% → ranked first.
+        assert_eq!(layers[0].0, "fc2/fwd");
+        assert_eq!(layers[0].1.saturated, 50);
+        assert_eq!(layers[1].0, "conv1/fwd");
+        assert_eq!(layers[1].1.elems, 200);
+    }
+
+    #[test]
+    fn latency_and_batch_counters_aggregate() {
+        let m = Metrics::new();
+        m.note_batch(3);
+        m.note_batch(1);
+        m.note_latency(Duration::from_micros(100));
+        m.note_latency(Duration::from_micros(300));
+        assert_eq!(m.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(m.batched_rows.load(Ordering::Relaxed), 4);
+        assert!((m.mean_latency_us() - 200.0).abs() < 1e-9);
+    }
+}

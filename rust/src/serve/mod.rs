@@ -1,0 +1,571 @@
+//! `fp8train serve` — a zero-dependency inference daemon over the native
+//! FP8 engine (`docs/serving.md`).
+//!
+//! The north star is serving, and PR 4 already built the serving-shaped
+//! hot path: a checkpoint-restored model does zero per-batch
+//! weight-operand work (quantized pack cache) and its eval forward is
+//! transpose-free. This module wraps that engine in a long-running
+//! daemon on nothing but `std::net`:
+//!
+//! - [`http`] — a minimal hand-rolled HTTP/1.1 front (the workspace has
+//!   zero external crates);
+//! - [`batcher`] — **micro-batching**: queued predict requests coalesce
+//!   into one GEMM batch, dispatched at `--max-batch` rows or when the
+//!   oldest request has waited `--max-wait-us` (the explicit
+//!   latency-vs-throughput lever);
+//! - [`pool`] — N worker threads, each with a private engine restored
+//!   from one shared immutable `Arc<ModelArtifact>`; no locks on the hot
+//!   path beyond the queue handoff;
+//! - [`reload`] — hot checkpoint reload on SIGHUP or
+//!   `POST /admin/reload`: load + validate off the worker threads, swap
+//!   the `Arc` atomically, drain in-flight batches on the old instance;
+//!   failed loads keep the old model serving;
+//! - [`metrics`] — uptime, per-endpoint counters, queue depth, batch
+//!   occupancy, latency aggregates and a cross-worker numerics-telemetry
+//!   roll-up, all on `GET /admin/status`;
+//! - [`bench`] — the `serve-bench` loopback load generator whose
+//!   p50/p95/p99 + throughput summary feeds `bench --json` schema 6.
+//!
+//! Determinism contract: responses are bit-identical regardless of
+//! `--workers`, `--max-batch` or how requests happened to coalesce —
+//! enforced end-to-end by `rust/tests/serve_equivalence.rs`.
+
+pub mod batcher;
+pub mod bench;
+pub mod http;
+pub mod metrics;
+pub mod pool;
+pub mod reload;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::benchcmp::{escape, Json};
+use crate::error::{Context, Result};
+use batcher::{Pending, RowOut};
+use http::{Request, RequestError};
+use metrics::rate;
+use pool::Shared;
+use reload::load_artifact;
+
+/// Daemon configuration (CLI flags map 1:1 — see `fp8train serve` usage).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub checkpoint: String,
+    pub addr: String,
+    pub workers: usize,
+    /// Micro-batch row budget per dispatch.
+    pub max_batch: usize,
+    /// Oldest-request deadline before an under-full batch dispatches.
+    pub max_wait_us: u64,
+    /// Bounded queue capacity in rows; overflow answers 503.
+    pub queue_depth: usize,
+    /// When set, the bound address is written here (atomic rename) —
+    /// scripts use it to discover an ephemeral `--addr host:0` port.
+    pub port_file: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            checkpoint: String::new(),
+            addr: "127.0.0.1:8080".into(),
+            workers: 2,
+            max_batch: 8,
+            max_wait_us: 1000,
+            queue_depth: 256,
+            port_file: None,
+        }
+    }
+}
+
+/// A running daemon: its bound address, the shared state, and every
+/// thread to join on [`shutdown`](Self::shutdown).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shared(&self) -> &Arc<Shared> {
+        &self.shared
+    }
+
+    /// Stop accepting, drain the queue, join every thread. Queued
+    /// requests are answered before workers exit (drain semantics).
+    pub fn shutdown(self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue.notify_all();
+        // Unblock the accept loop: it re-checks the flag per connection.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind, load + validate the checkpoint, spawn the worker pool and the
+/// accept loop. Returns a handle for in-process callers (`serve-bench`,
+/// tests, `bench --json`); the CLI daemon blocks in [`run`] instead.
+pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
+    let art = load_artifact(&cfg.checkpoint, 1)?;
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener
+        .local_addr()
+        .context("read bound listener address")?;
+    if let Some(pf) = &cfg.port_file {
+        let tmp = format!("{pf}.tmp");
+        std::fs::write(&tmp, addr.to_string()).with_context(|| format!("write {tmp}"))?;
+        std::fs::rename(&tmp, pf).with_context(|| format!("publish port file {pf}"))?;
+    }
+    println!(
+        "serve: {} from {} on http://{addr} ({} workers, max-batch {}, max-wait {} µs)",
+        art.model_id, cfg.checkpoint, cfg.workers, cfg.max_batch, cfg.max_wait_us
+    );
+    let shared = Arc::new(Shared::new(cfg, art));
+    let mut threads = pool::spawn_workers(&shared);
+    let acc = Arc::clone(&shared);
+    threads.push(
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, &acc))
+            .expect("spawn accept loop"),
+    );
+    Ok(ServerHandle {
+        addr,
+        shared,
+        threads,
+    })
+}
+
+/// The blocking daemon entry: start, install the SIGHUP hook, serve until
+/// killed. SIGHUP hot-reloads the checkpoint path currently being served
+/// (same file, new bytes — the rolling-deploy idiom).
+pub fn run(cfg: ServeConfig) -> Result<()> {
+    #[cfg(unix)]
+    sighup::install();
+    let handle = start(cfg)?;
+    loop {
+        std::thread::sleep(Duration::from_millis(100));
+        if handle.shared.shutdown.load(Ordering::SeqCst) {
+            handle.shutdown();
+            return Ok(());
+        }
+        #[cfg(unix)]
+        if sighup::take() {
+            let path = handle.shared.artifact().path.clone();
+            match reload_into(&handle.shared, &path) {
+                Ok(generation) => println!("serve: SIGHUP reload ok (generation {generation})"),
+                Err(e) => {
+                    eprintln!("serve: SIGHUP reload failed — still serving the old model: {e:#}");
+                }
+            }
+        }
+    }
+}
+
+/// Load + validate `path` (on the calling thread — never a worker), then
+/// publish it as the next generation. On failure the old artifact keeps
+/// serving and the error is remembered for `/admin/status`.
+fn reload_into(shared: &Shared, path: &str) -> Result<u64> {
+    shared.metrics.reload.hit();
+    let generation = shared.generation.load(Ordering::SeqCst) + 1;
+    match load_artifact(path, generation) {
+        Ok(art) => {
+            shared.install(art);
+            shared.metrics.set_reload_error(None);
+            Ok(generation)
+        }
+        Err(e) => {
+            shared.metrics.reload.err();
+            shared.metrics.set_reload_error(Some(format!("{e:#}")));
+            Err(e)
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let sh = Arc::clone(shared);
+        // One short-lived thread per connection: each connection carries
+        // exactly one request (Connection: close), and predict handlers
+        // block on their batch's response channel.
+        let _ = std::thread::Builder::new()
+            .name("serve-conn".into())
+            .spawn(move || handle_connection(&sh, &stream));
+    }
+}
+
+fn handle_connection(shared: &Shared, stream: &TcpStream) {
+    stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    stream.set_nodelay(true).ok();
+    let req = match http::read_request(stream) {
+        Ok(r) => r,
+        Err(RequestError::Disconnected) => return,
+        Err(RequestError::TooLarge(n)) => {
+            let body = err_body(&format!(
+                "body of {n} bytes exceeds the {} byte limit",
+                http::MAX_BODY
+            ));
+            let _ = http::write_response(stream, 413, &body);
+            return;
+        }
+        Err(RequestError::Bad(m)) => {
+            let _ = http::write_response(stream, 400, &err_body(&m));
+            return;
+        }
+    };
+    let (status, body) = route(shared, &req);
+    let _ = http::write_response(stream, status, &body);
+}
+
+fn err_body(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", escape(msg))
+}
+
+fn route(shared: &Shared, req: &Request) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            shared.metrics.healthz.hit();
+            (200, "{\"ok\":true}".into())
+        }
+        ("GET", "/admin/status") => {
+            shared.metrics.status.hit();
+            (200, status_json(shared))
+        }
+        ("POST", "/admin/reload") => {
+            let path = match reload_target(shared, &req.body) {
+                Ok(p) => p,
+                Err(m) => {
+                    shared.metrics.reload.hit();
+                    shared.metrics.reload.err();
+                    return (400, err_body(&m));
+                }
+            };
+            match reload_into(shared, &path) {
+                Ok(generation) => (
+                    200,
+                    format!(
+                        "{{\"ok\":true,\"generation\":{generation},\"checkpoint\":\"{}\"}}",
+                        escape(&path)
+                    ),
+                ),
+                Err(e) => (
+                    500,
+                    format!("{{\"ok\":false,\"error\":\"{}\"}}", escape(&format!("{e:#}"))),
+                ),
+            }
+        }
+        ("POST", "/v1/predict") => predict(shared, &req.body),
+        ("GET" | "POST", _) => (
+            404,
+            err_body(&format!("no route for {} {}", req.method, req.path)),
+        ),
+        _ => (405, err_body(&format!("method {} not allowed", req.method))),
+    }
+}
+
+/// The reload target: `{"checkpoint": "path"}` in the body, defaulting to
+/// the path currently being served (re-read the same file).
+fn reload_target(shared: &Shared, body: &[u8]) -> std::result::Result<String, String> {
+    if body.is_empty() {
+        return Ok(shared.artifact().path.clone());
+    }
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    match doc.at("checkpoint") {
+        Some(Json::Str(p)) => Ok(p.clone()),
+        Some(_) => Err("\"checkpoint\" must be a string".into()),
+        None => Ok(shared.artifact().path.clone()),
+    }
+}
+
+/// Parse `{"row":[...]}` or `{"rows":[[...],…]}` — every row exactly
+/// `want_len` features (the model's flattened input size).
+fn parse_rows(body: &[u8], want_len: usize) -> std::result::Result<Vec<Vec<f32>>, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("empty body — want {\"row\":[…]} or {\"rows\":[[…],…]}".into());
+    }
+    let doc = Json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let arrs: Vec<&Json> = match (doc.at("rows"), doc.at("row")) {
+        (Some(Json::Arr(rs)), _) => rs.iter().collect(),
+        (None, Some(r @ Json::Arr(_))) => vec![r],
+        _ => return Err("want an object with \"row\" (one example) or \"rows\" (a list)".into()),
+    };
+    if arrs.is_empty() {
+        return Err("\"rows\" is empty".into());
+    }
+    let mut out = Vec::with_capacity(arrs.len());
+    for (i, a) in arrs.iter().enumerate() {
+        let vals = match a {
+            Json::Arr(v) => v,
+            _ => return Err(format!("row {i} is not an array")),
+        };
+        if vals.len() != want_len {
+            return Err(format!(
+                "row {i} has {} features, this model wants {want_len}",
+                vals.len()
+            ));
+        }
+        let mut row = Vec::with_capacity(want_len);
+        for (j, v) in vals.iter().enumerate() {
+            match v.num() {
+                Some(x) => row.push(x as f32),
+                None => return Err(format!("row {i} element {j} is not a number")),
+            }
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+fn predict(shared: &Shared, body: &[u8]) -> (u16, String) {
+    shared.metrics.predict.hit();
+    let art = shared.artifact();
+    let rows = match parse_rows(body, art.in_features) {
+        Ok(r) => r,
+        Err(m) => {
+            shared.metrics.predict.err();
+            return (400, err_body(&m));
+        }
+    };
+    let nrows = rows.len() as u64;
+    let (tx, rx) = mpsc::channel();
+    let pending = Pending {
+        rows,
+        resp: tx,
+        enqueued: Instant::now(),
+    };
+    if shared.queue.push(pending).is_err() {
+        shared.metrics.predict.err();
+        shared
+            .metrics
+            .rejected_queue_full
+            .fetch_add(1, Ordering::Relaxed);
+        return (503, err_body("request queue is full"));
+    }
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(Ok(out)) => {
+            shared
+                .metrics
+                .predict_rows
+                .fetch_add(nrows, Ordering::Relaxed);
+            (200, predict_body(&art.model_id, &out))
+        }
+        Ok(Err(m)) => {
+            shared.metrics.predict.err();
+            (500, err_body(&m))
+        }
+        Err(_) => {
+            shared.metrics.predict.err();
+            (500, err_body("timed out waiting for a worker"))
+        }
+    }
+}
+
+/// Serialize a predict response. Finite logits print via Rust's
+/// shortest-round-trip float `Display`, so `f32 → decimal → f64 → f32`
+/// recovers exact bits (the equivalence test relies on this); non-finite
+/// values serialize as `null`.
+fn predict_body(model_id: &str, rows: &[RowOut]) -> String {
+    let mut out = String::from("{\"model\":\"");
+    out.push_str(&escape(model_id));
+    out.push_str("\",\"predictions\":[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"argmax\":{},\"logits\":[", r.argmax));
+        for (j, v) in r.logits.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            if v.is_finite() {
+                out.push_str(&format!("{v}"));
+            } else {
+                out.push_str("null");
+            }
+        }
+        out.push_str("]}");
+    }
+    out.push_str("]}");
+    out
+}
+
+fn status_json(shared: &Shared) -> String {
+    let art = shared.artifact();
+    let m = &shared.metrics;
+    let (predict_req, predict_err) = m.predict.get();
+    let (healthz_req, _) = m.healthz.get();
+    let (status_req, _) = m.status.get();
+    let (reload_req, reload_err) = m.reload.get();
+    let batches = m.batches.load(Ordering::Relaxed);
+    let batched_rows = m.batched_rows.load(Ordering::Relaxed);
+    let occupancy = if batches == 0 {
+        0.0
+    } else {
+        batched_rows as f64 / (batches as f64 * shared.cfg.max_batch.max(1) as f64)
+    };
+    let last_reload_error = match &*m.last_reload_error.lock().unwrap() {
+        Some(e) => format!("\"{}\"", escape(e)),
+        None => "null".into(),
+    };
+    let (qt, qlayers) = m.quant_summary();
+    let layers_json: Vec<String> = qlayers
+        .iter()
+        .map(|(name, a)| {
+            format!(
+                "{{\"name\":\"{}\",\"elems\":{},\"sat_rate\":{},\"underflow_rate\":{}}}",
+                escape(name),
+                a.elems,
+                rate(a.saturated, a.elems),
+                rate(a.underflowed, a.elems)
+            )
+        })
+        .collect();
+    format!(
+        "{{\"model\":\"{}\",\"spec\":\"{}\",\"policy\":\"{}\",\
+         \"checkpoint\":{{\"path\":\"{}\",\"crc32\":\"{:08x}\",\"bytes\":{},\
+         \"generation\":{},\"trained_steps\":{}}},\
+         \"uptime_ms\":{},\"workers\":{},\"max_batch\":{},\"max_wait_us\":{},\
+         \"input_features\":{},\"classes\":{},\"queue_depth\":{},\
+         \"counters\":{{\"predict\":{{\"requests\":{},\"errors\":{},\"rows\":{},\
+         \"rejected_queue_full\":{}}},\"healthz\":{},\"status\":{},\
+         \"reload\":{{\"requests\":{},\"errors\":{}}}}},\
+         \"errors_total\":{},\
+         \"batches\":{{\"dispatched\":{},\"rows\":{},\"occupancy\":{:.4},\
+         \"mean_latency_us\":{:.3}}},\
+         \"last_reload_error\":{},\
+         \"telemetry\":{{\"elems\":{},\"sat_rate\":{},\"underflow_rate\":{},\
+         \"layers\":[{}]}}}}",
+        escape(&art.model_id),
+        escape(&art.spec.canonical()),
+        escape(&art.policy_name),
+        escape(&art.path),
+        art.crc,
+        art.bytes,
+        art.generation,
+        art.trained_steps,
+        m.started.elapsed().as_millis(),
+        shared.cfg.workers,
+        shared.cfg.max_batch,
+        shared.cfg.max_wait_us,
+        art.in_features,
+        art.classes,
+        shared.queue.depth_rows(),
+        predict_req,
+        predict_err,
+        m.predict_rows.load(Ordering::Relaxed),
+        m.rejected_queue_full.load(Ordering::Relaxed),
+        healthz_req,
+        status_req,
+        reload_req,
+        reload_err,
+        m.errors_total(),
+        batches,
+        batched_rows,
+        occupancy,
+        m.mean_latency_us(),
+        last_reload_error,
+        qt.elems,
+        rate(qt.saturated, qt.elems),
+        rate(qt.underflowed, qt.elems),
+        layers_json.join(",")
+    )
+}
+
+/// SIGHUP → hot reload, with no libc crate: `std` already links libc on
+/// unix, so a one-function `extern` block reaches `signal(2)` directly.
+/// The handler only flips an `AtomicBool` (async-signal-safe); the [`run`]
+/// loop polls and does the actual reload on a normal thread.
+#[cfg(unix)]
+mod sighup {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static HUP: AtomicBool = AtomicBool::new(false);
+    /// POSIX guarantees SIGHUP = 1 on every unix the toolchain targets.
+    const SIGHUP: i32 = 1;
+
+    extern "C" fn on_hup(_sig: i32) {
+        HUP.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGHUP, on_hup);
+        }
+    }
+
+    pub fn take() -> bool {
+        HUP.swap(false, Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rows_accepts_row_and_rows_and_rejects_malformed() {
+        let ok = parse_rows(b"{\"row\":[1,2,3]}", 3).unwrap();
+        assert_eq!(ok, vec![vec![1.0, 2.0, 3.0]]);
+        let ok = parse_rows(b"{\"rows\":[[1,2,3],[4,5,6]]}", 3).unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[1], vec![4.0, 5.0, 6.0]);
+
+        // Wrong arity, bad JSON, wrong shape, empty.
+        assert!(parse_rows(b"{\"row\":[1,2]}", 3).unwrap_err().contains("features"));
+        assert!(parse_rows(b"{\"row\":[1,2,", 3).unwrap_err().contains("bad JSON"));
+        assert!(parse_rows(b"{\"rows\":[]}", 3).unwrap_err().contains("empty"));
+        assert!(parse_rows(b"{\"rows\":[5]}", 3).unwrap_err().contains("not an array"));
+        assert!(parse_rows(b"{}", 3).is_err());
+        assert!(parse_rows(b"", 3).unwrap_err().contains("empty body"));
+        assert!(parse_rows(b"{\"row\":[1,\"x\",3]}", 3)
+            .unwrap_err()
+            .contains("not a number"));
+    }
+
+    #[test]
+    fn predict_body_round_trips_f32_bits_exactly() {
+        let rows = [RowOut {
+            argmax: 2,
+            logits: vec![0.1f32, -3.25e-7, 7.75, f32::NAN],
+        }];
+        let body = predict_body("m", &rows);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.at("model").and_then(Json::str_val), Some("m"));
+        assert_eq!(
+            doc.at("predictions.0.argmax").and_then(Json::num),
+            Some(2.0)
+        );
+        for (j, want) in rows[0].logits.iter().enumerate() {
+            let got = doc.at(&format!("predictions.0.logits.{j}")).unwrap();
+            if want.is_finite() {
+                assert_eq!(
+                    got.num().unwrap() as f32,
+                    *want,
+                    "logit {j} must round-trip exactly"
+                );
+            } else {
+                assert_eq!(got, &Json::Null);
+            }
+        }
+    }
+}

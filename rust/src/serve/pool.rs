@@ -1,0 +1,174 @@
+//! The inference worker pool: N threads, each owning a **private**
+//! [`NativeEngine`] restored from the shared immutable [`ModelArtifact`].
+//! The hot path per batch is: drain the queue (the only lock), one
+//! relaxed generation read, forward, respond — weights are never shared
+//! mutably and never touched by more than its owning thread.
+//!
+//! Hot reload: [`Shared::install`] publishes a new `Arc<ModelArtifact>`
+//! and bumps the generation counter. Each worker notices on its next
+//! batch and rebuilds its engine from the new artifact; batches already
+//! dispatched finish on the old engine (drain semantics), and the old
+//! artifact is freed when the last worker drops its `Arc`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::batcher::{BatchQueue, Pending, RowOut};
+use super::metrics::Metrics;
+use super::reload::{build_engine, ModelArtifact};
+use super::ServeConfig;
+use crate::coordinator::NativeEngine;
+use crate::tensor::Tensor;
+
+/// Everything the accept loop, connection threads and workers share.
+pub struct Shared {
+    pub cfg: ServeConfig,
+    pub queue: BatchQueue,
+    /// The current model generation. Swapped atomically under the mutex;
+    /// readers clone the `Arc` and drop the lock immediately.
+    current: Mutex<Arc<ModelArtifact>>,
+    pub generation: AtomicU64,
+    pub shutdown: AtomicBool,
+    pub metrics: Metrics,
+}
+
+impl Shared {
+    pub fn new(cfg: ServeConfig, art: ModelArtifact) -> Self {
+        Self {
+            queue: BatchQueue::new(cfg.queue_depth),
+            generation: AtomicU64::new(art.generation),
+            current: Mutex::new(Arc::new(art)),
+            shutdown: AtomicBool::new(false),
+            metrics: Metrics::new(),
+            cfg,
+        }
+    }
+
+    /// The serving artifact right now (a cheap Arc clone).
+    pub fn artifact(&self) -> Arc<ModelArtifact> {
+        self.current.lock().unwrap().clone()
+    }
+
+    /// Atomically publish a new model generation. Workers pick it up
+    /// before their next batch; in-flight batches drain on the engine
+    /// they started with.
+    pub fn install(&self, art: ModelArtifact) {
+        let generation = art.generation;
+        *self.current.lock().unwrap() = Arc::new(art);
+        self.generation.store(generation, Ordering::SeqCst);
+    }
+}
+
+pub fn spawn_workers(shared: &Arc<Shared>) -> Vec<JoinHandle<()>> {
+    (0..shared.cfg.workers.max(1))
+        .map(|i| {
+            let sh = Arc::clone(shared);
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn serve worker")
+        })
+        .collect()
+}
+
+fn worker_loop(shared: &Shared) {
+    let max_wait = Duration::from_micros(shared.cfg.max_wait_us);
+    // (generation, engine, artifact) — rebuilt lazily when the shared
+    // generation moves past ours.
+    let mut engine: Option<(u64, NativeEngine, Arc<ModelArtifact>)> = None;
+    while let Some(batch) =
+        shared
+            .queue
+            .next_batch(shared.cfg.max_batch, max_wait, &shared.shutdown)
+    {
+        if batch.is_empty() {
+            continue;
+        }
+        let want = shared.generation.load(Ordering::Relaxed);
+        if engine.as_ref().map(|(g, ..)| *g) != Some(want) {
+            let art = shared.artifact();
+            match build_engine(&art) {
+                Ok(e) => engine = Some((art.generation, e, art)),
+                Err(err) => {
+                    // Should be unreachable — artifacts are validated
+                    // before install — but a worker must never die with
+                    // requests in hand.
+                    let msg = format!("engine rebuild failed: {err:#}");
+                    for p in batch {
+                        let _ = p.resp.send(Err(msg.clone()));
+                    }
+                    engine = None;
+                    continue;
+                }
+            }
+        }
+        let (_, eng, art) = engine.as_mut().expect("engine built above");
+        run_batch(shared, eng, art, batch);
+        // Numerics telemetry is thread-local: fold this worker's counters
+        // into the shared roll-up so /admin/status sees all workers.
+        if crate::telemetry::enabled() {
+            shared.metrics.merge_quant(&crate::telemetry::snapshot());
+            crate::telemetry::reset();
+        }
+    }
+}
+
+/// One micro-batch: concatenate every pending's rows into a single
+/// `[n, features]` (or NCHW) tensor, run one forward, then split the
+/// logits back out per pending in queue order.
+fn run_batch(shared: &Shared, engine: &mut NativeEngine, art: &ModelArtifact, batch: Vec<Pending>) {
+    let n: usize = batch.iter().map(Pending::nrows).sum();
+    let mut data = Vec::with_capacity(n * art.in_features);
+    for p in &batch {
+        for row in &p.rows {
+            data.extend_from_slice(row);
+        }
+    }
+    let x = Tensor::from_vec(&art.spec.input().shape(n), data);
+    let logits = engine.predict_logits(x);
+    shared.metrics.note_batch(n as u64);
+    let mut offset = 0usize;
+    for p in batch {
+        let out: Vec<RowOut> = (0..p.nrows())
+            .map(|i| {
+                let row = &logits.data[(offset + i) * art.classes..(offset + i + 1) * art.classes];
+                RowOut {
+                    argmax: argmax(row),
+                    logits: row.to_vec(),
+                }
+            })
+            .collect();
+        offset += p.nrows();
+        shared.metrics.note_latency(p.enqueued.elapsed());
+        let _ = p.resp.send(Ok(out));
+    }
+}
+
+/// Total-order argmax (first index wins ties): `f32::total_cmp` makes the
+/// result deterministic for every input, NaNs included.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_is_total_and_first_wins_ties() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[0.5, 0.5, 0.5]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+        // NaN sits above +inf in the total order — still deterministic.
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Checkpoint → servable model artifact. Loading and **validating** a new
+//! `.fp8ck` happens on the reloading connection thread (or the SIGHUP
+//! poll loop) — never on a worker — and only a fully validated artifact
+//! is swapped in ([`crate::serve::pool::Shared::install`]). A failed load
+//! keeps the old generation serving and surfaces the error on
+//! `/admin/status` (`docs/serving.md`, reload lifecycle).
+
+use crate::coordinator::NativeEngine;
+use crate::error::{Context, Result};
+use crate::nn::{ModelSpec, PrecisionPolicy};
+use crate::state::{container, StateMap};
+
+/// Everything the worker pool shares immutably for one model generation.
+/// Workers hold it behind an `Arc`: a reload publishes a new artifact and
+/// in-flight batches drain on the old one (their clone keeps it alive).
+pub struct ModelArtifact {
+    pub spec: ModelSpec,
+    pub policy_name: String,
+    pub seed: u64,
+    /// Checkpoint provenance, reported verbatim on `/admin/status`.
+    pub path: String,
+    pub crc: u32,
+    pub bytes: usize,
+    pub trained_steps: u64,
+    /// Monotonic reload counter (1 = the boot checkpoint).
+    pub generation: u64,
+    /// Flattened per-example feature count (`spec.input().shape(1)`) —
+    /// the predict-row length contract.
+    pub in_features: usize,
+    pub classes: usize,
+    pub model_id: String,
+    /// The decoded checkpoint, kept so each worker can restore its own
+    /// private engine from shared immutable state.
+    pub state: StateMap,
+}
+
+/// Read + decode + validate a checkpoint into a servable artifact.
+/// Validation builds a throwaway engine and restores every `model.*`
+/// entry — presence, kind and shape checks all run here, so a bad file
+/// is rejected *before* any swap.
+pub fn load_artifact(path: &str, generation: u64) -> Result<ModelArtifact> {
+    let bytes = std::fs::read(path).with_context(|| format!("read checkpoint {path}"))?;
+    let crc = container::crc32(&bytes);
+    let state =
+        StateMap::from_bytes(&bytes).with_context(|| format!("decode checkpoint {path}"))?;
+    let model = state
+        .get_str("meta.model")
+        .with_context(|| format!("checkpoint {path} has no meta.model"))?
+        .to_string();
+    let spec = ModelSpec::resolve(&model)
+        .with_context(|| format!("checkpoint names unknown model {model:?}"))?;
+    let policy_name = state
+        .get_str("meta.policy")
+        .with_context(|| format!("checkpoint {path} has no meta.policy"))?
+        .to_string();
+    PrecisionPolicy::parse(&policy_name)
+        .with_context(|| format!("checkpoint names unknown policy {policy_name:?}"))?;
+    let seed = state.get_u64("meta.seed").unwrap_or(0);
+    let trained_steps = state.get_u64("train.next_step").unwrap_or(0);
+    let in_features: usize = spec.input().shape(1).iter().product();
+    let art = ModelArtifact {
+        model_id: spec.id(),
+        classes: spec.classes(),
+        in_features,
+        spec,
+        policy_name,
+        seed,
+        path: path.to_string(),
+        crc,
+        bytes: bytes.len(),
+        trained_steps,
+        generation,
+        state,
+    };
+    build_engine(&art).with_context(|| format!("validate checkpoint {path}"))?;
+    Ok(art)
+}
+
+/// Build one worker's private inference engine from the shared artifact.
+/// Weights restore straight into the `[out, in]` packed-operand layout the
+/// GEMM kernels read transpose-free (`cmd_eval` is the same path), and the
+/// quantized pack cache makes per-batch weight-operand work zero.
+pub fn build_engine(art: &ModelArtifact) -> Result<NativeEngine> {
+    let policy = PrecisionPolicy::parse(&art.policy_name)
+        .with_context(|| format!("unknown policy {:?}", art.policy_name))?;
+    let mut engine = NativeEngine::new(&art.spec, policy, art.seed);
+    engine
+        .load_model_state(&art.state)
+        .with_context(|| format!("restore model state from {}", art.path))?;
+    Ok(engine)
+}

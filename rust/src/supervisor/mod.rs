@@ -105,6 +105,30 @@ fn backoff_delay(backoff_ms: u64, no_progress: usize) -> Duration {
     Duration::from_millis(backoff_ms.saturating_mul(1u64 << exp))
 }
 
+/// The supervisor's CPU budget: an explicit `FP8TRAIN_THREADS` in the
+/// environment wins (that is the operator capping the whole sweep),
+/// otherwise the machine's available parallelism, falling back to 1.
+fn thread_budget() -> usize {
+    std::env::var("FP8TRAIN_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+        })
+}
+
+/// Per-child GEMM thread count: the budget split evenly across the worker
+/// slots, never below 1. With N single-cell children running concurrently,
+/// each inheriting the parent's full thread count would oversubscribe the
+/// machine N× — the supervisor instead hands every child an explicit
+/// `FP8TRAIN_THREADS = max(1, budget / workers)`.
+fn worker_threads(budget: usize, workers: usize) -> usize {
+    (budget / workers.max(1)).max(1)
+}
+
 /// The cell checkpoint's `train.next_step`, or 0 when there is no readable
 /// checkpoint (missing and corrupt both read as "no progress recorded").
 fn ck_next_step(ck: &str) -> u64 {
@@ -164,6 +188,12 @@ fn spawn_worker(exe: &str, cell: &Cell, mut task: Task, opts: &RunOpts) -> Resul
     // Attempt gating for deterministic fault injection: FP8TRAIN_FAULT is
     // inherited, FP8TRAIN_ATTEMPT selects which attempt it arms on.
     cmd.env("FP8TRAIN_ATTEMPT", task.attempts.to_string());
+    // CPU budgeting: split the parent's thread budget across the worker
+    // slots so N concurrent children don't oversubscribe the machine.
+    cmd.env(
+        "FP8TRAIN_THREADS",
+        worker_threads(thread_budget(), opts.workers).to_string(),
+    );
     let mut child = cmd
         .spawn()
         .with_context(|| format!("spawn sweep worker {exe:?}"))?;
@@ -551,5 +581,14 @@ mod tests {
     #[test]
     fn missing_checkpoint_reads_as_zero_progress() {
         assert_eq!(ck_next_step("/nonexistent/dir/none.fp8ck"), 0);
+    }
+
+    #[test]
+    fn worker_threads_splits_the_budget_and_never_starves() {
+        assert_eq!(worker_threads(8, 4), 2);
+        assert_eq!(worker_threads(8, 3), 2); // floor division
+        assert_eq!(worker_threads(2, 8), 1); // more workers than cores
+        assert_eq!(worker_threads(0, 4), 1); // degenerate budget
+        assert_eq!(worker_threads(8, 0), 8); // workers clamped to 1
     }
 }

@@ -968,6 +968,138 @@ pub fn diff(a_path: &str, b_path: &str) -> Result<()> {
     Ok(())
 }
 
+/// `fp8train sweep render ARTIFACT [--csv] [--out PATH]` — turn a sweep
+/// artifact into a report: the grid with final/best error per cell,
+/// diverged cells annotated with the divergence step and the top
+/// saturating layer from the record's schema-3 `numerics` summary.
+/// Markdown by default, `--csv` for a flat table; `--out PATH` writes a
+/// file instead of stdout.
+pub fn render(path: &str, csv: bool, out: Option<&str>) -> Result<()> {
+    ensure!(
+        std::path::Path::new(path).exists(),
+        "no sweep artifact at {path}"
+    );
+    let records = load_artifact(path)?;
+    let report = render_report(path, &records, csv);
+    match out {
+        Some(p) => {
+            std::fs::write(p, &report).with_context(|| format!("write {p}"))?;
+            println!("wrote {p} ({} cells)", records.len());
+        }
+        None => print!("{report}"),
+    }
+    Ok(())
+}
+
+/// The divergence / failure annotation for one record: empty for healthy
+/// cells, `diverged at step N; top saturating layer L (R% sat)` for
+/// diverged ones (the layer from the record's `numerics` summary), the
+/// stored error message for `failed`/`timeout`.
+fn render_note(rec: &Json) -> String {
+    match rec.at("status").and_then(Json::str_val) {
+        Some("diverged") => {
+            let at = rec
+                .at("diverged_at")
+                .and_then(Json::num)
+                .map_or_else(|| "?".to_string(), |x| format!("{}", x as u64));
+            match (
+                rec.at("numerics.layers.0.name").and_then(Json::str_val),
+                rec.at("numerics.layers.0.sat_rate").and_then(Json::num),
+            ) {
+                (Some(layer), Some(rate)) => format!(
+                    "diverged at step {at}; top saturating layer {layer} ({:.2}% sat)",
+                    rate * 100.0
+                ),
+                _ => format!("diverged at step {at}"),
+            }
+        }
+        Some("failed" | "timeout") => {
+            let mut e = rec
+                .at("error")
+                .and_then(Json::str_val)
+                .unwrap_or("")
+                .to_string();
+            if e.len() > 80 {
+                e.truncate(77);
+                e.push_str("...");
+            }
+            e
+        }
+        _ => String::new(),
+    }
+}
+
+/// The report body — a pure function of the loaded records (BTreeMap ⇒
+/// cell-id order ⇒ byte-stable output, which the golden test pins).
+pub(crate) fn render_report(path: &str, records: &BTreeMap<String, Json>, csv: bool) -> String {
+    let s = |rec: &Json, key: &str| {
+        rec.at(key)
+            .and_then(Json::str_val)
+            .unwrap_or("-")
+            .to_string()
+    };
+    let fmt3 = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.3}"));
+    let fmt0 = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.0}"));
+    if csv {
+        let mut out = String::from(
+            "id,model,fmt,round,pos,opt,chunk,status,steps_done,\
+             final_test_err,best_test_err,wall_ms,note\n",
+        );
+        for (id, rec) in records {
+            let note = render_note(rec).replace('"', "\"\"");
+            out.push_str(&format!(
+                "{id},{},{},{},{},{},{},{},{},{},{},\"{note}\"\n",
+                s(rec, "model"),
+                s(rec, "fmt"),
+                s(rec, "round"),
+                s(rec, "pos"),
+                s(rec, "opt"),
+                fmt0(rec.at("chunk").and_then(Json::num)),
+                s(rec, "status"),
+                fmt0(rec.at("steps_done").and_then(Json::num)),
+                fmt3(rec.at("final_test_err").and_then(Json::num)),
+                fmt3(rec.at("best_test_err").and_then(Json::num)),
+                fmt0(rec.at("wall_ms").and_then(Json::num)),
+            ));
+        }
+        return out;
+    }
+    let mut out = format!(
+        "# Sweep report: {path}\n\n{} cells (artifact schema {SCHEMA}).\n\n\
+         | model | fmt | round | pos | opt | chunk | status | final err % | best err % | wall ms | notes |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
+        records.len()
+    );
+    let (mut done, mut diverged, mut failed, mut timeout) = (0usize, 0usize, 0usize, 0usize);
+    for rec in records.values() {
+        match rec.at("status").and_then(Json::str_val) {
+            Some("done") => done += 1,
+            Some("diverged") => diverged += 1,
+            Some("failed") => failed += 1,
+            Some("timeout") => timeout += 1,
+            _ => {}
+        }
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            s(rec, "model"),
+            s(rec, "fmt"),
+            s(rec, "round"),
+            s(rec, "pos"),
+            s(rec, "opt"),
+            fmt0(rec.at("chunk").and_then(Json::num)),
+            s(rec, "status"),
+            fmt3(rec.at("final_test_err").and_then(Json::num)),
+            fmt3(rec.at("best_test_err").and_then(Json::num)),
+            fmt0(rec.at("wall_ms").and_then(Json::num)),
+            render_note(rec).replace('|', "\\|"),
+        ));
+    }
+    out.push_str(&format!(
+        "\n**Summary:** {done} done, {diverged} diverged, {failed} failed, {timeout} timed out.\n"
+    ));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -979,6 +1111,58 @@ mod tests {
         def.batch = 4;
         def.seed = 9;
         def
+    }
+
+    #[test]
+    fn render_report_markdown_and_csv_are_golden() {
+        let rec_done = Json::parse(
+            r#"{"id":"a","model":"mnist_dnn","fmt":"fp8_paper","round":"default",
+                "pos":"auto","opt":"sgd","chunk":64,"steps":100,"batch":32,"seed":7,
+                "status":"done","steps_done":100,"wall_ms":1234,
+                "final_train_loss":0.5,"final_test_loss":0.6,
+                "final_test_err":2.375,"best_test_err":2.25,
+                "diverged_at":null,"error":null,"numerics":null}"#,
+        )
+        .unwrap();
+        let rec_div = Json::parse(
+            r#"{"id":"b","model":"mnist_dnn","fmt":"e4m3","round":"default",
+                "pos":"auto","opt":"sgd","chunk":64,"steps":100,"batch":32,"seed":7,
+                "status":"diverged","steps_done":40,"wall_ms":500,
+                "final_train_loss":null,"final_test_loss":null,
+                "final_test_err":null,"best_test_err":31,
+                "diverged_at":40,"error":null,
+                "numerics":{"first_nonfinite_step":38,"elems":1000,
+                            "sat_rate":0.01,"underflow_rate":0.0,
+                            "layers":[{"name":"fc1/grad","elems":500,
+                                       "sat_rate":0.2125,"underflow_rate":0.0}]}}"#,
+        )
+        .unwrap();
+        let mut records = BTreeMap::new();
+        records.insert("a".to_string(), rec_done);
+        records.insert("b".to_string(), rec_div);
+
+        let md = render_report("SWEEP.json", &records, false);
+        let want = "\
+# Sweep report: SWEEP.json
+
+2 cells (artifact schema 3).
+
+| model | fmt | round | pos | opt | chunk | status | final err % | best err % | wall ms | notes |
+|---|---|---|---|---|---|---|---|---|---|---|
+| mnist_dnn | fp8_paper | default | auto | sgd | 64 | done | 2.375 | 2.250 | 1234 |  |
+| mnist_dnn | e4m3 | default | auto | sgd | 64 | diverged | - | 31.000 | 500 | diverged at step 40; top saturating layer fc1/grad (21.25% sat) |
+
+**Summary:** 1 done, 1 diverged, 0 failed, 0 timed out.
+";
+        assert_eq!(md, want);
+
+        let csv = render_report("SWEEP.json", &records, true);
+        let want_csv = "\
+id,model,fmt,round,pos,opt,chunk,status,steps_done,final_test_err,best_test_err,wall_ms,note
+a,mnist_dnn,fp8_paper,default,auto,sgd,64,done,100,2.375,2.250,1234,\"\"
+b,mnist_dnn,e4m3,default,auto,sgd,64,diverged,40,-,31.000,500,\"diverged at step 40; top saturating layer fc1/grad (21.25% sat)\"
+";
+        assert_eq!(csv, want_csv);
     }
 
     #[test]

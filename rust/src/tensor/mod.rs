@@ -70,7 +70,7 @@ impl PackedCell {
 }
 
 // Global counters for the quantized-pack cache (reported by
-// `fp8train bench --json` schema 5): how often a GEMM asked for a
+// `fp8train bench --json` schema 6): how often a GEMM asked for a
 // quantized weight operand, how many pack materializations that cost, and
 // how many of those had to run a full quantize pass (a transposed pack
 // built from a live same-version quantized pack re-packs without
@@ -592,7 +592,15 @@ pub fn im2col_q(x: &Tensor, g: &Conv2dGeom, quant: Option<NeQuantizer>) -> Tenso
     // it); the conv layer recycles the patch matrix when its step ends.
     let mut out = Tensor::zeros_pooled(&[n * oh * ow, cols]);
     let src = &x.data;
+    // Telemetry for the fused pass: stash each patch row's original bits
+    // and feed (orig, quantized) to the recorder once per row, exactly
+    // like `quantize_batch` does per chunk. `None` (and a zero-length
+    // stash) unless a layer/role scope is active; padding stashes bit
+    // pattern 0, which the recorder skips as a zero.
+    let mut rec = quant.and_then(|q| crate::telemetry::quant_recorder(q.fmt()));
+    let mut orig = vec![0u32; if rec.is_some() { cols } else { 0 }];
     crate::perf::timed(crate::perf::Phase::Pack, || {
+        let stash = !orig.is_empty();
         for img in 0..n {
             for oy in 0..oh {
                 for ox in 0..ow {
@@ -604,6 +612,9 @@ pub fn im2col_q(x: &Tensor, g: &Conv2dGeom, quant: Option<NeQuantizer>) -> Tenso
                             let iy = (oy * g.stride + ky) as isize - g.pad as isize;
                             if iy < 0 || iy >= h as isize {
                                 // whole kernel row out of bounds → zeros
+                                if stash {
+                                    orig[idx - row..idx - row + g.k].fill(0);
+                                }
                                 idx += g.k;
                                 continue;
                             }
@@ -623,21 +634,32 @@ pub fn im2col_q(x: &Tensor, g: &Conv2dGeom, quant: Option<NeQuantizer>) -> Tenso
                                 Some(q) => {
                                     for kx in 0..g.k {
                                         let ix = (ox * g.stride + kx) as isize - g.pad as isize;
-                                        out.data[idx] = if ix < 0 || ix >= w as isize {
-                                            0.0
+                                        let (b, v) = if ix < 0 || ix >= w as isize {
+                                            (0, 0.0)
                                         } else {
-                                            q.quantize(src[src_row + ix as usize])
+                                            let s = src[src_row + ix as usize];
+                                            (s.to_bits(), q.quantize(s))
                                         };
+                                        if stash {
+                                            orig[idx - row] = b;
+                                        }
+                                        out.data[idx] = v;
                                         idx += 1;
                                     }
                                 }
                             }
                         }
                     }
+                    if let Some(r) = rec.as_mut() {
+                        r.record(&orig, &out.data[row..row + cols]);
+                    }
                 }
             }
         }
     });
+    if let Some(r) = rec {
+        r.commit();
+    }
     out
 }
 

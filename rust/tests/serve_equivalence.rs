@@ -1,0 +1,284 @@
+//! The serving determinism contract (acceptance criterion of the serve
+//! subsystem, `docs/serving.md`): daemon predictions are **bit-identical**
+//! to single-example forwards on a local engine, regardless of
+//! `--workers`, `--max-batch`, or how concurrent requests happened to
+//! coalesce into micro-batches. Also covered here: hot reload under load
+//! (no request dropped, every response attributable to exactly one of the
+//! two models) and the malformed-request surface (400/404/405/413).
+//!
+//! Bit-identity holds because the worker's batched forward runs the same
+//! eval quantization context as a single-row forward, eval BatchNorm
+//! reads running statistics, and every GEMM output element has a fixed
+//! summation order — so row `i` of a coalesced batch equals the same row
+//! forwarded alone. Logits survive the JSON hop exactly: Rust's float
+//! `Display` is shortest-round-trip, so `f32 → decimal → f64 → f32`
+//! recovers the bits.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use fp8train::benchcmp::Json;
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
+use fp8train::serve::bench::synthetic_row;
+use fp8train::serve::{self, http, ServeConfig};
+use fp8train::state::StateMap;
+use fp8train::tensor::Tensor;
+
+const SPEC: &str = "in(6)-fc(8)-relu-fc(3)";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "fp8train_serve_eq_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Train a small engine for `steps` and save a serve-loadable checkpoint.
+fn make_checkpoint(spec: &ModelSpec, steps: u64, path: &Path) {
+    let mut engine = NativeEngine::new(spec, PrecisionPolicy::fp8_paper(), 7);
+    let ds = SyntheticDataset::for_model(spec, 7).with_sizes(64, 32);
+    for step in 0..steps {
+        let batch = ds.train_batch(step as usize % 8, 8);
+        engine.train_step(&batch, 0.02, step);
+    }
+    let mut map = StateMap::new();
+    engine.save_state(&mut map);
+    map.put_str("meta.model", &spec.id());
+    map.put_str("meta.policy", "fp8_paper");
+    map.put_u64("meta.seed", 7);
+    map.save_file(path).unwrap();
+}
+
+/// The local reference: restore from the checkpoint file exactly the way
+/// a serve worker does.
+fn load_engine(path: &Path, spec: &ModelSpec) -> NativeEngine {
+    let map = StateMap::load_file(path).unwrap();
+    let mut engine = NativeEngine::new(spec, PrecisionPolicy::fp8_paper(), 7);
+    engine.load_model_state(&map).unwrap();
+    engine
+}
+
+fn reference_bits(engine: &mut NativeEngine, spec: &ModelSpec, row: &[f32]) -> Vec<u32> {
+    let x = Tensor::from_vec(&spec.input().shape(1), row.to_vec());
+    engine
+        .predict_logits(x)
+        .data
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+fn body_for(row: &[f32]) -> String {
+    let mut s = String::from("{\"row\":[");
+    for (i, v) in row.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// First prediction's logits as raw f32 bit patterns.
+fn logits_bits(body: &str) -> Vec<u32> {
+    let doc = Json::parse(body).unwrap_or_else(|e| panic!("bad predict body {body}: {e}"));
+    let mut out = Vec::new();
+    let mut j = 0;
+    while let Some(v) = doc.at(&format!("predictions.0.logits.{j}")) {
+        out.push((v.num().expect("finite logit") as f32).to_bits());
+        j += 1;
+    }
+    assert!(!out.is_empty(), "no logits in {body}");
+    out
+}
+
+fn start_daemon(ck: &Path, workers: usize, max_batch: usize, max_wait_us: u64) -> serve::ServerHandle {
+    serve::start(ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers,
+        max_batch,
+        max_wait_us,
+        ..ServeConfig::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn predictions_are_bit_identical_across_workers_and_batching() {
+    let dir = tmp_dir("bitid");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 5, &ck);
+    let mut reference = load_engine(&ck, &spec);
+
+    let rows: Vec<Vec<f32>> = (0..10).map(|i| synthetic_row(6, i as u64)).collect();
+    let want: Vec<Vec<u32>> = rows
+        .iter()
+        .map(|r| reference_bits(&mut reference, &spec, r))
+        .collect();
+
+    // A long max-wait forces coalescing when max_batch > 1; a single
+    // worker with batch 1 is the degenerate control. All three configs
+    // must produce the same bits as the single-row reference forwards.
+    for (workers, max_batch) in [(1usize, 1usize), (2, 4), (4, 3)] {
+        let handle = start_daemon(&ck, workers, max_batch, 2000);
+        let addr = handle.addr.to_string();
+        let clients: Vec<_> = rows
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(|(i, row)| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let (code, body) = http::request(&addr, "POST", "/v1/predict", &body_for(&row))
+                        .unwrap_or_else(|e| panic!("request {i}: {e:#}"));
+                    (i, code, body)
+                })
+            })
+            .collect();
+        for h in clients {
+            let (i, code, body) = h.join().unwrap();
+            assert_eq!(code, 200, "row {i}: {body}");
+            assert_eq!(
+                logits_bits(&body),
+                want[i],
+                "row {i} drifted under workers={workers} max_batch={max_batch}"
+            );
+        }
+        handle.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hot_reload_under_load_drops_nothing_and_swaps_atomically() {
+    let dir = tmp_dir("reload");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    let ck_a = dir.join("a.fp8ck");
+    let ck_b = dir.join("b.fp8ck");
+    make_checkpoint(&spec, 3, &ck_a);
+    make_checkpoint(&spec, 9, &ck_b);
+    let row = synthetic_row(6, 1);
+    let want_a = reference_bits(&mut load_engine(&ck_a, &spec), &spec, &row);
+    let want_b = reference_bits(&mut load_engine(&ck_b, &spec), &spec, &row);
+    assert_ne!(want_a, want_b, "the two checkpoints must actually differ");
+
+    let handle = start_daemon(&ck_a, 2, 4, 200);
+    let addr = handle.addr.to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            let body = body_for(&row);
+            let (want_a, want_b) = (want_a.clone(), want_b.clone());
+            std::thread::spawn(move || {
+                let mut n = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body).unwrap();
+                    assert_eq!(code, 200, "{resp}");
+                    let got = logits_bits(&resp);
+                    // Every in-flight request drains on exactly one model —
+                    // never a torn mixture, never an error.
+                    assert!(got == want_a || got == want_b, "matches neither model");
+                    n += 1;
+                }
+                n
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(50));
+    let (code, resp) = http::request(
+        &addr,
+        "POST",
+        "/admin/reload",
+        &format!("{{\"checkpoint\":\"{}\"}}", ck_b.display()),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "reload failed: {resp}");
+    std::thread::sleep(Duration::from_millis(50));
+    stop.store(true, Ordering::SeqCst);
+    let answered: usize = clients.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(answered > 0, "the load generator never got a response in");
+
+    // Post-swap: every new prediction is model B's, status shows the new
+    // checkpoint and generation.
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(logits_bits(&resp), want_b, "post-reload prediction is not model B");
+    let (code, status) = http::request(&addr, "GET", "/admin/status", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(status.contains("b.fp8ck"), "{status}");
+    assert!(status.contains("\"generation\":2"), "{status}");
+
+    // A failed reload keeps the old model serving and surfaces the error.
+    let (code, resp) = http::request(
+        &addr,
+        "POST",
+        "/admin/reload",
+        "{\"checkpoint\":\"/nonexistent/x.fp8ck\"}",
+    )
+    .unwrap();
+    assert_eq!(code, 500, "{resp}");
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(logits_bits(&resp), want_b, "failed reload must keep the old model");
+    let (_, status) = http::request(&addr, "GET", "/admin/status", "").unwrap();
+    assert!(status.contains("\"last_reload_error\":\""), "{status}");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_requests_are_rejected_without_harming_the_daemon() {
+    let dir = tmp_dir("malformed");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 2, &ck);
+    let handle = start_daemon(&ck, 1, 2, 200);
+    let addr = handle.addr.to_string();
+
+    let (code, body) = http::request(&addr, "POST", "/v1/predict", "{\"row\":[1,2").unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("error"), "{body}");
+    let (code, body) = http::request(&addr, "POST", "/v1/predict", "{\"row\":[1,2]}").unwrap();
+    assert_eq!(code, 400, "wrong arity must be 400: {body}");
+    let (code, _) = http::request(&addr, "POST", "/v1/predict", "").unwrap();
+    assert_eq!(code, 400, "empty body must be 400");
+    let (code, _) = http::request(&addr, "GET", "/nope", "").unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = http::request(&addr, "DELETE", "/healthz", "").unwrap();
+    assert_eq!(code, 405);
+
+    // Oversized body: the server answers 413 before reading the payload
+    // and closes. Depending on timing the client either reads the 413 or
+    // hits the closed socket mid-upload — both are a rejection.
+    let big = format!("{{\"row\":[{}]}}", vec!["1"; 600_000].join(","));
+    assert!(big.len() > http::MAX_BODY);
+    match http::request(&addr, "POST", "/v1/predict", &big) {
+        Ok((code, body)) => assert_eq!(code, 413, "{body}"),
+        Err(_) => {}
+    }
+
+    // The daemon shrugged all of it off.
+    let (code, body) = http::request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("true"), "{body}");
+    let row = synthetic_row(6, 0);
+    let (code, body) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"argmax\""), "{body}");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

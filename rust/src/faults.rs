@@ -8,7 +8,7 @@
 //!
 //! ```text
 //! FP8TRAIN_FAULT = <kind>@<step>[@<attempt>][#<cell-substr>]
-//! kind := exit | abort | stall | nan
+//! kind := exit | abort | stall | nan | slowconn | wedge | badck
 //! ```
 //!
 //! - `exit@k` — the process calls `std::process::exit(3)` immediately
@@ -21,6 +21,21 @@
 //!   step `k` onwards (synthetic numerical divergence, for the
 //!   divergence guard — the process itself stays healthy).
 //!
+//! The remaining three kinds are **serve-scoped** (`rust/src/serve/`,
+//! `docs/serving.md`): the trainer ignores them, and `step` counts
+//! *occurrences* of the faulted operation instead of training steps:
+//!
+//! - `slowconn@k` — the k-th HTTP request issued by this process's
+//!   loopback client (`serve-bench`) dribbles its bytes slowly, so the
+//!   daemon's per-phase read deadlines shed it (a deterministic
+//!   slow-loris client).
+//! - `wedge@k` — the serve worker that claims the k-th dispatched
+//!   micro-batch hangs forever mid-batch (exercises the admission
+//!   watchdog: restart the worker, requeue its rows).
+//! - `badck@k` — the k-th serve checkpoint load/validation fails
+//!   artificially (exercises failed-reload keep-old and `--watch`
+//!   quarantine without needing a corrupt file on disk).
+//!
 //! The optional `@attempt` gates the fault on the `FP8TRAIN_ATTEMPT`
 //! environment variable (set by the sweep supervisor on every child it
 //! spawns; absent means attempt 0), so an injected crash fires on the
@@ -32,6 +47,8 @@
 //! The spec is parsed once and threaded through [`crate::train::TrainConfig`],
 //! so firing is a deterministic function of `(spec, step, attempt, cell)` —
 //! never of wall-clock time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Context, Result};
 use crate::{bail, ensure};
@@ -47,6 +64,12 @@ pub enum FaultKind {
     Stall,
     /// Overwrite the training loss with NaN from the trigger step on.
     Nan,
+    /// Serve-scoped: the k-th loopback client request dribbles slowly.
+    SlowConn,
+    /// Serve-scoped: the worker claiming the k-th micro-batch hangs.
+    Wedge,
+    /// Serve-scoped: the k-th checkpoint load/validation fails.
+    BadCk,
 }
 
 impl FaultKind {
@@ -56,7 +79,12 @@ impl FaultKind {
             "abort" => FaultKind::Abort,
             "stall" => FaultKind::Stall,
             "nan" => FaultKind::Nan,
-            other => bail!("unknown fault kind {other:?} (exit|abort|stall|nan)"),
+            "slowconn" => FaultKind::SlowConn,
+            "wedge" => FaultKind::Wedge,
+            "badck" => FaultKind::BadCk,
+            other => bail!(
+                "unknown fault kind {other:?} (exit|abort|stall|nan|slowconn|wedge|badck)"
+            ),
         })
     }
 
@@ -66,7 +94,20 @@ impl FaultKind {
             FaultKind::Abort => "abort",
             FaultKind::Stall => "stall",
             FaultKind::Nan => "nan",
+            FaultKind::SlowConn => "slowconn",
+            FaultKind::Wedge => "wedge",
+            FaultKind::BadCk => "badck",
         }
+    }
+
+    /// Serve-scoped kinds fire inside the serving daemon's operations
+    /// (connection reads, batch dispatch, checkpoint loads) — the trainer
+    /// and sweep supervisor ignore them entirely.
+    pub fn is_serve_scoped(self) -> bool {
+        matches!(
+            self,
+            FaultKind::SlowConn | FaultKind::Wedge | FaultKind::BadCk
+        )
     }
 }
 
@@ -151,7 +192,8 @@ impl FaultSpec {
 
     /// Execute a crash-class fault (`exit`/`abort`/`stall`). The trainer
     /// calls this at the top of the step loop when `step == self.step`;
-    /// `nan` perturbs the loss instead of the process and is a no-op here.
+    /// `nan` perturbs the loss instead of the process, and the
+    /// serve-scoped kinds fire inside the daemon — both are no-ops here.
     pub fn fire_process_fault(&self) {
         match self.kind {
             FaultKind::Exit => {
@@ -168,8 +210,42 @@ impl FaultSpec {
                     std::thread::sleep(std::time::Duration::from_millis(200));
                 }
             }
-            FaultKind::Nan => {}
+            FaultKind::Nan | FaultKind::SlowConn | FaultKind::Wedge | FaultKind::BadCk => {}
         }
+    }
+}
+
+/// An armed serve-scoped fault: the spec plus an occurrence counter. The
+/// daemon holds one arm per injection point (connection, batch dispatch,
+/// checkpoint load) and asks [`fires`](Self::fires) at each occurrence —
+/// the k-th ask (1-based, `k == spec.step`) answers `true` exactly once,
+/// so firing is a deterministic function of the operation sequence, never
+/// of wall-clock time.
+#[derive(Debug)]
+pub struct FaultArm {
+    spec: FaultSpec,
+    count: AtomicU64,
+}
+
+impl FaultArm {
+    /// Arm `spec` if it is of `kind`; `None` otherwise (so call sites can
+    /// write `FaultArm::for_kind(specs, FaultKind::Wedge)`).
+    pub fn for_kind(specs: &[FaultSpec], kind: FaultKind) -> Option<Self> {
+        specs.iter().find(|s| s.kind == kind).map(|s| FaultArm {
+            spec: s.clone(),
+            count: AtomicU64::new(0),
+        })
+    }
+
+    /// Count one occurrence; `true` exactly on the k-th (k = the spec's
+    /// `step` field, 1-based).
+    pub fn fires(&self) -> bool {
+        let n = self.count.fetch_add(1, Ordering::SeqCst) + 1;
+        n == self.spec.step as u64
+    }
+
+    pub fn kind(&self) -> FaultKind {
+        self.spec.kind
     }
 }
 
@@ -206,16 +282,38 @@ mod tests {
 
     #[test]
     fn all_kinds_parse() {
-        for (name, kind) in [
-            ("exit", FaultKind::Exit),
-            ("abort", FaultKind::Abort),
-            ("stall", FaultKind::Stall),
-            ("nan", FaultKind::Nan),
+        for (name, kind, serve_scoped) in [
+            ("exit", FaultKind::Exit, false),
+            ("abort", FaultKind::Abort, false),
+            ("stall", FaultKind::Stall, false),
+            ("nan", FaultKind::Nan, false),
+            ("slowconn", FaultKind::SlowConn, true),
+            ("wedge", FaultKind::Wedge, true),
+            ("badck", FaultKind::BadCk, true),
         ] {
             let f = FaultSpec::parse(&format!("{name}@3")).unwrap();
             assert_eq!(f.kind, kind);
             assert_eq!(f.kind.name(), name);
+            assert_eq!(f.kind.is_serve_scoped(), serve_scoped);
         }
+    }
+
+    #[test]
+    fn fault_arm_fires_exactly_on_kth_occurrence() {
+        let specs = vec![
+            FaultSpec::parse("wedge@3").unwrap(),
+            FaultSpec::parse("badck@1").unwrap(),
+        ];
+        let arm = FaultArm::for_kind(&specs, FaultKind::Wedge).unwrap();
+        assert_eq!(arm.kind(), FaultKind::Wedge);
+        let hits: Vec<bool> = (0..5).map(|_| arm.fires()).collect();
+        assert_eq!(hits, [false, false, true, false, false]);
+
+        let first = FaultArm::for_kind(&specs, FaultKind::BadCk).unwrap();
+        assert!(first.fires());
+        assert!(!first.fires());
+
+        assert!(FaultArm::for_kind(&specs, FaultKind::SlowConn).is_none());
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! fp8train eval --checkpoint PATH [--batch N]
 //! fp8train serve --checkpoint PATH [--addr HOST:PORT] [--workers N]
 //!                [--max-batch B] [--max-wait-us D] [--queue-depth Q]
-//!                [--port-file PATH]
+//!                [--port-file PATH] [--max-requests-per-conn N]
+//!                [--idle-timeout-ms D] [--io-timeout-ms D] [--max-conns N]
+//!                [--drain-timeout-ms D] [--watchdog-ms D]
+//!                [--watch DIR] [--watch-interval-ms D]
 //! fp8train serve-bench [--addr HOST:PORT | --checkpoint PATH] [--clients N]
 //!                      [--requests N] [--rows N] [--smoke]
 //! fp8train checkpoint inspect <path.fp8ck>
@@ -75,19 +78,29 @@ USAGE:
       model is reconstructed from the spec embedded in the checkpoint)
   fp8train serve --checkpoint PATH [--addr HOST:PORT] [--workers N]
                  [--max-batch B] [--max-wait-us D] [--queue-depth Q]
-                 [--port-file PATH]
+                 [--port-file PATH] [--max-requests-per-conn N]
+                 [--idle-timeout-ms D] [--io-timeout-ms D] [--max-conns N]
+                 [--drain-timeout-ms D] [--watchdog-ms D]
+                 [--watch DIR] [--watch-interval-ms D]
       zero-dependency inference daemon (docs/serving.md): micro-batched
-      POST /v1/predict (JSON rows in, logits/argmax out), GET /healthz,
-      GET /admin/status, hot checkpoint reload on SIGHUP or
-      POST /admin/reload. --addr with port 0 picks an ephemeral port;
-      --port-file publishes the bound address for scripts. Responses are
-      bit-identical regardless of --workers/--max-batch.
+      POST /v1/predict (JSON rows in, logits/argmax out) over keep-alive
+      HTTP/1.1, GET /healthz, GET /admin/status, hot checkpoint reload on
+      SIGHUP or POST /admin/reload, graceful drain on SIGTERM or
+      POST /admin/drain (bounded by --drain-timeout-ms), --watch DIR
+      auto-discovers renamed-in .fp8ck checkpoints. Slow/overload clients
+      are shed (408/503 + Retry-After); --max-conns caps live connections;
+      an admission watchdog (--watchdog-ms) replaces wedged workers
+      without dropping queued rows. --addr with port 0 picks an ephemeral
+      port; --port-file publishes the bound address for scripts.
+      Responses are bit-identical regardless of --workers/--max-batch.
   fp8train serve-bench [--addr HOST:PORT | --checkpoint PATH] [--clients N]
                        [--requests N] [--rows N] [--smoke]
-      loopback load generator for the daemon: p50/p95/p99 latency, req/s
-      and micro-batch occupancy. --checkpoint spins an in-process daemon
-      on an ephemeral port; --smoke uses the small CI budget. Exits
-      non-zero if any request fails.
+      loopback load generator for the daemon (keep-alive clients):
+      p50/p95/p99 latency, req/s, micro-batch occupancy, plus shed counts
+      and the largest Retry-After hint observed. --checkpoint spins an
+      in-process daemon on an ephemeral port; --smoke uses the small CI
+      budget. Exits non-zero if any request hard-fails (sheds don't
+      count).
   fp8train checkpoint inspect <path.fp8ck>
       validate a checkpoint (magic, version, every CRC) and list its chunks
   fp8train sweep <template|preset> [--formats L] [--rounds L] [--pos L] [--opts L]
@@ -126,7 +139,7 @@ USAGE:
       telemetry overhead (counters on vs off), supervisor counters,
       checkpoint encode/decode throughput, and serve daemon latency
       percentiles + throughput over loopback; --json writes a
-      machine-readable report (schema 6, default BENCH_GEMM.json);
+      machine-readable report (schema 7, default BENCH_GEMM.json);
       --compare diffs against an older report and exits non-zero on a >10%
       regression
   fp8train bench compare <old.json> <new.json>
@@ -499,8 +512,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
 /// `fp8train serve --checkpoint PATH …` — the long-running zero-dependency
 /// inference daemon (`rust/src/serve/`, `docs/serving.md`): micro-batched
 /// `POST /v1/predict`, `GET /healthz`, `GET /admin/status`, hot checkpoint
-/// reload on SIGHUP or `POST /admin/reload`. Blocks until killed.
+/// reload on SIGHUP or `POST /admin/reload`, graceful drain on SIGTERM or
+/// `POST /admin/drain`, `--watch` checkpoint auto-discovery. Blocks until
+/// killed or drained.
 fn cmd_serve(args: &Args) -> Result<()> {
+    use fp8train::faults::FaultSpec;
     use fp8train::serve::{self, ServeConfig};
     args.check_known(&[
         "checkpoint",
@@ -510,8 +526,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "max-wait-us",
         "queue-depth",
         "port-file",
+        "max-requests-per-conn",
+        "idle-timeout-ms",
+        "io-timeout-ms",
+        "max-conns",
+        "drain-timeout-ms",
+        "watchdog-ms",
+        "watch",
+        "watch-interval-ms",
     ])?;
     let d = ServeConfig::default();
+    // Serve-scoped FP8TRAIN_FAULT kinds arm the daemon's injection points
+    // (docs/robustness.md); trainer-scoped kinds are ignored here just as
+    // the trainer ignores the serve-scoped ones.
+    let faults: Vec<FaultSpec> = FaultSpec::from_env()?
+        .into_iter()
+        .filter(|f| f.kind.is_serve_scoped())
+        .collect();
     let cfg = ServeConfig {
         checkpoint: args
             .opt("checkpoint")
@@ -523,6 +554,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait_us: args.opt_u64("max-wait-us", d.max_wait_us)?,
         queue_depth: args.opt_usize("queue-depth", d.queue_depth)?.max(1),
         port_file: args.opt("port-file").map(str::to_string),
+        max_requests_per_conn: args
+            .opt_usize("max-requests-per-conn", d.max_requests_per_conn)?,
+        idle_timeout_ms: args.opt_u64("idle-timeout-ms", d.idle_timeout_ms)?.max(1),
+        io_timeout_ms: args.opt_u64("io-timeout-ms", d.io_timeout_ms)?.max(1),
+        max_conns: args.opt_usize("max-conns", d.max_conns)?.max(1),
+        drain_timeout_ms: args.opt_u64("drain-timeout-ms", d.drain_timeout_ms)?.max(1),
+        watchdog_ms: args.opt_u64("watchdog-ms", d.watchdog_ms)?.max(1),
+        watch: args.opt("watch").map(str::to_string),
+        watch_interval_ms: args
+            .opt_u64("watch-interval-ms", d.watch_interval_ms)?
+            .max(10),
+        faults,
     };
     serve::run(cfg)
 }
@@ -705,7 +748,7 @@ const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
 /// native train step with per-phase timing (quantize/pack/gemm/update),
 /// scratch-arena and quantized-pack cache reuse rates, checkpoint
 /// encode/decode throughput, and the serving daemon's latency/throughput
-/// SLO, optionally as a JSON report (schema 6) so the perf trajectory
+/// SLO, optionally as a JSON report (schema 7) so the perf trajectory
 /// stays machine-readable across PRs. `--compare` diffs
 /// the fresh numbers against a previous report and **exits non-zero on a
 /// >10% regression** of any shared throughput metric. Pin
@@ -901,9 +944,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     // Serving SLO: spin the zero-dependency daemon on an ephemeral loopback
     // port against a checkpoint of the bench model and drive it with the
-    // in-process serve-bench client. p50/p99 latency, requests/s and
-    // micro-batch occupancy join the perf trajectory as the schema-6
-    // `serve` section (`docs/serving.md`).
+    // in-process serve-bench client. p50/p99 latency, requests/s,
+    // micro-batch occupancy and the resilience counters (sheds, worker
+    // restarts, keep-alive connects) join the perf trajectory as the
+    // schema-7 `serve` section (`docs/serving.md`).
     let fast = std::env::var("FP8TRAIN_BENCH_FAST").is_ok();
     let serve_dir =
         std::env::temp_dir().join(format!("fp8train_bench_serve_{}", std::process::id()));
@@ -945,7 +989,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     let doc = format!(
-        "{{\"schema\":6,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
+        "{{\"schema\":7,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
          \"scratch\":{},\"phases\":{},\"wcache\":{},\"telemetry\":{},\"supervisor\":{},\
          \"checkpoint\":{},\"serve\":{}}}\n",
         num_threads(),

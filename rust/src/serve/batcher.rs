@@ -151,6 +151,20 @@ impl BatchQueue {
         }
     }
 
+    /// Put reclaimed pendings back at the **front** of the queue in their
+    /// original order (the watchdog's wedged-worker path). Capacity is
+    /// deliberately not re-checked: these rows were admitted once and
+    /// must not be dropped — and their original `enqueued` stamps make
+    /// them dispatch-ready immediately.
+    pub fn requeue(&self, batch: Vec<Pending>) {
+        let mut q = self.inner.lock().unwrap();
+        for p in batch.into_iter().rev() {
+            q.push_front(p);
+        }
+        drop(q);
+        self.cv.notify_all();
+    }
+
     /// Wake every blocked worker (shutdown path).
     pub fn notify_all(&self) {
         self.cv.notify_all();
@@ -217,6 +231,20 @@ mod tests {
             .expect("queued rows must drain");
         assert_eq!(batch.iter().map(Pending::nrows).sum::<usize>(), 4);
         assert!(bq.next_batch(8, Duration::from_secs(10), &shutdown).is_none());
+    }
+
+    #[test]
+    fn requeue_goes_to_the_front_ignoring_capacity() {
+        let bq = BatchQueue::new(4);
+        bq.push(pending(3)).unwrap();
+        // Reclaimed rows go back even though 3 + 2 exceeds the bound…
+        bq.requeue(vec![pending(1), pending(1)]);
+        assert_eq!(bq.depth_rows(), 5);
+        // …and come out first, in their original order.
+        let shutdown = AtomicBool::new(true);
+        let batch = bq.next_batch(2, Duration::from_secs(10), &shutdown).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch.iter().map(Pending::nrows).sum::<usize>(), 2);
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! `fp8train serve-bench` — loopback load generator for the daemon.
 //! In-process client threads (no network dependency beyond loopback, so
-//! it runs in CI) hammer `/v1/predict` with deterministic synthetic rows
-//! and report p50/p95/p99 latency, requests/s and the achieved
-//! micro-batch occupancy (from the `/admin/status` counters before vs
-//! after). `fp8train bench --json` embeds the same summary as the
-//! schema-6 `serve` section so the serving SLO joins the CI perf
+//! it runs in CI) hammer `/v1/predict` over **keep-alive** connections
+//! with deterministic synthetic rows and report p50/p95/p99 latency,
+//! requests/s, the achieved micro-batch occupancy, and the resilience
+//! picture: client-observed 503 sheds with the largest `Retry-After`
+//! hint, TCP connects (keep-alive reuse makes this ≈ the client count),
+//! and the daemon-side shed/restart counter deltas from `/admin/status`
+//! before vs after. `fp8train bench --json` embeds the same summary as
+//! the schema-7 `serve` section so the serving SLO joins the CI perf
 //! trajectory (`docs/serving.md`).
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::http;
 use crate::benchcmp::Json;
 use crate::error::{Context, Result};
+use crate::faults::{FaultArm, FaultKind, FaultSpec};
 use crate::{bail, ensure};
 
 #[derive(Clone, Debug)]
@@ -25,6 +30,14 @@ pub struct BenchOpts {
 pub struct BenchSummary {
     pub requests: usize,
     pub errors: usize,
+    /// Requests answered 503 (queue full / draining / conn cap) — load
+    /// shedding, counted apart from hard errors.
+    pub shed: usize,
+    /// Largest `Retry-After` hint observed on a shed response.
+    pub retry_after_max: u64,
+    /// TCP connections opened across all clients — keep-alive reuse
+    /// makes this ≈ the client count instead of the request count.
+    pub connects: u64,
     pub wall: Duration,
     pub mean_us: f64,
     pub p50_us: f64,
@@ -36,16 +49,26 @@ pub struct BenchSummary {
     /// `rows / (batches · max_batch)` over the bench window — 1.0 means
     /// every dispatched batch was full.
     pub occupancy: f64,
+    /// Daemon-side counter deltas over the bench window (from
+    /// `/admin/status` before vs after).
+    pub daemon_shed_slow: u64,
+    pub daemon_shed_max_conns: u64,
+    pub daemon_worker_restarts: u64,
 }
 
 impl BenchSummary {
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"requests\":{},\"errors\":{},\"wall_ms\":{:.3},\"mean_us\":{:.3},\
+            "{{\"requests\":{},\"errors\":{},\"shed\":{},\"retry_after_max\":{},\
+             \"connects\":{},\"wall_ms\":{:.3},\"mean_us\":{:.3},\
              \"p50_us\":{:.3},\"p95_us\":{:.3},\"p99_us\":{:.3},\"requests_per_sec\":{:.3},\
-             \"batches\":{},\"batched_rows\":{},\"occupancy\":{:.4}}}",
+             \"batches\":{},\"batched_rows\":{},\"occupancy\":{:.4},\
+             \"shed_slow\":{},\"shed_max_conns\":{},\"worker_restarts\":{}}}",
             self.requests,
             self.errors,
+            self.shed,
+            self.retry_after_max,
+            self.connects,
             self.wall.as_secs_f64() * 1e3,
             self.mean_us,
             self.p50_us,
@@ -54,15 +77,19 @@ impl BenchSummary {
             self.requests_per_sec,
             self.batches,
             self.batched_rows,
-            self.occupancy
+            self.occupancy,
+            self.daemon_shed_slow,
+            self.daemon_shed_max_conns,
+            self.daemon_worker_restarts
         )
     }
 
     pub fn print(&self) {
         println!(
-            "serve-bench: {} requests ({} errors) in {:.1} ms — {:.0} req/s",
+            "serve-bench: {} requests ({} errors, {} shed) in {:.1} ms — {:.0} req/s",
             self.requests,
             self.errors,
+            self.shed,
             self.wall.as_secs_f64() * 1e3,
             self.requests_per_sec
         );
@@ -75,6 +102,14 @@ impl BenchSummary {
             self.batches,
             self.batched_rows,
             self.occupancy * 100.0
+        );
+        println!(
+            "  resilience: {} connects, max Retry-After {} s, daemon sheds slow/conns {}/{}, {} worker restarts",
+            self.connects,
+            self.retry_after_max,
+            self.daemon_shed_slow,
+            self.daemon_shed_max_conns,
+            self.daemon_worker_restarts
         );
     }
 }
@@ -123,6 +158,9 @@ struct StatusSample {
     rows: u64,
     input_features: usize,
     max_batch: usize,
+    shed_slow: u64,
+    shed_max_conns: u64,
+    worker_restarts: u64,
 }
 
 fn sample_status(addr: &str) -> Result<StatusSample> {
@@ -139,22 +177,70 @@ fn sample_status(addr: &str) -> Result<StatusSample> {
         input_features: num("input_features")
             .context("/admin/status has no input_features")? as usize,
         max_batch: num("max_batch").unwrap_or(1.0) as usize,
+        shed_slow: num("resilience.shed_slow").unwrap_or(0.0) as u64,
+        shed_max_conns: num("resilience.shed_max_conns").unwrap_or(0.0) as u64,
+        worker_restarts: num("resilience.worker_restarts").unwrap_or(0.0) as u64,
     })
 }
 
-fn client_loop(addr: &str, requests: usize, body: &str) -> (Vec<u64>, usize) {
-    let mut lat_ns = Vec::with_capacity(requests);
-    let mut errors = 0usize;
+/// One client's tallies; latencies only cover 200s.
+struct ClientTally {
+    lat_ns: Vec<u64>,
+    errors: usize,
+    shed: usize,
+    retry_after_max: u64,
+    connects: u64,
+}
+
+fn client_loop(
+    addr: &str,
+    requests: usize,
+    body: &str,
+    slowconn: Option<Arc<FaultArm>>,
+) -> ClientTally {
+    let mut t = ClientTally {
+        lat_ns: Vec::with_capacity(requests),
+        errors: 0,
+        shed: 0,
+        retry_after_max: 0,
+        connects: 0,
+    };
+    let mut client = http::Client::new(addr);
     for _ in 0..requests {
-        let t0 = Instant::now();
-        match http::request(addr, "POST", "/v1/predict", body) {
-            Ok((200, resp)) if resp.contains("\"argmax\"") => {
-                lat_ns.push(t0.elapsed().as_nanos() as u64);
+        // The slowconn fault arm turns the k-th request (across all
+        // clients) into a deterministic slow-loris dribble; the daemon
+        // shedding it (408 or a hard close) counts as a shed, not an
+        // error, so the bench gate still passes under injection.
+        if slowconn.as_ref().is_some_and(|a| a.fires()) {
+            match http::request_slow(
+                addr,
+                "POST",
+                "/v1/predict",
+                body,
+                2,
+                Duration::from_millis(100),
+            ) {
+                Ok(_) => t.shed += 1,
+                Err(_) => t.errors += 1,
             }
-            _ => errors += 1,
+            continue;
+        }
+        let t0 = Instant::now();
+        match client.request("POST", "/v1/predict", body) {
+            Ok(resp) if resp.status == 200 && resp.body.contains("\"argmax\"") => {
+                t.lat_ns.push(t0.elapsed().as_nanos() as u64);
+            }
+            Ok(resp) if resp.status == 503 => {
+                t.shed += 1;
+                if let Some(ra) = resp.retry_after {
+                    t.retry_after_max = t.retry_after_max.max(ra);
+                }
+            }
+            _ => t.errors += 1,
         }
     }
-    (lat_ns, errors)
+    t.connects = client.connects();
+    t
 }
 
 /// Drive the daemon at `opts.addr` and aggregate the percentile summary.
@@ -163,22 +249,37 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
     let clients = opts.clients.max(1);
     let per_client = opts.requests_per_client.max(1);
     let rows_per = opts.rows_per_request.max(1);
+    // One shared slowconn arm across all client threads: the k-th request
+    // issued by this process dribbles (FP8TRAIN_FAULT=slowconn@k).
+    let slowconn: Option<Arc<FaultArm>> = FaultSpec::from_env()
+        .ok()
+        .flatten()
+        .filter(|f| f.kind == FaultKind::SlowConn)
+        .and_then(|f| FaultArm::for_kind(&[f], FaultKind::SlowConn))
+        .map(Arc::new);
     let started = Instant::now();
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let addr = opts.addr.clone();
+            let arm = slowconn.clone();
             // Distinct salt per client so concurrent batches mix rows.
             let body = predict_body(rows_per, before.input_features, c as u64 * 1009);
-            std::thread::spawn(move || client_loop(&addr, per_client, &body))
+            std::thread::spawn(move || client_loop(&addr, per_client, &body, arm))
         })
         .collect();
     let mut lat_ns: Vec<u64> = Vec::new();
     let mut errors = 0usize;
+    let mut shed = 0usize;
+    let mut retry_after_max = 0u64;
+    let mut connects = 0u64;
     for h in handles {
         match h.join() {
-            Ok((mut l, e)) => {
-                lat_ns.append(&mut l);
-                errors += e;
+            Ok(mut t) => {
+                lat_ns.append(&mut t.lat_ns);
+                errors += t.errors;
+                shed += t.shed;
+                retry_after_max = retry_after_max.max(t.retry_after_max);
+                connects += t.connects;
             }
             // A panicked client: all of its requests count as failed.
             Err(_) => errors += per_client,
@@ -208,8 +309,11 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
         batched_rows as f64 / (batches as f64 * after.max_batch.max(1) as f64)
     };
     Ok(BenchSummary {
-        requests: lat_ns.len() + errors,
+        requests: lat_ns.len() + errors + shed,
         errors,
+        shed,
+        retry_after_max,
+        connects,
         wall,
         mean_us,
         p50_us: pct(0.50),
@@ -219,6 +323,9 @@ pub fn run(opts: &BenchOpts) -> Result<BenchSummary> {
         batches,
         batched_rows,
         occupancy,
+        daemon_shed_slow: after.shed_slow.saturating_sub(before.shed_slow),
+        daemon_shed_max_conns: after.shed_max_conns.saturating_sub(before.shed_max_conns),
+        daemon_worker_restarts: after.worker_restarts.saturating_sub(before.worker_restarts),
     })
 }
 

@@ -1,15 +1,22 @@
 //! Minimal HTTP/1.1 on `std::net` — the workspace carries zero external
 //! crates, so the daemon speaks just enough of the protocol for its own
 //! endpoints: request-line + headers + `Content-Length` body in, one
-//! `Connection: close` response out. No chunked encoding, no keep-alive,
-//! no TLS — `docs/serving.md` documents the contract.
+//! framed response out. Since the resilience PR the connection is
+//! **keep-alive by default** (RFC 9112 semantics: persistent unless
+//! either side says `Connection: close`), and every read is bounded by
+//! a per-phase deadline so a slow-loris client is shed instead of
+//! pinning a listener thread. No chunked encoding, no TLS —
+//! `docs/serving.md` documents the contract.
 //!
 //! The same module provides the loopback client side used by
-//! `fp8train serve-bench`, the CI smoke and `tests/serve_equivalence.rs`.
+//! `fp8train serve-bench`, the CI smoke and the serve test suites:
+//! [`Client`] holds one persistent connection and frames responses by
+//! `Content-Length` (never read-to-EOF), and [`request_slow`] is the
+//! deterministic slow-loris used by the `slowconn` fault arm.
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Context, Result};
 
@@ -17,61 +24,212 @@ use crate::error::{Context, Result};
 /// the payload (a predict row is a few KB of JSON; 1 MiB is generous).
 pub const MAX_BODY: usize = 1 << 20;
 
-/// One parsed request: method + path + raw body bytes.
+/// A single request-line or header line longer than this is malformed.
+const MAX_LINE: usize = 8 << 10;
+
+/// One parsed request: method + path + raw body bytes, plus whether the
+/// client asked to tear the connection down after this exchange.
 pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    /// Client sent `Connection: close` — answer, then close.
+    pub close: bool,
 }
 
 /// Why a request could not be parsed. `TooLarge` maps to `413`, `Bad` to
-/// `400`; `Disconnected` (peer closed before a request line) is dropped
-/// silently — health probes routinely do this.
+/// `400`, `SlowTimeout` to `408` (the slow-loris shed); `Disconnected`
+/// (peer closed before a request line) and `IdleTimeout` (keep-alive
+/// connection sat silent past its idle budget) are dropped silently —
+/// health probes and idle clients routinely do both.
 pub enum RequestError {
     TooLarge(usize),
     Bad(String),
     Disconnected,
+    IdleTimeout,
+    /// First byte arrived but the rest dribbled in past the i/o budget;
+    /// the payload names the phase that starved (`"headers"`/`"body"`).
+    SlowTimeout(&'static str),
 }
 
-/// Read one request off the stream. `Content-Length` is the only body
-/// framing the server accepts (no `Transfer-Encoding`), matched
-/// case-insensitively per RFC 9112.
-pub fn read_request(stream: &TcpStream) -> std::result::Result<Request, RequestError> {
-    let mut r = BufReader::new(stream);
-    let mut line = String::new();
-    match r.read_line(&mut line) {
-        Ok(0) => return Err(RequestError::Disconnected),
-        Ok(_) => {}
-        Err(e) => return Err(RequestError::Bad(format!("read request line: {e}"))),
+/// Per-request read budgets. `idle` bounds how long a (keep-alive)
+/// connection may sit silent before the next request's first byte;
+/// `io` bounds the whole request — request line, headers, body — once
+/// that first byte arrives. The deadline is absolute: re-arming the
+/// socket timeout with the *remaining* budget before every read means a
+/// client dribbling one byte per poll cannot extend it.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadBudget {
+    pub idle: Duration,
+    pub io: Duration,
+}
+
+impl Default for ReadBudget {
+    fn default() -> Self {
+        ReadBudget {
+            idle: Duration::from_millis(10_000),
+            io: Duration::from_millis(5_000),
+        }
     }
+}
+
+enum Fill {
+    Data,
+    Eof,
+    TimedOut,
+}
+
+enum LineOutcome {
+    Line(String),
+    Eof,
+    TimedOut,
+}
+
+/// A hand-rolled buffered reader whose every refill is bounded by an
+/// absolute deadline (std's `BufReader` can't do this: one `read_line`
+/// against a socket timeout resets the clock on every byte received).
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    buf: [u8; 4096],
+    pos: usize,
+    len: usize,
+}
+
+impl<'a> DeadlineReader<'a> {
+    fn new(stream: &'a TcpStream) -> Self {
+        DeadlineReader { stream, buf: [0; 4096], pos: 0, len: 0 }
+    }
+
+    /// Ensure at least one buffered byte, waiting no later than
+    /// `deadline` for the socket.
+    fn fill(&mut self, deadline: Instant) -> std::io::Result<Fill> {
+        if self.pos < self.len {
+            return Ok(Fill::Data);
+        }
+        let now = Instant::now();
+        if now >= deadline {
+            return Ok(Fill::TimedOut);
+        }
+        self.stream.set_read_timeout(Some(deadline - now)).ok();
+        let mut s = self.stream;
+        match s.read(&mut self.buf) {
+            Ok(0) => Ok(Fill::Eof),
+            Ok(n) => {
+                self.pos = 0;
+                self.len = n;
+                Ok(Fill::Data)
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                Ok(Fill::TimedOut)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Read one `\n`-terminated line (CR stripped) before `deadline`.
+    fn read_line(&mut self, deadline: Instant) -> std::io::Result<LineOutcome> {
+        let mut out = Vec::new();
+        loop {
+            match self.fill(deadline)? {
+                Fill::Eof => return Ok(LineOutcome::Eof),
+                Fill::TimedOut => return Ok(LineOutcome::TimedOut),
+                Fill::Data => {}
+            }
+            while self.pos < self.len {
+                let b = self.buf[self.pos];
+                self.pos += 1;
+                if b == b'\n' {
+                    if out.last() == Some(&b'\r') {
+                        out.pop();
+                    }
+                    return Ok(LineOutcome::Line(String::from_utf8_lossy(&out).into_owned()));
+                }
+                out.push(b);
+                if out.len() > MAX_LINE {
+                    return Err(std::io::Error::new(
+                        ErrorKind::InvalidData,
+                        format!("line exceeds {MAX_LINE} bytes"),
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Fill `out` exactly before `deadline`; `Fill::Data` on success.
+    fn read_exact(&mut self, out: &mut [u8], deadline: Instant) -> std::io::Result<Fill> {
+        let mut got = 0;
+        while got < out.len() {
+            match self.fill(deadline)? {
+                Fill::Eof => return Ok(Fill::Eof),
+                Fill::TimedOut => return Ok(Fill::TimedOut),
+                Fill::Data => {}
+            }
+            let n = (self.len - self.pos).min(out.len() - got);
+            out[got..got + n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            got += n;
+        }
+        Ok(Fill::Data)
+    }
+}
+
+/// Read one request off the stream under `budget`. `Content-Length` is
+/// the only body framing the server accepts (no `Transfer-Encoding`),
+/// matched case-insensitively per RFC 9112.
+pub fn read_request(
+    stream: &TcpStream,
+    budget: &ReadBudget,
+) -> std::result::Result<Request, RequestError> {
+    let mut r = DeadlineReader::new(stream);
+    // Phase 1 — idle: wait for the first byte of the next request.
+    match r.fill(Instant::now() + budget.idle) {
+        Ok(Fill::Data) => {}
+        Ok(Fill::Eof) => return Err(RequestError::Disconnected),
+        Ok(Fill::TimedOut) => return Err(RequestError::IdleTimeout),
+        Err(e) => return Err(RequestError::Bad(format!("read request: {e}"))),
+    }
+    // Phase 2 — the whole request must land within the i/o budget.
+    let deadline = Instant::now() + budget.io;
+    let line = match r.read_line(deadline) {
+        Ok(LineOutcome::Line(l)) => l,
+        Ok(LineOutcome::Eof) => {
+            return Err(RequestError::Bad("connection closed mid-request-line".into()))
+        }
+        Ok(LineOutcome::TimedOut) => return Err(RequestError::SlowTimeout("headers")),
+        Err(e) => return Err(RequestError::Bad(format!("read request line: {e}"))),
+    };
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
     let path = parts.next().unwrap_or("").to_string();
     let version = parts.next().unwrap_or("");
     if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1") {
-        return Err(RequestError::Bad(format!(
-            "malformed request line {:?}",
-            line.trim_end()
-        )));
+        return Err(RequestError::Bad(format!("malformed request line {line:?}")));
     }
     let mut content_length = 0usize;
+    let mut close = false;
     loop {
-        let mut h = String::new();
-        match r.read_line(&mut h) {
-            Ok(0) => return Err(RequestError::Bad("connection closed mid-headers".into())),
-            Ok(_) => {}
+        let h = match r.read_line(deadline) {
+            Ok(LineOutcome::Line(l)) => l,
+            Ok(LineOutcome::Eof) => {
+                return Err(RequestError::Bad("connection closed mid-headers".into()))
+            }
+            Ok(LineOutcome::TimedOut) => return Err(RequestError::SlowTimeout("headers")),
             Err(e) => return Err(RequestError::Bad(format!("read header: {e}"))),
-        }
-        let h = h.trim_end();
+        };
         if h.is_empty() {
             break;
         }
         if let Some((k, v)) = h.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
                 content_length = v
                     .trim()
                     .parse()
                     .map_err(|_| RequestError::Bad(format!("bad Content-Length {:?}", v.trim())))?;
+            } else if k.eq_ignore_ascii_case("connection")
+                && v.to_ascii_lowercase().contains("close")
+            {
+                close = true;
             }
         }
     }
@@ -79,19 +237,52 @@ pub fn read_request(stream: &TcpStream) -> std::result::Result<Request, RequestE
         return Err(RequestError::TooLarge(content_length));
     }
     let mut body = vec![0u8; content_length];
-    r.read_exact(&mut body)
-        .map_err(|e| RequestError::Bad(format!("read body: {e}")))?;
-    Ok(Request { method, path, body })
+    match r.read_exact(&mut body, deadline) {
+        Ok(Fill::Data) => {}
+        Ok(Fill::Eof) => return Err(RequestError::Bad("connection closed mid-body".into())),
+        Ok(Fill::TimedOut) => return Err(RequestError::SlowTimeout("body")),
+        Err(e) => return Err(RequestError::Bad(format!("read body: {e}"))),
+    }
+    Ok(Request { method, path, body, close })
 }
 
-/// Write one complete response and signal close. Always JSON — every
-/// endpoint (including errors) answers with a JSON body.
+/// Response options: connection persistence and the overload retry hint.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RespOpts {
+    /// Emit `Connection: keep-alive` and leave the stream open.
+    pub keep_alive: bool,
+    /// `Retry-After: N` (seconds) — attached to shedding 503s so clients
+    /// back off proportionally to observed batch latency.
+    pub retry_after: Option<u64>,
+}
+
+/// Write one complete response with `Connection: close` (the one-shot
+/// form kept for error paths and simple callers).
 pub fn write_response(stream: &TcpStream, status: u16, body: &str) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    write_response_opts(stream, status, body, RespOpts::default())
+}
+
+/// Write one complete response. Always JSON — every endpoint (including
+/// errors) answers with a JSON body.
+pub fn write_response_opts(
+    stream: &TcpStream,
+    status: u16,
+    body: &str,
+    opts: RespOpts,
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n",
         reason(status),
         body.len()
     );
+    if let Some(secs) = opts.retry_after {
+        head.push_str(&format!("Retry-After: {secs}\r\n"));
+    }
+    head.push_str(if opts.keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
     let mut w = stream;
     w.write_all(head.as_bytes())?;
     w.write_all(body.as_bytes())?;
@@ -104,6 +295,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -111,12 +303,152 @@ fn reason(status: u16) -> &'static str {
     }
 }
 
-/// Loopback client: one request, one `(status, body)` response. Relies on
-/// the server's `Connection: close` framing (read to EOF), with a read
-/// timeout so a wedged server fails the caller instead of hanging it.
+/// A parsed response on the client side: status, body, and the
+/// `Retry-After` hint when the server shed the request.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: String,
+    pub retry_after: Option<u64>,
+}
+
+/// Parse one `Content-Length`-framed response off the stream. Returns
+/// the response plus whether the server announced `Connection: close`.
+fn read_framed_response(
+    stream: &TcpStream,
+    deadline: Instant,
+) -> Result<(Response, bool)> {
+    let mut r = DeadlineReader::new(stream);
+    let status_line = match r.read_line(deadline) {
+        Ok(LineOutcome::Line(l)) => l,
+        Ok(LineOutcome::Eof) => crate::bail!("connection closed before status line"),
+        Ok(LineOutcome::TimedOut) => crate::bail!("timed out reading status line"),
+        Err(e) => return Err(e).context("read status line"),
+    };
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("bad status line {status_line:?}"))?;
+    let mut content_length = 0usize;
+    let mut close = false;
+    let mut retry_after = None;
+    loop {
+        let h = match r.read_line(deadline) {
+            Ok(LineOutcome::Line(l)) => l,
+            Ok(LineOutcome::Eof) => crate::bail!("connection closed mid response headers"),
+            Ok(LineOutcome::TimedOut) => crate::bail!("timed out reading response headers"),
+            Err(e) => return Err(e).context("read response header"),
+        };
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            } else if k.eq_ignore_ascii_case("connection") {
+                close = v.to_ascii_lowercase().contains("close");
+            } else if k.eq_ignore_ascii_case("retry-after") {
+                retry_after = v.trim().parse().ok();
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    match r.read_exact(&mut body, deadline) {
+        Ok(Fill::Data) => {}
+        Ok(Fill::Eof) => crate::bail!("connection closed mid response body"),
+        Ok(Fill::TimedOut) => crate::bail!("timed out reading response body"),
+        Err(e) => return Err(e).context("read response body"),
+    }
+    let body = String::from_utf8_lossy(&body).into_owned();
+    Ok((Response { status, body, retry_after }, close))
+}
+
+/// A persistent loopback client: one TCP connection reused across
+/// requests (HTTP/1.1 keep-alive), responses framed by `Content-Length`
+/// — never read-to-EOF, which is what lets the connection survive the
+/// exchange. Transparently reconnects when the server closed the cached
+/// connection (idle expiry, `--max-requests-per-conn` rotation, drain).
+pub struct Client {
+    addr: String,
+    stream: Option<TcpStream>,
+    timeout: Duration,
+    connects: u64,
+}
+
+impl Client {
+    pub fn new(addr: &str) -> Self {
+        Client {
+            addr: addr.to_string(),
+            stream: None,
+            timeout: Duration::from_secs(60),
+            connects: 0,
+        }
+    }
+
+    /// TCP connections established so far — the keep-alive tests assert
+    /// this stays at 1 across a burst of requests.
+    pub fn connects(&self) -> u64 {
+        self.connects
+    }
+
+    fn ensure_stream(&mut self) -> Result<&TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(&self.addr)
+                .with_context(|| format!("connect {}", self.addr))?;
+            s.set_nodelay(true).ok();
+            self.stream = Some(s);
+            self.connects += 1;
+        }
+        Ok(self.stream.as_ref().unwrap())
+    }
+
+    /// Issue one request on the persistent connection. A failure on a
+    /// *reused* connection (the server may have rotated or idled it out
+    /// between requests — an inherent keep-alive race) is retried once
+    /// on a fresh connection; a fresh-connection failure is the error.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<Response> {
+        let reused = self.stream.is_some();
+        match self.try_request(method, path, body) {
+            Ok(resp) => Ok(resp),
+            Err(e) => {
+                self.stream = None;
+                if reused {
+                    self.try_request(method, path, body)
+                } else {
+                    Err(e)
+                }
+            }
+        }
+    }
+
+    fn try_request(&mut self, method: &str, path: &str, body: &str) -> Result<Response> {
+        let timeout = self.timeout;
+        let addr = self.addr.clone();
+        let stream = self.ensure_stream()?;
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        );
+        let mut w = stream;
+        w.write_all(req.as_bytes())
+            .with_context(|| format!("send {method} {path}"))?;
+        let (resp, close) = read_framed_response(stream, Instant::now() + timeout)
+            .with_context(|| format!("read {method} {path} response"))?;
+        if close {
+            self.stream = None;
+        }
+        Ok(resp)
+    }
+}
+
+/// One-shot loopback client: one connection, one request, one
+/// `(status, body)` response. Sends `Connection: close`; the response is
+/// still framed by `Content-Length` (not read-to-EOF), so it works
+/// against both closing and keep-alive servers.
 pub fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
     let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
-    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
     stream.set_nodelay(true).ok();
     let req = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -125,26 +457,58 @@ pub fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16,
     let mut w = &stream;
     w.write_all(req.as_bytes())
         .with_context(|| format!("send {method} {path}"))?;
-    let mut buf = Vec::new();
-    let mut r = &stream;
-    r.read_to_end(&mut buf)
+    let (resp, _close) = read_framed_response(&stream, Instant::now() + Duration::from_secs(60))
         .with_context(|| format!("read {method} {path} response"))?;
-    let text = String::from_utf8_lossy(&buf);
-    let (head, rest) = text
-        .split_once("\r\n\r\n")
-        .context("response has no header terminator")?;
-    let status: u16 = head
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .with_context(|| format!("bad status line {:?}", head.lines().next().unwrap_or("")))?;
-    Ok((status, rest.to_string()))
+    Ok((resp.status, resp.body))
+}
+
+/// Deterministic slow-loris client (the `slowconn` fault arm): dribbles
+/// the request `chunk` bytes at a time with `delay` between writes, so a
+/// server with per-phase read deadlines sheds it mid-headers. Returns
+/// `Ok(Some(response))` when the server answered (a `408` shed), and
+/// `Ok(None)` when it closed the connection without answering — both
+/// are successful sheds from the injector's point of view.
+pub fn request_slow(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+    chunk: usize,
+    delay: Duration,
+) -> Result<Option<Response>> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let bytes = req.as_bytes();
+    let mut w = &stream;
+    let chunk = chunk.max(1);
+    for piece in bytes.chunks(chunk) {
+        if w.write_all(piece).and_then(|_| w.flush()).is_err() {
+            // Server already tore the connection down: a hard shed.
+            return Ok(None);
+        }
+        std::thread::sleep(delay);
+    }
+    match read_framed_response(&stream, Instant::now() + Duration::from_secs(60)) {
+        Ok((resp, _)) => Ok(Some(resp)),
+        Err(_) => Ok(None),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::net::TcpListener;
+
+    fn budget() -> ReadBudget {
+        ReadBudget {
+            idle: Duration::from_millis(2000),
+            io: Duration::from_millis(400),
+        }
+    }
 
     /// One server turn: accept a connection, parse, run `f` on the parse
     /// result to pick (status, body), respond.
@@ -154,7 +518,7 @@ mod tests {
     {
         std::thread::spawn(move || {
             let (stream, _) = listener.accept().unwrap();
-            let (status, body) = f(read_request(&stream));
+            let (status, body) = f(read_request(&stream, &budget()));
             write_response(&stream, status, &body).unwrap();
         })
     }
@@ -168,11 +532,115 @@ mod tests {
             assert_eq!(req.method, "POST");
             assert_eq!(req.path, "/v1/predict");
             assert_eq!(req.body, b"{\"row\":[1]}");
+            assert!(req.close, "one-shot client announces Connection: close");
             (200, "{\"ok\":true}".into())
         });
         let (status, body) = request(&addr, "POST", "/v1/predict", "{\"row\":[1]}").unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, "{\"ok\":true}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn keep_alive_client_reuses_one_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            for i in 0..3 {
+                let req = match read_request(&stream, &budget()) {
+                    Ok(r) => r,
+                    Err(_) => panic!("request {i} failed to parse"),
+                };
+                assert!(!req.close, "keep-alive client must not ask to close");
+                let opts = RespOpts { keep_alive: true, retry_after: None };
+                write_response_opts(&stream, 200, &format!("{{\"n\":{i}}}"), opts).unwrap();
+            }
+        });
+        let mut client = Client::new(&addr);
+        for i in 0..3 {
+            let resp = client.request("POST", "/v1/predict", "{}").unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.body, format!("{{\"n\":{i}}}"));
+        }
+        assert_eq!(client.connects(), 1, "three requests, one TCP connect");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn framed_read_does_not_wait_for_eof() {
+        // A keep-alive server answers but never closes; the Content-Length
+        // framed client must return immediately (read-to-EOF would hang
+        // until the 60s timeout).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream, &budget()).ok().unwrap();
+            let opts = RespOpts { keep_alive: true, retry_after: Some(7) };
+            write_response_opts(&stream, 503, "{\"error\":\"full\"}", opts).unwrap();
+            // Hold the connection open until the client is done.
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let start = Instant::now();
+        let mut client = Client::new(&addr);
+        let resp = client.request("POST", "/v1/predict", "{}").unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.retry_after, Some(7), "Retry-After header surfaced");
+        assert!(
+            start.elapsed() < Duration::from_millis(250),
+            "framed read returned before the server closed"
+        );
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn slow_headers_hit_the_io_deadline_not_the_idle_one() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = serve_once(listener, |req| match req {
+            Err(RequestError::SlowTimeout(phase)) => {
+                assert_eq!(phase, "headers");
+                (408, "{\"error\":\"slow\"}".into())
+            }
+            _ => panic!("expected SlowTimeout"),
+        });
+        // Dribble 2 bytes per 100ms: the io budget (400ms) expires long
+        // before the request line completes, even though each individual
+        // read arrives well inside the idle window.
+        let got = request_slow(
+            &addr.to_string(),
+            "POST",
+            "/v1/predict",
+            "{}",
+            2,
+            Duration::from_millis(100),
+        )
+        .unwrap();
+        if let Some(resp) = got {
+            assert_eq!(resp.status, 408);
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn silent_connection_is_idle_timeout() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let b = ReadBudget {
+                idle: Duration::from_millis(100),
+                io: Duration::from_millis(400),
+            };
+            assert!(matches!(
+                read_request(&stream, &b),
+                Err(RequestError::IdleTimeout)
+            ));
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        std::thread::sleep(Duration::from_millis(300));
+        drop(stream);
         h.join().unwrap();
     }
 

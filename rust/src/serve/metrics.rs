@@ -54,11 +54,27 @@ pub struct Metrics {
     pub healthz: EndpointCounters,
     pub status: EndpointCounters,
     pub reload: EndpointCounters,
+    pub drain: EndpointCounters,
     /// Rows answered successfully via `/v1/predict` (a request may carry
     /// several rows).
     pub predict_rows: AtomicU64,
     /// Predict requests bounced with 503 because the bounded queue was full.
     pub rejected_queue_full: AtomicU64,
+    /// Predict requests bounced with 503 because the daemon is draining.
+    pub rejected_draining: AtomicU64,
+    /// Connections shed with 408 by the per-phase read deadlines
+    /// (slow-loris clients dribbling headers or body).
+    pub shed_slow: AtomicU64,
+    /// Connections bounced with 503 at the accept-side `--max-conns` cap.
+    pub shed_max_conns: AtomicU64,
+    /// Connections accepted (keep-alive: many requests may share one).
+    pub conns_opened: AtomicU64,
+    /// Wedged workers replaced by the admission watchdog.
+    pub worker_restarts: AtomicU64,
+    /// `--watch` checkpoints validated and swapped in.
+    pub watch_swaps: AtomicU64,
+    /// `--watch` candidates that failed validation (quarantined).
+    pub watch_rejected: AtomicU64,
     /// Micro-batches dispatched to an engine.
     pub batches: AtomicU64,
     /// Rows across all dispatched micro-batches (occupancy numerator).
@@ -87,8 +103,16 @@ impl Metrics {
             healthz: EndpointCounters::default(),
             status: EndpointCounters::default(),
             reload: EndpointCounters::default(),
+            drain: EndpointCounters::default(),
             predict_rows: AtomicU64::new(0),
             rejected_queue_full: AtomicU64::new(0),
+            rejected_draining: AtomicU64::new(0),
+            shed_slow: AtomicU64::new(0),
+            shed_max_conns: AtomicU64::new(0),
+            conns_opened: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            watch_swaps: AtomicU64::new(0),
+            watch_rejected: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_rows: AtomicU64::new(0),
             latency_ns_sum: AtomicU64::new(0),
@@ -159,6 +183,7 @@ impl Metrics {
             + self.healthz.errors.load(Ordering::Relaxed)
             + self.status.errors.load(Ordering::Relaxed)
             + self.reload.errors.load(Ordering::Relaxed)
+            + self.drain.errors.load(Ordering::Relaxed)
     }
 
     pub fn mean_latency_us(&self) -> f64 {
@@ -168,6 +193,20 @@ impl Metrics {
         } else {
             self.latency_ns_sum.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
         }
+    }
+
+    /// The `Retry-After` hint (whole seconds) on shedding 503s: roughly
+    /// how long clearing the current backlog should take, from the
+    /// observed mean request latency. A cold daemon (no latency history)
+    /// assumes 1 ms per batch; the clamp to `[1, 30]` keeps the hint
+    /// sane under pathological backlogs and satisfies RFC 9110 (a zero
+    /// hint would tell clients to hammer right back).
+    pub fn retry_after_secs(&self, queued_rows: usize, max_batch: usize) -> u64 {
+        let mean_us = self.mean_latency_us();
+        let per_batch_us = if mean_us > 0.0 { mean_us } else { 1000.0 };
+        let batches_pending = (queued_rows.max(1) as f64 / max_batch.max(1) as f64).ceil();
+        let secs = (batches_pending * per_batch_us / 1e6).ceil() as u64;
+        secs.clamp(1, 30)
     }
 }
 
@@ -207,6 +246,19 @@ mod tests {
         assert_eq!(layers[0].1.saturated, 50);
         assert_eq!(layers[1].0, "conv1/fwd");
         assert_eq!(layers[1].1.elems, 200);
+    }
+
+    #[test]
+    fn retry_after_scales_with_backlog_and_stays_clamped() {
+        let m = Metrics::new();
+        // Cold daemon: no latency history → still a sane minimum hint.
+        assert_eq!(m.retry_after_secs(0, 8), 1);
+        // 2 s mean latency, 32 queued rows over max-batch 8 → 4 batches
+        // at ~2 s each = 8 s.
+        m.note_latency(Duration::from_secs(2));
+        assert_eq!(m.retry_after_secs(32, 8), 8);
+        // Pathological backlog clamps at 30 s.
+        assert_eq!(m.retry_after_secs(100_000, 1), 30);
     }
 
     #[test]

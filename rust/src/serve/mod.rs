@@ -8,27 +8,42 @@
 //! daemon on nothing but `std::net`:
 //!
 //! - [`http`] — a minimal hand-rolled HTTP/1.1 front (the workspace has
-//!   zero external crates);
+//!   zero external crates): keep-alive connections with per-phase read
+//!   deadlines (slow-loris clients are shed with `408`);
 //! - [`batcher`] — **micro-batching**: queued predict requests coalesce
 //!   into one GEMM batch, dispatched at `--max-batch` rows or when the
 //!   oldest request has waited `--max-wait-us` (the explicit
 //!   latency-vs-throughput lever);
 //! - [`pool`] — N worker threads, each with a private engine restored
 //!   from one shared immutable `Arc<ModelArtifact>`; no locks on the hot
-//!   path beyond the queue handoff;
+//!   path beyond the queue handoff. An admission **watchdog** replaces
+//!   any worker whose batch is overdue past `--watchdog-ms`, requeueing
+//!   its rows (exactly-once replies via the claim protocol);
 //! - [`reload`] — hot checkpoint reload on SIGHUP or
 //!   `POST /admin/reload`: load + validate off the worker threads, swap
 //!   the `Arc` atomically, drain in-flight batches on the old instance;
 //!   failed loads keep the old model serving;
+//! - [`watch`] — `--watch <dir>` checkpoint auto-discovery: poll for the
+//!   newest renamed-in `.fp8ck`, validate, swap via the reload path;
+//!   failed candidates are quarantined on `/admin/status`;
 //! - [`metrics`] — uptime, per-endpoint counters, queue depth, batch
-//!   occupancy, latency aggregates and a cross-worker numerics-telemetry
-//!   roll-up, all on `GET /admin/status`;
+//!   occupancy, latency aggregates, resilience counters (sheds,
+//!   watchdog restarts, watch swaps) and a cross-worker
+//!   numerics-telemetry roll-up, all on `GET /admin/status`;
 //! - [`bench`] — the `serve-bench` loopback load generator whose
-//!   p50/p95/p99 + throughput summary feeds `bench --json` schema 6.
+//!   p50/p95/p99 + throughput + shed summary feeds `bench --json`.
+//!
+//! **Graceful drain**: SIGTERM or `POST /admin/drain` flips the daemon
+//! into draining — healthz answers `503` (+ `Retry-After`), new predicts
+//! are rejected, queued and in-flight requests are answered — then shuts
+//! down once the pipeline is empty, bounded by `--drain-timeout-ms`.
+//! Load shedding (`--max-conns`, queue overflow, drain) always carries a
+//! `Retry-After` hint derived from observed batch latency.
 //!
 //! Determinism contract: responses are bit-identical regardless of
-//! `--workers`, `--max-batch` or how requests happened to coalesce —
-//! enforced end-to-end by `rust/tests/serve_equivalence.rs`.
+//! `--workers`, `--max-batch`, keep-alive, injected faults or how
+//! requests happened to coalesce — enforced end-to-end by
+//! `rust/tests/serve_equivalence.rs` and `rust/tests/serve_chaos.rs`.
 
 pub mod batcher;
 pub mod bench;
@@ -36,6 +51,7 @@ pub mod http;
 pub mod metrics;
 pub mod pool;
 pub mod reload;
+pub mod watch;
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::Ordering;
@@ -45,11 +61,12 @@ use std::time::{Duration, Instant};
 
 use crate::benchcmp::{escape, Json};
 use crate::error::{Context, Result};
+use crate::faults::FaultSpec;
 use batcher::{Pending, RowOut};
-use http::{Request, RequestError};
+use http::{Request, RequestError, RespOpts};
 use metrics::rate;
 use pool::Shared;
-use reload::load_artifact;
+use reload::{load_artifact, load_artifact_armed};
 
 /// Daemon configuration (CLI flags map 1:1 — see `fp8train serve` usage).
 #[derive(Clone, Debug)]
@@ -66,6 +83,31 @@ pub struct ServeConfig {
     /// When set, the bound address is written here (atomic rename) —
     /// scripts use it to discover an ephemeral `--addr host:0` port.
     pub port_file: Option<String>,
+    /// Keep-alive requests served per connection before rotation
+    /// (`Connection: close` on the last response); 0 = unlimited.
+    pub max_requests_per_conn: usize,
+    /// Keep-alive idle budget: a connection with no next-request bytes
+    /// for this long is closed silently.
+    pub idle_timeout_ms: u64,
+    /// Whole-request read budget once the first byte arrives (request
+    /// line + headers + body); dribbling past it is shed with 408.
+    pub io_timeout_ms: u64,
+    /// Accept-side live-connection cap; excess connections are answered
+    /// 503 + `Retry-After` and closed.
+    pub max_conns: usize,
+    /// Drain bound: after SIGTERM / `POST /admin/drain`, forced shutdown
+    /// after this long even if the pipeline is not yet empty.
+    pub drain_timeout_ms: u64,
+    /// Watchdog deadline: a worker whose claimed batch is older than
+    /// this is replaced and its rows requeued.
+    pub watchdog_ms: u64,
+    /// Checkpoint auto-discovery directory (`--watch`).
+    pub watch: Option<String>,
+    /// Poll cadence for `--watch`.
+    pub watch_interval_ms: u64,
+    /// Armed serve-scoped fault specs (`FP8TRAIN_FAULT` — the CLI parses
+    /// the env var; in-process tests inject here to avoid env races).
+    pub faults: Vec<FaultSpec>,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +120,15 @@ impl Default for ServeConfig {
             max_wait_us: 1000,
             queue_depth: 256,
             port_file: None,
+            max_requests_per_conn: 0,
+            idle_timeout_ms: 10_000,
+            io_timeout_ms: 5_000,
+            max_conns: 256,
+            drain_timeout_ms: 5_000,
+            watchdog_ms: 5_000,
+            watch: None,
+            watch_interval_ms: 500,
+            faults: Vec::new(),
         }
     }
 }
@@ -96,7 +147,8 @@ impl ServerHandle {
     }
 
     /// Stop accepting, drain the queue, join every thread. Queued
-    /// requests are answered before workers exit (drain semantics).
+    /// requests are answered before workers exit (drain semantics);
+    /// wedged workers the watchdog detached are never joined.
     pub fn shutdown(self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.queue.notify_all();
@@ -105,12 +157,14 @@ impl ServerHandle {
         for t in self.threads {
             let _ = t.join();
         }
+        pool::join_workers(&self.shared);
     }
 }
 
-/// Bind, load + validate the checkpoint, spawn the worker pool and the
-/// accept loop. Returns a handle for in-process callers (`serve-bench`,
-/// tests, `bench --json`); the CLI daemon blocks in [`run`] instead.
+/// Bind, load + validate the checkpoint, spawn the worker pool, the
+/// watchdog, the optional checkpoint watcher and the accept loop.
+/// Returns a handle for in-process callers (`serve-bench`, tests,
+/// `bench --json`); the CLI daemon blocks in [`run`] instead.
 pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     let art = load_artifact(&cfg.checkpoint, 1)?;
     let listener =
@@ -128,7 +182,12 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
         art.model_id, cfg.checkpoint, cfg.workers, cfg.max_batch, cfg.max_wait_us
     );
     let shared = Arc::new(Shared::new(cfg, art));
-    let mut threads = pool::spawn_workers(&shared);
+    *shared.bound.lock().unwrap() = Some(addr);
+    pool::spawn_workers(&shared);
+    let mut threads = vec![pool::spawn_watchdog(&shared)];
+    if let Some(w) = watch::spawn_watcher(&shared) {
+        threads.push(w);
+    }
     let acc = Arc::clone(&shared);
     threads.push(
         std::thread::Builder::new()
@@ -143,12 +202,13 @@ pub fn start(cfg: ServeConfig) -> Result<ServerHandle> {
     })
 }
 
-/// The blocking daemon entry: start, install the SIGHUP hook, serve until
-/// killed. SIGHUP hot-reloads the checkpoint path currently being served
-/// (same file, new bytes — the rolling-deploy idiom).
+/// The blocking daemon entry: start, install the signal hooks, serve
+/// until drained. SIGHUP hot-reloads the checkpoint path currently being
+/// served (same file, new bytes — the rolling-deploy idiom); SIGTERM
+/// starts a graceful drain bounded by `--drain-timeout-ms`.
 pub fn run(cfg: ServeConfig) -> Result<()> {
     #[cfg(unix)]
-    sighup::install();
+    signals::install();
     let handle = start(cfg)?;
     loop {
         std::thread::sleep(Duration::from_millis(100));
@@ -157,12 +217,25 @@ pub fn run(cfg: ServeConfig) -> Result<()> {
             return Ok(());
         }
         #[cfg(unix)]
-        if sighup::take() {
-            let path = handle.shared.artifact().path.clone();
-            match reload_into(&handle.shared, &path) {
-                Ok(generation) => println!("serve: SIGHUP reload ok (generation {generation})"),
-                Err(e) => {
-                    eprintln!("serve: SIGHUP reload failed — still serving the old model: {e:#}");
+        {
+            if signals::take_term() {
+                let remaining = request_drain(&handle.shared);
+                println!(
+                    "serve: SIGTERM — draining (deadline {} ms)",
+                    remaining.as_millis()
+                );
+            }
+            if signals::take_hup() {
+                let path = handle.shared.artifact().path.clone();
+                match reload_into(&handle.shared, &path) {
+                    Ok(generation) => {
+                        println!("serve: SIGHUP reload ok (generation {generation})")
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "serve: SIGHUP reload failed — still serving the old model: {e:#}"
+                        );
+                    }
                 }
             }
         }
@@ -171,11 +244,14 @@ pub fn run(cfg: ServeConfig) -> Result<()> {
 
 /// Load + validate `path` (on the calling thread — never a worker), then
 /// publish it as the next generation. On failure the old artifact keeps
-/// serving and the error is remembered for `/admin/status`.
-fn reload_into(shared: &Shared, path: &str) -> Result<u64> {
+/// serving and the error is remembered for `/admin/status`. The reload
+/// lock serializes generation computation between `/admin/reload`,
+/// SIGHUP and the `--watch` poller.
+pub(crate) fn reload_into(shared: &Shared, path: &str) -> Result<u64> {
     shared.metrics.reload.hit();
+    let _guard = shared.reload_lock.lock().unwrap();
     let generation = shared.generation.load(Ordering::SeqCst) + 1;
-    match load_artifact(path, generation) {
+    match load_artifact_armed(path, generation, shared.badck.as_ref()) {
         Ok(art) => {
             shared.install(art);
             shared.metrics.set_reload_error(None);
@@ -189,6 +265,57 @@ fn reload_into(shared: &Shared, path: &str) -> Result<u64> {
     }
 }
 
+/// Flip the daemon into draining (idempotent — a second request keeps
+/// the first deadline) and spawn the lifecycle thread that completes
+/// shutdown once the queue is empty and every worker is idle, or the
+/// `--drain-timeout-ms` deadline passes. Returns the remaining drain
+/// budget.
+pub fn request_drain(shared: &Arc<Shared>) -> Duration {
+    let timeout = Duration::from_millis(shared.cfg.drain_timeout_ms.max(1));
+    {
+        let mut dl = shared.drain_deadline.lock().unwrap();
+        if let Some(existing) = *dl {
+            return existing.saturating_duration_since(Instant::now());
+        }
+        *dl = Some(Instant::now() + timeout);
+    }
+    shared.draining.store(true, Ordering::SeqCst);
+    let sh = Arc::clone(shared);
+    let _ = std::thread::Builder::new()
+        .name("serve-drain".into())
+        .spawn(move || drain_loop(&sh));
+    timeout
+}
+
+fn drain_loop(shared: &Arc<Shared>) {
+    let deadline = shared
+        .drain_deadline
+        .lock()
+        .unwrap()
+        .expect("set by request_drain");
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return; // a hard shutdown overtook the drain
+        }
+        let idle = shared.queue.depth_rows() == 0 && !shared.any_busy();
+        if idle {
+            println!("serve: drained — queue empty, workers idle");
+            break;
+        }
+        if Instant::now() >= deadline {
+            eprintln!("serve: drain deadline reached with work in flight — forcing shutdown (queued rows still answered)");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    shared.shutdown.store(true, Ordering::SeqCst);
+    shared.queue.notify_all();
+    // Nudge the accept loop so it observes shutdown and stops listening.
+    if let Some(addr) = *shared.bound.lock().unwrap() {
+        let _ = TcpStream::connect(addr);
+    }
+}
+
 fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
     for conn in listener.incoming() {
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -198,52 +325,139 @@ fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
             Ok(s) => s,
             Err(_) => continue,
         };
+        // Accept-side cap: beyond --max-conns, shed immediately with a
+        // retry hint rather than queueing connections we cannot serve.
+        let live = shared.conns.fetch_add(1, Ordering::SeqCst) + 1;
+        if live > shared.cfg.max_conns.max(1) {
+            shared.conns.fetch_sub(1, Ordering::SeqCst);
+            shared
+                .metrics
+                .shed_max_conns
+                .fetch_add(1, Ordering::Relaxed);
+            let ra = shared
+                .metrics
+                .retry_after_secs(shared.queue.depth_rows(), shared.cfg.max_batch);
+            let _ = http::write_response_opts(
+                &stream,
+                503,
+                &err_body("connection limit reached"),
+                RespOpts {
+                    keep_alive: false,
+                    retry_after: Some(ra),
+                },
+            );
+            continue;
+        }
+        shared.metrics.conns_opened.fetch_add(1, Ordering::Relaxed);
         let sh = Arc::clone(shared);
-        // One short-lived thread per connection: each connection carries
-        // exactly one request (Connection: close), and predict handlers
+        // One thread per live connection (bounded by --max-conns): a
+        // keep-alive connection serves many requests; predict handlers
         // block on their batch's response channel.
         let _ = std::thread::Builder::new()
             .name("serve-conn".into())
-            .spawn(move || handle_connection(&sh, &stream));
+            .spawn(move || {
+                handle_connection(&sh, &stream);
+                sh.conns.fetch_sub(1, Ordering::SeqCst);
+            });
     }
 }
 
-fn handle_connection(shared: &Shared, stream: &TcpStream) {
-    stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+/// The per-connection request loop: parse under the per-phase read
+/// budgets, route, respond, repeat while keep-alive holds. The
+/// connection closes when the client asks (`Connection: close`), on
+/// `--max-requests-per-conn` rotation, on any parse error, on idle
+/// expiry, or once the daemon is shutting down or draining.
+fn handle_connection(shared: &Arc<Shared>, stream: &TcpStream) {
     stream.set_nodelay(true).ok();
-    let req = match http::read_request(stream) {
-        Ok(r) => r,
-        Err(RequestError::Disconnected) => return,
-        Err(RequestError::TooLarge(n)) => {
-            let body = err_body(&format!(
-                "body of {n} bytes exceeds the {} byte limit",
-                http::MAX_BODY
-            ));
-            let _ = http::write_response(stream, 413, &body);
-            return;
-        }
-        Err(RequestError::Bad(m)) => {
-            let _ = http::write_response(stream, 400, &err_body(&m));
-            return;
-        }
+    let budget = http::ReadBudget {
+        idle: Duration::from_millis(shared.cfg.idle_timeout_ms.max(1)),
+        io: Duration::from_millis(shared.cfg.io_timeout_ms.max(1)),
     };
-    let (status, body) = route(shared, &req);
-    let _ = http::write_response(stream, status, &body);
+    let max_reqs = shared.cfg.max_requests_per_conn as u64;
+    let mut served = 0u64;
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let req = match http::read_request(stream, &budget) {
+            Ok(r) => r,
+            Err(RequestError::Disconnected) | Err(RequestError::IdleTimeout) => return,
+            Err(RequestError::SlowTimeout(phase)) => {
+                shared.metrics.shed_slow.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_response(
+                    stream,
+                    408,
+                    &err_body(&format!("timed out reading request {phase}")),
+                );
+                return;
+            }
+            Err(RequestError::TooLarge(n)) => {
+                let body = err_body(&format!(
+                    "body of {n} bytes exceeds the {} byte limit",
+                    http::MAX_BODY
+                ));
+                let _ = http::write_response(stream, 413, &body);
+                return;
+            }
+            Err(RequestError::Bad(m)) => {
+                let _ = http::write_response(stream, 400, &err_body(&m));
+                return;
+            }
+        };
+        served += 1;
+        let (status, body, retry_after) = route(shared, &req);
+        let rotate = max_reqs != 0 && served >= max_reqs;
+        let keep = !req.close
+            && !rotate
+            && !shared.shutdown.load(Ordering::SeqCst)
+            && !shared.draining.load(Ordering::SeqCst);
+        let _ = http::write_response_opts(
+            stream,
+            status,
+            &body,
+            RespOpts {
+                keep_alive: keep,
+                retry_after,
+            },
+        );
+        if !keep {
+            return;
+        }
+    }
 }
 
 fn err_body(msg: &str) -> String {
     format!("{{\"error\":\"{}\"}}", escape(msg))
 }
 
-fn route(shared: &Shared, req: &Request) -> (u16, String) {
+fn route(shared: &Arc<Shared>, req: &Request) -> (u16, String, Option<u64>) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             shared.metrics.healthz.hit();
-            (200, "{\"ok\":true}".into())
+            if shared.draining.load(Ordering::SeqCst) {
+                let ra = shared
+                    .metrics
+                    .retry_after_secs(shared.queue.depth_rows(), shared.cfg.max_batch);
+                (503, "{\"ok\":false,\"draining\":true}".into(), Some(ra))
+            } else {
+                (200, "{\"ok\":true}".into(), None)
+            }
         }
         ("GET", "/admin/status") => {
             shared.metrics.status.hit();
-            (200, status_json(shared))
+            (200, status_json(shared), None)
+        }
+        ("POST", "/admin/drain") => {
+            shared.metrics.drain.hit();
+            let remaining = request_drain(shared);
+            (
+                200,
+                format!(
+                    "{{\"ok\":true,\"draining\":true,\"drain_remaining_ms\":{}}}",
+                    remaining.as_millis()
+                ),
+                None,
+            )
         }
         ("POST", "/admin/reload") => {
             let path = match reload_target(shared, &req.body) {
@@ -251,7 +465,7 @@ fn route(shared: &Shared, req: &Request) -> (u16, String) {
                 Err(m) => {
                     shared.metrics.reload.hit();
                     shared.metrics.reload.err();
-                    return (400, err_body(&m));
+                    return (400, err_body(&m), None);
                 }
             };
             match reload_into(shared, &path) {
@@ -261,10 +475,12 @@ fn route(shared: &Shared, req: &Request) -> (u16, String) {
                         "{{\"ok\":true,\"generation\":{generation},\"checkpoint\":\"{}\"}}",
                         escape(&path)
                     ),
+                    None,
                 ),
                 Err(e) => (
                     500,
                     format!("{{\"ok\":false,\"error\":\"{}\"}}", escape(&format!("{e:#}"))),
+                    None,
                 ),
             }
         }
@@ -272,8 +488,13 @@ fn route(shared: &Shared, req: &Request) -> (u16, String) {
         ("GET" | "POST", _) => (
             404,
             err_body(&format!("no route for {} {}", req.method, req.path)),
+            None,
         ),
-        _ => (405, err_body(&format!("method {} not allowed", req.method))),
+        _ => (
+            405,
+            err_body(&format!("method {} not allowed", req.method)),
+            None,
+        ),
     }
 }
 
@@ -332,14 +553,25 @@ fn parse_rows(body: &[u8], want_len: usize) -> std::result::Result<Vec<Vec<f32>>
     Ok(out)
 }
 
-fn predict(shared: &Shared, body: &[u8]) -> (u16, String) {
+fn predict(shared: &Shared, body: &[u8]) -> (u16, String, Option<u64>) {
     shared.metrics.predict.hit();
+    if shared.draining.load(Ordering::SeqCst) {
+        shared.metrics.predict.err();
+        shared
+            .metrics
+            .rejected_draining
+            .fetch_add(1, Ordering::Relaxed);
+        let ra = shared
+            .metrics
+            .retry_after_secs(shared.queue.depth_rows(), shared.cfg.max_batch);
+        return (503, err_body("draining — not accepting new work"), Some(ra));
+    }
     let art = shared.artifact();
     let rows = match parse_rows(body, art.in_features) {
         Ok(r) => r,
         Err(m) => {
             shared.metrics.predict.err();
-            return (400, err_body(&m));
+            return (400, err_body(&m), None);
         }
     };
     let nrows = rows.len() as u64;
@@ -355,7 +587,10 @@ fn predict(shared: &Shared, body: &[u8]) -> (u16, String) {
             .metrics
             .rejected_queue_full
             .fetch_add(1, Ordering::Relaxed);
-        return (503, err_body("request queue is full"));
+        let ra = shared
+            .metrics
+            .retry_after_secs(shared.queue.depth_rows(), shared.cfg.max_batch);
+        return (503, err_body("request queue is full"), Some(ra));
     }
     match rx.recv_timeout(Duration::from_secs(30)) {
         Ok(Ok(out)) => {
@@ -363,15 +598,15 @@ fn predict(shared: &Shared, body: &[u8]) -> (u16, String) {
                 .metrics
                 .predict_rows
                 .fetch_add(nrows, Ordering::Relaxed);
-            (200, predict_body(&art.model_id, &out))
+            (200, predict_body(&art.model_id, &out), None)
         }
         Ok(Err(m)) => {
             shared.metrics.predict.err();
-            (500, err_body(&m))
+            (500, err_body(&m), None)
         }
         Err(_) => {
             shared.metrics.predict.err();
-            (500, err_body("timed out waiting for a worker"))
+            (500, err_body("timed out waiting for a worker"), None)
         }
     }
 }
@@ -411,6 +646,7 @@ fn status_json(shared: &Shared) -> String {
     let (predict_req, predict_err) = m.predict.get();
     let (healthz_req, _) = m.healthz.get();
     let (status_req, _) = m.status.get();
+    let (drain_req, _) = m.drain.get();
     let (reload_req, reload_err) = m.reload.get();
     let batches = m.batches.load(Ordering::Relaxed);
     let batched_rows = m.batched_rows.load(Ordering::Relaxed);
@@ -436,18 +672,41 @@ fn status_json(shared: &Shared) -> String {
             )
         })
         .collect();
+    let watch_dir = match &shared.cfg.watch {
+        Some(d) => format!("\"{}\"", escape(d)),
+        None => "null".into(),
+    };
+    let quarantine_json: Vec<String> = shared
+        .quarantine
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(path, err)| {
+            format!(
+                "{{\"path\":\"{}\",\"error\":\"{}\"}}",
+                escape(path),
+                escape(err)
+            )
+        })
+        .collect();
     format!(
         "{{\"model\":\"{}\",\"spec\":\"{}\",\"policy\":\"{}\",\
          \"checkpoint\":{{\"path\":\"{}\",\"crc32\":\"{:08x}\",\"bytes\":{},\
          \"generation\":{},\"trained_steps\":{}}},\
          \"uptime_ms\":{},\"workers\":{},\"max_batch\":{},\"max_wait_us\":{},\
          \"input_features\":{},\"classes\":{},\"queue_depth\":{},\
+         \"draining\":{},\
+         \"conns\":{{\"live\":{},\"opened\":{},\"max\":{}}},\
          \"counters\":{{\"predict\":{{\"requests\":{},\"errors\":{},\"rows\":{},\
-         \"rejected_queue_full\":{}}},\"healthz\":{},\"status\":{},\
+         \"rejected_queue_full\":{},\"rejected_draining\":{}}},\
+         \"healthz\":{},\"status\":{},\"drain\":{},\
          \"reload\":{{\"requests\":{},\"errors\":{}}}}},\
          \"errors_total\":{},\
          \"batches\":{{\"dispatched\":{},\"rows\":{},\"occupancy\":{:.4},\
          \"mean_latency_us\":{:.3}}},\
+         \"resilience\":{{\"shed_slow\":{},\"shed_max_conns\":{},\
+         \"worker_restarts\":{},\
+         \"watch\":{{\"dir\":{},\"swaps\":{},\"rejected\":{},\"quarantine\":[{}]}}}},\
          \"last_reload_error\":{},\
          \"telemetry\":{{\"elems\":{},\"sat_rate\":{},\"underflow_rate\":{},\
          \"layers\":[{}]}}}}",
@@ -466,12 +725,18 @@ fn status_json(shared: &Shared) -> String {
         art.in_features,
         art.classes,
         shared.queue.depth_rows(),
+        shared.draining.load(Ordering::SeqCst),
+        shared.conns.load(Ordering::SeqCst),
+        m.conns_opened.load(Ordering::Relaxed),
+        shared.cfg.max_conns,
         predict_req,
         predict_err,
         m.predict_rows.load(Ordering::Relaxed),
         m.rejected_queue_full.load(Ordering::Relaxed),
+        m.rejected_draining.load(Ordering::Relaxed),
         healthz_req,
         status_req,
+        drain_req,
         reload_req,
         reload_err,
         m.errors_total(),
@@ -479,6 +744,13 @@ fn status_json(shared: &Shared) -> String {
         batched_rows,
         occupancy,
         m.mean_latency_us(),
+        m.shed_slow.load(Ordering::Relaxed),
+        m.shed_max_conns.load(Ordering::Relaxed),
+        m.worker_restarts.load(Ordering::Relaxed),
+        watch_dir,
+        m.watch_swaps.load(Ordering::Relaxed),
+        m.watch_rejected.load(Ordering::Relaxed),
+        quarantine_json.join(","),
         last_reload_error,
         qt.elems,
         rate(qt.saturated, qt.elems),
@@ -487,20 +759,28 @@ fn status_json(shared: &Shared) -> String {
     )
 }
 
-/// SIGHUP → hot reload, with no libc crate: `std` already links libc on
-/// unix, so a one-function `extern` block reaches `signal(2)` directly.
-/// The handler only flips an `AtomicBool` (async-signal-safe); the [`run`]
-/// loop polls and does the actual reload on a normal thread.
+/// SIGHUP → hot reload, SIGTERM → graceful drain — with no libc crate:
+/// `std` already links libc on unix, so a one-function `extern` block
+/// reaches `signal(2)` directly. The handlers only flip `AtomicBool`s
+/// (async-signal-safe); the [`run`] loop polls and does the actual work
+/// on a normal thread.
 #[cfg(unix)]
-mod sighup {
+mod signals {
     use std::sync::atomic::{AtomicBool, Ordering};
 
     static HUP: AtomicBool = AtomicBool::new(false);
-    /// POSIX guarantees SIGHUP = 1 on every unix the toolchain targets.
+    static TERM: AtomicBool = AtomicBool::new(false);
+    /// POSIX guarantees SIGHUP = 1 and SIGTERM = 15 on every unix the
+    /// toolchain targets.
     const SIGHUP: i32 = 1;
+    const SIGTERM: i32 = 15;
 
     extern "C" fn on_hup(_sig: i32) {
         HUP.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
     }
 
     extern "C" {
@@ -510,11 +790,16 @@ mod sighup {
     pub fn install() {
         unsafe {
             signal(SIGHUP, on_hup);
+            signal(SIGTERM, on_term);
         }
     }
 
-    pub fn take() -> bool {
+    pub fn take_hup() -> bool {
         HUP.swap(false, Ordering::SeqCst)
+    }
+
+    pub fn take_term() -> bool {
+        TERM.swap(false, Ordering::SeqCst)
     }
 }
 

@@ -9,18 +9,71 @@
 //! batch and rebuilds its engine from the new artifact; batches already
 //! dispatched finish on the old engine (drain semantics), and the old
 //! artifact is freed when the last worker drops its `Arc`.
+//!
+//! ## The claim protocol (watchdog / exactly-once)
+//!
+//! A worker that takes a batch off the queue first **parks** it in its
+//! [`WorkerSlot`] (a per-worker `Mutex<Option<Claim>>`), computes, then
+//! takes the claim back out and replies. The slot lock is the whole
+//! arbitration: the admission watchdog reclaims any claim older than
+//! `--watchdog-ms` — requeues its rows at the queue *front*, detaches
+//! the wedged thread's handle and spawns a replacement into the same
+//! slot — and whichever side `take()`s the claim owns the replies. A
+//! slow-but-alive worker that loses the race finds its slot empty,
+//! discards its result, and exits on the bumped slot epoch; the
+//! replacement answers instead. Every accepted request is therefore
+//! answered **exactly once** even under an injected `wedge` fault
+//! (`docs/serving.md`, "Lifecycle & failure modes").
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::batcher::{BatchQueue, Pending, RowOut};
 use super::metrics::Metrics;
 use super::reload::{build_engine, ModelArtifact};
 use super::ServeConfig;
 use crate::coordinator::NativeEngine;
+use crate::faults::{FaultArm, FaultKind};
 use crate::tensor::Tensor;
+
+/// A batch a worker has taken off the queue but not yet answered.
+pub struct Claim {
+    pub since: Instant,
+    pub batch: Vec<Pending>,
+}
+
+/// Per-worker shared state: the parked claim and the slot epoch. The
+/// epoch moves when the watchdog replaces the worker; the superseded
+/// thread notices at its next loop turn and exits.
+pub struct WorkerSlot {
+    claim: Mutex<Option<Claim>>,
+    epoch: AtomicU64,
+}
+
+impl WorkerSlot {
+    fn new() -> Self {
+        WorkerSlot {
+            claim: Mutex::new(None),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// A batch is parked here (in-flight) — the drain lifecycle waits for
+    /// every slot to go idle before closing up.
+    pub fn busy(&self) -> bool {
+        self.claim.lock().unwrap().is_some()
+    }
+
+    fn claim_age(&self) -> Option<Duration> {
+        self.claim
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|c| c.since.elapsed())
+    }
+}
 
 /// Everything the accept loop, connection threads and workers share.
 pub struct Shared {
@@ -31,7 +84,34 @@ pub struct Shared {
     current: Mutex<Arc<ModelArtifact>>,
     pub generation: AtomicU64,
     pub shutdown: AtomicBool,
+    /// Draining: healthz answers 503 (+ `Retry-After`), new predicts are
+    /// rejected, queued and in-flight work is still answered.
+    pub draining: AtomicBool,
+    /// Absolute drain deadline, set once by the first drain request — a
+    /// second drain is idempotent and keeps the first deadline.
+    pub drain_deadline: Mutex<Option<Instant>>,
+    /// The bound listener address (set in `start`); the drain lifecycle
+    /// nudge-connects here so the accept loop observes shutdown.
+    pub bound: Mutex<Option<std::net::SocketAddr>>,
+    /// Live connection count, against `--max-conns`.
+    pub conns: AtomicUsize,
     pub metrics: Metrics,
+    /// One slot per worker index (fixed size `cfg.workers`).
+    pub slots: Vec<WorkerSlot>,
+    /// Joinable worker handles by slot. The watchdog swaps a replacement
+    /// in here; the superseded (wedged) handle is dropped — detached —
+    /// so shutdown never blocks joining a hung thread.
+    pub workers: Mutex<Vec<Option<JoinHandle<()>>>>,
+    /// Serializes generation computation between `/admin/reload`, SIGHUP
+    /// and the `--watch` poller.
+    pub reload_lock: Mutex<()>,
+    /// `--watch` candidates that failed validation: `(path, error)`,
+    /// newest last — surfaced on `/admin/status` and never retried until
+    /// the file changes.
+    pub quarantine: Mutex<Vec<(String, String)>>,
+    /// Armed serve-scoped faults (`FP8TRAIN_FAULT`, `docs/robustness.md`).
+    pub wedge: Option<FaultArm>,
+    pub badck: Option<FaultArm>,
 }
 
 impl Shared {
@@ -41,7 +121,17 @@ impl Shared {
             generation: AtomicU64::new(art.generation),
             current: Mutex::new(Arc::new(art)),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            drain_deadline: Mutex::new(None),
+            bound: Mutex::new(None),
+            conns: AtomicUsize::new(0),
             metrics: Metrics::new(),
+            slots: (0..cfg.workers.max(1)).map(|_| WorkerSlot::new()).collect(),
+            workers: Mutex::new(Vec::new()),
+            reload_lock: Mutex::new(()),
+            quarantine: Mutex::new(Vec::new()),
+            wedge: FaultArm::for_kind(&cfg.faults, FaultKind::Wedge),
+            badck: FaultArm::for_kind(&cfg.faults, FaultKind::BadCk),
             cfg,
         }
     }
@@ -59,32 +149,131 @@ impl Shared {
         *self.current.lock().unwrap() = Arc::new(art);
         self.generation.store(generation, Ordering::SeqCst);
     }
+
+    /// Any worker holding an in-flight batch? (Drain waits on this.)
+    pub fn any_busy(&self) -> bool {
+        self.slots.iter().any(WorkerSlot::busy)
+    }
 }
 
-pub fn spawn_workers(shared: &Arc<Shared>) -> Vec<JoinHandle<()>> {
-    (0..shared.cfg.workers.max(1))
-        .map(|i| {
-            let sh = Arc::clone(shared);
-            std::thread::Builder::new()
-                .name(format!("serve-worker-{i}"))
-                .spawn(move || worker_loop(&sh))
-                .expect("spawn serve worker")
-        })
-        .collect()
+/// Spawn the initial worker per slot, registering handles in
+/// `shared.workers` so the watchdog can replace them.
+pub fn spawn_workers(shared: &Arc<Shared>) {
+    let handles: Vec<Option<JoinHandle<()>>> = (0..shared.slots.len())
+        .map(|i| Some(spawn_worker(shared, i, 0)))
+        .collect();
+    *shared.workers.lock().unwrap() = handles;
 }
 
-fn worker_loop(shared: &Shared) {
+fn spawn_worker(shared: &Arc<Shared>, idx: usize, epoch: u64) -> JoinHandle<()> {
+    let sh = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name(format!("serve-worker-{idx}"))
+        .spawn(move || worker_loop(&sh, idx, epoch))
+        .expect("spawn serve worker")
+}
+
+/// Join every registered worker handle (shutdown path). Handles the
+/// watchdog detached (wedged threads) were already dropped.
+pub fn join_workers(shared: &Shared) {
+    let handles: Vec<_> = shared.workers.lock().unwrap().drain(..).collect();
+    for h in handles.into_iter().flatten() {
+        let _ = h.join();
+    }
+}
+
+/// The admission watchdog: scans worker slots and reclaims any claim
+/// older than `--watchdog-ms` — requeue the rows (front of the queue, so
+/// they dispatch next), bump the slot epoch, detach the wedged handle
+/// and spawn a replacement. Rows are never dropped; replies stay
+/// exactly-once via the claim-take arbitration.
+pub fn spawn_watchdog(shared: &Arc<Shared>) -> JoinHandle<()> {
+    let sh = Arc::clone(shared);
+    std::thread::Builder::new()
+        .name("serve-watchdog".into())
+        .spawn(move || watchdog_loop(&sh))
+        .expect("spawn serve watchdog")
+}
+
+fn watchdog_loop(shared: &Arc<Shared>) {
+    let deadline = Duration::from_millis(shared.cfg.watchdog_ms.max(1));
+    let tick = (deadline / 4)
+        .clamp(Duration::from_millis(5), Duration::from_millis(50));
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(tick);
+        for idx in 0..shared.slots.len() {
+            let slot = &shared.slots[idx];
+            if !slot.claim_age().is_some_and(|age| age > deadline) {
+                continue;
+            }
+            // The slot lock arbitrates completion vs steal: whoever takes
+            // the claim owns the replies. Re-check under the lock.
+            let stolen = {
+                let mut guard = slot.claim.lock().unwrap();
+                match guard.as_ref() {
+                    Some(c) if c.since.elapsed() > deadline => guard.take(),
+                    _ => None,
+                }
+            };
+            let Some(claim) = stolen else { continue };
+            let new_epoch = slot.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+            let rows: usize = claim.batch.iter().map(Pending::nrows).sum();
+            shared.queue.requeue(claim.batch);
+            shared
+                .metrics
+                .worker_restarts
+                .fetch_add(1, Ordering::Relaxed);
+            eprintln!(
+                "serve: watchdog replaced wedged worker {idx} \
+                 (batch overdue past {} ms; {rows} rows requeued)",
+                shared.cfg.watchdog_ms
+            );
+            let replacement = spawn_worker(shared, idx, new_epoch);
+            // Swapping the registry entry drops the wedged thread's
+            // handle — it is detached, never joined.
+            shared.workers.lock().unwrap()[idx] = Some(replacement);
+        }
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>, idx: usize, epoch: u64) {
+    let slot = &shared.slots[idx];
     let max_wait = Duration::from_micros(shared.cfg.max_wait_us);
     // (generation, engine, artifact) — rebuilt lazily when the shared
     // generation moves past ours.
     let mut engine: Option<(u64, NativeEngine, Arc<ModelArtifact>)> = None;
-    while let Some(batch) =
-        shared
-            .queue
-            .next_batch(shared.cfg.max_batch, max_wait, &shared.shutdown)
-    {
+    loop {
+        if slot.epoch.load(Ordering::SeqCst) != epoch {
+            return; // superseded by a watchdog replacement
+        }
+        let Some(batch) =
+            shared
+                .queue
+                .next_batch(shared.cfg.max_batch, max_wait, &shared.shutdown)
+        else {
+            return;
+        };
         if batch.is_empty() {
             continue;
+        }
+        if slot.epoch.load(Ordering::SeqCst) != epoch {
+            // Superseded between dispatch and park: hand the batch back.
+            shared.queue.requeue(batch);
+            return;
+        }
+        // Park the claim; from here until the completion-take the batch
+        // is visible to (and stealable by) the watchdog.
+        *slot.claim.lock().unwrap() = Some(Claim {
+            since: Instant::now(),
+            batch,
+        });
+        if let Some(arm) = &shared.wedge {
+            if arm.fires() {
+                eprintln!("fault-injection: serve worker {idx} wedged mid-batch");
+                loop {
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+            }
         }
         let want = shared.generation.load(Ordering::Relaxed);
         if engine.as_ref().map(|(g, ..)| *g) != Some(want) {
@@ -96,8 +285,10 @@ fn worker_loop(shared: &Shared) {
                     // before install — but a worker must never die with
                     // requests in hand.
                     let msg = format!("engine rebuild failed: {err:#}");
-                    for p in batch {
-                        let _ = p.resp.send(Err(msg.clone()));
+                    if let Some(claim) = slot.claim.lock().unwrap().take() {
+                        for p in claim.batch {
+                            let _ = p.resp.send(Err(msg.clone()));
+                        }
                     }
                     engine = None;
                     continue;
@@ -105,7 +296,7 @@ fn worker_loop(shared: &Shared) {
             }
         }
         let (_, eng, art) = engine.as_mut().expect("engine built above");
-        run_batch(shared, eng, art, batch);
+        run_batch(shared, slot, eng, art);
         // Numerics telemetry is thread-local: fold this worker's counters
         // into the shared roll-up so /admin/status sees all workers.
         if crate::telemetry::enabled() {
@@ -115,22 +306,33 @@ fn worker_loop(shared: &Shared) {
     }
 }
 
-/// One micro-batch: concatenate every pending's rows into a single
-/// `[n, features]` (or NCHW) tensor, run one forward, then split the
-/// logits back out per pending in queue order.
-fn run_batch(shared: &Shared, engine: &mut NativeEngine, art: &ModelArtifact, batch: Vec<Pending>) {
-    let n: usize = batch.iter().map(Pending::nrows).sum();
-    let mut data = Vec::with_capacity(n * art.in_features);
-    for p in &batch {
-        for row in &p.rows {
-            data.extend_from_slice(row);
+/// One micro-batch off the parked claim: copy every pending's rows into
+/// a single `[n, features]` (or NCHW) tensor, run one forward, then take
+/// the claim back and split the logits per pending in queue order. If
+/// the watchdog stole the claim mid-forward the result is discarded —
+/// the requeued rows get their (bit-identical) answer from the
+/// replacement worker instead.
+fn run_batch(shared: &Shared, slot: &WorkerSlot, engine: &mut NativeEngine, art: &ModelArtifact) {
+    let x = {
+        let guard = slot.claim.lock().unwrap();
+        let Some(claim) = guard.as_ref() else { return };
+        let n: usize = claim.batch.iter().map(Pending::nrows).sum();
+        let mut data = Vec::with_capacity(n * art.in_features);
+        for p in &claim.batch {
+            for row in &p.rows {
+                data.extend_from_slice(row);
+            }
         }
-    }
-    let x = Tensor::from_vec(&art.spec.input().shape(n), data);
+        Tensor::from_vec(&art.spec.input().shape(n), data)
+    };
     let logits = engine.predict_logits(x);
+    let Some(claim) = slot.claim.lock().unwrap().take() else {
+        return; // stolen by the watchdog; the replacement answers
+    };
+    let n: usize = claim.batch.iter().map(Pending::nrows).sum();
     shared.metrics.note_batch(n as u64);
     let mut offset = 0usize;
-    for p in batch {
+    for p in claim.batch {
         let out: Vec<RowOut> = (0..p.nrows())
             .map(|i| {
                 let row = &logits.data[(offset + i) * art.classes..(offset + i + 1) * art.classes];
@@ -170,5 +372,27 @@ mod tests {
         // NaN sits above +inf in the total order — still deterministic.
         assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 1);
         assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn slot_claim_take_is_exactly_once() {
+        use std::sync::mpsc;
+        let slot = WorkerSlot::new();
+        assert!(!slot.busy());
+        let (tx, _rx) = mpsc::channel();
+        *slot.claim.lock().unwrap() = Some(Claim {
+            since: Instant::now(),
+            batch: vec![Pending {
+                rows: vec![vec![0.0]],
+                resp: tx,
+                enqueued: Instant::now(),
+            }],
+        });
+        assert!(slot.busy());
+        assert!(slot.claim_age().is_some());
+        // First take wins (watchdog or worker — same primitive).
+        assert!(slot.claim.lock().unwrap().take().is_some());
+        assert!(slot.claim.lock().unwrap().take().is_none());
+        assert!(!slot.busy());
     }
 }

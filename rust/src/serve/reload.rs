@@ -7,6 +7,7 @@
 
 use crate::coordinator::NativeEngine;
 use crate::error::{Context, Result};
+use crate::faults::FaultArm;
 use crate::nn::{ModelSpec, PrecisionPolicy};
 use crate::state::{container, StateMap};
 
@@ -32,6 +33,23 @@ pub struct ModelArtifact {
     /// The decoded checkpoint, kept so each worker can restore its own
     /// private engine from shared immutable state.
     pub state: StateMap,
+}
+
+/// [`load_artifact`] with the `badck` fault arm applied: the k-th armed
+/// call fails artificially before touching the file, exercising the
+/// keep-old-model reload path and the `--watch` quarantine without
+/// needing a corrupt file on disk (`docs/robustness.md`, serve faults).
+pub fn load_artifact_armed(
+    path: &str,
+    generation: u64,
+    badck: Option<&FaultArm>,
+) -> Result<ModelArtifact> {
+    if let Some(arm) = badck {
+        if arm.fires() {
+            crate::bail!("fault-injection: badck rejected checkpoint {path}");
+        }
+    }
+    load_artifact(path, generation)
 }
 
 /// Read + decode + validate a checkpoint into a servable artifact.

@@ -1,0 +1,171 @@
+//! `--watch <dir>` checkpoint auto-discovery: a rolling deploy without
+//! touching the daemon. A trainer (or operator) writes a checkpoint to a
+//! temp name and **renames** it into the watched directory — the rename
+//! is atomic on POSIX filesystems, so the watcher never sees a partial
+//! file. The poller picks the newest `.fp8ck` by `(mtime, name)`,
+//! validates it off the worker threads via the ordinary reload path
+//! ([`super::reload_into`]) and swaps it in with a generation bump.
+//!
+//! Failure containment: a candidate that fails validation is
+//! **quarantined** — counted in `watch.rejected`, listed with its error
+//! under `watch.quarantine` on `/admin/status`, and never retried until
+//! the file itself changes (new identity). The old model keeps serving
+//! throughout; `badck` fault injection drives this path in the chaos
+//! suite without needing a corrupt file on disk.
+//!
+//! Files already present when the daemon starts are treated as *current*
+//! (the boot checkpoint was chosen explicitly); the watcher reacts only
+//! to candidates that appear or change afterwards.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use super::pool::Shared;
+
+/// A candidate's identity: path + mtime + length. Processing is keyed on
+/// this, so a rejected file is not retried until it actually changes,
+/// and a swap is not repeated for an unchanged file.
+type Candidate = (PathBuf, SystemTime, u64);
+
+/// Spawn the directory poller, or `None` when `--watch` is not set.
+pub fn spawn_watcher(shared: &Arc<Shared>) -> Option<JoinHandle<()>> {
+    shared.cfg.watch.as_ref()?;
+    let sh = Arc::clone(shared);
+    Some(
+        std::thread::Builder::new()
+            .name("serve-watch".into())
+            .spawn(move || watcher_loop(&sh))
+            .expect("spawn serve watcher"),
+    )
+}
+
+fn watcher_loop(shared: &Arc<Shared>) {
+    let dir = shared.cfg.watch.clone().expect("checked in spawn_watcher");
+    let interval = Duration::from_millis(shared.cfg.watch_interval_ms.max(10));
+    let mut last = newest_candidate(&dir);
+    loop {
+        // Nap in small slices so shutdown is noticed promptly even with a
+        // long poll interval.
+        let mut slept = Duration::ZERO;
+        while slept < interval {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let chunk = Duration::from_millis(50).min(interval - slept);
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+        if shared.draining.load(Ordering::SeqCst) {
+            continue; // a draining daemon has no future to deploy into
+        }
+        let Some(cand) = newest_candidate(&dir) else {
+            continue;
+        };
+        if last.as_ref() == Some(&cand) {
+            continue;
+        }
+        last = Some(cand.clone());
+        let path = cand.0.to_string_lossy().into_owned();
+        match super::reload_into(shared, &path) {
+            Ok(generation) => {
+                shared.metrics.watch_swaps.fetch_add(1, Ordering::Relaxed);
+                println!("serve: watch swapped in {path} (generation {generation})");
+            }
+            Err(e) => {
+                shared
+                    .metrics
+                    .watch_rejected
+                    .fetch_add(1, Ordering::Relaxed);
+                let mut q = shared.quarantine.lock().unwrap();
+                q.push((path.clone(), format!("{e:#}")));
+                // Bound the status payload: keep the newest few rejects.
+                if q.len() > 8 {
+                    let excess = q.len() - 8;
+                    q.drain(..excess);
+                }
+                drop(q);
+                eprintln!(
+                    "serve: watch rejected {path}: {e:#} \
+                     (quarantined — still serving the old model)"
+                );
+            }
+        }
+    }
+}
+
+/// The newest `*.fp8ck` regular file in `dir` by `(mtime, name)` — the
+/// name tie-break makes the choice deterministic on coarse-mtime
+/// filesystems. An unreadable directory yields `None` (transient; the
+/// next poll retries).
+fn newest_candidate(dir: &str) -> Option<Candidate> {
+    let mut best: Option<Candidate> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("fp8ck") {
+            continue;
+        }
+        let Ok(md) = entry.metadata() else { continue };
+        if !md.is_file() {
+            continue;
+        }
+        let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+        let len = md.len();
+        let newer = match &best {
+            None => true,
+            Some((bpath, bmtime, _)) => (mtime, &path) > (*bmtime, bpath),
+        };
+        if newer {
+            best = Some((path, mtime, len));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        let d = std::env::temp_dir().join(format!(
+            "fp8_watch_{tag}_{}_{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn newest_candidate_filters_extensions_and_prefers_newest_then_name() {
+        let d = tmp_dir("pick");
+        let dir = d.to_str().unwrap();
+        // Empty directory, then a non-checkpoint file: no candidate.
+        assert!(newest_candidate(dir).is_none());
+        std::fs::write(d.join("notes.txt"), b"x").unwrap();
+        assert!(newest_candidate(dir).is_none());
+        // One checkpoint: picked, with its identity.
+        std::fs::write(d.join("a.fp8ck"), b"aa").unwrap();
+        let first = newest_candidate(dir).expect("a.fp8ck");
+        assert!(first.0.ends_with("a.fp8ck"));
+        assert_eq!(first.2, 2);
+        // A later (or same-mtime, later-named) checkpoint wins.
+        std::thread::sleep(Duration::from_millis(20));
+        std::fs::write(d.join("b.fp8ck"), b"bbb").unwrap();
+        let second = newest_candidate(dir).expect("b.fp8ck");
+        assert!(second.0.ends_with("b.fp8ck"), "got {:?}", second.0);
+        // Rewriting a file changes its identity (len and/or mtime), which
+        // is what re-arms a quarantined path for another attempt.
+        std::thread::sleep(Duration::from_millis(20));
+        std::fs::write(d.join("b.fp8ck"), b"bbbb").unwrap();
+        let third = newest_candidate(dir).expect("b.fp8ck again");
+        assert!(third.0.ends_with("b.fp8ck"));
+        assert_ne!(second, third, "identity must move when the file changes");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

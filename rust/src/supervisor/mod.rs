@@ -105,6 +105,36 @@ fn backoff_delay(backoff_ms: u64, no_progress: usize) -> Duration {
     Duration::from_millis(backoff_ms.saturating_mul(1u64 << exp))
 }
 
+/// One human-readable description of how a reaped child died, unified
+/// across platforms: the exit code when there is one; on unix the killing
+/// signal, with the common ones named (an injected `abort` fault reaps as
+/// SIGABRT, a hard timeout kill as SIGKILL); and the platform's raw
+/// `ExitStatus` rendering as the fallback where neither is available
+/// (signal-death on non-unix surfaces this way). This string is what a
+/// terminal `failed` record carries in its `error` field.
+fn describe_exit(status: ExitStatus) -> String {
+    if let Some(code) = status.code() {
+        return format!("exit code {code}");
+    }
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        if let Some(sig) = status.signal() {
+            let name = match sig {
+                1 => " (SIGHUP)",
+                2 => " (SIGINT)",
+                6 => " (SIGABRT)",
+                9 => " (SIGKILL)",
+                11 => " (SIGSEGV)",
+                15 => " (SIGTERM)",
+                _ => "",
+            };
+            return format!("killed by signal {sig}{name}");
+        }
+    }
+    format!("abnormal exit ({status})")
+}
+
 /// The supervisor's CPU budget: an explicit `FP8TRAIN_THREADS` in the
 /// environment wins (that is the operator capping the whole sweep),
 /// otherwise the machine's available parallelism, falling back to 1.
@@ -403,7 +433,7 @@ pub fn run_supervised(def: &SweepDef, opts: &RunOpts) -> Result<()> {
                     let why = if status.success() {
                         "worker exited cleanly without writing its record".to_string()
                     } else {
-                        format!("worker crashed ({status})")
+                        format!("worker crashed ({})", describe_exit(status))
                     };
                     (why, "failed")
                 }
@@ -581,6 +611,25 @@ mod tests {
     #[test]
     fn missing_checkpoint_reads_as_zero_progress() {
         assert_eq!(ck_next_step("/nonexistent/dir/none.fp8ck"), 0);
+    }
+
+    #[test]
+    #[cfg(unix)]
+    fn describe_exit_decodes_codes_and_signals() {
+        use std::os::unix::process::ExitStatusExt;
+        // Raw wait statuses: exit(n) is n << 8, death by signal s is s.
+        assert_eq!(describe_exit(ExitStatus::from_raw(0)), "exit code 0");
+        assert_eq!(describe_exit(ExitStatus::from_raw(3 << 8)), "exit code 3");
+        assert_eq!(
+            describe_exit(ExitStatus::from_raw(6)),
+            "killed by signal 6 (SIGABRT)"
+        );
+        assert_eq!(
+            describe_exit(ExitStatus::from_raw(9)),
+            "killed by signal 9 (SIGKILL)"
+        );
+        // Uncommon signals still decode, just without a name.
+        assert_eq!(describe_exit(ExitStatus::from_raw(23)), "killed by signal 23");
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! Chaos contract for the serve daemon (`docs/serving.md`,
+//! `docs/robustness.md`): under injected faults, every accepted request
+//! is answered **exactly once** with bits identical to a single-row
+//! reference forward.
+//!
+//! Faults are injected through `ServeConfig::faults` rather than the
+//! `FP8TRAIN_FAULT` env var — tests in one binary run in parallel
+//! threads, and the env var is process-global.
+//!
+//! - `wedge`: a worker claims a batch and hangs forever. The admission
+//!   watchdog steals the claim, requeues the rows at the queue front,
+//!   detaches the wedged thread and spawns a replacement — the requester
+//!   sees one normal 200, never a duplicate or a drop.
+//! - `--watch`: a checkpoint renamed into the watched directory swaps in
+//!   with a generation bump and no restart; a corrupt candidate is
+//!   quarantined with its error on `/admin/status` while the old model
+//!   keeps serving.
+//! - `badck`: the armed reload path rejects a *valid* checkpoint once,
+//!   proving the keep-the-old-model guarantee without a corrupt file.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use fp8train::benchcmp::Json;
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::faults::FaultSpec;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
+use fp8train::serve::bench::synthetic_row;
+use fp8train::serve::{self, http, ServeConfig};
+use fp8train::state::StateMap;
+use fp8train::tensor::Tensor;
+
+const SPEC: &str = "in(6)-fc(8)-relu-fc(3)";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "fp8train_serve_chaos_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_checkpoint(spec: &ModelSpec, steps: u64, path: &Path) {
+    let mut engine = NativeEngine::new(spec, PrecisionPolicy::fp8_paper(), 7);
+    let ds = SyntheticDataset::for_model(spec, 7).with_sizes(64, 32);
+    for step in 0..steps {
+        let batch = ds.train_batch(step as usize % 8, 8);
+        engine.train_step(&batch, 0.02, step);
+    }
+    let mut map = StateMap::new();
+    engine.save_state(&mut map);
+    map.put_str("meta.model", &spec.id());
+    map.put_str("meta.policy", "fp8_paper");
+    map.put_u64("meta.seed", 7);
+    map.save_file(path).unwrap();
+}
+
+fn reference_bits(ck: &Path, spec: &ModelSpec, row: &[f32]) -> Vec<u32> {
+    let map = StateMap::load_file(ck).unwrap();
+    let mut engine = NativeEngine::new(spec, PrecisionPolicy::fp8_paper(), 7);
+    engine.load_model_state(&map).unwrap();
+    let x = Tensor::from_vec(&spec.input().shape(1), row.to_vec());
+    engine
+        .predict_logits(x)
+        .data
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+fn body_for(row: &[f32]) -> String {
+    let mut s = String::from("{\"row\":[");
+    for (i, v) in row.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// First prediction's logits as raw f32 bit patterns.
+fn logits_bits(body: &str) -> Vec<u32> {
+    let doc = Json::parse(body).unwrap_or_else(|e| panic!("bad predict body {body}: {e}"));
+    let mut out = Vec::new();
+    let mut j = 0;
+    while let Some(v) = doc.at(&format!("predictions.0.logits.{j}")) {
+        out.push((v.num().expect("finite logit") as f32).to_bits());
+        j += 1;
+    }
+    assert!(!out.is_empty(), "no logits in {body}");
+    out
+}
+
+fn status_num(addr: &str, path: &str) -> f64 {
+    let (code, body) = http::request(addr, "GET", "/admin/status", "").unwrap();
+    assert_eq!(code, 200, "{body}");
+    Json::parse(&body)
+        .unwrap()
+        .at(path)
+        .and_then(|v| v.num())
+        .unwrap_or_else(|| panic!("no numeric {path} in {body}"))
+}
+
+#[test]
+fn wedged_worker_is_restarted_and_every_request_answered_exactly_once() {
+    let dir = tmp_dir("wedge");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 4, &ck);
+
+    // Batch of one per request: the 2nd dispatched batch wedges its
+    // worker mid-claim. The watchdog (200 ms deadline) must steal the
+    // claim, requeue the row at the queue front and spawn a replacement.
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_batch: 1,
+        max_wait_us: 0,
+        watchdog_ms: 200,
+        faults: vec![FaultSpec::parse("wedge@2").unwrap()],
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let rows: Vec<Vec<f32>> = (0..8).map(|i| synthetic_row(6, i as u64)).collect();
+    let want: Vec<Vec<u32>> = rows.iter().map(|r| reference_bits(&ck, &spec, r)).collect();
+    let clients: Vec<_> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let addr = addr.clone();
+            let body = body_for(row);
+            std::thread::spawn(move || {
+                let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body)
+                    .unwrap_or_else(|e| panic!("request {i}: {e:#}"));
+                (i, code, resp)
+            })
+        })
+        .collect();
+    // Exactly-once: each client thread performs one request and gets one
+    // response; the stolen batch's reply comes from the replacement
+    // worker, never from the wedged one (its claim epoch is stale).
+    for h in clients {
+        let (i, code, resp) = h.join().unwrap();
+        assert_eq!(code, 200, "request {i} under wedge: {resp}");
+        assert_eq!(logits_bits(&resp), want[i], "request {i} drifted under wedge");
+    }
+
+    // Give the watchdog a beat in case replies raced the steal accounting.
+    let t0 = Instant::now();
+    loop {
+        if status_num(&addr, "resilience.worker_restarts") >= 1.0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "watchdog never recorded the worker restart"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // The wounded daemon still drains cleanly (the CI smoke's script).
+    let (code, resp) = http::request(&addr, "POST", "/admin/drain", "").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    let t0 = Instant::now();
+    while !handle.shared().shutdown.load(Ordering::SeqCst) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(6),
+            "drain after wedge recovery did not complete"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn watch_swaps_renamed_checkpoints_and_quarantines_corrupt_ones() {
+    let dir = tmp_dir("watch");
+    let watch_dir = dir.join("drop");
+    std::fs::create_dir_all(&watch_dir).unwrap();
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    let ck_a = dir.join("a.fp8ck"); // boot checkpoint lives OUTSIDE the watched dir
+    make_checkpoint(&spec, 3, &ck_a);
+    let row = synthetic_row(6, 2);
+    let want_a = reference_bits(&ck_a, &spec, &row);
+
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck_a.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 2,
+        max_wait_us: 200,
+        watch: Some(watch_dir.display().to_string()),
+        watch_interval_ms: 50,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(logits_bits(&resp), want_a);
+
+    // Deploy model B the documented way: write to a temp name, rename in.
+    let staging = dir.join("b.staging");
+    make_checkpoint(&spec, 9, &staging);
+    let want_b = reference_bits(&staging, &spec, &row);
+    assert_ne!(want_a, want_b, "the two checkpoints must actually differ");
+    std::fs::rename(&staging, watch_dir.join("b.fp8ck")).unwrap();
+
+    let t0 = Instant::now();
+    loop {
+        if status_num(&addr, "checkpoint.generation") >= 2.0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watcher never swapped in the renamed checkpoint"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(status_num(&addr, "resilience.watch.swaps") >= 1.0);
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(logits_bits(&resp), want_b, "post-swap prediction is not model B");
+
+    // A corrupt candidate (newer than B) is quarantined, and model B
+    // keeps serving — generation does not move.
+    std::thread::sleep(Duration::from_millis(20));
+    let junk = dir.join("c.staging");
+    std::fs::write(&junk, b"this is not a checkpoint").unwrap();
+    std::fs::rename(&junk, watch_dir.join("c.fp8ck")).unwrap();
+    let t0 = Instant::now();
+    loop {
+        if status_num(&addr, "resilience.watch.rejected") >= 1.0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "watcher never quarantined the corrupt checkpoint"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let (code, status) = http::request(&addr, "GET", "/admin/status", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(status.contains("c.fp8ck"), "quarantine must name the file: {status}");
+    assert_eq!(status_num(&addr, "checkpoint.generation"), 2.0, "corrupt candidate must not swap");
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(logits_bits(&resp), want_b, "quarantine must keep the old model");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn badck_fault_rejects_one_reload_and_keeps_the_old_model() {
+    let dir = tmp_dir("badck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    let ck_a = dir.join("a.fp8ck");
+    let ck_b = dir.join("b.fp8ck");
+    make_checkpoint(&spec, 3, &ck_a);
+    make_checkpoint(&spec, 9, &ck_b);
+    let row = synthetic_row(6, 1);
+    let want_a = reference_bits(&ck_a, &spec, &row);
+    let want_b = reference_bits(&ck_b, &spec, &row);
+
+    // badck@1: the first armed (re)load fails even though the file is
+    // valid. The boot load is unarmed, so the daemon starts normally.
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck_a.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 2,
+        max_wait_us: 200,
+        faults: vec![FaultSpec::parse("badck@1").unwrap()],
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    let reload_body = format!("{{\"checkpoint\":\"{}\"}}", ck_b.display());
+
+    let (code, resp) = http::request(&addr, "POST", "/admin/reload", &reload_body).unwrap();
+    assert_eq!(code, 500, "armed badck must reject the reload: {resp}");
+    assert!(resp.contains("fault-injection"), "{resp}");
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(logits_bits(&resp), want_a, "failed reload must keep model A");
+    let (_, status) = http::request(&addr, "GET", "/admin/status", "").unwrap();
+    assert!(status.contains("\"last_reload_error\":\""), "{status}");
+    assert_eq!(status_num(&addr, "checkpoint.generation"), 1.0);
+
+    // The arm fires exactly once: the retry succeeds and swaps in B.
+    let (code, resp) = http::request(&addr, "POST", "/admin/reload", &reload_body).unwrap();
+    assert_eq!(code, 200, "retry after badck must succeed: {resp}");
+    assert_eq!(status_num(&addr, "checkpoint.generation"), 2.0);
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(logits_bits(&resp), want_b, "post-retry prediction is not model B");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,379 @@
+//! Serving resilience contract (`docs/serving.md`, "Lifecycle & failure
+//! modes"): graceful drain answers every queued request and flips healthz
+//! to 503 (idempotently), SIGTERM is the same drain, keep-alive
+//! connections serve many bit-identical requests and rotate at
+//! `--max-requests-per-conn`, slow-loris clients are shed with 408, and
+//! the `--max-conns` accept cap sheds with `Retry-After`.
+
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
+use fp8train::serve::bench::synthetic_row;
+use fp8train::serve::{self, http, ServeConfig};
+use fp8train::state::StateMap;
+use fp8train::tensor::Tensor;
+
+const SPEC: &str = "in(6)-fc(8)-relu-fc(3)";
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "fp8train_serve_res_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn make_checkpoint(spec: &ModelSpec, steps: u64, path: &Path) {
+    let mut engine = NativeEngine::new(spec, PrecisionPolicy::fp8_paper(), 7);
+    let ds = SyntheticDataset::for_model(spec, 7).with_sizes(64, 32);
+    for step in 0..steps {
+        let batch = ds.train_batch(step as usize % 8, 8);
+        engine.train_step(&batch, 0.02, step);
+    }
+    let mut map = StateMap::new();
+    engine.save_state(&mut map);
+    map.put_str("meta.model", &spec.id());
+    map.put_str("meta.policy", "fp8_paper");
+    map.put_u64("meta.seed", 7);
+    map.save_file(path).unwrap();
+}
+
+fn reference_bits(ck: &Path, spec: &ModelSpec, row: &[f32]) -> Vec<u32> {
+    let map = StateMap::load_file(ck).unwrap();
+    let mut engine = NativeEngine::new(spec, PrecisionPolicy::fp8_paper(), 7);
+    engine.load_model_state(&map).unwrap();
+    let x = Tensor::from_vec(&spec.input().shape(1), row.to_vec());
+    engine
+        .predict_logits(x)
+        .data
+        .iter()
+        .map(|v| v.to_bits())
+        .collect()
+}
+
+fn body_for(row: &[f32]) -> String {
+    let mut s = String::from("{\"row\":[");
+    for (i, v) in row.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{v}"));
+    }
+    s.push_str("]}");
+    s
+}
+
+/// First prediction's logits as raw f32 bit patterns.
+fn logits_bits(body: &str) -> Vec<u32> {
+    use fp8train::benchcmp::Json;
+    let doc = Json::parse(body).unwrap_or_else(|e| panic!("bad predict body {body}: {e}"));
+    let mut out = Vec::new();
+    let mut j = 0;
+    while let Some(v) = doc.at(&format!("predictions.0.logits.{j}")) {
+        out.push((v.num().expect("finite logit") as f32).to_bits());
+        j += 1;
+    }
+    assert!(!out.is_empty(), "no logits in {body}");
+    out
+}
+
+fn wait_for_shutdown(handle: &serve::ServerHandle, budget: Duration) {
+    let t0 = Instant::now();
+    while !handle.shared().shutdown.load(Ordering::SeqCst) {
+        assert!(
+            t0.elapsed() < budget,
+            "daemon did not shut down within {budget:?} after drain"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn admin_drain_answers_queued_requests_then_shuts_down_idempotently() {
+    let dir = tmp_dir("drain");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 3, &ck);
+
+    // One worker, a large batch budget and a long coalescing window:
+    // requests sit in the queue long enough for the drain to overlap them.
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 8,
+        max_wait_us: 400_000,
+        drain_timeout_ms: 5_000,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let rows: Vec<Vec<f32>> = (0..3).map(|i| synthetic_row(6, i as u64)).collect();
+    let want: Vec<Vec<u32>> = rows.iter().map(|r| reference_bits(&ck, &spec, r)).collect();
+    let clients: Vec<_> = rows
+        .iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let addr = addr.clone();
+            let body = body_for(row);
+            std::thread::spawn(move || {
+                let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body)
+                    .unwrap_or_else(|e| panic!("queued request {i}: {e:#}"));
+                (i, code, resp)
+            })
+        })
+        .collect();
+    // Let the requests land in the queue before draining.
+    std::thread::sleep(Duration::from_millis(100));
+
+    let (code, resp) = http::request(&addr, "POST", "/admin/drain", "").unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert!(resp.contains("\"draining\":true"), "{resp}");
+
+    // Draining: healthz flips to 503 with a Retry-After hint, new predict
+    // work is rejected 503, and a second drain is an idempotent 200.
+    let mut probe = http::Client::new(&addr);
+    let health = probe.request("GET", "/healthz", "").unwrap();
+    assert_eq!(health.status, 503, "{}", health.body);
+    assert!(health.body.contains("\"draining\":true"), "{}", health.body);
+    assert!(
+        health.retry_after.is_some_and(|s| s >= 1),
+        "drain-mode healthz must carry Retry-After: {health:?}"
+    );
+    let shed = probe
+        .request("POST", "/v1/predict", &body_for(&rows[0]))
+        .unwrap();
+    assert_eq!(shed.status, 503, "{}", shed.body);
+    assert!(shed.retry_after.is_some_and(|s| s >= 1), "{shed:?}");
+    let again = probe.request("POST", "/admin/drain", "").unwrap();
+    assert_eq!(again.status, 200, "second drain must stay 200: {}", again.body);
+    assert!(again.body.contains("\"draining\":true"), "{}", again.body);
+
+    // Every request accepted before the drain is answered, bit-identically.
+    for h in clients {
+        let (i, code, resp) = h.join().unwrap();
+        assert_eq!(code, 200, "queued request {i} must be answered: {resp}");
+        assert_eq!(logits_bits(&resp), want[i], "queued request {i} drifted");
+    }
+
+    // The pipeline is empty, so the drain completes well inside its bound.
+    wait_for_shutdown(&handle, Duration::from_secs(4));
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[cfg(unix)]
+#[test]
+fn sigterm_drains_and_run_returns() {
+    extern "C" {
+        fn raise(sig: i32) -> i32;
+    }
+    const SIGTERM: i32 = 15;
+
+    let dir = tmp_dir("sigterm");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 2, &ck);
+    let port_file = dir.join("serve.addr");
+
+    let cfg = ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 2,
+        max_wait_us: 200,
+        port_file: Some(port_file.display().to_string()),
+        drain_timeout_ms: 5_000,
+        ..ServeConfig::default()
+    };
+    let daemon = std::thread::spawn(move || serve::run(cfg));
+
+    // Discover the ephemeral port, prove the daemon is healthy.
+    let t0 = Instant::now();
+    let addr = loop {
+        if let Ok(a) = std::fs::read_to_string(&port_file) {
+            break a.trim().to_string();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "port file never appeared");
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    let (code, _) = http::request(&addr, "GET", "/healthz", "").unwrap();
+    assert_eq!(code, 200);
+    let row = synthetic_row(6, 0);
+    let want = reference_bits(&ck, &spec, &row);
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_eq!(logits_bits(&resp), want);
+
+    // SIGTERM: run() notices within its poll interval, drains, returns Ok.
+    unsafe {
+        raise(SIGTERM);
+    }
+    let t0 = Instant::now();
+    loop {
+        if daemon.is_finished() {
+            daemon.join().unwrap().unwrap();
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "run() did not return after SIGTERM"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // The listener is gone: a fresh connect must fail.
+    assert!(
+        TcpStream::connect(&addr).is_err(),
+        "drained daemon still accepting"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn keep_alive_serves_bit_identically_and_rotates_at_max_requests() {
+    let dir = tmp_dir("keepalive");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 3, &ck);
+
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 2,
+        max_batch: 4,
+        max_wait_us: 200,
+        max_requests_per_conn: 3,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    let row = synthetic_row(6, 5);
+    let want = reference_bits(&ck, &spec, &row);
+    let body = body_for(&row);
+    let mut client = http::Client::new(&addr);
+    for i in 0..9 {
+        let resp = client.request("POST", "/v1/predict", &body).unwrap();
+        assert_eq!(resp.status, 200, "request {i}: {}", resp.body);
+        assert_eq!(logits_bits(&resp.body), want, "request {i} drifted");
+    }
+    // Rotation closes the connection after every 3rd response: 9 requests
+    // need exactly 3 TCP connects — keep-alive within each window.
+    assert_eq!(client.connects(), 3, "rotation should force 3 connects");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn slow_loris_is_shed_with_408_and_counted() {
+    let dir = tmp_dir("loris");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 2, &ck);
+
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 2,
+        max_wait_us: 200,
+        io_timeout_ms: 300,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // Dribble 2 bytes per 100 ms: the 300 ms whole-request budget expires
+    // mid-headers. A 408 response or a hard close both count as the shed.
+    let shed = http::request_slow(
+        &addr,
+        "POST",
+        "/v1/predict",
+        "{\"row\":[1,2,3,4,5,6]}",
+        2,
+        Duration::from_millis(100),
+    )
+    .unwrap();
+    if let Some(resp) = &shed {
+        assert_eq!(resp.status, 408, "{}", resp.body);
+    }
+
+    // The daemon is unharmed and the shed is visible on /admin/status.
+    let (code, status) = http::request(&addr, "GET", "/admin/status", "").unwrap();
+    assert_eq!(code, 200);
+    assert!(
+        !status.contains("\"shed_slow\":0"),
+        "shed_slow must have counted the slow-loris client: {status}"
+    );
+    let row = synthetic_row(6, 0);
+    let (code, resp) = http::request(&addr, "POST", "/v1/predict", &body_for(&row)).unwrap();
+    assert_eq!(code, 200, "{resp}");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn max_conns_cap_sheds_with_retry_after() {
+    let dir = tmp_dir("maxconns");
+    let ck = dir.join("a.fp8ck");
+    let spec = ModelSpec::resolve(SPEC).unwrap();
+    make_checkpoint(&spec, 2, &ck);
+
+    let handle = serve::start(ServeConfig {
+        checkpoint: ck.display().to_string(),
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        max_batch: 2,
+        max_wait_us: 200,
+        max_conns: 1,
+        idle_timeout_ms: 10_000,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+
+    // Occupy the single connection slot with an idle keep-alive client.
+    let hog = TcpStream::connect(&addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+
+    // The next connection is shed at accept: 503 with a Retry-After hint.
+    let mut client = http::Client::new(&addr);
+    let resp = client.request("GET", "/healthz", "").unwrap();
+    assert_eq!(resp.status, 503, "{}", resp.body);
+    assert!(resp.body.contains("connection limit"), "{}", resp.body);
+    assert!(resp.retry_after.is_some_and(|s| s >= 1), "{resp:?}");
+
+    // Release the slot; the conn thread notices the disconnect and the
+    // daemon serves normally again, with the shed on the books.
+    drop(hog);
+    let t0 = Instant::now();
+    let status = loop {
+        let mut c = http::Client::new(&addr);
+        if let Ok(r) = c.request("GET", "/admin/status", "") {
+            if r.status == 200 {
+                break r.body;
+            }
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "slot never freed after the hog disconnected"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    assert!(
+        !status.contains("\"shed_max_conns\":0"),
+        "shed_max_conns must have counted the capped connection: {status}"
+    );
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -18,7 +18,7 @@ use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
-use crate::error::{Context, Result};
+use crate::error::{Context, Error, Result};
 
 /// Request bodies above this are refused with `413` before any read of
 /// the payload (a predict row is a few KB of JSON; 1 MiB is generous).
@@ -93,11 +93,15 @@ struct DeadlineReader<'a> {
     buf: [u8; 4096],
     pos: usize,
     len: usize,
+    /// Any byte ever received on this reader — the client side uses it
+    /// to tell "server closed without answering" (retry-safe) from
+    /// "connection died mid-response" (request may have executed).
+    got_any: bool,
 }
 
 impl<'a> DeadlineReader<'a> {
     fn new(stream: &'a TcpStream) -> Self {
-        DeadlineReader { stream, buf: [0; 4096], pos: 0, len: 0 }
+        DeadlineReader { stream, buf: [0; 4096], pos: 0, len: 0, got_any: false }
     }
 
     /// Ensure at least one buffered byte, waiting no later than
@@ -117,6 +121,7 @@ impl<'a> DeadlineReader<'a> {
             Ok(n) => {
                 self.pos = 0;
                 self.len = n;
+                self.got_any = true;
                 Ok(Fill::Data)
             }
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
@@ -312,33 +317,70 @@ pub struct Response {
     pub retry_after: Option<u64>,
 }
 
+/// Why a framed response read failed, split on the retry-safety line:
+/// `NoBytes` means the connection closed before a single response byte —
+/// this server always writes a response before closing a connection
+/// whose request it parsed, so the request cannot have executed and a
+/// retry is safe even for non-idempotent endpoints. Everything else
+/// (`Other`) may follow a processed request and must never be retried.
+enum RespReadError {
+    NoBytes(Error),
+    Other(Error),
+}
+
+impl RespReadError {
+    fn into_inner(self) -> Error {
+        match self {
+            RespReadError::NoBytes(e) | RespReadError::Other(e) => e,
+        }
+    }
+}
+
 /// Parse one `Content-Length`-framed response off the stream. Returns
 /// the response plus whether the server announced `Connection: close`.
 fn read_framed_response(
     stream: &TcpStream,
     deadline: Instant,
-) -> Result<(Response, bool)> {
+) -> std::result::Result<(Response, bool), RespReadError> {
+    use RespReadError::{NoBytes, Other};
     let mut r = DeadlineReader::new(stream);
     let status_line = match r.read_line(deadline) {
         Ok(LineOutcome::Line(l)) => l,
-        Ok(LineOutcome::Eof) => crate::bail!("connection closed before status line"),
-        Ok(LineOutcome::TimedOut) => crate::bail!("timed out reading status line"),
-        Err(e) => return Err(e).context("read status line"),
+        Ok(LineOutcome::Eof) if !r.got_any => {
+            return Err(NoBytes(Error::msg("connection closed before any response byte")))
+        }
+        Ok(LineOutcome::Eof) => {
+            return Err(Other(Error::msg("connection closed mid status line")))
+        }
+        Ok(LineOutcome::TimedOut) => {
+            return Err(Other(Error::msg("timed out reading status line")))
+        }
+        // An io error (e.g. ECONNRESET from a torn-down keep-alive peer)
+        // before any response byte is the same no-response situation as a
+        // clean EOF; a timeout is NOT — the server may still be working.
+        Err(e) if !r.got_any => {
+            return Err(NoBytes(Error::from(e).wrap("read status line")))
+        }
+        Err(e) => return Err(Other(Error::from(e).wrap("read status line"))),
     };
     let status: u16 = status_line
         .split_whitespace()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .with_context(|| format!("bad status line {status_line:?}"))?;
+        .ok_or_else(|| Other(Error::msg(format!("bad status line {status_line:?}"))))?;
     let mut content_length = 0usize;
     let mut close = false;
     let mut retry_after = None;
     loop {
         let h = match r.read_line(deadline) {
             Ok(LineOutcome::Line(l)) => l,
-            Ok(LineOutcome::Eof) => crate::bail!("connection closed mid response headers"),
-            Ok(LineOutcome::TimedOut) => crate::bail!("timed out reading response headers"),
-            Err(e) => return Err(e).context("read response header"),
+            Ok(LineOutcome::Eof) => {
+                return Err(Other(Error::msg("connection closed mid response headers")))
+            }
+            Ok(LineOutcome::TimedOut) => {
+                return Err(Other(Error::msg("timed out reading response headers")))
+            }
+            Err(e) => return Err(Other(Error::from(e).wrap("read response header"))),
         };
         if h.is_empty() {
             break;
@@ -357,9 +399,13 @@ fn read_framed_response(
     let mut body = vec![0u8; content_length];
     match r.read_exact(&mut body, deadline) {
         Ok(Fill::Data) => {}
-        Ok(Fill::Eof) => crate::bail!("connection closed mid response body"),
-        Ok(Fill::TimedOut) => crate::bail!("timed out reading response body"),
-        Err(e) => return Err(e).context("read response body"),
+        Ok(Fill::Eof) => {
+            return Err(Other(Error::msg("connection closed mid response body")))
+        }
+        Ok(Fill::TimedOut) => {
+            return Err(Other(Error::msg("timed out reading response body")))
+        }
+        Err(e) => return Err(Other(Error::from(e).wrap("read response body"))),
     }
     let body = String::from_utf8_lossy(&body).into_owned();
     Ok((Response { status, body, retry_after }, close))
@@ -407,15 +453,20 @@ impl Client {
     /// Issue one request on the persistent connection. A failure on a
     /// *reused* connection (the server may have rotated or idled it out
     /// between requests — an inherent keep-alive race) is retried once
-    /// on a fresh connection; a fresh-connection failure is the error.
+    /// on a fresh connection — but **only** when the failure proves the
+    /// server cannot have processed the request (write failure, or the
+    /// connection closed before a single response byte). A failure after
+    /// response bytes started flowing — e.g. a read timeout — is never
+    /// retried: for a non-idempotent endpoint like `/admin/reload` that
+    /// would double-execute it.
     pub fn request(&mut self, method: &str, path: &str, body: &str) -> Result<Response> {
         let reused = self.stream.is_some();
         match self.try_request(method, path, body) {
             Ok(resp) => Ok(resp),
-            Err(e) => {
+            Err((retry_safe, e)) => {
                 self.stream = None;
-                if reused {
-                    self.try_request(method, path, body)
+                if reused && retry_safe {
+                    self.try_request(method, path, body).map_err(|(_, e)| e)
                 } else {
                     Err(e)
                 }
@@ -423,23 +474,41 @@ impl Client {
         }
     }
 
-    fn try_request(&mut self, method: &str, path: &str, body: &str) -> Result<Response> {
+    /// One attempt; errors carry whether a retry is safe (the request
+    /// provably never reached execution).
+    fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+    ) -> std::result::Result<Response, (bool, Error)> {
         let timeout = self.timeout;
         let addr = self.addr.clone();
-        let stream = self.ensure_stream()?;
+        let stream = self.ensure_stream().map_err(|e| (false, e))?;
         let req = format!(
             "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
             body.len()
         );
         let mut w = stream;
+        // A write failure means the request was at most partially
+        // delivered — unframable, so it cannot have executed: retry-safe.
         w.write_all(req.as_bytes())
-            .with_context(|| format!("send {method} {path}"))?;
-        let (resp, close) = read_framed_response(stream, Instant::now() + timeout)
-            .with_context(|| format!("read {method} {path} response"))?;
-        if close {
-            self.stream = None;
+            .map_err(|e| (true, Error::from(e).wrap(format!("send {method} {path}"))))?;
+        match read_framed_response(stream, Instant::now() + timeout) {
+            Ok((resp, close)) => {
+                if close {
+                    self.stream = None;
+                }
+                Ok(resp)
+            }
+            Err(e) => {
+                let retry_safe = matches!(e, RespReadError::NoBytes(_));
+                Err((
+                    retry_safe,
+                    e.into_inner().wrap(format!("read {method} {path} response")),
+                ))
+            }
         }
-        Ok(resp)
     }
 }
 
@@ -458,7 +527,7 @@ pub fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16,
     w.write_all(req.as_bytes())
         .with_context(|| format!("send {method} {path}"))?;
     let (resp, _close) = read_framed_response(&stream, Instant::now() + Duration::from_secs(60))
-        .with_context(|| format!("read {method} {path} response"))?;
+        .map_err(|e| e.into_inner().wrap(format!("read {method} {path} response")))?;
     Ok((resp.status, resp.body))
 }
 
@@ -564,6 +633,75 @@ mod tests {
             assert_eq!(resp.body, format!("{{\"n\":{i}}}"));
         }
         assert_eq!(client.connects(), 1, "three requests, one TCP connect");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn client_retries_when_reused_connection_closed_unanswered() {
+        // Server answers request 1 keep-alive, then closes the connection
+        // without reading request 2 (the rotation/idle race). The client
+        // saw zero response bytes for request 2 — retry-safe — and must
+        // transparently reconnect and succeed.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream, &budget()).ok().unwrap();
+            let opts = RespOpts { keep_alive: true, retry_after: None };
+            write_response_opts(&stream, 200, "{\"n\":0}", opts).unwrap();
+            drop(stream); // rotate without reading the next request
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream, &budget()).ok().unwrap();
+            write_response(&stream, 200, "{\"n\":1}").unwrap();
+        });
+        let mut client = Client::new(&addr);
+        assert_eq!(client.request("POST", "/v1/predict", "{}").unwrap().body, "{\"n\":0}");
+        let resp = client.request("POST", "/v1/predict", "{}").unwrap();
+        assert_eq!(resp.body, "{\"n\":1}", "retried on a fresh connection");
+        assert_eq!(client.connects(), 2);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn client_does_not_retry_after_response_bytes_arrived() {
+        // Request 2's response dies mid-status-line: the server may have
+        // executed the request (think POST /admin/reload), so the client
+        // must surface the error instead of silently re-sending.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let h = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let _ = read_request(&stream, &budget()).ok().unwrap();
+            let opts = RespOpts { keep_alive: true, retry_after: None };
+            write_response_opts(&stream, 200, "{}", opts).unwrap();
+            let _ = read_request(&stream, &budget()).ok().unwrap();
+            let mut w = &stream;
+            w.write_all(b"HTTP/1.1 20").unwrap(); // partial, then close
+            drop(stream);
+            // Stay ready to answer a (wrongful) retry with a 200, which
+            // would flip the client-side Err assertion below — so a
+            // regression shows up as a clean failure, not a hang.
+            listener.set_nonblocking(true).unwrap();
+            let t0 = Instant::now();
+            while t0.elapsed() < Duration::from_millis(500) {
+                match listener.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false).unwrap();
+                        let _ = read_request(&s, &budget());
+                        let _ = write_response(&s, 200, "{}");
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        });
+        let mut client = Client::new(&addr);
+        assert_eq!(client.request("POST", "/admin/reload", "{}").unwrap().status, 200);
+        assert!(
+            client.request("POST", "/admin/reload", "{}").is_err(),
+            "mid-response failure must not be retried"
+        );
+        assert_eq!(client.connects(), 1, "no silent re-send on a fresh connection");
         h.join().unwrap();
     }
 

@@ -297,7 +297,14 @@ fn drain_loop(shared: &Arc<Shared>) {
         if shared.shutdown.load(Ordering::SeqCst) {
             return; // a hard shutdown overtook the drain
         }
-        let idle = shared.queue.depth_rows() == 0 && !shared.any_busy();
+        // Idle = nothing queued, nothing parked in a worker slot, and no
+        // predict handler between its draining check and its reply (the
+        // admissions counter) — without the last term a request that
+        // passed the gate but had not yet pushed could be orphaned by
+        // flipping shutdown here.
+        let idle = shared.admissions.load(Ordering::SeqCst) == 0
+            && shared.queue.depth_rows() == 0
+            && !shared.any_busy();
         if idle {
             println!("serve: drained — queue empty, workers idle");
             break;
@@ -350,15 +357,30 @@ fn accept_loop(listener: TcpListener, shared: &Arc<Shared>) {
         }
         shared.metrics.conns_opened.fetch_add(1, Ordering::Relaxed);
         let sh = Arc::clone(shared);
+        let slot = ConnSlot(Arc::clone(shared));
         // One thread per live connection (bounded by --max-conns): a
         // keep-alive connection serves many requests; predict handlers
-        // block on their batch's response channel.
+        // block on their batch's response channel. The slot guard rides
+        // in the closure, so the count is released whether the thread
+        // returns, panics, or the spawn itself fails (the unspawned
+        // closure is dropped with its captures).
         let _ = std::thread::Builder::new()
             .name("serve-conn".into())
             .spawn(move || {
+                let _slot = slot;
                 handle_connection(&sh, &stream);
-                sh.conns.fetch_sub(1, Ordering::SeqCst);
             });
+    }
+}
+
+/// Holds one unit of the live-connection count; `Drop` releases it, so
+/// neither a panicking connection thread nor a failed spawn can leak the
+/// slot toward `--max-conns`.
+struct ConnSlot(Arc<Shared>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -553,8 +575,24 @@ fn parse_rows(body: &[u8], want_len: usize) -> std::result::Result<Vec<Vec<f32>>
     Ok(out)
 }
 
+/// Holds one unit of `Shared::admissions` for the span of a predict
+/// handler — acquired *before* the draining check so the drain
+/// idle-detector cannot flip shutdown between our gate passing and our
+/// push landing on the queue (SeqCst on both sides makes the pair
+/// race-free: either we observe `draining` or the drain loop observes
+/// our admission).
+struct AdmissionGuard<'a>(&'a Shared);
+
+impl Drop for AdmissionGuard<'_> {
+    fn drop(&mut self) {
+        self.0.admissions.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 fn predict(shared: &Shared, body: &[u8]) -> (u16, String, Option<u64>) {
     shared.metrics.predict.hit();
+    shared.admissions.fetch_add(1, Ordering::SeqCst);
+    let _admission = AdmissionGuard(shared);
     if shared.draining.load(Ordering::SeqCst) {
         shared.metrics.predict.err();
         shared

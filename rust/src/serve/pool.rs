@@ -18,12 +18,15 @@
 //! arbitration: the admission watchdog reclaims any claim older than
 //! `--watchdog-ms` — requeues its rows at the queue *front*, detaches
 //! the wedged thread's handle and spawns a replacement into the same
-//! slot — and whichever side `take()`s the claim owns the replies. A
-//! slow-but-alive worker that loses the race finds its slot empty,
-//! discards its result, and exits on the bumped slot epoch; the
-//! replacement answers instead. Every accepted request is therefore
-//! answered **exactly once** even under an injected `wedge` fault
-//! (`docs/serving.md`, "Lifecycle & failure modes").
+//! slot — and whichever side takes the claim owns the replies. Every
+//! claim is stamped with the parking worker's slot epoch and the
+//! completion-take is conditional on it, so a slow-but-alive worker
+//! that loses the race cannot take a claim the replacement parked in
+//! the meantime: it finds no claim with its epoch, discards its stale
+//! result, and exits on the bumped slot epoch; the replacement answers
+//! instead. Every accepted request is therefore answered **exactly
+//! once** even under an injected `wedge` fault (`docs/serving.md`,
+//! "Lifecycle & failure modes").
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -38,9 +41,13 @@ use crate::coordinator::NativeEngine;
 use crate::faults::{FaultArm, FaultKind};
 use crate::tensor::Tensor;
 
-/// A batch a worker has taken off the queue but not yet answered.
+/// A batch a worker has taken off the queue but not yet answered. The
+/// `epoch` stamps the parking worker: completion-takes are conditional
+/// on it, so a slow-but-alive worker whose claim was stolen can never
+/// take the *replacement's* claim and answer it with stale logits.
 pub struct Claim {
     pub since: Instant,
+    pub epoch: u64,
     pub batch: Vec<Pending>,
 }
 
@@ -73,6 +80,18 @@ impl WorkerSlot {
             .as_ref()
             .map(|c| c.since.elapsed())
     }
+
+    /// Take the parked claim only if it is still the one parked by the
+    /// worker at `epoch`. A stolen-and-replaced claim belongs to the
+    /// replacement worker; the superseded thread gets `None` and must
+    /// discard its result.
+    fn take_if(&self, epoch: u64) -> Option<Claim> {
+        let mut guard = self.claim.lock().unwrap();
+        match guard.as_ref() {
+            Some(c) if c.epoch == epoch => guard.take(),
+            _ => None,
+        }
+    }
 }
 
 /// Everything the accept loop, connection threads and workers share.
@@ -95,6 +114,12 @@ pub struct Shared {
     pub bound: Mutex<Option<std::net::SocketAddr>>,
     /// Live connection count, against `--max-conns`.
     pub conns: AtomicUsize,
+    /// Predict admissions in flight: incremented before the draining
+    /// check, held until the handler has its reply. The drain lifecycle
+    /// requires this to be zero before declaring the pipeline idle, so
+    /// a request that passed the draining gate but has not yet pushed
+    /// onto the queue cannot be orphaned by an early shutdown.
+    pub admissions: AtomicUsize,
     pub metrics: Metrics,
     /// One slot per worker index (fixed size `cfg.workers`).
     pub slots: Vec<WorkerSlot>,
@@ -125,6 +150,7 @@ impl Shared {
             drain_deadline: Mutex::new(None),
             bound: Mutex::new(None),
             conns: AtomicUsize::new(0),
+            admissions: AtomicUsize::new(0),
             metrics: Metrics::new(),
             slots: (0..cfg.workers.max(1)).map(|_| WorkerSlot::new()).collect(),
             workers: Mutex::new(Vec::new()),
@@ -261,20 +287,10 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize, epoch: u64) {
             shared.queue.requeue(batch);
             return;
         }
-        // Park the claim; from here until the completion-take the batch
-        // is visible to (and stealable by) the watchdog.
-        *slot.claim.lock().unwrap() = Some(Claim {
-            since: Instant::now(),
-            batch,
-        });
-        if let Some(arm) = &shared.wedge {
-            if arm.fires() {
-                eprintln!("fault-injection: serve worker {idx} wedged mid-batch");
-                loop {
-                    std::thread::sleep(Duration::from_millis(500));
-                }
-            }
-        }
+        // Rebuild the engine BEFORE parking the claim: the claim window
+        // is the watchdog's timer, and a post-reload rebuild slower than
+        // --watchdog-ms must not read as a wedged batch (the replacement
+        // would pay the same rebuild — a steal/respawn livelock).
         let want = shared.generation.load(Ordering::Relaxed);
         if engine.as_ref().map(|(g, ..)| *g) != Some(want) {
             let art = shared.artifact();
@@ -285,18 +301,31 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize, epoch: u64) {
                     // before install — but a worker must never die with
                     // requests in hand.
                     let msg = format!("engine rebuild failed: {err:#}");
-                    if let Some(claim) = slot.claim.lock().unwrap().take() {
-                        for p in claim.batch {
-                            let _ = p.resp.send(Err(msg.clone()));
-                        }
+                    for p in batch {
+                        let _ = p.resp.send(Err(msg.clone()));
                     }
                     engine = None;
                     continue;
                 }
             }
         }
+        // Park the claim; from here until the completion-take the batch
+        // is visible to (and stealable by) the watchdog.
+        *slot.claim.lock().unwrap() = Some(Claim {
+            since: Instant::now(),
+            epoch,
+            batch,
+        });
+        if let Some(arm) = &shared.wedge {
+            if arm.fires() {
+                eprintln!("fault-injection: serve worker {idx} wedged mid-batch");
+                loop {
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+            }
+        }
         let (_, eng, art) = engine.as_mut().expect("engine built above");
-        run_batch(shared, slot, eng, art);
+        run_batch(shared, slot, epoch, eng, art);
         // Numerics telemetry is thread-local: fold this worker's counters
         // into the shared roll-up so /admin/status sees all workers.
         if crate::telemetry::enabled() {
@@ -308,14 +337,25 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize, epoch: u64) {
 
 /// One micro-batch off the parked claim: copy every pending's rows into
 /// a single `[n, features]` (or NCHW) tensor, run one forward, then take
-/// the claim back and split the logits per pending in queue order. If
-/// the watchdog stole the claim mid-forward the result is discarded —
-/// the requeued rows get their (bit-identical) answer from the
-/// replacement worker instead.
-fn run_batch(shared: &Shared, slot: &WorkerSlot, engine: &mut NativeEngine, art: &ModelArtifact) {
+/// the claim back and split the logits per pending in queue order. Both
+/// the initial read and the completion-take are conditional on the
+/// caller's `epoch`: if the watchdog stole the claim mid-forward (and a
+/// replacement possibly parked a *new* claim in the same slot) the
+/// stale result is discarded — the requeued rows get their
+/// (bit-identical) answer from the replacement worker instead.
+fn run_batch(
+    shared: &Shared,
+    slot: &WorkerSlot,
+    epoch: u64,
+    engine: &mut NativeEngine,
+    art: &ModelArtifact,
+) {
     let x = {
         let guard = slot.claim.lock().unwrap();
-        let Some(claim) = guard.as_ref() else { return };
+        let claim = match guard.as_ref() {
+            Some(c) if c.epoch == epoch => c,
+            _ => return, // already stolen; nothing here is ours
+        };
         let n: usize = claim.batch.iter().map(Pending::nrows).sum();
         let mut data = Vec::with_capacity(n * art.in_features);
         for p in &claim.batch {
@@ -326,7 +366,7 @@ fn run_batch(shared: &Shared, slot: &WorkerSlot, engine: &mut NativeEngine, art:
         Tensor::from_vec(&art.spec.input().shape(n), data)
     };
     let logits = engine.predict_logits(x);
-    let Some(claim) = slot.claim.lock().unwrap().take() else {
+    let Some(claim) = slot.take_if(epoch) else {
         return; // stolen by the watchdog; the replacement answers
     };
     let n: usize = claim.batch.iter().map(Pending::nrows).sum();
@@ -374,25 +414,44 @@ mod tests {
         assert_eq!(argmax(&[]), 0);
     }
 
-    #[test]
-    fn slot_claim_take_is_exactly_once() {
+    fn park(slot: &WorkerSlot, epoch: u64) {
         use std::sync::mpsc;
-        let slot = WorkerSlot::new();
-        assert!(!slot.busy());
         let (tx, _rx) = mpsc::channel();
         *slot.claim.lock().unwrap() = Some(Claim {
             since: Instant::now(),
+            epoch,
             batch: vec![Pending {
                 rows: vec![vec![0.0]],
                 resp: tx,
                 enqueued: Instant::now(),
             }],
         });
+    }
+
+    #[test]
+    fn slot_claim_take_is_exactly_once() {
+        let slot = WorkerSlot::new();
+        assert!(!slot.busy());
+        park(&slot, 0);
         assert!(slot.busy());
         assert!(slot.claim_age().is_some());
         // First take wins (watchdog or worker — same primitive).
-        assert!(slot.claim.lock().unwrap().take().is_some());
-        assert!(slot.claim.lock().unwrap().take().is_none());
+        assert!(slot.take_if(0).is_some());
+        assert!(slot.take_if(0).is_none());
         assert!(!slot.busy());
+    }
+
+    #[test]
+    fn stale_epoch_cannot_take_a_replacement_claim() {
+        // Worker at epoch 0 parks, the watchdog steals (bumping to 1),
+        // the replacement parks a new claim. The slow epoch-0 worker
+        // must NOT be able to take epoch 1's claim.
+        let slot = WorkerSlot::new();
+        park(&slot, 0);
+        assert!(slot.claim.lock().unwrap().take().is_some()); // watchdog steal
+        park(&slot, 1); // replacement's claim
+        assert!(slot.take_if(0).is_none(), "stale worker must be refused");
+        assert!(slot.busy(), "replacement claim untouched");
+        assert!(slot.take_if(1).is_some(), "owner take succeeds");
     }
 }

@@ -4,13 +4,25 @@ use super::Engine;
 use crate::data::Batch;
 use crate::nn::{softmax_xent, Layer, ModelSpec, PrecisionPolicy, QuantCtx, Sequential};
 use crate::optim::{Optimizer, Sgd};
+use crate::program::StepProgram;
 use crate::state::{StateDict, StateError, StateMap};
+
+/// Batch size step programs are planned for (`docs/step-program.md`). The
+/// plan models shapes and operand lifetimes; the executor itself is
+/// batch-size-agnostic, so this only has to be representative.
+const PROGRAM_PLAN_BATCH: usize = 32;
 
 pub struct NativeEngine {
     pub model: Sequential,
     pub policy: PrecisionPolicy,
     pub opt: Box<dyn Optimizer>,
     name: String,
+    /// Compiled step program; when present, `train_step`/`eval`/
+    /// `predict_logits` execute it instead of interpreting the layer list.
+    /// Bit-identical either way (`rust/tests/program_equivalence.rs`), so
+    /// the engine name — and therefore checkpoint compatibility — does not
+    /// depend on which path runs.
+    program: Option<StepProgram>,
 }
 
 impl NativeEngine {
@@ -31,12 +43,32 @@ impl NativeEngine {
     ) -> Self {
         let mut model = spec.build(seed);
         opt.prepare(&mut model, &policy);
+        // Opt-in program execution for paths that construct engines
+        // internally (serve checkpoint reload, sweeps): the CLI's
+        // `--engine-program` flag calls `with_program` explicitly.
+        let program = std::env::var("FP8TRAIN_ENGINE_PROGRAM")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false)
+            .then(|| StepProgram::lower(spec, &policy, PROGRAM_PLAN_BATCH));
         Self {
             name: format!("native:{}:{}", spec.id(), policy.name),
             model,
             policy,
             opt,
+            program,
         }
+    }
+
+    /// Compile and attach a step program: subsequent train/eval/predict
+    /// calls execute the program instead of the layer-list interpreter.
+    pub fn with_program(mut self, spec: &ModelSpec) -> Self {
+        self.program = Some(StepProgram::lower(spec, &self.policy, PROGRAM_PLAN_BATCH));
+        self
+    }
+
+    /// The attached step program, when the engine runs in program mode.
+    pub fn program(&self) -> Option<&StepProgram> {
+        self.program.as_ref()
     }
 
     /// Forward + loss without a weight update (used by experiments that
@@ -65,6 +97,9 @@ impl NativeEngine {
     /// micro-batched forward is bit-identical to N single-row forwards —
     /// the determinism contract `rust/tests/serve_equivalence.rs` enforces.
     pub fn predict_logits(&mut self, x: crate::tensor::Tensor) -> crate::tensor::Tensor {
+        if let Some(prog) = self.program.as_ref() {
+            return prog.predict_logits(&mut self.model, &self.policy, x);
+        }
         let ctx = QuantCtx::new(&self.policy, 0, false);
         self.model.forward(x, &ctx)
     }
@@ -76,6 +111,16 @@ impl Engine for NativeEngine {
     }
 
     fn train_step(&mut self, batch: &Batch, lr: f32, step: u64) -> f64 {
+        if let Some(prog) = self.program.as_ref() {
+            return prog.train_step(
+                &mut self.model,
+                self.opt.as_mut(),
+                &self.policy,
+                batch,
+                lr,
+                step,
+            );
+        }
         let ctx = QuantCtx::new(&self.policy, step, true);
         let logits = self.model.forward(batch.x.clone(), &ctx);
         let out = softmax_xent(
@@ -92,6 +137,9 @@ impl Engine for NativeEngine {
     }
 
     fn eval(&mut self, batch: &Batch) -> (f64, usize) {
+        if let Some(prog) = self.program.as_ref() {
+            return prog.eval(&mut self.model, &self.policy, batch);
+        }
         let ctx = QuantCtx::new(&self.policy, 0, false);
         let logits = self.model.forward(batch.x.clone(), &ctx);
         let out = softmax_xent(&logits, &batch.labels, self.policy.softmax_input_fmt, 1.0);
@@ -195,6 +243,34 @@ mod tests {
             msg.contains("fp8_paper") && msg.contains("fp32"),
             "{msg}"
         );
+    }
+
+    #[test]
+    fn program_engine_matches_interpreter_bit_for_bit() {
+        let spec = ModelSpec::bn50_dnn();
+        let ds = SyntheticDataset::for_model(&spec, 11).with_sizes(32, 16);
+        let mut interp = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 11);
+        let mut prog = NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 11)
+            .with_program(&spec);
+        assert!(prog.program().is_some());
+        // Same engine tag either way: checkpoints interoperate.
+        assert_eq!(interp.name(), prog.name());
+        for step in 0..4u64 {
+            let b = ds.train_batch((step % 2) as usize, 8);
+            let la = interp.train_step(&b, 0.05, step);
+            let lb = prog.train_step(&b, 0.05, step);
+            assert_eq!(la.to_bits(), lb.to_bits(), "loss diverged at step {step}");
+        }
+        let b = ds.test_batches(8);
+        let (l1, c1) = interp.eval(&b[0]);
+        let (l2, c2) = prog.eval(&b[0]);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(c1, c2);
+        let mut m1 = StateMap::new();
+        let mut m2 = StateMap::new();
+        interp.save_state(&mut m1);
+        prog.save_state(&mut m2);
+        assert_eq!(m1, m2, "checkpoint state must be bit-identical");
     }
 
     #[test]

@@ -50,6 +50,7 @@ pub mod nn;
 pub mod numerics;
 pub mod optim;
 pub mod perf;
+pub mod program;
 pub mod runtime;
 pub mod serve;
 pub mod state;

@@ -9,6 +9,8 @@
 //!     <model> = preset name or model-spec string (docs/model-spec.md)
 //! fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
 //! fp8train trace <summarize|validate> <trace.jsonl> [--csv]
+//! fp8train trace diff <A.jsonl> <B.jsonl> [--threshold F]
+//! fp8train program dump <model> [--policy P] [--batch N]
 //! fp8train eval --checkpoint PATH [--batch N]
 //! fp8train serve --checkpoint PATH [--addr HOST:PORT] [--workers N]
 //!                [--max-batch B] [--max-wait-us D] [--queue-depth Q]
@@ -23,6 +25,7 @@
 //!                                  [--chunks L] [--steps N] [--batch N] [--seed S]
 //!                                  [--out SWEEP.json] [--max-cells N]
 //!                                  [--timeout-per-cell SECS] [--list]
+//!                                  [--policy-json PATH]
 //! fp8train sweep diff <A.json> <B.json>
 //! fp8train sweep render <SWEEP.json> [--csv] [--out PATH]
 //! fp8train formats                 # print the FP8/FP16 format tables
@@ -54,6 +57,7 @@ USAGE:
                          [--steps N] [--batch N] [--lr F] [--seed S] [--csv PATH]
                          [--save-every N] [--save PATH] [--keep-last K] [--verbose]
                          [--trace PATH] [--stats-every N] [--deterministic]
+                         [--engine-program]
       <model> (or --model M) is a preset name or a model-spec string
       (docs/model-spec.md), e.g.  \"mlp(440,bn:256x3,30)\"  or
       \"conv3x3(16)-res(2x32)-gap-fc(10)\"
@@ -64,7 +68,10 @@ USAGE:
       --keep-last K prunes older {step}-templated saves after each write;
       --trace writes a JSONL numerics trace (docs/observability.md) with a
       step record every --stats-every N steps; --deterministic zeroes its
-      wall-clock fields so re-runs produce byte-identical traces
+      wall-clock fields so re-runs produce byte-identical traces;
+      --engine-program executes the compiled step program instead of the
+      layer-list interpreter — bit-identical, checkpoint-compatible
+      (docs/step-program.md; env FP8TRAIN_ENGINE_PROGRAM=1 for serve/sweep)
   fp8train train --resume PATH [--steps N] [--save-every N] [--save PATH]
       continue a checkpointed run bit-exactly (model spec/policy/seed/batch/lr
       are read back from the checkpoint's meta entries; --steps may extend it)
@@ -73,6 +80,15 @@ USAGE:
       saturation/underflow/range report (--csv for machine-readable rows);
       validate checks every record against the documented schema and exits
       non-zero on any violation
+  fp8train trace diff <A.jsonl> <B.jsonl> [--threshold F]
+      compare two traces: per-step loss series and per-(layer, role)
+      quantization counters, reporting the worst relative divergence;
+      exits non-zero when it exceeds --threshold (default 0 = bit-exact)
+  fp8train program dump <model> [--policy P] [--batch N]
+      lower a model spec + precision policy into the compiled step program
+      (docs/step-program.md) and print the schedule: typed ops, GEMM
+      shapes/chunking, SR stream ids, operand lifetimes/arena slots and
+      the planned scratch peak
   fp8train eval --checkpoint PATH [--batch N]
       load a .fp8ck checkpoint into the native engine and evaluate it (the
       model is reconstructed from the spec embedded in the checkpoint)
@@ -107,7 +123,7 @@ USAGE:
                  [--chunks L] [--steps N] [--batch N] [--seed S] [--out SWEEP.json]
                  [--max-cells N] [--timeout-per-cell SECS] [--list] [--verbose]
                  [--workers N] [--retries N] [--backoff-ms MS]
-                 [--heartbeat-secs SECS] [--deterministic]
+                 [--heartbeat-secs SECS] [--deterministic] [--policy-json PATH]
       expand a model template × format/round/pos/opt/chunk grid into a
       deterministic cell list, train every cell, and write one resumable
       machine-readable artifact (docs/sweep.md). <template> is a spec/preset
@@ -120,6 +136,12 @@ USAGE:
       --opts sgd|adam; --chunks 0 = policy default. Re-running against an
       existing artifact skips completed cells; interrupted cells resume
       from their checkpoints under <out>.cells/.
+      --policy-json PATH adds per-cell precision policies outside the
+      preset list: the file holds one JSON policy object (or an array) —
+      {\"name\":…, \"base\":preset, \"fmt\"/\"last_fmt\"/\"acc_fmt\"/
+      \"input_fmt\"/\"softmax_input_fmt\":format, \"chunk\":N,
+      \"round\":mode, \"update\":scheme, \"loss_scale\":F} — and each
+      object joins the format axis keyed into the cell id by content.
       --workers N (N > 1) runs cells as supervised child processes with
       heartbeat monitoring, hard kill+resume timeouts, and bounded retry
       with exponential backoff (docs/robustness.md); --deterministic zeroes
@@ -136,12 +158,13 @@ USAGE:
       GEMM throughput (fp32 / fast-emulated / exact) at the Fig. 6 gradient
       shapes, native train-step with per-phase timing (quantize/pack/gemm/
       update) + scratch-arena and quantized-pack-cache reuse, numerics-
-      telemetry overhead (counters on vs off), supervisor counters,
-      checkpoint encode/decode throughput, and serve daemon latency
-      percentiles + throughput over loopback; --json writes a
-      machine-readable report (schema 7, default BENCH_GEMM.json);
-      --compare diffs against an older report and exits non-zero on a >10%
-      regression
+      telemetry overhead (counters on vs off), compiled-step-program
+      lowering time + program-vs-interpreted step time + planned-vs-leased
+      scratch peaks, supervisor counters, checkpoint encode/decode
+      throughput, and serve daemon latency percentiles + throughput over
+      loopback; --json writes a machine-readable report (schema 8, default
+      BENCH_GEMM.json); --compare diffs against an older report and exits
+      non-zero on a >10% regression
   fp8train bench compare <old.json> <new.json>
       file-vs-file comparison of two bench reports (no benchmarking);
       exits non-zero on a >10% regression of any shared throughput metric
@@ -174,6 +197,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "serve-bench" => cmd_serve_bench(args),
         "trace" => cmd_trace(args),
+        "program" => cmd_program(args),
         "checkpoint" => cmd_checkpoint(args),
         "formats" => cmd_formats(),
         "artifacts" => cmd_artifacts(args),
@@ -282,6 +306,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.check_known(&[
         "model", "policy", "opt", "engine", "steps", "batch", "seed", "lr", "csv", "verbose",
         "save-every", "save", "resume", "keep-last", "trace", "stats-every", "deterministic",
+        "engine-program",
     ])?;
     let resume = args.opt("resume").map(str::to_string);
     let spec = match &resume {
@@ -333,8 +358,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.deterministic = args.flag("deterministic");
 
     let mut engine: Box<dyn Engine> = match engine_kind.as_str() {
-        "native" => Box::new(build_native(&spec, policy)?),
+        "native" => {
+            let mut e = build_native(&spec, policy)?;
+            if args.flag("engine-program") {
+                // Compiled-step-program execution (docs/step-program.md):
+                // bit-identical to the interpreter, same engine tag, so
+                // checkpoints and resumes interoperate across the flag.
+                e = e.with_program(&spec.model);
+            }
+            Box::new(e)
+        }
         "pjrt" => {
+            ensure!(
+                !args.flag("engine-program"),
+                "--engine-program applies to the native engine only"
+            );
             let preset = spec.model.preset_id().with_context(|| {
                 format!(
                     "engine pjrt needs a preset model (AOT artifacts exist per preset), \
@@ -424,6 +462,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "backoff-ms",
         "heartbeat-secs",
         "deterministic",
+        "policy-json",
     ])?;
     let head = args.positional.first().with_context(|| {
         format!(
@@ -452,6 +491,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 .map_err(|_| CliError::BadValue("chunks".into(), tok.clone(), "usize"))?;
             def.chunks.push(c);
         }
+    }
+    if let Some(path) = args.opt("policy-json") {
+        // Per-cell policy escape hatch: the file's policy objects join the
+        // format axis as inline-JSON tokens, so they enter the cell ids
+        // verbatim — editing a policy re-keys exactly its cells.
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read --policy-json file {path}"))?;
+        def.formats.extend(sweep::policy_json_tokens(&text)?);
     }
     def.steps = args.opt_usize("steps", def.steps)?;
     def.batch = args.opt_usize("batch", def.batch)?;
@@ -638,17 +685,38 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
 /// per-(layer, role) saturation/underflow/range report, or CSV rows with
 /// `--csv`.
 fn cmd_trace(args: &Args) -> Result<()> {
-    args.check_known(&["csv"])?;
+    args.check_known(&["csv", "threshold"])?;
     let sub = args
         .positional
         .first()
-        .context("trace needs a subcommand (summarize|validate)")?;
+        .context("trace needs a subcommand (summarize|validate|diff)")?;
+    use fp8train::telemetry::trace;
+    if sub == "diff" {
+        // Numerics regression gate: compare two --trace files per
+        // (layer, role) and per-step, exit non-zero past --threshold.
+        let (a, b) = match (args.positional.get(1), args.positional.get(2)) {
+            (Some(a), Some(b)) => (a.as_str(), b.as_str()),
+            _ => bail!("usage: fp8train trace diff <A.jsonl> <B.jsonl> [--threshold F]"),
+        };
+        let ta = std::fs::read_to_string(a).with_context(|| format!("read trace {a}"))?;
+        let tb = std::fs::read_to_string(b).with_context(|| format!("read trace {b}"))?;
+        let (report, worst) = match trace::diff(&ta, &tb) {
+            Ok(r) => r,
+            Err(e) => bail!("trace diff: {e}"),
+        };
+        print!("{report}");
+        let threshold = args.opt_f32("threshold", 0.0)? as f64;
+        ensure!(
+            worst <= threshold,
+            "traces diverge: max relative divergence {worst:.3e} > threshold {threshold:.3e}"
+        );
+        return Ok(());
+    }
     let path = args
         .positional
         .get(1)
         .with_context(|| format!("usage: fp8train trace {sub} <trace.jsonl>"))?;
     let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
-    use fp8train::telemetry::trace;
     match sub.as_str() {
         "validate" => match trace::validate(&text) {
             Ok(n) => {
@@ -664,8 +732,40 @@ fn cmd_trace(args: &Args) -> Result<()> {
             }
             Err(e) => bail!("{path}: {e}"),
         },
-        other => bail!("unknown trace subcommand {other:?} (summarize|validate)"),
+        other => bail!("unknown trace subcommand {other:?} (summarize|validate|diff)"),
     }
+}
+
+/// `fp8train program dump <model>` — lower a spec + policy into the
+/// compiled step program (`docs/step-program.md`) and print the schedule:
+/// typed ops, GEMM shapes/chunking, SR stream ids, and the operand table
+/// with lifetimes, arena slots and the planned scratch peak.
+fn cmd_program(args: &Args) -> Result<()> {
+    args.check_known(&["model", "policy", "batch"])?;
+    let sub = args
+        .positional
+        .first()
+        .context("program needs a subcommand (dump)")?;
+    ensure!(
+        sub == "dump",
+        "unknown program subcommand {sub:?} (dump)"
+    );
+    let model = args
+        .opt("model")
+        .map(str::to_string)
+        .or_else(|| args.positional.get(1).cloned())
+        .context("usage: fp8train program dump <model> [--policy P] [--batch N]")?;
+    let spec = ModelSpec::resolve(&model)?;
+    let policy_name = args.opt_or("policy", "fp8_paper");
+    let policy = PrecisionPolicy::parse(&policy_name)
+        .with_context(|| format!("unknown policy {policy_name:?}"))?;
+    let batch = args.opt_usize("batch", 32)?;
+    let t0 = std::time::Instant::now();
+    let prog = fp8train::program::StepProgram::lower(&spec, &policy, batch);
+    let lowered = t0.elapsed();
+    print!("{}", prog.dump());
+    println!("lowered in {:.1} µs", lowered.as_secs_f64() * 1e6);
+    Ok(())
 }
 
 /// `fp8train checkpoint inspect <path>` — validate the container (magic,
@@ -748,7 +848,7 @@ const BENCH_SHAPES: [(&str, usize, usize, usize); 3] = [
 /// native train step with per-phase timing (quantize/pack/gemm/update),
 /// scratch-arena and quantized-pack cache reuse rates, checkpoint
 /// encode/decode throughput, and the serving daemon's latency/throughput
-/// SLO, optionally as a JSON report (schema 7) so the perf trajectory
+/// SLO, optionally as a JSON report (schema 8) so the perf trajectory
 /// stays machine-readable across PRs. `--compare` diffs
 /// the fresh numbers against a previous report and **exits non-zero on a
 /// >10% regression** of any shared throughput metric. Pin
@@ -906,6 +1006,43 @@ fn cmd_bench(args: &Args) -> Result<()> {
         r_step_off.to_json()
     );
 
+    // Compiled step program (docs/step-program.md): lowering cost, the
+    // program-executor step time against the interpreted window above
+    // (bit-identical outputs, so any delta is pure dispatch), and the
+    // statically planned scratch peak against the arena's dynamically
+    // leased peak from the interpreted window.
+    let t_lower = std::time::Instant::now();
+    let prog_ir = fp8train::program::StepProgram::lower(&spec, &PrecisionPolicy::fp8_paper(), 8);
+    let lowering_ns = t_lower.elapsed().as_nanos();
+    let mut engine_prog =
+        NativeEngine::new(&spec, PrecisionPolicy::fp8_paper(), 7).with_program(&spec);
+    engine_prog.train_step(&bench_batch, 0.02, 0); // warm arena + pack caches
+    let mut pstep = 0u64;
+    let r_step_prog = bench_util::run("bench/train_step/program", None, || {
+        pstep += 1;
+        engine_prog.train_step(&bench_batch, 0.02, pstep)
+    });
+    let prog_ns = r_step_prog.mean.as_nanos() as f64;
+    println!(
+        "step program: {} ops lowered in {:.1}µs; program step {:.1}µs vs interpreted {:.1}µs; \
+         planned scratch peak {} B vs leased {} B",
+        prog_ir.ops.len(),
+        lowering_ns as f64 / 1e3,
+        prog_ns / 1e3,
+        on_ns / 1e3,
+        prog_ir.planned_peak_bytes,
+        sstats.peak_bytes
+    );
+    let program_doc = format!(
+        "{{\"lowering_ns\":{lowering_ns},\"ops\":{},\"program_step_ns\":{prog_ns},\
+         \"interp_step_ns\":{on_ns},\"planned_peak_bytes\":{},\"leased_peak_bytes\":{},\
+         \"result\":{}}}",
+        prog_ir.ops.len(),
+        prog_ir.planned_peak_bytes,
+        sstats.peak_bytes,
+        r_step_prog.to_json()
+    );
+
     // Supervisor counters (spawns/kills/retries/wait): zero in a bench-only
     // process, but the section keeps the schema aligned with what a
     // supervised sweep in this process would report.
@@ -947,7 +1084,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // in-process serve-bench client. p50/p99 latency, requests/s,
     // micro-batch occupancy and the resilience counters (sheds, worker
     // restarts, keep-alive connects) join the perf trajectory as the
-    // schema-7 `serve` section (`docs/serving.md`).
+    // schema-8 `serve` section (`docs/serving.md`).
     let fast = std::env::var("FP8TRAIN_BENCH_FAST").is_ok();
     let serve_dir =
         std::env::temp_dir().join(format!("fp8train_bench_serve_{}", std::process::id()));
@@ -989,9 +1126,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     );
 
     let doc = format!(
-        "{{\"schema\":7,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
-         \"scratch\":{},\"phases\":{},\"wcache\":{},\"telemetry\":{},\"supervisor\":{},\
-         \"checkpoint\":{},\"serve\":{}}}\n",
+        "{{\"schema\":8,\"threads\":{},\"fast_mode\":{},\"model\":\"{}\",\"shapes\":[{}],\
+         \"scratch\":{},\"phases\":{},\"wcache\":{},\"telemetry\":{},\"program\":{},\
+         \"supervisor\":{},\"checkpoint\":{},\"serve\":{}}}\n",
         num_threads(),
         std::env::var("FP8TRAIN_BENCH_FAST").is_ok(),
         spec.id(),
@@ -1000,6 +1137,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         phases_doc,
         wcache_doc,
         telemetry_doc,
+        program_doc,
         supervisor_doc,
         checkpoint_doc,
         serve_doc

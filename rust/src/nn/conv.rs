@@ -31,12 +31,25 @@ use crate::numerics::format::NeQuantizer;
 use crate::numerics::{RoundMode, Xoshiro256};
 use crate::tensor::{col2im, im2col, im2col_q, init, scratch, Conv2dGeom, Tensor};
 
+/// Whether the forward im2col lowering fuses quantization into the copy
+/// pass for this geometry. A pure function of the geometry, decided once
+/// per layer (at construction, and again by the program lowering —
+/// `crate::program` must agree with the interpreter op-for-op): fuse when
+/// the lowering replicates each source element into few patches (1×1
+/// kernels, heavily strided convs); dense kernels replicate ~(k/stride)²
+/// times and keep the single vectorized pre-lowering quantize pass.
+pub fn im2col_fuses(g: &Conv2dGeom) -> bool {
+    g.out_h() * g.out_w() * g.k * g.k <= 2 * g.in_h * g.in_w
+}
+
 pub struct Conv2d {
     pub w: Param, // [oc, in_c·k·k]
     pub b: Option<Param>,
     pub geom: Conv2dGeom,
     pub out_c: usize,
     pub pos: LayerPos,
+    /// Fusion choice, resolved once at construction ([`im2col_fuses`]).
+    fused_im2col: bool,
     layer_id: u64,
     // backward caches
     cols_q: Option<Tensor>,
@@ -66,6 +79,7 @@ impl Conv2d {
             geom,
             out_c,
             pos,
+            fused_im2col: im2col_fuses(&geom),
             layer_id: layer_hash(name),
             cols_q: None,
             w_q: None,
@@ -154,19 +168,14 @@ impl Layer for Conv2d {
         let _tel = crate::telemetry::layer_scope(self.w.name.trim_end_matches(".w"));
         let p = ctx.policy;
 
-        // Stored activation. When the lowering replicates each source
-        // element into few patches (1×1 kernels, heavily strided convs),
-        // quantization is fused into the im2col copy pass — eliminating
-        // the separate full-tensor sweep over NCHW. Dense kernels
-        // replicate ~(k/stride)² times, where the fused path would run the
-        // per-element quantizer once per copy; there the single
-        // vectorized `quantize_batch` pass before lowering stays cheaper.
-        // Both routes are bit-identical (padding zeros are exactly
-        // representable and the elementwise quantizer is deterministic,
-        // so every replicated copy quantizes to the same bits —
+        // Stored activation. The fused-vs-pre-lowering quantize choice was
+        // made once at construction ([`im2col_fuses`]); both routes are
+        // bit-identical (padding zeros are exactly representable and the
+        // elementwise quantizer is deterministic, so every replicated copy
+        // quantizes to the same bits —
         // `fused_im2col_matches_separate_pass` enforces it).
         let g = self.geom;
-        let low_replication = g.out_h() * g.out_w() * g.k * g.k <= 2 * g.in_h * g.in_w;
+        let low_replication = self.fused_im2col;
         let cols_q = match p.plain_act_fmt(GemmRole::Forward, self.pos) {
             Some(fmt) if fmt.is_identity() => im2col(&x, &g),
             Some(fmt) if low_replication => {
@@ -608,6 +617,42 @@ mod tests {
         assert_eq!(elems(Role::Forward), Some(96));
         // Backward error repack: 2 images × 16 sites × 5 out channels.
         assert_eq!(elems(Role::Backward), Some(160));
+        telemetry::reset();
+    }
+
+    #[test]
+    fn optimizer_axpys_report_update_telemetry() {
+        use crate::optim::{Optimizer, Sgd};
+        use crate::telemetry::{self, Role};
+        // The per-step SGD AXPYs quantize into the update format; their
+        // counters must land under (param, upd) at update time — the gap
+        // docs/observability.md used to caveat. Weight (decay) takes the
+        // three-AXPY path: 3 quantize passes × len; bias (no decay) skips
+        // the L2 fold: 2 × len.
+        telemetry::reset();
+        let policy = PrecisionPolicy::fp8_paper(); // fp16 SR updates
+        let g = Conv2dGeom {
+            in_c: 3,
+            in_h: 4,
+            in_w: 4,
+            k: 1,
+            stride: 1,
+            pad: 0,
+        };
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let mut conv = Conv2d::new("ct", g, 5, LayerPos::Middle, true, &mut rng);
+        conv.w.grad.data.fill(0.01 * policy.loss_scale);
+        conv.b.as_mut().unwrap().grad.data.fill(0.01 * policy.loss_scale);
+        let mut opt = Sgd::new(0.9, 1e-4, 3);
+        opt.step(&mut conv, &policy, 0.1, 1);
+        let snap = telemetry::snapshot();
+        let upd = |param: &str| {
+            snap.iter()
+                .find(|(name, r, _)| name == param && *r == Role::Update)
+                .map(|(_, _, s)| s.elems)
+        };
+        assert_eq!(upd("ct.w"), Some(3 * 15)); // axpy(wd) + xpby + axpy(-lr)
+        assert_eq!(upd("ct.b"), Some(2 * 5)); // no decay: xpby + axpy(-lr)
         telemetry::reset();
     }
 

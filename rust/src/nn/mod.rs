@@ -31,7 +31,7 @@ pub use conv::Conv2d;
 pub use linear::Linear;
 pub use loss::softmax_xent;
 pub use quant::{GemmRole, LayerPos, PrecisionPolicy, QuantCtx};
-pub use spec::{ModelSpec, SpecBuilder, SpecError};
+pub use spec::{LoweredUnit, ModelSpec, SpecBuilder, SpecError};
 
 use crate::state::{self, StateDict, StateError, StateMap};
 use crate::tensor::Tensor;

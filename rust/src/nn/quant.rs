@@ -385,6 +385,139 @@ impl PrecisionPolicy {
         "fp8_nochunk_fp32_grad",
     ];
 
+    /// Build a policy from a JSON object — the sweep's `--policy-json`
+    /// escape hatch for configurations outside the preset list
+    /// (`docs/sweep.md`).
+    ///
+    /// Required: `"name"` (must not shadow a preset — the name keys sweep
+    /// cells and CSV rows, so aliasing a preset would silently merge
+    /// cells). Optional `"base"` names the preset that seeds every knob
+    /// (default `fp8_paper`); the remaining keys override it:
+    /// `"fmt"` / `"last_fmt"` (GEMM operand format for middle/last
+    /// layers), `"acc_fmt"` (accumulation format, all GEMMs),
+    /// `"input_fmt"`, `"softmax_input_fmt"` (float-format names),
+    /// `"chunk"` (accumulation chunk length; `0` means unchunked),
+    /// `"round"` (GEMM accumulation rounding: `nearest` / `nearest_away`
+    /// / `truncate` / `stochastic`), `"update"` (`fp32` /
+    /// `fp16_stochastic` / `fp16_nearest`) and `"loss_scale"`. Unknown
+    /// keys are rejected so a typo cannot silently train the base policy.
+    pub fn from_json(text: &str) -> Result<Self, String> {
+        use crate::benchcmp::Json;
+        const KNOWN: [&str; 11] = [
+            "name",
+            "base",
+            "fmt",
+            "last_fmt",
+            "acc_fmt",
+            "input_fmt",
+            "softmax_input_fmt",
+            "chunk",
+            "round",
+            "update",
+            "loss_scale",
+        ];
+        let v = Json::parse(text).map_err(|e| format!("policy json: {e}"))?;
+        let Json::Obj(m) = &v else {
+            return Err("policy json: top level must be an object".into());
+        };
+        for k in m.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(format!(
+                    "policy json: unknown key {k:?} (known: {})",
+                    KNOWN.join(", ")
+                ));
+            }
+        }
+        let str_of = |k: &str| -> Result<Option<&str>, String> {
+            match m.get(k) {
+                None => Ok(None),
+                Some(v) => v
+                    .str_val()
+                    .map(Some)
+                    .ok_or_else(|| format!("policy json: {k} must be a string")),
+            }
+        };
+        let fmt_of = |k: &str| -> Result<Option<FloatFormat>, String> {
+            match str_of(k)? {
+                None => Ok(None),
+                Some(s) => FloatFormat::parse(s)
+                    .map(Some)
+                    .ok_or_else(|| format!("policy json: unknown float format {s:?} for {k}")),
+            }
+        };
+        let name = str_of("name")?
+            .ok_or_else(|| "policy json: required key \"name\" missing".to_string())?;
+        if name.is_empty() {
+            return Err("policy json: name must be non-empty".into());
+        }
+        if Self::parse(name).is_some() {
+            return Err(format!(
+                "policy json: name {name:?} shadows a built-in policy"
+            ));
+        }
+        let base = str_of("base")?.unwrap_or("fp8_paper");
+        let mut p = Self::parse(base)
+            .ok_or_else(|| format!("policy json: unknown base policy {base:?}"))?;
+        if let Some(f) = fmt_of("fmt")? {
+            for g in p.gemm.iter_mut() {
+                g.fmt_mult = f;
+            }
+        }
+        if let Some(f) = fmt_of("last_fmt")? {
+            for g in p.gemm_last.iter_mut() {
+                g.fmt_mult = f;
+            }
+        }
+        if let Some(f) = fmt_of("acc_fmt")? {
+            for g in p.gemm.iter_mut().chain(p.gemm_last.iter_mut()) {
+                g.fmt_acc = f;
+            }
+        }
+        if let Some(f) = fmt_of("input_fmt")? {
+            p.input_fmt = f;
+        }
+        if let Some(f) = fmt_of("softmax_input_fmt")? {
+            p.softmax_input_fmt = f;
+        }
+        if let Some(v) = m.get("chunk") {
+            let n = v
+                .num()
+                .ok_or_else(|| "policy json: chunk must be a number".to_string())?;
+            if n < 0.0 || n.fract() != 0.0 {
+                return Err(format!("policy json: chunk must be a non-negative integer, got {n}"));
+            }
+            p = p.with_chunk(if n == 0.0 { usize::MAX } else { n as usize });
+        }
+        if let Some(s) = str_of("round")? {
+            let r = RoundMode::parse(s)
+                .ok_or_else(|| format!("policy json: unknown round mode {s:?}"))?;
+            p = p.with_round(r);
+        }
+        if let Some(s) = str_of("update")? {
+            p.update = match s {
+                "fp32" => UpdatePrecision::fp32(),
+                "fp16_stochastic" => UpdatePrecision::fp16_stochastic(),
+                "fp16_nearest" => UpdatePrecision::fp16_nearest(),
+                other => {
+                    return Err(format!(
+                        "policy json: unknown update scheme {other:?} \
+                         (fp32 | fp16_stochastic | fp16_nearest)"
+                    ))
+                }
+            };
+        }
+        if let Some(v) = m.get("loss_scale") {
+            let n = v
+                .num()
+                .ok_or_else(|| "policy json: loss_scale must be a number".to_string())?;
+            if !(n > 0.0 && n.is_finite()) {
+                return Err(format!("policy json: loss_scale must be positive, got {n}"));
+            }
+            p.loss_scale = n as f32;
+        }
+        Ok(p.renamed(name))
+    }
+
     /// The GEMM precision for `role` at layer position `pos`.
     #[inline]
     pub fn gemm_for(&self, role: GemmRole, pos: LayerPos) -> GemmPrecision {
@@ -477,6 +610,69 @@ fn splitmix_once(seed: u64) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn from_json_overrides_ride_on_the_base_preset() {
+        let p = PrecisionPolicy::from_json(
+            r#"{"name":"e4m3_cl32","base":"fp8_paper","fmt":"e4m3",
+                "chunk":32,"round":"stochastic","loss_scale":500}"#,
+        )
+        .unwrap();
+        assert_eq!(p.name, "e4m3_cl32");
+        assert_eq!(p.loss_scale, 500.0);
+        for role in GemmRole::ALL {
+            let g = p.gemm_for(role, LayerPos::Middle);
+            assert_eq!(g.fmt_mult.name(), "e4m3");
+            assert_eq!(g.chunk, 32);
+            assert!(g.round.is_stochastic());
+            // last_fmt untouched: the base's FP16 last layer survives.
+            assert_eq!(p.gemm_for(role, LayerPos::Last).fmt_mult, FloatFormat::FP16);
+        }
+        // Base knobs not mentioned in the JSON carry over.
+        assert_eq!(p.input_fmt, FloatFormat::FP16);
+        assert!(p.update.round.is_stochastic());
+    }
+
+    #[test]
+    fn from_json_full_knob_coverage_and_chunk_zero() {
+        let p = PrecisionPolicy::from_json(
+            r#"{"name":"wide","base":"fp32","fmt":"bf16","last_fmt":"fp16",
+                "acc_fmt":"fp16","input_fmt":"fp32","softmax_input_fmt":"fp32",
+                "chunk":0,"update":"fp16_nearest"}"#,
+        )
+        .unwrap();
+        let g = p.gemm_for(GemmRole::Forward, LayerPos::Middle);
+        assert_eq!(g.fmt_mult.name(), "bf16");
+        assert_eq!(g.fmt_acc, FloatFormat::FP16);
+        assert_eq!(g.chunk, usize::MAX, "chunk 0 means unchunked");
+        assert_eq!(
+            p.gemm_for(GemmRole::Forward, LayerPos::Last).fmt_mult,
+            FloatFormat::FP16
+        );
+        assert_eq!(p.update.fmt, FloatFormat::FP16);
+        assert!(!p.update.round.is_stochastic());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_inputs_loudly() {
+        let cases = [
+            ("{}", "required key \"name\""),
+            (r#"{"name":"fp8_paper"}"#, "shadows a built-in"),
+            (r#"{"name":"x","typo_fmt":"fp8"}"#, "unknown key"),
+            (r#"{"name":"x","base":"nope"}"#, "unknown base"),
+            (r#"{"name":"x","fmt":"e9m9"}"#, "unknown float format"),
+            (r#"{"name":"x","chunk":-3}"#, "non-negative integer"),
+            (r#"{"name":"x","round":"down"}"#, "unknown round mode"),
+            (r#"{"name":"x","update":"int8"}"#, "unknown update scheme"),
+            (r#"{"name":"x","loss_scale":0}"#, "must be positive"),
+            ("[1,2]", "must be an object"),
+            ("{", "policy json"),
+        ];
+        for (text, want) in cases {
+            let err = PrecisionPolicy::from_json(text).unwrap_err();
+            assert!(err.contains(want), "{text} → {err}");
+        }
+    }
 
     #[test]
     fn paper_policy_shape() {

@@ -209,6 +209,147 @@ enum Shape {
     Flat { d: usize },
 }
 
+/// One concrete layer slot of the `Sequential` that [`ModelSpec::build`]
+/// produces — the public lowering surface consumed by `crate::program`.
+///
+/// [`ModelSpec::lower_units`] emits exactly one unit per built layer, in
+/// build order, so unit index `i` describes `Sequential::layers[i]` (and,
+/// inside a [`LoweredUnit::Residual`], the `main`/`shortcut` vectors
+/// address the nested `Sequential`s the same way). All shapes are fully
+/// resolved at lowering — consumers never re-run shape inference.
+#[derive(Clone, Debug)]
+pub enum LoweredUnit {
+    Conv {
+        name: String,
+        geom: Conv2dGeom,
+        out_c: usize,
+        bias: bool,
+        pos: LayerPos,
+    },
+    BatchNorm {
+        name: String,
+        features: usize,
+        per_example: usize,
+    },
+    Relu {
+        per_example: usize,
+    },
+    MaxPool {
+        k: usize,
+        stride: usize,
+        c: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+    Gap {
+        c: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+    Flatten {
+        per_example: usize,
+    },
+    Linear {
+        name: String,
+        in_dim: usize,
+        out: usize,
+        bias: bool,
+        pos: LayerPos,
+    },
+    Residual {
+        name: String,
+        main: Vec<LoweredUnit>,
+        shortcut: Vec<LoweredUnit>,
+    },
+}
+
+/// Mirror of `models::{basic_block, bottleneck_block}` geometry for the
+/// lowering surface. Must stay in lock-step with those builders — the
+/// `lower_units_align_with_build` test guards the per-layer counts and
+/// `rust/tests/program_equivalence.rs` guards the behavior end to end.
+fn lower_block(
+    name: &str,
+    in_c: usize,
+    hw: usize,
+    width: usize,
+    expand: Option<usize>,
+    stride: usize,
+) -> LoweredUnit {
+    let out_hw = (hw + 2 - 3) / stride + 1;
+    let conv = |n: &str, geom: Conv2dGeom, out_c: usize| LoweredUnit::Conv {
+        name: format!("{name}.{n}"),
+        geom,
+        out_c,
+        bias: false,
+        pos: LayerPos::Middle,
+    };
+    let bn = |n: &str, c: usize, hw: usize| LoweredUnit::BatchNorm {
+        name: format!("{name}.{n}"),
+        features: c,
+        per_example: c * hw * hw,
+    };
+    let (out_c, main) = match expand {
+        None => {
+            let g1 = Conv2dGeom { in_c, in_h: hw, in_w: hw, k: 3, stride, pad: 1 };
+            let g2 = Conv2dGeom {
+                in_c: width,
+                in_h: out_hw,
+                in_w: out_hw,
+                k: 3,
+                stride: 1,
+                pad: 1,
+            };
+            (
+                width,
+                vec![
+                    conv("c1", g1, width),
+                    bn("bn1", width, out_hw),
+                    LoweredUnit::Relu { per_example: width * out_hw * out_hw },
+                    conv("c2", g2, width),
+                    bn("bn2", width, out_hw),
+                ],
+            )
+        }
+        Some(e) => {
+            let out_c = width * e;
+            let g1 = Conv2dGeom { in_c, in_h: hw, in_w: hw, k: 1, stride: 1, pad: 0 };
+            let g2 = Conv2dGeom { in_c: width, in_h: hw, in_w: hw, k: 3, stride, pad: 1 };
+            let g3 = Conv2dGeom {
+                in_c: width,
+                in_h: out_hw,
+                in_w: out_hw,
+                k: 1,
+                stride: 1,
+                pad: 0,
+            };
+            (
+                out_c,
+                vec![
+                    conv("c1", g1, width),
+                    bn("bn1", width, hw),
+                    LoweredUnit::Relu { per_example: width * hw * hw },
+                    conv("c2", g2, width),
+                    bn("bn2", width, out_hw),
+                    LoweredUnit::Relu { per_example: width * out_hw * out_hw },
+                    conv("c3", g3, out_c),
+                    bn("bn3", out_c, out_hw),
+                ],
+            )
+        }
+    };
+    let shortcut = if stride != 1 || in_c != out_c {
+        let gp = Conv2dGeom { in_c, in_h: hw, in_w: hw, k: 1, stride, pad: 0 };
+        vec![conv("proj", gp, out_c), bn("bnp", out_c, out_hw)]
+    } else {
+        Vec::new()
+    };
+    LoweredUnit::Residual {
+        name: name.to_string(),
+        main,
+        shortcut,
+    }
+}
+
 /// The six paper networks as named preset specs (Appendix A, scaled per
 /// DESIGN.md §7). The DSL strings pin the historical layer names where the
 /// stable walk would pick different ones (`#stem`, `#fc6`…).
@@ -496,6 +637,138 @@ impl ModelSpec {
             }
         }
         Sequential::new(layers)
+    }
+
+    /// Flatten the validated plan into per-layer lowering records — one
+    /// [`LoweredUnit`] per layer of [`ModelSpec::build`]'s `Sequential`,
+    /// in build order. `crate::program` compiles these into a step
+    /// program; the positional alignment with `build` is what lets
+    /// program exec steps address layers by index.
+    pub fn lower_units(&self) -> Vec<LoweredUnit> {
+        let plan = self.validated_plan();
+        let mut shape = match self.input {
+            InputKind::Image { c, h, w } => Shape::Img { c, h, w },
+            InputKind::Vector { dim } => Shape::Flat { d: dim },
+        };
+        let per_example = |s: &Shape| match *s {
+            Shape::Img { c, h, w } => c * h * w,
+            Shape::Flat { d } => d,
+        };
+        let mut units = Vec::new();
+        for step in &plan.steps {
+            match step {
+                PlanStep::Conv {
+                    name,
+                    geom,
+                    out_c,
+                    bias,
+                    bn,
+                    pos,
+                } => {
+                    units.push(LoweredUnit::Conv {
+                        name: name.clone(),
+                        geom: *geom,
+                        out_c: *out_c,
+                        bias: *bias,
+                        pos: *pos,
+                    });
+                    shape = Shape::Img {
+                        c: *out_c,
+                        h: geom.out_h(),
+                        w: geom.out_w(),
+                    };
+                    if *bn {
+                        units.push(LoweredUnit::BatchNorm {
+                            name: format!("{name}.bn"),
+                            features: *out_c,
+                            per_example: per_example(&shape),
+                        });
+                    }
+                    units.push(LoweredUnit::Relu {
+                        per_example: per_example(&shape),
+                    });
+                }
+                PlanStep::MaxPool { k, stride } => {
+                    let Shape::Img { c, h, w } = shape else {
+                        unreachable!("validated plan: maxpool over image")
+                    };
+                    units.push(LoweredUnit::MaxPool {
+                        k: *k,
+                        stride: *stride,
+                        c,
+                        in_h: h,
+                        in_w: w,
+                    });
+                    shape = Shape::Img {
+                        c,
+                        h: (h - k) / stride + 1,
+                        w: (w - k) / stride + 1,
+                    };
+                }
+                PlanStep::Gap => {
+                    let Shape::Img { c, h, w } = shape else {
+                        unreachable!("validated plan: gap over image")
+                    };
+                    units.push(LoweredUnit::Gap { c, in_h: h, in_w: w });
+                    shape = Shape::Flat { d: c };
+                }
+                PlanStep::Flatten => {
+                    units.push(LoweredUnit::Flatten {
+                        per_example: per_example(&shape),
+                    });
+                    shape = Shape::Flat { d: per_example(&shape) };
+                }
+                PlanStep::Relu => units.push(LoweredUnit::Relu {
+                    per_example: per_example(&shape),
+                }),
+                PlanStep::Fc {
+                    name,
+                    in_dim,
+                    out,
+                    bias,
+                    bn,
+                    pos,
+                    flatten_first,
+                } => {
+                    if *flatten_first {
+                        units.push(LoweredUnit::Flatten { per_example: *in_dim });
+                    }
+                    units.push(LoweredUnit::Linear {
+                        name: name.clone(),
+                        in_dim: *in_dim,
+                        out: *out,
+                        bias: *bias,
+                        pos: *pos,
+                    });
+                    if *bn {
+                        units.push(LoweredUnit::BatchNorm {
+                            name: format!("{name}.bn"),
+                            features: *out,
+                            per_example: *out,
+                        });
+                    }
+                    shape = Shape::Flat { d: *out };
+                }
+                PlanStep::Block {
+                    name,
+                    in_c,
+                    hw,
+                    width,
+                    expand,
+                    stride,
+                } => {
+                    units.push(lower_block(name, *in_c, *hw, *width, *expand, *stride));
+                    let out_c = width * expand.unwrap_or(1);
+                    let out_hw = (hw + 2 - 3) / stride + 1;
+                    shape = Shape::Img {
+                        c: out_c,
+                        h: out_hw,
+                        w: out_hw,
+                    };
+                }
+            }
+        }
+        units
     }
 
     /// The stable walk: shape inference + name/position assignment +
@@ -1400,6 +1673,46 @@ mod tests {
             assert_eq!(y.shape, vec![2, spec.classes()], "{}", spec.id());
             assert!(m.num_params() > 1000, "{} too small", spec.id());
         }
+    }
+
+    #[test]
+    fn lower_units_align_with_build() {
+        // One LoweredUnit per built layer, in build order, for every
+        // preset — the indexing contract the program executor relies on.
+        for spec in ModelSpec::all_presets() {
+            let model = spec.build(0);
+            let units = spec.lower_units();
+            assert_eq!(units.len(), model.layers.len(), "{}", spec.id());
+        }
+        // Structure spot-check on the conv preset: conv5x5(16) opens,
+        // fc(10) closes, maxpools carry the walked shapes.
+        let units = ModelSpec::cifar_cnn().lower_units();
+        assert!(matches!(
+            &units[0],
+            LoweredUnit::Conv { name, out_c: 16, .. } if name == "conv1"
+        ));
+        assert!(matches!(
+            units[1],
+            LoweredUnit::Relu { per_example } if per_example == 16 * 28 * 28
+        ));
+        assert!(matches!(
+            units[2],
+            LoweredUnit::MaxPool { k: 2, stride: 2, c: 16, in_h: 28, in_w: 28 }
+        ));
+        assert!(matches!(
+            units.last().unwrap(),
+            LoweredUnit::Linear { name, out: 10, pos: LayerPos::Last, .. } if name == "fc"
+        ));
+        // And residual internals mirror the block builders.
+        let resnet = ModelSpec::cifar_resnet().lower_units();
+        let Some(LoweredUnit::Residual { main, shortcut, .. }) = resnet
+            .iter()
+            .find(|u| matches!(u, LoweredUnit::Residual { name, .. } if name == "s1b0"))
+        else {
+            panic!("s1b0 not lowered: {resnet:?}");
+        };
+        assert_eq!(main.len(), 5, "basic block main chain");
+        assert_eq!(shortcut.len(), 2, "strided block needs a projection");
     }
 
     #[test]

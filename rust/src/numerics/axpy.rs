@@ -67,6 +67,10 @@ impl UpdatePrecision {
     }
 }
 
+/// Telemetry stash width for the quantizing AXPY loops — matches the batch
+/// quantizer's chunking so recorder call overhead stays amortized.
+const REC_CHUNK: usize = 64;
+
 /// `y ← y + a·x`, elementwise re-rounded into the update format.
 pub fn axpy<R: RoundBits>(p: &UpdatePrecision, a: f32, x: &[f32], y: &mut [f32], rng: &mut R) {
     debug_assert_eq!(x.len(), y.len());
@@ -75,8 +79,28 @@ pub fn axpy<R: RoundBits>(p: &UpdatePrecision, a: f32, x: &[f32], y: &mut [f32],
             *yi += a * xi;
         }
     } else {
-        for (yi, &xi) in y.iter_mut().zip(x) {
-            *yi = p.q(*yi + a * xi, rng);
+        match crate::telemetry::quant_recorder(p.fmt) {
+            None => {
+                for (yi, &xi) in y.iter_mut().zip(x) {
+                    *yi = p.q(*yi + a * xi, rng);
+                }
+            }
+            Some(mut rec) => {
+                // Same arithmetic and one-draw-per-element RNG order as the
+                // plain loop; the recorder only observes (pre-quantize bits,
+                // quantized value) pairs — the strict-observer contract of
+                // `docs/observability.md`.
+                let mut orig = [0u32; REC_CHUNK];
+                for (ys, xs) in y.chunks_mut(REC_CHUNK).zip(x.chunks(REC_CHUNK)) {
+                    for ((yi, &xi), o) in ys.iter_mut().zip(xs).zip(orig.iter_mut()) {
+                        let raw = *yi + a * xi;
+                        *o = raw.to_bits();
+                        *yi = p.q(raw, rng);
+                    }
+                    rec.record(&orig[..ys.len()], ys);
+                }
+                rec.commit();
+            }
         }
     }
 }
@@ -89,8 +113,24 @@ pub fn xpby<R: RoundBits>(p: &UpdatePrecision, x: &[f32], b: f32, y: &mut [f32],
             *yi = b * *yi + xi;
         }
     } else {
-        for (yi, &xi) in y.iter_mut().zip(x) {
-            *yi = p.q(b * *yi + xi, rng);
+        match crate::telemetry::quant_recorder(p.fmt) {
+            None => {
+                for (yi, &xi) in y.iter_mut().zip(x) {
+                    *yi = p.q(b * *yi + xi, rng);
+                }
+            }
+            Some(mut rec) => {
+                let mut orig = [0u32; REC_CHUNK];
+                for (ys, xs) in y.chunks_mut(REC_CHUNK).zip(x.chunks(REC_CHUNK)) {
+                    for ((yi, &xi), o) in ys.iter_mut().zip(xs).zip(orig.iter_mut()) {
+                        let raw = b * *yi + xi;
+                        *o = raw.to_bits();
+                        *yi = p.q(raw, rng);
+                    }
+                    rec.record(&orig[..ys.len()], ys);
+                }
+                rec.commit();
+            }
         }
     }
 }

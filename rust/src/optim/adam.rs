@@ -68,6 +68,10 @@ impl Optimizer for Adam {
             let mut rng =
                 Xoshiro256::seed_from_u64(seed ^ layer_hash(&p.name) ^ step.wrapping_mul(0xADA7));
             let wd = if p.decay { wd_all } else { 0.0 };
+            // Scope the update arithmetic so its quantizations report under
+            // (param, upd) at update time — not via the next forward.
+            let _tl = crate::telemetry::layer_scope(&p.name);
+            let _tr = crate::telemetry::role_scope(crate::telemetry::Role::Update);
             if up.is_fp32() {
                 for i in 0..p.value.len() {
                     let g = p.grad.data[i] * inv_scale + wd * p.value.data[i];
@@ -77,6 +81,42 @@ impl Optimizer for Adam {
                     let vh = v[i] / bc2;
                     p.value.data[i] -= lr * mh / (vh.sqrt() + eps);
                 }
+            } else if let Some(mut rec) = crate::telemetry::quant_recorder(up.fmt) {
+                // Recording variant: identical arithmetic and RNG draw
+                // order; the three per-element quantize streams (L2 fold,
+                // first moment, weight) stash their pre-quantize bits
+                // chunk-wise for the strict-observer recorder.
+                const C: usize = 64;
+                let (mut og, mut om, mut ow) = ([0u32; C], [0u32; C], [0u32; C]);
+                let (mut qg, mut qm, mut qw) = ([0f32; C], [0f32; C], [0f32; C]);
+                let len = p.value.len();
+                let mut base = 0;
+                while base < len {
+                    let n = (len - base).min(C);
+                    for j in 0..n {
+                        let i = base + j;
+                        let graw = p.grad.data[i] * inv_scale + wd * p.value.data[i];
+                        og[j] = graw.to_bits();
+                        let g = q(&up, graw, &mut rng);
+                        qg[j] = g;
+                        let mraw = b1 * m[i] + (1.0 - b1) * g;
+                        om[j] = mraw.to_bits();
+                        m[i] = q(&up, mraw, &mut rng);
+                        qm[j] = m[i];
+                        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                        let mh = m[i] / bc1;
+                        let vh = v[i] / bc2;
+                        let wraw = p.value.data[i] - lr * mh / (vh.sqrt() + eps);
+                        ow[j] = wraw.to_bits();
+                        p.value.data[i] = q(&up, wraw, &mut rng);
+                        qw[j] = p.value.data[i];
+                    }
+                    rec.record(&og[..n], &qg[..n]);
+                    rec.record(&om[..n], &qm[..n]);
+                    rec.record(&ow[..n], &qw[..n]);
+                    base += n;
+                }
+                rec.commit();
             } else {
                 for i in 0..p.value.len() {
                     // L2-Reg fold (AXPY 1).

@@ -49,10 +49,9 @@ pub trait Optimizer: Send {
         let fmt = policy.update.fmt;
         model.visit_params(&mut |p| {
             // Telemetry: the master-weight quantize reports per parameter
-            // name under the Update role. (The per-step AXPYs quantize
-            // element-wise through `numerics::axpy`, off the batch
-            // quantizer — their distributions surface via the next
-            // forward's Pack-role pass instead; see docs/observability.md.)
+            // name under the Update role — the same (layer, upd) scope the
+            // per-step AXPY loops report under (`numerics::axpy`), so the
+            // whole weight-update path shares one counter row.
             let _tl = crate::telemetry::layer_scope(&p.name);
             let _tr = crate::telemetry::role_scope(crate::telemetry::Role::Update);
             fmt.quantize_slice(&mut p.value.data, RoundMode::NearestEven);
@@ -143,6 +142,10 @@ impl Optimizer for Sgd {
             let mut rng =
                 Xoshiro256::seed_from_u64(seed ^ layer_hash(&p.name) ^ step.wrapping_mul(0x9E37));
             let wd = if p.decay { weight_decay } else { 0.0 };
+            // Scope the AXPYs so their quantizations report under
+            // (param, upd) at update time — not via the next forward.
+            let _tl = crate::telemetry::layer_scope(&p.name);
+            let _tr = crate::telemetry::role_scope(crate::telemetry::Role::Update);
             sgd_update(&up, &mut p.value.data, &mut g, v, lr, momentum, wd, &mut rng);
             p.value.mark_mutated(); // keep any packed-operand cache honest
             p.zero_grad();

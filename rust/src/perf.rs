@@ -9,7 +9,7 @@
 //! two `Instant::now()` calls and one `fetch_add` (~tens of ns against
 //! µs–ms regions — unconditionally on).
 //!
-//! `fp8train bench --json` (schema 7) resets the counters, runs the
+//! `fp8train bench --json` (schema 8) resets the counters, runs the
 //! train-step benchmark, and reports per-step phase times — making "where
 //! does a step go?" a tracked number instead of a guess, and exposing the
 //! amortization claim of the quantized-operand cache (weight quantization

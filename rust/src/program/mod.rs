@@ -1,0 +1,1289 @@
+//! Compiled step programs — lower a `ModelSpec` + `PrecisionPolicy` once,
+//! execute the result every step (ROADMAP direction 3).
+//!
+//! The paper's training step is a fixed schedule: quantize → pack → GEMM
+//! (chunk-accumulated, §3) → bias/act → SR weight update. The interpreter
+//! (`Sequential::forward/backward` + `Optimizer::step`) re-derives that
+//! schedule from the layer list on every call — re-deciding fusion
+//! (`nn::conv::im2col_fuses`), re-leasing arena slots, re-dispatching
+//! virtually. This module compiles the schedule **once per (spec, policy)**
+//! into a flat [`StepProgram`]:
+//!
+//! - a **plan**: typed ops ([`OpKind`]) over a statically shaped operand
+//!   table ([`Operand`]) with formats, SR stream labels, and arena-slot
+//!   lifetimes resolved at lowering. Scratch operands are liveness-colored
+//!   into slots so peak scratch is known ahead of time
+//!   (`planned_peak_bytes`) instead of discovered by the dynamic lease
+//!   pool; fusion choices are made once per spec, not per batch.
+//! - an **exec schedule**: the coarse step list ([`ExecStep`]) the
+//!   executor runs. Exec steps address layers of the built `Sequential`
+//!   by index (the [`ModelSpec::lower_units`] alignment contract), so the
+//!   executor performs *exactly* the interpreter's call sequence — same
+//!   kernels, same `QuantCtx` seeds, same SR draw order — and bit-identity
+//!   with the reference interpreter holds by construction
+//!   (`rust/tests/program_equivalence.rs` enforces it end to end).
+//!
+//! `train`, `eval`, and the serve worker's `predict_logits` all run the
+//! program when the engine carries one (`NativeEngine::with_program` /
+//! `FP8TRAIN_ENGINE_PROGRAM=1`); eval and serving execute the forward-only
+//! program slice. `fp8train program dump <spec>` prints the lowered plan;
+//! `bench --json` (schema 8) reports lowering time, program-vs-interpreted
+//! step time, and planned-vs-leased scratch peaks. See
+//! `docs/step-program.md` for the IR reference and determinism contract.
+
+use crate::data::Batch;
+use crate::nn::models::InputKind;
+use crate::nn::{
+    softmax_xent, GemmRole, Layer, LayerPos, LoweredUnit, ModelSpec, PrecisionPolicy, QuantCtx,
+    Sequential,
+};
+use crate::numerics::{FloatFormat, GemmPrecision};
+use crate::optim::Optimizer;
+use crate::tensor::{Conv2dGeom, Tensor};
+
+/// How an operand is stored at runtime — drives the lifetime planner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperandClass {
+    /// Activation/error tensors handed between layers (owned by the layer
+    /// caches in the interpreter; not arena-planned).
+    Flow,
+    /// Version-keyed cached weight packs, rebuilt once per weight update
+    /// (`Tensor::quantized{,_t}` — `docs/perf.md`).
+    Pack,
+    /// Step-local temporaries leased from the scratch arena — the operands
+    /// the liveness planner colors into slots.
+    Scratch,
+    /// Parameter / gradient storage owned by the model.
+    Param,
+}
+
+/// One statically planned operand: shape, storage format, class, and the
+/// op-index lifetime the slot coloring runs over.
+#[derive(Clone, Debug)]
+pub struct Operand {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Storage format name (`fp8`/`fp16`/`fp32`, or `custom` for Table 2
+    /// baseline quantizers).
+    pub fmt: String,
+    pub class: OperandClass,
+    /// First/last op index referencing this operand (inclusive).
+    pub first_op: usize,
+    pub last_op: usize,
+    /// Arena slot assigned by the liveness coloring (scratch only).
+    pub slot: Option<usize>,
+}
+
+impl Operand {
+    pub fn bytes(&self) -> u64 {
+        4 * self.rows as u64 * self.cols as u64
+    }
+}
+
+/// The typed op set of the step IR.
+#[derive(Clone, Debug)]
+pub enum OpKind {
+    /// Quantize and/or repack a tensor into operand layout (weight pack
+    /// builds, in-place batch quantizes, the conv NCHW→rows error repack,
+    /// the backward transposes).
+    QuantPack,
+    /// The im2col lowering (`reverse: false`) or its col2im adjoint
+    /// (`reverse: true`). `fused` records the once-per-spec
+    /// quantize-on-copy decision (`nn::conv::im2col_fuses`).
+    Im2colQ { fused: bool, reverse: bool },
+    /// A chunk-accumulated GEMM (paper §3; `chunk` = CL).
+    Gemm {
+        role: GemmRole,
+        chunk: usize,
+        m: usize,
+        n: usize,
+        k: usize,
+    },
+    /// Bias add and/or activation / layout restore (`bias: false` for pure
+    /// ReLU / residual join steps).
+    BiasAct { bias: bool },
+    /// BatchNorm statistics + normalization (fwd or bwd).
+    Norm { backward: bool },
+    /// MaxPool / global-average-pool (fwd or bwd).
+    Pool { backward: bool },
+    /// Softmax + cross-entropy, producing the loss-scaled `dlogits`.
+    LossGrad,
+    /// The fused per-parameter weight-update AXPY chain (Fig. 2b);
+    /// `sr` marks stochastic rounding in the update format.
+    Axpy { sr: bool },
+}
+
+/// One op of the lowered plan.
+#[derive(Clone, Debug)]
+pub struct PlanOp {
+    pub kind: OpKind,
+    /// Owning layer (or parameter, for `Axpy`) name.
+    pub layer: String,
+    pub reads: Vec<usize>,
+    pub writes: Vec<usize>,
+    /// Deterministic SR stream label, when the op draws random bits.
+    pub sr_stream: Option<String>,
+}
+
+/// Coarse executable schedule — each step is one interpreter-equivalent
+/// call against `Sequential::layers[i]`, so program execution reproduces
+/// the reference bit-for-bit by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecStep {
+    Forward { layer: usize },
+    LossGrad,
+    Backward { layer: usize },
+    Update,
+}
+
+/// A compiled step program. See the module docs for the two layers
+/// (plan vs exec schedule).
+#[derive(Clone, Debug)]
+pub struct StepProgram {
+    pub spec_id: String,
+    pub policy_name: String,
+    /// Batch size the operand table and liveness plan were computed for.
+    /// The executor itself is batch-size-agnostic (shapes come from the
+    /// tensors at runtime); the plan is the *model* of the step.
+    pub planned_batch: usize,
+    pub ops: Vec<PlanOp>,
+    pub operands: Vec<Operand>,
+    /// Byte size of each liveness-colored arena slot.
+    pub slots: Vec<u64>,
+    /// Peak of simultaneously-live planned scratch bytes.
+    pub planned_peak_bytes: u64,
+    pub exec: Vec<ExecStep>,
+}
+
+/// `Some(fmt)` that actually converts, or a baseline custom quantizer.
+fn quantizes(fmt: Option<FloatFormat>) -> bool {
+    fmt.map_or(true, |f| !f.is_identity())
+}
+
+fn fmt_name(fmt: Option<FloatFormat>) -> String {
+    match fmt {
+        Some(f) => f.name(),
+        None => "custom".to_string(),
+    }
+}
+
+fn gemm_sr(prec: &GemmPrecision, layer: &str, role: GemmRole) -> Option<String> {
+    prec.round
+        .is_stochastic()
+        .then(|| format!("gemm:{layer}:{}", role.id()))
+}
+
+/// Per-unit record kept between the forward and backward lowering walks so
+/// backward reuses the operand ids forward created (the conv `cols` cache,
+/// the linear stored activation).
+enum Rec {
+    Conv {
+        name: String,
+        geom: Conv2dGeom,
+        out_c: usize,
+        pos: LayerPos,
+        cols: usize,
+    },
+    Linear {
+        name: String,
+        in_dim: usize,
+        out: usize,
+        pos: LayerPos,
+        x: usize,
+    },
+    Bn {
+        name: String,
+        features: usize,
+        per_example: usize,
+    },
+    Relu {
+        per_example: usize,
+    },
+    MaxPool {
+        c: usize,
+        in_h: usize,
+        in_w: usize,
+        k: usize,
+        stride: usize,
+    },
+    Gap {
+        c: usize,
+        in_h: usize,
+        in_w: usize,
+    },
+    Flatten,
+    Residual {
+        name: String,
+        main: Vec<Rec>,
+        shortcut: Vec<Rec>,
+        in_elems: usize,
+        out_elems: usize,
+    },
+}
+
+struct Lowerer<'a> {
+    policy: &'a PrecisionPolicy,
+    batch: usize,
+    ops: Vec<PlanOp>,
+    operands: Vec<Operand>,
+}
+
+impl<'a> Lowerer<'a> {
+    fn operand(
+        &mut self,
+        name: String,
+        rows: usize,
+        cols: usize,
+        fmt: String,
+        class: OperandClass,
+    ) -> usize {
+        self.operands.push(Operand {
+            name,
+            rows,
+            cols,
+            fmt,
+            class,
+            first_op: usize::MAX,
+            last_op: 0,
+            slot: None,
+        });
+        self.operands.len() - 1
+    }
+
+    fn push(
+        &mut self,
+        kind: OpKind,
+        layer: &str,
+        reads: Vec<usize>,
+        writes: Vec<usize>,
+        sr_stream: Option<String>,
+    ) {
+        let idx = self.ops.len();
+        for &o in reads.iter().chain(writes.iter()) {
+            let op = &mut self.operands[o];
+            op.first_op = op.first_op.min(idx);
+            op.last_op = op.last_op.max(idx);
+        }
+        self.ops.push(PlanOp {
+            kind,
+            layer: layer.to_string(),
+            reads,
+            writes,
+            sr_stream,
+        });
+    }
+
+    /// Forward-lower a unit sequence from flow operand `x`; returns the
+    /// output flow operand and the per-unit records for the backward walk.
+    fn forward_seq(&mut self, units: &[LoweredUnit], x: usize) -> (usize, Vec<Rec>) {
+        let n = self.batch;
+        let mut flow = x;
+        let mut recs = Vec::with_capacity(units.len());
+        for u in units {
+            match u {
+                LoweredUnit::Conv { name, geom, out_c, bias, pos } => {
+                    let (oh, ow) = (geom.out_h(), geom.out_w());
+                    let m = n * oh * ow;
+                    let patch = geom.patch_len();
+                    let act = self.policy.plain_act_fmt(GemmRole::Forward, *pos);
+                    let wfmt = self.policy.plain_weight_fmt(GemmRole::Forward, *pos);
+                    let fused = crate::nn::conv::im2col_fuses(geom) && quantizes(act);
+                    let cols = self.operand(
+                        format!("{name}.cols"),
+                        m,
+                        patch,
+                        fmt_name(act),
+                        OperandClass::Scratch,
+                    );
+                    if fused {
+                        self.push(
+                            OpKind::Im2colQ { fused: true, reverse: false },
+                            name,
+                            vec![flow],
+                            vec![cols],
+                            None,
+                        );
+                    } else {
+                        if quantizes(act) {
+                            // Dense kernels / baselines: quantize the NCHW
+                            // activation in place before lowering.
+                            self.push(OpKind::QuantPack, name, vec![flow], vec![flow], None);
+                        }
+                        self.push(
+                            OpKind::Im2colQ { fused: false, reverse: false },
+                            name,
+                            vec![flow],
+                            vec![cols],
+                            None,
+                        );
+                    }
+                    let prec = self.policy.gemm_for(GemmRole::Forward, *pos);
+                    let mut reads = vec![cols];
+                    if quantizes(wfmt) {
+                        let wp = self.operand(
+                            format!("{name}.w.pack"),
+                            *out_c,
+                            patch,
+                            fmt_name(wfmt),
+                            OperandClass::Pack,
+                        );
+                        self.push(OpKind::QuantPack, name, vec![], vec![wp], None);
+                        reads.push(wp);
+                    }
+                    let rows = self.operand(
+                        format!("{name}.rows"),
+                        m,
+                        *out_c,
+                        "fp32".into(),
+                        OperandClass::Scratch,
+                    );
+                    self.push(
+                        OpKind::Gemm {
+                            role: GemmRole::Forward,
+                            chunk: prec.chunk,
+                            m,
+                            n: *out_c,
+                            k: patch,
+                        },
+                        name,
+                        reads,
+                        vec![rows],
+                        gemm_sr(&prec, name, GemmRole::Forward),
+                    );
+                    let y = self.operand(
+                        format!("{name}.y"),
+                        n,
+                        out_c * oh * ow,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(OpKind::BiasAct { bias: *bias }, name, vec![rows], vec![y], None);
+                    flow = y;
+                    recs.push(Rec::Conv {
+                        name: name.clone(),
+                        geom: *geom,
+                        out_c: *out_c,
+                        pos: *pos,
+                        cols,
+                    });
+                }
+                LoweredUnit::Linear { name, in_dim, out, bias, pos } => {
+                    let act = self.policy.plain_act_fmt(GemmRole::Forward, *pos);
+                    let wfmt = self.policy.plain_weight_fmt(GemmRole::Forward, *pos);
+                    if quantizes(act) {
+                        // In-place batch quantize of the stored activation.
+                        self.push(OpKind::QuantPack, name, vec![flow], vec![flow], None);
+                    }
+                    let prec = self.policy.gemm_for(GemmRole::Forward, *pos);
+                    let mut reads = vec![flow];
+                    if quantizes(wfmt) {
+                        let wp = self.operand(
+                            format!("{name}.w.pack"),
+                            *out,
+                            *in_dim,
+                            fmt_name(wfmt),
+                            OperandClass::Pack,
+                        );
+                        self.push(OpKind::QuantPack, name, vec![], vec![wp], None);
+                        reads.push(wp);
+                    }
+                    let y = self.operand(
+                        format!("{name}.y"),
+                        n,
+                        *out,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(
+                        OpKind::Gemm {
+                            role: GemmRole::Forward,
+                            chunk: prec.chunk,
+                            m: n,
+                            n: *out,
+                            k: *in_dim,
+                        },
+                        name,
+                        reads,
+                        vec![y],
+                        gemm_sr(&prec, name, GemmRole::Forward),
+                    );
+                    if *bias {
+                        self.push(OpKind::BiasAct { bias: true }, name, vec![y], vec![y], None);
+                    }
+                    recs.push(Rec::Linear {
+                        name: name.clone(),
+                        in_dim: *in_dim,
+                        out: *out,
+                        pos: *pos,
+                        x: flow,
+                    });
+                    flow = y;
+                }
+                LoweredUnit::BatchNorm { name, features, per_example } => {
+                    // Reduction + normalization vectors lease from the arena.
+                    let tmp = self.operand(
+                        format!("{name}.stats"),
+                        2,
+                        *features,
+                        "fp32".into(),
+                        OperandClass::Scratch,
+                    );
+                    let y = self.operand(
+                        format!("{name}.y"),
+                        n,
+                        *per_example,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(
+                        OpKind::Norm { backward: false },
+                        name,
+                        vec![flow],
+                        vec![y, tmp],
+                        None,
+                    );
+                    flow = y;
+                    recs.push(Rec::Bn {
+                        name: name.clone(),
+                        features: *features,
+                        per_example: *per_example,
+                    });
+                }
+                LoweredUnit::Relu { per_example } => {
+                    let y = self.operand(
+                        "relu.y".into(),
+                        n,
+                        *per_example,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(OpKind::BiasAct { bias: false }, "relu", vec![flow], vec![y], None);
+                    flow = y;
+                    recs.push(Rec::Relu { per_example: *per_example });
+                }
+                LoweredUnit::MaxPool { k, stride, c, in_h, in_w } => {
+                    let (oh, ow) = ((in_h - k) / stride + 1, (in_w - k) / stride + 1);
+                    let y = self.operand(
+                        "maxpool.y".into(),
+                        n,
+                        c * oh * ow,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(OpKind::Pool { backward: false }, "maxpool", vec![flow], vec![y], None);
+                    flow = y;
+                    recs.push(Rec::MaxPool {
+                        c: *c,
+                        in_h: *in_h,
+                        in_w: *in_w,
+                        k: *k,
+                        stride: *stride,
+                    });
+                }
+                LoweredUnit::Gap { c, in_h, in_w } => {
+                    let y = self.operand("gap.y".into(), n, *c, "fp32".into(), OperandClass::Flow);
+                    self.push(OpKind::Pool { backward: false }, "gap", vec![flow], vec![y], None);
+                    flow = y;
+                    recs.push(Rec::Gap { c: *c, in_h: *in_h, in_w: *in_w });
+                }
+                LoweredUnit::Flatten { .. } => {
+                    // Pure metadata reshape — no op, flow operand unchanged.
+                    recs.push(Rec::Flatten);
+                }
+                LoweredUnit::Residual { name, main, shortcut } => {
+                    let in_elems = match main.first() {
+                        Some(LoweredUnit::Conv { geom, .. }) => geom.in_c * geom.in_h * geom.in_w,
+                        _ => 0,
+                    };
+                    let out_elems = match main.last() {
+                        Some(LoweredUnit::BatchNorm { per_example, .. }) => *per_example,
+                        _ => 0,
+                    };
+                    let (y_main, main_recs) = self.forward_seq(main, flow);
+                    let (y_short, short_recs) = if shortcut.is_empty() {
+                        (flow, Vec::new())
+                    } else {
+                        self.forward_seq(shortcut, flow)
+                    };
+                    let y = self.operand(
+                        format!("{name}.y"),
+                        n,
+                        out_elems,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    // Join: skip add + in-place ReLU.
+                    self.push(
+                        OpKind::BiasAct { bias: false },
+                        name,
+                        vec![y_main, y_short],
+                        vec![y],
+                        None,
+                    );
+                    flow = y;
+                    recs.push(Rec::Residual {
+                        name: name.clone(),
+                        main: main_recs,
+                        shortcut: short_recs,
+                        in_elems,
+                        out_elems,
+                    });
+                }
+            }
+        }
+        (flow, recs)
+    }
+
+    /// Backward-lower the recorded units in reverse; returns the input
+    /// gradient flow operand.
+    fn backward_seq(&mut self, recs: &[Rec], dy: usize) -> usize {
+        let n = self.batch;
+        let mut flow = dy;
+        for rec in recs.iter().rev() {
+            match rec {
+                Rec::Conv { name, geom, out_c, pos, cols } => {
+                    let (oh, ow) = (geom.out_h(), geom.out_w());
+                    let m = n * oh * ow;
+                    let patch = geom.patch_len();
+                    let efmt = self.policy.plain_err_fmt(GemmRole::Backward, *pos);
+                    // NCHW→rows error repack; quantize fuses into the copy.
+                    let err = self.operand(
+                        format!("{name}.err"),
+                        m,
+                        *out_c,
+                        fmt_name(efmt),
+                        OperandClass::Scratch,
+                    );
+                    self.push(OpKind::QuantPack, name, vec![flow], vec![err], None);
+                    // Gradient GEMM: dW = errᵀ · cols (K = N·oh·ow).
+                    let err_t = self.operand(
+                        format!("{name}.err_t"),
+                        *out_c,
+                        m,
+                        fmt_name(efmt),
+                        OperandClass::Scratch,
+                    );
+                    self.push(OpKind::QuantPack, name, vec![err], vec![err_t], None);
+                    let prec_g = self.policy.gemm_for(GemmRole::Gradient, *pos);
+                    let dw = self.operand(
+                        format!("{name}.dw"),
+                        *out_c,
+                        patch,
+                        "fp32".into(),
+                        OperandClass::Param,
+                    );
+                    self.push(
+                        OpKind::Gemm {
+                            role: GemmRole::Gradient,
+                            chunk: prec_g.chunk,
+                            m: *out_c,
+                            n: patch,
+                            k: m,
+                        },
+                        name,
+                        vec![err_t, *cols],
+                        vec![dw],
+                        gemm_sr(&prec_g, name, GemmRole::Gradient),
+                    );
+                    // Backward GEMM: dCols = err · W.
+                    let wfmt = self.policy.plain_weight_fmt(GemmRole::Forward, *pos);
+                    let mut reads = vec![err];
+                    if quantizes(wfmt) {
+                        let wt = self.operand(
+                            format!("{name}.w.pack_t"),
+                            patch,
+                            *out_c,
+                            fmt_name(wfmt),
+                            OperandClass::Pack,
+                        );
+                        self.push(OpKind::QuantPack, name, vec![], vec![wt], None);
+                        reads.push(wt);
+                    }
+                    let prec_b = self.policy.gemm_for(GemmRole::Backward, *pos);
+                    let dcols = self.operand(
+                        format!("{name}.dcols"),
+                        m,
+                        patch,
+                        "fp32".into(),
+                        OperandClass::Scratch,
+                    );
+                    self.push(
+                        OpKind::Gemm {
+                            role: GemmRole::Backward,
+                            chunk: prec_b.chunk,
+                            m,
+                            n: patch,
+                            k: *out_c,
+                        },
+                        name,
+                        reads,
+                        vec![dcols],
+                        gemm_sr(&prec_b, name, GemmRole::Backward),
+                    );
+                    let dx = self.operand(
+                        format!("{name}.dx"),
+                        n,
+                        geom.in_c * geom.in_h * geom.in_w,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(
+                        OpKind::Im2colQ { fused: false, reverse: true },
+                        name,
+                        vec![dcols],
+                        vec![dx],
+                        None,
+                    );
+                    flow = dx;
+                }
+                Rec::Linear { name, in_dim, out, pos, x } => {
+                    let efmt = self.policy.plain_err_fmt(GemmRole::Backward, *pos);
+                    if quantizes(efmt) {
+                        // In-place batch quantize of the error rows.
+                        self.push(OpKind::QuantPack, name, vec![flow], vec![flow], None);
+                    }
+                    // dX = dY · W.
+                    let wfmt = self.policy.plain_weight_fmt(GemmRole::Forward, *pos);
+                    let mut reads = vec![flow];
+                    if quantizes(wfmt) {
+                        let wt = self.operand(
+                            format!("{name}.w.pack_t"),
+                            *in_dim,
+                            *out,
+                            fmt_name(wfmt),
+                            OperandClass::Pack,
+                        );
+                        self.push(OpKind::QuantPack, name, vec![], vec![wt], None);
+                        reads.push(wt);
+                    }
+                    let prec_b = self.policy.gemm_for(GemmRole::Backward, *pos);
+                    let dx = self.operand(
+                        format!("{name}.dx"),
+                        n,
+                        *in_dim,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(
+                        OpKind::Gemm {
+                            role: GemmRole::Backward,
+                            chunk: prec_b.chunk,
+                            m: n,
+                            n: *in_dim,
+                            k: *out,
+                        },
+                        name,
+                        reads,
+                        vec![dx],
+                        gemm_sr(&prec_b, name, GemmRole::Backward),
+                    );
+                    // dW = dYᵀ · X (stored activation from forward).
+                    let err_t = self.operand(
+                        format!("{name}.err_t"),
+                        *out,
+                        n,
+                        fmt_name(efmt),
+                        OperandClass::Scratch,
+                    );
+                    self.push(OpKind::QuantPack, name, vec![flow], vec![err_t], None);
+                    let prec_g = self.policy.gemm_for(GemmRole::Gradient, *pos);
+                    let dw = self.operand(
+                        format!("{name}.dw"),
+                        *out,
+                        *in_dim,
+                        "fp32".into(),
+                        OperandClass::Param,
+                    );
+                    self.push(
+                        OpKind::Gemm {
+                            role: GemmRole::Gradient,
+                            chunk: prec_g.chunk,
+                            m: *out,
+                            n: *in_dim,
+                            k: n,
+                        },
+                        name,
+                        vec![err_t, *x],
+                        vec![dw],
+                        gemm_sr(&prec_g, name, GemmRole::Gradient),
+                    );
+                    flow = dx;
+                }
+                Rec::Bn { name, features, per_example } => {
+                    let tmp = self.operand(
+                        format!("{name}.dstats"),
+                        2,
+                        *features,
+                        "fp32".into(),
+                        OperandClass::Scratch,
+                    );
+                    let dx = self.operand(
+                        format!("{name}.dx"),
+                        n,
+                        *per_example,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(
+                        OpKind::Norm { backward: true },
+                        name,
+                        vec![flow],
+                        vec![dx, tmp],
+                        None,
+                    );
+                    flow = dx;
+                }
+                Rec::Relu { per_example } => {
+                    let dx = self.operand(
+                        "relu.dx".into(),
+                        n,
+                        *per_example,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(OpKind::BiasAct { bias: false }, "relu", vec![flow], vec![dx], None);
+                    flow = dx;
+                }
+                Rec::MaxPool { c, in_h, in_w, .. } | Rec::Gap { c, in_h, in_w } => {
+                    let label = if matches!(rec, Rec::Gap { .. }) { "gap" } else { "maxpool" };
+                    let dx = self.operand(
+                        format!("{label}.dx"),
+                        n,
+                        c * in_h * in_w,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(OpKind::Pool { backward: true }, label, vec![flow], vec![dx], None);
+                    flow = dx;
+                }
+                Rec::Flatten => {}
+                Rec::Residual { name, main, shortcut, in_elems, out_elems } => {
+                    // ReLU mask, then both branches, then the skip add.
+                    let dym = self.operand(
+                        format!("{name}.dy"),
+                        n,
+                        *out_elems,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(OpKind::BiasAct { bias: false }, name, vec![flow], vec![dym], None);
+                    let d_main = self.backward_seq(main, dym);
+                    let d_short = if shortcut.is_empty() {
+                        dym
+                    } else {
+                        self.backward_seq(shortcut, dym)
+                    };
+                    let dx = self.operand(
+                        format!("{name}.dx"),
+                        n,
+                        *in_elems,
+                        "fp32".into(),
+                        OperandClass::Flow,
+                    );
+                    self.push(
+                        OpKind::BiasAct { bias: false },
+                        name,
+                        vec![d_main, d_short],
+                        vec![dx],
+                        None,
+                    );
+                    flow = dx;
+                }
+            }
+        }
+        flow
+    }
+
+    /// Emit one fused `Axpy` op per parameter, in `visit_params` order.
+    fn update_seq(&mut self, units: &[LoweredUnit]) {
+        let up = self.policy.update;
+        let sr = up.round.is_stochastic() && !up.is_fp32();
+        let fmt = up.fmt.name();
+        let mut params: Vec<(String, usize, usize)> = Vec::new();
+        collect_params(units, &mut params);
+        for (name, rows, cols) in params {
+            let p = self.operand(name.clone(), rows, cols, fmt.clone(), OperandClass::Param);
+            self.push(
+                OpKind::Axpy { sr },
+                &name,
+                vec![p],
+                vec![p],
+                sr.then(|| format!("upd:{name}")),
+            );
+        }
+    }
+}
+
+/// Parameter tensors per unit, in the `visit_params` traversal order
+/// (layer order; conv/linear visit weight then bias; BatchNorm gamma then
+/// beta; residuals main then shortcut).
+fn collect_params(units: &[LoweredUnit], out: &mut Vec<(String, usize, usize)>) {
+    for u in units {
+        match u {
+            LoweredUnit::Conv { name, geom, out_c, bias, .. } => {
+                out.push((format!("{name}.w"), *out_c, geom.patch_len()));
+                if *bias {
+                    out.push((format!("{name}.b"), 1, *out_c));
+                }
+            }
+            LoweredUnit::Linear { name, in_dim, out: o, bias, .. } => {
+                out.push((format!("{name}.w"), *o, *in_dim));
+                if *bias {
+                    out.push((format!("{name}.b"), 1, *o));
+                }
+            }
+            LoweredUnit::BatchNorm { name, features, .. } => {
+                out.push((format!("{name}.gamma"), 1, *features));
+                out.push((format!("{name}.beta"), 1, *features));
+            }
+            LoweredUnit::Residual { main, shortcut, .. } => {
+                collect_params(main, out);
+                collect_params(shortcut, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl StepProgram {
+    /// Compile `spec` × `policy` into a step program, planning shapes and
+    /// operand lifetimes for `batch` examples.
+    pub fn lower(spec: &ModelSpec, policy: &PrecisionPolicy, batch: usize) -> StepProgram {
+        let units = spec.lower_units();
+        let mut lw = Lowerer {
+            policy,
+            batch,
+            ops: Vec::new(),
+            operands: Vec::new(),
+        };
+        let in_elems = match spec.input() {
+            InputKind::Image { c, h, w } => c * h * w,
+            InputKind::Vector { dim } => dim,
+        };
+        let x0 = lw.operand("x".into(), batch, in_elems, "fp32".into(), OperandClass::Flow);
+        let (logits, recs) = lw.forward_seq(&units, x0);
+        let dlogits = lw.operand(
+            "dlogits".into(),
+            batch,
+            spec.classes(),
+            policy.softmax_input_fmt.name(),
+            OperandClass::Flow,
+        );
+        lw.push(OpKind::LossGrad, "loss", vec![logits], vec![dlogits], None);
+        lw.backward_seq(&recs, dlogits);
+        lw.update_seq(&units);
+
+        // Liveness over scratch operands: peak simultaneously-live bytes,
+        // then greedy interval coloring into slots (first-fit by op index).
+        let mut planned_peak_bytes = 0u64;
+        for idx in 0..lw.ops.len() {
+            let live: u64 = lw
+                .operands
+                .iter()
+                .filter(|o| {
+                    o.class == OperandClass::Scratch && o.first_op <= idx && idx <= o.last_op
+                })
+                .map(|o| o.bytes())
+                .sum();
+            planned_peak_bytes = planned_peak_bytes.max(live);
+        }
+        let mut order: Vec<usize> = (0..lw.operands.len())
+            .filter(|&i| {
+                lw.operands[i].class == OperandClass::Scratch
+                    && lw.operands[i].first_op != usize::MAX
+            })
+            .collect();
+        order.sort_by_key(|&i| (lw.operands[i].first_op, i));
+        let mut slot_free_at: Vec<usize> = Vec::new(); // first op index the slot is free again
+        let mut slots: Vec<u64> = Vec::new();
+        for i in order {
+            let (first, last, bytes) = {
+                let o = &lw.operands[i];
+                (o.first_op, o.last_op, o.bytes())
+            };
+            let slot = match slot_free_at.iter().position(|&free| free <= first) {
+                Some(s) => {
+                    slots[s] = slots[s].max(bytes);
+                    s
+                }
+                None => {
+                    slot_free_at.push(0);
+                    slots.push(bytes);
+                    slot_free_at.len() - 1
+                }
+            };
+            slot_free_at[slot] = last + 1;
+            lw.operands[i].slot = Some(slot);
+        }
+
+        // Exec schedule: the interpreter's exact call sequence over the
+        // top-level layers.
+        let layers = units.len();
+        let mut exec = Vec::with_capacity(2 * layers + 2);
+        exec.extend((0..layers).map(|layer| ExecStep::Forward { layer }));
+        exec.push(ExecStep::LossGrad);
+        exec.extend((0..layers).rev().map(|layer| ExecStep::Backward { layer }));
+        exec.push(ExecStep::Update);
+
+        StepProgram {
+            spec_id: spec.id(),
+            policy_name: policy.name.clone(),
+            planned_batch: batch,
+            ops: lw.ops,
+            operands: lw.operands,
+            slots,
+            planned_peak_bytes,
+            exec,
+        }
+    }
+
+    /// One training step — the program-executor equivalent of
+    /// `NativeEngine::train_step`'s interpreted body. Same `QuantCtx`
+    /// construction, same layer call order, same optimizer invocation:
+    /// bit-identical to the interpreter by construction.
+    pub fn train_step(
+        &self,
+        model: &mut Sequential,
+        opt: &mut dyn Optimizer,
+        policy: &PrecisionPolicy,
+        batch: &Batch,
+        lr: f32,
+        step: u64,
+    ) -> f64 {
+        let ctx = QuantCtx::new(policy, step, true);
+        let mut flow: Option<Tensor> = Some(batch.x.clone());
+        let mut loss = 0.0f64;
+        for s in &self.exec {
+            match *s {
+                ExecStep::Forward { layer } => {
+                    let x = flow.take().expect("program: forward step without input");
+                    flow = Some(model.layers[layer].forward(x, &ctx));
+                }
+                ExecStep::LossGrad => {
+                    let logits = flow.take().expect("program: lossgrad without logits");
+                    let out = softmax_xent(
+                        &logits,
+                        &batch.labels,
+                        policy.softmax_input_fmt,
+                        policy.loss_scale,
+                    );
+                    loss = out.loss;
+                    flow = Some(out.dlogits);
+                }
+                ExecStep::Backward { layer } => {
+                    let dy = flow.take().expect("program: backward step without error");
+                    flow = Some(model.layers[layer].backward(dy, &ctx));
+                }
+                ExecStep::Update => {
+                    crate::perf::timed(crate::perf::Phase::Update, || {
+                        opt.step(model, policy, lr, step)
+                    });
+                }
+            }
+        }
+        loss
+    }
+
+    /// Run the forward-only program slice in eval mode. Mirrors
+    /// `Sequential::forward` with `ctx.train == false` (including the
+    /// per-layer backward-state invalidation).
+    fn forward_eval(&self, model: &mut Sequential, policy: &PrecisionPolicy, x: Tensor) -> Tensor {
+        let ctx = QuantCtx::new(policy, 0, false);
+        let mut x = x;
+        for s in &self.exec {
+            let ExecStep::Forward { layer } = *s else { break };
+            x = model.layers[layer].forward(x, &ctx);
+            model.layers[layer].invalidate_backward_state();
+        }
+        x
+    }
+
+    /// Program-sliced equivalent of `NativeEngine::eval`.
+    pub fn eval(
+        &self,
+        model: &mut Sequential,
+        policy: &PrecisionPolicy,
+        batch: &Batch,
+    ) -> (f64, usize) {
+        let logits = self.forward_eval(model, policy, batch.x.clone());
+        let out = softmax_xent(&logits, &batch.labels, policy.softmax_input_fmt, 1.0);
+        (out.loss, out.correct)
+    }
+
+    /// Program-sliced equivalent of `NativeEngine::predict_logits` — the
+    /// serve worker's entry point.
+    pub fn predict_logits(
+        &self,
+        model: &mut Sequential,
+        policy: &PrecisionPolicy,
+        x: Tensor,
+    ) -> Tensor {
+        self.forward_eval(model, policy, x)
+    }
+
+    fn scratch_count(&self) -> usize {
+        self.operands
+            .iter()
+            .filter(|o| o.class == OperandClass::Scratch)
+            .count()
+    }
+
+    /// Human-readable plan listing for `fp8train program dump`.
+    pub fn dump(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let fwd = self
+            .exec
+            .iter()
+            .filter(|e| matches!(e, ExecStep::Forward { .. }))
+            .count();
+        let _ = writeln!(
+            s,
+            "step program: {} x {} (planned batch {})",
+            self.spec_id, self.policy_name, self.planned_batch
+        );
+        let _ = writeln!(
+            s,
+            "exec: {} steps ({} forward + lossgrad + {} backward + update)",
+            self.exec.len(),
+            fwd,
+            fwd
+        );
+        let _ = writeln!(
+            s,
+            "ops: {}  operands: {} ({} scratch -> {} slots)",
+            self.ops.len(),
+            self.operands.len(),
+            self.scratch_count(),
+            self.slots.len()
+        );
+        let slot_bytes: u64 = self.slots.iter().sum();
+        let _ = writeln!(
+            s,
+            "planned peak scratch: {} B  (colored slots: {} B)",
+            self.planned_peak_bytes, slot_bytes
+        );
+        let _ = writeln!(s, "\nops:");
+        for (i, op) in self.ops.iter().enumerate() {
+            let kind = match &op.kind {
+                OpKind::QuantPack => "quantpack".to_string(),
+                OpKind::Im2colQ { fused, reverse: false } => {
+                    if *fused {
+                        "im2col_q(fused)".to_string()
+                    } else {
+                        "im2col".to_string()
+                    }
+                }
+                OpKind::Im2colQ { reverse: true, .. } => "col2im".to_string(),
+                OpKind::Gemm { role, chunk, m, n, k } => {
+                    let cl = if *chunk == usize::MAX {
+                        "-".to_string()
+                    } else {
+                        chunk.to_string()
+                    };
+                    format!("gemm[{}] m={m} n={n} k={k} cl={cl}", role.id())
+                }
+                OpKind::BiasAct { bias: true } => "bias".to_string(),
+                OpKind::BiasAct { bias: false } => "act/join".to_string(),
+                OpKind::Norm { backward } => {
+                    format!("norm{}", if *backward { "'" } else { "" })
+                }
+                OpKind::Pool { backward } => {
+                    format!("pool{}", if *backward { "'" } else { "" })
+                }
+                OpKind::LossGrad => "lossgrad".to_string(),
+                OpKind::Axpy { sr } => format!("axpy{}", if *sr { "[sr]" } else { "" }),
+            };
+            let name_of = |ids: &[usize]| {
+                ids.iter()
+                    .map(|&o| self.operands[o].name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            };
+            let sr = op
+                .sr_stream
+                .as_deref()
+                .map(|l| format!("  sr:{l}"))
+                .unwrap_or_default();
+            let _ = writeln!(
+                s,
+                " [{i:>3}] {:<28} {:<14} {} -> {}{sr}",
+                kind,
+                op.layer,
+                name_of(&op.reads),
+                name_of(&op.writes)
+            );
+        }
+        let _ = writeln!(s, "\noperands:");
+        for (i, o) in self.operands.iter().enumerate() {
+            let class = match o.class {
+                OperandClass::Flow => "flow",
+                OperandClass::Pack => "pack",
+                OperandClass::Scratch => "scratch",
+                OperandClass::Param => "param",
+            };
+            let slot = o
+                .slot
+                .map(|x| format!("  slot {x}"))
+                .unwrap_or_default();
+            let life = if o.first_op == usize::MAX {
+                "unused".to_string()
+            } else {
+                format!("{}..{}", o.first_op, o.last_op)
+            };
+            let _ = writeln!(
+                s,
+                " [{i:>3}] {:<22} {:>8}x{:<6} {:<6} {:<7} live {life}{slot}",
+                o.name, o.rows, o.cols, o.fmt, class
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::rng::RoundBits;
+    use crate::numerics::Xoshiro256;
+    use crate::optim::standard_optimizer;
+
+    fn tiny_batch(n: usize, in_dim: usize, classes: usize) -> Batch {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        let x = Tensor::from_vec(
+            &[n, in_dim],
+            (0..n * in_dim)
+                .map(|_| (rng.next_bits() as f32 / u32::MAX as f32) - 0.5)
+                .collect(),
+        );
+        let labels = (0..n).map(|i| i % classes).collect();
+        Batch { x, labels }
+    }
+
+    #[test]
+    fn lowering_covers_every_preset_and_policy() {
+        for spec in ModelSpec::all_presets() {
+            for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
+                let prog = StepProgram::lower(&spec, &policy, 8);
+                let layers = spec.lower_units().len();
+                assert_eq!(prog.exec.len(), 2 * layers + 2, "{}", spec.id());
+                assert!(!prog.ops.is_empty(), "{}", spec.id());
+                // Every referenced operand has a real lifetime; every
+                // scratch operand got a slot.
+                for o in &prog.operands {
+                    if o.class == OperandClass::Scratch {
+                        assert!(o.slot.is_some(), "{}: {} unslotted", spec.id(), o.name);
+                        assert!(o.first_op <= o.last_op);
+                    }
+                }
+                let dump = prog.dump();
+                assert!(dump.contains(&spec.id()), "{}", spec.id());
+                assert!(dump.contains("planned peak scratch"));
+            }
+        }
+    }
+
+    #[test]
+    fn fp8_conv_plan_pins_fusion_and_chunks() {
+        let prog = StepProgram::lower(
+            &ModelSpec::cifar_cnn(),
+            &PrecisionPolicy::fp8_paper(),
+            8,
+        );
+        // 5x5 dense kernels: the fusion decision (made once, at lowering)
+        // must be the pre-lowering quantize, exactly like the interpreter.
+        assert!(prog
+            .ops
+            .iter()
+            .any(|op| matches!(op.kind, OpKind::Im2colQ { fused: false, reverse: false })));
+        assert!(!prog
+            .ops
+            .iter()
+            .any(|op| matches!(op.kind, OpKind::Im2colQ { fused: true, .. })));
+        // Paper GEMMs carry CL = 64.
+        assert!(prog
+            .ops
+            .iter()
+            .any(|op| matches!(op.kind, OpKind::Gemm { chunk: 64, .. })));
+        // SR update streams are labeled per parameter.
+        assert!(prog
+            .ops
+            .iter()
+            .any(|op| matches!(&op.kind, OpKind::Axpy { sr: true })
+                && op.sr_stream.as_deref() == Some("upd:conv1.w")));
+        assert!(prog.planned_peak_bytes > 0);
+        assert!(!prog.slots.is_empty());
+    }
+
+    #[test]
+    fn slot_coloring_never_overlaps_lifetimes() {
+        let prog = StepProgram::lower(
+            &ModelSpec::cifar_resnet(),
+            &PrecisionPolicy::fp8_paper(),
+            4,
+        );
+        let scratch: Vec<&Operand> = prog
+            .operands
+            .iter()
+            .filter(|o| o.class == OperandClass::Scratch)
+            .collect();
+        for (i, a) in scratch.iter().enumerate() {
+            for b in &scratch[i + 1..] {
+                if a.slot == b.slot {
+                    let disjoint = a.last_op < b.first_op || b.last_op < a.first_op;
+                    assert!(
+                        disjoint,
+                        "slot {:?}: {} [{}..{}] overlaps {} [{}..{}]",
+                        a.slot, a.name, a.first_op, a.last_op, b.name, b.first_op, b.last_op
+                    );
+                }
+            }
+        }
+        // And the colored slots can hold the planned peak.
+        assert!(prog.slots.iter().sum::<u64>() >= prog.planned_peak_bytes);
+    }
+
+    #[test]
+    fn program_step_matches_interpreter_bits() {
+        let spec = ModelSpec::resolve("mlp(12,8,4)").unwrap();
+        let policy = PrecisionPolicy::fp8_paper();
+        let mut m_ref = spec.build(3);
+        let mut m_prog = spec.build(3);
+        let mut o_ref = standard_optimizer("sgd", 7).unwrap();
+        let mut o_prog = standard_optimizer("sgd", 7).unwrap();
+        o_ref.prepare(&mut m_ref, &policy);
+        o_prog.prepare(&mut m_prog, &policy);
+        let prog = StepProgram::lower(&spec, &policy, 4);
+        let batch = tiny_batch(4, 12, 4);
+        for step in 1..=3u64 {
+            // Reference interpreter: the NativeEngine train_step body.
+            let ctx = QuantCtx::new(&policy, step, true);
+            let logits = m_ref.forward(batch.x.clone(), &ctx);
+            let out = softmax_xent(
+                &logits,
+                &batch.labels,
+                policy.softmax_input_fmt,
+                policy.loss_scale,
+            );
+            m_ref.backward(out.dlogits, &ctx);
+            o_ref.step(&mut m_ref, &policy, 0.05, step);
+            let loss_prog = prog.train_step(&mut m_prog, o_prog.as_mut(), &policy, &batch, 0.05, step);
+            assert_eq!(out.loss.to_bits(), loss_prog.to_bits(), "step {step}");
+        }
+        let mut w_ref: Vec<Vec<f32>> = Vec::new();
+        let mut w_prog: Vec<Vec<f32>> = Vec::new();
+        m_ref.visit_params(&mut |p| w_ref.push(p.value.data.clone()));
+        m_prog.visit_params(&mut |p| w_prog.push(p.value.data.clone()));
+        assert_eq!(w_ref, w_prog);
+        // Eval and serve slices agree bit-for-bit too.
+        let ctx = QuantCtx::new(&policy, 0, false);
+        let logits_ref = m_ref.forward(batch.x.clone(), &ctx);
+        let logits_prog = prog.predict_logits(&mut m_prog, &policy, batch.x.clone());
+        assert_eq!(logits_ref.data, logits_prog.data);
+        let out_ref = softmax_xent(&logits_ref, &batch.labels, policy.softmax_input_fmt, 1.0);
+        let (loss_e, correct_e) = prog.eval(&mut m_ref, &policy, &batch);
+        assert_eq!(out_ref.loss.to_bits(), loss_e.to_bits());
+        assert_eq!(out_ref.correct, correct_e);
+    }
+}

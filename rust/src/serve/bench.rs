@@ -7,7 +7,7 @@
 //! hint, TCP connects (keep-alive reuse makes this ≈ the client count),
 //! and the daemon-side shed/restart counter deltas from `/admin/status`
 //! before vs after. `fp8train bench --json` embeds the same summary as
-//! the schema-7 `serve` section so the serving SLO joins the CI perf
+//! the schema-8 `serve` section so the serving SLO joins the CI perf
 //! trajectory (`docs/serving.md`).
 
 use std::sync::Arc;

@@ -231,13 +231,21 @@ impl Default for RunOpts {
     }
 }
 
-/// Resolve a format-axis token: a [`PrecisionPolicy`] preset name first
+/// Resolve a format-axis token: an inline JSON policy first (tokens
+/// starting with `{` route to [`PrecisionPolicy::from_json`] — the
+/// `--policy-json` escape hatch), then a [`PrecisionPolicy`] preset name
 /// (`fp32`, `fp8_paper`, the Table 2 baselines, …), else a bare
 /// [`FloatFormat`] spelling (`e4m3`, `1-5-2`, `bf16`, …) which runs the
 /// paper's scheme — FP16 chunked accumulation, FP16-SR updates, FP16
 /// first/last layers — with that GEMM operand format. The latter is the
 /// Graphcore-style format axis.
 pub fn resolve_policy(token: &str) -> Result<PrecisionPolicy> {
+    if token.trim_start().starts_with('{') {
+        return match PrecisionPolicy::from_json(token) {
+            Ok(p) => Ok(p),
+            Err(e) => bail!("{e}"),
+        };
+    }
     if let Some(p) = PrecisionPolicy::parse(token) {
         return Ok(p);
     }
@@ -252,6 +260,35 @@ pub fn resolve_policy(token: &str) -> Result<PrecisionPolicy> {
         "unknown format-axis value {token:?} (policy presets: {}, …; or a float format: e4m3, 1-5-2, bf16, …)",
         PrecisionPolicy::PRESETS.join(", ")
     )
+}
+
+/// Parse a `--policy-json` file — one policy object or an array of them —
+/// into format-axis tokens. Each token is the object's compact
+/// [`Json::dump`] (key-sorted, so formatting-only edits don't re-key),
+/// and it enters [`Cell::id`] verbatim: editing a policy's *content*
+/// re-keys and re-runs exactly its cells. Every object is validated via
+/// [`PrecisionPolicy::from_json`] up front so a bad file fails before the
+/// grid expands.
+pub fn policy_json_tokens(text: &str) -> Result<Vec<String>> {
+    let v = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => bail!("policy json: {e}"),
+    };
+    let objs = match v {
+        Json::Arr(a) => a,
+        o @ Json::Obj(_) => vec![o],
+        _ => bail!("policy json: top level must be an object or an array of objects"),
+    };
+    ensure!(!objs.is_empty(), "policy json: empty array");
+    let mut toks = Vec::with_capacity(objs.len());
+    for o in objs {
+        let tok = o.dump();
+        if let Err(e) = PrecisionPolicy::from_json(&tok) {
+            bail!("{e}");
+        }
+        toks.push(tok);
+    }
+    Ok(toks)
 }
 
 fn parse_round_axis(token: &str) -> Result<Option<RoundMode>> {
@@ -1040,6 +1077,16 @@ pub(crate) fn render_report(path: &str, records: &BTreeMap<String, Json>, csv: b
     };
     let fmt3 = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.3}"));
     let fmt0 = |v: Option<f64>| v.map_or_else(|| "-".to_string(), |x| format!("{x:.0}"));
+    // Conditional CSV quoting: inline-JSON fmt tokens (`--policy-json`)
+    // contain commas and quotes, and they also ride inside the cell id.
+    // Plain tokens stay unquoted so historical CSV output is byte-stable.
+    let csv_field = |v: &str| -> String {
+        if v.contains(',') || v.contains('"') {
+            format!("\"{}\"", v.replace('"', "\"\""))
+        } else {
+            v.to_string()
+        }
+    };
     if csv {
         let mut out = String::from(
             "id,model,fmt,round,pos,opt,chunk,status,steps_done,\
@@ -1048,9 +1095,10 @@ pub(crate) fn render_report(path: &str, records: &BTreeMap<String, Json>, csv: b
         for (id, rec) in records {
             let note = render_note(rec).replace('"', "\"\"");
             out.push_str(&format!(
-                "{id},{},{},{},{},{},{},{},{},{},{},\"{note}\"\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},\"{note}\"\n",
+                csv_field(id),
                 s(rec, "model"),
-                s(rec, "fmt"),
+                csv_field(&s(rec, "fmt")),
                 s(rec, "round"),
                 s(rec, "pos"),
                 s(rec, "opt"),
@@ -1234,6 +1282,55 @@ b,mnist_dnn,e4m3,default,auto,sgd,64,diverged,40,-,31.000,500,\"diverged at step
         // Last layer keeps the paper's FP16 rule.
         assert_eq!(p.gemm_last[0].fmt_mult, FloatFormat::FP16);
         assert!(resolve_policy("zz9").is_err());
+    }
+
+    #[test]
+    fn format_axis_accepts_inline_json_policies() {
+        let p = resolve_policy(r#"{"name":"hot","fmt":"e4m3","chunk":32}"#).unwrap();
+        assert_eq!(p.name, "hot");
+        assert_eq!(p.gemm[0].fmt_mult, FloatFormat { ebits: 4, mbits: 3 });
+        assert_eq!(p.gemm[0].chunk, 32);
+        // Errors surface with the from_json message, not the preset list.
+        let err = resolve_policy(r#"{"name":"x","fmt":"zz"}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown float format"), "{err}");
+    }
+
+    #[test]
+    fn policy_json_tokens_load_validate_and_rekey() {
+        // One object and an array both work; tokens are compact dumps.
+        let one = policy_json_tokens(r#"{"name":"a","chunk":16}"#).unwrap();
+        assert_eq!(one, vec![r#"{"chunk":16,"name":"a"}"#.to_string()]);
+        let two = policy_json_tokens(
+            r#"[{"name":"a","chunk":16},
+                {"name":"b","base":"fp32","fmt":"bf16"}]"#,
+        )
+        .unwrap();
+        assert_eq!(two.len(), 2);
+        // Tokens slot into the format axis and key cells on content: the
+        // cell id embeds the JSON, so editing a knob re-keys the grid.
+        let mut def = tiny_def();
+        def.formats = two.clone();
+        let cells = expand(&def).unwrap();
+        assert!(cells[0].id().contains(r#"fmt={"chunk":16,"name":"a"}"#), "{}", cells[0].id());
+        let mut def2 = tiny_def();
+        def2.formats = vec![two[0].replace("16", "32"), two[1].clone()];
+        assert_ne!(expand(&def2).unwrap()[0].id(), cells[0].id());
+        // Formatting-only edits (whitespace, key order) do NOT re-key:
+        // dump() canonicalizes before the token enters the id.
+        let same = policy_json_tokens(r#"{ "chunk" : 16, "name" : "a" }"#).unwrap();
+        assert_eq!(same, one);
+        // Invalid files fail up front.
+        assert!(policy_json_tokens("[]").is_err());
+        assert!(policy_json_tokens("42").is_err());
+        assert!(policy_json_tokens(r#"{"name":"fp32"}"#).is_err(), "preset shadowing");
+        // Duplicate policy *names* across tokens collide in the CSV/report
+        // keying: expansion's resolved-name dedup rejects them.
+        let mut def3 = tiny_def();
+        def3.formats = vec![
+            r#"{"name":"a","chunk":16}"#.into(),
+            r#"{"name":"a","chunk":32}"#.into(),
+        ];
+        assert!(expand(&def3).is_err(), "same resolved name must be rejected");
     }
 
     #[test]

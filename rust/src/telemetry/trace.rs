@@ -256,6 +256,228 @@ pub fn validate(text: &str) -> Result<usize, String> {
     Ok(n)
 }
 
+/// One `"<layer>/<role>"` row of an end record's cumulative counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantRow {
+    pub elems: f64,
+    pub saturated: f64,
+    pub underflowed: f64,
+    pub subnormal: f64,
+    pub nonfinite: f64,
+    pub abs_min: Option<f64>,
+    pub abs_max: Option<f64>,
+}
+
+/// Parsed view of one trace file — the pieces every consumer reads: the
+/// per-step loss series, the first step record with saturation, and the
+/// `end` trailer. `summarize` and `diff` both build on this.
+pub struct TraceView {
+    pub records: usize,
+    /// `(step, loss)` per step record; `None` loss = non-finite (dumped
+    /// as JSON null).
+    pub steps: Vec<(f64, Option<f64>)>,
+    pub first_sat_step: Option<f64>,
+    pub end: Json,
+}
+
+impl TraceView {
+    /// The end record's cumulative per-(layer, role) counters.
+    pub fn quant_rows(&self) -> Result<std::collections::BTreeMap<String, QuantRow>, String> {
+        let m = match self.end.at("quant") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err("end record has no quant object".into()),
+        };
+        Ok(m.iter()
+            .map(|(k, e)| {
+                let f = |n: &str| e.at(n).and_then(Json::num).unwrap_or(0.0);
+                (
+                    k.clone(),
+                    QuantRow {
+                        elems: f("elems"),
+                        saturated: f("saturated"),
+                        underflowed: f("underflowed"),
+                        subnormal: f("subnormal"),
+                        nonfinite: f("nonfinite"),
+                        abs_min: e.at("abs_min").and_then(Json::num),
+                        abs_max: e.at("abs_max").and_then(Json::num),
+                    },
+                )
+            })
+            .collect())
+    }
+}
+
+/// Parse a trace file's text into a [`TraceView`]. Errors on unparsable
+/// lines or a missing `end` trailer (truncated trace).
+pub fn read(text: &str) -> Result<TraceView, String> {
+    let mut steps = Vec::new();
+    let mut first_sat_step = None;
+    let mut end = None;
+    let mut records = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        records += 1;
+        match v.at("type").and_then(Json::str_val) {
+            Some("step") => {
+                if first_sat_step.is_none() {
+                    let sat: f64 = match v.at("quant") {
+                        Some(Json::Obj(m)) => m
+                            .values()
+                            .filter_map(|e| e.at("saturated").and_then(Json::num))
+                            .sum(),
+                        _ => 0.0,
+                    };
+                    if sat > 0.0 {
+                        first_sat_step = v.at("step").and_then(Json::num);
+                    }
+                }
+                steps.push((
+                    v.at("step").and_then(Json::num).unwrap_or(0.0),
+                    v.at("loss").and_then(Json::num),
+                ));
+            }
+            Some("end") => end = Some(v),
+            _ => {}
+        }
+    }
+    let end = end.ok_or("no end record (truncated trace?)")?;
+    Ok(TraceView {
+        records,
+        steps,
+        first_sat_step,
+        end,
+    })
+}
+
+/// Relative divergence of two finite values (0 when bit-equal).
+fn rel(a: f64, b: f64) -> f64 {
+    if a == b {
+        0.0
+    } else {
+        (a - b).abs() / a.abs().max(b.abs()).max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Compare two traces: per-step loss series and the end records'
+/// per-(layer, role) counters. Returns the rendered report and the
+/// maximum relative divergence found (0.0 for identical runs; structural
+/// mismatches — a step or counter row present on one side only — count
+/// as divergence 1.0). `fp8train trace diff` exits non-zero when the
+/// maximum exceeds `--threshold`.
+pub fn diff(a_text: &str, b_text: &str) -> Result<(String, f64), String> {
+    let a = read(a_text)?;
+    let b = read(b_text)?;
+    let mut out = String::new();
+    let mut worst = 0.0f64;
+
+    // Per-step loss series, matched by step number.
+    let bs: std::collections::BTreeMap<u64, Option<f64>> = b
+        .steps
+        .iter()
+        .map(|(s, l)| (*s as u64, *l))
+        .collect();
+    let mut compared = 0usize;
+    let mut max_loss = 0.0f64;
+    let mut first_div: Option<u64> = None;
+    for (s, la) in &a.steps {
+        let step = *s as u64;
+        let Some(lb) = bs.get(&step) else {
+            worst = worst.max(1.0);
+            out.push_str(&format!("step {step}: only in A\n"));
+            continue;
+        };
+        compared += 1;
+        let d = match (la, lb) {
+            (Some(x), Some(y)) => rel(*x, *y),
+            (None, None) => 0.0, // both non-finite at the same step
+            _ => 1.0,
+        };
+        if d > 0.0 && first_div.is_none() {
+            first_div = Some(step);
+        }
+        max_loss = max_loss.max(d);
+    }
+    for step in bs.keys() {
+        if !a.steps.iter().any(|(s, _)| *s as u64 == *step) {
+            worst = worst.max(1.0);
+            out.push_str(&format!("step {step}: only in B\n"));
+        }
+    }
+    worst = worst.max(max_loss);
+    out.push_str(&format!(
+        "loss series: {compared} steps compared, max divergence {max_loss:.3e}{}\n",
+        match first_div {
+            Some(s) => format!(" (first at step {s})"),
+            None => String::new(),
+        }
+    ));
+
+    // End-record counters, per (layer, role) row and field.
+    let qa = a.quant_rows()?;
+    let qb = b.quant_rows()?;
+    let mut rows_diverged = 0usize;
+    let keys: std::collections::BTreeSet<&String> = qa.keys().chain(qb.keys()).collect();
+    let total_rows = keys.len();
+    for key in keys {
+        let (ra, rb) = match (qa.get(key), qb.get(key)) {
+            (Some(ra), Some(rb)) => (ra, rb),
+            _ => {
+                worst = worst.max(1.0);
+                rows_diverged += 1;
+                out.push_str(&format!(
+                    "{key}: only in {}\n",
+                    if qa.contains_key(key) { "A" } else { "B" }
+                ));
+                continue;
+            }
+        };
+        let fields = [
+            ("elems", ra.elems, rb.elems),
+            ("saturated", ra.saturated, rb.saturated),
+            ("underflowed", ra.underflowed, rb.underflowed),
+            ("subnormal", ra.subnormal, rb.subnormal),
+            ("nonfinite", ra.nonfinite, rb.nonfinite),
+        ];
+        let mut row_max = 0.0f64;
+        let mut worst_field = "";
+        for (name, x, y) in fields {
+            let d = rel(x, y);
+            if d > row_max {
+                row_max = d;
+                worst_field = name;
+            }
+        }
+        for (name, x, y) in [
+            ("abs_min", ra.abs_min, rb.abs_min),
+            ("abs_max", ra.abs_max, rb.abs_max),
+        ] {
+            let d = match (x, y) {
+                (Some(x), Some(y)) => rel(x, y),
+                (None, None) => 0.0,
+                _ => 1.0,
+            };
+            if d > row_max {
+                row_max = d;
+                worst_field = name;
+            }
+        }
+        if row_max > 0.0 {
+            rows_diverged += 1;
+            out.push_str(&format!(
+                "{key}: {worst_field} diverges by {row_max:.3e} \
+                 (elems {} vs {}, sat {} vs {})\n",
+                ra.elems, rb.elems, ra.saturated, rb.saturated
+            ));
+        }
+        worst = worst.max(row_max);
+    }
+    out.push_str(&format!(
+        "quant counters: {rows_diverged} of {total_rows} (layer, role) rows diverge\n"
+    ));
+    out.push_str(&format!("max divergence: {worst:.3e}\n"));
+    Ok((out, worst))
+}
+
 fn pct(num: f64, den: f64) -> String {
     if den == 0.0 {
         "-".to_string()
@@ -278,50 +500,22 @@ fn cell(v: Option<f64>) -> String {
 /// per-(layer, role) range table (text or CSV), and the top saturating
 /// entries.
 pub fn summarize(text: &str, csv: bool) -> Result<String, String> {
-    let mut end: Option<Json> = None;
-    let mut first_sat_step: Option<f64> = None;
-    let mut records = 0usize;
-    for (i, line) in text.lines().enumerate() {
-        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
-        records += 1;
-        match v.at("type").and_then(Json::str_val) {
-            Some("step") => {
-                if first_sat_step.is_none() {
-                    let sat: f64 = match v.at("quant") {
-                        Some(Json::Obj(m)) => m
-                            .values()
-                            .filter_map(|e| e.at("saturated").and_then(Json::num))
-                            .sum(),
-                        _ => 0.0,
-                    };
-                    if sat > 0.0 {
-                        first_sat_step = v.at("step").and_then(Json::num);
-                    }
-                }
-            }
-            Some("end") => end = Some(v),
-            _ => {}
-        }
-    }
-    let end = end.ok_or("no end record (truncated trace?)")?;
-    let quant = match end.at("quant") {
-        Some(Json::Obj(m)) => m.clone(),
-        _ => return Err("end record has no quant object".into()),
-    };
+    let view = read(text)?;
+    let (records, first_sat_step, end) = (view.records, view.first_sat_step, &view.end);
     // (key, elems, saturated, underflowed, subnormal, nonfinite, min, max)
-    let mut rows: Vec<(String, f64, f64, f64, f64, f64, Option<f64>, Option<f64>)> = quant
-        .iter()
-        .map(|(k, e)| {
-            let f = |n: &str| e.at(n).and_then(Json::num).unwrap_or(0.0);
+    let mut rows: Vec<(String, f64, f64, f64, f64, f64, Option<f64>, Option<f64>)> = view
+        .quant_rows()?
+        .into_iter()
+        .map(|(k, r)| {
             (
-                k.clone(),
-                f("elems"),
-                f("saturated"),
-                f("underflowed"),
-                f("subnormal"),
-                f("nonfinite"),
-                e.at("abs_min").and_then(Json::num),
-                e.at("abs_max").and_then(Json::num),
+                k,
+                r.elems,
+                r.saturated,
+                r.underflowed,
+                r.subnormal,
+                r.nonfinite,
+                r.abs_min,
+                r.abs_max,
             )
         })
         .collect();
@@ -485,6 +679,65 @@ mod tests {
         // summarize reads the END record's quant, which is empty here.
         assert_eq!(lines.count(), 0);
         super::super::reset();
+    }
+
+    #[test]
+    fn diff_reports_zero_for_identical_traces() {
+        let t = toy_trace();
+        let (out, worst) = diff(&t, &t).unwrap();
+        assert_eq!(worst, 0.0, "{out}");
+        assert!(out.contains("max divergence: 0.000e0"), "{out}");
+        assert!(out.contains("0 of 0 (layer, role) rows diverge"), "{out}");
+    }
+
+    #[test]
+    fn diff_flags_loss_and_counter_divergence() {
+        use crate::numerics::rounding::RoundMode;
+        use crate::numerics::FloatFormat;
+        let mk = |loss: f64, sat_val: f32| {
+            super::super::reset();
+            {
+                let _l = super::super::layer_scope("fc9");
+                let _r = super::super::role_scope(super::super::Role::Forward);
+                let mut xs = vec![sat_val, 1.0, 1e-30, 0.5];
+                FloatFormat::FP8.quantize_batch(&mut xs, RoundMode::NearestEven);
+            }
+            let r = run_record("native", 1, 1, 1, 1, true, 0).dump();
+            let s = step_record(0, loss, 0.1, 0, &PhaseSnapshot::default()).dump();
+            let e = end_record(1, None, 0).dump();
+            super::super::reset();
+            format!("{r}\n{s}\n{e}\n")
+        };
+        // 1e9 saturates FP8, 1.0 does not → the saturated counters differ;
+        // the losses differ too.
+        let a = mk(1.5, 1e9);
+        let b = mk(1.6, 1.0);
+        let (out, worst) = diff(&a, &b).unwrap();
+        assert!(worst > 0.0, "{out}");
+        assert!(out.contains("fc9/fwd"), "{out}");
+        assert!(out.contains("first at step 1"), "{out}");
+        let (_, self_worst) = diff(&a, &a).unwrap();
+        assert_eq!(self_worst, 0.0);
+    }
+
+    #[test]
+    fn diff_counts_one_sided_rows_as_structural_divergence() {
+        use crate::numerics::rounding::RoundMode;
+        use crate::numerics::FloatFormat;
+        super::super::reset();
+        let r = run_record("native", 1, 1, 1, 0, true, 0).dump();
+        let plain = format!("{r}\n{}\n", end_record(1, None, 0).dump());
+        {
+            let _l = super::super::layer_scope("fc9");
+            let _r = super::super::role_scope(super::super::Role::Forward);
+            let mut xs = vec![1.0f32; 4];
+            FloatFormat::FP8.quantize_batch(&mut xs, RoundMode::NearestEven);
+        }
+        let with_row = format!("{r}\n{}\n", end_record(1, None, 0).dump());
+        super::super::reset();
+        let (out, worst) = diff(&with_row, &plain).unwrap();
+        assert_eq!(worst, 1.0, "{out}");
+        assert!(out.contains("only in A"), "{out}");
     }
 
     #[test]

@@ -70,7 +70,7 @@ impl PackedCell {
 }
 
 // Global counters for the quantized-pack cache (reported by
-// `fp8train bench --json` schema 7): how often a GEMM asked for a
+// `fp8train bench --json` schema 8): how often a GEMM asked for a
 // quantized weight operand, how many pack materializations that cost, and
 // how many of those had to run a full quantize pass (a transposed pack
 // built from a live same-version quantized pack re-packs without

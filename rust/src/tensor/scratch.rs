@@ -33,6 +33,8 @@ struct Pool {
     hits: u64,
     misses: u64,
     bytes_reused: u64,
+    outstanding_bytes: u64,
+    peak_bytes: u64,
 }
 
 thread_local! {
@@ -48,6 +50,13 @@ pub struct ScratchStats {
     pub misses: u64,
     /// Bytes of allocation avoided by hits (requested length × 4).
     pub bytes_reused: u64,
+    /// Bytes currently leased out (taken, not yet recycled).
+    pub outstanding_bytes: u64,
+    /// Peak of simultaneously leased bytes since the last
+    /// [`reset_stats`] — the dynamic counterpart of the step program's
+    /// statically planned scratch peak (`bench --json` reports both as
+    /// planned-vs-leased).
+    pub peak_bytes: u64,
 }
 
 impl ScratchStats {
@@ -66,6 +75,8 @@ impl ScratchStats {
 pub fn take(len: usize) -> Vec<f32> {
     POOL.with(|p| {
         let mut p = p.borrow_mut();
+        p.outstanding_bytes += 4 * len as u64;
+        p.peak_bytes = p.peak_bytes.max(p.outstanding_bytes);
         let mut best: Option<usize> = None;
         for (i, b) in p.bufs.iter().enumerate() {
             if b.capacity() >= len && best.is_none_or(|j| b.capacity() < p.bufs[j].capacity()) {
@@ -93,6 +104,10 @@ pub fn take(len: usize) -> Vec<f32> {
 /// capacity is evicted, so the arena converges on the workload's largest
 /// recurring temporaries.
 pub fn recycle(v: Vec<f32>) {
+    POOL.with(|p| {
+        let mut p = p.borrow_mut();
+        p.outstanding_bytes = p.outstanding_bytes.saturating_sub(4 * v.len() as u64);
+    });
     if v.capacity() == 0 {
         return;
     }
@@ -125,17 +140,22 @@ pub fn stats() -> ScratchStats {
             hits: p.hits,
             misses: p.misses,
             bytes_reused: p.bytes_reused,
+            outstanding_bytes: p.outstanding_bytes,
+            peak_bytes: p.peak_bytes,
         }
     })
 }
 
-/// Zero the counters (bench sections measure deltas).
+/// Zero the counters (bench sections measure deltas). The leased peak
+/// re-bases to whatever is currently outstanding, so a bench window
+/// measures the peak *within* the window.
 pub fn reset_stats() {
     POOL.with(|p| {
         let mut p = p.borrow_mut();
         p.hits = 0;
         p.misses = 0;
         p.bytes_reused = 0;
+        p.peak_bytes = p.outstanding_bytes;
     });
 }
 
@@ -145,7 +165,11 @@ mod tests {
 
     /// Drain the pool so tests don't observe each other's buffers.
     fn drain() {
-        POOL.with(|p| p.borrow_mut().bufs.clear());
+        POOL.with(|p| {
+            let mut p = p.borrow_mut();
+            p.bufs.clear();
+            p.outstanding_bytes = 0;
+        });
         reset_stats();
     }
 
@@ -192,6 +216,27 @@ mod tests {
             p.borrow().bufs.iter().map(Vec::capacity).max().unwrap()
         });
         assert!(max_cap >= (MAX_POOLED + 8) * 10);
+        drain();
+    }
+
+    #[test]
+    fn peak_tracks_simultaneously_leased_bytes() {
+        drain();
+        let a = take(100);
+        let b = take(50);
+        assert_eq!(stats().outstanding_bytes, 4 * 150);
+        assert_eq!(stats().peak_bytes, 4 * 150);
+        recycle(a);
+        assert_eq!(stats().outstanding_bytes, 4 * 50);
+        assert_eq!(stats().peak_bytes, 4 * 150, "peak survives recycles");
+        let c = take(25); // 50 + 25 < old peak: peak unchanged
+        assert_eq!(stats().peak_bytes, 4 * 150);
+        // Reset re-bases the peak to what is still outstanding.
+        reset_stats();
+        assert_eq!(stats().peak_bytes, 4 * 75);
+        recycle(b);
+        recycle(c);
+        assert_eq!(stats().outstanding_bytes, 0);
         drain();
     }
 

@@ -1,0 +1,149 @@
+//! Acceptance gate for the compiled step program (`rust/src/program/`,
+//! `docs/step-program.md`): executing the lowered `StepProgram` must be
+//! **bit-identical** to the per-layer reference interpreter — per-step
+//! loss, every checkpoint byte (weights, optimizer moments, BatchNorm
+//! statistics), stochastic-rounding draw order, eval and the serving
+//! forward — across model presets × {fp32, fp8_paper} × {sgd, adam}.
+//!
+//! Identity holds by construction (the program's exec schedule drives the
+//! same layer objects in interpreter order), so any divergence here means
+//! the lowering or the executor changed semantics — a hard failure, not a
+//! tolerance.
+
+use fp8train::coordinator::{Engine, NativeEngine};
+use fp8train::data::SyntheticDataset;
+use fp8train::nn::{ModelSpec, PrecisionPolicy};
+use fp8train::optim::standard_optimizer;
+use fp8train::state::StateMap;
+
+const SEED: u64 = 23;
+const LR: f32 = 0.05;
+
+fn engine(spec: &ModelSpec, policy: &PrecisionPolicy, opt: &str, program: bool) -> NativeEngine {
+    let o = standard_optimizer(opt, SEED).expect("sgd|adam");
+    let e = NativeEngine::with_optimizer(spec, policy.clone(), o, SEED);
+    if program {
+        e.with_program(spec)
+    } else {
+        e
+    }
+}
+
+fn snapshot(e: &mut NativeEngine) -> StateMap {
+    let mut m = StateMap::new();
+    e.save_state(&mut m);
+    m
+}
+
+fn assert_states_identical(a: &StateMap, b: &StateMap, what: &str) {
+    let ka: Vec<&str> = a.keys().collect();
+    let kb: Vec<&str> = b.keys().collect();
+    assert_eq!(ka, kb, "{what}: key sets differ");
+    for k in ka {
+        assert!(
+            a.get(k) == b.get(k),
+            "{what}: entry {k:?} differs between interpreter and program run"
+        );
+    }
+}
+
+/// Train `steps` steps on both engines, asserting per-step loss bits, then
+/// eval + predict + checkpoint-byte identity.
+fn assert_modes_identical(spec: &ModelSpec, policy: &PrecisionPolicy, opt: &str, steps: u64) {
+    let what = format!("{} / {} / {opt}", spec.id(), policy.name);
+    let ds = SyntheticDataset::for_model(spec, SEED).with_sizes(32, 16);
+    let mut interp = engine(spec, policy, opt, false);
+    let mut prog = engine(spec, policy, opt, true);
+    assert!(prog.program().is_some(), "{what}: program not attached");
+    assert_eq!(interp.name(), prog.name(), "{what}: engine tags differ");
+    for step in 0..steps {
+        let b = ds.train_batch((step % 2) as usize, 8);
+        let la = interp.train_step(&b, LR, step);
+        let lb = prog.train_step(&b, LR, step);
+        assert_eq!(
+            la.to_bits(),
+            lb.to_bits(),
+            "{what}: loss diverged at step {step} ({la} vs {lb})"
+        );
+    }
+    let tb = &ds.test_batches(8)[0];
+    let (l1, c1) = interp.eval(tb);
+    let (l2, c2) = prog.eval(tb);
+    assert_eq!(l1.to_bits(), l2.to_bits(), "{what}: eval loss diverged");
+    assert_eq!(c1, c2, "{what}: eval correct-count diverged");
+    // The serving entry (predict_logits is what `fp8train serve` calls).
+    let y1 = interp.predict_logits(tb.x.clone());
+    let y2 = prog.predict_logits(tb.x.clone());
+    assert_eq!(y1.shape, y2.shape, "{what}: logit shapes diverged");
+    for (a, b) in y1.data.iter().zip(y2.data.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: serving logits diverged");
+    }
+    assert_states_identical(&snapshot(&mut interp), &snapshot(&mut prog), &what);
+}
+
+#[test]
+fn dnn_matrix_policies_by_optimizers() {
+    let spec = ModelSpec::bn50_dnn();
+    for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
+        for opt in ["sgd", "adam"] {
+            assert_modes_identical(&spec, &policy, opt, 4);
+        }
+    }
+}
+
+#[test]
+fn conv_preset_matches_under_both_policies() {
+    let spec = ModelSpec::cifar_cnn();
+    for policy in [PrecisionPolicy::fp32(), PrecisionPolicy::fp8_paper()] {
+        assert_modes_identical(&spec, &policy, "sgd", 2);
+    }
+}
+
+#[test]
+fn resnet_preset_matches_paper_policy() {
+    // Residual blocks + BatchNorm + pooling: the deepest lowering path.
+    let spec = ModelSpec::cifar_resnet();
+    assert_modes_identical(&spec, &PrecisionPolicy::fp8_paper(), "sgd", 2);
+    assert_modes_identical(&spec, &PrecisionPolicy::fp8_paper(), "adam", 2);
+}
+
+/// Checkpoints interoperate across execution modes in both directions:
+/// train interpreted → resume under the program (and vice versa), then
+/// continue both and require bit-identical losses and final state. The
+/// engine tag does not encode the mode, so `load_state` accepts either.
+#[test]
+fn resume_crosses_execution_modes_bit_exactly() {
+    let spec = ModelSpec::bn50_dnn();
+    let policy = PrecisionPolicy::fp8_paper();
+    let ds = SyntheticDataset::for_model(&spec, SEED).with_sizes(32, 16);
+    for (from_prog, to_prog) in [(false, true), (true, false)] {
+        let what = format!("resume {}→{}", mode(from_prog), mode(to_prog));
+        // Reference: one uninterrupted interpreter run.
+        let mut full = engine(&spec, &policy, "sgd", false);
+        for step in 0..5u64 {
+            full.train_step(&ds.train_batch((step % 2) as usize, 8), LR, step);
+        }
+        // Interrupted: 3 steps in one mode, checkpoint, 2 in the other.
+        let mut first = engine(&spec, &policy, "sgd", from_prog);
+        for step in 0..3u64 {
+            first.train_step(&ds.train_batch((step % 2) as usize, 8), LR, step);
+        }
+        let ck = snapshot(&mut first);
+        let mut second = engine(&spec, &policy, "sgd", to_prog);
+        second
+            .load_state(&ck)
+            .unwrap_or_else(|e| panic!("{what}: load_state failed: {e}"));
+        for step in 3..5u64 {
+            second.train_step(&ds.train_batch((step % 2) as usize, 8), LR, step);
+        }
+        assert_states_identical(&snapshot(&mut full), &snapshot(&mut second), &what);
+    }
+}
+
+fn mode(program: bool) -> &'static str {
+    if program {
+        "program"
+    } else {
+        "interp"
+    }
+}

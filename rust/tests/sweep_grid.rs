@@ -127,6 +127,74 @@ fn interrupted_sweep_resumes_and_skips_completed_cells() {
 }
 
 #[test]
+fn policy_json_cells_run_end_to_end_and_rekey_on_content() {
+    // The --policy-json escape hatch: an inline-JSON policy joins the
+    // format axis, trains like any preset cell, and its record/id carry
+    // the token verbatim — so editing the policy re-keys its cells.
+    let dir = temp_dir("policy_json");
+    let out = dir.join("SWEEP.json").to_string_lossy().into_owned();
+    let tokens = sweep::policy_json_tokens(
+        r#"[{"name":"e4m3_cl32","fmt":"e4m3","chunk":32}]"#,
+    )
+    .unwrap();
+    let mut def = SweepDef::new("mlp(12,8,4)");
+    def.formats = vec!["fp32".into()];
+    def.formats.extend(tokens.clone());
+    def.steps = 4;
+    def.batch = 8;
+    def.seed = 5;
+    let cells = expand(&def).unwrap();
+    assert_eq!(cells.len(), 2);
+    assert_eq!(cells[1].fmt, tokens[0], "token enters the cell verbatim");
+    assert!(cells[1].id().contains(r#"fmt={"chunk":32,"#), "{}", cells[1].id());
+
+    let opts = RunOpts {
+        out: out.clone(),
+        cells_dir: dir.join("cells").to_string_lossy().into_owned(),
+        ..RunOpts::default()
+    };
+    sweep::run(&def, &opts).unwrap();
+    let art = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    let recs = match art.at("cells") {
+        Some(Json::Arr(a)) => a.clone(),
+        other => panic!("cells missing: {other:?}"),
+    };
+    assert_eq!(recs.len(), 2);
+    let json_rec = recs
+        .iter()
+        .find(|c| c.at("fmt").and_then(Json::str_val) == Some(tokens[0].as_str()))
+        .expect("policy-json cell record");
+    assert_eq!(json_rec.at("status").and_then(Json::str_val), Some("done"));
+    assert!(json_rec.at("final_test_err").and_then(Json::num).is_some());
+
+    // Content edits re-key: a different chunk produces a different id.
+    let edited = sweep::policy_json_tokens(
+        r#"[{"name":"e4m3_cl32","fmt":"e4m3","chunk":16}]"#,
+    )
+    .unwrap();
+    let mut def2 = def.clone();
+    def2.formats = vec!["fp32".into(), edited[0].clone()];
+    let cells2 = expand(&def2).unwrap();
+    assert_ne!(cells2[1].id(), cells[1].id());
+
+    // The CSV report quotes the JSON-laden id/fmt fields so rows stay
+    // machine-parseable.
+    let rendered = dir.join("report.csv").to_string_lossy().into_owned();
+    sweep::render(&out, true, Some(rendered.as_str())).unwrap();
+    let csv = std::fs::read_to_string(&rendered).unwrap();
+    let row = csv
+        .lines()
+        .find(|l| l.contains("e4m3_cl32"))
+        .expect("policy-json row in CSV");
+    assert!(
+        row.contains(r#""{""chunk"":32"#),
+        "JSON fields must be CSV-quoted: {row}"
+    );
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn changed_budget_rekeys_the_grid() {
     // steps participates in cell ids: a different budget never reuses old
     // results.
